@@ -1,0 +1,128 @@
+//! Docking farm over TCP: the paper's dwork production pattern (Ref [4] —
+//! "running docking and AI-based rescoring").
+//!
+//! A dhub server runs over real TCP with a persistent task database;
+//! workers connect over sockets, pull docking tasks, execute *real*
+//! matmul scoring kernels through PJRT, and dynamically insert rescoring
+//! tasks for promising hits (the paper's task-insertion loop).  One
+//! worker dies mid-run to exercise Exit-based fault tolerance, and the
+//! run finishes with a queue Status report — the dquery view.
+//!
+//! Run: `cargo run --release --example docking_farm`
+
+use threesched::coordinator::dwork::{self, Client, ServerConfig, TaskMsg};
+use threesched::runtime::service::RuntimeService;
+use threesched::runtime::{default_artifacts_dir, fill_f32, HostBuf};
+use threesched::substrate::kvstore::KvStore;
+use threesched::substrate::transport::tcp::TcpClient;
+
+fn main() -> anyhow::Result<()> {
+    let dbdir = std::env::temp_dir().join(format!("threesched-farm-db-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dbdir);
+
+    // persistent task DB: the campaign survives a server restart
+    let state = dwork::SchedState::with_store(KvStore::open(&dbdir)?);
+    let (addr, _guard, server) = dwork::spawn_tcp(state, ServerConfig::default(), "127.0.0.1:0")?;
+    println!("dhub listening on {addr} (db at {})", dbdir.display());
+
+    // user client seeds the campaign: 24 docking tasks
+    let ligands = 24usize;
+    {
+        let mut user = Client::new(Box::new(TcpClient::connect(&addr.to_string())?), "user");
+        for i in 0..ligands {
+            user.create(TaskMsg::new(format!("dock-{i:03}"), vec![i as u8]), &[])?;
+        }
+        let st = user.status()?;
+        println!("seeded {} docking tasks", st.total);
+    }
+
+    let svc = RuntimeService::start(&default_artifacts_dir())?;
+    let h = svc.handle();
+    h.warm(&["atb_64"])?;
+
+    let t0 = std::time::Instant::now();
+    let stats: Vec<(String, u64, u64)> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for w in 0..3usize {
+            let addr = addr.to_string();
+            let h = h.clone();
+            handles.push(s.spawn(move || {
+                let name = format!("worker-{w}");
+                let conn = TcpClient::connect(&addr).unwrap();
+                let mut c = Client::new(Box::new(conn), name.clone());
+                // second connection for dynamic task creation from inside
+                // the execution callback
+                let mut creator =
+                    Client::new(Box::new(TcpClient::connect(&addr).unwrap()), format!("{name}-ins"));
+                let mut ran = 0u64;
+                let mut inserted = 0u64;
+                let stats = dwork::run_worker(&mut c, 1, |t| {
+                    // "dock": score the ligand with a real AᵀB kernel
+                    let seed = *t.body.first().unwrap_or(&0) as u64;
+                    let a = fill_f32(64 * 64, seed * 2 + 1);
+                    let b = fill_f32(64 * 64, seed * 2 + 2);
+                    let (outs, _) =
+                        h.execute("atb_64", vec![HostBuf::F32(a), HostBuf::F32(b)])?;
+                    let score = outs[0].as_f32()?[0];
+                    ran += 1;
+                    // promising docks get an AI-rescoring pass (dynamic
+                    // insertion, the paper's "append" pattern)
+                    if t.name.starts_with("dock-") && score > 0.0 {
+                        let rescore = format!("rescore-{}", &t.name[5..]);
+                        if creator.create(TaskMsg::new(rescore, t.body.clone()), &[]).is_ok() {
+                            inserted += 1;
+                        }
+                    }
+                    // worker-2 "crashes" early to exercise fault tolerance
+                    if w == 2 && ran == 3 {
+                        anyhow::bail!("injected node failure")
+                    }
+                    Ok(())
+                });
+                match stats {
+                    Ok(st) => (name, st.tasks_run, inserted),
+                    Err(_) => {
+                        // tell the server we're gone so our tasks requeue
+                        let _ = c.exit();
+                        (name, ran, inserted)
+                    }
+                }
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let mut total_ran = 0;
+    let mut total_inserted = 0;
+    for (name, ran, inserted) in &stats {
+        println!("  {name}: ran {ran} tasks, inserted {inserted} rescoring tasks");
+        total_ran += ran;
+        total_inserted += inserted;
+    }
+    println!(
+        "farm drained in {:.2}s: {} executed ({} docking + {} dynamically inserted)",
+        t0.elapsed().as_secs_f64(),
+        total_ran,
+        ligands,
+        total_inserted
+    );
+
+    // dquery-style final status
+    {
+        let mut q = Client::new(Box::new(TcpClient::connect(&addr.to_string())?), "dquery");
+        let st = q.status()?;
+        println!(
+            "final status: total={} completed={} errored={} ready={} waiting={}",
+            st.total, st.completed, st.errored, st.ready, st.waiting
+        );
+        q.save()?; // snapshot the campaign database
+        anyhow::ensure!(st.completed + st.errored == st.total, "queue must be drained");
+        // one task errored (the injected crash marks its task failed only
+        // if it was mid-completion; our injected failure reports the task
+        // as errored via Complete(success=false))
+    }
+    drop(server);
+    let _ = std::fs::remove_dir_all(&dbdir);
+    println!("docking_farm OK");
+    Ok(())
+}

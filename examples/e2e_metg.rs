@@ -1,0 +1,243 @@
+//! End-to-end METG driver: the repository's headline validation run.
+//!
+//! Proves all layers compose on a real workload, then reproduces the
+//! paper's headline numbers:
+//!
+//!  1. single-device baseline — measure t_kernel for the Pallas AᵀB
+//!     artifacts on this host's PJRT device (the paper's 1-GPU runs);
+//!  2. real weak-scaling runs — all three coordinators execute the same
+//!     kernel workload at host scale (4 in-process ranks), with measured
+//!     per-component breakdowns;
+//!  3. measured micro-costs — our steal/complete RTT feeds the DES;
+//!  4. paper-scale METG — the DES reruns the sec. 4 sweep at 6..6912
+//!     ranks with both the paper's 23 us RTT and our measured RTT.
+//!
+//! Output is the paper-vs-measured table recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example e2e_metg`
+
+use std::time::Instant;
+
+use threesched::coordinator::dwork::{self, Client, TaskMsg};
+use threesched::coordinator::mpilist::Context;
+use threesched::coordinator::pmake;
+use threesched::metg::harness::{
+    measure_t_kernel, metg_sweep, render_metg, render_table4, TextTable, PAPER_RANKS,
+};
+use threesched::metg::Workload;
+use threesched::runtime::service::RuntimeService;
+use threesched::runtime::{default_artifacts_dir, fill_f32, HostBuf};
+use threesched::substrate::cluster::costs::CostModel;
+use threesched::substrate::cluster::Machine;
+
+const RANKS: usize = 4;
+const KERNELS_PER_RANK: u64 = 16;
+const TILE: usize = 128;
+
+fn real_dwork(h: &threesched::runtime::service::RuntimeHandle) -> anyhow::Result<(f64, f64, f64)> {
+    let mut state = dwork::SchedState::new();
+    for i in 0..(RANKS as u64 * KERNELS_PER_RANK) {
+        state.create(TaskMsg::new(format!("k{i}"), vec![]), &[])?;
+    }
+    let (connector, server) = dwork::spawn_inproc(state, dwork::ServerConfig::default());
+    let t0 = Instant::now();
+    let stats: Vec<dwork::WorkerStats> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..RANKS)
+            .map(|w| {
+                let conn = connector.connect();
+                let h = h.clone();
+                s.spawn(move || {
+                    let mut c = Client::new(Box::new(conn), format!("w{w}"));
+                    let a = fill_f32(TILE * TILE, 1);
+                    let b = fill_f32(TILE * TILE, 2);
+                    dwork::run_worker(&mut c, 1, |_t| {
+                        h.execute(
+                            &format!("atb_{TILE}"),
+                            vec![HostBuf::F32(a.clone()), HostBuf::F32(b.clone())],
+                        )?;
+                        Ok(())
+                    })
+                    .unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    let makespan = t0.elapsed().as_secs_f64();
+    drop(connector);
+    server.join().unwrap();
+    let compute: f64 = stats.iter().map(|s| s.compute_s).sum();
+    let comm: f64 = stats.iter().map(|s| s.comm_s).sum();
+    Ok((makespan, compute, comm))
+}
+
+fn real_mpilist(h: &threesched::runtime::service::RuntimeHandle) -> anyhow::Result<(f64, f64)> {
+    let h2 = h.clone();
+    let t0 = Instant::now();
+    let per_rank: Vec<f64> = Context::run(RANKS, move |ctx| {
+        let a = fill_f32(TILE * TILE, 1);
+        let b = fill_f32(TILE * TILE, 2);
+        let t0 = Instant::now();
+        let dfm = ctx.iterates(RANKS as u64 * KERNELS_PER_RANK).map(|_| {
+            h2.execute(
+                &format!("atb_{TILE}"),
+                vec![HostBuf::F32(a.clone()), HostBuf::F32(b.clone())],
+            )
+            .map(|_| 1u64)
+            .unwrap_or(0)
+        });
+        let done = dfm.reduce(ctx, 0u64, |x, y| x + y);
+        assert_eq!(done, RANKS as u64 * KERNELS_PER_RANK);
+        t0.elapsed().as_secs_f64()
+    });
+    let makespan = t0.elapsed().as_secs_f64();
+    let spread = per_rank.iter().cloned().fold(f64::MIN, f64::max)
+        - per_rank.iter().cloned().fold(f64::MAX, f64::min);
+    Ok((makespan, spread))
+}
+
+fn real_pmake(bin: &std::path::Path, artifacts: &std::path::Path) -> anyhow::Result<(f64, f64)> {
+    let dir = std::env::temp_dir().join(format!("threesched-e2e-pmake-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+    let rules = pmake::parse_rules(&format!(
+        r#"
+step:
+  resources: {{time: 1, nrs: 1, cpu: 42}}
+  out:
+    f: "step_{{n}}.out"
+  script: |
+    {bin} task --artifact atb_chain_{TILE}_i16 --seed {{n}} --artifacts-dir {art} --out {{out[f]}}
+"#,
+        bin = bin.display(),
+        art = artifacts.display(),
+    ))?;
+    let targets = pmake::parse_targets(&format!(
+        "t:\n  dirname: {}\n  loop:\n    n: \"range(0,{RANKS})\"\n  tgt:\n    f: \"step_{{n}}.out\"\n",
+        dir.display()
+    ))?;
+    let dag = pmake::Dag::build(
+        &rules,
+        &targets[0],
+        &|p: &std::path::Path| p.exists(),
+        &|rs| pmake::default_mpirun(rs),
+    )?;
+    let cfg = pmake::SchedConfig { nodes: RANKS, machine: Machine::summit(RANKS), fifo: false };
+    let t0 = Instant::now();
+    let report = pmake::run(&dag, &pmake::ShellExecutor::default(), &cfg)?;
+    let makespan = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(report.all_ok(), "pmake campaign failed");
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok((makespan, report.total_launch_s))
+}
+
+fn measure_rtt() -> anyhow::Result<f64> {
+    let n = 20_000usize;
+    let mut state = dwork::SchedState::new();
+    for i in 0..n {
+        state.create(TaskMsg::new(format!("t{i}"), vec![]), &[])?;
+    }
+    let (connector, server) = dwork::spawn_inproc(state, dwork::ServerConfig::default());
+    let mut c = Client::new(Box::new(connector.connect()), "rtt");
+    let t0 = Instant::now();
+    while let Some(t) = c.steal()? {
+        c.complete(&t.name, true)?;
+    }
+    let rtt = t0.elapsed().as_secs_f64() / (2.0 * n as f64);
+    drop(c);
+    drop(connector);
+    server.join().unwrap();
+    Ok(rtt)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== e2e_metg: end-to-end validation run ===\n");
+    let artifacts = default_artifacts_dir();
+    let svc = RuntimeService::start(&artifacts)?;
+    let h = svc.handle();
+
+    // 1. single-device baseline (the paper's 1-GPU runs)
+    println!("[1] single-device kernel baselines (PJRT CPU, Pallas interpret-lowered):");
+    let mut baselines = TextTable::new(&["artifact", "t_kernel", "GFLOP/s"]);
+    let mut t128 = 0.0;
+    for ts in [64usize, 128, 256] {
+        let name = format!("atb_{ts}");
+        let t = measure_t_kernel(&h, &name, 5)?;
+        if ts == TILE {
+            t128 = t;
+        }
+        baselines.row(vec![
+            name.clone(),
+            format!("{:.3}ms", t * 1e3),
+            format!("{:.2}", 2.0 * (ts as f64).powi(3) / t / 1e9),
+        ]);
+    }
+    println!("{}", baselines.render());
+
+    // 2. real weak-scaling runs, all three coordinators, same workload
+    println!(
+        "[2] real coordinator runs: {RANKS} in-process ranks x {KERNELS_PER_RANK} kernels \
+         (tile {TILE}, one shared PJRT device => ideal = serialized compute):"
+    );
+    let ideal = RANKS as f64 * KERNELS_PER_RANK as f64 * t128;
+    let (dw_mk, dw_compute, dw_comm) = real_dwork(&h)?;
+    let (ml_mk, ml_spread) = real_mpilist(&h)?;
+    let me = std::env::current_exe()?;
+    let bin = me
+        .parent()
+        .and_then(|p| p.parent())
+        .map(|p| p.join("threesched"))
+        .filter(|p| p.exists());
+    let mut table = TextTable::new(&["tool", "makespan", "efficiency", "dominant overhead"]);
+    table.row(vec![
+        "dwork".into(),
+        format!("{dw_mk:.2}s"),
+        format!("{:.3}", ideal / dw_mk),
+        format!("comm {:.3}s vs compute {:.3}s (aggregate)", dw_comm, dw_compute),
+    ]);
+    table.row(vec![
+        "mpi-list".into(),
+        format!("{ml_mk:.2}s"),
+        format!("{:.3}", ideal / ml_mk),
+        format!("rank spread {:.3}s", ml_spread),
+    ]);
+    match bin {
+        Some(bin) => {
+            let (pm_mk, pm_launch) = real_pmake(&bin, &artifacts)?;
+            table.row(vec![
+                "pmake".into(),
+                format!("{pm_mk:.2}s"),
+                format!("{:.3}", ideal / pm_mk),
+                format!("process launches {pm_launch:.3}s + fresh PJRT init per step"),
+            ]);
+        }
+        None => {
+            table.row(vec![
+                "pmake".into(),
+                "-".into(),
+                "-".into(),
+                "skipped: build the threesched binary first (cargo build --release)".into(),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+
+    // 3. measured micro-costs
+    let rtt = measure_rtt()?;
+    println!(
+        "[3] measured steal/complete RTT (in-proc): {:.1} us — paper measured 23 us\n",
+        rtt * 1e6
+    );
+
+    // 4. paper-scale METG via DES, with paper RTT and with measured RTT
+    println!("[4] paper-scale METG (DES at the paper's rank counts):");
+    let w = Workload::paper();
+    let m_paper = CostModel::paper();
+    println!("{}", render_metg(&metg_sweep(&m_paper, &w, &PAPER_RANKS)));
+    let m_ours = CostModel::paper().with_measured_rtt(rtt);
+    println!("--- same sweep with OUR measured RTT ---");
+    println!("{}", render_metg(&metg_sweep(&m_ours, &w, &PAPER_RANKS)));
+    println!("{}", render_table4(&m_paper, Some(rtt)));
+    println!("e2e_metg OK");
+    Ok(())
+}

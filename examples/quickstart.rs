@@ -1,0 +1,105 @@
+//! Quickstart: the three schedulers in ~60 lines each of use.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use threesched::coordinator::dwork::{self, TaskMsg};
+use threesched::coordinator::mpilist::Context;
+use threesched::coordinator::pmake;
+use threesched::substrate::cluster::Machine;
+
+fn demo_dwork() -> anyhow::Result<()> {
+    println!("--- dwork: bag of tasks with dependencies ---");
+    // build a small DAG: prep -> {dock-0, dock-1} -> report
+    let mut state = dwork::SchedState::new();
+    state.create(TaskMsg::new("prep", vec![]), &[])?;
+    state.create(TaskMsg::new("dock-0", vec![]), &["prep".into()])?;
+    state.create(TaskMsg::new("dock-1", vec![]), &["prep".into()])?;
+    state.create(TaskMsg::new("report", vec![]), &["dock-0".into(), "dock-1".into()])?;
+    let (connector, server) = dwork::spawn_inproc(state, dwork::ServerConfig::default());
+    // two workers pull until the server says Exit
+    std::thread::scope(|s| {
+        for w in 0..2 {
+            let conn = connector.connect();
+            s.spawn(move || {
+                let mut c = dwork::Client::new(Box::new(conn), format!("worker-{w}"));
+                dwork::run_worker(&mut c, 1, |t| {
+                    println!("  worker-{w} ran {}", t.name);
+                    Ok(())
+                })
+                .unwrap();
+            });
+        }
+    });
+    drop(connector);
+    let final_state = server.join().unwrap();
+    println!("  all done: {}\n", final_state.all_done());
+    Ok(())
+}
+
+fn demo_mpilist() {
+    println!("--- mpi-list: bulk-synchronous map-reduce ---");
+    let sums = Context::run(4, |ctx| {
+        // distribute 0..1000, square locally, reduce globally
+        let dfm = ctx.iterates(1000).map(|x| x * x);
+        dfm.reduce(ctx, 0u64, |a, b| a + b)
+    });
+    println!("  sum of squares 0..1000 on every rank: {:?}\n", sums[0]);
+    assert!(sums.iter().all(|&s| s == 332_833_500));
+}
+
+fn demo_pmake() -> anyhow::Result<()> {
+    println!("--- pmake: file-directed rules ---");
+    let dir = std::env::temp_dir().join(format!("threesched-quickstart-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join("input.txt"), "42\n")?;
+    // NOTE the paper's escaping rule: literal braces (awk's) are doubled,
+    // template substitutions ({inp[x]}) are single.
+    let rules = pmake::parse_rules(
+        r#"
+double:
+  inp:
+    x: "input.txt"
+  out:
+    y: "doubled.txt"
+  script: |
+    awk '{{print $1 * 2}}' {inp[x]} > {out[y]}
+report:
+  inp:
+    y: "doubled.txt"
+  out:
+    r: "report.txt"
+  script: |
+    echo "result: $(cat {inp[y]})" > {out[r]}
+"#,
+    )?;
+    let targets = pmake::parse_targets(&format!(
+        "demo:\n  dirname: {}\n  out:\n    r: report.txt\n",
+        dir.display()
+    ))?;
+    let dag = pmake::Dag::build(
+        &rules,
+        &targets[0],
+        &|p: &std::path::Path| p.exists(),
+        &|rs| pmake::default_mpirun(rs),
+    )?;
+    println!("  task graph: {} tasks", dag.tasks.len());
+    let cfg = pmake::SchedConfig { nodes: 2, machine: Machine::summit(2), fifo: false };
+    let report = pmake::run(&dag, &pmake::ShellExecutor::default(), &cfg)?;
+    println!(
+        "  succeeded: {}, report.txt = {:?}\n",
+        report.succeeded.len(),
+        std::fs::read_to_string(dir.join("report.txt"))?.trim()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("threesched quickstart: three schedulers, three sync mechanisms\n");
+    demo_dwork()?;
+    demo_mpilist();
+    demo_pmake()?;
+    println!("quickstart OK");
+    Ok(())
+}

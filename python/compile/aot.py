@@ -1,0 +1,79 @@
+"""AOT bridge: lower every L2 task variant to HLO text in artifacts/.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the Rust ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Besides the ``.hlo.txt`` files this writes ``artifacts/manifest.tsv``:
+
+    name <TAB> file <TAB> in0;in1;... <TAB> out0;... <TAB> flops
+
+with shapes spelled ``f32[256,256]``.  The Rust runtime
+(``rust/src/runtime/registry.rs``) discovers artifacts through this
+manifest, so Python and Rust never need to agree on shapes in code.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spell(s) -> str:
+    """ShapeDtypeStruct -> manifest spelling, e.g. f32[256,256]."""
+    names = {"float32": "f32", "int32": "i32", "uint32": "u32"}
+    d = names.get(s.dtype.name, s.dtype.name)
+    return f"{d}[{','.join(str(x) for x in s.shape)}]"
+
+
+def lower_all(out_dir: str, verbose: bool = True) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    reg = model.registry()
+    rows = []
+    for name, (fn, example_args, flops) in sorted(reg.items()):
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *example_args)
+        ins = ";".join(spell(a) for a in example_args)
+        outs = ";".join(spell(o) for o in out_shapes)
+        rows.append(f"{name}\t{fname}\t{ins}\t{outs}\t{flops:.0f}")
+        if verbose:
+            digest = hashlib.sha256(text.encode()).hexdigest()[:8]
+            print(f"  {name:24s} {len(text):>9d}B sha={digest} in={ins} out={outs}")
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("\n".join(rows) + "\n")
+    if verbose:
+        print(f"wrote {len(rows)} artifacts + manifest.tsv to {out_dir}")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="output directory")
+    p.add_argument("-q", "--quiet", action="store_true")
+    args = p.parse_args()
+    lower_all(args.out, verbose=not args.quiet)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

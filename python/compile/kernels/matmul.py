@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: block-tiled AᵀB single-precision matmul.
+
+TPU-minded adaptation of the paper's cublas-sgemm kernel (see DESIGN.md
+§Hardware-Adaptation): instead of CUDA threadblocks + shared memory, the
+HBM<->VMEM schedule is expressed with a (M/bm, N/bn, K/bk) grid and
+BlockSpecs.  The contraction dimension k is the *last* grid axis, so it is
+the innermost loop: the (bm, bn) output block stays resident in VMEM as an
+accumulator while (bk, bm) / (bk, bn) input tiles stream through.
+
+AᵀB is computed without materializing Aᵀ: the A BlockSpec indexes A by
+(k, i), i.e. A is read in its natural (K, M) layout and only the small
+VMEM-resident tile is transposed when it is fed to the MXU.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode traces the grid into plain HLO
+(while-loop + dynamic-slice) that compiles and runs anywhere.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _atb_kernel(a_ref, b_ref, o_ref):
+    """One grid step: o[i,j] += a[k,i]ᵀ @ b[k,j] (init at k == 0)."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a_tile = a_ref[...]  # (bk, bm) — natural layout, transpose in-VMEM
+    b_tile = b_ref[...]  # (bk, bn)
+    o_ref[...] += jax.lax.dot_general(
+        a_tile,
+        b_tile,
+        # contract the k (axis 0) of both tiles: (bk,bm) x (bk,bn) -> (bm,bn)
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def pick_block(dim, target=128):
+    """Largest divisor of ``dim`` that is <= target (MXU-friendly 128).
+
+    The MXU is a 128x128 systolic array; blocks of 128 give full occupancy
+    for f32 (8 sublane passes).  For small or odd sizes we fall back to the
+    largest divisor so the grid always tiles the array exactly.
+    """
+    if dim <= target:
+        return dim
+    for cand in range(target, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def atb(a, b, bm=None, bn=None, bk=None):
+    """Pallas AᵀB: ``a`` (K, M) f32, ``b`` (K, N) f32 -> (M, N) f32."""
+    k_dim, m = a.shape
+    k2, n = b.shape
+    assert k_dim == k2, f"contraction mismatch: {a.shape} vs {b.shape}"
+    bm = bm or pick_block(m)
+    bn = bn or pick_block(n)
+    bk = bk or pick_block(k_dim)
+    assert m % bm == 0 and n % bn == 0 and k_dim % bk == 0, (
+        f"blocks ({bm},{bn},{bk}) must divide dims ({m},{n},{k_dim})"
+    )
+    grid = (m // bm, n // bn, k_dim // bk)
+    return pl.pallas_call(
+        _atb_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def vmem_bytes(bm, bn, bk, dtype_bytes=4):
+    """VMEM footprint of one grid step (A tile + B tile + accumulator).
+
+    Used by the perf notes in DESIGN.md: must stay well under the ~16 MiB
+    of VMEM per TPU core for the double-buffered pipeline to fit.
+    """
+    return (bk * bm + bk * bn + bm * bn) * dtype_bytes

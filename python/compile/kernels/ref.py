@@ -1,0 +1,67 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the ground truth that pytest + hypothesis check the Pallas
+implementations against. They are also what the paper's kernel *is*:
+a single-precision ``AᵀB`` multiplication (cublas-sgemm in the paper,
+sec. 3), iterated 256x per task for pmake/dwork.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def atb(a, b):
+    """Reference AᵀB: ``a`` is (K, M), ``b`` is (K, N) -> (M, N) f32.
+
+    Matches the paper's wavefunction-overlap building block S = psi^dag psi.
+    """
+    return jnp.dot(a.T, b, preferred_element_type=jnp.float32)
+
+
+def atb_chain(a, x0, iters):
+    """Reference iterated task: ``iters`` dependent AᵀB multiplications.
+
+    The paper defines one pmake/dwork task as 256 iterations of the matmul
+    kernel (sec. 3).  A data-dependent chain (x_{i+1} = normalize(Aᵀ x_i))
+    keeps XLA from hoisting the work out of the loop; the normalization
+    prevents overflow so the chain is numerically stable for any length.
+    """
+
+    def body(_, x):
+        y = jnp.dot(a.T, x, preferred_element_type=jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(y)), 1e-30)
+        return y / scale
+
+    return lax.fori_loop(0, iters, body, x0)
+
+
+def colstats(x):
+    """Reference per-column statistics: stack of [min, max, mean, var].
+
+    This is the mpi-list production snippet's ``stat`` step (paper Fig 3):
+    each rank computes summary statistics of its local dataframe shard.
+    """
+    return jnp.stack(
+        [
+            jnp.min(x, axis=0),
+            jnp.max(x, axis=0),
+            jnp.mean(x, axis=0),
+            jnp.var(x, axis=0),
+        ]
+    )
+
+
+def hist2d(xy, lo, hi, bins_x, bins_y):
+    """Reference 2-D histogram with fixed bounds.
+
+    The mpi-list production snippet (paper Fig 3) histograms 'score' vs
+    'r3' columns into a 301x201 grid; each rank histograms its local shard
+    and the grids are summed with an MPI reduce.  ``xy`` is (n, 2); ``lo``
+    and ``hi`` are (2,) bounds.  Returns (bins_x, bins_y) f32 counts.
+    """
+    span = jnp.maximum(hi - lo, 1e-30)
+    ix = jnp.clip(((xy[:, 0] - lo[0]) / span[0] * bins_x).astype(jnp.int32), 0, bins_x - 1)
+    iy = jnp.clip(((xy[:, 1] - lo[1]) / span[1] * bins_y).astype(jnp.int32), 0, bins_y - 1)
+    flat = ix * bins_y + iy
+    counts = jnp.zeros((bins_x * bins_y,), jnp.float32).at[flat].add(1.0)
+    return counts.reshape(bins_x, bins_y)

@@ -1,0 +1,118 @@
+"""L2: the task workloads of the paper's evaluation, as jitted jax fns.
+
+Each function here is one *task body* that the Rust coordinators execute
+through PJRT.  They call the L1 Pallas kernel (kernels/matmul.py) so that
+the kernel lowers into the same HLO module; ``aot.py`` lowers each variant
+once to HLO text in ``artifacts/``.
+
+Paper mapping (sec. 3, Evaluation Method):
+  * ``atb_task``       — one cublas-sgemm-equivalent kernel execution
+                         (the mpi-list workload runs 1024 of these per rank
+                         inside a map; Rust loops over the executable).
+  * ``atb_chain_task`` — one pmake/dwork task = ``iters`` dependent kernel
+                         executions (paper: 256 iterations per task).
+  * ``colstats_task``  — the Fig 3 'stat' step for mpi-list.
+  * ``hist2d_task``    — the Fig 3 2-D histogram step for mpi-list.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import matmul, ref
+
+
+def atb_task(a, b):
+    """One AᵀB kernel execution via the Pallas kernel."""
+    return (matmul.atb(a, b),)
+
+
+def atb_chain_task(a, x0, *, iters):
+    """``iters`` dependent AᵀB kernel executions (one scheduler task).
+
+    A single fused executable: the loop is a lax.fori_loop in HLO, so the
+    Rust hot path dispatches the whole 256-iteration task with ONE PJRT
+    execute call — no Python, no per-iteration dispatch (DESIGN.md §Perf L2).
+    """
+
+    def body(_, x):
+        y = matmul.atb(a, x)
+        scale = jnp.maximum(jnp.max(jnp.abs(y)), 1e-30)
+        return y / scale
+
+    return (lax.fori_loop(0, iters, body, x0),)
+
+
+def colstats_task(x):
+    """Per-column [min, max, mean, var] for one mpi-list shard."""
+    return (ref.colstats(x),)
+
+
+def hist2d_task(xy, lo, hi, *, bins_x, bins_y):
+    """Fixed-bounds 2-D histogram of one mpi-list shard."""
+    return (ref.hist2d(xy, lo, hi, bins_x, bins_y),)
+
+
+def score_gen_task(seed_arr, *, n, d):
+    """Synthetic 'docking score' generator for the examples.
+
+    Stands in for reading the paper's parquet dataset (repro band: data is
+    unavailable): deterministic pseudo-random (n, d) score table derived
+    from a scalar seed.  Column 0 plays 'score', column 1 plays 'r3'.
+    """
+    key = jax.random.PRNGKey(0)
+    key = jax.random.fold_in(key, seed_arr[0])
+    x = jax.random.normal(key, (n, d), jnp.float32)
+    # give columns distinct, correlated scales so the 2-D histogram has shape
+    x = x.at[:, 1].set(0.5 * x[:, 0] + 0.5 * x[:, 1])
+    return (x,)
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry: name -> (fn, example args).  aot.py lowers each entry.
+# ---------------------------------------------------------------------------
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def registry(tile_sizes=(64, 128, 256, 512), chain_iters=(16, 256)):
+    """Build the artifact registry.
+
+    Keyed by artifact name; value is (jittable fn, example_args, flops).
+    flops is the useful-work count per execution, used by the Fig 4
+    efficiency harness (2*M*N*K per AᵀB).
+    """
+    reg = {}
+    for ts in tile_sizes:
+        reg[f"atb_{ts}"] = (
+            atb_task,
+            (f32(ts, ts), f32(ts, ts)),
+            2.0 * ts * ts * ts,
+        )
+    for ts in tile_sizes:
+        for it in chain_iters:
+            reg[f"atb_chain_{ts}_i{it}"] = (
+                functools.partial(atb_chain_task, iters=it),
+                (f32(ts, ts), f32(ts, ts)),
+                2.0 * ts * ts * ts * it,
+            )
+    reg["colstats_4096x8"] = (colstats_task, (f32(4096, 8),), 4.0 * 4096 * 8)
+    reg["hist2d_4096"] = (
+        functools.partial(hist2d_task, bins_x=301, bins_y=201),
+        (f32(4096, 2), f32(2), f32(2)),
+        10.0 * 4096,
+    )
+    reg["score_gen_4096x8"] = (
+        functools.partial(score_gen_task, n=4096, d=8),
+        (i32(1),),
+        0.0,
+    )
+    return reg

@@ -1,0 +1,141 @@
+"""L1 correctness: Pallas AᵀB kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the compute layer — everything the
+Rust coordinators execute goes through this kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+# ---------------------------------------------------------------- unit tests
+
+
+@pytest.mark.parametrize("m,n,k", [(8, 8, 8), (64, 64, 64), (128, 128, 128), (256, 256, 256)])
+def test_atb_square(m, n, k):
+    a, b = rand((k, m), 1), rand((k, n), 2)
+    np.testing.assert_allclose(matmul.atb(a, b), ref.atb(a, b), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "m,n,k",
+    [(64, 128, 256), (128, 64, 32), (256, 8, 64), (8, 256, 128), (512, 128, 64)],
+)
+def test_atb_rect(m, n, k):
+    a, b = rand((k, m), 3), rand((k, n), 4)
+    np.testing.assert_allclose(matmul.atb(a, b), ref.atb(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_atb_multiblock_accumulation():
+    """Contraction split across >1 k-blocks must accumulate, not overwrite."""
+    a, b = rand((512, 64), 5), rand((512, 64), 6)
+    got = matmul.atb(a, b, bm=64, bn=64, bk=128)  # 4 k-steps
+    np.testing.assert_allclose(got, ref.atb(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_atb_explicit_blocks_equal_auto():
+    a, b = rand((128, 128), 7), rand((128, 128), 8)
+    auto = matmul.atb(a, b)
+    man = matmul.atb(a, b, bm=32, bn=64, bk=16)
+    np.testing.assert_allclose(auto, man, rtol=1e-4, atol=1e-4)
+
+
+def test_atb_identity():
+    eye = jnp.eye(64, dtype=jnp.float32)
+    b = rand((64, 64), 9)
+    np.testing.assert_allclose(matmul.atb(eye, b), b, rtol=1e-5, atol=1e-5)
+
+
+def test_atb_zeros():
+    a = jnp.zeros((64, 32), jnp.float32)
+    b = rand((64, 16), 10)
+    assert not np.any(np.asarray(matmul.atb(a, b)))
+
+
+def test_pick_block():
+    assert matmul.pick_block(256) == 128
+    assert matmul.pick_block(64) == 64
+    assert matmul.pick_block(300) == 100  # largest divisor <= 128
+    assert matmul.pick_block(7) == 7
+    assert matmul.pick_block(130) == 65
+
+
+def test_vmem_budget_default_blocks():
+    """Default 128-blocks must fit comfortably in a 16 MiB VMEM."""
+    assert matmul.vmem_bytes(128, 128, 128) == 3 * 128 * 128 * 4  # 192 KiB
+    assert matmul.vmem_bytes(128, 128, 128) < 16 * 2**20 / 8
+
+
+def test_chain_matches_ref():
+    a, x0 = rand((64, 64), 11), rand((64, 64), 12)
+    got = ref.atb_chain(a, x0, 16)
+    # explicit python loop oracle
+    x = x0
+    for _ in range(16):
+        y = np.asarray(ref.atb(a, x))
+        x = jnp.asarray(y / max(np.max(np.abs(y)), 1e-30))
+    np.testing.assert_allclose(got, x, rtol=1e-4, atol=1e-4)
+
+
+def test_chain_is_bounded():
+    a, x0 = rand((64, 64), 13), rand((64, 64), 14)
+    out = ref.atb_chain(a, x0, 64)
+    assert np.max(np.abs(np.asarray(out))) <= 1.0 + 1e-5
+
+
+# ----------------------------------------------------------- hypothesis sweep
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 32, 64, 128]),
+    n=st.sampled_from([8, 16, 32, 64, 128]),
+    k=st.sampled_from([8, 16, 32, 64, 128, 256]),
+    seed=st.integers(0, 2**16),
+)
+def test_atb_hypothesis_shapes(m, n, k, seed):
+    a, b = rand((k, m), seed), rand((k, n), seed + 1)
+    np.testing.assert_allclose(matmul.atb(a, b), ref.atb(a, b), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 32]),
+    bn=st.sampled_from([8, 16, 32]),
+    bk=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_atb_hypothesis_blocks(bm, bn, bk, seed):
+    """Any dividing block choice yields the same numbers."""
+    m = n = 64
+    k = 128
+    a, b = rand((k, m), seed), rand((k, n), seed + 1)
+    got = matmul.atb(a, b, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, ref.atb(a, b), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    vals=st.lists(
+        st.tuples(st.floats(-10, 10), st.floats(-10, 10)), min_size=1, max_size=100
+    )
+)
+def test_hist2d_conserves_mass(vals):
+    xy = jnp.asarray(np.array(vals, dtype=np.float32))
+    lo = jnp.asarray(np.array([-10.0, -10.0], np.float32))
+    hi = jnp.asarray(np.array([10.0, 10.0], np.float32))
+    h = ref.hist2d(xy, lo, hi, 31, 21)
+    assert h.shape == (31, 21)
+    assert float(jnp.sum(h)) == len(vals)  # every sample lands in a bin

@@ -1,0 +1,104 @@
+"""L2 shape/semantics tests for the task registry and aot lowering."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+def test_registry_contents():
+    reg = model.registry()
+    for ts in (64, 128, 256, 512):
+        assert f"atb_{ts}" in reg
+        assert f"atb_chain_{ts}_i256" in reg
+    assert "colstats_4096x8" in reg
+    assert "hist2d_4096" in reg
+
+
+def test_registry_flops():
+    reg = model.registry()
+    _, _, flops = reg["atb_256"]
+    assert flops == 2.0 * 256**3
+    _, _, cflops = reg["atb_chain_256_i256"]
+    assert cflops == 256 * flops
+
+
+def test_atb_task_matches_ref():
+    a, b = rand((128, 128), 0), rand((128, 128), 1)
+    (got,) = model.atb_task(a, b)
+    np.testing.assert_allclose(got, ref.atb(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_atb_chain_task_matches_ref():
+    a, x0 = rand((64, 64), 2), rand((64, 64), 3)
+    (got,) = model.atb_chain_task(a, x0, iters=8)
+    want = ref.atb_chain(a, x0, 8)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_colstats_task():
+    x = rand((4096, 8), 4)
+    (got,) = model.colstats_task(x)
+    assert got.shape == (4, 8)
+    np.testing.assert_allclose(got[0], np.min(np.asarray(x), 0), rtol=1e-5)
+    np.testing.assert_allclose(got[2], np.mean(np.asarray(x), 0), rtol=1e-4, atol=1e-5)
+
+
+def test_hist2d_task_mass():
+    xy = rand((4096, 2), 5)
+    lo = jnp.asarray(np.array([-6.0, -6.0], np.float32))
+    hi = jnp.asarray(np.array([6.0, 6.0], np.float32))
+    (h,) = model.hist2d_task(xy, lo, hi, bins_x=301, bins_y=201)
+    assert h.shape == (301, 201)
+    assert float(jnp.sum(h)) == 4096.0
+
+
+def test_score_gen_deterministic():
+    (x1,) = model.score_gen_task(jnp.asarray([7], jnp.int32), n=64, d=4)
+    (x2,) = model.score_gen_task(jnp.asarray([7], jnp.int32), n=64, d=4)
+    (x3,) = model.score_gen_task(jnp.asarray([8], jnp.int32), n=64, d=4)
+    np.testing.assert_array_equal(x1, x2)
+    assert np.any(np.asarray(x1) != np.asarray(x3))
+
+
+def test_spell():
+    assert aot.spell(model.f32(256, 256)) == "f32[256,256]"
+    assert aot.spell(model.i32(1)) == "i32[1]"
+
+
+def test_lowering_one_artifact(tmp_path):
+    """End-to-end lowering of one small artifact produces parseable HLO."""
+    import functools
+
+    fn = model.atb_task
+    lowered = jax.jit(fn).lower(model.f32(64, 64), model.f32(64, 64))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[64,64]" in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.tsv")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_consistent():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "manifest.tsv")) as f:
+        rows = [line.strip().split("\t") for line in f if line.strip()]
+    names = {r[0] for r in rows}
+    assert names == set(model.registry().keys())
+    for name, fname, ins, outs, flops in rows:
+        assert os.path.exists(os.path.join(root, fname)), fname
+        assert float(flops) >= 0.0

@@ -1,0 +1,125 @@
+//! Fig 4: absolute (GFLOP/s per rank) and relative computational
+//! efficiency vs matrix tile size, per scheduler.
+//!
+//! Two fidelities:
+//!  * paper-scale (simulated): 864 ranks, V100 kernel-time model,
+//!    tile sizes 256..8192 — reproduces the published figure's shape;
+//!  * host-scale (real): the actual coordinators run real PJRT matmul
+//!    kernels at 4 in-process ranks, with the single-device baseline
+//!    measured on this machine.
+//!
+//! Run: `cargo bench --bench fig4_efficiency`
+
+use threesched::coordinator::dwork::{self, TaskMsg};
+use threesched::coordinator::mpilist::Context;
+use threesched::metg::harness::{fig4, measure_t_kernel, render_fig4, v100_t_kernel, TextTable};
+use threesched::metg::Workload;
+use threesched::runtime::service::RuntimeService;
+use threesched::runtime::{default_artifacts_dir, fill_f32, HostBuf};
+use threesched::substrate::cluster::costs::CostModel;
+
+fn paper_scale() {
+    let m = CostModel::paper();
+    let w = Workload::paper();
+    let tiles: Vec<(usize, f64)> = [256usize, 512, 1024, 2048, 4096, 8192]
+        .iter()
+        .map(|&t| (t, v100_t_kernel(t)))
+        .collect();
+    for ranks in [6usize, 864] {
+        let rows = fig4(&m, &w, ranks, &tiles, 42);
+        println!("{}", render_fig4(&rows, ranks));
+    }
+}
+
+/// Real mode: actual schedulers, actual kernels, 4 ranks.
+fn host_scale() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.tsv").exists() {
+        println!("[fig4 real-mode skipped: run `make artifacts` first]");
+        return;
+    }
+    let svc = RuntimeService::start(&dir).expect("runtime");
+    let h = svc.handle();
+    let ranks = 4usize;
+    let kernels_per_rank = 16u64;
+    let mut table = TextTable::new(&[
+        "tile",
+        "t_kernel (this host)",
+        "dwork eff",
+        "mpi-list eff",
+    ]);
+    for ts in [64usize, 128, 256] {
+        let name = format!("atb_{ts}");
+        let t_kernel = measure_t_kernel(&h, &name, 3).expect("baseline");
+
+        // --- real dwork: farm of per-kernel tasks over the inproc hub
+        let mut state = dwork::SchedState::new();
+        for i in 0..(ranks as u64 * kernels_per_rank) {
+            state
+                .create(TaskMsg::new(format!("k{i}"), vec![]), &[])
+                .unwrap();
+        }
+        let (connector, handle) = dwork::spawn_inproc(state, dwork::ServerConfig::default());
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|s| {
+            for wkr in 0..ranks {
+                let conn = connector.connect();
+                let h = h.clone();
+                let name = name.clone();
+                s.spawn(move || {
+                    let mut c = dwork::Client::new(Box::new(conn), format!("w{wkr}"));
+                    let a = fill_f32(ts * ts, 1);
+                    let b = fill_f32(ts * ts, 2);
+                    dwork::run_worker(&mut c, 1, |_t| {
+                        h.execute(&name, vec![HostBuf::F32(a.clone()), HostBuf::F32(b.clone())])?;
+                        Ok(())
+                    })
+                    .unwrap();
+                });
+            }
+        });
+        let dwork_makespan = t0.elapsed().as_secs_f64();
+        drop(connector);
+        handle.join().unwrap();
+
+        // --- real mpi-list: static map over the same kernel count
+        let t0 = std::time::Instant::now();
+        let h2 = h.clone();
+        let name2 = name.clone();
+        Context::run(ranks, move |ctx| {
+            let a = fill_f32(ts * ts, 1);
+            let b = fill_f32(ts * ts, 2);
+            let dfm = ctx.iterates(ranks as u64 * kernels_per_rank);
+            let out = dfm.map(|_i| {
+                h2.execute(&name2, vec![HostBuf::F32(a.clone()), HostBuf::F32(b.clone())])
+                    .map(|_| 1u64)
+                    .unwrap_or(0)
+            });
+            out.reduce(ctx, 0, |x, y| x + y)
+        });
+        let mpilist_makespan = t0.elapsed().as_secs_f64();
+
+        let ideal = kernels_per_rank as f64 * t_kernel;
+        // NOTE: this host has 1 core — "ranks" timeshare it, so per-rank
+        // ideal is scaled by the rank count (all kernels serialize through
+        // one PJRT device).
+        let serial_ideal = ideal * ranks as f64;
+        table.row(vec![
+            ts.to_string(),
+            format!("{:.3}ms", t_kernel * 1e3),
+            format!("{:.3}", serial_ideal / dwork_makespan),
+            format!("{:.3}", serial_ideal / mpilist_makespan),
+        ]);
+    }
+    println!(
+        "Fig 4 (real mode, {ranks} in-process ranks sharing one PJRT CPU device)\n\
+         efficiency = serialized-ideal / measured makespan\n{}",
+        table.render()
+    );
+}
+
+fn main() {
+    println!("=== bench: fig4_efficiency ===\n");
+    paper_scale();
+    host_scale();
+}

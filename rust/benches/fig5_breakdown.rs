@@ -1,0 +1,26 @@
+//! Fig 5: pie-chart time breakdowns — computation vs each overhead source
+//! per scheduler, at 6 / 864 / 6912 ranks across tile sizes.
+//!
+//! Run: `cargo bench --bench fig5_breakdown`
+
+use threesched::metg::harness::{render_fig5, v100_t_kernel};
+use threesched::metg::Workload;
+use threesched::substrate::cluster::costs::CostModel;
+
+fn main() {
+    println!("=== bench: fig5_breakdown ===\n");
+    let m = CostModel::paper();
+    let w = Workload::paper();
+    let tiles: Vec<(usize, f64)> = [256usize, 512, 1024, 2048, 4096, 8192]
+        .iter()
+        .map(|&t| (t, v100_t_kernel(t)))
+        .collect();
+    // paper Fig 5 (a) 6 ranks, (b) 864 ranks, (c) 6912 ranks
+    for ranks in [6usize, 864, 6912] {
+        println!("{}", render_fig5(&m, &w, ranks, &tiles));
+        println!(
+            "(METG visible where the compute column crosses 0.5; paper notes \
+             pmake shows sync at large runs because each task occupies all ranks)\n"
+        );
+    }
+}

@@ -1,0 +1,35 @@
+//! METG vs rank count: the sec. 4 headline numbers.
+//!
+//! Paper: "Based on the performance at 864 ranks, the METG for mpi-list,
+//! dwork and pmake are 0.3, 25, and 4500 milliseconds" — with a different
+//! *scaling law* for each tool (sec. 6): pmake = job startup (log P),
+//! dwork = per-task RTT × P (linear), mpi-list = straggler spread (log P).
+//!
+//! Run: `cargo bench --bench metg_sweep`
+
+use threesched::metg::harness::{metg_sweep, render_metg, PAPER_RANKS};
+use threesched::metg::Workload;
+use threesched::substrate::cluster::costs::CostModel;
+
+fn main() {
+    println!("=== bench: metg_sweep ===\n");
+    let w = Workload::paper();
+
+    let m = CostModel::paper();
+    let rows = metg_sweep(&m, &w, &PAPER_RANKS);
+    println!("--- with the paper's 23 us server RTT ---");
+    println!("{}", render_metg(&rows));
+
+    // closed-form laws next to the simulated values
+    println!("closed-form scaling laws (sec. 6):");
+    println!("ranks  pmake=jsrun+alloc  dwork=RTT*P  mpi-list=spread/task");
+    for &r in &PAPER_RANKS {
+        println!(
+            "{:>5}  {:>16.2}s  {:>10.1}ms  {:>18.2}ms",
+            r,
+            m.metg_pmake(r),
+            m.metg_dwork(r) * 1e3,
+            m.metg_mpilist(r, 1024) * 1e3
+        );
+    }
+}

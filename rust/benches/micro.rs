@@ -1,0 +1,191 @@
+//! Micro-benchmarks of the substrates on the dwork hot path, plus the
+//! paper's million-task claim.
+//!
+//! Paper sec. 5: "Message transfer rates using ZeroMQ and hash-table
+//! entry read/write rates form lower bounds on the latency" — these are
+//! those lower bounds, on our substitutes.  Sec. 6: "can create and deque
+//! one million tasks in about a minute".
+//!
+//! Run: `cargo bench --bench micro`
+
+use std::time::Instant;
+
+use threesched::coordinator::dwork::{self, Client, Request, Response, TaskMsg};
+use threesched::substrate::kvstore::KvStore;
+use threesched::substrate::wire::{Reader, Writer};
+
+fn bench_wire(iters: u64) {
+    // encode+decode a Steal request and a Task response, the two hottest
+    // messages
+    let req = Request::Steal { worker: "worker-00042".into() };
+    let resp = Response::Task(TaskMsg::new("task-000123", vec![0u8; 64]));
+    let t0 = Instant::now();
+    let mut bytes_moved = 0usize;
+    for _ in 0..iters {
+        let rb = req.encode();
+        let sb = resp.encode();
+        bytes_moved += rb.len() + sb.len();
+        let _ = Request::decode(&rb).unwrap();
+        let _ = Response::decode(&sb).unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "wire codec: {:.2} M msg-pairs/s, {:.0} MB/s, {:.0} ns/pair",
+        iters as f64 / dt / 1e6,
+        bytes_moved as f64 / dt / 1e6,
+        dt / iters as f64 * 1e9
+    );
+}
+
+fn bench_raw_varint(iters: u64) {
+    let t0 = Instant::now();
+    let mut sink = 0u64;
+    for i in 0..iters {
+        let mut w = Writer::with_capacity(16);
+        w.uint(1, i).uint(2, i * 3);
+        let fields = Reader::new(w.as_bytes()).fields().unwrap();
+        sink = sink.wrapping_add(fields.len() as u64);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "varint roundtrip: {:.2} M ops/s ({sink} fields decoded)",
+        iters as f64 / dt / 1e6
+    );
+}
+
+fn bench_kvstore(n: u64) {
+    let mut kv = KvStore::in_memory();
+    let t0 = Instant::now();
+    for i in 0..n {
+        kv.set(format!("t/task-{i:08}").as_bytes(), b"some-task-record-bytes").unwrap();
+    }
+    let set_dt = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let mut hits = 0u64;
+    for i in 0..n {
+        if kv.get(format!("t/task-{i:08}").as_bytes()).is_some() {
+            hits += 1;
+        }
+    }
+    let get_dt = t0.elapsed().as_secs_f64();
+    println!(
+        "kvstore (in-memory): set {:.2} M ops/s, get {:.2} M ops/s ({hits} hits)",
+        n as f64 / set_dt / 1e6,
+        n as f64 / get_dt / 1e6
+    );
+}
+
+fn bench_kvstore_wal(n: u64) {
+    let dir = std::env::temp_dir().join(format!("threesched-bench-wal-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut kv = KvStore::open(&dir).unwrap();
+    kv.set_sync_every(1024);
+    let t0 = Instant::now();
+    for i in 0..n {
+        kv.set(format!("t/task-{i:08}").as_bytes(), b"some-task-record-bytes").unwrap();
+    }
+    kv.flush().unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("kvstore (WAL, flush/1024): set {:.2} M ops/s", n as f64 / dt / 1e6);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn bench_steal_rtt() {
+    for &n in &[10_000usize] {
+        let mut state = dwork::SchedState::new();
+        for i in 0..n {
+            state.create(TaskMsg::new(format!("t{i}"), vec![]), &[]).unwrap();
+        }
+        let (connector, handle) = dwork::spawn_inproc(state, dwork::ServerConfig::default());
+        let mut c = Client::new(Box::new(connector.connect()), "bench");
+        let t0 = Instant::now();
+        while let Some(t) = c.steal().unwrap() {
+            c.complete(&t.name, true).unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        drop(c);
+        drop(connector);
+        handle.join().unwrap();
+        println!(
+            "dwork steal+complete (in-proc): {:.1} us/task ({:.0} tasks/s) over {n} tasks \
+             [paper: 23 us, 44k tasks/s]",
+            dt / n as f64 * 1e6,
+            n as f64 / dt
+        );
+    }
+}
+
+fn bench_million_tasks() {
+    // paper sec. 6: create and deque one million tasks in about a minute
+    let n = 1_000_000usize;
+    let t0 = Instant::now();
+    let mut state = dwork::SchedState::new();
+    for i in 0..n {
+        state.create(TaskMsg::new(format!("t{i}"), vec![]), &[]).unwrap();
+    }
+    let create_dt = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let mut drained = 0usize;
+    loop {
+        let batch = state.steal("w", 1024);
+        if batch.is_empty() {
+            break;
+        }
+        for t in &batch {
+            state.complete("w", &t.name, true).unwrap();
+        }
+        drained += batch.len();
+    }
+    let drain_dt = t0.elapsed().as_secs_f64();
+    assert_eq!(drained, n);
+    println!(
+        "million tasks: create {:.1}s + deque/complete {:.1}s = {:.1}s total \
+         [paper: ~60s including network]",
+        create_dt,
+        drain_dt,
+        create_dt + drain_dt
+    );
+}
+
+fn bench_des_rate() {
+    use threesched::substrate::des::Sim;
+    let n = 2_000_000u64;
+    let mut sim = Sim::new();
+    sim.at(0.0, 0);
+    let t0 = Instant::now();
+    sim.run(|s, k| {
+        if k < n {
+            s.after(1e-6, k + 1);
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    println!("DES event loop: {:.2} M events/s", n as f64 / dt / 1e6);
+}
+
+fn bench_comm() {
+    use threesched::coordinator::mpilist::Context;
+    let rounds = 2_000u64;
+    let t0 = Instant::now();
+    Context::run(4, |ctx| {
+        for _ in 0..rounds {
+            let _ = ctx.comm.allreduce(1u64, |a, b| a + b);
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "comm allreduce (4 in-proc ranks): {:.1} us/op",
+        dt / rounds as f64 * 1e6
+    );
+}
+
+fn main() {
+    println!("=== bench: micro ===\n");
+    bench_wire(200_000);
+    bench_raw_varint(1_000_000);
+    bench_kvstore(200_000);
+    bench_kvstore_wal(200_000);
+    bench_steal_rtt();
+    bench_million_tasks();
+    bench_des_rate();
+    bench_comm();
+}

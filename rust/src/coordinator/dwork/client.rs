@@ -1,0 +1,355 @@
+//! dwork client: the worker-side API + the worker main loop.
+//!
+//! [`Client`] is a thin typed wrapper over one connection (the paper's
+//! dquery CLI and user programs sit at this level).  [`run_worker`] is the
+//! paper Fig 2 client loop:
+//!
+//! ```text
+//! while server responds with task do
+//!     copy-in task inputs; execute task; inform server of completion
+//! end; inform server of Exit
+//! ```
+//!
+//! with the paper's compute/communication overlap implemented as a
+//! prefetch buffer: while a task executes, the next Steal has already
+//! been issued (depth configurable; sec. 5's "Steal n" batching).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::substrate::transport::ClientConn;
+
+use super::messages::{Request, Response, StatusInfo, TaskMsg};
+
+/// Typed request/reply client.
+pub struct Client {
+    conn: Box<dyn ClientConn>,
+    worker: String,
+}
+
+impl Client {
+    pub fn new(conn: Box<dyn ClientConn>, worker: impl Into<String>) -> Client {
+        Client { conn, worker: worker.into() }
+    }
+
+    pub fn worker(&self) -> &str {
+        &self.worker
+    }
+
+    fn roundtrip(&mut self, req: &Request) -> Result<Response> {
+        let reply = self.conn.request(&req.encode())?;
+        Response::decode(&reply)
+    }
+
+    fn expect_ok(&mut self, req: &Request) -> Result<()> {
+        match self.roundtrip(req)? {
+            Response::Ok => Ok(()),
+            Response::Err(e) => bail!("server error: {e}"),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    /// Create a task with dependencies.
+    pub fn create(&mut self, task: TaskMsg, deps: &[String]) -> Result<()> {
+        self.expect_ok(&Request::Create { task, deps: deps.to_vec() })
+    }
+
+    /// Steal one task.  Ok(None) = everything complete (server said Exit).
+    /// NotFound (nothing ready *yet*) is surfaced as `StealOutcome` via
+    /// [`Client::steal_poll`]; this convenience blocks through it.
+    pub fn steal(&mut self) -> Result<Option<TaskMsg>> {
+        loop {
+            match self.steal_poll()? {
+                StealOutcome::Task(t) => return Ok(Some(t)),
+                StealOutcome::AllDone => return Ok(None),
+                StealOutcome::NotReady => {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+        }
+    }
+
+    /// Non-blocking steal: one round-trip, three-way outcome.
+    pub fn steal_poll(&mut self) -> Result<StealOutcome> {
+        match self.roundtrip(&Request::Steal { worker: self.worker.clone() })? {
+            Response::Task(t) => Ok(StealOutcome::Task(t)),
+            Response::NotFound => Ok(StealOutcome::NotReady),
+            Response::Exit => Ok(StealOutcome::AllDone),
+            Response::Err(e) => bail!("server error: {e}"),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    /// Steal up to n tasks (batching extension).
+    pub fn steal_n(&mut self, n: u32) -> Result<StealBatch> {
+        match self.roundtrip(&Request::StealN { worker: self.worker.clone(), n })? {
+            Response::Tasks(ts) => Ok(StealBatch::Tasks(ts)),
+            Response::Exit => Ok(StealBatch::AllDone),
+            Response::Err(e) => bail!("server error: {e}"),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    pub fn complete(&mut self, task: &str, success: bool) -> Result<()> {
+        self.expect_ok(&Request::Complete {
+            worker: self.worker.clone(),
+            task: task.to_string(),
+            success,
+        })
+    }
+
+    /// Replace a running task adding new dependencies (dynamic rewrite).
+    pub fn transfer(&mut self, task: &str, new_deps: &[String]) -> Result<()> {
+        self.expect_ok(&Request::Transfer {
+            worker: self.worker.clone(),
+            task: task.to_string(),
+            new_deps: new_deps.to_vec(),
+        })
+    }
+
+    pub fn exit(&mut self) -> Result<()> {
+        self.expect_ok(&Request::Exit { worker: self.worker.clone() })
+    }
+
+    pub fn status(&mut self) -> Result<StatusInfo> {
+        match self.roundtrip(&Request::Status)? {
+            Response::Status(s) => Ok(s),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    pub fn save(&mut self) -> Result<()> {
+        self.expect_ok(&Request::Save)
+    }
+}
+
+/// Three-way steal outcome.
+#[derive(Debug)]
+pub enum StealOutcome {
+    Task(TaskMsg),
+    NotReady,
+    AllDone,
+}
+
+/// StealN outcome.
+#[derive(Debug)]
+pub enum StealBatch {
+    Tasks(Vec<TaskMsg>),
+    AllDone,
+}
+
+/// Per-worker accounting returned by [`run_worker`]: the Fig 5 breakdown
+/// inputs (compute vs communication time).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    pub tasks_run: u64,
+    pub tasks_failed: u64,
+    pub compute_s: f64,
+    /// time spent blocked on the server (steal + complete round-trips)
+    pub comm_s: f64,
+    /// time spent idle on NotFound backoff
+    pub idle_s: f64,
+}
+
+/// Worker main loop with a prefetch buffer of `prefetch` tasks.
+///
+/// `exec` runs one task and returns Ok to report success.  With
+/// `prefetch >= 1` the next task is already local when the current one
+/// finishes, hiding the steal round-trip behind compute — the paper's
+/// overlap strategy.  `prefetch == 0` degenerates to strict
+/// steal→execute→complete (used to *measure* the unhidden RTT).
+pub fn run_worker(
+    client: &mut Client,
+    prefetch: u32,
+    mut exec: impl FnMut(&TaskMsg) -> Result<()>,
+) -> Result<WorkerStats> {
+    let mut stats = WorkerStats::default();
+    let mut buffer: VecDeque<TaskMsg> = VecDeque::new();
+    let batch = prefetch.max(1);
+    'outer: loop {
+        // refill: keep `batch` tasks in hand
+        while (buffer.len() as u32) < batch {
+            let t0 = Instant::now();
+            let outcome = client.steal_n(batch - buffer.len() as u32)?;
+            stats.comm_s += t0.elapsed().as_secs_f64();
+            match outcome {
+                StealBatch::Tasks(ts) if ts.is_empty() => {
+                    if buffer.is_empty() {
+                        // nothing in hand and nothing ready: back off
+                        let t0 = Instant::now();
+                        std::thread::sleep(Duration::from_micros(200));
+                        stats.idle_s += t0.elapsed().as_secs_f64();
+                        continue 'outer;
+                    }
+                    break; // run what we have
+                }
+                StealBatch::Tasks(ts) => buffer.extend(ts),
+                StealBatch::AllDone => {
+                    if buffer.is_empty() {
+                        break 'outer;
+                    }
+                    break;
+                }
+            }
+        }
+        let Some(task) = buffer.pop_front() else { continue };
+        let t0 = Instant::now();
+        let ok = exec(&task).is_ok();
+        stats.compute_s += t0.elapsed().as_secs_f64();
+        stats.tasks_run += 1;
+        if !ok {
+            stats.tasks_failed += 1;
+        }
+        let t0 = Instant::now();
+        client.complete(&task.name, ok)?;
+        stats.comm_s += t0.elapsed().as_secs_f64();
+    }
+    Ok(stats)
+}
+
+/// Self-diagnostic hook from the paper's client loop: on failure the
+/// worker informs the server of Exit so its tasks are re-queued.
+pub fn run_worker_with_diagnostic(
+    client: &mut Client,
+    prefetch: u32,
+    exec: impl FnMut(&TaskMsg) -> Result<()>,
+    mut healthy: impl FnMut() -> bool,
+) -> Result<WorkerStats> {
+    if !healthy() {
+        client.exit()?;
+        return Err(anyhow!("worker failed self-diagnostic before starting"));
+    }
+    run_worker(client, prefetch, exec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dwork::server::{spawn_inproc, ServerConfig};
+    use crate::coordinator::dwork::state::SchedState;
+
+    fn farm(n_tasks: usize) -> SchedState {
+        let mut s = SchedState::new();
+        for i in 0..n_tasks {
+            s.create(TaskMsg::new(format!("t{i}"), vec![]), &[]).unwrap();
+        }
+        s
+    }
+
+    #[test]
+    fn single_worker_drains_farm() {
+        let (connector, handle) = spawn_inproc(farm(50), ServerConfig::default());
+        let mut c = Client::new(Box::new(connector.connect()), "w0");
+        let stats = run_worker(&mut c, 0, |_| Ok(())).unwrap();
+        assert_eq!(stats.tasks_run, 50);
+        assert_eq!(stats.tasks_failed, 0);
+        drop(c);
+        drop(connector);
+        assert!(handle.join().unwrap().all_done());
+    }
+
+    #[test]
+    fn many_workers_share_farm() {
+        let (connector, handle) = spawn_inproc(farm(200), ServerConfig::default());
+        let totals: Vec<u64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|i| {
+                    let conn = connector.connect();
+                    s.spawn(move || {
+                        let mut c = Client::new(Box::new(conn), format!("w{i}"));
+                        run_worker(&mut c, 2, |_| Ok(())).unwrap().tasks_run
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(totals.iter().sum::<u64>(), 200);
+        drop(connector);
+        assert!(handle.join().unwrap().all_done());
+    }
+
+    #[test]
+    fn prefetch_overlap_still_completes_everything() {
+        for prefetch in [0, 1, 4, 16] {
+            let (connector, handle) = spawn_inproc(farm(64), ServerConfig::default());
+            let mut c = Client::new(Box::new(connector.connect()), "w0");
+            let stats = run_worker(&mut c, prefetch, |_| Ok(())).unwrap();
+            assert_eq!(stats.tasks_run, 64, "prefetch={prefetch}");
+            drop(c);
+            drop(connector);
+            assert!(handle.join().unwrap().all_done());
+        }
+    }
+
+    #[test]
+    fn failing_tasks_error_out_dependents() {
+        let mut s = SchedState::new();
+        s.create(TaskMsg::new("bad", vec![]), &[]).unwrap();
+        s.create(TaskMsg::new("child", vec![]), &["bad".to_string()]).unwrap();
+        s.create(TaskMsg::new("good", vec![]), &[]).unwrap();
+        let (connector, handle) = spawn_inproc(s, ServerConfig::default());
+        let mut c = Client::new(Box::new(connector.connect()), "w0");
+        let stats = run_worker(&mut c, 0, |t| {
+            if t.name == "bad" {
+                anyhow::bail!("task exploded")
+            }
+            Ok(())
+        })
+        .unwrap();
+        // bad + good ran; child never served
+        assert_eq!(stats.tasks_run, 2);
+        assert_eq!(stats.tasks_failed, 1);
+        drop(c);
+        drop(connector);
+        let state = handle.join().unwrap();
+        assert!(state.all_done());
+        assert_eq!(
+            state.get("child").unwrap().state,
+            crate::coordinator::dwork::state::TaskState::Error
+        );
+    }
+
+    #[test]
+    fn dynamic_task_insertion_from_worker() {
+        // a worker that, on finding "expand", creates two children
+        let (connector, handle) = spawn_inproc(farm(0), ServerConfig::default());
+        {
+            let mut seed = Client::new(Box::new(connector.connect()), "user");
+            seed.create(TaskMsg::new("expand", vec![]), &[]).unwrap();
+        }
+        let mut c = Client::new(Box::new(connector.connect()), "w0");
+        let conn2 = connector.connect();
+        let mut creator = Client::new(Box::new(conn2), "w0-creator");
+        let stats = run_worker(&mut c, 0, |t| {
+            if t.name == "expand" {
+                creator.create(TaskMsg::new("child-1", vec![]), &[]).unwrap();
+                creator.create(TaskMsg::new("child-2", vec![]), &[]).unwrap();
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(stats.tasks_run, 3);
+        drop(c);
+        drop(creator);
+        drop(connector);
+        assert!(handle.join().unwrap().all_done());
+    }
+
+    #[test]
+    fn diagnostic_failure_exits_cleanly() {
+        let (connector, handle) = spawn_inproc(farm(3), ServerConfig::default());
+        let mut c = Client::new(Box::new(connector.connect()), "sick");
+        let r = run_worker_with_diagnostic(&mut c, 0, |_| Ok(()), || false);
+        assert!(r.is_err());
+        // the farm is still fully drainable by a healthy worker
+        let mut c2 = Client::new(Box::new(connector.connect()), "healthy");
+        let stats = run_worker(&mut c2, 0, |_| Ok(())).unwrap();
+        assert_eq!(stats.tasks_run, 3);
+        drop(c);
+        drop(c2);
+        drop(connector);
+        handle.join().unwrap();
+    }
+}

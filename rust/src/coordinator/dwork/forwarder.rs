@@ -1,0 +1,139 @@
+//! Message forwarding tree: the paper's rack-leader fan-in.
+//!
+//! Paper sec. 4: "I have used a 2-level forwarding tree, where each rack
+//! of 18 Summit nodes communicates with a rack-leader.  The rack leaders
+//! forward all messages to a single task server running on the job's
+//! launch node."  This keeps the task server's open-connection count at
+//! the number of racks instead of the number of ranks (sec. 6, feature 2:
+//! "forwarding of messages to maintain constant open connections per
+//! rank").
+//!
+//! A forwarder is itself a tiny server: it accepts requests on its own
+//! hub and relays each one upstream over a single connection, returning
+//! the upstream reply.  Forwarders compose, so deeper trees are possible.
+
+use std::thread::JoinHandle;
+
+use crate::substrate::transport::{inproc, ClientConn, RequestRx};
+
+/// Run a forwarder loop: every request from `rx` is relayed through
+/// `upstream`, and the reply is sent back to the original requester.
+/// Exits when all downstream connectors are dropped.
+pub fn forward(rx: RequestRx, mut upstream: Box<dyn ClientConn>) {
+    for req in rx {
+        match upstream.request(&req.payload) {
+            Ok(reply) => req.reply(reply),
+            Err(_) => {
+                // upstream is gone: drop the request; the client will
+                // surface a transport error and can re-resolve.
+                return;
+            }
+        }
+    }
+}
+
+/// Spawn an in-proc forwarder in front of `upstream`; returns the
+/// downstream connector workers should use.
+pub fn spawn(upstream: Box<dyn ClientConn>) -> (inproc::Connector, JoinHandle<()>) {
+    let (rx, connector) = inproc::hub();
+    let handle = std::thread::Builder::new()
+        .name("dwork-forwarder".into())
+        .spawn(move || forward(rx, upstream))
+        .expect("spawn forwarder");
+    (connector, handle)
+}
+
+/// Build a two-level tree over an in-proc server connector: `racks`
+/// forwarders, each to be shared by the ranks of one rack.  Returns one
+/// downstream connector per rack (plus the forwarder join handles).
+pub fn rack_tree(
+    server: &inproc::Connector,
+    racks: usize,
+) -> (Vec<inproc::Connector>, Vec<JoinHandle<()>>) {
+    let mut connectors = Vec::with_capacity(racks);
+    let mut handles = Vec::with_capacity(racks);
+    for _ in 0..racks {
+        let (c, h) = spawn(Box::new(server.connect()));
+        connectors.push(c);
+        handles.push(h);
+    }
+    (connectors, handles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dwork::client::{run_worker, Client};
+    use crate::coordinator::dwork::messages::TaskMsg;
+    use crate::coordinator::dwork::server::{spawn_inproc, ServerConfig};
+    use crate::coordinator::dwork::state::SchedState;
+    use crate::substrate::cluster::Machine;
+
+    #[test]
+    fn one_hop_forwarding_transparent() {
+        let mut s = SchedState::new();
+        for i in 0..20 {
+            s.create(TaskMsg::new(format!("t{i}"), vec![]), &[]).unwrap();
+        }
+        let (server_conn, server_handle) = spawn_inproc(s, ServerConfig::default());
+        let (fwd_conn, _fwd_handle) = spawn(Box::new(server_conn.connect()));
+        let mut c = Client::new(Box::new(fwd_conn.connect()), "w0");
+        let stats = run_worker(&mut c, 1, |_| Ok(())).unwrap();
+        assert_eq!(stats.tasks_run, 20);
+        drop(c);
+        drop(fwd_conn);
+        drop(server_conn);
+        assert!(server_handle.join().unwrap().all_done());
+    }
+
+    #[test]
+    fn rack_tree_summit_topology() {
+        // 6 nodes -> 36 ranks over 1 rack; 36 nodes -> 2 racks
+        let m = Machine::summit(36);
+        assert_eq!(m.racks(), 2);
+        let mut s = SchedState::new();
+        for i in 0..100 {
+            s.create(TaskMsg::new(format!("t{i}"), vec![]), &[]).unwrap();
+        }
+        let (server_conn, server_handle) = spawn_inproc(s, ServerConfig::default());
+        let (racks, _handles) = rack_tree(&server_conn, m.racks());
+        assert_eq!(racks.len(), 2);
+        // 8 workers spread over the 2 rack leaders by topology
+        let totals: Vec<u64> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|w| {
+                    let rack = w % 2;
+                    let conn = racks[rack].connect();
+                    scope.spawn(move || {
+                        let mut c = Client::new(Box::new(conn), format!("w{w}"));
+                        run_worker(&mut c, 1, |_| Ok(())).unwrap().tasks_run
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(totals.iter().sum::<u64>(), 100);
+        drop(racks);
+        drop(server_conn);
+        assert!(server_handle.join().unwrap().all_done());
+    }
+
+    #[test]
+    fn two_level_tree_composes() {
+        let mut s = SchedState::new();
+        for i in 0..10 {
+            s.create(TaskMsg::new(format!("t{i}"), vec![]), &[]).unwrap();
+        }
+        let (server_conn, server_handle) = spawn_inproc(s, ServerConfig::default());
+        let (mid, _h1) = spawn(Box::new(server_conn.connect()));
+        let (leaf, _h2) = spawn(Box::new(mid.connect()));
+        let mut c = Client::new(Box::new(leaf.connect()), "w");
+        let stats = run_worker(&mut c, 0, |_| Ok(())).unwrap();
+        assert_eq!(stats.tasks_run, 10);
+        drop(c);
+        drop(leaf);
+        drop(mid);
+        drop(server_conn);
+        assert!(server_handle.join().unwrap().all_done());
+    }
+}

@@ -1,0 +1,370 @@
+//! dwork message API (paper Table 2) on the wire codec.
+//!
+//! | Query    | Parameter      | Response        |
+//! |----------|----------------|-----------------|
+//! | Create   | Task, [Task]   | Ok              |
+//! | Steal    | Worker         | Task? | Exit    |
+//! | StealN   | Worker, n      | Tasks | Exit    | (sec. 5 batching extension)
+//! | Complete | Worker, Task   | Ok              | (+ success flag)
+//! | Transfer | Worker, [Task] | Ok              |
+//! | Exit     | Worker         | Ok              |
+//! | Status   | –              | Status          | (dquery support)
+//!
+//! Workers are strings; Tasks are messages carrying arbitrary metadata —
+//! exactly the paper's protobuf choice, here via `substrate::wire`.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::substrate::wire::{self, Reader, Value, Writer};
+
+/// Task payload crossing the wire: name + opaque body + originator.
+///
+/// The body is scheduler-opaque (the paper: "tasks are software anyway");
+/// our workloads encode the artifact name + input seed in it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TaskMsg {
+    pub name: String,
+    pub body: Vec<u8>,
+    pub originator: String,
+}
+
+impl TaskMsg {
+    pub fn new(name: impl Into<String>, body: Vec<u8>) -> TaskMsg {
+        TaskMsg { name: name.into(), body, originator: String::new() }
+    }
+
+    fn encode_into(&self, w: &mut Writer, field: u32) {
+        let mut t = Writer::new();
+        t.string(1, &self.name);
+        t.bytes(2, &self.body);
+        t.string(3, &self.originator);
+        w.message(field, &t);
+    }
+
+    fn decode(bytes: &[u8]) -> Result<TaskMsg> {
+        let fields = Reader::new(bytes).fields()?;
+        Ok(TaskMsg {
+            name: wire::get_str(&fields, 1)?.to_string(),
+            body: fields
+                .iter()
+                .find(|(f, _)| *f == 2)
+                .and_then(|(_, v)| v.as_bytes())
+                .unwrap_or_default()
+                .to_vec(),
+            originator: wire::get_str(&fields, 3).unwrap_or_default().to_string(),
+        })
+    }
+}
+
+/// Requests a client can send to dhub.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Create a task with dependencies (dep task names).
+    Create { task: TaskMsg, deps: Vec<String> },
+    /// Deque (steal) one ready task for `worker`.
+    Steal { worker: String },
+    /// Steal up to `n` ready tasks (batching extension, paper sec. 5).
+    StealN { worker: String, n: u32 },
+    /// Report completion; `success=false` marks the task errored.
+    Complete { worker: String, task: String, success: bool },
+    /// Replace a running task, adding new dependencies (paper's rewrite).
+    Transfer { worker: String, task: String, new_deps: Vec<String> },
+    /// Worker (or user, for a dead worker) announces departure.
+    Exit { worker: String },
+    /// Queue introspection (dquery).
+    Status,
+    /// Ask the server to persist a snapshot now.
+    Save,
+}
+
+const REQ_CREATE: u64 = 1;
+const REQ_STEAL: u64 = 2;
+const REQ_STEAL_N: u64 = 3;
+const REQ_COMPLETE: u64 = 4;
+const REQ_TRANSFER: u64 = 5;
+const REQ_EXIT: u64 = 6;
+const REQ_STATUS: u64 = 7;
+const REQ_SAVE: u64 = 8;
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::with_capacity(64);
+        match self {
+            Request::Create { task, deps } => {
+                w.uint(1, REQ_CREATE);
+                task.encode_into(&mut w, 2);
+                w.strings(3, deps.iter().map(String::as_str));
+            }
+            Request::Steal { worker } => {
+                w.uint(1, REQ_STEAL);
+                w.string(4, worker);
+            }
+            Request::StealN { worker, n } => {
+                w.uint(1, REQ_STEAL_N);
+                w.string(4, worker);
+                w.uint(5, *n as u64);
+            }
+            Request::Complete { worker, task, success } => {
+                w.uint(1, REQ_COMPLETE);
+                w.string(4, worker);
+                w.string(6, task);
+                w.uint(7, *success as u64);
+            }
+            Request::Transfer { worker, task, new_deps } => {
+                w.uint(1, REQ_TRANSFER);
+                w.string(4, worker);
+                w.string(6, task);
+                w.strings(3, new_deps.iter().map(String::as_str));
+            }
+            Request::Exit { worker } => {
+                w.uint(1, REQ_EXIT);
+                w.string(4, worker);
+            }
+            Request::Status => {
+                w.uint(1, REQ_STATUS);
+            }
+            Request::Save => {
+                w.uint(1, REQ_SAVE);
+            }
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Request> {
+        let fields = Reader::new(bytes).fields()?;
+        let kind = wire::get_u64(&fields, 1)?;
+        let worker = || wire::get_str(&fields, 4).map(str::to_string);
+        let task_name = || wire::get_str(&fields, 6).map(str::to_string);
+        let deps = || -> Vec<String> {
+            wire::get_strs(&fields, 3).into_iter().map(str::to_string).collect()
+        };
+        Ok(match kind {
+            REQ_CREATE => {
+                let tb = fields
+                    .iter()
+                    .find(|(f, _)| *f == 2)
+                    .and_then(|(_, v)| v.as_bytes())
+                    .ok_or_else(|| anyhow!("Create missing task"))?;
+                Request::Create { task: TaskMsg::decode(tb)?, deps: deps() }
+            }
+            REQ_STEAL => Request::Steal { worker: worker()? },
+            REQ_STEAL_N => Request::StealN {
+                worker: worker()?,
+                n: wire::get_u64(&fields, 5)? as u32,
+            },
+            REQ_COMPLETE => Request::Complete {
+                worker: worker()?,
+                task: task_name()?,
+                success: wire::get_u64(&fields, 7).unwrap_or(1) != 0,
+            },
+            REQ_TRANSFER => Request::Transfer {
+                worker: worker()?,
+                task: task_name()?,
+                new_deps: deps(),
+            },
+            REQ_EXIT => Request::Exit { worker: worker()? },
+            REQ_STATUS => Request::Status,
+            REQ_SAVE => Request::Save,
+            other => bail!("unknown request kind {other}"),
+        })
+    }
+}
+
+/// Queue counters exposed through Status.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StatusInfo {
+    pub total: u64,
+    pub ready: u64,
+    pub waiting: u64,
+    pub assigned: u64,
+    pub completed: u64,
+    pub errored: u64,
+    pub workers: u64,
+}
+
+/// Server replies.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// A task to run (Steal success).
+    Task(TaskMsg),
+    /// A batch of tasks (StealN success; may be shorter than requested).
+    Tasks(Vec<TaskMsg>),
+    /// No task ready right now, but the graph is not finished: poll again.
+    NotFound,
+    /// Everything is complete: worker should shut down.
+    Exit,
+    /// Mutation acknowledged.
+    Ok,
+    /// Request failed server-side.
+    Err(String),
+    Status(StatusInfo),
+}
+
+const RESP_TASK: u64 = 1;
+const RESP_TASKS: u64 = 2;
+const RESP_NOT_FOUND: u64 = 3;
+const RESP_EXIT: u64 = 4;
+const RESP_OK: u64 = 5;
+const RESP_ERR: u64 = 6;
+const RESP_STATUS: u64 = 7;
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::with_capacity(32);
+        match self {
+            Response::Task(t) => {
+                w.uint(1, RESP_TASK);
+                t.encode_into(&mut w, 2);
+            }
+            Response::Tasks(ts) => {
+                w.uint(1, RESP_TASKS);
+                for t in ts {
+                    t.encode_into(&mut w, 2);
+                }
+            }
+            Response::NotFound => {
+                w.uint(1, RESP_NOT_FOUND);
+            }
+            Response::Exit => {
+                w.uint(1, RESP_EXIT);
+            }
+            Response::Ok => {
+                w.uint(1, RESP_OK);
+            }
+            Response::Err(msg) => {
+                w.uint(1, RESP_ERR);
+                w.string(3, msg);
+            }
+            Response::Status(s) => {
+                w.uint(1, RESP_STATUS);
+                w.uint(10, s.total);
+                w.uint(11, s.ready);
+                w.uint(12, s.waiting);
+                w.uint(13, s.assigned);
+                w.uint(14, s.completed);
+                w.uint(15, s.errored);
+                w.uint(16, s.workers);
+            }
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Response> {
+        let fields = Reader::new(bytes).fields()?;
+        let kind = wire::get_u64(&fields, 1)?;
+        let tasks = || -> Result<Vec<TaskMsg>> {
+            fields
+                .iter()
+                .filter(|(f, _)| *f == 2)
+                .map(|(_, v)| match v {
+                    Value::Bytes(b) => TaskMsg::decode(b),
+                    _ => bail!("task field has wrong wire type"),
+                })
+                .collect()
+        };
+        Ok(match kind {
+            RESP_TASK => {
+                let mut ts = tasks()?;
+                Response::Task(ts.pop().ok_or_else(|| anyhow!("Task reply without task"))?)
+            }
+            RESP_TASKS => Response::Tasks(tasks()?),
+            RESP_NOT_FOUND => Response::NotFound,
+            RESP_EXIT => Response::Exit,
+            RESP_OK => Response::Ok,
+            RESP_ERR => Response::Err(wire::get_str(&fields, 3).unwrap_or("?").to_string()),
+            RESP_STATUS => Response::Status(StatusInfo {
+                total: wire::get_u64(&fields, 10)?,
+                ready: wire::get_u64(&fields, 11)?,
+                waiting: wire::get_u64(&fields, 12)?,
+                assigned: wire::get_u64(&fields, 13)?,
+                completed: wire::get_u64(&fields, 14)?,
+                errored: wire::get_u64(&fields, 15)?,
+                workers: wire::get_u64(&fields, 16)?,
+            }),
+            other => bail!("unknown response kind {other}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(r: Request) {
+        assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+    }
+
+    fn roundtrip_resp(r: Response) {
+        assert_eq!(Response::decode(&r.encode()).unwrap(), r);
+    }
+
+    #[test]
+    fn all_requests_roundtrip() {
+        roundtrip_req(Request::Create {
+            task: TaskMsg {
+                name: "dock-42".into(),
+                body: vec![1, 2, 3],
+                originator: "user".into(),
+            },
+            deps: vec!["prep-42".into(), "prep-43".into()],
+        });
+        roundtrip_req(Request::Steal { worker: "w-001".into() });
+        roundtrip_req(Request::StealN { worker: "w".into(), n: 16 });
+        roundtrip_req(Request::Complete { worker: "w".into(), task: "t".into(), success: true });
+        roundtrip_req(Request::Complete { worker: "w".into(), task: "t".into(), success: false });
+        roundtrip_req(Request::Transfer {
+            worker: "w".into(),
+            task: "t".into(),
+            new_deps: vec!["d1".into()],
+        });
+        roundtrip_req(Request::Exit { worker: "w".into() });
+        roundtrip_req(Request::Status);
+        roundtrip_req(Request::Save);
+    }
+
+    #[test]
+    fn all_responses_roundtrip() {
+        roundtrip_resp(Response::Task(TaskMsg::new("t1", vec![9, 9])));
+        roundtrip_resp(Response::Tasks(vec![
+            TaskMsg::new("a", vec![]),
+            TaskMsg::new("b", vec![1]),
+        ]));
+        roundtrip_resp(Response::Tasks(vec![]));
+        roundtrip_resp(Response::NotFound);
+        roundtrip_resp(Response::Exit);
+        roundtrip_resp(Response::Ok);
+        roundtrip_resp(Response::Err("boom".into()));
+        roundtrip_resp(Response::Status(StatusInfo {
+            total: 100,
+            ready: 5,
+            waiting: 10,
+            assigned: 3,
+            completed: 80,
+            errored: 2,
+            workers: 7,
+        }));
+    }
+
+    #[test]
+    fn empty_deps_and_body() {
+        roundtrip_req(Request::Create { task: TaskMsg::new("t", vec![]), deps: vec![] });
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(Request::decode(&[0xff, 0xff]).is_err());
+        assert!(Response::decode(&[]).is_err());
+        // valid wire, unknown kind
+        let mut w = Writer::new();
+        w.uint(1, 999);
+        assert!(Request::decode(w.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn unicode_names() {
+        roundtrip_req(Request::Create {
+            task: TaskMsg::new("タスク-α", vec![0xf0]),
+            deps: vec!["依存-β".into()],
+        });
+    }
+}

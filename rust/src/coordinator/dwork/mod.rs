@@ -1,0 +1,20 @@
+//! dwork: a client/server bag-of-tasks scheduler (paper sec. 2.2).
+//!
+//! A single server (dhub) owns the task graph; workers pull named tasks
+//! over a request/reply transport.  The synchronization contract is the
+//! server's: a task is served only after every dependency completed.
+//! FIFO double-ended queue, front re-insertion on Transfer, fault
+//! tolerance via Exit, persistence via the KV-store tables, and the two
+//! scalability extensions the paper names: Steal-n batching and the
+//! rack-leader forwarding tree.
+
+pub mod client;
+pub mod forwarder;
+pub mod messages;
+pub mod server;
+pub mod state;
+
+pub use client::{run_worker, Client, WorkerStats};
+pub use messages::{Request, Response, StatusInfo, TaskMsg};
+pub use server::{serve, spawn_inproc, spawn_tcp, ServerConfig};
+pub use state::{SchedState, TaskState};

@@ -1,0 +1,227 @@
+//! dhub: the dwork task server event loop.
+//!
+//! Transport-agnostic: consumes the [`Request`](crate::substrate::transport::Request)
+//! stream produced by either the in-proc hub or the TCP front-end, decodes
+//! wire messages, applies them to [`SchedState`], and replies.  A single
+//! loop serializes all mutations — the paper's single-task-server design
+//! whose dispatch rate bounds dwork's METG.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::substrate::transport::RequestRx;
+
+use super::messages::{Request, Response};
+use super::state::SchedState;
+
+/// Counters the server publishes for benches/monitoring.
+#[derive(Default, Debug)]
+pub struct ServerCounters {
+    pub requests: AtomicU64,
+    pub steals_served: AtomicU64,
+    pub not_found: AtomicU64,
+    pub exits_sent: AtomicU64,
+}
+
+/// Configuration knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Auto-snapshot the store every N mutations (0 = never).
+    pub snapshot_every: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { snapshot_every: 0 }
+    }
+}
+
+/// Run the server loop until every client connector is dropped.
+/// Returns the final state (for inspection by tests/benches).
+pub fn serve(mut state: SchedState, rx: RequestRx, cfg: ServerConfig) -> SchedState {
+    serve_with_counters(&mut state, rx, cfg, &ServerCounters::default());
+    state
+}
+
+/// Like [`serve`] but with externally visible counters.
+pub fn serve_with_counters(
+    state: &mut SchedState,
+    rx: RequestRx,
+    cfg: ServerConfig,
+    counters: &ServerCounters,
+) {
+    let mut mutations = 0u64;
+    for req in rx {
+        counters.requests.fetch_add(1, Ordering::Relaxed);
+        let resp = match Request::decode(&req.payload) {
+            Err(e) => Response::Err(format!("bad request: {e}")),
+            Ok(Request::Create { task, deps }) => {
+                mutations += 1;
+                match state.create(task, &deps) {
+                    Ok(()) => Response::Ok,
+                    Err(e) => Response::Err(e.to_string()),
+                }
+            }
+            Ok(Request::Steal { worker }) => {
+                mutations += 1;
+                let mut got = state.steal(&worker, 1);
+                match got.pop() {
+                    Some(t) => {
+                        counters.steals_served.fetch_add(1, Ordering::Relaxed);
+                        Response::Task(t)
+                    }
+                    None if state.all_done() => {
+                        counters.exits_sent.fetch_add(1, Ordering::Relaxed);
+                        Response::Exit
+                    }
+                    None => {
+                        counters.not_found.fetch_add(1, Ordering::Relaxed);
+                        Response::NotFound
+                    }
+                }
+            }
+            Ok(Request::StealN { worker, n }) => {
+                mutations += 1;
+                let got = state.steal(&worker, n);
+                if got.is_empty() && state.all_done() {
+                    counters.exits_sent.fetch_add(1, Ordering::Relaxed);
+                    Response::Exit
+                } else {
+                    counters
+                        .steals_served
+                        .fetch_add(got.len() as u64, Ordering::Relaxed);
+                    Response::Tasks(got)
+                }
+            }
+            Ok(Request::Complete { worker, task, success }) => {
+                mutations += 1;
+                match state.complete(&worker, &task, success) {
+                    Ok(()) => Response::Ok,
+                    Err(e) => Response::Err(e.to_string()),
+                }
+            }
+            Ok(Request::Transfer { worker, task, new_deps }) => {
+                mutations += 1;
+                match state.transfer(&worker, &task, &new_deps) {
+                    Ok(()) => Response::Ok,
+                    Err(e) => Response::Err(e.to_string()),
+                }
+            }
+            Ok(Request::Exit { worker }) => {
+                mutations += 1;
+                state.exit_worker(&worker);
+                Response::Ok
+            }
+            Ok(Request::Status) => Response::Status(state.status()),
+            Ok(Request::Save) => match state.save() {
+                Ok(()) => Response::Ok,
+                Err(e) => Response::Err(e.to_string()),
+            },
+        };
+        if cfg.snapshot_every > 0 && mutations % cfg.snapshot_every == 0 {
+            let _ = state.save();
+        }
+        req.reply(resp.encode());
+    }
+}
+
+/// Spawn the server on its own thread over an in-proc hub; returns the
+/// connector + join handle.  The server stops when every connector clone
+/// is dropped.
+pub fn spawn_inproc(
+    state: SchedState,
+    cfg: ServerConfig,
+) -> (
+    crate::substrate::transport::inproc::Connector,
+    std::thread::JoinHandle<SchedState>,
+) {
+    let (rx, connector) = crate::substrate::transport::inproc::hub();
+    let handle = std::thread::Builder::new()
+        .name("dhub".into())
+        .spawn(move || serve(state, rx, cfg))
+        .expect("spawn dhub");
+    (connector, handle)
+}
+
+/// Spawn the server over TCP; returns (bound address, server guard, join
+/// handle).  Dropping the guard stops accepting; the loop exits when all
+/// connection threads are gone.  NOTE: the acceptor holds a request-sender
+/// clone, so drop the guard *before* joining the handle.
+pub fn spawn_tcp(
+    state: SchedState,
+    cfg: ServerConfig,
+    bind: &str,
+) -> anyhow::Result<(
+    std::net::SocketAddr,
+    crate::substrate::transport::tcp::TcpServer,
+    std::thread::JoinHandle<SchedState>,
+)> {
+    let (server, rx) = crate::substrate::transport::tcp::TcpServer::bind(bind)?;
+    let addr = server.addr;
+    let handle = std::thread::Builder::new()
+        .name("dhub-tcp".into())
+        .spawn(move || serve(state, rx, cfg))
+        .expect("spawn dhub");
+    Ok((addr, server, handle))
+}
+
+/// Arc-wrapped counters helper for sharing with benches.
+pub fn counters() -> Arc<ServerCounters> {
+    Arc::new(ServerCounters::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dwork::client::Client;
+    use crate::coordinator::dwork::messages::TaskMsg;
+    use crate::substrate::transport::ClientConn;
+
+    #[test]
+    fn inproc_end_to_end() {
+        let (connector, handle) = spawn_inproc(SchedState::new(), ServerConfig::default());
+        let mut c = Client::new(Box::new(connector.connect()), "w0");
+        c.create(TaskMsg::new("a", vec![1]), &[]).unwrap();
+        c.create(TaskMsg::new("b", vec![2]), &["a".to_string()]).unwrap();
+        let t = c.steal().unwrap().unwrap();
+        assert_eq!(t.name, "a");
+        c.complete(&t.name, true).unwrap();
+        let t = c.steal().unwrap().unwrap();
+        assert_eq!(t.name, "b");
+        c.complete(&t.name, true).unwrap();
+        assert!(c.steal().unwrap().is_none(), "all done => Exit");
+        drop(c);
+        drop(connector);
+        let state = handle.join().unwrap();
+        assert!(state.all_done());
+    }
+
+    #[test]
+    fn malformed_request_gets_err_reply() {
+        let (connector, handle) = spawn_inproc(SchedState::new(), ServerConfig::default());
+        let mut raw = connector.connect();
+        let reply = raw.request(&[0xde, 0xad]).unwrap();
+        match super::super::messages::Response::decode(&reply).unwrap() {
+            super::super::messages::Response::Err(_) => {}
+            other => panic!("expected Err, got {other:?}"),
+        }
+        drop(raw);
+        drop(connector);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_end_to_end() {
+        let (addr, _guard, _handle) =
+            spawn_tcp(SchedState::new(), ServerConfig::default(), "127.0.0.1:0").unwrap();
+        let conn =
+            crate::substrate::transport::tcp::TcpClient::connect(&addr.to_string()).unwrap();
+        let mut c = Client::new(Box::new(conn), "w0");
+        c.create(TaskMsg::new("t1", b"payload".to_vec()), &[]).unwrap();
+        let t = c.steal().unwrap().unwrap();
+        assert_eq!(t.body, b"payload");
+        c.complete(&t.name, true).unwrap();
+        let st = c.status().unwrap();
+        assert_eq!(st.completed, 1);
+    }
+}

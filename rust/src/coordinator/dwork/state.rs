@@ -1,0 +1,687 @@
+//! dwork scheduler state: the task graph tables + double-ended ready queue.
+//!
+//! Mirrors the paper's dhub internals (sec. 2.2):
+//!
+//! * two tables — join counters + successors per task, and task metadata —
+//!   persisted write-through into the TKRZW-substitute [`KvStore`];
+//! * "other run-time information, such as the list of tasks ready to run,
+//!   can be generated from these tables on startup" — exactly what
+//!   [`SchedState::rebuild`] does;
+//! * FIFO assignment with *front* re-insertion for transferred tasks: "the
+//!   same double-ended queue setup used for work-stealing";
+//! * the server never serves a task whose dependencies are incomplete;
+//! * `Exit` moves a dead worker's assignments back into the ready pool.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use anyhow::{bail, Result};
+
+use crate::substrate::kvstore::KvStore;
+use crate::substrate::wire::{self, Reader, Writer};
+
+use super::messages::{StatusInfo, TaskMsg};
+
+/// Lifecycle of a task (paper Fig 2 semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskState {
+    /// has unfinished dependencies
+    Waiting,
+    /// ready to be stolen
+    Ready,
+    /// assigned to a worker
+    Assigned,
+    /// completed successfully
+    Done,
+    /// failed, or depends (transitively) on a failed task
+    Error,
+}
+
+impl TaskState {
+    fn to_u8(self) -> u8 {
+        match self {
+            TaskState::Waiting => 0,
+            TaskState::Ready => 1,
+            TaskState::Assigned => 2,
+            TaskState::Done => 3,
+            TaskState::Error => 4,
+        }
+    }
+
+    fn from_u8(v: u8) -> TaskState {
+        match v {
+            0 => TaskState::Waiting,
+            1 => TaskState::Ready,
+            2 => TaskState::Assigned,
+            3 => TaskState::Done,
+            _ => TaskState::Error,
+        }
+    }
+}
+
+/// One task's full record (both paper tables merged per key).
+#[derive(Clone, Debug)]
+pub struct TaskEntry {
+    pub msg: TaskMsg,
+    pub state: TaskState,
+    /// unfinished-dependency count; serve only when 0
+    pub join: u32,
+    /// tasks to notify on completion
+    pub successors: Vec<String>,
+    /// creation sequence — FIFO order survives restart through this
+    pub seq: u64,
+    /// front-of-queue flag for transferred (re-inserted) tasks
+    pub reinserted: bool,
+}
+
+impl TaskEntry {
+    fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::with_capacity(64);
+        w.string(1, &self.msg.name);
+        w.bytes(2, &self.msg.body);
+        w.string(3, &self.msg.originator);
+        w.uint(4, self.state.to_u8() as u64);
+        w.uint(5, self.join as u64);
+        w.strings(6, self.successors.iter().map(String::as_str));
+        w.uint(7, self.seq);
+        w.uint(8, self.reinserted as u64);
+        w.into_bytes()
+    }
+
+    fn decode(bytes: &[u8]) -> Result<TaskEntry> {
+        let fields = Reader::new(bytes).fields()?;
+        Ok(TaskEntry {
+            msg: TaskMsg {
+                name: wire::get_str(&fields, 1)?.to_string(),
+                body: fields
+                    .iter()
+                    .find(|(f, _)| *f == 2)
+                    .and_then(|(_, v)| v.as_bytes())
+                    .unwrap_or_default()
+                    .to_vec(),
+                originator: wire::get_str(&fields, 3).unwrap_or_default().to_string(),
+            },
+            state: TaskState::from_u8(wire::get_u64(&fields, 4)? as u8),
+            join: wire::get_u64(&fields, 5)? as u32,
+            successors: wire::get_strs(&fields, 6).into_iter().map(str::to_string).collect(),
+            seq: wire::get_u64(&fields, 7)?,
+            reinserted: wire::get_u64(&fields, 8).unwrap_or(0) != 0,
+        })
+    }
+}
+
+/// The scheduler state machine.
+pub struct SchedState {
+    tasks: HashMap<String, TaskEntry>,
+    ready: VecDeque<String>,
+    /// worker -> assigned task names
+    assigned: HashMap<String, HashSet<String>>,
+    kv: KvStore,
+    seq: u64,
+    completed: u64,
+    errored: u64,
+}
+
+impl SchedState {
+    /// Fresh volatile state.
+    pub fn new() -> SchedState {
+        SchedState::with_store(KvStore::in_memory())
+    }
+
+    /// State backed by a persistent store; replays any existing records.
+    pub fn with_store(kv: KvStore) -> SchedState {
+        let mut s = SchedState {
+            tasks: HashMap::new(),
+            ready: VecDeque::new(),
+            assigned: HashMap::new(),
+            kv,
+            seq: 0,
+            completed: 0,
+            errored: 0,
+        };
+        s.rebuild();
+        s
+    }
+
+    /// Regenerate run-time structures from the persisted tables (paper:
+    /// rebuildable-on-startup design).  Assigned tasks return to ready:
+    /// their workers did not survive the restart.
+    fn rebuild(&mut self) {
+        let mut entries: Vec<TaskEntry> = self
+            .kv
+            .scan_prefix(b"t/")
+            .filter_map(|(_, v)| TaskEntry::decode(v).ok())
+            .collect();
+        entries.sort_by_key(|e| e.seq);
+        for mut e in entries {
+            self.seq = self.seq.max(e.seq + 1);
+            match e.state {
+                TaskState::Done => self.completed += 1,
+                TaskState::Error => self.errored += 1,
+                TaskState::Ready => self.ready.push_back(e.msg.name.clone()),
+                TaskState::Assigned => {
+                    // worker is gone: back to the pool
+                    e.state = TaskState::Ready;
+                    self.ready.push_back(e.msg.name.clone());
+                }
+                TaskState::Waiting => {}
+            }
+            self.tasks.insert(e.msg.name.clone(), e);
+        }
+    }
+
+    fn persist(&mut self, name: &str) {
+        if let Some(e) = self.tasks.get(name) {
+            let bytes = e.encode();
+            let key = format!("t/{name}");
+            let _ = self.kv.set(key.as_bytes(), &bytes);
+        }
+    }
+
+    /// Ask the store to write a compact snapshot.
+    pub fn save(&mut self) -> Result<()> {
+        self.kv.save()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&TaskEntry> {
+        self.tasks.get(name)
+    }
+
+    /// Everything finished (done or error)?  Drives the Exit reply.
+    pub fn all_done(&self) -> bool {
+        self.completed + self.errored == self.tasks.len() as u64
+    }
+
+    pub fn status(&self) -> StatusInfo {
+        let mut waiting = 0;
+        let mut assigned = 0;
+        for e in self.tasks.values() {
+            match e.state {
+                TaskState::Waiting => waiting += 1,
+                TaskState::Assigned => assigned += 1,
+                _ => {}
+            }
+        }
+        StatusInfo {
+            total: self.tasks.len() as u64,
+            ready: self.ready.len() as u64,
+            waiting,
+            assigned,
+            completed: self.completed,
+            errored: self.errored,
+            workers: self.assigned.iter().filter(|(_, t)| !t.is_empty()).count() as u64,
+        }
+    }
+
+    /// Create a task with dependencies (paper Fig 2 `Create`).
+    pub fn create(&mut self, msg: TaskMsg, deps: &[String]) -> Result<()> {
+        if self.tasks.contains_key(&msg.name) {
+            bail!("task {:?} already exists", msg.name);
+        }
+        let mut join = 0u32;
+        for d in deps {
+            match self.tasks.get(d) {
+                None => bail!("dependency {d:?} does not exist"),
+                Some(e) if e.state == TaskState::Error => {
+                    bail!("dependency {d:?} is in the error state")
+                }
+                Some(e) if e.state == TaskState::Done => {}
+                Some(_) => join += 1,
+            }
+        }
+        let name = msg.name.clone();
+        let entry = TaskEntry {
+            msg,
+            state: if join == 0 { TaskState::Ready } else { TaskState::Waiting },
+            join,
+            successors: Vec::new(),
+            seq: self.seq,
+            reinserted: false,
+        };
+        self.seq += 1;
+        self.tasks.insert(name.clone(), entry);
+        // register as successor of each unfinished dependency
+        let mut touched = Vec::new();
+        for d in deps {
+            let e = self.tasks.get_mut(d).unwrap();
+            if e.state != TaskState::Done {
+                e.successors.push(name.clone());
+                touched.push(d.clone());
+            }
+        }
+        if join == 0 {
+            self.ready.push_back(name.clone());
+        }
+        self.persist(&name);
+        for d in touched {
+            self.persist(&d);
+        }
+        Ok(())
+    }
+
+    /// Pop up to `n` ready tasks for `worker` (paper `Steal`).  Returns an
+    /// empty Vec when nothing is ready — the caller distinguishes
+    /// NotFound/Exit via [`SchedState::all_done`].
+    pub fn steal(&mut self, worker: &str, n: u32) -> Vec<TaskMsg> {
+        let mut out = Vec::new();
+        for _ in 0..n {
+            let Some(name) = self.ready.pop_front() else { break };
+            let e = self.tasks.get_mut(&name).expect("ready task must exist");
+            debug_assert_eq!(e.state, TaskState::Ready);
+            e.state = TaskState::Assigned;
+            out.push(e.msg.clone());
+            self.assigned.entry(worker.to_string()).or_default().insert(name.clone());
+            self.persist(&name);
+        }
+        out
+    }
+
+    /// Mark `task` complete (paper `Complete`); on success, decrement
+    /// successor join counters and promote them when they hit zero.  On
+    /// failure, the task and (recursively) every transitive successor go
+    /// to the error state — they can never run.
+    pub fn complete(&mut self, worker: &str, task: &str, success: bool) -> Result<()> {
+        let Some(e) = self.tasks.get(task) else {
+            bail!("complete of unknown task {task:?}")
+        };
+        if e.state != TaskState::Assigned {
+            bail!("complete of task {task:?} in state {:?}", e.state);
+        }
+        if let Some(set) = self.assigned.get_mut(worker) {
+            set.remove(task);
+        }
+        if success {
+            let succs = {
+                let e = self.tasks.get_mut(task).unwrap();
+                e.state = TaskState::Done;
+                e.successors.clone()
+            };
+            self.completed += 1;
+            self.persist(task);
+            for s in succs {
+                let promote = {
+                    let se = self.tasks.get_mut(&s).expect("successor must exist");
+                    se.join = se.join.saturating_sub(1);
+                    se.join == 0 && se.state == TaskState::Waiting
+                };
+                if promote {
+                    let front = {
+                        let se = self.tasks.get_mut(&s).unwrap();
+                        se.state = TaskState::Ready;
+                        se.reinserted
+                    };
+                    // paper: re-inserted tasks go to the FRONT of the deque
+                    if front {
+                        self.ready.push_front(s.clone());
+                    } else {
+                        self.ready.push_back(s.clone());
+                    }
+                }
+                self.persist(&s);
+            }
+        } else {
+            self.error_recursive(task);
+        }
+        Ok(())
+    }
+
+    fn error_recursive(&mut self, task: &str) {
+        let mut stack = vec![task.to_string()];
+        while let Some(name) = stack.pop() {
+            let Some(e) = self.tasks.get_mut(&name) else { continue };
+            if e.state == TaskState::Error {
+                continue;
+            }
+            if e.state == TaskState::Done {
+                continue; // already finished before the failure propagated
+            }
+            if e.state == TaskState::Ready {
+                // remove from the ready queue
+                self.ready.retain(|r| r != &name);
+            }
+            e.state = TaskState::Error;
+            self.errored += 1;
+            stack.extend(e.successors.iter().cloned());
+            self.persist(&name);
+        }
+    }
+
+    /// Replace a running task, adding new dependencies (paper `Transfer`).
+    /// The task leaves its worker; when its new dependencies are complete
+    /// it re-enters the queue at the *front*.
+    pub fn transfer(&mut self, worker: &str, task: &str, new_deps: &[String]) -> Result<()> {
+        let Some(e) = self.tasks.get(task) else {
+            bail!("transfer of unknown task {task:?}")
+        };
+        if e.state != TaskState::Assigned {
+            bail!("transfer of task {task:?} in state {:?}", e.state);
+        }
+        // cycle guard (user error per the paper — we detect instead of
+        // deadlocking): reject a new dep that transitively depends on task
+        for d in new_deps {
+            if self.reaches(task, d) {
+                bail!("transfer would create a cycle: {d:?} depends on {task:?}");
+            }
+        }
+        if let Some(set) = self.assigned.get_mut(worker) {
+            set.remove(task);
+        }
+        let mut join = 0u32;
+        let mut touched = Vec::new();
+        for d in new_deps {
+            match self.tasks.get_mut(d) {
+                None => bail!("new dependency {d:?} does not exist"),
+                Some(de) if de.state == TaskState::Done => {}
+                Some(de) => {
+                    de.successors.push(task.to_string());
+                    join += 1;
+                    touched.push(d.clone());
+                }
+            }
+        }
+        let e = self.tasks.get_mut(task).unwrap();
+        e.join += join;
+        e.reinserted = true;
+        if e.join == 0 {
+            e.state = TaskState::Ready;
+            self.ready.push_front(task.to_string());
+        } else {
+            e.state = TaskState::Waiting;
+        }
+        self.persist(task);
+        for d in touched {
+            self.persist(&d);
+        }
+        Ok(())
+    }
+
+    /// Does `from`'s successor closure contain `to`?
+    fn reaches(&self, from: &str, to: &str) -> bool {
+        if from == to {
+            return true;
+        }
+        let mut seen = HashSet::new();
+        let mut stack = vec![from];
+        while let Some(n) = stack.pop() {
+            if !seen.insert(n.to_string()) {
+                continue;
+            }
+            if let Some(e) = self.tasks.get(n) {
+                for s in &e.successors {
+                    if s == to {
+                        return true;
+                    }
+                    stack.push(s.as_str());
+                }
+            }
+        }
+        false
+    }
+
+    /// A worker died or left (paper `Exit`): its assignments go back to
+    /// the front of the ready pool (they are the oldest work in flight).
+    pub fn exit_worker(&mut self, worker: &str) {
+        let Some(tasks) = self.assigned.remove(worker) else { return };
+        let mut names: Vec<String> = tasks.into_iter().collect();
+        // deterministic order: oldest first at the very front
+        names.sort_by_key(|n| self.tasks.get(n).map(|e| e.seq).unwrap_or(u64::MAX));
+        for name in names.into_iter().rev() {
+            if let Some(e) = self.tasks.get_mut(&name) {
+                if e.state == TaskState::Assigned {
+                    e.state = TaskState::Ready;
+                    self.ready.push_front(name.clone());
+                    self.persist(&name);
+                }
+            }
+        }
+    }
+}
+
+impl Default for SchedState {
+    fn default() -> Self {
+        SchedState::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(name: &str) -> TaskMsg {
+        TaskMsg::new(name, vec![])
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut s = SchedState::new();
+        s.create(t("a"), &[]).unwrap();
+        s.create(t("b"), &[]).unwrap();
+        s.create(t("c"), &[]).unwrap();
+        let got: Vec<String> = s.steal("w", 3).into_iter().map(|m| m.name).collect();
+        assert_eq!(got, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn dependencies_gate_serving() {
+        let mut s = SchedState::new();
+        s.create(t("a"), &[]).unwrap();
+        s.create(t("b"), &["a".into()]).unwrap();
+        // only a is ready
+        let got = s.steal("w", 10);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].name, "a");
+        assert!(s.steal("w", 1).is_empty());
+        s.complete("w", "a", true).unwrap();
+        let got = s.steal("w", 1);
+        assert_eq!(got[0].name, "b");
+        s.complete("w", "b", true).unwrap();
+        assert!(s.all_done());
+    }
+
+    #[test]
+    fn diamond_dag() {
+        let mut s = SchedState::new();
+        s.create(t("root"), &[]).unwrap();
+        s.create(t("l"), &["root".into()]).unwrap();
+        s.create(t("r"), &["root".into()]).unwrap();
+        s.create(t("join"), &["l".into(), "r".into()]).unwrap();
+        assert_eq!(s.steal("w", 9)[0].name, "root");
+        s.complete("w", "root", true).unwrap();
+        let two = s.steal("w", 9);
+        assert_eq!(two.len(), 2);
+        s.complete("w", "l", true).unwrap();
+        assert!(s.steal("w", 1).is_empty(), "join still waits on r");
+        s.complete("w", "r", true).unwrap();
+        assert_eq!(s.steal("w", 1)[0].name, "join");
+        s.complete("w", "join", true).unwrap();
+        assert!(s.all_done());
+    }
+
+    #[test]
+    fn dep_on_done_task_is_free() {
+        let mut s = SchedState::new();
+        s.create(t("a"), &[]).unwrap();
+        s.steal("w", 1);
+        s.complete("w", "a", true).unwrap();
+        s.create(t("b"), &["a".into()]).unwrap();
+        assert_eq!(s.steal("w", 1)[0].name, "b");
+    }
+
+    #[test]
+    fn unknown_dep_rejected() {
+        let mut s = SchedState::new();
+        assert!(s.create(t("x"), &["ghost".into()]).is_err());
+    }
+
+    #[test]
+    fn duplicate_create_rejected() {
+        let mut s = SchedState::new();
+        s.create(t("a"), &[]).unwrap();
+        assert!(s.create(t("a"), &[]).is_err());
+    }
+
+    #[test]
+    fn error_propagates_to_successors() {
+        let mut s = SchedState::new();
+        s.create(t("a"), &[]).unwrap();
+        s.create(t("b"), &["a".into()]).unwrap();
+        s.create(t("c"), &["b".into()]).unwrap();
+        s.create(t("free"), &[]).unwrap();
+        s.steal("w", 1);
+        s.complete("w", "a", false).unwrap(); // fail a
+        assert_eq!(s.get("b").unwrap().state, TaskState::Error);
+        assert_eq!(s.get("c").unwrap().state, TaskState::Error);
+        // free is unaffected and still served
+        assert_eq!(s.steal("w", 2).len(), 1);
+        s.complete("w", "free", true).unwrap();
+        assert!(s.all_done(), "errored graph still terminates");
+    }
+
+    #[test]
+    fn transfer_reinserts_at_front() {
+        let mut s = SchedState::new();
+        s.create(t("x"), &[]).unwrap();
+        s.create(t("y"), &[]).unwrap();
+        s.create(t("z"), &[]).unwrap();
+        let first = s.steal("w", 1);
+        assert_eq!(first[0].name, "x");
+        // x decides it needs nothing more but wants requeueing
+        s.transfer("w", "x", &[]).unwrap();
+        // x must come back BEFORE y and z (front of deque)
+        assert_eq!(s.steal("w", 1)[0].name, "x");
+    }
+
+    #[test]
+    fn transfer_with_new_deps_waits_then_fronts() {
+        let mut s = SchedState::new();
+        s.create(t("x"), &[]).unwrap();
+        s.create(t("other"), &[]).unwrap();
+        s.steal("w1", 1); // x assigned
+        s.create(t("pre"), &[]).unwrap();
+        s.transfer("w1", "x", &["pre".into()]).unwrap();
+        assert_eq!(s.get("x").unwrap().state, TaskState::Waiting);
+        // queue now: other, pre
+        let batch = s.steal("w2", 2);
+        assert_eq!(batch.len(), 2);
+        s.complete("w2", "pre", true).unwrap();
+        // x becomes ready and lands at the FRONT
+        assert_eq!(s.steal("w2", 1)[0].name, "x");
+    }
+
+    #[test]
+    fn transfer_cycle_detected() {
+        let mut s = SchedState::new();
+        s.create(t("a"), &[]).unwrap();
+        s.create(t("b"), &["a".into()]).unwrap();
+        s.steal("w", 1); // a assigned
+        // a transferring to depend on b would deadlock (b waits on a)
+        let err = s.transfer("w", "a", &["b".into()]).unwrap_err();
+        assert!(err.to_string().contains("cycle"), "{err}");
+    }
+
+    #[test]
+    fn exit_requeues_assignments() {
+        let mut s = SchedState::new();
+        s.create(t("a"), &[]).unwrap();
+        s.create(t("b"), &[]).unwrap();
+        s.create(t("c"), &[]).unwrap();
+        let got = s.steal("w1", 2); // a, b assigned to w1
+        assert_eq!(got.len(), 2);
+        s.exit_worker("w1");
+        // a and b return to the FRONT in seq order, ahead of c
+        let got: Vec<String> = s.steal("w2", 3).into_iter().map(|m| m.name).collect();
+        assert_eq!(got, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn exit_unknown_worker_is_noop() {
+        let mut s = SchedState::new();
+        s.create(t("a"), &[]).unwrap();
+        s.exit_worker("ghost");
+        assert_eq!(s.steal("w", 1).len(), 1);
+    }
+
+    #[test]
+    fn complete_wrong_state_rejected() {
+        let mut s = SchedState::new();
+        s.create(t("a"), &[]).unwrap();
+        assert!(s.complete("w", "a", true).is_err()); // not assigned
+        assert!(s.complete("w", "ghost", true).is_err());
+    }
+
+    #[test]
+    fn status_counters() {
+        let mut s = SchedState::new();
+        s.create(t("a"), &[]).unwrap();
+        s.create(t("b"), &["a".into()]).unwrap();
+        s.create(t("c"), &[]).unwrap();
+        s.steal("w", 1);
+        let st = s.status();
+        assert_eq!(st.total, 3);
+        assert_eq!(st.ready, 1); // c
+        assert_eq!(st.waiting, 1); // b
+        assert_eq!(st.assigned, 1); // a
+        assert_eq!(st.workers, 1);
+    }
+
+    #[test]
+    fn persistence_survives_restart() {
+        let dir = std::env::temp_dir().join(format!("threesched-dwork-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let kv = KvStore::open(&dir).unwrap();
+            let mut s = SchedState::with_store(kv);
+            s.create(t("a"), &[]).unwrap();
+            s.create(t("b"), &["a".into()]).unwrap();
+            s.create(t("c"), &[]).unwrap();
+            let got = s.steal("w", 1); // a assigned
+            assert_eq!(got[0].name, "a");
+        } // server "crashes"
+        {
+            let kv = KvStore::open(&dir).unwrap();
+            let mut s = SchedState::with_store(kv);
+            // a was assigned -> back to ready; c ready; b still waiting
+            let st = s.status();
+            assert_eq!(st.total, 3);
+            assert_eq!(st.ready, 2);
+            assert_eq!(st.waiting, 1);
+            // FIFO order by creation seq survives
+            let got: Vec<String> = s.steal("w", 2).into_iter().map(|m| m.name).collect();
+            assert_eq!(got, vec!["a", "c"]);
+            s.complete("w", "a", true).unwrap();
+            assert_eq!(s.steal("w", 1)[0].name, "b");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn million_task_create_and_drain() {
+        // paper sec. 6: "can create and deque one million tasks in about a
+        // minute".  Here we just prove the state machine handles 100k
+        // without pathological behavior (full million exercised in bench).
+        let mut s = SchedState::new();
+        for i in 0..100_000 {
+            s.create(t(&format!("t{i}")), &[]).unwrap();
+        }
+        let mut n = 0;
+        loop {
+            let batch = s.steal("w", 64);
+            if batch.is_empty() {
+                break;
+            }
+            for m in &batch {
+                s.complete("w", &m.name, true).unwrap();
+            }
+            n += batch.len();
+        }
+        assert_eq!(n, 100_000);
+        assert!(s.all_done());
+    }
+}

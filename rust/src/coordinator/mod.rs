@@ -1,0 +1,4 @@
+//! The paper's three schedulers.
+pub mod dwork;
+pub mod mpilist;
+pub mod pmake;

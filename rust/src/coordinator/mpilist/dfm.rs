@@ -1,0 +1,417 @@
+//! DFM: the distributed free monoid — mpi-list's list type.
+//!
+//! Stores only the elements local to this rank; the global list is the
+//! rank-ordered concatenation.  Local operations (`map`, `flat_map`,
+//! `filter`) involve no communication at all; `len`, `reduce`, `scan`,
+//! `collect`, `head` are collectives; `repartition` and `group` move data
+//! between ranks with the paper's three-function protocol.
+
+use super::{block_owner, block_range, Context};
+
+/// A distributed list: this rank's contiguous slice of the global list.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DFM<T> {
+    local: Vec<T>,
+}
+
+impl<T: Send + 'static> DFM<T> {
+    pub fn from_local(local: Vec<T>) -> DFM<T> {
+        DFM { local }
+    }
+
+    pub fn local(&self) -> &[T] {
+        &self.local
+    }
+
+    pub fn into_local(self) -> Vec<T> {
+        self.local
+    }
+
+    pub fn local_len(&self) -> usize {
+        self.local.len()
+    }
+
+    // ---------------------------------------------------------- local ops
+
+    /// Apply `f` to every element (paper: `DFM.map(f)`). No communication.
+    pub fn map<U: Send + 'static>(self, f: impl FnMut(T) -> U) -> DFM<U> {
+        DFM { local: self.local.into_iter().map(f).collect() }
+    }
+
+    /// Map to zero-or-more elements (paper: `DFM.flatMap`).
+    pub fn flat_map<U: Send + 'static, I: IntoIterator<Item = U>>(
+        self,
+        f: impl FnMut(T) -> I,
+    ) -> DFM<U> {
+        DFM { local: self.local.into_iter().flat_map(f).collect() }
+    }
+
+    /// Keep elements satisfying the predicate.
+    pub fn filter(self, f: impl FnMut(&T) -> bool) -> DFM<T> {
+        DFM { local: self.local.into_iter().filter(f).collect() }
+    }
+
+    // --------------------------------------------------------- collectives
+
+    /// Global element count (paper: `DFM.len()`).
+    pub fn len(&self, ctx: &mut Context) -> u64 {
+        ctx.comm.allreduce(self.local.len() as u64, |a, b| a + b)
+    }
+
+    pub fn is_empty(&self, ctx: &mut Context) -> bool {
+        self.len(ctx) == 0
+    }
+
+    /// Full reduction with `op` over the global list, seeded with `init`
+    /// on each rank; the result is broadcast to all ranks (paper:
+    /// `DFM.reduce(op, init)` as used in Fig 3's histogram sum).
+    pub fn reduce(&self, ctx: &mut Context, init: T, op: impl Fn(T, T) -> T) -> T
+    where
+        T: Clone,
+    {
+        let local = self.local.iter().cloned().fold(init, &op);
+        ctx.comm.allreduce(local, op)
+    }
+
+    /// Parallel exclusive prefix scan: element `i` of the result is the
+    /// fold of all global elements before `i` (paper's prefix-scan
+    /// reduction).
+    pub fn exscan(&self, ctx: &mut Context, init: T, op: impl Fn(T, T) -> T) -> DFM<T>
+    where
+        T: Clone,
+    {
+        let local_total = self.local.iter().cloned().fold(init.clone(), &op);
+        let carry = ctx.comm.exscan(local_total, init, &op);
+        let mut out = Vec::with_capacity(self.local.len());
+        let mut acc = carry;
+        for x in &self.local {
+            out.push(acc.clone());
+            acc = op(acc, x.clone());
+        }
+        DFM { local: out }
+    }
+
+    /// Gather the whole list to rank 0, in global order (paper:
+    /// `DFM.collect()` as used in Fig 3 for the stats dataframe).
+    pub fn collect(self, ctx: &mut Context) -> Option<Vec<T>> {
+        ctx.comm
+            .gather(0, self.local)
+            .map(|parts| parts.into_iter().flatten().collect())
+    }
+
+    /// First `n` global elements, delivered to every rank.
+    pub fn head(&self, ctx: &mut Context, n: usize) -> Vec<T>
+    where
+        T: Clone,
+    {
+        let mine: Vec<T> = self.local.iter().take(n).cloned().collect();
+        let gathered = ctx.comm.gather(0, mine);
+        let out = gathered.map(|parts| {
+            parts.into_iter().flatten().take(n).collect::<Vec<T>>()
+        });
+        ctx.comm.bcast(0, out)
+    }
+
+    // ------------------------------------------------------- data movement
+
+    /// Rebalance so every rank holds a contiguous, near-equal share of the
+    /// global list (element granularity).
+    pub fn rebalance(self, ctx: &mut Context) -> DFM<T> {
+        let p = ctx.procs();
+        let my_count = self.local.len() as u64;
+        let start = ctx.comm.exscan(my_count, 0u64, |a, b| a + b);
+        let total = ctx.comm.allreduce(my_count, |a, b| a + b);
+        let mut buckets: Vec<Vec<(u64, T)>> = (0..p).map(|_| Vec::new()).collect();
+        for (i, x) in self.local.into_iter().enumerate() {
+            let gi = start + i as u64;
+            buckets[block_owner(gi, p, total)].push((gi, x));
+        }
+        let received = ctx.comm.alltoallv(buckets);
+        let mut flat: Vec<(u64, T)> = received.into_iter().flatten().collect();
+        flat.sort_by_key(|(gi, _)| *gi);
+        DFM { local: flat.into_iter().map(|(_, x)| x).collect() }
+    }
+
+    /// The paper's `repartition`: each element is a *container* of
+    /// records (numpy array / DataFrame in Python; anything here).  Takes
+    /// the three-function protocol — `length` reports records per
+    /// container, `split` cuts a container into chunks of given sizes,
+    /// `combine` fuses chunks — and redistributes so every rank ends up
+    /// with one container holding a contiguous, near-equal share of the
+    /// global records.
+    pub fn repartition(
+        self,
+        ctx: &mut Context,
+        length: impl Fn(&T) -> usize,
+        split: impl Fn(T, &[usize]) -> Vec<T>,
+        combine: impl Fn(Vec<T>) -> T,
+    ) -> DFM<T> {
+        let p = ctx.procs();
+        let my_records: u64 = self.local.iter().map(|t| length(t) as u64).sum();
+        let my_start = ctx.comm.exscan(my_records, 0u64, |a, b| a + b);
+        let total = ctx.comm.allreduce(my_records, |a, b| a + b);
+
+        // slice every container into per-destination chunks
+        let mut buckets: Vec<Vec<(u64, T)>> = (0..p).map(|_| Vec::new()).collect();
+        let mut cursor = my_start;
+        for container in self.local {
+            let n = length(&container) as u64;
+            if n == 0 {
+                continue;
+            }
+            // destination segments of [cursor, cursor+n)
+            let mut sizes: Vec<usize> = Vec::new();
+            let mut dests: Vec<usize> = Vec::new();
+            let mut pos = cursor;
+            let end = cursor + n;
+            while pos < end {
+                let owner = block_owner(pos, p, total);
+                let (ostart, ocount) = block_range(owner, p, total);
+                let oend = ostart + ocount;
+                let take = (end.min(oend) - pos) as usize;
+                sizes.push(take);
+                dests.push(owner);
+                pos += take as u64;
+            }
+            let chunks = split(container, &sizes);
+            assert_eq!(
+                chunks.len(),
+                sizes.len(),
+                "split() must return exactly one chunk per requested size"
+            );
+            let mut off = cursor;
+            for (chunk, (dest, sz)) in chunks.into_iter().zip(dests.iter().zip(&sizes)) {
+                buckets[*dest].push((off, chunk));
+                off += *sz as u64;
+            }
+            cursor = end;
+        }
+        let received = ctx.comm.alltoallv(buckets);
+        let mut flat: Vec<(u64, T)> = received.into_iter().flatten().collect();
+        flat.sort_by_key(|(gi, _)| *gi);
+        let chunks: Vec<T> = flat.into_iter().map(|(_, c)| c).collect();
+        let local = if chunks.is_empty() { Vec::new() } else { vec![combine(chunks)] };
+        DFM { local }
+    }
+
+    /// The paper's `group`: `disperse` turns each element into (destination
+    /// list index, item) pairs; items are moved to the rank owning each
+    /// index (round-robin ownership) and `combine` is called once per new
+    /// index to form the output elements, kept in ascending index order.
+    pub fn group<U: Send + 'static, V: Send + 'static>(
+        self,
+        ctx: &mut Context,
+        disperse: impl Fn(T) -> Vec<(u64, U)>,
+        combine: impl Fn(u64, Vec<U>) -> V,
+    ) -> DFM<V> {
+        let p = ctx.procs();
+        let mut buckets: Vec<Vec<(u64, U)>> = (0..p).map(|_| Vec::new()).collect();
+        for element in self.local {
+            for (idx, item) in disperse(element) {
+                buckets[(idx % p as u64) as usize].push((idx, item));
+            }
+        }
+        let received = ctx.comm.alltoallv(buckets);
+        let mut by_index: std::collections::BTreeMap<u64, Vec<U>> = Default::default();
+        for (idx, item) in received.into_iter().flatten() {
+            by_index.entry(idx).or_default().push(item);
+        }
+        DFM { local: by_index.into_iter().map(|(i, items)| combine(i, items)).collect() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_filter_flatmap_local() {
+        let out = Context::run(3, |ctx| {
+            ctx.iterates(9)
+                .map(|x| x * 2)
+                .filter(|x| x % 3 != 0)
+                .flat_map(|x| vec![x, x + 1])
+                .into_local()
+        });
+        let global: Vec<u64> = out.into_iter().flatten().collect();
+        let want: Vec<u64> = (0..9u64)
+            .map(|x| x * 2)
+            .filter(|x| x % 3 != 0)
+            .flat_map(|x| vec![x, x + 1])
+            .collect();
+        assert_eq!(global, want);
+    }
+
+    #[test]
+    fn len_and_reduce() {
+        let out = Context::run(4, |ctx| {
+            let dfm = ctx.iterates(100);
+            let len = dfm.len(ctx);
+            let sum = dfm.reduce(ctx, 0u64, |a, b| a + b);
+            (len, sum)
+        });
+        for (len, sum) in out {
+            assert_eq!(len, 100);
+            assert_eq!(sum, 4950);
+        }
+    }
+
+    #[test]
+    fn reduce_on_empty_ranks() {
+        // N < P: some ranks hold nothing; reduce must still agree
+        let out = Context::run(5, |ctx| ctx.iterates(2).reduce(ctx, 0u64, |a, b| a + b));
+        assert_eq!(out, vec![1; 5]);
+    }
+
+    #[test]
+    fn exscan_prefix() {
+        let out = Context::run(3, |ctx| {
+            ctx.iterates(7).exscan(ctx, 0u64, |a, b| a + b).into_local()
+        });
+        let global: Vec<u64> = out.into_iter().flatten().collect();
+        // exclusive prefix sums of 0..7
+        assert_eq!(global, vec![0, 0, 1, 3, 6, 10, 15]);
+    }
+
+    #[test]
+    fn collect_in_order() {
+        let out = Context::run(4, |ctx| ctx.iterates(11).map(|x| x * x).collect(ctx));
+        assert_eq!(
+            out[0].as_ref().unwrap(),
+            &(0..11u64).map(|x| x * x).collect::<Vec<_>>()
+        );
+        assert!(out[1..].iter().all(Option::is_none));
+    }
+
+    #[test]
+    fn head_broadcast() {
+        let out = Context::run(3, |ctx| ctx.iterates(10).head(ctx, 4));
+        for h in out {
+            assert_eq!(h, vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn rebalance_after_skewed_flatmap() {
+        let out = Context::run(3, |ctx| {
+            // rank 0's elements explode 5x, others stay single
+            let dfm = ctx
+                .iterates(6)
+                .flat_map(|x| if x < 2 { vec![x; 5] } else { vec![x] });
+            let re = dfm.rebalance(ctx);
+            re.into_local()
+        });
+        let counts: Vec<usize> = out.iter().map(Vec::len).collect();
+        let total: usize = counts.iter().sum();
+        assert_eq!(total, 14); // 2*5 + 4
+        assert!(counts.iter().all(|&c| c == 4 || c == 5), "{counts:?}");
+        // order preserved globally
+        let global: Vec<u64> = out.into_iter().flatten().collect();
+        let want: Vec<u64> =
+            (0..6u64).flat_map(|x| if x < 2 { vec![x; 5] } else { vec![x] }).collect();
+        assert_eq!(global, want);
+    }
+
+    #[test]
+    fn repartition_vec_containers() {
+        // containers of varying record counts -> one balanced container/rank
+        let out = Context::run(3, |ctx| {
+            let local: Vec<Vec<u64>> = match ctx.rank() {
+                0 => vec![(0..8).collect()],                 // 8 records
+                1 => vec![vec![8], vec![9, 10]],             // 3 records
+                _ => vec![(11..13).collect()],               // 2 records
+            };
+            let dfm = DFM::from_local(local);
+            let re = dfm.repartition(
+                ctx,
+                |v| v.len(),
+                |v, sizes| {
+                    let mut out = Vec::new();
+                    let mut it = v.into_iter();
+                    for &s in sizes {
+                        out.push(it.by_ref().take(s).collect::<Vec<u64>>());
+                    }
+                    out
+                },
+                |chunks| chunks.into_iter().flatten().collect(),
+            );
+            re.into_local()
+        });
+        // 13 records over 3 ranks: 5,4,4
+        assert_eq!(out[0], vec![(0..5).collect::<Vec<u64>>()]);
+        assert_eq!(out[1], vec![(5..9).collect::<Vec<u64>>()]);
+        assert_eq!(out[2], vec![(9..13).collect::<Vec<u64>>()]);
+    }
+
+    #[test]
+    fn repartition_empty_containers_ok() {
+        let out = Context::run(2, |ctx| {
+            let local: Vec<Vec<u64>> = if ctx.rank() == 0 {
+                vec![vec![], vec![1, 2, 3, 4]]
+            } else {
+                vec![]
+            };
+            DFM::from_local(local)
+                .repartition(
+                    ctx,
+                    |v| v.len(),
+                    |v, sizes| {
+                        let mut out = Vec::new();
+                        let mut it = v.into_iter();
+                        for &s in sizes {
+                            out.push(it.by_ref().take(s).collect::<Vec<u64>>());
+                        }
+                        out
+                    },
+                    |chunks| chunks.into_iter().flatten().collect(),
+                )
+                .into_local()
+        });
+        assert_eq!(out[0], vec![vec![1, 2]]);
+        assert_eq!(out[1], vec![vec![3, 4]]);
+    }
+
+    #[test]
+    fn group_by_key() {
+        // histogram-style: route each value to index (value % 4), combine
+        // counts the items per destination index
+        let out = Context::run(3, |ctx| {
+            ctx.iterates(20)
+                .group(
+                    ctx,
+                    |x| vec![(x % 4, x)],
+                    |idx, items| (idx, items.len()),
+                )
+                .into_local()
+        });
+        let global: Vec<(u64, usize)> = out.into_iter().flatten().collect();
+        // indices 0..4, each receiving 5 of the 20 values
+        let mut sorted = global.clone();
+        sorted.sort();
+        assert_eq!(sorted, vec![(0, 5), (1, 5), (2, 5), (3, 5)]);
+    }
+
+    #[test]
+    fn group_ownership_round_robin() {
+        let out = Context::run(2, |ctx| {
+            ctx.iterates(8)
+                .group(ctx, |x| vec![(x, x)], |idx, _| idx)
+                .into_local()
+        });
+        // rank 0 owns even indices, rank 1 odd, each ascending
+        assert_eq!(out[0], vec![0, 2, 4, 6]);
+        assert_eq!(out[1], vec![1, 3, 5, 7]);
+    }
+
+    #[test]
+    fn single_rank_degenerate() {
+        let out = Context::run(1, |ctx| {
+            let dfm = ctx.iterates(5).map(|x| x + 1);
+            let sum = dfm.reduce(ctx, 0, |a, b| a + b);
+            let all = dfm.collect(ctx).unwrap();
+            (sum, all)
+        });
+        assert_eq!(out[0].0, 15);
+        assert_eq!(out[0].1, vec![1, 2, 3, 4, 5]);
+    }
+}

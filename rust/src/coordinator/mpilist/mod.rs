@@ -1,0 +1,144 @@
+//! mpi-list: bulk-synchronous distributed lists (paper sec. 2.3).
+//!
+//! Exactly two classes, like the Python original: a [`Context`] holding
+//! the communicator, and a [`DFM`] (distributed free monoid) holding the
+//! list elements local to each rank.  The global list is logically
+//! ordered, with a contiguous ascending subset on each rank; because all
+//! ranks execute the same operations on their local portion, *no
+//! synchronization at all* is needed for local operations — the paper's
+//! third synchronization archetype.
+
+pub mod dfm;
+
+pub use dfm::DFM;
+
+use crate::substrate::comm::{Comm, CommWorld};
+
+/// Execution context: rank/size plus the collectives DFM ops need.
+pub struct Context {
+    pub comm: Comm,
+}
+
+impl Context {
+    pub fn new(comm: Comm) -> Context {
+        Context { comm }
+    }
+
+    /// This rank (paper: `C.rank`).
+    pub fn rank(&self) -> usize {
+        self.comm.rank()
+    }
+
+    /// Total ranks (paper: `C.procs`).
+    pub fn procs(&self) -> usize {
+        self.comm.size()
+    }
+
+    /// Create a distributed list of the integers `0..n`
+    /// (paper: `Context.iterates(N)`).
+    pub fn iterates(&self, n: u64) -> DFM<u64> {
+        let (start, count) = block_range(self.rank(), self.procs(), n);
+        DFM::from_local((start..start + count).collect())
+    }
+
+    /// Run an SPMD closure on `procs` in-process ranks and collect each
+    /// rank's result — the `mpirun python my_script.py` of this world.
+    pub fn run<T: Send>(procs: usize, f: impl Fn(&mut Context) -> T + Sync) -> Vec<T> {
+        CommWorld::run(procs, |comm| {
+            let mut ctx = Context::new(comm);
+            f(&mut ctx)
+        })
+    }
+}
+
+/// Block distribution (paper sec. 2.3): rank p of P stores the
+/// subsequence starting at `p*floor(N/P) + min(p, N mod P)`.
+pub fn block_range(p: usize, procs: usize, n: u64) -> (u64, u64) {
+    let p = p as u64;
+    let procs = procs as u64;
+    let base = n / procs;
+    let rem = n % procs;
+    let start = p * base + p.min(rem);
+    let count = base + if p < rem { 1 } else { 0 };
+    (start, count)
+}
+
+/// Which rank owns global index `i` under the block distribution.
+pub fn block_owner(i: u64, procs: usize, n: u64) -> usize {
+    let procs_u = procs as u64;
+    let base = n / procs_u;
+    let rem = n % procs_u;
+    let cut = rem * (base + 1); // first `rem` ranks hold base+1 each
+    if base == 0 {
+        // fewer elements than ranks: element i lives on rank i
+        return i as usize;
+    }
+    if i < cut {
+        (i / (base + 1)) as usize
+    } else {
+        (rem + (i - cut) / base) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_range_paper_formula() {
+        // N=10, P=3 -> 4,3,3 starting at 0,4,7
+        assert_eq!(block_range(0, 3, 10), (0, 4));
+        assert_eq!(block_range(1, 3, 10), (4, 3));
+        assert_eq!(block_range(2, 3, 10), (7, 3));
+        // exact division
+        assert_eq!(block_range(1, 4, 8), (2, 2));
+        // fewer elements than ranks
+        assert_eq!(block_range(0, 4, 2), (0, 1));
+        assert_eq!(block_range(1, 4, 2), (1, 1));
+        assert_eq!(block_range(2, 4, 2), (2, 0));
+    }
+
+    #[test]
+    fn ranges_partition_exactly() {
+        for (p, n) in [(1usize, 10u64), (3, 10), (4, 2), (7, 100), (5, 5)] {
+            let mut next = 0u64;
+            for r in 0..p {
+                let (start, count) = block_range(r, p, n);
+                assert_eq!(start, next, "P={p} N={n} rank={r}");
+                next += count;
+            }
+            assert_eq!(next, n);
+        }
+    }
+
+    #[test]
+    fn owner_matches_range() {
+        for (p, n) in [(3usize, 10u64), (4, 2), (7, 100), (1, 5)] {
+            for i in 0..n {
+                let owner = block_owner(i, p, n);
+                let (start, count) = block_range(owner, p, n);
+                assert!(
+                    (start..start + count).contains(&i),
+                    "P={p} N={n} i={i} owner={owner} range=({start},{count})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn iterates_distributes() {
+        let out = Context::run(3, |ctx| ctx.iterates(10).into_local());
+        assert_eq!(out[0], (0..4).collect::<Vec<u64>>());
+        assert_eq!(out[1], (4..7).collect::<Vec<u64>>());
+        assert_eq!(out[2], (7..10).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn rank_and_procs() {
+        let out = Context::run(4, |ctx| (ctx.rank(), ctx.procs()));
+        for (r, (rank, procs)) in out.iter().enumerate() {
+            assert_eq!(*rank, r);
+            assert_eq!(*procs, 4);
+        }
+    }
+}

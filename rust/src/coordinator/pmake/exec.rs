@@ -1,0 +1,222 @@
+//! pmake job-script execution: the popen-equivalent.
+//!
+//! For each launched task pmake concatenates `set -e`, a `cd` into the
+//! target's dirname, the rule's setup script and job script, writes the
+//! result to `<stem>.sh`, executes it with /bin/sh, and stores combined
+//! stdout/stderr in `<stem>.log` (paper sec. 2.1).  Exit status 0 means
+//! the task's outputs must now exist; a zero exit with missing outputs is
+//! reported as a failure (the file *is* the synchronization mechanism).
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::dag::TaskInstance;
+
+/// Where a task's launch time went — pmake's METG components.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LaunchReport {
+    pub success: bool,
+    /// time to set up + spawn the job step ("jsrun" cost)
+    pub launch_s: f64,
+    /// script wall time
+    pub run_s: f64,
+}
+
+/// Task launcher abstraction: the scheduler drives this; production uses
+/// [`ShellExecutor`], tests/benches may use a virtual executor.
+pub trait Executor: Sync {
+    fn launch(&self, task: &TaskInstance) -> LaunchReport;
+}
+
+/// Runs tasks as real /bin/sh subprocesses.
+pub struct ShellExecutor {
+    /// prepend to every launch, e.g. simulated jsrun startup (seconds)
+    pub launch_overhead_s: f64,
+    /// verify declared outputs exist after a zero exit
+    pub check_outputs: bool,
+    /// where scripts + logs go (usually the target's dirname)
+    pub script_dir: Option<PathBuf>,
+}
+
+impl Default for ShellExecutor {
+    fn default() -> Self {
+        ShellExecutor { launch_overhead_s: 0.0, check_outputs: true, script_dir: None }
+    }
+}
+
+impl ShellExecutor {
+    /// Compose the shell script text for a task (paper: `set -e` + cd +
+    /// setup + script).
+    pub fn script_text(task: &TaskInstance) -> String {
+        let mut s = String::from("set -e\n");
+        s.push_str(&format!("cd {}\n", shell_quote(&task.dir.to_string_lossy())));
+        if !task.setup.trim().is_empty() {
+            s.push_str(task.setup.trim_end());
+            s.push('\n');
+        }
+        s.push_str(task.script.trim_end());
+        s.push('\n');
+        s
+    }
+
+    fn run(&self, task: &TaskInstance) -> Result<LaunchReport> {
+        let t_launch = Instant::now();
+        if self.launch_overhead_s > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(self.launch_overhead_s));
+        }
+        let dir = self.script_dir.clone().unwrap_or_else(|| task.dir.clone());
+        std::fs::create_dir_all(&dir).with_context(|| format!("creating {dir:?}"))?;
+        let stem = task.stem();
+        let script_path = dir.join(format!("{stem}.sh"));
+        let log_path = dir.join(format!("{stem}.log"));
+        std::fs::write(&script_path, Self::script_text(task))
+            .with_context(|| format!("writing {script_path:?}"))?;
+        let log = std::fs::File::create(&log_path)
+            .with_context(|| format!("creating {log_path:?}"))?;
+        let log2 = log.try_clone()?;
+        let mut child = std::process::Command::new("/bin/sh")
+            .arg(&script_path)
+            .stdout(log)
+            .stderr(log2)
+            .stdin(std::process::Stdio::null())
+            .spawn()
+            .with_context(|| format!("spawning /bin/sh {script_path:?}"))?;
+        let launch_s = t_launch.elapsed().as_secs_f64();
+        let t_run = Instant::now();
+        let status = child.wait().context("waiting for job script")?;
+        let run_s = t_run.elapsed().as_secs_f64();
+        let mut success = status.success();
+        if success && self.check_outputs {
+            for out in task.outputs.values() {
+                if !task.dir.join(out).exists() {
+                    success = false; // exited 0 but lied about its outputs
+                    break;
+                }
+            }
+        }
+        Ok(LaunchReport { success, launch_s, run_s })
+    }
+}
+
+impl Executor for ShellExecutor {
+    fn launch(&self, task: &TaskInstance) -> LaunchReport {
+        match self.run(task) {
+            Ok(r) => r,
+            Err(_) => LaunchReport { success: false, ..Default::default() },
+        }
+    }
+}
+
+fn shell_quote(s: &str) -> String {
+    if s.chars().all(|c| c.is_ascii_alphanumeric() || "_-./".contains(c)) {
+        s.to_string()
+    } else {
+        format!("'{}'", s.replace('\'', r"'\''"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+    use std::path::Path;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("threesched-exec-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn task(dir: &Path, script: &str, outputs: &[(&str, &str)]) -> TaskInstance {
+        TaskInstance {
+            id: 0,
+            rule: "r".into(),
+            binding: Some(("n".into(), "1".into())),
+            dir: dir.to_path_buf(),
+            inputs: vec![],
+            outputs: outputs
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect::<BTreeMap<_, _>>(),
+            setup: String::new(),
+            script: script.to_string(),
+            resources: Default::default(),
+            deps: vec![],
+            priority: 0.0,
+        }
+    }
+
+    #[test]
+    fn runs_and_logs() {
+        let dir = tmp("runs");
+        let t = task(&dir, "echo hello-from-task\ntouch out.txt", &[("f", "out.txt")]);
+        let r = ShellExecutor::default().launch(&t);
+        assert!(r.success);
+        assert!(dir.join("out.txt").exists());
+        assert!(dir.join("r.1.sh").exists());
+        let log = std::fs::read_to_string(dir.join("r.1.log")).unwrap();
+        assert!(log.contains("hello-from-task"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn nonzero_exit_fails() {
+        let dir = tmp("fail");
+        let t = task(&dir, "exit 3", &[]);
+        assert!(!ShellExecutor::default().launch(&t).success);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn set_e_aborts_on_first_error() {
+        let dir = tmp("sete");
+        let t = task(&dir, "false\ntouch should-not-exist.txt", &[]);
+        let r = ShellExecutor::default().launch(&t);
+        assert!(!r.success);
+        assert!(!dir.join("should-not-exist.txt").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_declared_output_fails() {
+        let dir = tmp("liar");
+        let t = task(&dir, "echo did nothing", &[("f", "promised.txt")]);
+        assert!(!ShellExecutor::default().launch(&t).success);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn setup_runs_before_script() {
+        let dir = tmp("setup");
+        let mut t = task(&dir, "cat from-setup.txt > out.txt", &[("f", "out.txt")]);
+        t.setup = "echo prepared > from-setup.txt".into();
+        let r = ShellExecutor::default().launch(&t);
+        assert!(r.success);
+        assert_eq!(
+            std::fs::read_to_string(dir.join("out.txt")).unwrap().trim(),
+            "prepared"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn launch_overhead_injected() {
+        let dir = tmp("overhead");
+        let t = task(&dir, "touch o.txt", &[("f", "o.txt")]);
+        let ex = ShellExecutor { launch_overhead_s: 0.05, ..Default::default() };
+        let r = ex.launch(&t);
+        assert!(r.success);
+        assert!(r.launch_s >= 0.05, "launch_s={}", r.launch_s);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn quoting() {
+        assert_eq!(shell_quote("plain/path.txt"), "plain/path.txt");
+        assert_eq!(shell_quote("has space"), "'has space'");
+        assert_eq!(shell_quote("it's"), r"'it'\''s'");
+    }
+}

@@ -1,0 +1,50 @@
+//! pmake: file-based parallel make (paper sec. 2.1).
+//!
+//! Every task corresponds to one or more output files; presence of the
+//! file is the synchronization mechanism.  A single managing process
+//! parses `rules.yaml` + `targets.yaml`, constructs the task graph from
+//! file presence, assigns node-hours-based earliest-finish priorities,
+//! and pushes job scripts onto the allocation until the nodes run out.
+
+pub mod dag;
+pub mod exec;
+pub mod rules;
+pub mod sched;
+pub mod subst;
+
+pub use dag::{Dag, TaskInstance};
+pub use exec::{Executor, LaunchReport, ShellExecutor};
+pub use rules::{parse_rules, parse_rules_file, parse_targets, parse_targets_file, Rule, Target};
+pub use sched::{run, RunReport, SchedConfig};
+
+use anyhow::Result;
+use std::path::Path;
+
+use crate::substrate::cluster::ResourceSet;
+
+/// Default `{mpirun}` expansion: our stand-in for srun/jsrun selection.
+/// On a real Slurm/LSF system this would emit `srun -n ...`/`jsrun -n ...`;
+/// here tasks run locally, so it expands to the empty prefix (commands run
+/// directly), keeping scripts identical in shape to the paper's.
+pub fn default_mpirun(rs: &ResourceSet) -> String {
+    let _ = rs;
+    String::new()
+}
+
+/// End-to-end convenience: parse rule/target files, build DAGs (one per
+/// target), and run them on the executor.
+pub fn make(
+    rules_path: &Path,
+    targets_path: &Path,
+    exec: &dyn Executor,
+    cfg: &SchedConfig,
+) -> Result<Vec<RunReport>> {
+    let rules = parse_rules_file(rules_path)?;
+    let targets = parse_targets_file(targets_path)?;
+    let mut reports = Vec::new();
+    for target in &targets {
+        let dag = Dag::build(&rules, target, &|p: &Path| p.exists(), &|rs| default_mpirun(rs))?;
+        reports.push(run(&dag, exec, cfg)?);
+    }
+    Ok(reports)
+}

@@ -1,0 +1,424 @@
+//! pmake input files: `rules.yaml` + `targets.yaml` (paper Fig 1).
+//!
+//! A rule has a resource set, named input/output file templates, a setup
+//! script, and a job script; a target names a working directory, the
+//! top-level files to build, and an optional loop directive that stamps
+//! out a file per iteration value.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::substrate::cluster::ResourceSet;
+use crate::substrate::yaml::{self, Yaml};
+
+use super::subst;
+
+/// One rule from rules.yaml.
+#[derive(Clone, Debug)]
+pub struct Rule {
+    pub name: String,
+    pub resources: ResourceSet,
+    /// named input templates ("param" -> "{n}.param")
+    pub inputs: BTreeMap<String, String>,
+    /// loop-generated inputs: (var, iterable-spec, template)
+    pub input_loops: Vec<(String, String, String)>,
+    /// named output templates ("trj" -> "{n}.trj")
+    pub outputs: BTreeMap<String, String>,
+    pub setup: String,
+    pub script: String,
+}
+
+/// One target from targets.yaml.
+#[derive(Clone, Debug)]
+pub struct Target {
+    pub name: String,
+    pub dirname: String,
+    /// plain top-level files to build
+    pub out: BTreeMap<String, String>,
+    /// loop directive: (var, iterable-spec)
+    pub loop_var: Option<(String, String)>,
+    /// per-iteration file templates (rendered once per loop value)
+    pub tgt: BTreeMap<String, String>,
+    /// every other member: substitution variables available to rules
+    pub vars: BTreeMap<String, String>,
+}
+
+impl Target {
+    /// Expand the target to the concrete list of files to build
+    /// (paths relative to `dirname`).
+    pub fn requested_files(&self) -> Result<Vec<String>> {
+        let mut files: Vec<String> = Vec::new();
+        let mut base = subst::Ctx::new();
+        for (k, v) in &self.vars {
+            base.set(k.clone(), v.clone());
+        }
+        for tpl in self.out.values() {
+            files.push(subst::render(tpl, &base).with_context(|| format!("target {}", self.name))?);
+        }
+        if let Some((var, spec)) = &self.loop_var {
+            for value in subst::parse_iterable(spec)? {
+                let mut ctx = base.clone();
+                ctx.set(var.clone(), value);
+                for tpl in self.tgt.values() {
+                    files.push(
+                        subst::render(tpl, &ctx).with_context(|| format!("target {}", self.name))?,
+                    );
+                }
+            }
+        } else if !self.tgt.is_empty() {
+            bail!("target {} has tgt: but no loop:", self.name);
+        }
+        Ok(files)
+    }
+}
+
+fn yaml_string_map(y: &Yaml, what: &str) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    let Some(m) = y.as_map() else {
+        bail!("{what} must be a mapping")
+    };
+    for (k, v) in m {
+        let t = v
+            .as_text()
+            .ok_or_else(|| anyhow!("{what}.{k} must be a scalar"))?;
+        out.insert(k.clone(), t);
+    }
+    Ok(out)
+}
+
+fn parse_resources(y: Option<&Yaml>) -> Result<ResourceSet> {
+    let mut rs = ResourceSet::default();
+    let Some(y) = y else { return Ok(rs) };
+    let Some(m) = y.as_map() else {
+        bail!("resources must be a mapping like {{time: 10, nrs: 1, cpu: 1}}")
+    };
+    for (k, v) in m {
+        let num = v
+            .as_f64()
+            .ok_or_else(|| anyhow!("resources.{k} must be numeric"))?;
+        match k.as_str() {
+            "time" => rs.time_min = num,
+            "nrs" => rs.nrs = num as usize,
+            "cpu" => rs.cpu = num as usize,
+            "gpu" => rs.gpu = num as usize,
+            "ranks" => rs.ranks_per_rs = (num as usize).max(1),
+            other => bail!("unknown resource key {other:?}"),
+        }
+    }
+    Ok(rs)
+}
+
+/// Parse rules.yaml text.  Rule order is preserved (search order).
+pub fn parse_rules(src: &str) -> Result<Vec<Rule>> {
+    let doc = yaml::parse(src)?;
+    let Some(entries) = doc.as_map() else {
+        bail!("rules.yaml must be a mapping of rule names")
+    };
+    let mut rules = Vec::new();
+    for (name, body) in entries {
+        let mut inputs = BTreeMap::new();
+        let mut input_loops = Vec::new();
+        if let Some(inp) = body.get("inp") {
+            let Some(m) = inp.as_map() else {
+                bail!("rule {name}: inp must be a mapping")
+            };
+            for (k, v) in m {
+                if k == "loop" {
+                    // loop: {var: n, over: "range(0,4)", tpl: "part_{n}.dat"}
+                    let var = v
+                        .get("var")
+                        .and_then(Yaml::as_str)
+                        .ok_or_else(|| anyhow!("rule {name}: inp.loop needs var"))?;
+                    let over = v
+                        .get("over")
+                        .and_then(|y| y.as_text())
+                        .ok_or_else(|| anyhow!("rule {name}: inp.loop needs over"))?;
+                    let tpl = v
+                        .get("tpl")
+                        .and_then(Yaml::as_str)
+                        .ok_or_else(|| anyhow!("rule {name}: inp.loop needs tpl"))?;
+                    input_loops.push((var.to_string(), over, tpl.to_string()));
+                } else {
+                    let t = v
+                        .as_text()
+                        .ok_or_else(|| anyhow!("rule {name}: inp.{k} must be a scalar"))?;
+                    inputs.insert(k.clone(), t);
+                }
+            }
+        }
+        let outputs = match body.get("out") {
+            Some(o) => yaml_string_map(o, &format!("rule {name}: out"))?,
+            None => bail!("rule {name} has no out section (rules are file-directed)"),
+        };
+        if outputs.is_empty() {
+            bail!("rule {name}: out section is empty");
+        }
+        // at most one distinct template variable across outputs (paper:
+        // "one variable is allowed ... defined by matching on names in
+        // the out section")
+        let mut out_vars: Vec<String> = Vec::new();
+        for tpl in outputs.values() {
+            if let Some(v) = template_single_var(tpl)? {
+                if !out_vars.contains(&v) {
+                    out_vars.push(v);
+                }
+            }
+        }
+        if out_vars.len() > 1 {
+            bail!("rule {name}: outputs use more than one variable: {out_vars:?}");
+        }
+        rules.push(Rule {
+            name: name.clone(),
+            resources: parse_resources(body.get("resources"))?,
+            inputs,
+            input_loops,
+            outputs,
+            setup: body
+                .get("setup")
+                .and_then(|y| y.as_text())
+                .unwrap_or_default(),
+            script: body
+                .get("script")
+                .and_then(|y| y.as_text())
+                .ok_or_else(|| anyhow!("rule {name} has no script"))?,
+        });
+    }
+    Ok(rules)
+}
+
+/// The single template variable used in a template, if any.
+/// (Indexed refs like {inp[x]} and {mpirun} don't count: they are not
+/// matchable output variables.)
+fn template_single_var(tpl: &str) -> Result<Option<String>> {
+    // cheap scan: find {ident} chunks
+    let mut var = None;
+    let mut rest = tpl;
+    while let Some(i) = rest.find('{') {
+        if rest[i + 1..].starts_with('{') {
+            rest = &rest[i + 2..];
+            continue;
+        }
+        let Some(j) = rest[i..].find('}') else {
+            bail!("unclosed brace in template {tpl:?}")
+        };
+        let body = &rest[i + 1..i + j];
+        if !body.contains('[') && body != "mpirun" {
+            match &var {
+                None => var = Some(body.to_string()),
+                Some(v) if v == body => {}
+                Some(v) => bail!("template {tpl:?} mixes variables {v:?} and {body:?}"),
+            }
+        }
+        rest = &rest[i + j + 1..];
+    }
+    Ok(var)
+}
+
+/// Parse targets.yaml text.
+pub fn parse_targets(src: &str) -> Result<Vec<Target>> {
+    let doc = yaml::parse(src)?;
+    let Some(entries) = doc.as_map() else {
+        bail!("targets.yaml must be a mapping of target names")
+    };
+    let mut targets = Vec::new();
+    for (name, body) in entries {
+        let mut out = BTreeMap::new();
+        let mut tgt = BTreeMap::new();
+        let mut loop_var = None;
+        let mut vars = BTreeMap::new();
+        let Some(members) = body.as_map() else {
+            bail!("target {name} must be a mapping")
+        };
+        let mut dirname = String::from(".");
+        for (k, v) in members {
+            match k.as_str() {
+                "dirname" => {
+                    dirname = v
+                        .as_text()
+                        .ok_or_else(|| anyhow!("target {name}: dirname must be a string"))?
+                }
+                "out" => out = yaml_string_map(v, &format!("target {name}: out"))?,
+                "tgt" => tgt = yaml_string_map(v, &format!("target {name}: tgt"))?,
+                "loop" => {
+                    let Some(m) = v.as_map() else {
+                        bail!("target {name}: loop must be a mapping")
+                    };
+                    if m.len() != 1 {
+                        bail!("target {name}: loop must have exactly one variable");
+                    }
+                    let (var, spec) = &m[0];
+                    loop_var = Some((
+                        var.clone(),
+                        spec.as_text()
+                            .ok_or_else(|| anyhow!("target {name}: loop.{var} must be a scalar"))?,
+                    ));
+                }
+                _ => {
+                    if let Some(t) = v.as_text() {
+                        vars.insert(k.clone(), t);
+                    }
+                }
+            }
+        }
+        targets.push(Target { name: name.clone(), dirname, out, loop_var, tgt, vars });
+    }
+    Ok(targets)
+}
+
+pub fn parse_rules_file(path: &std::path::Path) -> Result<Vec<Rule>> {
+    parse_rules(&std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?)
+}
+
+pub fn parse_targets_file(path: &std::path::Path) -> Result<Vec<Target>> {
+    parse_targets(&std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FIG1_RULES: &str = r#"
+simulate:
+  resources: {time: 120, nrs: 10, cpu: 42, gpu: 6}
+  inp:
+    param: "{n}.param"
+  out:
+    trj: "{n}.trj"
+  setup: module load cuda
+  script: |
+    {mpirun} simulate {inp[param]} {out[trj]}
+analyze:
+  resources: {time: 10, nrs: 1, cpu: 1}
+  inp:
+    trj: "{n}.trj"
+  out:
+    npy: "an_{n}.npy"
+  setup: module load Python/3
+  script: |
+    {mpirun} python compute_averages.py {inp[trj]} {out[npy]}
+"#;
+
+    const FIG1_TARGETS: &str = r#"
+sim1:
+  dirname: System1
+  out:
+    npy: "an_0.npy"
+  loop:
+    n: "range(1,11)"
+  tgt:
+    npy: "an_{n}.npy"
+"#;
+
+    #[test]
+    fn parse_fig1_rules() {
+        let rules = parse_rules(FIG1_RULES).unwrap();
+        assert_eq!(rules.len(), 2);
+        let sim = &rules[0];
+        assert_eq!(sim.name, "simulate");
+        assert_eq!(sim.resources.nrs, 10);
+        assert_eq!(sim.resources.gpu, 6);
+        assert!((sim.resources.time_min - 120.0).abs() < 1e-12);
+        assert_eq!(sim.inputs["param"], "{n}.param");
+        assert_eq!(sim.outputs["trj"], "{n}.trj");
+        assert_eq!(sim.setup, "module load cuda");
+        assert!(sim.script.contains("{mpirun} simulate"));
+        let ana = &rules[1];
+        assert_eq!(ana.outputs["npy"], "an_{n}.npy");
+    }
+
+    #[test]
+    fn parse_fig1_targets() {
+        let targets = parse_targets(FIG1_TARGETS).unwrap();
+        assert_eq!(targets.len(), 1);
+        let t = &targets[0];
+        assert_eq!(t.dirname, "System1");
+        assert_eq!(t.out["npy"], "an_0.npy");
+        let files = t.requested_files().unwrap();
+        assert_eq!(files.len(), 11); // an_0 + an_1..an_10
+        assert!(files.contains(&"an_0.npy".to_string()));
+        assert!(files.contains(&"an_10.npy".to_string()));
+    }
+
+    #[test]
+    fn rule_without_out_rejected() {
+        assert!(parse_rules("r:\n  script: echo\n").is_err());
+    }
+
+    #[test]
+    fn rule_without_script_rejected() {
+        assert!(parse_rules("r:\n  out:\n    f: x.txt\n").is_err());
+    }
+
+    #[test]
+    fn rule_with_two_out_vars_rejected() {
+        let src = "r:\n  out:\n    a: \"{x}.a\"\n    b: \"{y}.b\"\n  script: echo\n";
+        assert!(parse_rules(src).is_err());
+    }
+
+    #[test]
+    fn rule_same_var_in_two_outputs_ok() {
+        let src = "r:\n  out:\n    a: \"{x}.a\"\n    b: \"{x}.b\"\n  script: echo\n";
+        let rules = parse_rules(src).unwrap();
+        assert_eq!(rules[0].outputs.len(), 2);
+    }
+
+    #[test]
+    fn input_loop_directive() {
+        let src = r#"
+gather:
+  inp:
+    loop:
+      var: i
+      over: "range(0,3)"
+      tpl: "part_{i}.dat"
+  out:
+    all: "combined.dat"
+  script: cat part_*.dat > combined.dat
+"#;
+        let rules = parse_rules(src).unwrap();
+        assert_eq!(rules[0].input_loops.len(), 1);
+        let (var, over, tpl) = &rules[0].input_loops[0];
+        assert_eq!(var, "i");
+        assert_eq!(over, "range(0,3)");
+        assert_eq!(tpl, "part_{i}.dat");
+    }
+
+    #[test]
+    fn target_vars_available() {
+        let src = "t:\n  dirname: D\n  temperature: 300\n  out:\n    f: \"res_{temperature}.txt\"\n";
+        let targets = parse_targets(src).unwrap();
+        assert_eq!(targets[0].vars["temperature"], "300");
+        assert_eq!(targets[0].requested_files().unwrap(), vec!["res_300.txt"]);
+    }
+
+    #[test]
+    fn target_default_dirname() {
+        let src = "t:\n  out:\n    f: a.txt\n";
+        assert_eq!(parse_targets(src).unwrap()[0].dirname, ".");
+    }
+
+    #[test]
+    fn tgt_without_loop_rejected() {
+        let src = "t:\n  tgt:\n    f: \"a_{n}.txt\"\n";
+        let targets = parse_targets(src).unwrap();
+        assert!(targets[0].requested_files().is_err());
+    }
+
+    #[test]
+    fn resources_default_and_ranks() {
+        let src = "r:\n  resources: {time: 5, nrs: 2, cpu: 4, gpu: 1, ranks: 3}\n  out:\n    f: x\n  script: echo\n";
+        let rules = parse_rules(src).unwrap();
+        assert_eq!(rules[0].resources.ranks_per_rs, 3);
+        assert_eq!(rules[0].resources.total_ranks(), 6);
+        let src2 = "r:\n  out:\n    f: x\n  script: echo\n";
+        let rules2 = parse_rules(src2).unwrap();
+        assert_eq!(rules2[0].resources.nrs, 1); // defaults
+    }
+
+    #[test]
+    fn unknown_resource_key_rejected() {
+        let src = "r:\n  resources: {walltime: 5}\n  out:\n    f: x\n  script: echo\n";
+        assert!(parse_rules(src).is_err());
+    }
+}

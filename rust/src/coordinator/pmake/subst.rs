@@ -1,0 +1,360 @@
+//! Template substitution: pmake's Python-`format()` work-alike.
+//!
+//! The paper splices values into rules with Python's `format()`:
+//! `{n}`, `{inp[param]}`, `{out[trj]}`, `{mpirun}`, with literal braces
+//! escaped as `{{`/`}}`.  Substitution is layered (target members → loop
+//! variable → rule members → script), so later layers may reference
+//! earlier ones.
+//!
+//! Also here: reverse matching — given the template `an_{n}.npy` and the
+//! concrete file `an_3.npy`, recover `n = 3` (how pmake discovers which
+//! rule instance builds a requested output).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Layered substitution context.
+#[derive(Clone, Debug, Default)]
+pub struct Ctx {
+    vars: BTreeMap<String, String>,
+    /// indexed namespaces: inp[...], out[...], tgt[...]
+    maps: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Ctx {
+    pub fn new() -> Ctx {
+        Ctx::default()
+    }
+
+    pub fn set(&mut self, k: impl Into<String>, v: impl Into<String>) -> &mut Self {
+        self.vars.insert(k.into(), v.into());
+        self
+    }
+
+    pub fn set_map(&mut self, ns: impl Into<String>, m: BTreeMap<String, String>) -> &mut Self {
+        self.maps.insert(ns.into(), m);
+        self
+    }
+
+    pub fn get(&self, k: &str) -> Option<&str> {
+        self.vars.get(k).map(String::as_str)
+    }
+
+    pub fn get_indexed(&self, ns: &str, key: &str) -> Option<&str> {
+        self.maps.get(ns)?.get(key).map(String::as_str)
+    }
+
+    /// Merge `other`'s entries over this context (later layer wins).
+    pub fn overlay(&mut self, other: &Ctx) {
+        for (k, v) in &other.vars {
+            self.vars.insert(k.clone(), v.clone());
+        }
+        for (ns, m) in &other.maps {
+            self.maps.entry(ns.clone()).or_default().extend(m.clone());
+        }
+    }
+}
+
+/// One parsed template chunk.
+#[derive(Debug, PartialEq)]
+enum Chunk<'a> {
+    Lit(&'a str),
+    /// `{name}`
+    Var(&'a str),
+    /// `{ns[key]}`
+    Indexed(&'a str, &'a str),
+    /// escaped `{{` or `}}`
+    Brace(char),
+}
+
+fn parse_chunks(tpl: &str) -> Result<Vec<Chunk<'_>>> {
+    let mut out = Vec::new();
+    let bytes = tpl.as_bytes();
+    let mut pos = 0;
+    while pos < bytes.len() {
+        match bytes[pos] {
+            b'{' if pos + 1 < bytes.len() && bytes[pos + 1] == b'{' => {
+                out.push(Chunk::Brace('{'));
+                pos += 2;
+            }
+            b'}' if pos + 1 < bytes.len() && bytes[pos + 1] == b'}' => {
+                out.push(Chunk::Brace('}'));
+                pos += 2;
+            }
+            b'{' => {
+                let close = tpl[pos..]
+                    .find('}')
+                    .map(|i| pos + i)
+                    .ok_or_else(|| anyhow::anyhow!("unclosed '{{' in template {tpl:?}"))?;
+                let body = &tpl[pos + 1..close];
+                if body.is_empty() {
+                    bail!("empty substitution in template {tpl:?}");
+                }
+                if let Some(open) = body.find('[') {
+                    if !body.ends_with(']') {
+                        bail!("bad indexed substitution {body:?} in {tpl:?}");
+                    }
+                    out.push(Chunk::Indexed(&body[..open], &body[open + 1..body.len() - 1]));
+                } else {
+                    out.push(Chunk::Var(body));
+                }
+                pos = close + 1;
+            }
+            b'}' => bail!("stray '}}' in template {tpl:?} (escape as '}}}}')"),
+            _ => {
+                let start = pos;
+                while pos < bytes.len() && bytes[pos] != b'{' && bytes[pos] != b'}' {
+                    pos += 1;
+                }
+                out.push(Chunk::Lit(&tpl[start..pos]));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Render a template against a context.  Unknown variables are an error —
+/// silent empty substitution hides real workflow bugs.
+pub fn render(tpl: &str, ctx: &Ctx) -> Result<String> {
+    let mut out = String::with_capacity(tpl.len());
+    for chunk in parse_chunks(tpl)? {
+        match chunk {
+            Chunk::Lit(s) => out.push_str(s),
+            Chunk::Brace(c) => out.push(c),
+            Chunk::Var(name) => match ctx.get(name) {
+                Some(v) => out.push_str(v),
+                None => bail!("undefined variable {{{name}}} in template {tpl:?}"),
+            },
+            Chunk::Indexed(ns, key) => match ctx.get_indexed(ns, key) {
+                Some(v) => out.push_str(v),
+                None => bail!("undefined {{{ns}[{key}]}} in template {tpl:?}"),
+            },
+        }
+    }
+    Ok(out)
+}
+
+/// Render, leaving *unknown* variables untouched (used for the staged
+/// layering: early layers render what they can; later layers finish).
+pub fn render_partial(tpl: &str, ctx: &Ctx) -> Result<String> {
+    let mut out = String::with_capacity(tpl.len());
+    for chunk in parse_chunks(tpl)? {
+        match chunk {
+            Chunk::Lit(s) => out.push_str(s),
+            // keep escapes escaped so a later render() pass sees them intact
+            Chunk::Brace(c) => {
+                out.push(c);
+                out.push(c);
+            }
+            Chunk::Var(name) => match ctx.get(name) {
+                Some(v) => out.push_str(v),
+                None => {
+                    out.push('{');
+                    out.push_str(name);
+                    out.push('}');
+                }
+            },
+            Chunk::Indexed(ns, key) => match ctx.get_indexed(ns, key) {
+                Some(v) => out.push_str(v),
+                None => {
+                    out.push('{');
+                    out.push_str(ns);
+                    out.push('[');
+                    out.push_str(key);
+                    out.push_str("]}");
+                }
+            },
+        }
+    }
+    Ok(out)
+}
+
+/// Match a concrete string against a template with at most one variable;
+/// returns Some((var_name, value)) or Some(("", "")) for an exact literal
+/// match, None on mismatch.
+///
+/// pmake rules "for rules that can make multiple output files, one
+/// variable is allowed, and is defined by matching on names in the out
+/// section" (paper sec 2.1).
+pub fn match_template(tpl: &str, concrete: &str) -> Option<(String, String)> {
+    let chunks = parse_chunks(tpl).ok()?;
+    // flatten to (prefix, var, suffix)
+    let mut lit = String::new();
+    let mut var: Option<(&str, usize)> = None; // (name, position in lit)
+    for c in &chunks {
+        match c {
+            Chunk::Lit(s) => lit.push_str(s),
+            Chunk::Brace(ch) => lit.push(*ch),
+            Chunk::Var(name) => {
+                if var.is_some() {
+                    return None; // more than one variable: not matchable
+                }
+                var = Some((name, lit.len()));
+            }
+            Chunk::Indexed(..) => return None,
+        }
+    }
+    match var {
+        None => (lit == concrete).then(|| (String::new(), String::new())),
+        Some((name, pos)) => {
+            let prefix = &lit[..pos];
+            let suffix = &lit[pos..];
+            if concrete.len() < prefix.len() + suffix.len() {
+                return None;
+            }
+            if !concrete.starts_with(prefix) || !concrete.ends_with(suffix) {
+                return None;
+            }
+            let value = &concrete[prefix.len()..concrete.len() - suffix.len()];
+            if value.is_empty() {
+                return None; // a variable must match something
+            }
+            Some((name.to_string(), value.to_string()))
+        }
+    }
+}
+
+/// Parse the paper's loop iterables: `range(a,b)`, `range(a,b,step)`, or
+/// a comma-separated literal list `x, y, z`.
+pub fn parse_iterable(spec: &str) -> Result<Vec<String>> {
+    let s = spec.trim();
+    if let Some(body) = s.strip_prefix("range(").and_then(|r| r.strip_suffix(')')) {
+        let parts: Vec<i64> = body
+            .split(',')
+            .map(|p| p.trim().parse::<i64>())
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("bad range {s:?}: {e}"))?;
+        let (start, stop, step) = match parts.as_slice() {
+            [stop] => (0, *stop, 1),
+            [start, stop] => (*start, *stop, 1),
+            [start, stop, step] => (*start, *stop, *step),
+            _ => bail!("range() takes 1-3 arguments: {s:?}"),
+        };
+        if step == 0 {
+            bail!("range() step must be nonzero");
+        }
+        let mut out = Vec::new();
+        let mut i = start;
+        while (step > 0 && i < stop) || (step < 0 && i > stop) {
+            out.push(i.to_string());
+            i += step;
+        }
+        Ok(out)
+    } else {
+        Ok(s.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> Ctx {
+        let mut c = Ctx::new();
+        c.set("n", "3").set("mpirun", "jsrun -n 10");
+        let mut inp = BTreeMap::new();
+        inp.insert("param".to_string(), "3.param".to_string());
+        c.set_map("inp", inp);
+        let mut out = BTreeMap::new();
+        out.insert("trj".to_string(), "3.trj".to_string());
+        c.set_map("out", out);
+        c
+    }
+
+    #[test]
+    fn simple_vars() {
+        assert_eq!(render("{n}.trj", &ctx()).unwrap(), "3.trj");
+        assert_eq!(render("an_{n}.npy", &ctx()).unwrap(), "an_3.npy");
+    }
+
+    #[test]
+    fn indexed_vars() {
+        assert_eq!(
+            render("{mpirun} simulate {inp[param]} {out[trj]}", &ctx()).unwrap(),
+            "jsrun -n 10 simulate 3.param 3.trj"
+        );
+    }
+
+    #[test]
+    fn escaped_braces() {
+        assert_eq!(render("awk '{{print $1}}'", &ctx()).unwrap(), "awk '{print $1}'");
+        assert_eq!(render("{{{n}}}", &ctx()).unwrap(), "{3}");
+    }
+
+    #[test]
+    fn unknown_var_is_error() {
+        assert!(render("{missing}", &ctx()).is_err());
+        assert!(render("{inp[missing]}", &ctx()).is_err());
+        assert!(render("{missing[k]}", &ctx()).is_err());
+    }
+
+    #[test]
+    fn syntax_errors() {
+        assert!(render("{unclosed", &ctx()).is_err());
+        assert!(render("stray } here", &ctx()).is_err());
+        assert!(render("{}", &ctx()).is_err());
+    }
+
+    #[test]
+    fn partial_render_keeps_unknowns() {
+        let mut c = Ctx::new();
+        c.set("n", "7");
+        assert_eq!(
+            render_partial("{mpirun} f {n} {inp[x]}", &c).unwrap(),
+            "{mpirun} f 7 {inp[x]}"
+        );
+        // escapes survive a partial pass for the final render
+        let partial = render_partial("{{literal}} {n}", &c).unwrap();
+        assert_eq!(partial, "{{literal}} 7");
+        assert_eq!(render(&partial, &c).unwrap(), "{literal} 7");
+    }
+
+    #[test]
+    fn template_matching() {
+        assert_eq!(
+            match_template("an_{n}.npy", "an_3.npy").unwrap(),
+            ("n".to_string(), "3".to_string())
+        );
+        assert_eq!(
+            match_template("{n}.trj", "system-A.trj").unwrap(),
+            ("n".to_string(), "system-A".to_string())
+        );
+        assert_eq!(match_template("fixed.txt", "fixed.txt").unwrap(), (String::new(), String::new()));
+        assert!(match_template("an_{n}.npy", "an_.npy").is_none()); // empty match
+        assert!(match_template("an_{n}.npy", "bn_3.npy").is_none());
+        assert!(match_template("an_{n}.npy", "an_3.txt").is_none());
+        assert!(match_template("{a}_{b}.npy", "x_y.npy").is_none()); // two vars
+    }
+
+    #[test]
+    fn iterables() {
+        assert_eq!(parse_iterable("range(1,4)").unwrap(), vec!["1", "2", "3"]);
+        assert_eq!(parse_iterable("range(3)").unwrap(), vec!["0", "1", "2"]);
+        assert_eq!(parse_iterable("range(0,10,5)").unwrap(), vec!["0", "5"]);
+        assert_eq!(parse_iterable("range(3,0,-1)").unwrap(), vec!["3", "2", "1"]);
+        assert_eq!(parse_iterable("a, b, c").unwrap(), vec!["a", "b", "c"]);
+        assert!(parse_iterable("range(1,2,0)").is_err());
+        assert!(parse_iterable("range(x)").is_err());
+    }
+
+    #[test]
+    fn paper_fig1_range() {
+        // targets.yaml: n: "range(1,11)" -> files an_1.npy .. an_10.npy
+        let ns = parse_iterable("range(1,11)").unwrap();
+        assert_eq!(ns.len(), 10);
+        assert_eq!(ns.first().unwrap(), "1");
+        assert_eq!(ns.last().unwrap(), "10");
+    }
+
+    #[test]
+    fn overlay_layering() {
+        let mut base = Ctx::new();
+        base.set("n", "1").set("keep", "yes");
+        let mut top = Ctx::new();
+        top.set("n", "2");
+        base.overlay(&top);
+        assert_eq!(base.get("n"), Some("2"));
+        assert_eq!(base.get("keep"), Some("yes"));
+    }
+}

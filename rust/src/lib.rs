@@ -1,0 +1,35 @@
+//! threesched — three practical workflow schedulers for easy maximum
+//! parallelism.
+//!
+//! Rust + JAX + Pallas reproduction of Rogers, *"Three Practical Workflow
+//! Schedulers for Easy Maximum Parallelism"* (Softw. Pract. Exper. 2021,
+//! DOI 10.1002/spe.3047).
+//!
+//! Three coordinators, each committed to exactly one synchronization
+//! mechanism:
+//!
+//! * [`coordinator::pmake`] — file-based parallel make: tasks synchronize on
+//!   the presence of output files; a single managing process pushes jobs to
+//!   an allocation using an earliest-finish-time (node-hours) priority.
+//! * [`coordinator::dwork`] — a task-list server: workers pull named tasks
+//!   from a central double-ended FIFO queue; the server guarantees all
+//!   dependencies of a task completed before serving it.
+//! * [`coordinator::mpilist`] — bulk-synchronous distributed lists: a unique
+//!   static assignment of data elements to ranks, so local operations need
+//!   no synchronization at all.
+//!
+//! Everything the schedulers depend on is built in [`substrate`]: wire
+//! codec (protobuf substitute), KV store (TKRZW substitute), transports
+//! (ZeroMQ substitute), an MPI-like communicator, the Summit cluster/cost
+//! models, and a discrete-event simulator that runs the same scheduler
+//! state machines at paper scale (6–6912 ranks).
+//!
+//! Task bodies are real compute: JAX/Pallas `AᵀB` matmul programs AOT-lowered
+//! to HLO text and executed through the PJRT CPU client ([`runtime`]).
+//! The [`metg`] module implements the paper's minimum-effective-task-
+//! granularity evaluation methodology.
+
+pub mod coordinator;
+pub mod metg;
+pub mod runtime;
+pub mod substrate;

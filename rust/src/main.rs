@@ -1,0 +1,309 @@
+//! threesched CLI: leader entrypoint for the three schedulers.
+//!
+//! Subcommands:
+//!   pmake   — run a rules.yaml/targets.yaml campaign on this host
+//!   dwork   — serve | worker | create | status | drain  (TCP deployment)
+//!   task    — execute one AOT artifact through PJRT (the job-step body
+//!             that pmake scripts launch, and a smoke-check for the
+//!             runtime path)
+//!   metg    — print the paper-scale METG sweep (DES)
+//!
+//! Run with no args for usage.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context as _, Result};
+
+use threesched::coordinator::dwork::{self, Client, TaskMsg};
+use threesched::coordinator::pmake;
+use threesched::metg::harness::{metg_sweep, render_metg, PAPER_RANKS};
+use threesched::metg::Workload;
+use threesched::runtime::service::RuntimeService;
+use threesched::runtime::{default_artifacts_dir, fill_f32, HostBuf};
+use threesched::substrate::cli::{parse, Flag};
+use threesched::substrate::cluster::costs::CostModel;
+use threesched::substrate::cluster::Machine;
+use threesched::substrate::kvstore::KvStore;
+use threesched::substrate::transport::tcp::TcpClient;
+
+const USAGE: &str = "\
+threesched — three practical workflow schedulers (pmake, dwork, mpi-list)
+
+usage: threesched <command> [flags]
+
+commands:
+  pmake   --rules rules.yaml --targets targets.yaml [--nodes N] [--fifo]
+  dwork serve   --bind addr:port [--db dir] [--snapshot-every N]
+  dwork worker  --connect addr:port [--name w0] [--prefetch N] [--artifacts-dir D]
+  dwork create  --connect addr:port --name task [--dep t1,t2]
+  dwork status  --connect addr:port
+  dwork drain   --connect addr:port            (no-op worker: marks tasks done)
+  task    --artifact atb_128 [--seed S] [--out file] [--artifacts-dir D]
+  metg    [--rtt-us X]
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd {
+        "pmake" => cmd_pmake(rest),
+        "dwork" => cmd_dwork(rest),
+        "task" => cmd_task(rest),
+        "metg" => cmd_metg(rest),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+// ------------------------------------------------------------------- pmake
+
+fn cmd_pmake(argv: &[String]) -> Result<()> {
+    let spec = [
+        Flag { name: "rules", help: "rules.yaml path", takes_value: true, default: Some("rules.yaml") },
+        Flag { name: "targets", help: "targets.yaml path", takes_value: true, default: Some("targets.yaml") },
+        Flag { name: "nodes", help: "allocation size (nodes)", takes_value: true, default: Some("1") },
+        Flag { name: "fifo", help: "disable priority scheduling", takes_value: false, default: None },
+    ];
+    let args = parse(argv, &spec)?;
+    let nodes = args.get_usize("nodes", 1)?;
+    let cfg = pmake::SchedConfig {
+        nodes,
+        machine: Machine::summit(nodes.max(1)),
+        fifo: args.has("fifo"),
+    };
+    let reports = pmake::make(
+        Path::new(args.get("rules").unwrap()),
+        Path::new(args.get("targets").unwrap()),
+        &pmake::ShellExecutor::default(),
+        &cfg,
+    )?;
+    for (i, r) in reports.iter().enumerate() {
+        println!(
+            "target {i}: {} ok, {} failed, {} poisoned, makespan {:.2}s (launch overhead {:.3}s)",
+            r.succeeded.len(),
+            r.failed.len(),
+            r.poisoned.len(),
+            r.makespan_s,
+            r.total_launch_s
+        );
+    }
+    if reports.iter().any(|r| !r.all_ok()) {
+        bail!("campaign had failures");
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------- dwork
+
+fn cmd_dwork(argv: &[String]) -> Result<()> {
+    let Some(verb) = argv.first().map(String::as_str) else {
+        bail!("dwork needs a verb: serve | worker | create | status | drain\n{USAGE}");
+    };
+    let rest = &argv[1..];
+    match verb {
+        "serve" => {
+            let spec = [
+                Flag { name: "bind", help: "listen address", takes_value: true, default: Some("127.0.0.1:7117") },
+                Flag { name: "db", help: "persistence directory", takes_value: true, default: None },
+                Flag { name: "snapshot-every", help: "mutations between snapshots", takes_value: true, default: Some("0") },
+            ];
+            let args = parse(rest, &spec)?;
+            let state = match args.get("db") {
+                Some(dir) => dwork::SchedState::with_store(KvStore::open(Path::new(dir))?),
+                None => dwork::SchedState::new(),
+            };
+            let cfg = dwork::ServerConfig {
+                snapshot_every: args.get_usize("snapshot-every", 0)? as u64,
+            };
+            let (addr, _guard, handle) = dwork::spawn_tcp(state, cfg, args.get("bind").unwrap())?;
+            println!("dhub serving on {addr} (ctrl-c to stop)");
+            let _ = handle.join();
+            Ok(())
+        }
+        "worker" => {
+            let spec = [
+                Flag { name: "connect", help: "server address", takes_value: true, default: Some("127.0.0.1:7117") },
+                Flag { name: "name", help: "worker name", takes_value: true, default: None },
+                Flag { name: "prefetch", help: "tasks to buffer", takes_value: true, default: Some("1") },
+                Flag { name: "artifacts-dir", help: "artifact directory", takes_value: true, default: None },
+            ];
+            let args = parse(rest, &spec)?;
+            let name = args
+                .get("name")
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("worker-{}", std::process::id()));
+            let conn = TcpClient::connect(args.get("connect").unwrap())?;
+            let mut c = Client::new(Box::new(conn), name.clone());
+            let dir = artifacts_dir(args.get("artifacts-dir"));
+            let svc = RuntimeService::start(&dir)?;
+            let h = svc.handle();
+            let prefetch = args.get_usize("prefetch", 1)? as u32;
+            // task body convention: task name "<artifact>@<seed>" runs the
+            // artifact with deterministic inputs; anything else is a no-op
+            let stats = dwork::run_worker(&mut c, prefetch, |t| {
+                if let Some((artifact, seed)) = t.name.split_once('@') {
+                    let seed: u64 = seed.parse().unwrap_or(0);
+                    run_artifact(&h, &dir, artifact, seed, None)?;
+                }
+                Ok(())
+            })?;
+            println!(
+                "{name}: ran {} tasks ({} failed), compute {:.2}s, comm {:.2}s",
+                stats.tasks_run, stats.tasks_failed, stats.compute_s, stats.comm_s
+            );
+            Ok(())
+        }
+        "create" => {
+            let spec = [
+                Flag { name: "connect", help: "server address", takes_value: true, default: Some("127.0.0.1:7117") },
+                Flag { name: "name", help: "task name", takes_value: true, default: None },
+                Flag { name: "dep", help: "dependencies, comma separated", takes_value: true, default: None },
+            ];
+            let args = parse(rest, &spec)?;
+            let name = args.get("name").context("--name is required")?;
+            let deps: Vec<String> = args
+                .get("dep")
+                .map(|d| d.split(',').map(str::to_string).collect())
+                .unwrap_or_default();
+            let conn = TcpClient::connect(args.get("connect").unwrap())?;
+            let mut c = Client::new(Box::new(conn), "dquery");
+            c.create(TaskMsg::new(name, vec![]), &deps)?;
+            println!("created {name} (deps: {deps:?})");
+            Ok(())
+        }
+        "status" => {
+            let spec = [Flag {
+                name: "connect",
+                help: "server address",
+                takes_value: true,
+                default: Some("127.0.0.1:7117"),
+            }];
+            let args = parse(rest, &spec)?;
+            let conn = TcpClient::connect(args.get("connect").unwrap())?;
+            let mut c = Client::new(Box::new(conn), "dquery");
+            let st = c.status()?;
+            println!(
+                "total={} ready={} waiting={} assigned={} completed={} errored={} workers={}",
+                st.total, st.ready, st.waiting, st.assigned, st.completed, st.errored, st.workers
+            );
+            Ok(())
+        }
+        "drain" => {
+            let spec = [Flag {
+                name: "connect",
+                help: "server address",
+                takes_value: true,
+                default: Some("127.0.0.1:7117"),
+            }];
+            let args = parse(rest, &spec)?;
+            let conn = TcpClient::connect(args.get("connect").unwrap())?;
+            let mut c = Client::new(Box::new(conn), format!("drain-{}", std::process::id()));
+            let stats = dwork::run_worker(&mut c, 4, |_| Ok(()))?;
+            println!("drained {} tasks", stats.tasks_run);
+            Ok(())
+        }
+        other => bail!("unknown dwork verb {other:?}"),
+    }
+}
+
+// -------------------------------------------------------------------- task
+
+fn artifacts_dir(flag: Option<&str>) -> PathBuf {
+    flag.map(PathBuf::from).unwrap_or_else(default_artifacts_dir)
+}
+
+/// Execute one artifact with deterministic seeded inputs; optionally dump
+/// |outputs| to a file (one value per line) so downstream pmake rules can
+/// consume them.
+fn run_artifact(
+    h: &threesched::runtime::service::RuntimeHandle,
+    artifacts_dir: &Path,
+    artifact: &str,
+    seed: u64,
+    out: Option<&Path>,
+) -> Result<f64> {
+    // build inputs from the manifest shapes
+    let manifest =
+        threesched::runtime::registry::Manifest::load(&artifacts_dir.join("manifest.tsv"))?;
+    let spec = manifest
+        .get(artifact)
+        .with_context(|| format!("unknown artifact {artifact:?}"))?;
+    let mut inputs = Vec::new();
+    for (i, shape) in spec.inputs.iter().enumerate() {
+        match shape.dtype {
+            threesched::runtime::registry::Dtype::F32 => {
+                inputs.push(HostBuf::F32(fill_f32(shape.elems(), seed * 31 + i as u64)));
+            }
+            threesched::runtime::registry::Dtype::I32 => {
+                inputs.push(HostBuf::I32(vec![seed as i32; shape.elems()]));
+            }
+        }
+    }
+    let (outs, dt) = h.execute(artifact, inputs)?;
+    if let Some(path) = out {
+        let mut text = String::new();
+        if let Ok(vals) = outs[0].as_f32() {
+            for v in vals.iter().take(256) {
+                text.push_str(&format!("{}\n", v.abs()));
+            }
+        }
+        std::fs::write(path, text).with_context(|| format!("writing {path:?}"))?;
+    }
+    Ok(dt)
+}
+
+fn cmd_task(argv: &[String]) -> Result<()> {
+    let spec = [
+        Flag { name: "artifact", help: "artifact name (see artifacts/manifest.tsv)", takes_value: true, default: Some("atb_128") },
+        Flag { name: "seed", help: "input seed", takes_value: true, default: Some("0") },
+        Flag { name: "out", help: "write |outputs| here (one/line)", takes_value: true, default: None },
+        Flag { name: "artifacts-dir", help: "artifact directory", takes_value: true, default: None },
+    ];
+    let args = parse(argv, &spec)?;
+    let dir = artifacts_dir(args.get("artifacts-dir"));
+    let svc = RuntimeService::start(&dir)?;
+    let h = svc.handle();
+    let artifact = args.get("artifact").unwrap();
+    let seed = args.get_usize("seed", 0)? as u64;
+    let dt = run_artifact(&h, &dir, artifact, seed, args.get("out").map(Path::new))?;
+    println!("{artifact} seed={seed}: executed in {:.3}ms", dt * 1e3);
+    Ok(())
+}
+
+// -------------------------------------------------------------------- metg
+
+fn cmd_metg(argv: &[String]) -> Result<()> {
+    let spec = [Flag {
+        name: "rtt-us",
+        help: "override server RTT (microseconds)",
+        takes_value: true,
+        default: None,
+    }];
+    let args = parse(argv, &spec)?;
+    let mut m = CostModel::paper();
+    if let Some(rtt) = args.get("rtt-us") {
+        let us: f64 = rtt.parse().context("--rtt-us expects a number")?;
+        m = m.with_measured_rtt(us * 1e-6);
+    }
+    let w = Workload::paper();
+    println!("{}", render_metg(&metg_sweep(&m, &w, &PAPER_RANKS)));
+    Ok(())
+}

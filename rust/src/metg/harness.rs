@@ -1,0 +1,433 @@
+//! Evaluation harness: generates the paper's tables and figures.
+//!
+//! Fig 4 (efficiency vs tile size), Fig 5 (per-component breakdowns),
+//! Table 4 (overhead scaling) and the METG-vs-ranks sweep, each as plain
+//! text tables printed by the corresponding bench target.  Real-mode
+//! helpers measure the actual coordinators over PJRT at host scale.
+
+use anyhow::Result;
+
+use crate::runtime::service::RuntimeHandle;
+use crate::runtime::{fill_f32, HostBuf};
+use crate::substrate::cluster::costs::{
+    CostModel, TABLE4_ALLOC, TABLE4_DWORK_CONN, TABLE4_JSRUN, TABLE4_PY_ALLOC,
+    TABLE4_PY_IMPORTS, TABLE4_RANKS, TABLE4_STEAL_RTT, TABLE4_SYNC_1024,
+};
+
+use super::simmodels::Tool;
+use super::{metg_from_curve, EffPoint, Workload};
+
+/// The paper's rank scales.
+pub const PAPER_RANKS: [usize; 4] = [6, 60, 864, 6912];
+
+/// Log-spaced kernel-time grid for METG sweeps (seconds).
+pub fn t_kernel_grid() -> Vec<f64> {
+    (-7..=2)
+        .flat_map(|e| [1.0, 2.0, 5.0].map(|m| m * 10f64.powi(e)))
+        .collect()
+}
+
+/// Simple fixed-width text table builder (no external crates).
+pub struct TextTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new(header: &[&str]) -> TextTable {
+        TextTable { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            line.trim_end().to_string() + "\n"
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push_str(&format!("{}\n", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len())));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+fn fmt_t(t: f64) -> String {
+    if t >= 1.0 {
+        format!("{t:.2}s")
+    } else if t >= 1e-3 {
+        format!("{:.2}ms", t * 1e3)
+    } else {
+        format!("{:.1}us", t * 1e6)
+    }
+}
+
+// ------------------------------------------------------------------- Fig 4
+
+/// One Fig 4 sample: tool × tile size at fixed ranks.
+pub struct Fig4Row {
+    pub tool: Tool,
+    pub tile: usize,
+    pub t_kernel: f64,
+    pub gflops_per_rank: f64,
+    pub rel_efficiency: f64,
+}
+
+/// Simulated Fig 4: per-GPU GFLOP/s (upper) + relative efficiency (lower)
+/// across tile sizes, at the given rank count.  `t_kernel_of_tile` maps a
+/// tile size to its ideal single-device kernel time (measured in real
+/// mode; V100-modelled in paper mode).
+pub fn fig4(
+    m: &CostModel,
+    w: &Workload,
+    ranks: usize,
+    tiles: &[(usize, f64)],
+    seed: u64,
+) -> Vec<Fig4Row> {
+    let mut out = Vec::new();
+    for &(tile, t_kernel) in tiles {
+        let flops = 2.0 * (tile as f64).powi(3);
+        for tool in Tool::ALL {
+            let run = tool.simulate(m, w, ranks, t_kernel, seed);
+            let eff = run.efficiency(w, t_kernel);
+            out.push(Fig4Row {
+                tool,
+                tile,
+                t_kernel,
+                // actual per-rank throughput = eff * ideal throughput
+                gflops_per_rank: eff * flops / t_kernel / 1e9,
+                rel_efficiency: eff,
+            });
+        }
+    }
+    out
+}
+
+/// Ideal V100 kernel time for a tile size (paper hardware model): ramps
+/// from call-overhead-bound small tiles to 14 TF/s peak at 4096+.
+pub fn v100_t_kernel(tile: usize) -> f64 {
+    let flops = 2.0 * (tile as f64).powi(3);
+    let peak = 14e12;
+    // efficiency ramp: tiny tiles can't fill the GPU (paper Fig 4 upper)
+    let util = (tile as f64 / 4096.0).min(1.0).powf(0.6).max(0.02);
+    let launch = 10e-6; // kernel launch + blas call path
+    flops / (peak * util) + launch
+}
+
+pub fn render_fig4(rows: &[Fig4Row], ranks: usize) -> String {
+    let mut upper = TextTable::new(&["tile", "t_kernel", "pmake GF/s", "dwork GF/s", "mpi-list GF/s"]);
+    let mut lower = TextTable::new(&["tile", "t_kernel", "pmake eff", "dwork eff", "mpi-list eff"]);
+    let tiles: Vec<usize> = {
+        let mut t: Vec<usize> = rows.iter().map(|r| r.tile).collect();
+        t.sort_unstable();
+        t.dedup();
+        t
+    };
+    for tile in tiles {
+        let get = |tool: Tool| {
+            rows.iter()
+                .find(|r| r.tile == tile && r.tool == tool)
+                .expect("complete grid")
+        };
+        let (p, d, l) = (get(Tool::Pmake), get(Tool::Dwork), get(Tool::MpiList));
+        upper.row(vec![
+            tile.to_string(),
+            fmt_t(p.t_kernel),
+            format!("{:.1}", p.gflops_per_rank),
+            format!("{:.1}", d.gflops_per_rank),
+            format!("{:.1}", l.gflops_per_rank),
+        ]);
+        lower.row(vec![
+            tile.to_string(),
+            fmt_t(p.t_kernel),
+            format!("{:.4}", p.rel_efficiency),
+            format!("{:.4}", d.rel_efficiency),
+            format!("{:.4}", l.rel_efficiency),
+        ]);
+    }
+    format!(
+        "Fig 4 (upper): absolute GFLOP/s per rank, {ranks} ranks\n{}\n\
+         Fig 4 (lower): efficiency relative to single-device compute, {ranks} ranks\n{}",
+        upper.render(),
+        lower.render()
+    )
+}
+
+// ------------------------------------------------------------------- Fig 5
+
+/// Fig 5: per-component time fractions for one tool/tile/ranks cell.
+pub fn fig5_row(m: &CostModel, w: &Workload, tool: Tool, ranks: usize, t_kernel: f64) -> [f64; 5] {
+    let run = tool.simulate(m, w, ranks, t_kernel, 5);
+    let bd = run.breakdown;
+    let total = (ranks as f64 * run.makespan).max(1e-30);
+    [
+        bd.compute / total,
+        bd.jsrun / total,
+        bd.alloc / total,
+        bd.communication / total,
+        bd.sync / total,
+    ]
+}
+
+pub fn render_fig5(m: &CostModel, w: &Workload, ranks: usize, tiles: &[(usize, f64)]) -> String {
+    let mut t = TextTable::new(&["tool", "tile", "compute", "jsrun", "alloc", "comm", "sync"]);
+    for tool in Tool::ALL {
+        for &(tile, tk) in tiles {
+            let f = fig5_row(m, w, tool, ranks, tk);
+            t.row(vec![
+                tool.name().into(),
+                tile.to_string(),
+                format!("{:.3}", f[0]),
+                format!("{:.3}", f[1]),
+                format!("{:.3}", f[2]),
+                format!("{:.3}", f[3]),
+                format!("{:.3}", f[4]),
+            ]);
+        }
+    }
+    format!("Fig 5: time-breakdown fractions at {ranks} ranks (rows sum to ~1)\n{}", t.render())
+}
+
+// ----------------------------------------------------------------- Table 4
+
+/// Table 4, model vs paper: per-rank-count overhead components.
+pub fn render_table4(m: &CostModel, measured_rtt: Option<f64>) -> String {
+    let mut t = TextTable::new(&[
+        "ranks",
+        "jsrun model",
+        "jsrun paper",
+        "alloc",
+        "steal RTT",
+        "sync/1024 model",
+        "sync/1024 paper",
+        "py alloc",
+        "py imports model",
+        "py imports paper",
+        "dwork conn model",
+    ]);
+    for (i, &r) in TABLE4_RANKS.iter().enumerate() {
+        let conn_paper: Option<f64> =
+            TABLE4_DWORK_CONN.iter().find(|&&(cr, _)| cr == r).map(|&(_, v)| v);
+        t.row(vec![
+            r.to_string(),
+            format!("{:.3}", m.jsrun(r)),
+            format!("{:.3}", TABLE4_JSRUN[i]),
+            format!("{TABLE4_ALLOC:.2}"),
+            format!(
+                "{} (paper {})",
+                fmt_t(measured_rtt.unwrap_or(m.steal_rtt)),
+                fmt_t(TABLE4_STEAL_RTT)
+            ),
+            format!("{:.3}", m.sync_spread(r, 1024)),
+            format!("{:.2}", TABLE4_SYNC_1024[i]),
+            format!("{TABLE4_PY_ALLOC:.2}"),
+            format!("{:.2}", m.py_imports(r)),
+            format!("{:.2}", TABLE4_PY_IMPORTS[i]),
+            match conn_paper {
+                Some(p) => format!("{:.2} (paper {p:.2})", m.dwork_conn(r)),
+                None => format!("{:.2} (paper -)", m.dwork_conn(r)),
+            },
+        ]);
+    }
+    format!("Table 4: overhead components vs ranks (seconds)\n{}", t.render())
+}
+
+// ------------------------------------------------------------- METG sweep
+
+/// METG per tool per rank count (the sec. 4 headline + Ref [2] Fig 9
+/// comparison).  Returns (tool, ranks, metg_seconds).
+pub fn metg_sweep(m: &CostModel, w: &Workload, ranks_list: &[usize]) -> Vec<(Tool, usize, f64)> {
+    let grid = t_kernel_grid();
+    let mut out = Vec::new();
+    for &ranks in ranks_list {
+        for tool in Tool::ALL {
+            let pts: Vec<EffPoint> = grid
+                .iter()
+                .map(|&t| tool.simulate(m, w, ranks, t, 42).eff_point(w, t))
+                .collect();
+            let iters = match tool {
+                Tool::MpiList => 1,
+                _ => w.iters_per_task,
+            };
+            if let Some(metg) = metg_from_curve(&pts, iters) {
+                out.push((tool, ranks, metg));
+            }
+        }
+    }
+    out
+}
+
+pub fn render_metg(rows: &[(Tool, usize, f64)]) -> String {
+    let mut t = TextTable::new(&["ranks", "pmake METG", "dwork METG", "mpi-list METG"]);
+    let mut ranks: Vec<usize> = rows.iter().map(|(_, r, _)| *r).collect();
+    ranks.sort_unstable();
+    ranks.dedup();
+    for r in ranks {
+        let get = |tool: Tool| {
+            rows.iter()
+                .find(|(tt, rr, _)| *tt == tool && *rr == r)
+                .map(|(_, _, m)| fmt_t(*m))
+                .unwrap_or_else(|| "-".into())
+        };
+        t.row(vec![r.to_string(), get(Tool::Pmake), get(Tool::Dwork), get(Tool::MpiList)]);
+    }
+    format!(
+        "METG vs ranks (task granularity where overhead = compute)\n\
+         paper headline at 864 ranks: pmake 4500ms, dwork 25ms, mpi-list 0.3ms\n{}",
+        t.render()
+    )
+}
+
+// --------------------------------------------------------------- real mode
+
+/// Measure the ideal per-kernel time of an artifact on this host's PJRT
+/// device (the paper's single-GPU baseline run).
+pub fn measure_t_kernel(h: &RuntimeHandle, artifact: &str, reps: u32) -> Result<f64> {
+    let spec_elems = {
+        // probe input sizes via flops name convention atb_{ts}
+        let ts: usize = artifact
+            .strip_prefix("atb_")
+            .and_then(|s| s.split('_').next())
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("not an atb artifact: {artifact}"))?;
+        ts * ts
+    };
+    let a = fill_f32(spec_elems, 1);
+    let b = fill_f32(spec_elems, 2);
+    h.warm(&[artifact])?;
+    let mut best = f64::MAX;
+    for _ in 0..reps.max(1) {
+        let (_, dt) = h.execute(artifact, vec![HostBuf::F32(a.clone()), HostBuf::F32(b.clone())])?;
+        best = best.min(dt);
+    }
+    Ok(best)
+}
+
+/// Real-mode efficiency sample: actual coordinator, actual PJRT kernels.
+pub struct RealRun {
+    pub makespan: f64,
+    pub kernels: u64,
+    pub t_kernel_baseline: f64,
+}
+
+impl RealRun {
+    pub fn efficiency(&self, ranks: usize) -> f64 {
+        let ideal = self.kernels as f64 / ranks as f64 * self.t_kernel_baseline;
+        ideal / self.makespan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_ascending() {
+        let g = t_kernel_grid();
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+        assert!(g[0] <= 1e-7 && *g.last().unwrap() >= 100.0);
+    }
+
+    #[test]
+    fn text_table_renders() {
+        let mut t = TextTable::new(&["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("a"));
+        assert!(s.contains("bb"));
+        assert!(s.lines().count() >= 3);
+    }
+
+    #[test]
+    fn v100_model_sane() {
+        // large tiles approach peak: 8192^3*2 / 14e12 ≈ 78.6ms
+        let t = v100_t_kernel(8192);
+        assert!((0.07..0.09).contains(&t), "t={t}");
+        // small tiles are launch-bound, not at peak
+        let t64 = v100_t_kernel(64);
+        let gflops = 2.0 * 64f64.powi(3) / t64 / 1e9;
+        assert!(gflops < 1000.0, "64-tile at {gflops} GF/s should be far from 14000");
+    }
+
+    #[test]
+    fn fig4_rows_complete() {
+        let m = CostModel::paper();
+        let w = Workload::paper();
+        let tiles: Vec<(usize, f64)> =
+            [256, 1024, 4096].iter().map(|&t| (t, v100_t_kernel(t))).collect();
+        let rows = fig4(&m, &w, 60, &tiles, 1);
+        assert_eq!(rows.len(), 9);
+        let txt = render_fig4(&rows, 60);
+        assert!(txt.contains("Fig 4"));
+        assert!(txt.contains("4096"));
+        // efficiency grows with tile size for every tool
+        for tool in Tool::ALL {
+            let effs: Vec<f64> = [256, 1024, 4096]
+                .iter()
+                .map(|&t| {
+                    rows.iter()
+                        .find(|r| r.tile == t && r.tool == tool)
+                        .unwrap()
+                        .rel_efficiency
+                })
+                .collect();
+            assert!(effs[0] <= effs[2], "{}: {effs:?}", tool.name());
+        }
+    }
+
+    #[test]
+    fn fig5_fractions_sum_to_one() {
+        let m = CostModel::paper();
+        let w = Workload::paper();
+        for tool in Tool::ALL {
+            let f = fig5_row(&m, &w, tool, 60, 0.001);
+            let sum: f64 = f.iter().sum();
+            assert!((0.5..=1.01).contains(&sum), "{}: {f:?} sums to {sum}", tool.name());
+        }
+    }
+
+    #[test]
+    fn table4_renders_all_ranks() {
+        let txt = render_table4(&CostModel::paper(), Some(12e-6));
+        for r in TABLE4_RANKS {
+            assert!(txt.contains(&r.to_string()));
+        }
+        assert!(txt.contains("paper"));
+    }
+
+    #[test]
+    fn metg_sweep_produces_ordering() {
+        let m = CostModel::paper();
+        let w = Workload::paper();
+        let rows = metg_sweep(&m, &w, &[60, 864]);
+        assert_eq!(rows.len(), 6);
+        let txt = render_metg(&rows);
+        assert!(txt.contains("864"));
+        for &ranks in &[60usize, 864] {
+            let get = |tool: Tool| {
+                rows.iter()
+                    .find(|(t, r, _)| *t == tool && *r == ranks)
+                    .unwrap()
+                    .2
+            };
+            assert!(get(Tool::MpiList) < get(Tool::Dwork));
+            assert!(get(Tool::Dwork) < get(Tool::Pmake));
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! METG evaluation: the paper's minimum-effective-task-granularity
+//! methodology (sec. 3), at two fidelities:
+//!
+//! * **real mode** — the actual coordinators run real PJRT matmul tasks
+//!   in-process at small rank counts (what this host can hold);
+//! * **simulated mode** ([`simmodels`]) — the same scheduler state
+//!   machines driven by the discrete-event simulator against the
+//!   Table-4-calibrated cost models, at the paper's 6–6912 rank scales.
+//!
+//! METG definition: the task duration at which scheduling overhead equals
+//! useful work — equivalently, the smallest task size whose computational
+//! efficiency (ideal / actual time) reaches 50%.
+
+pub mod harness;
+pub mod simmodels;
+
+/// The paper's weak-scaling workload (sec. 3): 1024 kernel executions per
+/// rank; for pmake and dwork a task bundles 256 kernel iterations, so 4
+/// tasks reach each rank per run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Workload {
+    pub kernels_per_rank: u64,
+    pub iters_per_task: u64,
+}
+
+impl Workload {
+    pub fn paper() -> Workload {
+        Workload { kernels_per_rank: 1024, iters_per_task: 256 }
+    }
+
+    /// Scaled-down variant for real-mode runs on this host.
+    pub fn small() -> Workload {
+        Workload { kernels_per_rank: 64, iters_per_task: 16 }
+    }
+
+    pub fn tasks_per_rank(&self) -> u64 {
+        self.kernels_per_rank / self.iters_per_task
+    }
+
+    /// Ideal (zero-overhead) makespan for a per-kernel time.
+    pub fn ideal_makespan(&self, t_kernel: f64) -> f64 {
+        self.kernels_per_rank as f64 * t_kernel
+    }
+}
+
+/// One efficiency measurement point (a Fig 4 sample).
+#[derive(Clone, Copy, Debug)]
+pub struct EffPoint {
+    /// ideal single-device time per kernel (the Fig 4 x-axis)
+    pub t_kernel: f64,
+    /// ideal / actual
+    pub efficiency: f64,
+    pub makespan: f64,
+}
+
+/// Extract the METG from an efficiency curve: the smallest task size with
+/// efficiency >= 0.5 (linear interpolation between samples).  The curve
+/// must be sampled in ascending `t_kernel`.  Reported in *task* seconds
+/// (kernel time × iterations), matching the paper's statement of task
+/// granularity.
+pub fn metg_from_curve(points: &[EffPoint], iters_per_task: u64) -> Option<f64> {
+    let mut prev: Option<&EffPoint> = None;
+    for p in points {
+        if p.efficiency >= 0.5 {
+            let t = match prev {
+                Some(q) if q.efficiency < 0.5 && p.efficiency > q.efficiency => {
+                    // log-linear interpolation in t
+                    let f = (0.5 - q.efficiency) / (p.efficiency - q.efficiency);
+                    (q.t_kernel.ln() + f * (p.t_kernel.ln() - q.t_kernel.ln())).exp()
+                }
+                _ => p.t_kernel,
+            };
+            return Some(t * iters_per_task as f64);
+        }
+        prev = Some(p);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_workload_shape() {
+        let w = Workload::paper();
+        assert_eq!(w.tasks_per_rank(), 4);
+        assert_eq!(w.ideal_makespan(0.001), 1.024);
+    }
+
+    #[test]
+    fn metg_extraction() {
+        let pts = vec![
+            EffPoint { t_kernel: 1e-4, efficiency: 0.01, makespan: 1.0 },
+            EffPoint { t_kernel: 1e-3, efficiency: 0.1, makespan: 1.0 },
+            EffPoint { t_kernel: 1e-2, efficiency: 0.9, makespan: 1.0 },
+        ];
+        let metg = metg_from_curve(&pts, 256).unwrap();
+        // crossover between 1e-3 and 1e-2, times 256 iters
+        assert!(metg > 0.256 && metg < 2.56, "metg={metg}");
+    }
+
+    #[test]
+    fn metg_none_when_never_efficient() {
+        let pts = vec![EffPoint { t_kernel: 1.0, efficiency: 0.3, makespan: 1.0 }];
+        assert!(metg_from_curve(&pts, 1).is_none());
+    }
+
+    #[test]
+    fn metg_first_point_already_efficient() {
+        let pts = vec![EffPoint { t_kernel: 1e-5, efficiency: 0.8, makespan: 1.0 }];
+        assert_eq!(metg_from_curve(&pts, 1), Some(1e-5));
+    }
+}

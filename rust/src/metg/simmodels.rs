@@ -1,0 +1,395 @@
+//! DES models of the three schedulers at paper scale.
+//!
+//! Each model executes the *scheduling logic* (queues, launches, barriers)
+//! in virtual time against the calibrated [`CostModel`], with Gumbel task
+//! noise, and reports a per-component time breakdown — the machinery
+//! behind Fig 4 (scaled efficiency), Fig 5 (breakdown pies) and the METG
+//! sweep at 6–6912 ranks.
+
+use crate::substrate::cluster::costs::CostModel;
+use crate::substrate::des::{key, Sim};
+use crate::substrate::rng::Rng;
+
+use super::{EffPoint, Workload};
+
+/// Per-component time accounting, in seconds of *aggregate rank time*
+/// (divide by ranks × makespan for Fig 5's fractions).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Breakdown {
+    pub compute: f64,
+    /// job-step launch (pmake only)
+    pub jsrun: f64,
+    /// per-step allocation / GPU init (pmake only)
+    pub alloc: f64,
+    /// task database round-trips (dwork only)
+    pub communication: f64,
+    /// end-of-phase straggler wait (mpi-list; pmake at full-machine tasks)
+    pub sync: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.compute + self.jsrun + self.alloc + self.communication + self.sync
+    }
+
+    /// Fraction of total time that is useful compute.
+    pub fn compute_fraction(&self) -> f64 {
+        let t = self.total();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.compute / t
+        }
+    }
+}
+
+/// Result of one simulated run.
+#[derive(Clone, Copy, Debug)]
+pub struct SimRun {
+    pub makespan: f64,
+    pub breakdown: Breakdown,
+}
+
+impl SimRun {
+    pub fn efficiency(&self, w: &Workload, t_kernel: f64) -> f64 {
+        w.ideal_makespan(t_kernel) / self.makespan
+    }
+
+    pub fn eff_point(&self, w: &Workload, t_kernel: f64) -> EffPoint {
+        EffPoint {
+            t_kernel,
+            efficiency: self.efficiency(w, t_kernel),
+            makespan: self.makespan,
+        }
+    }
+}
+
+/// Sample one rank's compute time for `kernels` kernel executions with
+/// the calibrated *absolute* extreme-value jitter (Table 4 sync column).
+/// This drives mpi-list's METG (static assignment exposes stragglers) and
+/// pmake's sync slice (each job step barriers the whole allocation).
+fn rank_compute_abs(rng: &mut Rng, m: &CostModel, t_kernel: f64, kernels: u64) -> f64 {
+    let ideal = t_kernel * kernels as f64;
+    let noise = rng.gumbel(0.0, m.gumbel_beta_per_task * kernels as f64);
+    (ideal + noise).max(ideal * 0.5).max(0.0)
+}
+
+/// dwork's dynamic pulling absorbs stragglers (the point of a task list),
+/// so only a small execution-proportional jitter remains on each task.
+fn rank_compute_prop(rng: &mut Rng, t_kernel: f64, kernels: u64) -> f64 {
+    let ideal = t_kernel * kernels as f64;
+    let noise = rng.gumbel(0.0, 0.02 * ideal);
+    (ideal + noise).max(ideal * 0.5)
+}
+
+// ---------------------------------------------------------------- mpi-list
+
+/// mpi-list: one launch, static assignment, barrier at the end.
+/// Overheads: python startup (once) + straggler sync per run.
+pub fn sim_mpilist(m: &CostModel, w: &Workload, ranks: usize, t_kernel: f64, seed: u64) -> SimRun {
+    let mut rng = Rng::new(seed);
+    let mut fastest = f64::MAX;
+    let mut slowest = 0.0f64;
+    let mut total_compute = 0.0;
+    for r in 0..ranks {
+        let mut rr = rng.split(r as u64);
+        let t = rank_compute_abs(&mut rr, m, t_kernel, w.kernels_per_rank);
+        fastest = fastest.min(t);
+        slowest = slowest.max(t);
+        total_compute += t;
+    }
+    // startup is once-per-run, reported separately in Table 4 (not part of
+    // the per-task METG accounting, matching the paper's treatment)
+    let makespan = slowest;
+    let sync = slowest * ranks as f64 - total_compute; // aggregate idle at barrier
+    SimRun {
+        makespan,
+        breakdown: Breakdown { compute: total_compute, sync, ..Default::default() },
+    }
+}
+
+// ------------------------------------------------------------------ dwork
+
+/// dwork: central server serializes task dispatch; workers overlap
+/// communication with compute (paper's client).  DES with a FIFO server
+/// queue: each Steal/Complete pair occupies the server for `steal_rtt`.
+pub fn sim_dwork(m: &CostModel, w: &Workload, ranks: usize, t_kernel: f64, seed: u64) -> SimRun {
+    // event kinds
+    const REQ: u16 = 1; // worker asks for a task (joins server queue)
+    const GRANT: u16 = 2; // server finished serving the head request
+    const DONE: u16 = 3; // worker finished computing a task
+
+    let mut rng = Rng::new(seed);
+    let tasks_per_rank = w.tasks_per_rank().max(1);
+    let kernels_per_task = w.kernels_per_rank / tasks_per_rank;
+    let mut remaining: Vec<u64> = vec![tasks_per_rank; ranks];
+    let mut queue: std::collections::VecDeque<usize> = Default::default();
+    let mut server_busy = false;
+    let mut compute = vec![0.0f64; ranks];
+    let mut wait = vec![0.0f64; ranks];
+    let mut req_at = vec![0.0f64; ranks];
+    let mut finished_at = vec![0.0f64; ranks];
+
+    let mut sim = Sim::new();
+    for r in 0..ranks {
+        sim.at(0.0, key::pack(REQ, r as u64));
+    }
+    while let Some(ev) = sim.next() {
+        let now = sim.now();
+        match key::kind(ev.key) {
+            REQ => {
+                let r = key::index(ev.key) as usize;
+                req_at[r] = now;
+                queue.push_back(r);
+                if !server_busy {
+                    server_busy = true;
+                    sim.after(m.steal_rtt, key::pack(GRANT, 0));
+                }
+            }
+            GRANT => {
+                let r = queue.pop_front().expect("grant with empty queue");
+                wait[r] += now - req_at[r];
+                // worker starts computing one task
+                let mut rr = rng.split((r as u64) << 32 | remaining[r]);
+                let t = rank_compute_prop(&mut rr, t_kernel, kernels_per_task);
+                compute[r] += t;
+                sim.after(t, key::pack(DONE, r as u64));
+                if queue.is_empty() {
+                    server_busy = false;
+                } else {
+                    sim.after(m.steal_rtt, key::pack(GRANT, 0));
+                }
+            }
+            DONE => {
+                let r = key::index(ev.key) as usize;
+                remaining[r] -= 1;
+                if remaining[r] > 0 {
+                    sim.at(now, key::pack(REQ, r as u64));
+                } else {
+                    finished_at[r] = now;
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+    let makespan = sim.now();
+    let total_compute: f64 = compute.iter().sum();
+    let total_wait: f64 = wait.iter().sum();
+    // residual idle: ranks that finished early wait for the last completion
+    let tail: f64 = finished_at.iter().map(|&f| makespan - f).sum();
+    SimRun {
+        makespan,
+        breakdown: Breakdown {
+            compute: total_compute,
+            communication: total_wait,
+            sync: tail,
+            ..Default::default()
+        },
+    }
+}
+
+// ------------------------------------------------------------------ pmake
+
+/// pmake: each task is a separate job step launched onto the allocation;
+/// the benchmark's tasks each occupy all ranks, so a run is
+/// `tasks_per_rank` sequential steps of jsrun + alloc + max-rank-compute
+/// (paper Fig 5: jsrun, alloc, compute, sync slices).
+pub fn sim_pmake(m: &CostModel, w: &Workload, ranks: usize, t_kernel: f64, seed: u64) -> SimRun {
+    let mut rng = Rng::new(seed);
+    let steps = w.tasks_per_rank().max(1);
+    let kernels_per_task = w.kernels_per_rank / steps;
+    let mut bd = Breakdown::default();
+    let mut makespan = 0.0;
+    for s in 0..steps {
+        let jsrun = m.jsrun(ranks);
+        let alloc = m.alloc;
+        let mut slowest = 0.0f64;
+        let mut total = 0.0;
+        for r in 0..ranks {
+            let mut rr = rng.split(s << 32 | r as u64);
+            let t = rank_compute_abs(&mut rr, m, t_kernel, kernels_per_task);
+            slowest = slowest.max(t);
+            total += t;
+        }
+        makespan += jsrun + alloc + slowest;
+        // jsrun+alloc stall the entire allocation (cannot overlap; paper)
+        bd.jsrun += jsrun * ranks as f64;
+        bd.alloc += alloc * ranks as f64;
+        bd.compute += total;
+        bd.sync += slowest * ranks as f64 - total;
+    }
+    SimRun { makespan, breakdown: bd }
+}
+
+/// Which scheduler a sim run models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tool {
+    Pmake,
+    Dwork,
+    MpiList,
+}
+
+impl Tool {
+    pub const ALL: [Tool; 3] = [Tool::Pmake, Tool::Dwork, Tool::MpiList];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tool::Pmake => "pmake",
+            Tool::Dwork => "dwork",
+            Tool::MpiList => "mpi-list",
+        }
+    }
+
+    pub fn simulate(
+        &self,
+        m: &CostModel,
+        w: &Workload,
+        ranks: usize,
+        t_kernel: f64,
+        seed: u64,
+    ) -> SimRun {
+        match self {
+            Tool::Pmake => sim_pmake(m, w, ranks, t_kernel, seed),
+            Tool::Dwork => sim_dwork(m, w, ranks, t_kernel, seed),
+            Tool::MpiList => sim_mpilist(m, w, ranks, t_kernel, seed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metg::metg_from_curve;
+
+    fn model() -> CostModel {
+        CostModel::paper()
+    }
+
+    #[test]
+    fn mpilist_efficiency_approaches_one_for_big_tasks() {
+        let m = model();
+        let w = Workload::paper();
+        let run = sim_mpilist(&m, &w, 864, 1.0, 1);
+        let eff = run.efficiency(&w, 1.0);
+        assert!(eff > 0.9, "eff={eff}");
+        let run = sim_mpilist(&m, &w, 864, 1e-6, 1);
+        let eff = run.efficiency(&w, 1e-6);
+        assert!(eff < 0.5, "eff={eff} should be sync-dominated");
+    }
+
+    #[test]
+    fn dwork_server_serializes_at_tiny_tasks() {
+        let m = model();
+        let w = Workload::paper();
+        // zero-work kernels: makespan ~= total tasks * rtt (paper: "the
+        // server is the bottleneck, and the time equals the total number
+        // of tasks assigned times the round-trip time")
+        let ranks = 64;
+        let run = sim_dwork(&m, &w, ranks, 0.0, 1);
+        let total_tasks = (w.tasks_per_rank() * ranks as u64) as f64;
+        let expect = total_tasks * m.steal_rtt;
+        assert!(
+            (run.makespan - expect).abs() / expect < 0.1,
+            "makespan={} expect={}",
+            run.makespan,
+            expect
+        );
+    }
+
+    #[test]
+    fn dwork_overlap_hides_rtt_for_big_tasks() {
+        let m = model();
+        let w = Workload::paper();
+        let run = sim_dwork(&m, &w, 864, 0.01, 1);
+        let eff = run.efficiency(&w, 0.01);
+        assert!(eff > 0.8, "eff={eff}");
+    }
+
+    #[test]
+    fn pmake_dominated_by_launch_for_small_tasks() {
+        let m = model();
+        let w = Workload::paper();
+        let run = sim_pmake(&m, &w, 864, 1e-4, 1);
+        let bd = run.breakdown;
+        assert!(bd.jsrun + bd.alloc > bd.compute, "launch must dominate: {bd:?}");
+        // 4 steps of (jsrun + alloc) ~= 4 * (2.34 + 1.81) ~= 16.6s floor
+        assert!(run.makespan > 16.0, "makespan={}", run.makespan);
+    }
+
+    #[test]
+    fn headline_metg_ordering_at_864() {
+        // paper sec. 4: METG at 864 ranks = 0.3ms / 25ms / 4500ms
+        let m = model();
+        let w = Workload::paper();
+        let grid: Vec<f64> = (-7..=2)
+            .flat_map(|e| [1.0, 2.0, 5.0].map(|m| m * 10f64.powi(e)))
+            .collect();
+        let mut metgs = Vec::new();
+        for tool in Tool::ALL {
+            let pts: Vec<EffPoint> = grid
+                .iter()
+                .map(|&t| tool.simulate(&m, &w, 864, t, 42).eff_point(&w, t))
+                .collect();
+            let iters = match tool {
+                Tool::MpiList => 1, // per-kernel tasks
+                _ => w.iters_per_task,
+            };
+            metgs.push((tool, metg_from_curve(&pts, iters).expect("curve must cross 0.5")));
+        }
+        let get = |t: Tool| metgs.iter().find(|(tt, _)| *tt == t).unwrap().1;
+        let (ml, dw, pm) = (get(Tool::MpiList), get(Tool::Dwork), get(Tool::Pmake));
+        // orders of magnitude must match the paper
+        assert!(ml < 2e-3, "mpi-list METG {ml}s vs paper 0.3ms");
+        assert!((5e-3..0.2).contains(&dw), "dwork METG {dw}s vs paper 25ms");
+        assert!((1.0..20.0).contains(&pm), "pmake METG {pm}s vs paper 4.5s");
+        assert!(ml < dw && dw < pm);
+    }
+
+    #[test]
+    fn dwork_metg_scales_linearly_with_ranks() {
+        let m = model();
+        let w = Workload::paper();
+        // at fixed small t_kernel, efficiency degrades ~linearly in ranks
+        let e1 = sim_dwork(&m, &w, 100, 1e-5, 7).efficiency(&w, 1e-5);
+        let e2 = sim_dwork(&m, &w, 800, 1e-5, 7).efficiency(&w, 1e-5);
+        assert!(e1 > e2 * 2.0, "e1={e1} e2={e2}");
+    }
+
+    #[test]
+    fn breakdowns_account_for_total_time() {
+        let m = model();
+        let w = Workload::paper();
+        for tool in Tool::ALL {
+            let run = tool.simulate(&m, &w, 60, 0.001, 3);
+            let bd = run.breakdown;
+            let aggregate = 60.0 * run.makespan;
+            // breakdown components must not exceed aggregate rank-time and
+            // must cover most of it (pmake's jsrun/alloc stall all ranks)
+            assert!(
+                bd.total() <= aggregate * 1.01,
+                "{}: breakdown {} > aggregate {}",
+                tool.name(),
+                bd.total(),
+                aggregate
+            );
+            assert!(
+                bd.total() >= aggregate * 0.5,
+                "{}: breakdown {} misses most of aggregate {}",
+                tool.name(),
+                bd.total(),
+                aggregate
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let m = model();
+        let w = Workload::paper();
+        for tool in Tool::ALL {
+            let a = tool.simulate(&m, &w, 60, 0.01, 9);
+            let b = tool.simulate(&m, &w, 60, 0.01, 9);
+            assert_eq!(a.makespan, b.makespan, "{}", tool.name());
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! The request path is pure Rust: `python -m compile.aot` ran once at
+//! build time and wrote `artifacts/*.hlo.txt` + `manifest.tsv`; here we
+//! compile each module on the PJRT CPU client the first time it is used
+//! and cache the executable.
+//!
+//! Threading: the `xla` crate's `PjRtClient` is `Rc`-based (not `Send`),
+//! so [`service::RuntimeService`] runs the client on a dedicated thread
+//! and hands out cheap clonable [`service::RuntimeHandle`]s — the same
+//! shape as the paper's "1 MPI rank per GPU" device queue, with the
+//! service thread playing the device.
+
+pub mod registry;
+pub mod service;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use registry::{ArtifactSpec, Dtype, Manifest};
+
+/// Typed host buffer crossing the runtime boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostBuf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostBuf {
+    pub fn len(&self) -> usize {
+        match self {
+            HostBuf::F32(v) => v.len(),
+            HostBuf::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostBuf::F32(v) => Ok(v),
+            _ => bail!("expected f32 buffer"),
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostBuf::F32(_) => Dtype::F32,
+            HostBuf::I32(_) => Dtype::I32,
+        }
+    }
+}
+
+/// The single-threaded runtime: PJRT client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    root: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// executions per artifact (perf accounting)
+    pub exec_counts: HashMap<String, u64>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain manifest.tsv).
+    pub fn open(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.tsv"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            root: artifacts_dir.to_path_buf(),
+            cache: HashMap::new(),
+            exec_counts: HashMap::new(),
+        })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn open_default() -> Result<Self> {
+        Runtime::open(&default_artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?} (run `make artifacts`?)"))
+    }
+
+    /// Compile (once) and return the cached executable.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let spec = self.spec(name)?.clone();
+            let path = self.root.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute `name` on host buffers; returns the output buffers.
+    ///
+    /// Input buffers are validated against the manifest (arity, dtype,
+    /// element count) before they touch PJRT, so shape bugs surface as
+    /// clean errors rather than C++ aborts.
+    pub fn execute(&mut self, name: &str, inputs: &[HostBuf]) -> Result<Vec<HostBuf>> {
+        let spec = self.spec(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (buf, shape)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if buf.dtype() != shape.dtype {
+                bail!("{name}: input {i} dtype mismatch ({:?} vs {:?})", buf.dtype(), shape.dtype);
+            }
+            if buf.len() != shape.elems() {
+                bail!(
+                    "{name}: input {i} has {} elements, shape {} wants {}",
+                    buf.len(),
+                    shape,
+                    shape.elems()
+                );
+            }
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, shape) in inputs.iter().zip(&spec.inputs) {
+            let dims: Vec<i64> = shape.dims.iter().map(|&d| d as i64).collect();
+            let lit = match buf {
+                HostBuf::F32(v) => xla::Literal::vec1(v),
+                HostBuf::I32(v) => xla::Literal::vec1(v),
+            };
+            let lit = lit
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshaping input for {name}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let mut out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unpack the result tuple
+        let n_outs = spec.outputs.len();
+        let mut elements = out_lit
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decomposing result tuple of {name}: {e:?}"))?;
+        if elements.len() != n_outs {
+            bail!("{name}: manifest promises {} outputs, tuple has {}", n_outs, elements.len());
+        }
+        let mut outs = Vec::with_capacity(n_outs);
+        for (lit, shape) in elements.iter_mut().zip(&spec.outputs) {
+            let buf = match shape.dtype {
+                Dtype::F32 => HostBuf::F32(
+                    lit.to_vec::<f32>()
+                        .map_err(|e| anyhow!("reading f32 output of {name}: {e:?}"))?,
+                ),
+                Dtype::I32 => HostBuf::I32(
+                    lit.to_vec::<i32>()
+                        .map_err(|e| anyhow!("reading i32 output of {name}: {e:?}"))?,
+                ),
+            };
+            outs.push(buf);
+        }
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        Ok(outs)
+    }
+}
+
+/// Locate `artifacts/` by walking up from the current directory (so tests,
+/// benches and examples work from any workspace subdirectory).
+pub fn default_artifacts_dir() -> PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.tsv").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// Deterministic pseudo-random f32 test data in [-1, 1) — the workload
+/// generator's matrix filler (cheap, reproducible across runs).
+pub fn fill_f32(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = crate::substrate::rng::Rng::new(seed);
+    (0..n).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect()
+}
+
+/// Reference AᵀB on the host — the Rust-side oracle used by the runtime
+/// integration tests (independent of the Python oracle).
+pub fn host_atb(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), k * m);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0f32; m * n];
+    for kk in 0..k {
+        for i in 0..m {
+            let av = a[kk * m + i];
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out[i * n + j] += av * b[kk * n + j];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_deterministic() {
+        assert_eq!(fill_f32(16, 7), fill_f32(16, 7));
+        assert_ne!(fill_f32(16, 7), fill_f32(16, 8));
+        assert!(fill_f32(1000, 1).iter().all(|x| (-1.0..1.0).contains(x)));
+    }
+
+    #[test]
+    fn host_atb_identity() {
+        // a = I(2), b arbitrary: aᵀb = b
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        assert_eq!(host_atb(&a, &b, 2, 2, 2), b);
+    }
+
+    #[test]
+    fn host_atb_known() {
+        // a (k=2, m=2) = [[1,2],[3,4]], b (k=2,n=1) = [[10],[20]]
+        // aᵀb = [[1*10+3*20],[2*10+4*20]] = [[70],[100]]
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![10.0, 20.0];
+        assert_eq!(host_atb(&a, &b, 2, 2, 1), vec![70.0, 100.0]);
+    }
+
+    #[test]
+    fn hostbuf_validation() {
+        let b = HostBuf::F32(vec![1.0, 2.0]);
+        assert_eq!(b.len(), 2);
+        assert!(b.as_f32().is_ok());
+        assert_eq!(b.dtype(), Dtype::F32);
+        let i = HostBuf::I32(vec![1]);
+        assert!(i.as_f32().is_err());
+    }
+}

@@ -1,0 +1,223 @@
+//! Artifact registry: parse `artifacts/manifest.tsv` written by aot.py.
+//!
+//! Format (one artifact per line):
+//!
+//! ```text
+//! name <TAB> file <TAB> in0;in1;... <TAB> out0;... <TAB> flops
+//! ```
+//!
+//! with shapes spelled like `f32[256,256]`.  Python is the single source
+//! of truth for shapes; Rust discovers them here.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Element types our artifacts use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::I32 => "i32",
+        }
+    }
+}
+
+/// A typed shape, e.g. f32[256,256].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shape {
+    pub dtype: Dtype,
+    pub dims: Vec<usize>,
+}
+
+impl Shape {
+    pub fn parse(s: &str) -> Result<Shape> {
+        let open = s.find('[').ok_or_else(|| anyhow!("shape {s:?} missing '['"))?;
+        if !s.ends_with(']') {
+            bail!("shape {s:?} missing ']'");
+        }
+        let dtype = Dtype::parse(&s[..open])?;
+        let body = &s[open + 1..s.len() - 1];
+        let dims = if body.is_empty() {
+            vec![]
+        } else {
+            body.split(',')
+                .map(|d| d.trim().parse::<usize>().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(Shape { dtype, dims })
+    }
+
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[", self.dtype.name())?;
+        for (i, d) in self.dims.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// One artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<Shape>,
+    pub outputs: Vec<Shape>,
+    /// useful FLOPs per execution (Fig 4's efficiency numerator)
+    pub flops: f64,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    specs: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut specs = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 5 {
+                bail!("manifest line {}: expected 5 columns, got {}", lineno + 1, cols.len());
+            }
+            let parse_shapes = |s: &str| -> Result<Vec<Shape>> {
+                if s.is_empty() {
+                    return Ok(vec![]);
+                }
+                s.split(';').map(Shape::parse).collect()
+            };
+            let spec = ArtifactSpec {
+                name: cols[0].to_string(),
+                file: cols[1].to_string(),
+                inputs: parse_shapes(cols[2])?,
+                outputs: parse_shapes(cols[3])?,
+                flops: cols[4].parse().context("bad flops column")?,
+            };
+            specs.insert(spec.name.clone(), spec);
+        }
+        Ok(Manifest { specs })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.specs.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// The atb tile sizes present (for sweeps), ascending.
+    pub fn atb_tile_sizes(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .specs
+            .keys()
+            .filter_map(|k| k.strip_prefix("atb_")?.parse::<usize>().ok())
+            .collect();
+        out.sort_unstable();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_parse_roundtrip() {
+        let s = Shape::parse("f32[256,256]").unwrap();
+        assert_eq!(s.dtype, Dtype::F32);
+        assert_eq!(s.dims, vec![256, 256]);
+        assert_eq!(s.elems(), 65536);
+        assert_eq!(s.to_string(), "f32[256,256]");
+        let s = Shape::parse("i32[1]").unwrap();
+        assert_eq!(s.dtype, Dtype::I32);
+        let s = Shape::parse("f32[]").unwrap();
+        assert_eq!(s.elems(), 1); // scalar: empty product = 1
+    }
+
+    #[test]
+    fn shape_parse_errors() {
+        assert!(Shape::parse("f32").is_err());
+        assert!(Shape::parse("f64[2]").is_err());
+        assert!(Shape::parse("f32[a]").is_err());
+        assert!(Shape::parse("f32[2").is_err());
+    }
+
+    #[test]
+    fn manifest_parse() {
+        let text = "atb_64\tatb_64.hlo.txt\tf32[64,64];f32[64,64]\tf32[64,64]\t524288\n\
+                    atb_128\tatb_128.hlo.txt\tf32[128,128];f32[128,128]\tf32[128,128]\t4194304\n";
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.len(), 2);
+        let s = m.get("atb_64").unwrap();
+        assert_eq!(s.inputs.len(), 2);
+        assert_eq!(s.outputs.len(), 1);
+        assert_eq!(s.flops, 2.0 * 64.0 * 64.0 * 64.0);
+        assert_eq!(m.atb_tile_sizes(), vec![64, 128]);
+    }
+
+    #[test]
+    fn manifest_bad_columns() {
+        assert!(Manifest::parse("only\tthree\tcolumns\n").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        let dir = crate::runtime::default_artifacts_dir();
+        let path = dir.join("manifest.tsv");
+        if !path.exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&path).unwrap();
+        assert!(m.get("atb_256").is_some());
+        assert!(m.atb_tile_sizes().contains(&512));
+        for name in m.names() {
+            let s = m.get(name).unwrap();
+            assert!(dir.join(&s.file).exists(), "missing {}", s.file);
+        }
+    }
+}

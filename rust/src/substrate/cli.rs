@@ -1,0 +1,170 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! positional arguments, and generated usage text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Declarative flag spec.
+#[derive(Clone, Debug)]
+pub struct Flag {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+}
+
+/// Parse `argv` against a flag spec.  Unknown flags are an error.
+pub fn parse(argv: &[String], spec: &[Flag]) -> Result<Args> {
+    let mut out = Args::default();
+    for f in spec {
+        if let (true, Some(d)) = (f.takes_value, f.default) {
+            out.flags.insert(f.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(body) = a.strip_prefix("--") {
+            let (name, inline) = match body.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (body, None),
+            };
+            let Some(f) = spec.iter().find(|f| f.name == name) else {
+                bail!("unknown flag --{name}\n{}", usage(spec));
+            };
+            if f.takes_value {
+                let v = match inline {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        if i >= argv.len() {
+                            bail!("--{name} expects a value");
+                        }
+                        argv[i].clone()
+                    }
+                };
+                out.flags.insert(name.to_string(), v);
+            } else {
+                if inline.is_some() {
+                    bail!("--{name} is a switch and takes no value");
+                }
+                out.switches.push(name.to_string());
+            }
+        } else {
+            out.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(out)
+}
+
+/// Render usage text for a flag spec.
+pub fn usage(spec: &[Flag]) -> String {
+    let mut s = String::from("flags:\n");
+    for f in spec {
+        let val = if f.takes_value { " <value>" } else { "" };
+        let def = f
+            .default
+            .map(|d| format!(" (default: {d})"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{}{val}\t{}{def}\n", f.name, f.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<Flag> {
+        vec![
+            Flag { name: "ranks", help: "rank count", takes_value: true, default: Some("6") },
+            Flag { name: "bind", help: "listen addr", takes_value: true, default: None },
+            Flag { name: "verbose", help: "chatty", takes_value: false, default: None },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_override() {
+        let a = parse(&sv(&[]), &spec()).unwrap();
+        assert_eq!(a.get("ranks"), Some("6"));
+        let a = parse(&sv(&["--ranks", "864"]), &spec()).unwrap();
+        assert_eq!(a.get_usize("ranks", 0).unwrap(), 864);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&sv(&["--ranks=60"]), &spec()).unwrap();
+        assert_eq!(a.get("ranks"), Some("60"));
+    }
+
+    #[test]
+    fn switch_and_positional() {
+        let a = parse(&sv(&["--verbose", "target1", "target2"]), &spec()).unwrap();
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["target1", "target2"]);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(parse(&sv(&["--nope"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&sv(&["--bind"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn bad_int_errors() {
+        let a = parse(&sv(&["--ranks", "abc"]), &spec()).unwrap();
+        assert!(a.get_usize("ranks", 0).is_err());
+    }
+}

@@ -1,0 +1,233 @@
+//! Calibrated cost models: the paper's Table 4 in closed form.
+//!
+//! Table 4 (all values in seconds, µ = 1e-6):
+//!
+//! | ranks | jsrun | alloc | steal/complete | sync per 1024 | py alloc | py imports | dwork conn |
+//! |-------|-------|-------|----------------|----------------|----------|------------|------------|
+//! | 6     | 0.987 | 1.81  | 23µ            | 0.09           | 2.23     | 1.05       | 1.54       |
+//! | 60    | 1.783 | 1.81  | 23µ            | 0.17           | 2.23     | 0.55       | –          |
+//! | 864   | 2.336 | 1.81  | 23µ            | 0.33           | 2.23     | 2.82       | 2.74       |
+//! | 6912  | 3.823 | 1.81  | 23µ            | 0.47           | 2.23     | 26.65      | 13.32      |
+//!
+//! Functional forms (paper sec. 4–6): jsrun grows ~log(ranks); alloc and
+//! the per-task server latency are constant; mpi-list sync follows
+//! extreme-value (Gumbel) max statistics (~log ranks); python imports and
+//! dwork connection setup grow ~linearly (startup I/O / TCP contention).
+
+use crate::substrate::stats::linfit;
+
+/// Table 4 raw anchors, used for calibration and by the table4 bench.
+pub const TABLE4_RANKS: [usize; 4] = [6, 60, 864, 6912];
+pub const TABLE4_JSRUN: [f64; 4] = [0.987, 1.783, 2.336, 3.823];
+pub const TABLE4_ALLOC: f64 = 1.81;
+pub const TABLE4_STEAL_RTT: f64 = 23e-6;
+pub const TABLE4_SYNC_1024: [f64; 4] = [0.09, 0.17, 0.33, 0.47];
+pub const TABLE4_PY_ALLOC: f64 = 2.23;
+pub const TABLE4_PY_IMPORTS: [f64; 4] = [1.05, 0.55, 2.82, 26.65];
+// 60-rank connection entry is missing in the paper ("-"); interpolate.
+pub const TABLE4_DWORK_CONN: [(usize, f64); 3] = [(6, 1.54), (864, 2.74), (6912, 13.32)];
+
+/// Calibrated cost model bundle.  All times in seconds.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// jsrun(P) = jsrun_a + jsrun_b * log2(P)
+    pub jsrun_a: f64,
+    pub jsrun_b: f64,
+    /// constant per-job-step allocation (GPU memory init etc.)
+    pub alloc: f64,
+    /// dwork steal+complete round-trip per task (server side serialized)
+    pub steal_rtt: f64,
+    /// mpi-list per-kernel Gumbel noise scale: sync(P, n_tasks) below
+    pub gumbel_beta_per_task: f64,
+    /// python interpreter + GPU library startup (constant)
+    pub py_alloc: f64,
+    /// python imports(P) = imp_a + imp_b * P  (startup I/O contention)
+    pub imp_a: f64,
+    pub imp_b: f64,
+    /// dwork connection setup(P) = conn_a + conn_b * P
+    pub conn_a: f64,
+    pub conn_b: f64,
+}
+
+impl CostModel {
+    /// Calibrate every component against the Table 4 anchors.
+    pub fn paper() -> CostModel {
+        let log_ranks: Vec<f64> = TABLE4_RANKS.iter().map(|&r| (r as f64).log2()).collect();
+        let (jsrun_a, jsrun_b) = linfit(&log_ranks, &TABLE4_JSRUN);
+
+        // sync per 1024 tasks at P ranks ~ 1024 tasks * beta * ln(P) growth
+        // of the expected max; fit beta against ln(P).
+        let ln_ranks: Vec<f64> = TABLE4_RANKS.iter().map(|&r| (r as f64).ln()).collect();
+        let (_, sync_slope) = linfit(&ln_ranks, &TABLE4_SYNC_1024);
+        let gumbel_beta_per_task = sync_slope / 1024.0;
+
+        let ranks_f: Vec<f64> = TABLE4_RANKS.iter().map(|&r| r as f64).collect();
+        let (imp_a, imp_b) = linfit(&ranks_f, &TABLE4_PY_IMPORTS);
+
+        let conn_x: Vec<f64> = TABLE4_DWORK_CONN.iter().map(|&(r, _)| r as f64).collect();
+        let conn_y: Vec<f64> = TABLE4_DWORK_CONN.iter().map(|&(_, t)| t).collect();
+        let (conn_a, conn_b) = linfit(&conn_x, &conn_y);
+
+        CostModel {
+            jsrun_a,
+            jsrun_b,
+            alloc: TABLE4_ALLOC,
+            steal_rtt: TABLE4_STEAL_RTT,
+            gumbel_beta_per_task,
+            py_alloc: TABLE4_PY_ALLOC,
+            imp_a,
+            imp_b,
+            conn_a,
+            conn_b,
+        }
+    }
+
+    /// Same model but with a *measured* steal/complete RTT (ours, from the
+    /// micro bench) instead of the paper's 23 µs.
+    pub fn with_measured_rtt(mut self, rtt_s: f64) -> CostModel {
+        self.steal_rtt = rtt_s;
+        self
+    }
+
+    /// Job-step launch time at P ranks.
+    pub fn jsrun(&self, ranks: usize) -> f64 {
+        self.jsrun_a + self.jsrun_b * (ranks.max(1) as f64).log2()
+    }
+
+    /// Expected straggler spread (slowest − fastest) for `tasks_per_rank`
+    /// kernels across P ranks: extreme-value spread of P sums.
+    ///
+    /// The expected max of P Gumbel draws exceeds the expected min by
+    /// ~2·beta·(ln P + γ); with `n` kernels per rank the per-rank totals
+    /// are approximately Gumbel with scale beta·n (heavy-tail dominance),
+    /// which reproduces Table 4's slow growth in both P and n.
+    pub fn sync_spread(&self, ranks: usize, tasks_per_rank: u64) -> f64 {
+        if ranks <= 1 {
+            return 0.0;
+        }
+        let beta_total = self.gumbel_beta_per_task * tasks_per_rank as f64;
+        beta_total * (ranks as f64).ln()
+    }
+
+    /// Python import time at P ranks.
+    pub fn py_imports(&self, ranks: usize) -> f64 {
+        self.imp_a + self.imp_b * ranks as f64
+    }
+
+    /// dwork connection establishment at P ranks.
+    pub fn dwork_conn(&self, ranks: usize) -> f64 {
+        self.conn_a + self.conn_b * ranks as f64
+    }
+
+    // ----------------------------------------------------------------
+    // Closed-form METG laws (paper sec. 6) — the DES reproduces these by
+    // construction; the benches verify it does.
+    // ----------------------------------------------------------------
+
+    /// pmake METG: job startup cost (launch + alloc) per task.
+    pub fn metg_pmake(&self, ranks: usize) -> f64 {
+        self.jsrun(ranks) + self.alloc
+    }
+
+    /// dwork METG: per-task server latency × number of concurrent workers.
+    pub fn metg_dwork(&self, ranks: usize) -> f64 {
+        self.steal_rtt * ranks as f64
+    }
+
+    /// mpi-list METG: straggler spread per task.
+    pub fn metg_mpilist(&self, ranks: usize, tasks_per_rank: u64) -> f64 {
+        self.sync_spread(ranks, tasks_per_rank) / tasks_per_rank as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsrun_matches_anchors() {
+        let m = CostModel::paper();
+        for (&r, &t) in TABLE4_RANKS.iter().zip(&TABLE4_JSRUN) {
+            let pred = m.jsrun(r);
+            assert!(
+                (pred - t).abs() / t < 0.25,
+                "jsrun({r}) = {pred:.3}, paper {t:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn jsrun_monotone_in_ranks() {
+        let m = CostModel::paper();
+        assert!(m.jsrun(6) < m.jsrun(60));
+        assert!(m.jsrun(60) < m.jsrun(6912));
+    }
+
+    #[test]
+    fn sync_spread_matches_anchors() {
+        let m = CostModel::paper();
+        for (&r, &t) in TABLE4_RANKS.iter().zip(&TABLE4_SYNC_1024) {
+            if r == 6 {
+                continue; // smallest anchor dominated by the intercept
+            }
+            let pred = m.sync_spread(r, 1024);
+            assert!(
+                (pred - t).abs() / t < 0.5,
+                "sync({r}) = {pred:.3}, paper {t:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn headline_metg_at_864_ranks() {
+        // paper sec. 4: "Based on the performance at 846 [sic] ranks, the
+        // METG for mpi-list, dwork and pmake are 0.3, 25, and 4500 ms"
+        let m = CostModel::paper();
+        let mpilist = m.metg_mpilist(864, 1024) * 1e3;
+        let dwork = m.metg_dwork(864) * 1e3;
+        let pmake = m.metg_pmake(864) * 1e3;
+        assert!((0.1..1.0).contains(&mpilist), "mpi-list METG {mpilist:.2} ms, paper ~0.3");
+        assert!((15.0..35.0).contains(&dwork), "dwork METG {dwork:.2} ms, paper ~25");
+        assert!((3000.0..6000.0).contains(&pmake), "pmake METG {pmake:.0} ms, paper ~4500");
+    }
+
+    #[test]
+    fn metg_ordering_holds_at_all_scales() {
+        let m = CostModel::paper();
+        for r in [60, 864, 6912] {
+            // paper ordering: mpi-list < dwork < pmake at every tested scale
+            assert!(m.metg_mpilist(r, 1024) < m.metg_dwork(r), "ranks={r}");
+            assert!(m.metg_dwork(r) < m.metg_pmake(r), "ranks={r}");
+        }
+    }
+
+    #[test]
+    fn dwork_metg_linear_in_ranks() {
+        let m = CostModel::paper();
+        let a = m.metg_dwork(100);
+        let b = m.metg_dwork(200);
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dwork_dispatch_rate() {
+        // paper sec. 5: 23 µs latency => ~44,000 tasks/s
+        let m = CostModel::paper();
+        let rate = 1.0 / m.steal_rtt;
+        assert!((rate - 43_478.0).abs() < 1000.0, "rate={rate}");
+    }
+
+    #[test]
+    fn startup_models_track_anchors() {
+        let m = CostModel::paper();
+        // imports at 6912 dominated by the linear term
+        assert!((m.py_imports(6912) - 26.65).abs() < 3.0);
+        assert!((m.dwork_conn(6912) - 13.32).abs() < 2.0);
+    }
+
+    #[test]
+    fn measured_rtt_override() {
+        let m = CostModel::paper().with_measured_rtt(10e-6);
+        assert!((m.metg_dwork(1000) - 0.01).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,166 @@
+//! Summit cluster model: topology + calibrated cost models.
+//!
+//! The paper's testbed is OLCF Summit: 4608 nodes, each with 2 Power9
+//! sockets × 21 usable cores and 6 V100 GPUs, grouped 18 nodes to a rack
+//! (the dwork forwarding tree is one leader per rack).  None of that
+//! hardware is available here, so this module carries (a) the topology
+//! arithmetic and (b) the cost models calibrated against the paper's own
+//! measurements (Table 4), which the discrete-event simulator uses to run
+//! the schedulers at paper scale.
+
+pub mod costs;
+
+/// Summit-like machine description.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Machine {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub cores_per_node: usize,
+    pub nodes_per_rack: usize,
+    /// Single-precision peak per GPU, in GFLOP/s (paper: ~14 TF/s V100).
+    pub gpu_peak_gflops: f64,
+}
+
+impl Machine {
+    /// The paper's testbed (sec. 3): Summit numbers.
+    pub fn summit(nodes: usize) -> Machine {
+        Machine {
+            nodes,
+            gpus_per_node: 6,
+            cores_per_node: 42,
+            nodes_per_rack: 18,
+            gpu_peak_gflops: 14_000.0,
+        }
+    }
+
+    /// One MPI rank per GPU — the paper's run configuration.
+    pub fn ranks(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    pub fn racks(&self) -> usize {
+        self.nodes.div_ceil(self.nodes_per_rack)
+    }
+
+    /// Which rack a node lives in.
+    pub fn rack_of_node(&self, node: usize) -> usize {
+        node / self.nodes_per_rack
+    }
+
+    /// Which node a rank lives on (dense rank→node mapping).
+    pub fn node_of_rank(&self, rank: usize) -> usize {
+        rank / self.gpus_per_node
+    }
+
+    pub fn rack_of_rank(&self, rank: usize) -> usize {
+        self.rack_of_node(self.node_of_rank(rank))
+    }
+
+    /// Machine size for a given rank count (inverse of `ranks`).
+    pub fn for_ranks(ranks: usize) -> Machine {
+        Machine::summit(ranks.div_ceil(6))
+    }
+}
+
+/// A resource set: pmake's unit of allocation (Fig 1a `resources:`).
+/// Divides allocated nodes into equally-sized pieces, each with a fixed
+/// number of CPUs and GPUs, plus a time estimate used for prioritisation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ResourceSet {
+    /// wall-time estimate, minutes (paper: `time:`)
+    pub time_min: f64,
+    /// number of resource sets (paper: `nrs:`)
+    pub nrs: usize,
+    /// CPU cores per resource set
+    pub cpu: usize,
+    /// GPUs per resource set
+    pub gpu: usize,
+    /// MPI ranks per resource set (paper: `ranks = R`, default 1)
+    pub ranks_per_rs: usize,
+}
+
+impl Default for ResourceSet {
+    fn default() -> Self {
+        ResourceSet { time_min: 10.0, nrs: 1, cpu: 1, gpu: 0, ranks_per_rs: 1 }
+    }
+}
+
+impl ResourceSet {
+    /// Nodes this resource set consumes on the given machine: each node
+    /// offers `cores_per_node` CPUs and `gpus_per_node` GPUs; resource
+    /// sets never split across nodes (jsrun semantics).
+    pub fn nodes_needed(&self, m: &Machine) -> usize {
+        let per_node_by_cpu = if self.cpu == 0 { usize::MAX } else { m.cores_per_node / self.cpu };
+        let per_node_by_gpu = if self.gpu == 0 { usize::MAX } else { m.gpus_per_node / self.gpu };
+        let rs_per_node = per_node_by_cpu.min(per_node_by_gpu).max(1);
+        self.nrs.div_ceil(rs_per_node)
+    }
+
+    /// Total MPI ranks launched.
+    pub fn total_ranks(&self) -> usize {
+        self.nrs * self.ranks_per_rs
+    }
+
+    /// node-hours consumed — pmake's priority currency.
+    pub fn node_hours(&self, m: &Machine) -> f64 {
+        self.nodes_needed(m) as f64 * self.time_min / 60.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summit_shape() {
+        let m = Machine::summit(1152);
+        assert_eq!(m.ranks(), 6912); // the paper's largest run
+        assert_eq!(m.racks(), 64);
+        assert_eq!(Machine::summit(144).ranks(), 864);
+        assert_eq!(Machine::summit(1).ranks(), 6);
+    }
+
+    #[test]
+    fn rank_topology() {
+        let m = Machine::summit(36);
+        assert_eq!(m.node_of_rank(0), 0);
+        assert_eq!(m.node_of_rank(5), 0);
+        assert_eq!(m.node_of_rank(6), 1);
+        assert_eq!(m.rack_of_rank(0), 0);
+        assert_eq!(m.rack_of_rank(18 * 6), 1); // first rank of node 18
+    }
+
+    #[test]
+    fn for_ranks_inverse() {
+        for r in [6, 60, 864, 6912] {
+            assert_eq!(Machine::for_ranks(r).ranks(), r);
+        }
+    }
+
+    #[test]
+    fn resource_set_node_math() {
+        let m = Machine::summit(100);
+        // paper Fig 1a simulate rule: 10 resource sets of 42 cpu + 6 gpu
+        // = one full node each
+        let rs = ResourceSet { time_min: 120.0, nrs: 10, cpu: 42, gpu: 6, ranks_per_rs: 1 };
+        assert_eq!(rs.nodes_needed(&m), 10);
+        assert!((rs.node_hours(&m) - 20.0).abs() < 1e-12);
+        // analyze rule: 1 rs, 1 cpu -> fits 42 per node -> 1 node
+        let rs = ResourceSet { time_min: 10.0, nrs: 1, cpu: 1, gpu: 0, ranks_per_rs: 1 };
+        assert_eq!(rs.nodes_needed(&m), 1);
+    }
+
+    #[test]
+    fn resource_set_gpu_bound() {
+        let m = Machine::summit(4);
+        // 2 GPUs per rs -> 3 rs per node -> 7 rs needs 3 nodes
+        let rs = ResourceSet { time_min: 1.0, nrs: 7, cpu: 1, gpu: 2, ranks_per_rs: 1 };
+        assert_eq!(rs.nodes_needed(&m), 3);
+    }
+
+    #[test]
+    fn multi_rank_rs() {
+        let rs = ResourceSet { time_min: 1.0, nrs: 4, cpu: 7, gpu: 1, ranks_per_rs: 3 };
+        assert_eq!(rs.total_ranks(), 12);
+    }
+}

@@ -1,0 +1,375 @@
+//! MPI-like communicator: the mpi4py substitute under mpi-list.
+//!
+//! An in-process "MPI job": `N` ranks run as threads sharing a
+//! [`CommWorld`]; each rank holds a [`Comm`] handle with point-to-point
+//! send/recv and the collectives mpi-list needs (barrier, bcast, gather,
+//! reduce, allreduce, exscan, alltoallv).
+//!
+//! Messages are `Box<dyn Any>` so ranks exchange arbitrary owned Rust
+//! values — the moral equivalent of mpi4py shipping pickled Python
+//! objects, minus the serialization (same-address-space optimisation).
+//!
+//! Determinism: collectives are implemented over matched (source, tag)
+//! point-to-point messages.  Every rank executes the same sequence of
+//! collectives (bulk-synchronous SPMD, exactly mpi-list's model), so a
+//! per-rank operation counter woven into the tag keeps successive
+//! collectives from interfering without any global coordination.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::sync::{Arc, Barrier, Condvar, Mutex};
+
+type Payload = Box<dyn Any + Send>;
+
+/// One rank's incoming mailbox: unordered (src, tag) matching like MPI.
+#[derive(Default)]
+struct Mailbox {
+    queue: Mutex<VecDeque<(usize, u64, Payload)>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    fn put(&self, src: usize, tag: u64, msg: Payload) {
+        self.queue.lock().unwrap().push_back((src, tag, msg));
+        self.cv.notify_all();
+    }
+
+    fn take(&self, src: usize, tag: u64) -> Payload {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if let Some(i) = q.iter().position(|(s, t, _)| *s == src && *t == tag) {
+                return q.remove(i).unwrap().2;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+}
+
+/// Shared state of the "job": one mailbox per rank + a barrier.
+pub struct CommWorld {
+    boxes: Vec<Arc<Mailbox>>,
+    barrier: Arc<Barrier>,
+    size: usize,
+}
+
+impl CommWorld {
+    pub fn new(size: usize) -> Arc<Self> {
+        assert!(size > 0);
+        Arc::new(CommWorld {
+            boxes: (0..size).map(|_| Arc::new(Mailbox::default())).collect(),
+            barrier: Arc::new(Barrier::new(size)),
+            size,
+        })
+    }
+
+    /// The rank-`r` handle.  Each thread of the job takes exactly one.
+    pub fn comm(self: &Arc<Self>, rank: usize) -> Comm {
+        assert!(rank < self.size);
+        Comm { world: Arc::clone(self), rank, op_counter: 0 }
+    }
+
+    /// Convenience: run `f(comm)` on `size` scoped threads (one per rank)
+    /// and return the per-rank results in rank order.  This is the
+    /// `jsrun`/`mpirun` of the in-process world.
+    pub fn run<T: Send>(size: usize, f: impl Fn(Comm) -> T + Sync) -> Vec<T> {
+        let world = CommWorld::new(size);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..size)
+                .map(|r| {
+                    let comm = world.comm(r);
+                    let f = &f;
+                    s.spawn(move || f(comm))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("rank panicked"))
+                .collect()
+        })
+    }
+}
+
+/// Per-rank communicator handle.
+pub struct Comm {
+    world: Arc<CommWorld>,
+    rank: usize,
+    op_counter: u64,
+}
+
+const USER_TAG_BITS: u32 = 16;
+
+impl Comm {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.world.size
+    }
+
+    /// Point-to-point send (asynchronous, buffered — like MPI_Isend+wait
+    /// on a buffered channel).
+    pub fn send<T: Send + 'static>(&self, dest: usize, tag: u64, value: T) {
+        assert!(tag < (1 << USER_TAG_BITS), "user tag too large");
+        let full_tag = (self.op_counter << USER_TAG_BITS) | tag;
+        self.world.boxes[dest].put(self.rank, full_tag, Box::new(value));
+    }
+
+    /// Blocking matched receive.
+    pub fn recv<T: Send + 'static>(&self, src: usize, tag: u64) -> T {
+        let full_tag = (self.op_counter << USER_TAG_BITS) | tag;
+        let payload = self.world.boxes[self.rank].take(src, full_tag);
+        *payload
+            .downcast::<T>()
+            .expect("recv type mismatch: sender used a different T")
+    }
+
+    /// Advance the collective round.  Internal: every collective calls it
+    /// once on entry, keeping tags unique across successive collectives.
+    fn next_round(&mut self) -> u64 {
+        self.op_counter += 1;
+        self.op_counter
+    }
+
+    /// Global barrier.
+    pub fn barrier(&mut self) {
+        self.next_round();
+        self.world.barrier.wait();
+    }
+
+    /// Broadcast from `root` (binomial tree: log2 P rounds).
+    pub fn bcast<T: Clone + Send + 'static>(&mut self, root: usize, value: Option<T>) -> T {
+        self.next_round();
+        let p = self.size();
+        // virtual rank with root mapped to 0
+        let vrank = (self.rank + p - root) % p;
+        let mut have: Option<T> = if vrank == 0 {
+            Some(value.expect("root must supply the broadcast value"))
+        } else {
+            None
+        };
+        let rounds = p.next_power_of_two().trailing_zeros();
+        for r in 0..rounds {
+            let mask = 1usize << r;
+            if vrank < mask {
+                // sender this round
+                let peer = vrank | mask;
+                if peer < p {
+                    let dst = (peer + root) % p;
+                    self.send(dst, 1, have.clone().expect("sender lacks value"));
+                }
+            } else if vrank < mask << 1 {
+                let peer = vrank & !mask;
+                let src = (peer + root) % p;
+                have = Some(self.recv::<T>(src, 1));
+            }
+        }
+        have.expect("broadcast did not reach this rank")
+    }
+
+    /// Gather every rank's value to `root` (rank order). Non-roots get None.
+    pub fn gather<T: Send + 'static>(&mut self, root: usize, value: T) -> Option<Vec<T>> {
+        self.next_round();
+        if self.rank == root {
+            let mut out: Vec<Option<T>> = (0..self.size()).map(|_| None).collect();
+            out[root] = Some(value);
+            for src in 0..self.size() {
+                if src != root {
+                    out[src] = Some(self.recv::<T>(src, 2));
+                }
+            }
+            Some(out.into_iter().map(|o| o.unwrap()).collect())
+        } else {
+            self.send(root, 2, value);
+            None
+        }
+    }
+
+    /// Reduce to root with a binary fold in rank order.
+    pub fn reduce<T: Send + 'static>(
+        &mut self,
+        root: usize,
+        value: T,
+        op: impl Fn(T, T) -> T,
+    ) -> Option<T> {
+        self.gather(root, value)
+            .map(|vs| vs.into_iter().reduce(&op).expect("size >= 1"))
+    }
+
+    /// Allreduce = reduce to 0 + broadcast.
+    pub fn allreduce<T: Clone + Send + 'static>(&mut self, value: T, op: impl Fn(T, T) -> T) -> T {
+        let r = self.reduce(0, value, op);
+        self.bcast(0, r)
+    }
+
+    /// Exclusive prefix scan: rank r gets fold of ranks 0..r; rank 0 gets
+    /// `init`.  (mpi-list uses this for global list indexing.)
+    pub fn exscan<T: Clone + Send + 'static>(
+        &mut self,
+        value: T,
+        init: T,
+        op: impl Fn(T, T) -> T,
+    ) -> T {
+        self.next_round();
+        // linear chain: rank r receives prefix, forwards prefix+value
+        let prefix = if self.rank == 0 {
+            init
+        } else {
+            self.recv::<T>(self.rank - 1, 3)
+        };
+        if self.rank + 1 < self.size() {
+            let next = op(prefix.clone(), value);
+            self.send(self.rank + 1, 3, next);
+        }
+        prefix
+    }
+
+    /// All-to-all variable exchange: element `i` of `buckets` goes to rank
+    /// `i`; returns what every rank sent here, in source-rank order.
+    pub fn alltoallv<T: Send + 'static>(&mut self, mut buckets: Vec<Vec<T>>) -> Vec<Vec<T>> {
+        assert_eq!(buckets.len(), self.size());
+        self.next_round();
+        // self-delivery without the mailbox
+        let mut mine = Some(std::mem::take(&mut buckets[self.rank]));
+        for (dest, bucket) in buckets.into_iter().enumerate() {
+            if dest != self.rank {
+                self.send(dest, 4, bucket);
+            }
+        }
+        (0..self.size())
+            .map(|src| {
+                if src == self.rank {
+                    mine.take().expect("self bucket taken twice")
+                } else {
+                    self.recv::<Vec<T>>(src, 4)
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2p_basic() {
+        let out = CommWorld::run(2, |c| {
+            if c.rank() == 0 {
+                c.send(1, 0, 42u32);
+                0u32
+            } else {
+                c.recv::<u32>(0, 0)
+            }
+        });
+        assert_eq!(out[1], 42);
+    }
+
+    #[test]
+    fn p2p_matching_by_tag() {
+        let out = CommWorld::run(2, |c| {
+            if c.rank() == 0 {
+                c.send(1, 1, 10u32);
+                c.send(1, 2, 20u32);
+                (0, 0)
+            } else {
+                // receive in reverse tag order: matching must find tag 2
+                let b = c.recv::<u32>(0, 2);
+                let a = c.recv::<u32>(0, 1);
+                (a, b)
+            }
+        });
+        assert_eq!(out[1], (10, 20));
+    }
+
+    #[test]
+    fn bcast_various_roots_and_sizes() {
+        for p in [1, 2, 3, 5, 8] {
+            for root in [0, p - 1] {
+                let out = CommWorld::run(p, |mut c| {
+                    let v = if c.rank() == root { Some(1234u64) } else { None };
+                    c.bcast(root, v)
+                });
+                assert_eq!(out, vec![1234u64; p], "p={p} root={root}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_ordered() {
+        let out = CommWorld::run(5, |mut c| c.gather(0, c.rank() * 10));
+        assert_eq!(out[0].as_ref().unwrap(), &vec![0, 10, 20, 30, 40]);
+        assert!(out[1..].iter().all(|o| o.is_none()));
+    }
+
+    #[test]
+    fn reduce_sum() {
+        let out = CommWorld::run(7, |mut c| c.reduce(0, c.rank() as u64 + 1, |a, b| a + b));
+        assert_eq!(out[0], Some(28));
+    }
+
+    #[test]
+    fn allreduce_max() {
+        let out = CommWorld::run(6, |mut c| c.allreduce((c.rank() * 7 % 5) as u64, u64::max));
+        let want = (0..6).map(|r| (r * 7 % 5) as u64).max().unwrap();
+        assert_eq!(out, vec![want; 6]);
+    }
+
+    #[test]
+    fn exscan_prefix_sums() {
+        let out = CommWorld::run(5, |mut c| c.exscan(c.rank() as u64 + 1, 0, |a, b| a + b));
+        // rank r gets sum of (1..=r)
+        assert_eq!(out, vec![0, 1, 3, 6, 10]);
+    }
+
+    #[test]
+    fn alltoallv_transpose() {
+        let p = 4;
+        let out = CommWorld::run(p, |mut c| {
+            // rank r sends value r*10+d to rank d
+            let buckets: Vec<Vec<u32>> =
+                (0..p).map(|d| vec![(c.rank() * 10 + d) as u32]).collect();
+            c.alltoallv(buckets)
+        });
+        for (d, got) in out.iter().enumerate() {
+            let want: Vec<Vec<u32>> = (0..p).map(|s| vec![(s * 10 + d) as u32]).collect();
+            assert_eq!(got, &want, "dest rank {d}");
+        }
+    }
+
+    #[test]
+    fn alltoallv_self_delivery() {
+        let out = CommWorld::run(1, |mut c| c.alltoallv(vec![vec![1u8, 2, 3]]));
+        assert_eq!(out[0], vec![vec![1u8, 2, 3]]);
+    }
+
+    #[test]
+    fn successive_collectives_do_not_interfere() {
+        let out = CommWorld::run(4, |mut c| {
+            let a = c.allreduce(1u64, |x, y| x + y);
+            c.barrier();
+            let b = c.allreduce(2u64, |x, y| x + y);
+            let ex = c.exscan(1u64, 0, |x, y| x + y);
+            (a, b, ex)
+        });
+        for (r, (a, b, ex)) in out.iter().enumerate() {
+            assert_eq!(*a, 4);
+            assert_eq!(*b, 8);
+            assert_eq!(*ex, r as u64);
+        }
+    }
+
+    #[test]
+    fn barrier_delivers_all() {
+        // all ranks increment before barrier; after barrier each must see 'p'
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&counter);
+        let out = CommWorld::run(8, move |mut c| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            c.barrier();
+            c2.load(Ordering::SeqCst)
+        });
+        assert_eq!(out, vec![8; 8]);
+    }
+}

@@ -1,0 +1,374 @@
+//! KV store: the TKRZW substitute backing the dwork task database.
+//!
+//! The paper's dhub server stores its two task tables (join counters +
+//! successors; task metadata) in TKRZW and can save/restore them to file
+//! for persistent campaign state.  This store provides the same contract:
+//!
+//! * ordered in-memory map with get/set/remove/iterate-prefix,
+//! * an append-only write-ahead log so a crashed server replays to the
+//!   exact pre-crash state,
+//! * compact snapshots (`save`) + WAL truncation,
+//! * crash-safety: a torn final WAL record is detected (length + checksum)
+//!   and dropped rather than corrupting the recovered state.
+//!
+//! Latency of `set`/`get` here is one of the lower bounds on dwork's
+//! per-task cost the paper names in §5 ("hash-table entry read/write rates
+//! form lower bounds on the latency") — measured in `benches/micro.rs`.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+const OP_SET: u8 = 1;
+const OP_REMOVE: u8 = 2;
+const SNAP_MAGIC: &[u8; 8] = b"3SCHSNP1";
+const WAL_MAGIC: &[u8; 8] = b"3SCHWAL1";
+
+/// fxhash-style checksum (cheap, not cryptographic) for WAL records.
+fn checksum(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// In-memory ordered KV store with optional WAL-backed persistence.
+pub struct KvStore {
+    map: BTreeMap<Vec<u8>, Vec<u8>>,
+    wal: Option<BufWriter<File>>,
+    wal_path: Option<PathBuf>,
+    wal_ops: u64,
+    sync_every: u64,
+}
+
+impl KvStore {
+    /// Volatile store (no persistence) — used by tests and the DES.
+    pub fn in_memory() -> Self {
+        KvStore { map: BTreeMap::new(), wal: None, wal_path: None, wal_ops: 0, sync_every: 0 }
+    }
+
+    /// Open (or create) a persistent store rooted at `dir`.
+    ///
+    /// Layout: `dir/snapshot.kv` (last compact state) + `dir/wal.log`
+    /// (operations since).  Recovery = load snapshot, replay WAL.
+    pub fn open(dir: &Path) -> Result<Self> {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+        let snap = dir.join("snapshot.kv");
+        let walp = dir.join("wal.log");
+        let mut map = BTreeMap::new();
+        if snap.exists() {
+            Self::load_snapshot(&snap, &mut map)?;
+        }
+        if walp.exists() {
+            Self::replay_wal(&walp, &mut map)?;
+        }
+        let mut wal_file = OpenOptions::new().create(true).append(true).open(&walp)?;
+        if wal_file.metadata()?.len() == 0 {
+            wal_file.write_all(WAL_MAGIC)?;
+        }
+        Ok(KvStore {
+            map,
+            wal: Some(BufWriter::new(wal_file)),
+            wal_path: Some(walp),
+            wal_ops: 0,
+            sync_every: 1,
+        })
+    }
+
+    /// How many ops between WAL flushes (1 = flush every op, safest).
+    pub fn set_sync_every(&mut self, n: u64) {
+        self.sync_every = n.max(1);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn get(&self, key: &[u8]) -> Option<&[u8]> {
+        self.map.get(key).map(|v| v.as_slice())
+    }
+
+    pub fn contains(&self, key: &[u8]) -> bool {
+        self.map.contains_key(key)
+    }
+
+    pub fn set(&mut self, key: &[u8], value: &[u8]) -> Result<()> {
+        self.log_op(OP_SET, key, value)?;
+        self.map.insert(key.to_vec(), value.to_vec());
+        Ok(())
+    }
+
+    pub fn remove(&mut self, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        self.log_op(OP_REMOVE, key, &[])?;
+        Ok(self.map.remove(key))
+    }
+
+    /// Iterate all (k, v) pairs whose key starts with `prefix`, in key order.
+    pub fn scan_prefix<'a>(
+        &'a self,
+        prefix: &'a [u8],
+    ) -> impl Iterator<Item = (&'a [u8], &'a [u8])> + 'a {
+        self.map
+            .range(prefix.to_vec()..)
+            .take_while(move |(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.as_slice(), v.as_slice()))
+    }
+
+    /// Number of keys under a prefix (table row count).
+    pub fn count_prefix(&self, prefix: &[u8]) -> usize {
+        self.scan_prefix(prefix).count()
+    }
+
+    fn log_op(&mut self, op: u8, key: &[u8], value: &[u8]) -> Result<()> {
+        let Some(w) = self.wal.as_mut() else { return Ok(()) };
+        // record: op(1) keylen(4) vallen(4) key val checksum(4)
+        let mut rec = Vec::with_capacity(13 + key.len() + value.len());
+        rec.push(op);
+        rec.extend_from_slice(&(key.len() as u32).to_le_bytes());
+        rec.extend_from_slice(&(value.len() as u32).to_le_bytes());
+        rec.extend_from_slice(key);
+        rec.extend_from_slice(value);
+        let ck = checksum(&rec);
+        w.write_all(&rec)?;
+        w.write_all(&ck.to_le_bytes())?;
+        self.wal_ops += 1;
+        if self.wal_ops % self.sync_every == 0 {
+            w.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Write a compact snapshot and truncate the WAL.
+    pub fn save(&mut self) -> Result<()> {
+        let Some(walp) = self.wal_path.clone() else {
+            bail!("in-memory store has no save target")
+        };
+        let dir = walp.parent().unwrap().to_path_buf();
+        let tmp = dir.join("snapshot.kv.tmp");
+        {
+            let mut f = BufWriter::new(File::create(&tmp)?);
+            f.write_all(SNAP_MAGIC)?;
+            f.write_all(&(self.map.len() as u64).to_le_bytes())?;
+            for (k, v) in &self.map {
+                f.write_all(&(k.len() as u32).to_le_bytes())?;
+                f.write_all(&(v.len() as u32).to_le_bytes())?;
+                f.write_all(k)?;
+                f.write_all(v)?;
+            }
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, dir.join("snapshot.kv"))?;
+        // truncate WAL
+        let mut f = File::create(&walp)?;
+        f.write_all(WAL_MAGIC)?;
+        self.wal = Some(BufWriter::new(
+            OpenOptions::new().append(true).open(&walp)?,
+        ));
+        Ok(())
+    }
+
+    fn load_snapshot(path: &Path, map: &mut BTreeMap<Vec<u8>, Vec<u8>>) -> Result<()> {
+        let mut r = BufReader::new(File::open(path)?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != SNAP_MAGIC {
+            bail!("bad snapshot magic in {path:?}");
+        }
+        let mut n8 = [0u8; 8];
+        r.read_exact(&mut n8)?;
+        let n = u64::from_le_bytes(n8);
+        for _ in 0..n {
+            let mut l4 = [0u8; 4];
+            r.read_exact(&mut l4)?;
+            let klen = u32::from_le_bytes(l4) as usize;
+            r.read_exact(&mut l4)?;
+            let vlen = u32::from_le_bytes(l4) as usize;
+            let mut k = vec![0u8; klen];
+            let mut v = vec![0u8; vlen];
+            r.read_exact(&mut k)?;
+            r.read_exact(&mut v)?;
+            map.insert(k, v);
+        }
+        Ok(())
+    }
+
+    fn replay_wal(path: &Path, map: &mut BTreeMap<Vec<u8>, Vec<u8>>) -> Result<()> {
+        let mut bytes = Vec::new();
+        File::open(path)?.read_to_end(&mut bytes)?;
+        if bytes.is_empty() {
+            return Ok(());
+        }
+        if bytes.len() < 8 || &bytes[..8] != WAL_MAGIC {
+            bail!("bad WAL magic in {path:?}");
+        }
+        let mut pos = 8usize;
+        loop {
+            // a torn trailing record (crash mid-write) is detected and dropped
+            if pos == bytes.len() {
+                break;
+            }
+            if pos + 9 > bytes.len() {
+                break; // torn header
+            }
+            let op = bytes[pos];
+            let klen = u32::from_le_bytes(bytes[pos + 1..pos + 5].try_into().unwrap()) as usize;
+            let vlen = u32::from_le_bytes(bytes[pos + 5..pos + 9].try_into().unwrap()) as usize;
+            let body_end = pos + 9 + klen + vlen;
+            if body_end + 4 > bytes.len() {
+                break; // torn body/checksum
+            }
+            let rec = &bytes[pos..body_end];
+            let ck = u32::from_le_bytes(bytes[body_end..body_end + 4].try_into().unwrap());
+            if checksum(rec) != ck {
+                break; // torn/corrupt record: stop replay here
+            }
+            let key = &bytes[pos + 9..pos + 9 + klen];
+            let val = &bytes[pos + 9 + klen..body_end];
+            match op {
+                OP_SET => {
+                    map.insert(key.to_vec(), val.to_vec());
+                }
+                OP_REMOVE => {
+                    map.remove(key);
+                }
+                _ => break,
+            }
+            pos = body_end + 4;
+        }
+        Ok(())
+    }
+
+    /// Flush any buffered WAL writes to the OS.
+    pub fn flush(&mut self) -> Result<()> {
+        if let Some(w) = self.wal.as_mut() {
+            w.flush()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("threesched-kv-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn basic_ops() {
+        let mut kv = KvStore::in_memory();
+        kv.set(b"a", b"1").unwrap();
+        kv.set(b"b", b"2").unwrap();
+        assert_eq!(kv.get(b"a"), Some(b"1".as_slice()));
+        assert_eq!(kv.len(), 2);
+        assert_eq!(kv.remove(b"a").unwrap(), Some(b"1".to_vec()));
+        assert_eq!(kv.get(b"a"), None);
+        assert!(!kv.contains(b"a"));
+        assert!(kv.contains(b"b"));
+    }
+
+    #[test]
+    fn overwrite() {
+        let mut kv = KvStore::in_memory();
+        kv.set(b"k", b"v1").unwrap();
+        kv.set(b"k", b"v2").unwrap();
+        assert_eq!(kv.get(b"k"), Some(b"v2".as_slice()));
+        assert_eq!(kv.len(), 1);
+    }
+
+    #[test]
+    fn prefix_scan_ordered() {
+        let mut kv = KvStore::in_memory();
+        kv.set(b"task/3", b"c").unwrap();
+        kv.set(b"task/1", b"a").unwrap();
+        kv.set(b"meta/1", b"x").unwrap();
+        kv.set(b"task/2", b"b").unwrap();
+        let keys: Vec<&[u8]> = kv.scan_prefix(b"task/").map(|(k, _)| k).collect();
+        assert_eq!(keys, vec![b"task/1".as_slice(), b"task/2", b"task/3"]);
+        assert_eq!(kv.count_prefix(b"task/"), 3);
+        assert_eq!(kv.count_prefix(b"meta/"), 1);
+        assert_eq!(kv.count_prefix(b"zz/"), 0);
+    }
+
+    #[test]
+    fn persistence_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        {
+            let mut kv = KvStore::open(&dir).unwrap();
+            kv.set(b"x", b"1").unwrap();
+            kv.set(b"y", b"2").unwrap();
+            kv.remove(b"x").unwrap();
+            kv.flush().unwrap();
+        }
+        let kv = KvStore::open(&dir).unwrap();
+        assert_eq!(kv.get(b"x"), None);
+        assert_eq!(kv.get(b"y"), Some(b"2".as_slice()));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn snapshot_plus_wal_recovery() {
+        let dir = tmpdir("snap");
+        {
+            let mut kv = KvStore::open(&dir).unwrap();
+            for i in 0..100 {
+                kv.set(format!("k{i:03}").as_bytes(), b"v").unwrap();
+            }
+            kv.save().unwrap(); // snapshot + truncate WAL
+            kv.set(b"after", b"snap").unwrap(); // lands in new WAL
+            kv.flush().unwrap();
+        }
+        let kv = KvStore::open(&dir).unwrap();
+        assert_eq!(kv.len(), 101);
+        assert_eq!(kv.get(b"after"), Some(b"snap".as_slice()));
+        assert_eq!(kv.get(b"k042"), Some(b"v".as_slice()));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_wal_record_dropped() {
+        let dir = tmpdir("torn");
+        {
+            let mut kv = KvStore::open(&dir).unwrap();
+            kv.set(b"good", b"1").unwrap();
+            kv.flush().unwrap();
+        }
+        // simulate a crash mid-append: write half a record
+        {
+            let mut f = OpenOptions::new()
+                .append(true)
+                .open(dir.join("wal.log"))
+                .unwrap();
+            f.write_all(&[OP_SET, 4, 0, 0, 0]).unwrap(); // truncated header+body
+        }
+        let kv = KvStore::open(&dir).unwrap();
+        assert_eq!(kv.get(b"good"), Some(b"1".as_slice()));
+        assert_eq!(kv.len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn in_memory_save_fails() {
+        let mut kv = KvStore::in_memory();
+        assert!(kv.save().is_err());
+    }
+
+    #[test]
+    fn empty_value_allowed() {
+        let mut kv = KvStore::in_memory();
+        kv.set(b"k", b"").unwrap();
+        assert_eq!(kv.get(b"k"), Some(b"".as_slice()));
+    }
+}

@@ -1,0 +1,19 @@
+//! Substrates: everything the coordinators depend on, built from scratch.
+//!
+//! The paper's production deployment leaned on ZeroMQ, protocol buffers,
+//! TKRZW, LSF/jsrun and MPI.  None of those are assumed here — each has a
+//! purpose-built substitute (see DESIGN.md §Substitutions) whose measured
+//! cost feeds the paper-scale discrete-event simulation.
+
+pub mod cli;
+pub mod cluster;
+pub mod comm;
+pub mod des;
+pub mod kvstore;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod transport;
+pub mod wire;
+pub mod yaml;

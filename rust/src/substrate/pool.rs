@@ -1,0 +1,137 @@
+//! Fixed-size worker thread pool (no rayon/tokio offline).
+//!
+//! Used by pmake's local executor to bound concurrent job scripts to the
+//! allocation's node count, and by benches to drive concurrent clients.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A simple shared-queue thread pool.  Dropping the pool joins all workers.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("pool-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers }
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(f))
+            .expect("pool workers gone");
+    }
+
+    /// Run a batch of jobs and wait for all of them.
+    pub fn run_all<F: FnOnce() + Send + 'static>(&self, jobs: Vec<F>) {
+        let (done_tx, done_rx) = mpsc::channel();
+        let n = jobs.len();
+        for f in jobs {
+            let done = done_tx.clone();
+            self.submit(move || {
+                f();
+                let _ = done.send(());
+            });
+        }
+        for _ in 0..n {
+            done_rx.recv().expect("pool job lost");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f(rank)` on `n` scoped threads and collect results in rank order.
+/// This is the harness that underpins the in-proc "MPI job": each thread
+/// plays one rank.
+pub fn scoped_ranks<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|rank| {
+                let f = &f;
+                s.spawn(move || f(rank))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank panicked")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<_> = (0..100)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        pool.run_all(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_drop_joins() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop waits
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn scoped_ranks_ordered() {
+        let out = scoped_ranks(8, |r| r * r);
+        assert_eq!(out, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+    }
+
+    #[test]
+    fn scoped_ranks_single() {
+        assert_eq!(scoped_ranks(1, |r| r + 1), vec![1]);
+    }
+}

@@ -1,0 +1,100 @@
+//! In-process transport: channels standing in for ZeroMQ inproc://.
+
+use std::sync::mpsc;
+
+use anyhow::{anyhow, Result};
+
+use super::{ClientConn, Request, RequestRx, RequestTx};
+
+/// Create a hub: returns the server-side request stream and a connector
+/// from which any number of clients can be cloned.
+pub fn hub() -> (RequestRx, Connector) {
+    let (tx, rx) = mpsc::channel();
+    (rx, Connector { tx })
+}
+
+/// Cheap-to-clone client factory.
+#[derive(Clone)]
+pub struct Connector {
+    tx: RequestTx,
+}
+
+impl Connector {
+    pub fn connect(&self) -> InprocClient {
+        InprocClient { tx: self.tx.clone() }
+    }
+}
+
+/// Blocking request/reply client over the in-proc hub.
+pub struct InprocClient {
+    tx: RequestTx,
+}
+
+impl ClientConn for InprocClient {
+    fn request(&mut self, msg: &[u8]) -> Result<Vec<u8>> {
+        let (req, reply_rx) = Request::new(msg.to_vec());
+        self.tx
+            .send(req)
+            .map_err(|_| anyhow!("inproc server is gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("inproc server dropped the request"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn echo_roundtrip() {
+        let (rx, connector) = hub();
+        let server = std::thread::spawn(move || {
+            for req in rx {
+                let mut reply = req.payload.clone();
+                reply.reverse();
+                req.reply(reply);
+            }
+        });
+        let mut c = connector.connect();
+        assert_eq!(c.request(b"abc").unwrap(), b"cba");
+        assert_eq!(c.request(b"").unwrap(), b"");
+        drop(c);
+        drop(connector);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn many_clients_serialized() {
+        let (rx, connector) = hub();
+        let server = std::thread::spawn(move || {
+            let mut count = 0u64;
+            for req in rx {
+                count += 1;
+                req.reply(count.to_le_bytes().to_vec());
+            }
+            count
+        });
+        let clients: Vec<_> = (0..8).map(|_| connector.connect()).collect();
+        std::thread::scope(|s| {
+            for mut c in clients {
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        let r = c.request(b"x").unwrap();
+                        assert_eq!(r.len(), 8);
+                    }
+                });
+            }
+        });
+        drop(connector);
+        assert_eq!(server.join().unwrap(), 400);
+    }
+
+    #[test]
+    fn request_after_server_gone_errors() {
+        let (rx, connector) = hub();
+        drop(rx);
+        let mut c = connector.connect();
+        assert!(c.request(b"hello").is_err());
+    }
+}

@@ -1,0 +1,70 @@
+//! Request/reply transport: the ZeroMQ substitute under dwork.
+//!
+//! dwork's dhub is a single server that serializes task dispatch: every
+//! worker sends a request (Steal/Complete/...) and blocks on one reply.
+//! Two interchangeable transports provide that pattern:
+//!
+//! * [`inproc`] — channel-based, zero-syscall; used by tests, benches and
+//!   the in-process "MPI job" harness.  Its measured RTT is this stack's
+//!   analogue of the paper's 23 µs per-task latency.
+//! * [`tcp`] — `std::net` with u32-length framing; used by the real
+//!   multi-process deployment (`threesched dwork serve/worker`).
+//!
+//! Both deliver requests into a single [`Request`] stream so the server
+//! event loop is transport-agnostic — exactly the property the paper uses
+//! when it swaps direct connections for the rack-leader forwarding tree.
+
+pub mod inproc;
+pub mod tcp;
+
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+/// A client connection capable of blocking request/reply.
+pub trait ClientConn: Send {
+    fn request(&mut self, msg: &[u8]) -> Result<Vec<u8>>;
+}
+
+/// One in-flight request as seen by the server event loop.
+pub struct Request {
+    pub payload: Vec<u8>,
+    reply_tx: mpsc::Sender<Vec<u8>>,
+}
+
+impl Request {
+    pub fn new(payload: Vec<u8>) -> (Self, mpsc::Receiver<Vec<u8>>) {
+        let (tx, rx) = mpsc::channel();
+        (Request { payload, reply_tx: tx }, rx)
+    }
+
+    /// Send the reply; ignores a vanished client (it may have crashed —
+    /// the paper's Exit handling covers the task-state side).
+    pub fn reply(self, bytes: Vec<u8>) {
+        let _ = self.reply_tx.send(bytes);
+    }
+}
+
+/// Server-side request source shared by both transports.
+pub type RequestRx = mpsc::Receiver<Request>;
+pub type RequestTx = mpsc::Sender<Request>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_reply_plumbing() {
+        let (req, rx) = Request::new(b"ping".to_vec());
+        assert_eq!(req.payload, b"ping");
+        req.reply(b"pong".to_vec());
+        assert_eq!(rx.recv().unwrap(), b"pong");
+    }
+
+    #[test]
+    fn reply_to_gone_client_is_silent() {
+        let (req, rx) = Request::new(vec![]);
+        drop(rx);
+        req.reply(b"late".to_vec()); // must not panic
+    }
+}

@@ -1,0 +1,315 @@
+//! Wire codec: the protobuf substitute for dwork's message layer.
+//!
+//! The paper encodes every dwork API message as a Google protocol buffer
+//! and ships it over ZeroMQ.  This module provides the same cost class —
+//! varint integers + length-delimited strings/bytes/submessages — with a
+//! tiny, allocation-conscious API.  The measured encode/decode cost is part
+//! of the dwork steal/complete round-trip that determines its METG.
+//!
+//! Format: a message is a sequence of (tag, value) pairs.  tag = field_no
+//! << 3 | wire_type, wire_type 0 = varint, 2 = length-delimited — i.e. the
+//! actual protobuf framing, so any protobuf implementation could read our
+//! integer/bytes fields.
+
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum WireError {
+    #[error("varint overflows u64")]
+    VarintOverflow,
+    #[error("unexpected end of buffer")]
+    Truncated,
+    #[error("unsupported wire type {0}")]
+    BadWireType(u8),
+    #[error("invalid utf-8 in string field")]
+    BadUtf8,
+    #[error("missing required field {0}")]
+    MissingField(u32),
+}
+
+/// Append-only message writer.
+#[derive(Default, Debug)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Writer::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Writer { buf: Vec::with_capacity(n) }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    fn put_varint(&mut self, mut v: u64) {
+        loop {
+            let b = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(b);
+                return;
+            }
+            self.buf.push(b | 0x80);
+        }
+    }
+
+    /// Varint field (wire type 0).
+    pub fn uint(&mut self, field: u32, v: u64) -> &mut Self {
+        self.put_varint(((field as u64) << 3) | 0);
+        self.put_varint(v);
+        self
+    }
+
+    /// Length-delimited bytes field (wire type 2).
+    pub fn bytes(&mut self, field: u32, v: &[u8]) -> &mut Self {
+        self.put_varint(((field as u64) << 3) | 2);
+        self.put_varint(v.len() as u64);
+        self.buf.extend_from_slice(v);
+        self
+    }
+
+    /// String field (length-delimited).
+    pub fn string(&mut self, field: u32, v: &str) -> &mut Self {
+        self.bytes(field, v.as_bytes())
+    }
+
+    /// Embedded submessage field.
+    pub fn message(&mut self, field: u32, m: &Writer) -> &mut Self {
+        self.bytes(field, &m.buf)
+    }
+
+    /// Repeated string convenience.
+    pub fn strings<'a>(&mut self, field: u32, vs: impl IntoIterator<Item = &'a str>) -> &mut Self {
+        for v in vs {
+            self.string(field, v);
+        }
+        self
+    }
+}
+
+/// One decoded field.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Value<'a> {
+    Uint(u64),
+    Bytes(&'a [u8]),
+}
+
+impl<'a> Value<'a> {
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Uint(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_bytes(&self) -> Option<&'a [u8]> {
+        match self {
+            Value::Bytes(b) => Some(b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&'a str> {
+        match self {
+            Value::Bytes(b) => std::str::from_utf8(b).ok(),
+            _ => None,
+        }
+    }
+}
+
+/// Zero-copy reader over an encoded message.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn get_varint(&mut self) -> Result<u64, WireError> {
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let b = *self.buf.get(self.pos).ok_or(WireError::Truncated)?;
+            self.pos += 1;
+            if shift >= 64 {
+                return Err(WireError::VarintOverflow);
+            }
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    /// Next (field_no, value); None at end of buffer.
+    pub fn next_field(&mut self) -> Result<Option<(u32, Value<'a>)>, WireError> {
+        if self.pos >= self.buf.len() {
+            return Ok(None);
+        }
+        let tag = self.get_varint()?;
+        let field = (tag >> 3) as u32;
+        match (tag & 7) as u8 {
+            0 => Ok(Some((field, Value::Uint(self.get_varint()?)))),
+            2 => {
+                let len = self.get_varint()? as usize;
+                let end = self.pos.checked_add(len).ok_or(WireError::Truncated)?;
+                if end > self.buf.len() {
+                    return Err(WireError::Truncated);
+                }
+                let slice = &self.buf[self.pos..end];
+                self.pos = end;
+                Ok(Some((field, Value::Bytes(slice))))
+            }
+            wt => Err(WireError::BadWireType(wt)),
+        }
+    }
+
+    /// Collect all fields (small messages only — dwork messages are tiny).
+    pub fn fields(mut self) -> Result<Vec<(u32, Value<'a>)>, WireError> {
+        let mut out = Vec::new();
+        while let Some(f) = self.next_field()? {
+            out.push(f);
+        }
+        Ok(out)
+    }
+}
+
+/// Helper: find the first occurrence of `field` and decode as u64.
+pub fn get_u64(fields: &[(u32, Value)], field: u32) -> Result<u64, WireError> {
+    fields
+        .iter()
+        .find(|(f, _)| *f == field)
+        .and_then(|(_, v)| v.as_u64())
+        .ok_or(WireError::MissingField(field))
+}
+
+/// Helper: find the first occurrence of `field` and decode as &str.
+pub fn get_str<'a>(fields: &'a [(u32, Value<'a>)], field: u32) -> Result<&'a str, WireError> {
+    fields
+        .iter()
+        .find(|(f, _)| *f == field)
+        .and_then(|(_, v)| v.as_str())
+        .ok_or(WireError::MissingField(field))
+}
+
+/// Helper: collect every occurrence of `field` as &str (repeated field).
+pub fn get_strs<'a>(fields: &'a [(u32, Value<'a>)], field: u32) -> Vec<&'a str> {
+    fields
+        .iter()
+        .filter(|(f, _)| *f == field)
+        .filter_map(|(_, v)| v.as_str())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        let mut w = Writer::new();
+        w.uint(1, 0).uint(2, 127).uint(3, 128).uint(4, u64::MAX);
+        let fields = Reader::new(w.as_bytes()).fields().unwrap();
+        assert_eq!(get_u64(&fields, 1).unwrap(), 0);
+        assert_eq!(get_u64(&fields, 2).unwrap(), 127);
+        assert_eq!(get_u64(&fields, 3).unwrap(), 128);
+        assert_eq!(get_u64(&fields, 4).unwrap(), u64::MAX);
+    }
+
+    #[test]
+    fn roundtrip_strings() {
+        let mut w = Writer::new();
+        w.string(1, "steal").string(2, "worker-042").string(2, "worker-043");
+        let fields = Reader::new(w.as_bytes()).fields().unwrap();
+        assert_eq!(get_str(&fields, 1).unwrap(), "steal");
+        assert_eq!(get_strs(&fields, 2), vec!["worker-042", "worker-043"]);
+    }
+
+    #[test]
+    fn roundtrip_submessage() {
+        let mut inner = Writer::new();
+        inner.string(1, "task-7").uint(2, 3);
+        let mut outer = Writer::new();
+        outer.uint(1, 99).message(2, &inner);
+        let fields = Reader::new(outer.as_bytes()).fields().unwrap();
+        let sub = fields[1].1.as_bytes().unwrap();
+        let sub_fields = Reader::new(sub).fields().unwrap();
+        assert_eq!(get_str(&sub_fields, 1).unwrap(), "task-7");
+        assert_eq!(get_u64(&sub_fields, 2).unwrap(), 3);
+    }
+
+    #[test]
+    fn truncated_buffer_is_error() {
+        let mut w = Writer::new();
+        w.bytes(1, &[1, 2, 3, 4, 5]);
+        let bytes = w.as_bytes();
+        let cut = &bytes[..bytes.len() - 2];
+        assert_eq!(Reader::new(cut).fields().unwrap_err(), WireError::Truncated);
+    }
+
+    #[test]
+    fn truncated_varint_is_error() {
+        // continuation bit set but buffer ends
+        assert_eq!(Reader::new(&[0x80]).fields().unwrap_err(), WireError::Truncated);
+    }
+
+    #[test]
+    fn overlong_varint_is_error() {
+        let buf = [0x08, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0x01];
+        assert_eq!(Reader::new(&buf).fields().unwrap_err(), WireError::VarintOverflow);
+    }
+
+    #[test]
+    fn unsupported_wire_type() {
+        // tag with wire type 5 (fixed32, unsupported)
+        let buf = [0x0d, 0, 0, 0, 0];
+        assert!(matches!(
+            Reader::new(&buf).fields().unwrap_err(),
+            WireError::BadWireType(5)
+        ));
+    }
+
+    #[test]
+    fn missing_field_reported() {
+        let mut w = Writer::new();
+        w.uint(1, 5);
+        let fields = Reader::new(w.as_bytes()).fields().unwrap();
+        assert_eq!(get_u64(&fields, 9).unwrap_err(), WireError::MissingField(9));
+    }
+
+    #[test]
+    fn empty_message() {
+        let fields = Reader::new(&[]).fields().unwrap();
+        assert!(fields.is_empty());
+    }
+
+    #[test]
+    fn protobuf_compatible_layout() {
+        // field 1, varint 150 must encode as [0x08, 0x96, 0x01] — the
+        // canonical protobuf example.
+        let mut w = Writer::new();
+        w.uint(1, 150);
+        assert_eq!(w.as_bytes(), &[0x08, 0x96, 0x01]);
+    }
+}

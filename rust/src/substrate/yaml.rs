@@ -1,0 +1,598 @@
+//! YAML-subset parser for pmake's `rules.yaml` / `targets.yaml`.
+//!
+//! No yaml crate is available offline, so this implements the subset the
+//! paper's pmake inputs actually use (Fig 1):
+//!
+//! * block mappings nested by indentation,
+//! * block sequences (`- item`, including `- key: value` item-mappings),
+//! * flow mappings `{time: 120, nrs: 10, cpu: 42, gpu: 6}`,
+//! * scalars: plain, single/double-quoted, ints, floats, bools,
+//! * literal block scalars (`key: |`) preserving newlines,
+//! * comments (`# ...`) and blank lines.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum YamlError {
+    #[error("line {0}: {1}")]
+    Parse(usize, String),
+}
+
+/// Parsed YAML value.  Mappings preserve insertion order via a Vec of pairs
+/// (pmake rule order matters: "stops searching when it finds the files").
+#[derive(Debug, Clone, PartialEq)]
+pub enum Yaml {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    List(Vec<Yaml>),
+    Map(Vec<(String, Yaml)>),
+}
+
+impl Yaml {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Yaml::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// String-or-scalar coerced to text (ints/floats/bools render).
+    pub fn as_text(&self) -> Option<String> {
+        match self {
+            Yaml::Str(s) => Some(s.clone()),
+            Yaml::Int(i) => Some(i.to_string()),
+            Yaml::Float(f) => Some(f.to_string()),
+            Yaml::Bool(b) => Some(b.to_string()),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Yaml::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Yaml::Float(f) => Some(*f),
+            Yaml::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_map(&self) -> Option<&[(String, Yaml)]> {
+        match self {
+            Yaml::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn as_list(&self) -> Option<&[Yaml]> {
+        match self {
+            Yaml::List(l) => Some(l),
+            _ => None,
+        }
+    }
+
+    /// Map field lookup.
+    pub fn get(&self, key: &str) -> Option<&Yaml> {
+        self.as_map()?.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// All map entries as a BTreeMap of rendered strings (for substitution).
+    pub fn to_string_map(&self) -> BTreeMap<String, String> {
+        let mut out = BTreeMap::new();
+        if let Some(m) = self.as_map() {
+            for (k, v) in m {
+                if let Some(t) = v.as_text() {
+                    out.insert(k.clone(), t);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Display for Yaml {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Yaml::Null => write!(f, "~"),
+            Yaml::Bool(b) => write!(f, "{b}"),
+            Yaml::Int(i) => write!(f, "{i}"),
+            Yaml::Float(x) => write!(f, "{x}"),
+            Yaml::Str(s) => write!(f, "{s}"),
+            Yaml::List(l) => {
+                write!(f, "[")?;
+                for (i, v) in l.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+            Yaml::Map(m) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{k}: {v}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+struct Line {
+    num: usize,    // 1-based source line
+    indent: usize, // spaces
+    text: String,  // content without indent (comments stripped unless quoted)
+}
+
+fn strip_comment(s: &str) -> &str {
+    // a '#' starts a comment unless inside quotes
+    let mut in_s = false;
+    let mut in_d = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '\'' if !in_d => in_s = !in_s,
+            '"' if !in_s => in_d = !in_d,
+            '#' if !in_s && !in_d => {
+                // yaml requires '#' preceded by space (or line start) to comment
+                if i == 0 || s.as_bytes()[i - 1].is_ascii_whitespace() {
+                    return &s[..i];
+                }
+            }
+            _ => {}
+        }
+    }
+    s
+}
+
+fn scan_lines(src: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    for (i, raw) in src.lines().enumerate() {
+        let no_comment = strip_comment(raw);
+        let trimmed = no_comment.trim_end();
+        if trimmed.trim().is_empty() {
+            continue;
+        }
+        let indent = trimmed.len() - trimmed.trim_start().len();
+        out.push(Line { num: i + 1, indent, text: trimmed.trim_start().to_string() });
+    }
+    out
+}
+
+/// Parse a YAML document (single document, no anchors/tags).
+pub fn parse(src: &str) -> Result<Yaml, YamlError> {
+    let lines = scan_lines(src);
+    if lines.is_empty() {
+        return Ok(Yaml::Null);
+    }
+    let mut pos = 0usize;
+    let v = parse_block(&lines, &mut pos, lines[0].indent, src)?;
+    if pos < lines.len() {
+        return Err(YamlError::Parse(
+            lines[pos].num,
+            format!("unexpected content: {:?}", lines[pos].text),
+        ));
+    }
+    Ok(v)
+}
+
+fn parse_block(lines: &[Line], pos: &mut usize, indent: usize, src: &str) -> Result<Yaml, YamlError> {
+    if *pos >= lines.len() {
+        return Ok(Yaml::Null);
+    }
+    if lines[*pos].text.starts_with("- ") || lines[*pos].text == "-" {
+        parse_sequence(lines, pos, indent, src)
+    } else {
+        parse_mapping(lines, pos, indent, src)
+    }
+}
+
+fn parse_sequence(lines: &[Line], pos: &mut usize, indent: usize, src: &str) -> Result<Yaml, YamlError> {
+    let mut items = Vec::new();
+    while *pos < lines.len() && lines[*pos].indent == indent {
+        let line = &lines[*pos];
+        if !(line.text.starts_with("- ") || line.text == "-") {
+            break;
+        }
+        let rest = line.text[1..].trim_start().to_string();
+        let num = line.num;
+        *pos += 1;
+        if rest.is_empty() {
+            // nested block under the dash
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                items.push(parse_block(lines, pos, child_indent, src)?);
+            } else {
+                items.push(Yaml::Null);
+            }
+        } else if let Some((k, v)) = split_key(&rest) {
+            // "- key: value" starts an item-mapping whose keys continue at
+            // indent + 2 (dash-aligned continuation)
+            let mut map = Vec::new();
+            push_entry(&mut map, k, v, lines, pos, indent + 2, num, src)?;
+            while *pos < lines.len() && lines[*pos].indent == indent + 2 {
+                let l = &lines[*pos];
+                let Some((k2, v2)) = split_key(&l.text) else { break };
+                let n2 = l.num;
+                *pos += 1;
+                push_entry(&mut map, k2, v2, lines, pos, indent + 2, n2, src)?;
+            }
+            items.push(Yaml::Map(map));
+        } else {
+            items.push(parse_scalar(&rest));
+        }
+    }
+    Ok(Yaml::List(items))
+}
+
+fn parse_mapping(lines: &[Line], pos: &mut usize, indent: usize, src: &str) -> Result<Yaml, YamlError> {
+    let mut map: Vec<(String, Yaml)> = Vec::new();
+    while *pos < lines.len() && lines[*pos].indent == indent {
+        let line = &lines[*pos];
+        let num = line.num;
+        let Some((key, rest)) = split_key(&line.text) else {
+            return Err(YamlError::Parse(num, format!("expected 'key:' in {:?}", line.text)));
+        };
+        *pos += 1;
+        push_entry(&mut map, key, rest, lines, pos, indent, num, src)?;
+    }
+    Ok(Yaml::Map(map))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push_entry(
+    map: &mut Vec<(String, Yaml)>,
+    key: String,
+    rest: String,
+    lines: &[Line],
+    pos: &mut usize,
+    indent: usize,
+    num: usize,
+    src: &str,
+) -> Result<(), YamlError> {
+    let value = if rest.is_empty() {
+        // nested block (or empty value)
+        if *pos < lines.len() && lines[*pos].indent > indent {
+            let child_indent = lines[*pos].indent;
+            parse_block(lines, pos, child_indent, src)?
+        } else {
+            Yaml::Null
+        }
+    } else if rest == "|" || rest == "|-" {
+        parse_literal_block(lines, pos, indent, src, rest == "|-")
+    } else {
+        parse_flow(&rest).map_err(|e| YamlError::Parse(num, e))?
+    };
+    map.push((key, value));
+    Ok(())
+}
+
+/// Literal block scalar: consume all more-indented source lines verbatim.
+fn parse_literal_block(lines: &[Line], pos: &mut usize, indent: usize, src: &str, strip: bool) -> Yaml {
+    // We need raw source lines (comments inside scripts are real content),
+    // so re-read from src between the next Line's source range.
+    let mut collected: Vec<String> = Vec::new();
+    let src_lines: Vec<&str> = src.lines().collect();
+    // source line number where the block starts: next parsed line tells us
+    // where it ends; simplest: walk raw lines after the "key: |" line.
+    let start_line = if *pos > 0 { lines[*pos - 1].num } else { 0 };
+    let mut block_indent = None;
+    let mut raw_i = start_line; // 0-based index of the line after "key: |"
+    while raw_i < src_lines.len() {
+        let raw = src_lines[raw_i];
+        if raw.trim().is_empty() {
+            collected.push(String::new());
+            raw_i += 1;
+            continue;
+        }
+        let ind = raw.len() - raw.trim_start().len();
+        if ind <= indent {
+            break;
+        }
+        let bi = *block_indent.get_or_insert(ind);
+        collected.push(raw[bi.min(raw.len())..].to_string());
+        raw_i += 1;
+    }
+    // drop trailing blank lines
+    while collected.last().is_some_and(|l| l.is_empty()) {
+        collected.pop();
+    }
+    // advance the parsed-line cursor past everything we consumed
+    while *pos < lines.len() && lines[*pos].num <= raw_i {
+        *pos += 1;
+    }
+    let mut text = collected.join("\n");
+    if !strip {
+        text.push('\n');
+    }
+    Yaml::Str(text)
+}
+
+fn split_key(s: &str) -> Option<(String, String)> {
+    // find ':' terminating the key (respecting quotes)
+    let mut in_s = false;
+    let mut in_d = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '\'' if !in_d => in_s = !in_s,
+            '"' if !in_s => in_d = !in_d,
+            ':' if !in_s && !in_d => {
+                let after = &s[i + 1..];
+                if after.is_empty() || after.starts_with(' ') {
+                    let key = unquote(s[..i].trim());
+                    return Some((key, after.trim().to_string()));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn unquote(s: &str) -> String {
+    let s = s.trim();
+    if (s.starts_with('"') && s.ends_with('"') && s.len() >= 2)
+        || (s.starts_with('\'') && s.ends_with('\'') && s.len() >= 2)
+    {
+        s[1..s.len() - 1].to_string()
+    } else {
+        s.to_string()
+    }
+}
+
+/// Parse a flow value: scalar, `{k: v, ...}`, or `[a, b, ...]`.
+fn parse_flow(s: &str) -> Result<Yaml, String> {
+    let s = s.trim();
+    if s.starts_with('{') {
+        if !s.ends_with('}') {
+            return Err(format!("unterminated flow map: {s:?}"));
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut map = Vec::new();
+        for part in split_flow(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = split_key(part) else {
+                return Err(format!("bad flow map entry: {part:?}"));
+            };
+            map.push((k, parse_flow(&v)?));
+        }
+        Ok(Yaml::Map(map))
+    } else if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(format!("unterminated flow list: {s:?}"));
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut list = Vec::new();
+        for part in split_flow(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                list.push(parse_flow(part)?);
+            }
+        }
+        Ok(Yaml::List(list))
+    } else {
+        Ok(parse_scalar(s))
+    }
+}
+
+/// Split a flow body on top-level commas (respecting nesting + quotes).
+fn split_flow(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0i32;
+    let mut in_s = false;
+    let mut in_d = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '\'' if !in_d => in_s = !in_s,
+            '"' if !in_s => in_d = !in_d,
+            '{' | '[' if !in_s && !in_d => depth += 1,
+            '}' | ']' if !in_s && !in_d => depth -= 1,
+            ',' if depth == 0 && !in_s && !in_d => {
+                parts.push(std::mem::take(&mut cur));
+                continue;
+            }
+            _ => {}
+        }
+        cur.push(c);
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+fn parse_scalar(s: &str) -> Yaml {
+    let t = s.trim();
+    if t.is_empty() || t == "~" || t == "null" {
+        return Yaml::Null;
+    }
+    if (t.starts_with('"') && t.ends_with('"')) || (t.starts_with('\'') && t.ends_with('\'')) {
+        return Yaml::Str(unquote(t));
+    }
+    match t {
+        "true" | "True" => return Yaml::Bool(true),
+        "false" | "False" => return Yaml::Bool(false),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Yaml::Int(i);
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Yaml::Float(f);
+    }
+    Yaml::Str(t.to_string())
+}
+
+/// Parse a file.
+pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Yaml> {
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))?;
+    Ok(parse(&src)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(parse("a: 1").unwrap().get("a"), Some(&Yaml::Int(1)));
+        assert_eq!(parse("a: 1.5").unwrap().get("a"), Some(&Yaml::Float(1.5)));
+        assert_eq!(parse("a: true").unwrap().get("a"), Some(&Yaml::Bool(true)));
+        assert_eq!(parse("a: hello world").unwrap().get("a"), Some(&Yaml::Str("hello world".into())));
+        assert_eq!(parse("a: \"quoted: str\"").unwrap().get("a"), Some(&Yaml::Str("quoted: str".into())));
+        assert_eq!(parse("a:").unwrap().get("a"), Some(&Yaml::Null));
+    }
+
+    #[test]
+    fn nested_map() {
+        let y = parse("outer:\n  inner:\n    deep: 42\n  other: x\n").unwrap();
+        assert_eq!(y.get("outer").unwrap().get("inner").unwrap().get("deep"), Some(&Yaml::Int(42)));
+        assert_eq!(y.get("outer").unwrap().get("other"), Some(&Yaml::Str("x".into())));
+    }
+
+    #[test]
+    fn flow_map() {
+        let y = parse("resources: {time: 120, nrs: 10, cpu: 42, gpu: 6}").unwrap();
+        let r = y.get("resources").unwrap();
+        assert_eq!(r.get("time"), Some(&Yaml::Int(120)));
+        assert_eq!(r.get("gpu"), Some(&Yaml::Int(6)));
+    }
+
+    #[test]
+    fn flow_list() {
+        let y = parse("xs: [1, 2, 3]").unwrap();
+        assert_eq!(
+            y.get("xs").unwrap().as_list().unwrap(),
+            &[Yaml::Int(1), Yaml::Int(2), Yaml::Int(3)]
+        );
+    }
+
+    #[test]
+    fn block_sequence() {
+        let y = parse("items:\n  - a\n  - b\n  - 3\n").unwrap();
+        let l = y.get("items").unwrap().as_list().unwrap();
+        assert_eq!(l.len(), 3);
+        assert_eq!(l[2], Yaml::Int(3));
+    }
+
+    #[test]
+    fn sequence_of_maps() {
+        let y = parse("jobs:\n  - name: a\n    cpus: 2\n  - name: b\n    cpus: 4\n").unwrap();
+        let l = y.get("jobs").unwrap().as_list().unwrap();
+        assert_eq!(l[0].get("name"), Some(&Yaml::Str("a".into())));
+        assert_eq!(l[1].get("cpus"), Some(&Yaml::Int(4)));
+    }
+
+    #[test]
+    fn literal_block() {
+        let y = parse("script: |\n  line one\n  line two {x}\nnext: 1\n").unwrap();
+        assert_eq!(y.get("script"), Some(&Yaml::Str("line one\nline two {x}\n".into())));
+        assert_eq!(y.get("next"), Some(&Yaml::Int(1)));
+    }
+
+    #[test]
+    fn literal_block_preserves_hash() {
+        let y = parse("script: |\n  #!/bin/sh\n  echo hi # not stripped\n").unwrap();
+        let s = y.get("script").unwrap().as_str().unwrap();
+        assert!(s.contains("#!/bin/sh"));
+        assert!(s.contains("# not stripped"));
+    }
+
+    #[test]
+    fn comments_ignored() {
+        let y = parse("# header\na: 1 # trailing\nb: 2\n").unwrap();
+        assert_eq!(y.get("a"), Some(&Yaml::Int(1)));
+        assert_eq!(y.get("b"), Some(&Yaml::Int(2)));
+    }
+
+    #[test]
+    fn paper_fig1_rules() {
+        let src = r#"
+simulate:
+  resources: {time: 120, nrs: 10, cpu: 42, gpu: 6}
+  inp:
+    param: "{n}.param"
+  out:
+    trj: "{n}.trj"
+  setup: module load cuda
+  script: |
+    {mpirun} simulate {inp[param]} {out[trj]}
+analyze:
+  resources: {time: 10, nrs: 1, cpu: 1}
+  inp:
+    trj: "{n}.trj"
+  out:
+    npy: "an_{n}.npy"
+  setup: module load Python/3
+  script: |
+    {mpirun} python compute_averages.py {inp[trj]} {out[npy]}
+"#;
+        let y = parse(src).unwrap();
+        let sim = y.get("simulate").unwrap();
+        assert_eq!(sim.get("resources").unwrap().get("nrs"), Some(&Yaml::Int(10)));
+        assert_eq!(sim.get("inp").unwrap().get("param"), Some(&Yaml::Str("{n}.param".into())));
+        assert!(sim.get("script").unwrap().as_str().unwrap().contains("{mpirun} simulate"));
+        let ana = y.get("analyze").unwrap();
+        assert_eq!(ana.get("out").unwrap().get("npy"), Some(&Yaml::Str("an_{n}.npy".into())));
+        // rule order preserved
+        let keys: Vec<&str> = y.as_map().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["simulate", "analyze"]);
+    }
+
+    #[test]
+    fn paper_fig1_targets() {
+        let src = r#"
+sim1:
+  dirname: System1
+  out:
+    npy: "an_0.npy"
+  loop:
+    n: "range(1,11)"
+  tgt:
+    npy: "an_{n}.npy"
+"#;
+        let y = parse(src).unwrap();
+        let t = y.get("sim1").unwrap();
+        assert_eq!(t.get("dirname"), Some(&Yaml::Str("System1".into())));
+        assert_eq!(t.get("loop").unwrap().get("n"), Some(&Yaml::Str("range(1,11)".into())));
+    }
+
+    #[test]
+    fn error_on_garbage() {
+        assert!(parse("just a bare scalar line\nanother\n").is_err());
+    }
+
+    #[test]
+    fn empty_doc_is_null() {
+        assert_eq!(parse("").unwrap(), Yaml::Null);
+        assert_eq!(parse("# only comments\n\n").unwrap(), Yaml::Null);
+    }
+
+    #[test]
+    fn to_string_map() {
+        let y = parse("a: 1\nb: x\nc:\n  d: 2\n").unwrap();
+        let m = y.to_string_map();
+        assert_eq!(m.get("a").map(String::as_str), Some("1"));
+        assert_eq!(m.get("b").map(String::as_str), Some("x"));
+        assert!(!m.contains_key("c")); // nested maps not flattened
+    }
+}

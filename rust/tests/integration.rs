@@ -1,0 +1,425 @@
+//! Cross-module integration tests: coordinators composed with transports,
+//! persistence, the forwarding tree, and each other.
+
+use std::path::Path;
+
+use threesched::coordinator::dwork::{self, Client, ServerConfig, TaskMsg};
+use threesched::coordinator::mpilist::Context;
+use threesched::coordinator::pmake::{self, Dag, SchedConfig, ShellExecutor};
+use threesched::substrate::cluster::Machine;
+use threesched::substrate::kvstore::KvStore;
+use threesched::substrate::transport::tcp::TcpClient;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("threesched-it-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+// ---------------------------------------------------------------- dwork
+
+#[test]
+fn dwork_tcp_multiworker_dag() {
+    // a fan DAG over real TCP with 3 worker threads
+    let mut state = dwork::SchedState::new();
+    state.create(TaskMsg::new("root", vec![]), &[]).unwrap();
+    for i in 0..12 {
+        state
+            .create(TaskMsg::new(format!("leaf{i}"), vec![]), &["root".into()])
+            .unwrap();
+    }
+    state
+        .create(
+            TaskMsg::new("final", vec![]),
+            &(0..12).map(|i| format!("leaf{i}")).collect::<Vec<_>>(),
+        )
+        .unwrap();
+    let (addr, guard, handle) =
+        dwork::spawn_tcp(state, ServerConfig::default(), "127.0.0.1:0").unwrap();
+    let totals: Vec<u64> = std::thread::scope(|s| {
+        (0..3)
+            .map(|w| {
+                let addr = addr.to_string();
+                s.spawn(move || {
+                    let conn = TcpClient::connect(&addr).unwrap();
+                    let mut c = Client::new(Box::new(conn), format!("w{w}"));
+                    dwork::run_worker(&mut c, 2, |_| Ok(())).unwrap().tasks_run
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    assert_eq!(totals.iter().sum::<u64>(), 14);
+    // drop the acceptor (it holds a request-sender clone) before joining
+    drop(guard);
+    let state = handle.join().unwrap();
+    assert!(state.all_done());
+}
+
+#[test]
+fn dwork_server_crash_recovery_mid_campaign() {
+    let dir = tmpdir("dwork-crash");
+    // phase 1: seed + partially drain, then "crash" (drop server)
+    {
+        let mut state = dwork::SchedState::with_store(KvStore::open(&dir).unwrap());
+        for i in 0..10 {
+            state.create(TaskMsg::new(format!("t{i}"), vec![]), &[]).unwrap();
+        }
+        let (connector, handle) = dwork::spawn_inproc(state, ServerConfig::default());
+        let mut c = Client::new(Box::new(connector.connect()), "w0");
+        for _ in 0..4 {
+            let t = c.steal().unwrap().unwrap();
+            c.complete(&t.name, true).unwrap();
+        }
+        // one task left assigned (stolen but not completed) at crash time
+        let _t = c.steal().unwrap().unwrap();
+        drop(c);
+        drop(connector);
+        handle.join().unwrap();
+    }
+    // phase 2: restart from the WAL; assigned task must be re-served
+    {
+        let state = dwork::SchedState::with_store(KvStore::open(&dir).unwrap());
+        let st = state.status();
+        assert_eq!(st.total, 10);
+        assert_eq!(st.completed, 4);
+        assert_eq!(st.ready, 6, "assigned task must return to ready on restart");
+        let (connector, handle) = dwork::spawn_inproc(state, ServerConfig::default());
+        let mut c = Client::new(Box::new(connector.connect()), "w1");
+        let stats = dwork::run_worker(&mut c, 1, |_| Ok(())).unwrap();
+        assert_eq!(stats.tasks_run, 6);
+        drop(c);
+        drop(connector);
+        assert!(handle.join().unwrap().all_done());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn dwork_forwarding_tree_with_tcp_root() {
+    // TCP server <- inproc rack leader <- workers: mixed transports
+    let mut state = dwork::SchedState::new();
+    for i in 0..30 {
+        state.create(TaskMsg::new(format!("t{i}"), vec![]), &[]).unwrap();
+    }
+    let (addr, guard, handle) =
+        dwork::spawn_tcp(state, ServerConfig::default(), "127.0.0.1:0").unwrap();
+    let upstream = TcpClient::connect(&addr.to_string()).unwrap();
+    let (rack, _fh) = dwork::forwarder::spawn(Box::new(upstream));
+    let totals: Vec<u64> = std::thread::scope(|s| {
+        (0..2)
+            .map(|w| {
+                let conn = rack.connect();
+                s.spawn(move || {
+                    let mut c = Client::new(Box::new(conn), format!("w{w}"));
+                    dwork::run_worker(&mut c, 1, |_| Ok(())).unwrap().tasks_run
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    assert_eq!(totals.iter().sum::<u64>(), 30);
+    drop(rack);
+    // drop the acceptor before joining the server loop (it holds a sender)
+    drop(guard);
+    let state = handle.join().unwrap();
+    assert!(state.all_done());
+}
+
+#[test]
+fn dwork_transfer_rewrite_cycle() {
+    // the paper's dynamic rewrite: a task defers itself behind a new task
+    let mut state = dwork::SchedState::new();
+    state.create(TaskMsg::new("assemble", vec![]), &[]).unwrap();
+    let (connector, handle) = dwork::spawn_inproc(state, ServerConfig::default());
+    let mut c = Client::new(Box::new(connector.connect()), "w");
+    let mut aux = Client::new(Box::new(connector.connect()), "w-aux");
+    let mut assemble_runs = 0;
+    // pass 1: assemble discovers a missing prerequisite, creates it and
+    // transfers itself behind it.  The Complete the worker loop then
+    // sends is rejected (the task is no longer assigned to it), which
+    // surfaces as an error from run_worker — the documented signal that
+    // a task rewrote itself mid-flight.
+    let first = dwork::run_worker(&mut c, 0, |t| {
+        if t.name == "assemble" {
+            assemble_runs += 1;
+            if assemble_runs == 1 {
+                aux.create(TaskMsg::new("fetch-data", vec![]), &[]).unwrap();
+                aux.transfer("assemble", &["fetch-data".to_string()]).unwrap();
+            }
+        }
+        Ok(())
+    });
+    assert!(first.is_err(), "rejected Complete after Transfer must surface");
+    // pass 2: drain the rewritten graph — fetch-data, then assemble again
+    let stats = dwork::run_worker(&mut c, 0, |t| {
+        if t.name == "assemble" {
+            assemble_runs += 1;
+        }
+        Ok(())
+    })
+    .unwrap();
+    assert_eq!(stats.tasks_run, 2);
+    drop(c);
+    drop(aux);
+    drop(connector);
+    let state = handle.join().unwrap();
+    assert!(state.all_done());
+    assert_eq!(assemble_runs, 2, "assemble must re-run after its transfer");
+}
+
+// ---------------------------------------------------------------- pmake
+
+#[test]
+fn pmake_end_to_end_shell_campaign() {
+    let dir = tmpdir("pmake-e2e");
+    std::fs::write(dir.join("1.param"), "a\n").unwrap();
+    std::fs::write(dir.join("2.param"), "b\n").unwrap();
+    let rules = pmake::parse_rules(
+        r#"
+simulate:
+  resources: {time: 1, nrs: 1, cpu: 1}
+  inp:
+    param: "{n}.param"
+  out:
+    trj: "{n}.trj"
+  script: |
+    tr 'a-z' 'A-Z' < {inp[param]} > {out[trj]}
+analyze:
+  resources: {time: 1, nrs: 1, cpu: 1}
+  inp:
+    trj: "{n}.trj"
+  out:
+    npy: "an_{n}.npy"
+  script: |
+    wc -c < {inp[trj]} > {out[npy]}
+"#,
+    )
+    .unwrap();
+    let targets = pmake::parse_targets(&format!(
+        "t:\n  dirname: {}\n  loop:\n    n: \"range(1,3)\"\n  tgt:\n    npy: \"an_{{n}}.npy\"\n",
+        dir.display()
+    ))
+    .unwrap();
+    let dag = Dag::build(
+        &rules,
+        &targets[0],
+        &|p: &Path| p.exists(),
+        &|rs| pmake::default_mpirun(rs),
+    )
+    .unwrap();
+    assert_eq!(dag.tasks.len(), 4);
+    let cfg = SchedConfig { nodes: 2, machine: Machine::summit(2), fifo: false };
+    let report = pmake::run(&dag, &ShellExecutor::default(), &cfg).unwrap();
+    assert!(report.all_ok(), "failed: {:?}", report.failed);
+    for n in 1..=2 {
+        assert!(dir.join(format!("{n}.trj")).exists());
+        let count = std::fs::read_to_string(dir.join(format!("an_{n}.npy"))).unwrap();
+        assert_eq!(count.trim(), "2"); // "A\n" is two bytes
+    }
+    // logs exist per task
+    assert!(dir.join("simulate.1.log").exists());
+    assert!(dir.join("analyze.2.sh").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pmake_failed_script_poisons_only_its_chain() {
+    let dir = tmpdir("pmake-poison");
+    std::fs::write(dir.join("good.in"), "x\n").unwrap();
+    let rules = pmake::parse_rules(
+        r#"
+bad:
+  out:
+    f: "bad.out"
+  script: |
+    exit 1
+badchild:
+  inp:
+    f: "bad.out"
+  out:
+    f: "badchild.out"
+  script: |
+    touch {out[f]}
+good:
+  inp:
+    f: "good.in"
+  out:
+    f: "good.out"
+  script: |
+    cp {inp[f]} {out[f]}
+"#,
+    )
+    .unwrap();
+    let targets = pmake::parse_targets(&format!(
+        "t:\n  dirname: {}\n  out:\n    a: badchild.out\n    b: good.out\n",
+        dir.display()
+    ))
+    .unwrap();
+    let dag = Dag::build(
+        &rules,
+        &targets[0],
+        &|p: &Path| p.exists(),
+        &|rs| pmake::default_mpirun(rs),
+    )
+    .unwrap();
+    let cfg = SchedConfig { nodes: 2, machine: Machine::summit(2), fifo: false };
+    let report = pmake::run(&dag, &ShellExecutor::default(), &cfg).unwrap();
+    assert_eq!(report.failed.len(), 1);
+    assert_eq!(report.poisoned.len(), 1);
+    assert_eq!(report.succeeded.len(), 1);
+    assert!(dir.join("good.out").exists());
+    assert!(!dir.join("badchild.out").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// -------------------------------------------------------------- mpi-list
+
+#[test]
+fn mpilist_fig3_shape_without_runtime() {
+    // the Fig 3 pipeline shape with synthetic in-memory "tables"
+    let hist: Vec<Vec<u32>> = Context::run(4, |ctx| {
+        // read: 8 files of 100 values each
+        let dfm = ctx.iterates(8).map(|f| {
+            (0..100u64).map(|i| ((f * 37 + i * 13) % 64) as u32).collect::<Vec<u32>>()
+        });
+        // stats: global min/max via reduce
+        let (lo, hi) = dfm
+            .clone()
+            .map(|t| {
+                (
+                    *t.iter().min().unwrap(),
+                    *t.iter().max().unwrap(),
+                )
+            })
+            .reduce(ctx, (u32::MAX, 0), |a, b| (a.0.min(b.0), a.1.max(b.1)));
+        assert!(lo < hi);
+        // histogram into 16 bins, reduce to all
+        let bins = 16usize;
+        let span = (hi - lo + 1) as f64;
+        dfm.map(|t| {
+            let mut h = vec![0u32; bins];
+            for v in t {
+                let b = (((v - lo) as f64 / span) * bins as f64) as usize;
+                h[b.min(bins - 1)] += 1;
+            }
+            h
+        })
+        .reduce(ctx, vec![0u32; bins], |mut a, b| {
+            for (x, y) in a.iter_mut().zip(&b) {
+                *x += y;
+            }
+            a
+        })
+    });
+    let total: u32 = hist[0].iter().sum();
+    assert_eq!(total, 800);
+    for h in &hist[1..] {
+        assert_eq!(h, &hist[0]);
+    }
+}
+
+#[test]
+fn mpilist_repartition_then_group_pipeline() {
+    // skewed generation -> repartition to balance -> group by key
+    let out = Context::run(3, |ctx| {
+        let dfm = ctx
+            .iterates(9)
+            .map(|i| vec![i; (i % 3 + 1) as usize]) // containers of 1..3 records
+            .repartition(
+                ctx,
+                |v| v.len(),
+                |v, sizes| {
+                    let mut out = Vec::new();
+                    let mut it = v.into_iter();
+                    for &s in sizes {
+                        out.push(it.by_ref().take(s).collect::<Vec<u64>>());
+                    }
+                    out
+                },
+                |chunks| chunks.into_iter().flatten().collect::<Vec<u64>>(),
+            );
+        // each rank now holds ~6 records; group records by parity
+        let grouped = dfm.group(
+            ctx,
+            |container| container.into_iter().map(|v| (v % 2, v)).collect(),
+            |key, items| (key, items.len()),
+        );
+        grouped.into_local()
+    });
+    let flat: Vec<(u64, usize)> = out.into_iter().flatten().collect();
+    let evens: usize = flat.iter().filter(|(k, _)| *k == 0).map(|(_, n)| n).sum();
+    let odds: usize = flat.iter().filter(|(k, _)| *k == 1).map(|(_, n)| n).sum();
+    // total records: sum over i of (i%3+1) = 1+2+3+1+2+3+1+2+3 = 18
+    assert_eq!(evens + odds, 18);
+}
+
+// ---------------------------------------------------- cross-coordinator
+
+#[test]
+fn dwork_feeds_pmake_style_outputs() {
+    // dwork workers produce files that satisfy a pmake DAG: the two
+    // schedulers compose through the filesystem, as in the paper's
+    // production pipelines (docking via dwork, analysis via pmake)
+    let dir = tmpdir("cross");
+    let mut state = dwork::SchedState::new();
+    for i in 0..3 {
+        state.create(TaskMsg::new(format!("produce-{i}"), vec![i]), &[]).unwrap();
+    }
+    let (connector, handle) = dwork::spawn_inproc(state, ServerConfig::default());
+    let dir2 = dir.clone();
+    {
+        let mut c = Client::new(Box::new(connector.connect()), "w");
+        dwork::run_worker(&mut c, 0, |t| {
+            let i = t.body.first().copied().unwrap_or(0);
+            std::fs::write(dir2.join(format!("part_{i}.dat")), format!("{i}\n"))?;
+            Ok(())
+        })
+        .unwrap();
+    }
+    drop(connector);
+    handle.join().unwrap();
+    // pmake combine step over the produced files
+    let rules = pmake::parse_rules(
+        r#"
+combine:
+  inp:
+    loop:
+      var: i
+      over: "range(0,3)"
+      tpl: "part_{i}.dat"
+  out:
+    all: "combined.dat"
+  script: |
+    cat part_0.dat part_1.dat part_2.dat > {out[all]}
+"#,
+    )
+    .unwrap();
+    let targets = pmake::parse_targets(&format!(
+        "t:\n  dirname: {}\n  out:\n    f: combined.dat\n",
+        dir.display()
+    ))
+    .unwrap();
+    let dag = Dag::build(
+        &rules,
+        &targets[0],
+        &|p: &Path| p.exists(),
+        &|rs| pmake::default_mpirun(rs),
+    )
+    .unwrap();
+    let report = pmake::run(
+        &dag,
+        &ShellExecutor::default(),
+        &SchedConfig { nodes: 1, machine: Machine::summit(1), fifo: false },
+    )
+    .unwrap();
+    assert!(report.all_ok());
+    let combined = std::fs::read_to_string(dir.join("combined.dat")).unwrap();
+    assert_eq!(combined, "0\n1\n2\n");
+    let _ = std::fs::remove_dir_all(&dir);
+}

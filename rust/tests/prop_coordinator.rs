@@ -1,0 +1,405 @@
+//! Property-based tests of coordinator invariants (via substrate::prop —
+//! the offline stand-in for proptest).
+//!
+//! Invariants checked:
+//!  * dwork: served tasks always have completed dependencies; every task
+//!    is served exactly once per completion; random Exit/Transfer storms
+//!    never lose or duplicate work; FIFO order holds absent re-insertion.
+//!  * pmake DAG: topological validity, priority monotonicity along
+//!    dependency edges, instance dedup.
+//!  * mpi-list: map/reduce agree with a sequential oracle; repartition
+//!    preserves global record multiset + order for random container
+//!    layouts; block distribution arithmetic.
+//!  * wire/kvstore/yaml: roundtrips on random data.
+
+use std::collections::{HashMap, HashSet};
+
+use threesched::coordinator::dwork::{SchedState, TaskMsg, TaskState};
+use threesched::coordinator::mpilist::{block_owner, block_range, Context, DFM};
+use threesched::substrate::prop::{check, Gen};
+use threesched::substrate::wire::{self, Reader, Writer};
+
+// ------------------------------------------------------------------ dwork
+
+/// Build a random DAG (edges only point to lower indices) and drive it
+/// with random steal/complete/exit storms.
+#[test]
+fn dwork_random_dag_never_serves_unready_tasks() {
+    check("dwork readiness invariant", 60, |g| {
+        let n = g.usize(1..30);
+        let mut s = SchedState::new();
+        let mut deps_of: Vec<Vec<usize>> = Vec::new();
+        for i in 0..n {
+            let mut deps = Vec::new();
+            if i > 0 {
+                for _ in 0..g.usize(0..3.min(i + 1)) {
+                    deps.push(g.usize(0..i));
+                }
+            }
+            deps.sort_unstable();
+            deps.dedup();
+            s.create(
+                TaskMsg::new(format!("t{i}"), vec![]),
+                &deps.iter().map(|d| format!("t{d}")).collect::<Vec<_>>(),
+            )
+            .unwrap();
+            deps_of.push(deps);
+        }
+        let mut completed: HashSet<usize> = HashSet::new();
+        let mut in_flight: HashMap<String, Vec<usize>> = HashMap::new();
+        let workers = ["w0", "w1", "w2"];
+        let mut served_total = 0usize;
+        let mut guard = 0;
+        while completed.len() < n {
+            guard += 1;
+            assert!(guard < 10_000, "drain did not converge");
+            let w = *g.choose(&workers);
+            match g.usize(0..10) {
+                // mostly steal+hold
+                0..=5 => {
+                    for t in s.steal(w, g.u64(1..4) as u32) {
+                        let idx: usize = t.name[1..].parse().unwrap();
+                        // INVARIANT: all deps completed at serve time
+                        for &d in &deps_of[idx] {
+                            assert!(completed.contains(&d), "t{idx} served before t{d}");
+                        }
+                        served_total += 1;
+                        in_flight.entry(w.to_string()).or_default().push(idx);
+                    }
+                }
+                // complete something we hold
+                6..=8 => {
+                    if let Some(list) = in_flight.get_mut(w) {
+                        if let Some(idx) = list.pop() {
+                            s.complete(w, &format!("t{idx}"), true).unwrap();
+                            completed.insert(idx);
+                        }
+                    }
+                }
+                // worker dies: its tasks go back; they will be re-served
+                _ => {
+                    if let Some(list) = in_flight.remove(w) {
+                        // only exit if actually holding something (keeps
+                        // the walk moving)
+                        if !list.is_empty() {
+                            s.exit_worker(w);
+                        }
+                    }
+                }
+            }
+        }
+        assert!(s.all_done());
+        // every task served at least once; re-serves only via exits
+        assert!(served_total >= n);
+    });
+}
+
+#[test]
+fn dwork_fifo_order_without_reinsertion() {
+    check("dwork FIFO", 50, |g| {
+        let n = g.usize(1..40);
+        let mut s = SchedState::new();
+        for i in 0..n {
+            s.create(TaskMsg::new(format!("t{i}"), vec![]), &[]).unwrap();
+        }
+        let mut last = -1i64;
+        loop {
+            let batch = s.steal("w", g.u64(1..5) as u32);
+            if batch.is_empty() {
+                break;
+            }
+            for t in batch {
+                let idx: i64 = t.name[1..].parse().unwrap();
+                assert!(idx > last, "FIFO violated: {idx} after {last}");
+                last = idx;
+                s.complete("w", &t.name, true).unwrap();
+            }
+        }
+        assert!(s.all_done());
+    });
+}
+
+#[test]
+fn dwork_error_propagation_is_exactly_the_reachable_set() {
+    check("dwork error closure", 40, |g| {
+        let n = g.usize(2..25);
+        let mut s = SchedState::new();
+        let mut deps_of: Vec<Vec<usize>> = Vec::new();
+        for i in 0..n {
+            let mut deps = Vec::new();
+            if i > 0 {
+                for _ in 0..g.usize(0..3.min(i + 1)) {
+                    deps.push(g.usize(0..i));
+                }
+            }
+            deps.sort_unstable();
+            deps.dedup();
+            s.create(
+                TaskMsg::new(format!("t{i}"), vec![]),
+                &deps.iter().map(|d| format!("t{d}")).collect::<Vec<_>>(),
+            )
+            .unwrap();
+            deps_of.push(deps);
+        }
+        // compute forward reachability from task 0 (it has no deps — it
+        // is ready — and we will fail it)
+        let mut poisoned = HashSet::new();
+        poisoned.insert(0usize);
+        loop {
+            let before = poisoned.len();
+            for i in 0..n {
+                if deps_of[i].iter().any(|d| poisoned.contains(d)) {
+                    poisoned.insert(i);
+                }
+            }
+            if poisoned.len() == before {
+                break;
+            }
+        }
+        // fail t0 (it is ready first since everything depends upward)
+        let first = s.steal("w", 1);
+        assert_eq!(first[0].name, "t0");
+        s.complete("w", "t0", false).unwrap();
+        // drain the rest
+        loop {
+            let batch = s.steal("w", 8);
+            if batch.is_empty() {
+                break;
+            }
+            for t in batch {
+                s.complete("w", &t.name, true).unwrap();
+            }
+        }
+        assert!(s.all_done());
+        for i in 0..n {
+            let state = s.get(&format!("t{i}")).unwrap().state;
+            if poisoned.contains(&i) {
+                assert_eq!(state, TaskState::Error, "t{i} should be poisoned");
+            } else {
+                assert_eq!(state, TaskState::Done, "t{i} should have run");
+            }
+        }
+    });
+}
+
+// ------------------------------------------------------------------ pmake
+
+#[test]
+fn pmake_dag_invariants_on_random_chains() {
+    use threesched::coordinator::pmake::{parse_rules, parse_targets, Dag};
+    check("pmake dag invariants", 30, |g| {
+        // random linear pipeline of 1..6 stages with random fan at the top
+        let stages = g.usize(1..6);
+        let fan = g.usize(1..5);
+        let mut rules = String::new();
+        for s in 0..stages {
+            let inp = if s == 0 {
+                "    src: \"{n}.src\"\n".to_string()
+            } else {
+                format!("    f: \"{{n}}.s{}\"\n", s - 1)
+            };
+            rules.push_str(&format!(
+                "stage{s}:\n  resources: {{time: {}, nrs: 1, cpu: 42}}\n  inp:\n{inp}  out:\n    f: \"{{n}}.s{s}\"\n  script: echo\n",
+                g.usize(1..120)
+            ));
+        }
+        let targets = format!(
+            "t:\n  loop:\n    n: \"range(0,{fan})\"\n  tgt:\n    f: \"{{n}}.s{}\"\n",
+            stages - 1
+        );
+        let rules = parse_rules(&rules).unwrap();
+        let targets = parse_targets(&targets).unwrap();
+        let dag = Dag::build(
+            &rules,
+            &targets[0],
+            &|p: &std::path::Path| p.to_string_lossy().ends_with(".src"),
+            &|_| String::new(),
+        )
+        .unwrap();
+        assert_eq!(dag.tasks.len(), stages * fan);
+        assert!(dag.is_topologically_valid());
+        // priority decreases along every dependency edge (a producer's
+        // priority includes all its successors)
+        for t in &dag.tasks {
+            for &d in &t.deps {
+                assert!(
+                    dag.tasks[d].priority > t.priority - 1e-9,
+                    "dep {} priority {} < dependent {} priority {}",
+                    d,
+                    dag.tasks[d].priority,
+                    t.id,
+                    t.priority
+                );
+            }
+        }
+    });
+}
+
+// --------------------------------------------------------------- mpi-list
+
+#[test]
+fn mpilist_matches_sequential_oracle() {
+    check("mpilist oracle", 25, |g| {
+        let n = g.u64(0..200);
+        let procs = g.usize(1..6);
+        let mul = g.u64(1..10);
+        let out = Context::run(procs, |ctx| {
+            let dfm = ctx.iterates(n).map(|x| x * mul).filter(|x| x % 3 != 1);
+            let sum = dfm.reduce(ctx, 0u64, |a, b| a + b);
+            let collected = dfm.collect(ctx);
+            (sum, collected)
+        });
+        let want: Vec<u64> = (0..n).map(|x| x * mul).filter(|x| x % 3 != 1).collect();
+        let want_sum: u64 = want.iter().sum();
+        for (sum, _) in &out {
+            assert_eq!(*sum, want_sum);
+        }
+        assert_eq!(out[0].1.as_ref().unwrap(), &want);
+    });
+}
+
+#[test]
+fn mpilist_repartition_preserves_records() {
+    check("repartition preserves", 20, |g| {
+        let procs = g.usize(1..5);
+        // random container layout per rank: values tagged by global order
+        let mut layouts: Vec<Vec<Vec<u64>>> = Vec::new();
+        let mut counter = 0u64;
+        for _ in 0..procs {
+            let containers = g.usize(0..4);
+            let mut rank_containers = Vec::new();
+            for _ in 0..containers {
+                let len = g.usize(0..7);
+                rank_containers.push((counter..counter + len as u64).collect::<Vec<u64>>());
+                counter += len as u64;
+            }
+            layouts.push(rank_containers);
+        }
+        let layouts2 = layouts.clone();
+        let out = Context::run(procs, move |ctx| {
+            let local = layouts2[ctx.rank()].clone();
+            DFM::from_local(local)
+                .repartition(
+                    ctx,
+                    |v| v.len(),
+                    |v, sizes| {
+                        let mut out = Vec::new();
+                        let mut it = v.into_iter();
+                        for &s in sizes {
+                            out.push(it.by_ref().take(s).collect::<Vec<u64>>());
+                        }
+                        out
+                    },
+                    |chunks| chunks.into_iter().flatten().collect(),
+                )
+                .into_local()
+        });
+        // global record order must be exactly 0..counter
+        let global: Vec<u64> = out.into_iter().flatten().flatten().collect();
+        assert_eq!(global, (0..counter).collect::<Vec<u64>>());
+    });
+}
+
+#[test]
+fn block_distribution_properties() {
+    check("block distribution", 200, |g| {
+        let p = g.usize(1..40);
+        let n = g.u64(0..10_000);
+        // ranges tile [0, n) exactly
+        let mut next = 0u64;
+        for r in 0..p {
+            let (start, count) = block_range(r, p, n);
+            assert_eq!(start, next);
+            next += count;
+            // counts differ by at most 1
+            let base = n / p as u64;
+            assert!(count == base || count == base + 1);
+        }
+        assert_eq!(next, n);
+        // owner agrees with range
+        if n > 0 {
+            let i = g.u64(0..n);
+            let owner = block_owner(i, p, n);
+            let (s, c) = block_range(owner, p, n);
+            assert!((s..s + c).contains(&i));
+        }
+    });
+}
+
+// ------------------------------------------------------------- substrates
+
+#[test]
+fn wire_roundtrips_random_messages() {
+    check("wire roundtrip", 300, |g| {
+        let mut w = Writer::new();
+        let mut expect: Vec<(u32, Option<u64>, Option<String>)> = Vec::new();
+        for _ in 0..g.usize(0..10) {
+            let field = g.u64(1..100) as u32;
+            if g.bool(0.5) {
+                let v = g.rng().next_u64();
+                w.uint(field, v);
+                expect.push((field, Some(v), None));
+            } else {
+                let s = g.ident(20);
+                w.string(field, &s);
+                expect.push((field, None, Some(s)));
+            }
+        }
+        let fields = Reader::new(w.as_bytes()).fields().unwrap();
+        assert_eq!(fields.len(), expect.len());
+        for ((f, v), (ef, ev, es)) in fields.iter().zip(&expect) {
+            assert_eq!(f, ef);
+            match (ev, es) {
+                (Some(x), None) => assert_eq!(v.as_u64(), Some(*x)),
+                (None, Some(s)) => assert_eq!(v.as_str(), Some(s.as_str())),
+                _ => unreachable!(),
+            }
+        }
+        let _ = wire::get_strs(&fields, 1);
+    });
+}
+
+#[test]
+fn kvstore_matches_btreemap_model() {
+    use std::collections::BTreeMap;
+    use threesched::substrate::kvstore::KvStore;
+    check("kvstore model", 50, |g| {
+        let mut kv = KvStore::in_memory();
+        let mut model: BTreeMap<Vec<u8>, Vec<u8>> = BTreeMap::new();
+        for _ in 0..g.usize(0..100) {
+            let key = g.ident(6).into_bytes();
+            if g.bool(0.7) {
+                let val = g.ident(12).into_bytes();
+                kv.set(&key, &val).unwrap();
+                model.insert(key, val);
+            } else {
+                let a = kv.remove(&key).unwrap();
+                let b = model.remove(&key);
+                assert_eq!(a, b);
+            }
+        }
+        assert_eq!(kv.len(), model.len());
+        for (k, v) in &model {
+            assert_eq!(kv.get(k), Some(v.as_slice()));
+        }
+        // prefix scan agrees
+        let all: Vec<_> = kv.scan_prefix(b"").map(|(k, _)| k.to_vec()).collect();
+        let want: Vec<_> = model.keys().cloned().collect();
+        assert_eq!(all, want);
+    });
+}
+
+#[test]
+fn yaml_roundtrips_flow_scalars() {
+    use threesched::substrate::yaml;
+    check("yaml scalars", 100, |g| {
+        let n = g.rng().next_u64() % 1_000_000;
+        let f = g.f64(-100.0, 100.0);
+        let src = format!("i: {n}\nf: {f:.4}\ns: \"id-{n}\"\nm: {{a: {n}, b: c}}\n");
+        let y = yaml::parse(&src).unwrap();
+        assert_eq!(y.get("i").unwrap().as_i64(), Some(n as i64));
+        assert!((y.get("f").unwrap().as_f64().unwrap() - f).abs() < 1e-3);
+        assert_eq!(y.get("s").unwrap().as_str(), Some(format!("id-{n}").as_str()));
+        assert_eq!(y.get("m").unwrap().get("a").unwrap().as_i64(), Some(n as i64));
+    });
+}

@@ -1,0 +1,207 @@
+//! Integration: Rust loads + executes the python-AOT artifacts and checks
+//! numerics against an independent Rust oracle.  This is the cross-layer
+//! correctness proof (L1 Pallas == L2 jax == what L3 actually runs).
+
+use threesched::runtime::service::RuntimeService;
+use threesched::runtime::{default_artifacts_dir, fill_f32, host_atb, HostBuf};
+
+fn service() -> RuntimeService {
+    let dir = default_artifacts_dir();
+    assert!(
+        dir.join("manifest.tsv").exists(),
+        "artifacts not built — run `make artifacts` first"
+    );
+    RuntimeService::start(&dir).expect("starting runtime service")
+}
+
+#[test]
+fn atb_64_matches_host_oracle() {
+    let svc = service();
+    let h = svc.handle();
+    let a = fill_f32(64 * 64, 1);
+    let b = fill_f32(64 * 64, 2);
+    let (outs, dt) = h
+        .execute("atb_64", vec![HostBuf::F32(a.clone()), HostBuf::F32(b.clone())])
+        .unwrap();
+    assert!(dt > 0.0);
+    let got = outs[0].as_f32().unwrap();
+    let want = host_atb(&a, &b, 64, 64, 64);
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 1e-3, "elem {i}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn atb_all_tile_sizes_run() {
+    let svc = service();
+    let h = svc.handle();
+    for ts in [64usize, 128, 256] {
+        let a = fill_f32(ts * ts, 10 + ts as u64);
+        let b = fill_f32(ts * ts, 20 + ts as u64);
+        let (outs, _) = h
+            .execute(&format!("atb_{ts}"), vec![HostBuf::F32(a), HostBuf::F32(b)])
+            .unwrap();
+        assert_eq!(outs[0].len(), ts * ts);
+    }
+}
+
+#[test]
+fn atb_chain_is_bounded_and_deterministic() {
+    let svc = service();
+    let h = svc.handle();
+    let a = fill_f32(64 * 64, 3);
+    let x0 = fill_f32(64 * 64, 4);
+    let run = || {
+        let (outs, _) = h
+            .execute(
+                "atb_chain_64_i16",
+                vec![HostBuf::F32(a.clone()), HostBuf::F32(x0.clone())],
+            )
+            .unwrap();
+        outs[0].as_f32().unwrap().to_vec()
+    };
+    let r1 = run();
+    let r2 = run();
+    assert_eq!(r1, r2, "chain must be deterministic");
+    let mx = r1.iter().fold(0f32, |m, x| m.max(x.abs()));
+    assert!(mx <= 1.0 + 1e-4, "normalized chain must stay bounded, max={mx}");
+    assert!(mx > 1e-6, "chain must not collapse to zero");
+}
+
+#[test]
+fn chain_iters_scale_compute_time() {
+    // i256 must cost roughly 16x i16 (within a loose band — CPU noise)
+    let svc = service();
+    let h = svc.handle();
+    let a = fill_f32(128 * 128, 5);
+    let x0 = fill_f32(128 * 128, 6);
+    h.warm(&["atb_chain_128_i16", "atb_chain_128_i256"]).unwrap();
+    let mut t16 = f64::MAX;
+    let mut t256 = f64::MAX;
+    for _ in 0..3 {
+        let (_, dt) = h
+            .execute("atb_chain_128_i16", vec![HostBuf::F32(a.clone()), HostBuf::F32(x0.clone())])
+            .unwrap();
+        t16 = t16.min(dt);
+        let (_, dt) = h
+            .execute("atb_chain_128_i256", vec![HostBuf::F32(a.clone()), HostBuf::F32(x0.clone())])
+            .unwrap();
+        t256 = t256.min(dt);
+    }
+    let ratio = t256 / t16;
+    assert!(ratio > 4.0, "expected i256 >> i16, ratio={ratio:.1} (t16={t16:.6} t256={t256:.6})");
+}
+
+#[test]
+fn colstats_matches_host() {
+    let svc = service();
+    let h = svc.handle();
+    let x = fill_f32(4096 * 8, 7);
+    let (outs, _) = h.execute("colstats_4096x8", vec![HostBuf::F32(x.clone())]).unwrap();
+    let got = outs[0].as_f32().unwrap(); // (4, 8): min,max,mean,var
+    assert_eq!(got.len(), 32);
+    for c in 0..8 {
+        let col: Vec<f32> = (0..4096).map(|r| x[r * 8 + c]).collect();
+        let min = col.iter().cloned().fold(f32::MAX, f32::min);
+        let max = col.iter().cloned().fold(f32::MIN, f32::max);
+        let mean = col.iter().sum::<f32>() / 4096.0;
+        assert!((got[c] - min).abs() < 1e-4, "min col {c}");
+        assert!((got[8 + c] - max).abs() < 1e-4, "max col {c}");
+        assert!((got[16 + c] - mean).abs() < 1e-4, "mean col {c}");
+    }
+}
+
+#[test]
+fn hist2d_conserves_mass() {
+    let svc = service();
+    let h = svc.handle();
+    let xy = fill_f32(4096 * 2, 8);
+    let lo = vec![-1.0f32, -1.0];
+    let hi = vec![1.0f32, 1.0];
+    let (outs, _) = h
+        .execute(
+            "hist2d_4096",
+            vec![HostBuf::F32(xy), HostBuf::F32(lo), HostBuf::F32(hi)],
+        )
+        .unwrap();
+    let hist = outs[0].as_f32().unwrap();
+    assert_eq!(hist.len(), 301 * 201);
+    let total: f32 = hist.iter().sum();
+    assert_eq!(total, 4096.0);
+}
+
+#[test]
+fn score_gen_deterministic() {
+    let svc = service();
+    let h = svc.handle();
+    let run = |seed: i32| {
+        let (outs, _) = h
+            .execute("score_gen_4096x8", vec![HostBuf::I32(vec![seed])])
+            .unwrap();
+        outs[0].as_f32().unwrap().to_vec()
+    };
+    assert_eq!(run(7), run(7));
+    assert_ne!(run(7), run(8));
+}
+
+#[test]
+fn input_validation_rejects_garbage() {
+    let svc = service();
+    let h = svc.handle();
+    // wrong arity
+    assert!(h.execute("atb_64", vec![]).is_err());
+    // wrong element count
+    assert!(h
+        .execute("atb_64", vec![HostBuf::F32(vec![0.0; 3]), HostBuf::F32(vec![0.0; 3])])
+        .is_err());
+    // wrong dtype
+    assert!(h
+        .execute(
+            "atb_64",
+            vec![HostBuf::I32(vec![0; 64 * 64]), HostBuf::F32(vec![0.0; 64 * 64])]
+        )
+        .is_err());
+    // unknown artifact
+    assert!(h.execute("nope", vec![]).is_err());
+}
+
+#[test]
+fn warm_compiles_ahead() {
+    let svc = service();
+    let h = svc.handle();
+    let dt = h.warm(&["atb_64"]).unwrap();
+    assert!(dt >= 0.0);
+    // warmed executable now runs fast (no compile in the execute path)
+    let a = fill_f32(64 * 64, 9);
+    let b = fill_f32(64 * 64, 10);
+    let (_, exec_dt) = h.execute("atb_64", vec![HostBuf::F32(a), HostBuf::F32(b)]).unwrap();
+    assert!(exec_dt < 1.0, "post-warm execute took {exec_dt}s");
+}
+
+#[test]
+fn flops_lookup() {
+    let svc = service();
+    let h = svc.handle();
+    assert_eq!(h.flops("atb_256").unwrap(), 2.0 * 256f64.powi(3));
+    assert!(h.flops("bogus").is_err());
+}
+
+#[test]
+fn handles_usable_from_many_threads() {
+    let svc = service();
+    let h = svc.handle();
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let h = h.clone();
+            s.spawn(move || {
+                let a = fill_f32(64 * 64, 100 + t);
+                let b = fill_f32(64 * 64, 200 + t);
+                let (outs, _) = h
+                    .execute("atb_64", vec![HostBuf::F32(a), HostBuf::F32(b)])
+                    .unwrap();
+                assert_eq!(outs[0].len(), 64 * 64);
+            });
+        }
+    });
+}
