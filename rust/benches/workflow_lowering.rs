@@ -1,0 +1,98 @@
+//! Workflow-subsystem throughput: graph construction, analysis, the
+//! three lowerings, and selection on large synthetic graphs.  The IR must
+//! never be the bottleneck next to coordinators that create/deque a
+//! million tasks a minute (paper sec. 6).
+//!
+//! Run: `cargo bench --bench workflow_lowering`
+
+use std::time::Instant;
+
+use threesched::substrate::cluster::costs::CostModel;
+use threesched::workflow::{self, TaskSpec, WorkflowGraph};
+
+/// Layered graph: `levels` levels of `width` tasks; each task depends on
+/// its column neighbour one level up (plus a diagonal for irregularity).
+fn layered(levels: usize, width: usize) -> WorkflowGraph {
+    let mut g = WorkflowGraph::new("bench");
+    for l in 0..levels {
+        for w in 0..width {
+            let mut t = TaskSpec::command(format!("t{l}x{w}"), "true")
+                .outputs(&[&format!("t{l}x{w}.out")])
+                .est(1.0 + (w % 5) as f64);
+            if l > 0 {
+                let up = format!("t{}x{w}", l - 1);
+                let diag = format!("t{}x{}", l - 1, (w + 1) % width);
+                t.after = vec![up, diag];
+            }
+            g.add_task(t).unwrap();
+        }
+    }
+    g
+}
+
+fn rate(n: usize, dt: f64) -> String {
+    format!("{:.2} M tasks/s ({:.1} ms total)", n as f64 / dt / 1e6, dt * 1e3)
+}
+
+fn main() {
+    let (levels, width) = (50, 1000);
+    let n = levels * width;
+    println!("workflow lowering bench: {levels}x{width} layered graph ({n} tasks)\n");
+
+    let t0 = Instant::now();
+    let g = layered(levels, width);
+    println!("build + hygiene:   {}", rate(n, t0.elapsed().as_secs_f64()));
+
+    let t0 = Instant::now();
+    g.validate().unwrap();
+    println!("validate (cycles): {}", rate(n, t0.elapsed().as_secs_f64()));
+
+    let t0 = Instant::now();
+    let stats = g.stats().unwrap();
+    println!(
+        "stats:             {}  (depth {}, width {}, cp {:.0}s)",
+        rate(n, t0.elapsed().as_secs_f64()),
+        stats.depth,
+        stats.width,
+        stats.critical_path_s
+    );
+
+    let t0 = Instant::now();
+    let lowered = workflow::to_pmake(&g, "/tmp/campaign").unwrap();
+    println!(
+        "lower -> pmake:    {}  ({} KB of rules yaml)",
+        rate(n, t0.elapsed().as_secs_f64()),
+        lowered.rules_yaml.len() / 1024
+    );
+
+    let t0 = Instant::now();
+    let tasks = workflow::to_dwork(&g).unwrap();
+    println!(
+        "lower -> dwork:    {}  ({} tasks)",
+        rate(n, t0.elapsed().as_secs_f64()),
+        tasks.len()
+    );
+
+    let t0 = Instant::now();
+    let plan = workflow::to_mpilist(&g, 864).unwrap();
+    println!(
+        "lower -> mpilist:  {}  ({} phases x 864 ranks)",
+        rate(n, t0.elapsed().as_secs_f64()),
+        plan.levels.len()
+    );
+
+    let m = CostModel::paper();
+    let t0 = Instant::now();
+    let rec = workflow::select(&g, &m, 864).unwrap();
+    println!(
+        "select:            {}  (-> {})",
+        rate(n, t0.elapsed().as_secs_f64()),
+        rec.choice.name()
+    );
+
+    // round-trip sanity while we are here: the pmake text parses back
+    let t0 = Instant::now();
+    let rules = threesched::coordinator::pmake::parse_rules(&lowered.rules_yaml).unwrap();
+    assert_eq!(rules.len(), n);
+    println!("reparse rules:     {}", rate(n, t0.elapsed().as_secs_f64()));
+}

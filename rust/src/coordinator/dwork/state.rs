@@ -127,6 +127,25 @@ impl SchedState {
         SchedState::with_store(KvStore::in_memory())
     }
 
+    /// Workflow-IR ingestion: a fresh volatile state pre-loaded with the
+    /// graph's tasks (payloads in the task bodies, dependencies as join
+    /// edges), ready for workers to drain.
+    pub fn from_workflow(g: &crate::workflow::WorkflowGraph) -> Result<SchedState> {
+        let mut s = SchedState::new();
+        s.ingest_workflow(g)?;
+        Ok(s)
+    }
+
+    /// Add every task of `g` to this state (topological creation order,
+    /// as the Create API requires).  Composable: an already-running dhub
+    /// can absorb a workflow next to hand-created tasks.
+    pub fn ingest_workflow(&mut self, g: &crate::workflow::WorkflowGraph) -> Result<()> {
+        for t in crate::workflow::lower::to_dwork(g)? {
+            self.create(t.msg, &t.deps)?;
+        }
+        Ok(())
+    }
+
     /// State backed by a persistent store; replays any existing records.
     pub fn with_store(kv: KvStore) -> SchedState {
         let mut s = SchedState {

@@ -51,6 +51,17 @@ impl Context {
     }
 }
 
+/// Workflow-IR ingestion: compile a [`WorkflowGraph`] into the static
+/// bulk-synchronous plan this coordinator executes (topological phases,
+/// each block-distributed with [`block_range`]).  Drive it with
+/// [`crate::workflow::run::run_mpilist`] or a custom SPMD loop.
+pub fn from_workflow(
+    g: &crate::workflow::WorkflowGraph,
+    procs: usize,
+) -> anyhow::Result<crate::workflow::lower::MpiListPlan> {
+    crate::workflow::lower::to_mpilist(g, procs)
+}
+
 /// Block distribution (paper sec. 2.3): rank p of P stores the
 /// subsequence starting at `p*floor(N/P) + min(p, N mod P)`.
 pub fn block_range(p: usize, procs: usize, n: u64) -> (u64, u64) {

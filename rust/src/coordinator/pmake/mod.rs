@@ -31,6 +31,19 @@ pub fn default_mpirun(rs: &ResourceSet) -> String {
     String::new()
 }
 
+/// Workflow-IR ingestion: lower a [`WorkflowGraph`] to pmake rule/target
+/// documents rooted at `dirname` and parse them back into typed rules +
+/// targets.  Going through the text form keeps the invariant that every
+/// ingested workflow is also expressible as standalone `rules.yaml` /
+/// `targets.yaml` files a user could run by hand.
+pub fn from_workflow(
+    g: &crate::workflow::WorkflowGraph,
+    dirname: &str,
+) -> Result<(Vec<Rule>, Vec<Target>)> {
+    let lowered = crate::workflow::lower::to_pmake(g, dirname)?;
+    Ok((parse_rules(&lowered.rules_yaml)?, parse_targets(&lowered.targets_yaml)?))
+}
+
 /// End-to-end convenience: parse rule/target files, build DAGs (one per
 /// target), and run them on the executor.
 pub fn make(

@@ -25,11 +25,28 @@
 //! state machines at paper scale (6–6912 ranks).
 //!
 //! Task bodies are real compute: JAX/Pallas `AᵀB` matmul programs AOT-lowered
-//! to HLO text and executed through the PJRT CPU client ([`runtime`]).
+//! to HLO text and executed through the PJRT CPU client ([`runtime`]; with
+//! the `pjrt` feature off, a pure-Rust interpreter runs the same kernels).
 //! The [`metg`] module implements the paper's minimum-effective-task-
 //! granularity evaluation methodology.
+//!
+//! On top of the three coordinators sits the [`workflow`] subsystem: a
+//! unified workflow IR (`WorkflowGraph` of `TaskSpec` nodes, with cycle
+//! detection and critical-path/width analysis), a YAML front-end, three
+//! lowerings (pmake rules, dwork task lists, mpi-list static rank plans),
+//! and an adaptive selector that matches graph shape + task granularity
+//! against each coordinator's METG to recommend — or auto-dispatch to —
+//! the cheapest synchronization mechanism.  Describe a campaign once,
+//! run it on any of the three schedulers:
+//!
+//! ```text
+//! threesched workflow plan  --file wf.yaml --ranks 864
+//! threesched workflow lower --file wf.yaml --coordinator pmake
+//! threesched workflow run   --file wf.yaml --coordinator auto
+//! ```
 
 pub mod coordinator;
 pub mod metg;
 pub mod runtime;
 pub mod substrate;
+pub mod workflow;

@@ -1,12 +1,14 @@
 //! threesched CLI: leader entrypoint for the three schedulers.
 //!
 //! Subcommands:
-//!   pmake   — run a rules.yaml/targets.yaml campaign on this host
-//!   dwork   — serve | worker | create | status | drain  (TCP deployment)
-//!   task    — execute one AOT artifact through PJRT (the job-step body
-//!             that pmake scripts launch, and a smoke-check for the
-//!             runtime path)
-//!   metg    — print the paper-scale METG sweep (DES)
+//!   pmake    — run a rules.yaml/targets.yaml campaign on this host
+//!   dwork    — serve | worker | create | status | drain  (TCP deployment)
+//!   task     — execute one AOT artifact through PJRT (the job-step body
+//!              that pmake scripts launch, and a smoke-check for the
+//!              runtime path)
+//!   metg     — print the paper-scale METG sweep (DES)
+//!   workflow — plan | lower | run: one workflow.yaml, three lowerings,
+//!              METG-based adaptive coordinator selection
 //!
 //! Run with no args for usage.
 
@@ -17,7 +19,9 @@ use anyhow::{bail, Context as _, Result};
 use threesched::coordinator::dwork::{self, Client, TaskMsg};
 use threesched::coordinator::pmake;
 use threesched::metg::harness::{metg_sweep, render_metg, PAPER_RANKS};
+use threesched::metg::simmodels::Tool;
 use threesched::metg::Workload;
+use threesched::workflow;
 use threesched::runtime::service::RuntimeService;
 use threesched::runtime::{default_artifacts_dir, fill_f32, HostBuf};
 use threesched::substrate::cli::{parse, Flag};
@@ -40,6 +44,11 @@ commands:
   dwork drain   --connect addr:port            (no-op worker: marks tasks done)
   task    --artifact atb_128 [--seed S] [--out file] [--artifacts-dir D]
   metg    [--rtt-us X]
+  workflow plan   --file wf.yaml [--ranks N]     (stats + selector verdict)
+  workflow lower  --file wf.yaml --coordinator pmake|dwork|mpilist
+                  [--out dir] [--ranks N]
+  workflow run    --file wf.yaml [--coordinator auto|pmake|dwork|mpilist]
+                  [--procs N] [--dir D]
 ";
 
 fn main() {
@@ -65,6 +74,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "dwork" => cmd_dwork(rest),
         "task" => cmd_task(rest),
         "metg" => cmd_metg(rest),
+        "workflow" => cmd_workflow(rest),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -286,6 +296,106 @@ fn cmd_task(argv: &[String]) -> Result<()> {
     let dt = run_artifact(&h, &dir, artifact, seed, args.get("out").map(Path::new))?;
     println!("{artifact} seed={seed}: executed in {:.3}ms", dt * 1e3);
     Ok(())
+}
+
+// ---------------------------------------------------------------- workflow
+
+fn cmd_workflow(argv: &[String]) -> Result<()> {
+    let Some(verb) = argv.first().map(String::as_str) else {
+        bail!("workflow needs a verb: plan | lower | run\n{USAGE}");
+    };
+    let rest = &argv[1..];
+    match verb {
+        "plan" => {
+            let spec = [
+                Flag { name: "file", help: "workflow yaml", takes_value: true, default: Some("workflow.yaml") },
+                Flag { name: "ranks", help: "target scale for the selector", takes_value: true, default: Some("864") },
+            ];
+            let args = parse(rest, &spec)?;
+            let g = workflow::parse_workflow_file(Path::new(args.get("file").unwrap()))?;
+            let ranks = args.get_usize("ranks", 864)?;
+            let rec = workflow::select(&g, &CostModel::paper(), ranks)?;
+            print!("workflow {:?}\n{}", g.name, rec.render());
+            Ok(())
+        }
+        "lower" => {
+            let spec = [
+                Flag { name: "file", help: "workflow yaml", takes_value: true, default: Some("workflow.yaml") },
+                Flag { name: "coordinator", help: "pmake | dwork | mpilist", takes_value: true, default: Some("pmake") },
+                Flag { name: "out", help: "write lowered files here (pmake only; default: print)", takes_value: true, default: None },
+                Flag { name: "ranks", help: "rank count for the mpilist plan", takes_value: true, default: Some("4") },
+            ];
+            let args = parse(rest, &spec)?;
+            let g = workflow::parse_workflow_file(Path::new(args.get("file").unwrap()))?;
+            match args.get("coordinator").unwrap() {
+                "pmake" => {
+                    let dirname = args.get("out").unwrap_or(".").to_string();
+                    let low = workflow::to_pmake(&g, &dirname)?;
+                    match args.get("out") {
+                        Some(dir) => {
+                            std::fs::create_dir_all(dir)?;
+                            std::fs::write(Path::new(dir).join("rules.yaml"), &low.rules_yaml)?;
+                            std::fs::write(Path::new(dir).join("targets.yaml"), &low.targets_yaml)?;
+                            println!("wrote {dir}/rules.yaml and {dir}/targets.yaml");
+                        }
+                        None => print!(
+                            "# rules.yaml\n{}\n# targets.yaml\n{}",
+                            low.rules_yaml, low.targets_yaml
+                        ),
+                    }
+                }
+                "dwork" => {
+                    let tasks = workflow::to_dwork(&g)?;
+                    print!("{}", workflow::lower::render_dwork(&tasks));
+                }
+                "mpilist" => {
+                    let plan = workflow::to_mpilist(&g, args.get_usize("ranks", 4)?)?;
+                    print!("{}", plan.render(&g));
+                }
+                other => bail!("unknown coordinator {other:?} (pmake | dwork | mpilist)"),
+            }
+            Ok(())
+        }
+        "run" => {
+            let spec = [
+                Flag { name: "file", help: "workflow yaml", takes_value: true, default: Some("workflow.yaml") },
+                Flag { name: "coordinator", help: "auto | pmake | dwork | mpilist", takes_value: true, default: Some("auto") },
+                Flag { name: "procs", help: "parallelism (nodes/workers/ranks)", takes_value: true, default: None },
+                Flag { name: "dir", help: "campaign working directory", takes_value: true, default: Some(".") },
+            ];
+            let args = parse(rest, &spec)?;
+            let g = workflow::parse_workflow_file(Path::new(args.get("file").unwrap()))?;
+            let default_procs =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+            let procs = args.get_usize("procs", default_procs)?;
+            let dir = Path::new(args.get("dir").unwrap());
+            let summary = match args.get("coordinator").unwrap() {
+                "auto" => {
+                    let (rec, summary) =
+                        workflow::run_auto(&g, &CostModel::paper(), procs, dir)?;
+                    print!("{}", rec.render());
+                    summary
+                }
+                "pmake" => workflow::dispatch(&g, Tool::Pmake, procs, dir)?,
+                "dwork" => workflow::dispatch(&g, Tool::Dwork, procs, dir)?,
+                "mpilist" => workflow::dispatch(&g, Tool::MpiList, procs, dir)?,
+                other => bail!("unknown coordinator {other:?} (auto | pmake | dwork | mpilist)"),
+            };
+            println!(
+                "{}: {} tasks run, {} failed, {} skipped, makespan {:.3}s",
+                summary.coordinator.name(),
+                summary.tasks_run,
+                summary.tasks_failed,
+                summary.tasks_skipped,
+                summary.makespan_s
+            );
+            if !summary.all_ok() {
+                bail!("workflow had failures");
+            }
+            Ok(())
+        }
+        other => bail!("unknown workflow verb {other:?}"),
+    }
 }
 
 // -------------------------------------------------------------------- metg

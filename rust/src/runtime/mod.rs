@@ -10,6 +10,12 @@
 //! and hands out cheap clonable [`service::RuntimeHandle`]s — the same
 //! shape as the paper's "1 MPI rank per GPU" device queue, with the
 //! service thread playing the device.
+//!
+//! Feature gating: the `xla` crate (and the native XLA toolchain behind
+//! it) is only required with `--features pjrt`.  The default build uses a
+//! pure-Rust interpreter for the `atb_*` matmul artifacts (same manifest,
+//! same [`HostBuf`] contract, same numerics as [`host_atb`]), so every
+//! coordinator, test and example works in a hermetic offline build.
 
 pub mod registry;
 pub mod service;
@@ -56,6 +62,7 @@ impl HostBuf {
 }
 
 /// The single-threaded runtime: PJRT client + compiled-executable cache.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     manifest: Manifest,
@@ -65,6 +72,7 @@ pub struct Runtime {
     pub exec_counts: HashMap<String, u64>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Open the artifact directory (must contain manifest.tsv).
     pub fn open(artifacts_dir: &Path) -> Result<Self> {
@@ -185,6 +193,113 @@ impl Runtime {
     }
 }
 
+/// Pure-Rust fallback runtime (no `pjrt` feature): interprets the `atb_N`
+/// artifacts with [`host_atb`] so the full scheduler stack runs offline.
+/// Same manifest contract, same validation, same output shapes.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    manifest: Manifest,
+    /// executions per artifact (perf accounting)
+    pub exec_counts: HashMap<String, u64>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Open the artifact directory (must contain manifest.tsv).
+    pub fn open(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.tsv"))?;
+        Ok(Runtime { manifest, exec_counts: HashMap::new() })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn open_default() -> Result<Self> {
+        Runtime::open(&default_artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?} (run `make artifacts`?)"))
+    }
+
+    /// No compilation step in interpreter mode; this only checks the
+    /// artifact is known and interpretable (parity with the PJRT `load`).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        self.spec(name)?;
+        atb_tile(name)?;
+        Ok(())
+    }
+
+    /// Execute `name` on host buffers; returns the output buffers.
+    pub fn execute(&mut self, name: &str, inputs: &[HostBuf]) -> Result<Vec<HostBuf>> {
+        let spec = self.spec(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (buf, shape)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if buf.dtype() != shape.dtype {
+                bail!("{name}: input {i} dtype mismatch ({:?} vs {:?})", buf.dtype(), shape.dtype);
+            }
+            if buf.len() != shape.elems() {
+                bail!(
+                    "{name}: input {i} has {} elements, shape {} wants {}",
+                    buf.len(),
+                    shape,
+                    shape.elems()
+                );
+            }
+        }
+        let ts = atb_tile(name)?;
+        // the manifest is the shape authority: refuse to compute if it
+        // disagrees with the name the interpreter dispatches on
+        if spec.inputs.len() != 2
+            || spec.inputs.iter().any(|s| s.elems() != ts * ts)
+            || spec.outputs.len() != 1
+            || spec.outputs[0].elems() != ts * ts
+        {
+            bail!(
+                "{name}: manifest shapes do not match an atb_{ts} kernel \
+                 (interpreter mode cannot run it)"
+            );
+        }
+        let a = inputs[0].as_f32()?;
+        let b = inputs[1].as_f32()?;
+        let out = host_atb(a, b, ts, ts, ts);
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        Ok(vec![HostBuf::F32(out)])
+    }
+}
+
+/// Largest tile the in-process interpreters accept: 8192² f32 is 256 MB
+/// per operand, already generous for one host task.
+pub const MAX_ATB_TILE: usize = 8192;
+
+/// Tile size of a plain `atb_{N}` artifact; errors for artifacts the
+/// pure-Rust interpreters cannot emulate (chained/fused variants need
+/// real PJRT) and for tile sizes whose buffers would not fit a sane
+/// host task.  Shared by the interpreter-mode [`Runtime`] and the
+/// workflow kernel driver.
+pub fn atb_tile(name: &str) -> Result<usize> {
+    let ts = name
+        .strip_prefix("atb_")
+        .and_then(|s| s.parse::<usize>().ok())
+        .ok_or_else(|| {
+            anyhow!("artifact {name:?} is not a plain atb_N kernel (interpreter only runs atb_N)")
+        })?;
+    if ts == 0 || ts > MAX_ATB_TILE {
+        bail!("artifact {name:?}: interpreter supports tile sizes 1..={MAX_ATB_TILE}");
+    }
+    Ok(ts)
+}
+
 /// Locate `artifacts/` by walking up from the current directory (so tests,
 /// benches and examples work from any workspace subdirectory).
 pub fn default_artifacts_dir() -> PathBuf {
@@ -263,5 +378,75 @@ mod tests {
         assert_eq!(b.dtype(), Dtype::F32);
         let i = HostBuf::I32(vec![1]);
         assert!(i.as_f32().is_err());
+    }
+
+    /// Interpreter-mode coverage (mirrors tests/runtime_artifacts.rs for
+    /// the offline build): synthesize a manifest, run atb_64, check the
+    /// numerics against the host oracle and the validation paths.
+    #[cfg(not(feature = "pjrt"))]
+    mod interpreter {
+        use super::super::*;
+
+        fn manifest_dir() -> PathBuf {
+            let d = std::env::temp_dir()
+                .join(format!("threesched-interp-{}-{:?}", std::process::id(), std::thread::current().id()));
+            let _ = std::fs::remove_dir_all(&d);
+            std::fs::create_dir_all(&d).unwrap();
+            std::fs::write(
+                d.join("manifest.tsv"),
+                "atb_64\tatb_64.hlo.txt\tf32[64,64];f32[64,64]\tf32[64,64]\t524288\n\
+                 atb_chain_64_i16\tc.hlo.txt\tf32[64,64];f32[64,64]\tf32[64,64]\t1\n",
+            )
+            .unwrap();
+            d
+        }
+
+        #[test]
+        fn atb_matches_host_oracle() {
+            let dir = manifest_dir();
+            let mut rt = Runtime::open(&dir).unwrap();
+            let a = fill_f32(64 * 64, 1);
+            let b = fill_f32(64 * 64, 2);
+            let outs = rt
+                .execute("atb_64", &[HostBuf::F32(a.clone()), HostBuf::F32(b.clone())])
+                .unwrap();
+            assert_eq!(outs[0].as_f32().unwrap(), &host_atb(&a, &b, 64, 64, 64)[..]);
+            assert_eq!(rt.exec_counts["atb_64"], 1);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+
+        #[test]
+        fn validation_and_unsupported_artifacts() {
+            let dir = manifest_dir();
+            let mut rt = Runtime::open(&dir).unwrap();
+            // wrong arity
+            assert!(rt.execute("atb_64", &[]).is_err());
+            // wrong element count
+            assert!(rt
+                .execute("atb_64", &[HostBuf::F32(vec![0.0; 3]), HostBuf::F32(vec![0.0; 3])])
+                .is_err());
+            // unknown artifact
+            assert!(rt.execute("nope", &[]).is_err());
+            // chain artifacts need real PJRT
+            assert!(rt.load("atb_chain_64_i16").is_err());
+            assert!(rt.load("atb_64").is_ok());
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+
+        #[test]
+        fn service_thread_works_in_interpreter_mode() {
+            let dir = manifest_dir();
+            let svc = crate::runtime::service::RuntimeService::start(&dir).unwrap();
+            let h = svc.handle();
+            let a = fill_f32(64 * 64, 3);
+            let b = fill_f32(64 * 64, 4);
+            let (outs, dt) = h
+                .execute("atb_64", vec![HostBuf::F32(a), HostBuf::F32(b)])
+                .unwrap();
+            assert_eq!(outs[0].len(), 64 * 64);
+            assert!(dt >= 0.0);
+            assert_eq!(h.flops("atb_64").unwrap(), 524288.0);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
     }
 }

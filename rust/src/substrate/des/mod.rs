@@ -19,12 +19,23 @@ pub type SimTime = f64;
 
 /// An event: fires `key` at time `at`.  Payloads are user-side (the
 /// scheduler models key their own state tables by `key`).
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct Event {
     pub at: SimTime,
     pub key: u64,
     /// insertion sequence — makes equal-time ordering deterministic
     seq: u64,
+}
+
+// PartialEq via total_cmp so equality stays consistent with Ord even
+// for NaN times (derived f64 == would make a NaN event unequal to
+// itself while cmp returns Equal — a std logic error).
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.at.total_cmp(&other.at) == Ordering::Equal
+            && self.key == other.key
+            && self.seq == other.seq
+    }
 }
 
 impl Eq for Event {}
@@ -37,12 +48,11 @@ impl PartialOrd for Event {
 
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap: invert for earliest-first
-        other
-            .at
-            .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
-            .then(other.seq.cmp(&self.seq))
+        // BinaryHeap is a max-heap: invert for earliest-first.  total_cmp
+        // keeps the ordering a strict total order even if a cost model
+        // ever produces a NaN time: NaN sorts last (largest) instead of
+        // silently comparing Equal and corrupting heap invariants.
+        other.at.total_cmp(&self.at).then(other.seq.cmp(&self.seq))
     }
 }
 
@@ -74,7 +84,9 @@ impl Sim {
 
     /// Schedule `key` to fire at absolute time `at` (>= now).
     pub fn at(&mut self, at: SimTime, key: u64) {
-        debug_assert!(at >= self.now - 1e-12, "event scheduled in the past");
+        // NaN-tolerant phrasing: a NaN time is not "in the past" — it
+        // sorts last in the heap (see Event::cmp) instead of asserting
+        debug_assert!(!(at < self.now - 1e-12), "event scheduled in the past");
         self.seq += 1;
         self.heap.push(Event { at, key, seq: self.seq });
     }
@@ -179,6 +191,21 @@ mod tests {
         let k = key::pack(u16::MAX, (1u64 << 48) - 1);
         assert_eq!(key::kind(k), u16::MAX);
         assert_eq!(key::index(k), (1u64 << 48) - 1);
+    }
+
+    #[test]
+    fn nan_time_sorts_last_and_keeps_total_order() {
+        // A NaN event time must not corrupt heap ordering (total_cmp gives
+        // a strict total order; NaN is the "latest" possible time).
+        let mut sim = Sim::new();
+        sim.at(f64::NAN, 99);
+        sim.at(1.0, 1);
+        sim.at(2.0, 2);
+        let mut order = Vec::new();
+        while let Some(ev) = sim.heap.pop() {
+            order.push(ev.key);
+        }
+        assert_eq!(order, vec![1, 2, 99]);
     }
 
     #[test]

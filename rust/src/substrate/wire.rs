@@ -11,21 +11,30 @@
 //! actual protobuf framing, so any protobuf implementation could read our
 //! integer/bytes fields.
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum WireError {
-    #[error("varint overflows u64")]
     VarintOverflow,
-    #[error("unexpected end of buffer")]
     Truncated,
-    #[error("unsupported wire type {0}")]
     BadWireType(u8),
-    #[error("invalid utf-8 in string field")]
     BadUtf8,
-    #[error("missing required field {0}")]
     MissingField(u32),
 }
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::VarintOverflow => write!(f, "varint overflows u64"),
+            WireError::Truncated => write!(f, "unexpected end of buffer"),
+            WireError::BadWireType(t) => write!(f, "unsupported wire type {t}"),
+            WireError::BadUtf8 => write!(f, "invalid utf-8 in string field"),
+            WireError::MissingField(n) => write!(f, "missing required field {n}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
 
 /// Append-only message writer.
 #[derive(Default, Debug)]

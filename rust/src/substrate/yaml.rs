@@ -13,13 +13,20 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
-use thiserror::Error;
-
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum YamlError {
-    #[error("line {0}: {1}")]
     Parse(usize, String),
 }
+
+impl fmt::Display for YamlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            YamlError::Parse(line, msg) => write!(f, "line {line}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for YamlError {}
 
 /// Parsed YAML value.  Mappings preserve insertion order via a Vec of pairs
 /// (pmake rule order matters: "stops searching when it finds the files").

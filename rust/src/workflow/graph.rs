@@ -1,0 +1,677 @@
+//! The workflow IR: a [`WorkflowGraph`] of [`TaskSpec`] nodes.
+//!
+//! One graph, three executions: every coordinator consumes this IR
+//! through a lowering (see [`super::lower`]), so users describe a
+//! campaign once and pick — or let [`super::select`] pick — the
+//! synchronization mechanism later.  The graph/scheduler separation
+//! follows `substantic/rain` (graph object distinct from the reactive
+//! scheduler) and the `DAGSchedulerBase` shape in sched_sim_rust.
+//!
+//! Node identity is the task *name* (stable across lowerings: it becomes
+//! the pmake rule name, the dwork task name, and the mpi-list element
+//! label), so names are restricted to a filesystem/YAML-safe alphabet.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::substrate::cluster::ResourceSet;
+
+/// What a task actually does when executed.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// A shell script (runs under `/bin/sh` in the campaign directory).
+    Command { script: String },
+    /// An AOT kernel artifact executed with deterministic seeded inputs.
+    Kernel { artifact: String, seed: u64 },
+    /// Pure synchronization point (no work).
+    Noop,
+}
+
+impl Payload {
+    /// Payload kind discriminant (used by shape analysis: a "uniform"
+    /// level runs one kind of payload).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Payload::Command { .. } => "command",
+            Payload::Kernel { .. } => "kernel",
+            Payload::Noop => "noop",
+        }
+    }
+
+    /// Encode for the dwork task body (scheduler-opaque bytes).
+    pub fn encode_body(&self) -> Vec<u8> {
+        match self {
+            Payload::Command { script } => format!("sh\n{script}").into_bytes(),
+            Payload::Kernel { artifact, seed } => {
+                format!("kernel\n{artifact} {seed}").into_bytes()
+            }
+            Payload::Noop => b"noop\n".to_vec(),
+        }
+    }
+
+    /// Decode a dwork task body written by [`Payload::encode_body`].
+    pub fn decode_body(body: &[u8]) -> Result<Payload> {
+        let text = std::str::from_utf8(body).map_err(|_| anyhow::anyhow!("non-utf8 body"))?;
+        let (kind, rest) = text.split_once('\n').unwrap_or((text, ""));
+        match kind {
+            "sh" => Ok(Payload::Command { script: rest.to_string() }),
+            "kernel" => {
+                let (artifact, seed) = rest
+                    .trim_end()
+                    .split_once(' ')
+                    .ok_or_else(|| anyhow::anyhow!("bad kernel body {rest:?}"))?;
+                Ok(Payload::Kernel {
+                    artifact: artifact.to_string(),
+                    seed: seed.parse().map_err(|_| anyhow::anyhow!("bad seed {seed:?}"))?,
+                })
+            }
+            "noop" => Ok(Payload::Noop),
+            other => bail!("unknown payload kind {other:?}"),
+        }
+    }
+}
+
+/// One node of the workflow graph.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub name: String,
+    pub payload: Payload,
+    /// source files this task reads (must pre-exist; file-based lowerings
+    /// verify presence, the others treat them as documentation)
+    pub inputs: Vec<String>,
+    /// files this task produces (its synchronization tokens under pmake)
+    pub outputs: Vec<String>,
+    /// names of tasks that must complete first
+    pub after: Vec<String>,
+    /// estimated duration in seconds (drives selection + priorities)
+    pub est_s: f64,
+    /// resource hints (pmake lowering emits them as the rule's resources)
+    pub resources: ResourceSet,
+}
+
+impl TaskSpec {
+    /// A task with defaults: Noop payload, 1 s estimate, 1-cpu resources.
+    pub fn new(name: impl Into<String>) -> TaskSpec {
+        TaskSpec {
+            name: name.into(),
+            payload: Payload::Noop,
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+            after: Vec::new(),
+            est_s: 1.0,
+            resources: ResourceSet::default(),
+        }
+    }
+
+    pub fn command(name: impl Into<String>, script: impl Into<String>) -> TaskSpec {
+        let mut t = TaskSpec::new(name);
+        t.payload = Payload::Command { script: script.into() };
+        t
+    }
+
+    pub fn kernel(name: impl Into<String>, artifact: impl Into<String>, seed: u64) -> TaskSpec {
+        let mut t = TaskSpec::new(name);
+        t.payload = Payload::Kernel { artifact: artifact.into(), seed };
+        t
+    }
+
+    pub fn after<S: AsRef<str>>(mut self, deps: &[S]) -> TaskSpec {
+        self.after = deps.iter().map(|s| s.as_ref().to_string()).collect();
+        self
+    }
+
+    pub fn outputs<S: AsRef<str>>(mut self, files: &[S]) -> TaskSpec {
+        self.outputs = files.iter().map(|s| s.as_ref().to_string()).collect();
+        self
+    }
+
+    pub fn est(mut self, seconds: f64) -> TaskSpec {
+        self.est_s = seconds;
+        self
+    }
+
+    /// The files downstream tasks wait on under a file-based lowering:
+    /// declared outputs, or a synthesized stamp when there are none.
+    pub fn sync_files(&self) -> Vec<String> {
+        if self.outputs.is_empty() {
+            vec![format!("{}.done", self.name)]
+        } else {
+            self.outputs.clone()
+        }
+    }
+}
+
+/// Shape analysis of a graph (what the adaptive selector consumes).
+#[derive(Clone, Debug)]
+pub struct GraphStats {
+    pub tasks: usize,
+    pub edges: usize,
+    /// number of topological levels (1 = flat map)
+    pub depth: usize,
+    /// size of the widest level
+    pub width: usize,
+    /// Σ est_s over all tasks
+    pub total_work_s: f64,
+    /// longest est_s path source→sink
+    pub critical_path_s: f64,
+    pub mean_task_s: f64,
+    /// coefficient of variation of est_s (0 = perfectly uniform)
+    pub cv_task_s: f64,
+    /// total_work / critical_path: the graph's inherent parallelism
+    pub max_parallelism: f64,
+    /// any task declares file outputs (file presence can synchronize)
+    pub file_sync: bool,
+    /// all payloads are the same kind
+    pub uniform_payload: bool,
+}
+
+/// The workflow IR: named tasks + dependency edges.  Insertion order is
+/// preserved (it seeds deterministic topological orders).
+#[derive(Clone, Debug, Default)]
+pub struct WorkflowGraph {
+    pub name: String,
+    tasks: Vec<TaskSpec>,
+    index: HashMap<String, usize>,
+    /// declared output file -> producing task (uniqueness + fast lookup)
+    by_output: HashMap<String, usize>,
+}
+
+fn valid_name(s: &str) -> bool {
+    !s.is_empty()
+        && !s.starts_with('-')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || "_-.".contains(c))
+}
+
+fn valid_file(s: &str) -> bool {
+    !s.is_empty()
+        && !s.starts_with('/')
+        && !s.contains("..")
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || "_-./".contains(c))
+}
+
+impl WorkflowGraph {
+    pub fn new(name: impl Into<String>) -> WorkflowGraph {
+        WorkflowGraph {
+            name: name.into(),
+            tasks: Vec::new(),
+            index: HashMap::new(),
+            by_output: HashMap::new(),
+        }
+    }
+
+    /// Which task produces a declared output file, if any.
+    pub fn producer_of(&self, file: &str) -> Option<&TaskSpec> {
+        self.by_output.get(file).map(|&i| &self.tasks[i])
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub fn tasks(&self) -> &[TaskSpec] {
+        &self.tasks
+    }
+
+    pub fn get(&self, name: &str) -> Option<&TaskSpec> {
+        self.index.get(name).map(|&i| &self.tasks[i])
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.index.get(name).copied()
+    }
+
+    /// Add a task.  Name/file hygiene and duplicate detection happen here
+    /// so every lowering can assume a well-formed node; dangling `after`
+    /// references are legal until [`WorkflowGraph::validate`] (tasks may
+    /// be added in any order).
+    pub fn add_task(&mut self, task: TaskSpec) -> Result<()> {
+        if !valid_name(&task.name) {
+            bail!(
+                "task name {:?} invalid (use [A-Za-z0-9_.-], no leading '-')",
+                task.name
+            );
+        }
+        if self.index.contains_key(&task.name) {
+            bail!("duplicate task name {:?}", task.name);
+        }
+        if task.after.iter().any(|d| d == &task.name) {
+            bail!("task {:?} depends on itself", task.name);
+        }
+        for f in task.inputs.iter().chain(&task.outputs) {
+            if !valid_file(f) {
+                bail!(
+                    "task {:?}: file {f:?} invalid (relative paths over [A-Za-z0-9_.-/])",
+                    task.name
+                );
+            }
+        }
+        if !(task.est_s.is_finite() && task.est_s >= 0.0) {
+            bail!("task {:?}: est_s must be finite and >= 0", task.name);
+        }
+        // kernel artifact names travel unescaped through the pmake
+        // `#kernel` marker and the dwork body codec: same alphabet as
+        // task names (no braces, no spaces)
+        if let Payload::Kernel { artifact, .. } = &task.payload {
+            if !valid_name(artifact) {
+                bail!(
+                    "task {:?}: kernel artifact {artifact:?} invalid (use [A-Za-z0-9_.-])",
+                    task.name
+                );
+            }
+        }
+        for out in &task.outputs {
+            if let Some(&other) = self.by_output.get(out) {
+                bail!(
+                    "tasks {:?} and {:?} both declare output {out:?}",
+                    self.tasks[other].name,
+                    task.name
+                );
+            }
+        }
+        let id = self.tasks.len();
+        for out in &task.outputs {
+            self.by_output.insert(out.clone(), id);
+        }
+        self.index.insert(task.name.clone(), id);
+        self.tasks.push(task);
+        Ok(())
+    }
+
+    /// Check referential integrity + acyclicity.  Every analysis and
+    /// lowering entry point calls this first.
+    pub fn validate(&self) -> Result<()> {
+        self.check_integrity()?;
+        self.topo_order().map(|_| ())
+    }
+
+    /// Non-topological integrity: dependency names resolve, and no
+    /// declared output collides with another task's synthesized
+    /// `<name>.done` stamp (the pmake lowering would emit two rules for
+    /// one file and silently drop a task).
+    pub(crate) fn check_integrity(&self) -> Result<()> {
+        for t in &self.tasks {
+            for d in &t.after {
+                if !self.index.contains_key(d) {
+                    bail!("task {:?} depends on unknown task {d:?}", t.name);
+                }
+            }
+            if t.outputs.is_empty() {
+                let stamp = format!("{}.done", t.name);
+                if let Some(&p) = self.by_output.get(&stamp) {
+                    bail!(
+                        "task {:?}'s synchronization stamp {stamp:?} collides with an \
+                         output declared by task {:?}",
+                        t.name,
+                        self.tasks[p].name
+                    );
+                }
+            }
+            // an input naming another task's *internal* pmake stamp would
+            // order the tasks under pmake only (the stamp file never
+            // exists on the other back-ends): insist on an explicit edge
+            for f in &t.inputs {
+                if self.by_output.contains_key(f) {
+                    continue;
+                }
+                if let Some(stem) = f.strip_suffix(".done") {
+                    if let Some(&p) = self.index.get(stem) {
+                        if self.tasks[p].outputs.is_empty() {
+                            bail!(
+                                "task {:?} input {f:?} names task {stem:?}'s internal \
+                                 synchronization stamp; use `after: [{stem}]` instead",
+                                t.name
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Dependencies of task `i`: explicit `after` edges plus *implicit*
+    /// producer edges — a declared input file that another task declares
+    /// as an output orders the producer first.  Every lowering uses this
+    /// (not raw `after`), so file-implied ordering means the same thing
+    /// under pmake, dwork and mpi-list alike.
+    pub fn deps_of(&self, i: usize) -> Vec<usize> {
+        let t = &self.tasks[i];
+        let mut deps: Vec<usize> =
+            t.after.iter().filter_map(|d| self.index_of(d)).collect();
+        for f in &t.inputs {
+            if let Some(&p) = self.by_output.get(f) {
+                if p != i {
+                    deps.push(p);
+                }
+            }
+        }
+        deps.sort_unstable();
+        deps.dedup();
+        deps
+    }
+
+    /// Dependency edges as (from, to) index pairs (from must finish
+    /// first), explicit and file-implied.
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for i in 0..self.tasks.len() {
+            for j in self.deps_of(i) {
+                out.push((j, i));
+            }
+        }
+        out
+    }
+
+    /// All dependency lists at once — ONE adjacency build that the
+    /// analysis passes below thread through instead of re-deriving.
+    pub(crate) fn preds_vec(&self) -> Vec<Vec<usize>> {
+        (0..self.tasks.len()).map(|i| self.deps_of(i)).collect()
+    }
+
+    /// Kahn topological order over a prebuilt adjacency, deterministic
+    /// for a given graph (sources in insertion order, then BFS discovery
+    /// order as tasks unblock).  Errors name one task on a cycle.
+    pub(crate) fn topo_order_from(&self, preds: &[Vec<usize>]) -> Result<Vec<usize>> {
+        let n = self.tasks.len();
+        let mut indegree: Vec<usize> = preds.iter().map(Vec::len).collect();
+        let mut successors: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, ps) in preds.iter().enumerate() {
+            for &p in ps {
+                successors[p].push(i);
+            }
+        }
+        let mut ready: Vec<usize> =
+            (0..n).filter(|&i| indegree[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        let mut cursor = 0;
+        while cursor < ready.len() {
+            let i = ready[cursor];
+            cursor += 1;
+            order.push(i);
+            for &s in &successors[i] {
+                indegree[s] -= 1;
+                if indegree[s] == 0 {
+                    ready.push(s);
+                }
+            }
+        }
+        if order.len() != n {
+            let stuck = (0..n)
+                .find(|&i| indegree[i] > 0)
+                .map(|i| self.tasks[i].name.clone())
+                .unwrap_or_default();
+            bail!("workflow {:?} has a dependency cycle (through {stuck:?})", self.name);
+        }
+        Ok(order)
+    }
+
+    /// Kahn topological order (see [`WorkflowGraph::topo_order_from`]).
+    pub fn topo_order(&self) -> Result<Vec<usize>> {
+        self.topo_order_from(&self.preds_vec())
+    }
+
+    /// Level assignment over a prebuilt adjacency + topo order.
+    pub(crate) fn levels_from(preds: &[Vec<usize>], order: &[usize]) -> Vec<Vec<usize>> {
+        let mut level = vec![0usize; preds.len()];
+        let mut max_level = 0usize;
+        for &i in order {
+            let l = preds[i].iter().map(|&j| level[j] + 1).max().unwrap_or(0);
+            level[i] = l;
+            max_level = max_level.max(l);
+        }
+        let mut out: Vec<Vec<usize>> = vec![Vec::new(); max_level + 1];
+        for &i in order {
+            out[level[i]].push(i);
+        }
+        out
+    }
+
+    /// Topological levels: level(t) = 1 + max level of its dependencies.
+    /// Level k holds the tasks that *could* start in bulk-synchronous
+    /// phase k — the mpi-list lowering's phase structure.
+    pub fn levels(&self) -> Result<Vec<Vec<usize>>> {
+        let preds = self.preds_vec();
+        let order = self.topo_order_from(&preds)?;
+        Ok(Self::levels_from(&preds, &order))
+    }
+
+    /// Critical path DP over a prebuilt adjacency + topo order.
+    fn critical_path_from(&self, preds: &[Vec<usize>], order: &[usize]) -> f64 {
+        let mut finish = vec![0f64; self.tasks.len()];
+        let mut best = 0f64;
+        for &i in order {
+            let start = preds[i].iter().map(|&j| finish[j]).fold(0f64, f64::max);
+            finish[i] = start + self.tasks[i].est_s;
+            best = best.max(finish[i]);
+        }
+        best
+    }
+
+    /// Critical path length in estimated seconds.
+    pub fn critical_path_s(&self) -> Result<f64> {
+        let preds = self.preds_vec();
+        let order = self.topo_order_from(&preds)?;
+        Ok(self.critical_path_from(&preds, &order))
+    }
+
+    /// Full shape analysis (one integrity pass, one adjacency build).
+    pub fn stats(&self) -> Result<GraphStats> {
+        Ok(self.analyze()?.0)
+    }
+
+    /// Stats + topological levels from a single integrity/adjacency
+    /// pass — what the selector consumes (it needs both).
+    pub fn analyze(&self) -> Result<(GraphStats, Vec<Vec<usize>>)> {
+        self.check_integrity()?;
+        let preds = self.preds_vec();
+        let order = self.topo_order_from(&preds)?;
+        let levels = Self::levels_from(&preds, &order);
+        let n = self.tasks.len();
+        let total: f64 = self.tasks.iter().map(|t| t.est_s).sum();
+        let mean = if n == 0 { 0.0 } else { total / n as f64 };
+        let var = if n == 0 {
+            0.0
+        } else {
+            self.tasks.iter().map(|t| (t.est_s - mean).powi(2)).sum::<f64>() / n as f64
+        };
+        let cv = if mean > 0.0 { var.sqrt() / mean } else { 0.0 };
+        let cp = self.critical_path_from(&preds, &order);
+        let first_kind = self.tasks.first().map(|t| t.payload.kind());
+        let stats = GraphStats {
+            tasks: n,
+            edges: preds.iter().map(Vec::len).sum(),
+            depth: levels.len(),
+            width: levels.iter().map(Vec::len).max().unwrap_or(0),
+            total_work_s: total,
+            critical_path_s: cp,
+            mean_task_s: mean,
+            cv_task_s: cv,
+            max_parallelism: if cp > 0.0 { total / cp } else { n as f64 },
+            file_sync: self.tasks.iter().any(|t| !t.outputs.is_empty()),
+            uniform_payload: self
+                .tasks
+                .iter()
+                .all(|t| Some(t.payload.kind()) == first_kind),
+        };
+        Ok((stats, levels))
+    }
+
+    /// Sink tasks (no successors) — the targets of a file-based lowering.
+    pub fn sinks(&self) -> Vec<usize> {
+        let mut has_succ = vec![false; self.tasks.len()];
+        for (from, _) in self.edges() {
+            has_succ[from] = true;
+        }
+        (0..self.tasks.len()).filter(|&i| !has_succ[i]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> WorkflowGraph {
+        let mut g = WorkflowGraph::new("diamond");
+        g.add_task(TaskSpec::new("root").est(2.0)).unwrap();
+        g.add_task(TaskSpec::new("l").after(&["root"]).est(3.0)).unwrap();
+        g.add_task(TaskSpec::new("r").after(&["root"]).est(1.0)).unwrap();
+        g.add_task(TaskSpec::new("join").after(&["l", "r"]).est(1.0)).unwrap();
+        g
+    }
+
+    #[test]
+    fn topo_and_levels() {
+        let g = diamond();
+        let order = g.topo_order().unwrap();
+        assert_eq!(order[0], 0);
+        assert_eq!(*order.last().unwrap(), 3);
+        let levels = g.levels().unwrap();
+        assert_eq!(levels.len(), 3);
+        assert_eq!(levels[0], vec![0]);
+        assert_eq!(levels[1], vec![1, 2]);
+        assert_eq!(levels[2], vec![3]);
+    }
+
+    #[test]
+    fn stats_shape() {
+        let g = diamond();
+        let s = g.stats().unwrap();
+        assert_eq!(s.tasks, 4);
+        assert_eq!(s.edges, 4);
+        assert_eq!(s.depth, 3);
+        assert_eq!(s.width, 2);
+        assert!((s.total_work_s - 7.0).abs() < 1e-12);
+        // critical path: root(2) -> l(3) -> join(1) = 6
+        assert!((s.critical_path_s - 6.0).abs() < 1e-12);
+        assert!(!s.file_sync);
+        assert!(s.uniform_payload);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = WorkflowGraph::new("cyc");
+        g.add_task(TaskSpec::new("a").after(&["b"])).unwrap();
+        g.add_task(TaskSpec::new("b").after(&["a"])).unwrap();
+        let err = g.validate().unwrap_err();
+        assert!(err.to_string().contains("cycle"), "{err}");
+    }
+
+    #[test]
+    fn unknown_dep_detected() {
+        let mut g = WorkflowGraph::new("dangling");
+        g.add_task(TaskSpec::new("a").after(&["ghost"])).unwrap();
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn hygiene_rejected() {
+        let mut g = WorkflowGraph::new("bad");
+        assert!(g.add_task(TaskSpec::new("has space")).is_err());
+        assert!(g.add_task(TaskSpec::new("brace{x}")).is_err());
+        assert!(g.add_task(TaskSpec::new("")).is_err());
+        g.add_task(TaskSpec::new("ok")).unwrap();
+        assert!(g.add_task(TaskSpec::new("ok")).is_err(), "duplicate");
+        assert!(g.add_task(TaskSpec::new("self").after(&["self"])).is_err());
+        assert!(g
+            .add_task(TaskSpec::command("abs", "x").outputs(&["/etc/passwd"]))
+            .is_err());
+        let mut nan = TaskSpec::new("nan");
+        nan.est_s = f64::NAN;
+        assert!(g.add_task(nan).is_err());
+        // kernel artifact names share the task-name alphabet
+        assert!(g.add_task(TaskSpec::kernel("kbad", "atb_{rule}", 0)).is_err());
+        assert!(g.add_task(TaskSpec::kernel("kbad2", "atb 64", 0)).is_err());
+        assert!(g.add_task(TaskSpec::kernel("kok", "atb_64", 0)).is_ok());
+    }
+
+    #[test]
+    fn stamp_collision_rejected() {
+        // task 'a' has no outputs, so its pmake stamp is 'a.done'; a task
+        // declaring that very file as an output would alias two rules
+        let mut g = WorkflowGraph::new("stamp");
+        g.add_task(TaskSpec::new("a")).unwrap();
+        g.add_task(TaskSpec::command("b", "touch a.done").outputs(&["a.done"])).unwrap();
+        let err = g.validate().unwrap_err();
+        assert!(err.to_string().contains("stamp"), "{err}");
+        assert!(g.stats().is_err(), "stats performs the same integrity check");
+    }
+
+    #[test]
+    fn duplicate_outputs_rejected() {
+        let mut g = WorkflowGraph::new("dup");
+        g.add_task(TaskSpec::command("a", "touch x").outputs(&["x.out"])).unwrap();
+        let err = g
+            .add_task(TaskSpec::command("b", "touch x").outputs(&["x.out"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("both declare"), "{err}");
+    }
+
+    #[test]
+    fn sync_files_stamp_fallback() {
+        let t = TaskSpec::new("plain");
+        assert_eq!(t.sync_files(), vec!["plain.done"]);
+        let t = TaskSpec::new("filey").outputs(&["a.txt", "b.txt"]);
+        assert_eq!(t.sync_files(), vec!["a.txt", "b.txt"]);
+    }
+
+    #[test]
+    fn payload_body_roundtrip() {
+        for p in [
+            Payload::Command { script: "echo hi\ntouch x".into() },
+            Payload::Kernel { artifact: "atb_64".into(), seed: 7 },
+            Payload::Noop,
+        ] {
+            assert_eq!(Payload::decode_body(&p.encode_body()).unwrap(), p);
+        }
+        assert!(Payload::decode_body(b"warp\n?").is_err());
+    }
+
+    #[test]
+    fn sinks_of_diamond() {
+        assert_eq!(diamond().sinks(), vec![3]);
+    }
+
+    #[test]
+    fn declared_inputs_imply_producer_edges() {
+        // B never says `after: [A]` but reads A's declared output: the
+        // edge must exist for EVERY lowering, not just pmake's file walk
+        let mut g = WorkflowGraph::new("implicit");
+        g.add_task(TaskSpec::command("a", "echo > data.txt").outputs(&["data.txt"])).unwrap();
+        let mut b = TaskSpec::command("b", "cat data.txt");
+        b.inputs = vec!["data.txt".into()];
+        g.add_task(b).unwrap();
+        assert_eq!(g.deps_of(1), vec![0]);
+        assert_eq!(g.edges(), vec![(0, 1)]);
+        let levels = g.levels().unwrap();
+        assert_eq!(levels.len(), 2, "file-implied edge creates a level");
+        // and a file cycle is still a cycle
+        let mut g = WorkflowGraph::new("filecycle");
+        let mut a = TaskSpec::command("a", "x").outputs(&["a.out"]);
+        a.inputs = vec!["b.out".into()];
+        let mut b = TaskSpec::command("b", "x").outputs(&["b.out"]);
+        b.inputs = vec!["a.out".into()];
+        g.add_task(a).unwrap();
+        g.add_task(b).unwrap();
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn flat_map_stats() {
+        let mut g = WorkflowGraph::new("map");
+        for i in 0..32 {
+            g.add_task(TaskSpec::kernel(format!("k{i}"), "atb_64", i).est(0.5)).unwrap();
+        }
+        let s = g.stats().unwrap();
+        assert_eq!(s.depth, 1);
+        assert_eq!(s.width, 32);
+        assert_eq!(s.edges, 0);
+        assert!(s.cv_task_s < 1e-12);
+        assert!(s.uniform_payload);
+        assert!(!s.file_sync);
+    }
+}

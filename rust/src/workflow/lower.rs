@@ -1,0 +1,463 @@
+//! Lowering: compile one [`WorkflowGraph`] into each coordinator's input.
+//!
+//! * **pmake** — `rules.yaml` + `targets.yaml` text, parseable by
+//!   [`crate::coordinator::pmake::parse_rules`]: one rule per task, file
+//!   presence as the dependency mechanism (declared outputs, or a
+//!   synthesized `<name>.done` stamp for tasks without file outputs).
+//! * **dwork** — a task list with explicit dependency edges, in an order
+//!   the dhub server accepts (dependencies created first).
+//! * **mpi-list** — a static bulk-synchronous plan: topological levels,
+//!   each level's tasks block-distributed over the ranks with the same
+//!   arithmetic as [`crate::coordinator::mpilist::block_range`].
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::dwork::TaskMsg;
+use crate::coordinator::mpilist::block_range;
+use crate::substrate::cluster::ResourceSet;
+
+use super::graph::{Payload, WorkflowGraph};
+
+/// pmake lowering result: the two YAML documents pmake consumes.
+#[derive(Clone, Debug)]
+pub struct LoweredPmake {
+    pub rules_yaml: String,
+    pub targets_yaml: String,
+}
+
+/// Escape `{`/`}` so pmake's `format()`-style substitution reproduces the
+/// original script text verbatim.
+fn escape_braces(s: &str) -> String {
+    s.replace('{', "{{").replace('}', "}}")
+}
+
+fn sanitize(name: &str) -> String {
+    let s: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || "_-.".contains(c) { c } else { '_' })
+        .collect();
+    if s.is_empty() || s.starts_with('-') {
+        format!("wf{s}")
+    } else {
+        s
+    }
+}
+
+/// Lower to pmake rule/target documents rooted at `dirname` (the campaign
+/// working directory tasks run in).
+pub fn to_pmake(g: &WorkflowGraph, dirname: &str) -> Result<LoweredPmake> {
+    g.check_integrity()?;
+    if g.is_empty() {
+        bail!("cannot lower an empty workflow");
+    }
+    // dirname is the one string that arrives unvalidated (straight from
+    // the CLI) and gets interpolated into quoted YAML: the emitted
+    // subset has no escape sequences, so reject only what a quoted
+    // scalar genuinely cannot carry ('#', spaces, braces are all fine
+    // inside double quotes)
+    if dirname.is_empty() || dirname.contains(['"', '\n']) {
+        bail!("campaign dirname {dirname:?} cannot contain double quotes or newlines");
+    }
+    // one adjacency build threads through ordering, rule emission and
+    // sink discovery alike
+    let preds = g.preds_vec();
+    let order = g.topo_order_from(&preds)?;
+    let mut rules = String::new();
+    for &i in &order {
+        let t = &g.tasks()[i];
+        rules.push_str(&format!("{}:\n", t.name));
+        let r: &ResourceSet = &t.resources;
+        // a task that kept the default resource hints gets its priority
+        // weight from the duration estimate instead
+        let time_min = if *r == ResourceSet::default() {
+            (t.est_s / 60.0).max(0.01)
+        } else {
+            r.time_min
+        };
+        rules.push_str(&format!(
+            "  resources: {{time: {time_min}, nrs: {}, cpu: {}, gpu: {}, ranks: {}}}\n",
+            r.nrs, r.cpu, r.gpu, r.ranks_per_rs
+        ));
+        // explicit + file-implied dependencies, same edge set the other
+        // lowerings use (deps_of), then any remaining source files.
+        // Self-produced inputs (in-place updates) are dropped: listing
+        // them would make the rule depend on its own output and trip
+        // pmake's cycle detector.
+        let mut inp: Vec<String> = Vec::new();
+        for &d in &preds[i] {
+            inp.extend(g.tasks()[d].sync_files());
+        }
+        inp.extend(t.inputs.iter().filter(|f| !t.outputs.contains(f)).cloned());
+        let mut seen = std::collections::BTreeSet::new();
+        inp.retain(|f| seen.insert(f.clone()));
+        if !inp.is_empty() {
+            rules.push_str("  inp:\n");
+            for (k, f) in inp.iter().enumerate() {
+                rules.push_str(&format!("    d{k}: \"{f}\"\n"));
+            }
+        }
+        rules.push_str("  out:\n");
+        for (k, f) in t.sync_files().iter().enumerate() {
+            rules.push_str(&format!("    o{k}: \"{f}\"\n"));
+        }
+        // script: the payload, then whatever file-touching makes the
+        // outputs (= synchronization tokens) true
+        let mut lines: Vec<String> = match &t.payload {
+            Payload::Command { script } => {
+                script.lines().map(escape_braces).collect()
+            }
+            Payload::Kernel { artifact, seed } => {
+                // marker line interpreted by WorkflowExecutor (in-process
+                // kernel); a comment to any plain /bin/sh
+                vec![format!("#kernel {artifact} {seed}")]
+            }
+            Payload::Noop => vec![":".to_string()],
+        };
+        if lines.is_empty() {
+            lines.push(":".to_string());
+        }
+        let touch: Vec<String> = match &t.payload {
+            // commands are expected to create their declared outputs
+            // themselves; only the synthesized stamp needs help
+            Payload::Command { .. } if !t.outputs.is_empty() => Vec::new(),
+            _ => t.sync_files(),
+        };
+        if !touch.is_empty() {
+            // nested outputs need their directories first (exec_task does
+            // the same create_dir_all on the other back-ends)
+            let mut parents: Vec<&str> = touch
+                .iter()
+                .filter_map(|f| f.rsplit_once('/').map(|(d, _)| d))
+                .collect();
+            parents.sort_unstable();
+            parents.dedup();
+            if !parents.is_empty() {
+                lines.push(format!("mkdir -p {}", parents.join(" ")));
+            }
+            lines.push(format!("touch {}", touch.join(" ")));
+        }
+        rules.push_str("  script: |\n");
+        for l in &lines {
+            rules.push_str(&format!("    {l}\n"));
+        }
+    }
+
+    let target_name = sanitize(&g.name);
+    let mut targets = format!("{target_name}:\n  dirname: \"{dirname}\"\n  out:\n");
+    let mut has_succ = vec![false; g.len()];
+    for ps in &preds {
+        for &p in ps {
+            has_succ[p] = true;
+        }
+    }
+    let mut k = 0usize;
+    for i in (0..g.len()).filter(|&i| !has_succ[i]) {
+        for f in g.tasks()[i].sync_files() {
+            targets.push_str(&format!("    s{k}: \"{f}\"\n"));
+            k += 1;
+        }
+    }
+    Ok(LoweredPmake { rules_yaml: rules, targets_yaml: targets })
+}
+
+/// One dwork task ready for `SchedState::create` (or `dwork create`).
+#[derive(Clone, Debug)]
+pub struct DworkTask {
+    pub msg: TaskMsg,
+    pub deps: Vec<String>,
+}
+
+/// Lower to a dwork task list.  Topological order: every task appears
+/// after all of its dependencies, exactly what the dhub Create API
+/// requires.
+pub fn to_dwork(g: &WorkflowGraph) -> Result<Vec<DworkTask>> {
+    g.check_integrity()?;
+    let preds = g.preds_vec();
+    let order = g.topo_order_from(&preds)?;
+    Ok(order
+        .into_iter()
+        .map(|i| {
+            let t = &g.tasks()[i];
+            DworkTask {
+                msg: TaskMsg::new(t.name.clone(), t.payload.encode_body()),
+                // explicit + file-implied edges, matching pmake's
+                // file-walk semantics
+                deps: preds[i].iter().map(|&d| g.tasks()[d].name.clone()).collect(),
+            }
+        })
+        .collect())
+}
+
+/// Render the dwork lowering as a dquery-style script (human-facing
+/// `workflow lower --coordinator dwork` output).
+pub fn render_dwork(tasks: &[DworkTask]) -> String {
+    let mut out = String::new();
+    for t in tasks {
+        if t.deps.is_empty() {
+            out.push_str(&format!("dwork create --name {}\n", t.msg.name));
+        } else {
+            out.push_str(&format!(
+                "dwork create --name {} --dep {}\n",
+                t.msg.name,
+                t.deps.join(",")
+            ));
+        }
+    }
+    out
+}
+
+/// mpi-list lowering: a static bulk-synchronous execution plan.  Phase k
+/// runs topological level k; within a phase each rank executes the
+/// contiguous block of tasks [`block_range`] assigns it, then all ranks
+/// barrier — no other synchronization exists, the paper's third archetype.
+#[derive(Clone, Debug)]
+pub struct MpiListPlan {
+    pub workflow: String,
+    pub procs: usize,
+    /// task indices (into `WorkflowGraph::tasks`) per phase
+    pub levels: Vec<Vec<usize>>,
+}
+
+impl MpiListPlan {
+    /// The slice of `levels[level]` rank `rank` executes.
+    pub fn rank_tasks(&self, level: usize, rank: usize) -> &[usize] {
+        let l = &self.levels[level];
+        let (start, count) = block_range(rank, self.procs, l.len() as u64);
+        &l[start as usize..(start + count) as usize]
+    }
+
+    pub fn total_tasks(&self) -> usize {
+        self.levels.iter().map(Vec::len).sum()
+    }
+
+    /// Human-facing plan table.
+    pub fn render(&self, g: &WorkflowGraph) -> String {
+        let mut out = format!(
+            "mpi-list plan for {:?}: {} tasks, {} phases, {} ranks\n",
+            self.workflow,
+            self.total_tasks(),
+            self.levels.len(),
+            self.procs
+        );
+        for (li, level) in self.levels.iter().enumerate() {
+            out.push_str(&format!("phase {li} ({} tasks):\n", level.len()));
+            for rank in 0..self.procs {
+                let mine = self.rank_tasks(li, rank);
+                if mine.is_empty() {
+                    continue;
+                }
+                let names: Vec<&str> =
+                    mine.iter().map(|&i| g.tasks()[i].name.as_str()).collect();
+                out.push_str(&format!("  rank {rank}: {}\n", names.join(" ")));
+            }
+        }
+        out
+    }
+}
+
+/// Lower to the static rank assignment.
+pub fn to_mpilist(g: &WorkflowGraph, procs: usize) -> Result<MpiListPlan> {
+    if procs == 0 {
+        bail!("mpi-list lowering needs at least one rank");
+    }
+    g.check_integrity()?;
+    let preds = g.preds_vec();
+    let order = g.topo_order_from(&preds)?;
+    Ok(MpiListPlan {
+        workflow: g.name.clone(),
+        procs,
+        levels: WorkflowGraph::levels_from(&preds, &order),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pmake::{parse_rules, parse_targets, Dag};
+    use crate::workflow::graph::TaskSpec;
+    use std::path::Path;
+
+    fn pipeline() -> WorkflowGraph {
+        let mut g = WorkflowGraph::new("pipe");
+        g.add_task(
+            TaskSpec::command("gen", "echo 1 > data.txt").outputs(&["data.txt"]).est(5.0),
+        )
+        .unwrap();
+        g.add_task(TaskSpec::kernel("crunch", "atb_64", 3).after(&["gen"]).est(2.0))
+            .unwrap();
+        g.add_task(
+            TaskSpec::command("sum", "cat data.txt > sum.txt")
+                .outputs(&["sum.txt"])
+                .after(&["gen", "crunch"])
+                .est(1.0),
+        )
+        .unwrap();
+        g
+    }
+
+    #[test]
+    fn pmake_lowering_parses_and_builds_dag() {
+        let g = pipeline();
+        let low = to_pmake(&g, "/tmp/campaign").unwrap();
+        let rules = parse_rules(&low.rules_yaml).unwrap();
+        assert_eq!(rules.len(), 3);
+        let targets = parse_targets(&low.targets_yaml).unwrap();
+        assert_eq!(targets.len(), 1);
+        assert_eq!(targets[0].dirname, "/tmp/campaign");
+        // no file exists -> full graph instantiates
+        let dag =
+            Dag::build(&rules, &targets[0], &|_: &Path| false, &|_| String::new()).unwrap();
+        assert_eq!(dag.tasks.len(), 3);
+        assert!(dag.is_topologically_valid());
+        // sum waits on both gen's file and crunch's stamp
+        let sum = dag.producer("sum.txt").unwrap();
+        assert_eq!(dag.tasks[sum].deps.len(), 2);
+        let crunch = dag.producer("crunch.done").unwrap();
+        assert!(dag.tasks[crunch].script.contains("#kernel atb_64 3"));
+        assert!(dag.tasks[crunch].script.contains("touch crunch.done"));
+    }
+
+    #[test]
+    fn pmake_scripts_escape_braces() {
+        let mut g = WorkflowGraph::new("braces");
+        g.add_task(TaskSpec::command("b", "echo ${HOME} {literal}")).unwrap();
+        let low = to_pmake(&g, ".").unwrap();
+        let rules = parse_rules(&low.rules_yaml).unwrap();
+        let targets = parse_targets(&low.targets_yaml).unwrap();
+        let dag =
+            Dag::build(&rules, &targets[0], &|_: &Path| false, &|_| String::new()).unwrap();
+        // substitution round-trips the braces back to the original text
+        assert!(dag.tasks[0].script.contains("echo ${HOME} {literal}"));
+    }
+
+    #[test]
+    fn dwork_lowering_orders_deps_first() {
+        let g = pipeline();
+        let tasks = to_dwork(&g).unwrap();
+        assert_eq!(tasks.len(), 3);
+        let pos = |n: &str| tasks.iter().position(|t| t.msg.name == n).unwrap();
+        assert!(pos("gen") < pos("crunch"));
+        assert!(pos("crunch") < pos("sum"));
+        assert_eq!(tasks[pos("sum")].deps, vec!["gen", "crunch"]);
+        // bodies decode back to the payloads
+        let body = Payload::decode_body(&tasks[pos("crunch")].msg.body).unwrap();
+        assert_eq!(body, Payload::Kernel { artifact: "atb_64".into(), seed: 3 });
+        let script = render_dwork(&tasks);
+        assert!(script.contains("--name sum --dep gen,crunch"));
+    }
+
+    #[test]
+    fn mpilist_plan_partitions_each_level() {
+        let mut g = WorkflowGraph::new("map");
+        for i in 0..10 {
+            g.add_task(TaskSpec::kernel(format!("k{i}"), "atb_64", i)).unwrap();
+        }
+        let plan = to_mpilist(&g, 3).unwrap();
+        assert_eq!(plan.levels.len(), 1);
+        assert_eq!(plan.total_tasks(), 10);
+        // every task executed exactly once across ranks
+        let mut seen = vec![0usize; 10];
+        for rank in 0..3 {
+            for &t in plan.rank_tasks(0, rank) {
+                seen[t] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+        // block sizes follow the paper's formula: 4,3,3
+        assert_eq!(plan.rank_tasks(0, 0).len(), 4);
+        assert_eq!(plan.rank_tasks(0, 1).len(), 3);
+        assert_eq!(plan.rank_tasks(0, 2).len(), 3);
+    }
+
+    #[test]
+    fn in_place_update_does_not_self_cycle_under_pmake() {
+        // a task that reads AND writes ckpt.dat (in-place update) must
+        // not lower to a rule depending on its own output
+        let mut g = WorkflowGraph::new("inplace");
+        let mut t = TaskSpec::command("upd", "touch ckpt.dat").outputs(&["ckpt.dat"]);
+        t.inputs = vec!["ckpt.dat".into()];
+        g.add_task(t).unwrap();
+        let low = to_pmake(&g, ".").unwrap();
+        let rules = parse_rules(&low.rules_yaml).unwrap();
+        let targets = parse_targets(&low.targets_yaml).unwrap();
+        let dag =
+            Dag::build(&rules, &targets[0], &|_: &Path| false, &|_| String::new()).unwrap();
+        assert_eq!(dag.tasks.len(), 1);
+        assert!(dag.tasks[0].deps.is_empty());
+    }
+
+    #[test]
+    fn stamp_named_input_rejected() {
+        let mut g = WorkflowGraph::new("stampinput");
+        g.add_task(TaskSpec::new("a")).unwrap();
+        let mut b = TaskSpec::command("b", "cat a.done");
+        b.inputs = vec!["a.done".into()];
+        g.add_task(b).unwrap();
+        for r in [to_pmake(&g, ".").err(), to_dwork(&g).err(), to_mpilist(&g, 2).err()] {
+            let err = r.expect("stamp-named input must fail every lowering");
+            assert!(err.to_string().contains("after"), "{err}");
+        }
+    }
+
+    #[test]
+    fn nested_outputs_get_mkdir_in_pmake_script() {
+        let mut g = WorkflowGraph::new("mkdirs");
+        g.add_task(TaskSpec::kernel("k", "atb_16", 0).outputs(&["out/deep/k.dat"])).unwrap();
+        let low = to_pmake(&g, ".").unwrap();
+        let rules = parse_rules(&low.rules_yaml).unwrap();
+        let script = &rules[0].script;
+        assert!(script.contains("mkdir -p out/deep"), "{script}");
+        assert!(script.contains("touch out/deep/k.dat"), "{script}");
+    }
+
+    #[test]
+    fn file_implied_edges_reach_every_lowering() {
+        let mut g = WorkflowGraph::new("implicit");
+        g.add_task(TaskSpec::command("producer", "echo > d.txt").outputs(&["d.txt"])).unwrap();
+        let mut c = TaskSpec::command("consumer", "cat d.txt");
+        c.inputs = vec!["d.txt".into()];
+        g.add_task(c).unwrap();
+        // dwork: the edge appears even though `after` is empty
+        let tasks = to_dwork(&g).unwrap();
+        let consumer = tasks.iter().find(|t| t.msg.name == "consumer").unwrap();
+        assert_eq!(consumer.deps, vec!["producer"]);
+        // mpi-list: two phases, not one
+        assert_eq!(to_mpilist(&g, 2).unwrap().levels.len(), 2);
+    }
+
+    #[test]
+    fn mpilist_levels_respect_dependencies() {
+        let g = pipeline();
+        let plan = to_mpilist(&g, 2).unwrap();
+        assert_eq!(plan.levels.len(), 3);
+        // level of every dep strictly precedes the task's level
+        let level_of = |name: &str| {
+            let idx = g.index_of(name).unwrap();
+            plan.levels.iter().position(|l| l.contains(&idx)).unwrap()
+        };
+        assert!(level_of("gen") < level_of("crunch"));
+        assert!(level_of("crunch") < level_of("sum"));
+    }
+
+    #[test]
+    fn empty_and_zero_rank_rejected() {
+        let g = WorkflowGraph::new("empty");
+        assert!(to_pmake(&g, ".").is_err());
+        assert!(to_mpilist(&g, 0).is_err());
+        assert!(to_dwork(&g).unwrap().is_empty());
+    }
+
+    #[test]
+    fn hostile_dirname_rejected_but_odd_paths_allowed() {
+        let g = pipeline();
+        for bad in ["", "/tmp/my\"dir", "/tmp/a\nb"] {
+            assert!(to_pmake(&g, bad).is_err(), "dirname {bad:?} must be rejected");
+        }
+        // legal unix paths survive the quoted-scalar round-trip
+        for odd in ["/tmp/spaced dir", "/tmp/run#3", "/tmp/br{ace}"] {
+            let low = to_pmake(&g, odd).unwrap();
+            let targets = parse_targets(&low.targets_yaml).unwrap();
+            assert_eq!(targets[0].dirname, odd, "round-trip of {odd:?}");
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! Unified workflow IR + adaptive scheduler selection.
+//!
+//! The paper ships three schedulers and leaves the user to pick one and
+//! hand-encode their campaign three different ways (rules files, dquery
+//! calls, SPMD scripts).  This subsystem closes that gap with a single
+//! front-end, the architecture Balsam-style workflow systems use — one
+//! workflow graph, many execution back-ends:
+//!
+//! * [`graph`] — the IR: a [`WorkflowGraph`](graph::WorkflowGraph) of
+//!   [`TaskSpec`](graph::TaskSpec) nodes (command/kernel payloads, file
+//!   inputs/outputs, dependencies, duration estimates, resource hints)
+//!   with cycle detection, topological levels, and critical-path/width
+//!   analysis;
+//! * [`spec`] — the YAML front-end (`workflow.yaml`), on
+//!   [`crate::substrate::yaml`];
+//! * [`lower`] — three lowerings: pmake `rules.yaml`/`targets.yaml`
+//!   text, a dwork task list with dependency edges, and an mpi-list
+//!   static bulk-synchronous rank plan;
+//! * [`select`] — the adaptive selector: graph shape (depth, width,
+//!   uniformity, file-sync) × the Table-4-calibrated METG cost model
+//!   picks the coordinator whose overhead disappears at the workload's
+//!   task granularity;
+//! * [`run`] — drivers that execute the same graph to completion on any
+//!   back-end (`threesched workflow run --coordinator auto`).
+//!
+//! Each coordinator module also gains a `from_workflow` ingestion API
+//! ([`crate::coordinator::pmake::from_workflow`],
+//! [`crate::coordinator::dwork::SchedState::from_workflow`],
+//! [`crate::coordinator::mpilist::from_workflow`]) so external tooling
+//! can feed graphs straight in without the text round-trip.
+
+pub mod graph;
+pub mod lower;
+pub mod run;
+pub mod select;
+pub mod spec;
+
+pub use graph::{GraphStats, Payload, TaskSpec, WorkflowGraph};
+pub use lower::{to_dwork, to_mpilist, to_pmake, DworkTask, LoweredPmake, MpiListPlan};
+pub use run::{dispatch, run_auto, run_dwork, run_mpilist, run_pmake, RunSummary};
+pub use select::{select, Assessment, Recommendation};
+pub use spec::{parse_workflow, parse_workflow_file, to_yaml};

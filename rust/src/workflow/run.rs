@@ -1,0 +1,476 @@
+//! Execution drivers: run one [`WorkflowGraph`] to completion on any of
+//! the three coordinators (or auto-dispatch through the selector).
+//!
+//! Payload execution is shared: `Command` scripts run under `/bin/sh` in
+//! the campaign directory, `Kernel` payloads run the pure-Rust `atb_N`
+//! interpreter in-process (no PJRT required), `Noop` is free.  Under
+//! pmake, kernels travel as a `#kernel artifact seed` marker line that
+//! [`WorkflowExecutor`] intercepts before handing the rest of the script
+//! to the shell — a comment to any plain `/bin/sh`, so lowered rules
+//! files stay valid standalone pmake inputs.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::coordinator::dwork::{self, Client};
+use crate::coordinator::mpilist::{block_range, Context};
+use crate::coordinator::pmake::{self, Executor, LaunchReport, ShellExecutor, TaskInstance};
+use crate::metg::simmodels::Tool;
+use crate::runtime::{atb_tile, fill_f32, host_atb};
+use crate::substrate::cluster::Machine;
+use crate::substrate::cluster::costs::CostModel;
+
+use super::graph::{Payload, TaskSpec, WorkflowGraph};
+use super::lower;
+use super::select::{select, Recommendation};
+
+/// Outcome of one workflow execution.  Semantics are identical across
+/// back-ends: `tasks_run` were attempted (success or failure),
+/// `tasks_failed` of those failed, `tasks_skipped` never ran because a
+/// transitive dependency failed (pmake's poisoned set, dwork's errored
+/// successors).
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub coordinator: Tool,
+    pub tasks_run: usize,
+    pub tasks_failed: usize,
+    pub tasks_skipped: usize,
+    pub makespan_s: f64,
+}
+
+impl RunSummary {
+    pub fn all_ok(&self) -> bool {
+        self.tasks_failed == 0 && self.tasks_skipped == 0
+    }
+}
+
+/// Execute a kernel payload in-process: plain `atb_N` runs the host
+/// matmul on deterministic seeded inputs (the same numerics the PJRT
+/// path produces for these artifacts).  Name parsing and the tile-size
+/// bound are shared with the interpreter runtime ([`atb_tile`]).
+pub fn exec_kernel(artifact: &str, seed: u64) -> Result<()> {
+    let ts = atb_tile(artifact)?;
+    let a = fill_f32(ts * ts, seed.wrapping_mul(31).wrapping_add(1));
+    let b = fill_f32(ts * ts, seed.wrapping_mul(31).wrapping_add(2));
+    let out = host_atb(&a, &b, ts, ts, ts);
+    std::hint::black_box(&out);
+    Ok(())
+}
+
+/// Run a shell payload in `dir`; non-zero exit is an error.
+fn exec_command(script: &str, dir: &Path) -> Result<()> {
+    let out = std::process::Command::new("/bin/sh")
+        .arg("-c")
+        .arg(script)
+        .current_dir(dir)
+        .output()
+        .with_context(|| format!("spawning /bin/sh in {dir:?}"))?;
+    if !out.status.success() {
+        bail!(
+            "script exited {}: {}",
+            out.status,
+            String::from_utf8_lossy(&out.stderr).trim()
+        );
+    }
+    Ok(())
+}
+
+/// Execute one payload (shared by the dwork and mpi-list drivers).
+pub fn exec_payload(p: &Payload, dir: &Path) -> Result<()> {
+    match p {
+        Payload::Command { script } => exec_command(script, dir),
+        Payload::Kernel { artifact, seed } => exec_kernel(artifact, *seed),
+        Payload::Noop => Ok(()),
+    }
+}
+
+/// Execute one full task: run its payload, then materialize declared
+/// outputs the payload itself cannot write (kernel results and no-op
+/// markers are not files).  This mirrors the `touch` lines the pmake
+/// lowering emits, so a file-consuming successor sees the same world on
+/// every coordinator.  Command scripts are responsible for their own
+/// declared outputs, exactly as under pmake.
+pub fn exec_task(t: &TaskSpec, dir: &Path) -> Result<()> {
+    exec_payload(&t.payload, dir)?;
+    if !matches!(t.payload, Payload::Command { .. }) {
+        for f in &t.outputs {
+            let path = dir.join(f);
+            if let Some(parent) = path.parent() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {parent:?}"))?;
+            }
+            std::fs::File::create(&path).with_context(|| format!("touching {path:?}"))?;
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------ pmake
+
+/// pmake executor that understands the `#kernel` marker the lowering
+/// emits: the kernel runs in-process, everything else (including the
+/// output-file touches) goes through the regular [`ShellExecutor`].
+#[derive(Default)]
+pub struct WorkflowExecutor {
+    pub shell: ShellExecutor,
+}
+
+impl Executor for WorkflowExecutor {
+    fn launch(&self, task: &TaskInstance) -> LaunchReport {
+        if let Some(rest) = task.script.lines().next().and_then(|l| l.strip_prefix("#kernel ")) {
+            let parsed = rest
+                .split_once(' ')
+                .and_then(|(a, s)| s.trim().parse::<u64>().ok().map(|s| (a.to_string(), s)));
+            // an unparseable "#kernel ..." line is a user-authored shell
+            // comment, not our marker: fall through to the plain shell
+            if let Some((artifact, seed)) = parsed {
+                let t0 = Instant::now();
+                if exec_kernel(&artifact, seed).is_err() {
+                    return LaunchReport { success: false, ..Default::default() };
+                }
+                let kernel_s = t0.elapsed().as_secs_f64();
+                let mut report = self.shell.launch(task);
+                report.run_s += kernel_s;
+                return report;
+            }
+        }
+        self.shell.launch(task)
+    }
+}
+
+/// Run the workflow under pmake in `dir` (created if missing): lower to
+/// rules/targets text, write both files, parse them back (the round-trip
+/// is part of the contract), build the file DAG and push it onto the
+/// allocation.
+pub fn run_pmake(g: &WorkflowGraph, dir: &Path, nodes: usize) -> Result<RunSummary> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+    let dir_str = dir.to_string_lossy().to_string();
+    let lowered = lower::to_pmake(g, &dir_str)?;
+    // never clobber hand-authored campaign files: the default --dir is
+    // the current directory, which may already hold a real rules.yaml
+    for (name, text) in [
+        ("rules.yaml", lowered.rules_yaml.as_str()),
+        ("targets.yaml", lowered.targets_yaml.as_str()),
+    ] {
+        let path = dir.join(name);
+        let foreign = path.exists()
+            && std::fs::read_to_string(&path).map(|cur| cur != text).unwrap_or(true);
+        if foreign {
+            bail!(
+                "refusing to overwrite existing {name} in {dir:?} (not produced by this \
+                 workflow) — move it or pick another --dir"
+            );
+        }
+        std::fs::write(&path, text).with_context(|| format!("writing {path:?}"))?;
+    }
+    // parse the text we just wrote (same round-trip pmake::from_workflow
+    // performs, without lowering the graph a second time)
+    let rules = pmake::parse_rules(&lowered.rules_yaml)?;
+    let targets = pmake::parse_targets(&lowered.targets_yaml)?;
+    let nodes = nodes.max(1);
+    let cfg = pmake::SchedConfig { nodes, machine: Machine::summit(nodes), fifo: false };
+    let exec = WorkflowExecutor::default();
+    let t0 = Instant::now();
+    let mut run = 0usize;
+    let mut failed = 0usize;
+    let mut skipped = 0usize;
+    for target in &targets {
+        let dag = pmake::Dag::build(
+            &rules,
+            target,
+            &|p: &Path| p.exists(),
+            &|rs| pmake::default_mpirun(rs),
+        )?;
+        let report = pmake::run(&dag, &exec, &cfg)?;
+        run += report.succeeded.len() + report.failed.len();
+        failed += report.failed.len();
+        skipped += report.poisoned.len();
+    }
+    Ok(RunSummary {
+        coordinator: Tool::Pmake,
+        tasks_run: run,
+        tasks_failed: failed,
+        tasks_skipped: skipped,
+        makespan_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+// ------------------------------------------------------------------ dwork
+
+/// Run the workflow under dwork: seed an in-proc dhub from the graph and
+/// drain it with `workers` pulling threads.
+pub fn run_dwork(g: &WorkflowGraph, dir: &Path, workers: usize, prefetch: u32) -> Result<RunSummary> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+    let state = dwork::SchedState::from_workflow(g)?;
+    let (connector, handle) = dwork::spawn_inproc(state, dwork::ServerConfig::default());
+    let workers = workers.max(1);
+    let t0 = Instant::now();
+    let totals: Vec<(u64, u64)> = std::thread::scope(|s| {
+        (0..workers)
+            .map(|w| {
+                let conn = connector.connect();
+                let dir = dir.to_path_buf();
+                s.spawn(move || {
+                    let mut c = Client::new(Box::new(conn), format!("wf-w{w}"));
+                    let stats = dwork::run_worker(&mut c, prefetch, |t| match g.get(&t.name) {
+                        // known task: full semantics incl. declared-output
+                        // materialization for kernel/noop payloads
+                        Some(spec) => exec_task(spec, &dir),
+                        // foreign task (shared dhub): body-only execution
+                        None => exec_payload(&Payload::decode_body(&t.body)?, &dir),
+                    })?;
+                    Ok::<(u64, u64), anyhow::Error>((stats.tasks_run, stats.tasks_failed))
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().expect("worker panicked"))
+            .collect::<Result<Vec<_>>>()
+    })?;
+    let makespan = t0.elapsed().as_secs_f64();
+    drop(connector);
+    let state = handle.join().expect("dhub panicked");
+    if !state.all_done() {
+        bail!("dwork run ended with unfinished tasks");
+    }
+    let tasks_run: usize = totals.iter().map(|&(r, _)| r as usize).sum();
+    Ok(RunSummary {
+        coordinator: Tool::Dwork,
+        tasks_run,
+        tasks_failed: totals.iter().map(|&(_, f)| f as usize).sum(),
+        // errored successors are finished server-side without ever
+        // reaching a worker: they are the skipped set
+        tasks_skipped: g.len().saturating_sub(tasks_run),
+        makespan_s: makespan,
+    })
+}
+
+// --------------------------------------------------------------- mpi-list
+
+/// Run the workflow under mpi-list: `procs` in-process SPMD ranks execute
+/// the static plan phase by phase, with a barrier after each phase and no
+/// other synchronization.
+pub fn run_mpilist(g: &WorkflowGraph, dir: &Path, procs: usize) -> Result<RunSummary> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+    let procs = procs.max(1);
+    let plan = lower::to_mpilist(g, procs)?;
+    let t0 = Instant::now();
+    let per_rank: Vec<(usize, usize)> = Context::run(procs, |ctx| {
+        let mut run = 0usize;
+        let mut failed = 0usize;
+        for level in &plan.levels {
+            let (start, count) = block_range(ctx.rank(), procs, level.len() as u64);
+            for k in start..start + count {
+                let t = &g.tasks()[level[k as usize]];
+                run += 1;
+                if exec_task(t, dir).is_err() {
+                    failed += 1;
+                }
+            }
+            // the phase barrier IS the synchronization mechanism
+            ctx.comm.barrier();
+        }
+        (run, failed)
+    });
+    Ok(RunSummary {
+        coordinator: Tool::MpiList,
+        tasks_run: per_rank.iter().map(|&(r, _)| r).sum(),
+        tasks_failed: per_rank.iter().map(|&(_, f)| f).sum(),
+        // the static plan runs every task regardless of upstream failures
+        tasks_skipped: 0,
+        makespan_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+// ------------------------------------------------------------------- auto
+
+/// Select a coordinator for `g` (METG model + shape) and run it there.
+/// `parallelism` feeds both the selector's scale and the chosen driver
+/// (nodes for pmake, workers for dwork, ranks for mpi-list).
+pub fn run_auto(
+    g: &WorkflowGraph,
+    m: &CostModel,
+    parallelism: usize,
+    dir: &Path,
+) -> Result<(Recommendation, RunSummary)> {
+    let rec = select(g, m, parallelism)?;
+    let summary = dispatch(g, rec.choice, parallelism, dir)?;
+    Ok((rec, summary))
+}
+
+/// Run `g` on an explicitly chosen coordinator.
+pub fn dispatch(g: &WorkflowGraph, tool: Tool, parallelism: usize, dir: &Path) -> Result<RunSummary> {
+    match tool {
+        Tool::Pmake => run_pmake(g, dir, parallelism),
+        Tool::Dwork => run_dwork(g, dir, parallelism, 1),
+        Tool::MpiList => run_mpilist(g, dir, parallelism),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::graph::TaskSpec;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "threesched-wfrun-{name}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn file_pipeline() -> WorkflowGraph {
+        let mut g = WorkflowGraph::new("pipe");
+        g.add_task(TaskSpec::command("gen", "echo 7 > data.txt").outputs(&["data.txt"]))
+            .unwrap();
+        g.add_task(TaskSpec::kernel("crunch", "atb_32", 5).after(&["gen"])).unwrap();
+        g.add_task(
+            TaskSpec::command("sum", "cp data.txt sum.txt")
+                .outputs(&["sum.txt"])
+                .after(&["gen", "crunch"]),
+        )
+        .unwrap();
+        g
+    }
+
+    #[test]
+    fn kernel_exec_runs_atb_only() {
+        assert!(exec_kernel("atb_16", 3).is_ok());
+        assert!(exec_kernel("mystery", 3).is_err());
+    }
+
+    #[test]
+    fn same_graph_completes_on_all_three_backends() {
+        let g = file_pipeline();
+        for tool in Tool::ALL {
+            let dir = tmp(&format!("all3-{}", tool.name().replace('-', "")));
+            let summary = dispatch(&g, tool, 2, &dir).unwrap();
+            assert_eq!(summary.tasks_run, 3, "{}", tool.name());
+            assert_eq!(summary.tasks_failed, 0, "{}", tool.name());
+            assert!(
+                dir.join("sum.txt").exists(),
+                "{}: sink output missing",
+                tool.name()
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn kernel_declared_outputs_materialize_on_every_backend() {
+        // a command consumes a file that only exists because the kernel
+        // task DECLARED it — under pmake the lowering touches it, under
+        // dwork/mpilist exec_task must do the same
+        let mut g = WorkflowGraph::new("kout");
+        g.add_task(TaskSpec::kernel("k", "atb_16", 1).outputs(&["k.out"])).unwrap();
+        g.add_task(
+            TaskSpec::command("c", "test -f k.out && touch c.ok")
+                .outputs(&["c.ok"])
+                .after(&["k"]),
+        )
+        .unwrap();
+        for tool in Tool::ALL {
+            let dir = tmp(&format!("kout-{}", tool.name().replace('-', "")));
+            let summary = dispatch(&g, tool, 2, &dir).unwrap();
+            assert!(summary.all_ok(), "{}: {summary:?}", tool.name());
+            assert!(dir.join("c.ok").exists(), "{}", tool.name());
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn nested_declared_outputs_work_on_every_backend() {
+        let mut g = WorkflowGraph::new("nested");
+        g.add_task(TaskSpec::kernel("k", "atb_16", 2).outputs(&["results/k.out"])).unwrap();
+        g.add_task(
+            TaskSpec::command("c", "test -f results/k.out && touch ok.txt")
+                .outputs(&["ok.txt"])
+                .after(&["k"]),
+        )
+        .unwrap();
+        for tool in Tool::ALL {
+            let dir = tmp(&format!("nested-{}", tool.name().replace('-', "")));
+            let summary = dispatch(&g, tool, 2, &dir).unwrap();
+            assert!(summary.all_ok(), "{}: {summary:?}", tool.name());
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn run_pmake_refuses_to_clobber_foreign_rules() {
+        let g = file_pipeline();
+        let dir = tmp("clobber");
+        std::fs::write(dir.join("rules.yaml"), "hand: made\n").unwrap();
+        let err = run_pmake(&g, &dir, 1).unwrap_err();
+        assert!(err.to_string().contains("refusing to overwrite"), "{err}");
+        assert_eq!(
+            std::fs::read_to_string(dir.join("rules.yaml")).unwrap(),
+            "hand: made\n",
+            "foreign file untouched"
+        );
+        // rerunning over our OWN previous output is fine
+        let _ = std::fs::remove_file(dir.join("rules.yaml"));
+        run_pmake(&g, &dir, 1).unwrap();
+        let summary = run_pmake(&g, &dir, 1).unwrap();
+        assert!(summary.all_ok(), "{summary:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn user_comment_starting_with_kernel_marker_falls_through_to_shell() {
+        let mut g = WorkflowGraph::new("marker");
+        g.add_task(TaskSpec::command("c", "#kernel warmup notes\ntouch ran.txt")
+            .outputs(&["ran.txt"]))
+            .unwrap();
+        let dir = tmp("marker");
+        let summary = run_pmake(&g, &dir, 1).unwrap();
+        assert!(summary.all_ok(), "{summary:?}");
+        assert!(dir.join("ran.txt").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failing_command_reported_not_run_under_dwork() {
+        let mut g = WorkflowGraph::new("fail");
+        g.add_task(TaskSpec::command("boom", "exit 3")).unwrap();
+        g.add_task(TaskSpec::command("child", "true").after(&["boom"])).unwrap();
+        let dir = tmp("dwork-fail");
+        let summary = run_dwork(&g, &dir, 1, 0).unwrap();
+        assert_eq!(summary.tasks_run, 1, "child never served");
+        assert_eq!(summary.tasks_failed, 1);
+        assert_eq!(summary.tasks_skipped, 1, "child counted as skipped");
+        assert!(!summary.all_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mpilist_counts_failures_but_finishes() {
+        let mut g = WorkflowGraph::new("mixed");
+        for i in 0..6 {
+            let script = if i == 2 { "false" } else { "true" };
+            g.add_task(TaskSpec::command(format!("t{i}"), script)).unwrap();
+        }
+        let dir = tmp("mpilist-fail");
+        let summary = run_mpilist(&g, &dir, 3).unwrap();
+        assert_eq!(summary.tasks_run, 6);
+        assert_eq!(summary.tasks_failed, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn auto_runs_the_selected_backend() {
+        let g = file_pipeline();
+        let dir = tmp("auto");
+        let (rec, summary) = run_auto(&g, &CostModel::paper(), 2, &dir).unwrap();
+        assert_eq!(rec.choice, summary.coordinator);
+        assert_eq!(summary.tasks_run, 3);
+        assert!(summary.all_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

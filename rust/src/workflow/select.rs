@@ -1,0 +1,361 @@
+//! Adaptive scheduler selection: graph shape × METG cost model.
+//!
+//! The paper's central practical question — *which of the three tools do
+//! I point at my workload?* — answered mechanically.  The rule combines:
+//!
+//! 1. **Granularity** (the METG test): a coordinator is only efficient
+//!    when mean task duration t̄ clears its minimum effective task
+//!    granularity; estimated efficiency is t̄ / (t̄ + METG), the METG
+//!    definition inverted (overhead = work at exactly 50%).
+//! 2. **Shape** (the synchronization-mechanism test):
+//!    * pmake wants *file-synchronized* graphs — tasks that already
+//!      declare file outputs get restartability and `make -k` robustness
+//!      for free, but pay a job-step launch per task;
+//!    * mpi-list wants *flat bulk-synchronous maps* — one level of
+//!      uniform tasks needs no synchronization at all;
+//!    * dwork takes everything else: irregular widths, heterogeneous
+//!      durations, fine granularity down to its server RTT.
+//!
+//! Preference among the eligible (paper §7, simplicity argument): the
+//! simplest mechanism whose overhead is invisible at the workload's
+//! granularity — files, then static lists, then the task server.
+
+use anyhow::Result;
+
+use crate::metg::simmodels::Tool;
+use crate::substrate::cluster::costs::CostModel;
+
+use super::graph::{GraphStats, WorkflowGraph};
+
+/// Flat-map levels tolerate this much duration spread before the static
+/// assignment's stragglers argue for dynamic pulling instead.
+const UNIFORM_CV: f64 = 0.25;
+
+/// Minimum estimated efficiency for a coordinator to be "eligible".
+const EFF_FLOOR: f64 = 0.5;
+
+/// Per-coordinator verdict.
+#[derive(Clone, Debug)]
+pub struct Assessment {
+    pub tool: Tool,
+    pub eligible: bool,
+    /// t̄ / (t̄ + METG): estimated computational efficiency at this
+    /// workload's mean granularity
+    pub efficiency: f64,
+    /// the coordinator's METG at the target scale (seconds)
+    pub metg_s: f64,
+    /// rough makespan estimate (seconds) for display/ordering
+    pub est_makespan_s: f64,
+    pub reason: String,
+}
+
+/// The selector's full answer.
+#[derive(Clone, Debug)]
+pub struct Recommendation {
+    pub choice: Tool,
+    pub ranks: usize,
+    pub stats: GraphStats,
+    /// all three assessments, in [`Tool::ALL`] order
+    pub assessments: Vec<Assessment>,
+}
+
+impl Recommendation {
+    pub fn assessment(&self, tool: Tool) -> &Assessment {
+        self.assessments.iter().find(|a| a.tool == tool).expect("all tools assessed")
+    }
+
+    /// Human-facing report (the `workflow plan` body).
+    pub fn render(&self) -> String {
+        let s = &self.stats;
+        let mut out = format!(
+            "graph: {} tasks, {} edges, depth {}, width {}, \
+             work {:.1}s, critical path {:.1}s, parallelism {:.1}x\n\
+             mean task {:.3}s (cv {:.2}), file-sync: {}, uniform: {}\n\
+             at {} ranks:\n",
+            s.tasks,
+            s.edges,
+            s.depth,
+            s.width,
+            s.total_work_s,
+            s.critical_path_s,
+            s.max_parallelism,
+            s.mean_task_s,
+            s.cv_task_s,
+            s.file_sync,
+            s.uniform_payload,
+            self.ranks
+        );
+        for a in &self.assessments {
+            out.push_str(&format!(
+                "  {:<8} METG {:>9} eff {:>5.1}% est makespan {:>9} {} — {}\n",
+                a.tool.name(),
+                fmt_t(a.metg_s),
+                a.efficiency * 100.0,
+                fmt_t(a.est_makespan_s),
+                if a.eligible { "[ok]" } else { "[  ]" },
+                a.reason
+            ));
+        }
+        out.push_str(&format!("recommendation: {}\n", self.choice.name()));
+        out
+    }
+}
+
+fn fmt_t(t: f64) -> String {
+    if t >= 1.0 {
+        format!("{t:.2}s")
+    } else if t >= 1e-3 {
+        format!("{:.2}ms", t * 1e3)
+    } else {
+        format!("{:.1}us", t * 1e6)
+    }
+}
+
+/// Is the graph a flat bulk-synchronous map: a single level of uniform
+/// independent tasks (mpi-list's home turf)?
+fn is_flat_map(s: &GraphStats) -> bool {
+    s.depth == 1 && s.uniform_payload && s.cv_task_s <= UNIFORM_CV
+}
+
+/// Recommend a coordinator for `g` at a target scale of `ranks` workers.
+pub fn select(g: &WorkflowGraph, m: &CostModel, ranks: usize) -> Result<Recommendation> {
+    let (stats, levels) = g.analyze()?;
+    let ranks = ranks.max(1);
+    let t_mean = stats.mean_task_s;
+    let n = stats.tasks.max(1);
+    let tasks_per_rank = n.div_ceil(ranks).max(1) as u64;
+
+    let eff = |metg: f64| {
+        if t_mean <= 0.0 {
+            0.0
+        } else {
+            t_mean / (t_mean + metg)
+        }
+    };
+
+    // ---- per-tool METG + rough makespan estimates -------------------
+    let metg_pmake = m.metg_pmake(ranks);
+    let metg_dwork = m.metg_dwork(ranks);
+    let metg_mpilist = m.metg_mpilist(ranks, tasks_per_rank);
+
+    // pmake: the critical path pays one job-step launch per hop; off-path
+    // work spreads over the allocation.
+    let est_pmake = stats.critical_path_s
+        + stats.depth as f64 * metg_pmake
+        + (stats.total_work_s - stats.critical_path_s) / ranks as f64;
+    // dwork: one connection storm, then the binding constraint is either
+    // the dependency chain, the aggregate work, or the serialized server.
+    let est_dwork = m.dwork_conn(ranks).max(0.0)
+        + (stats.critical_path_s + stats.depth as f64 * m.steal_rtt)
+            .max(stats.total_work_s / ranks as f64)
+            .max(n as f64 * m.steal_rtt);
+    // mpi-list: per level, the largest per-rank block of the slowest
+    // task, plus a straggler sync per phase.
+    let est_mpilist = {
+        let mut total = 0.0;
+        for level in &levels {
+            let max_est = level
+                .iter()
+                .map(|&i| g.tasks()[i].est_s)
+                .fold(0f64, f64::max);
+            let per_rank = level.len().div_ceil(ranks);
+            total += per_rank as f64 * max_est + m.sync_spread(ranks, per_rank.max(1) as u64);
+        }
+        total
+    };
+
+    // ---- eligibility gates ------------------------------------------
+    let eff_pmake = eff(metg_pmake);
+    let eff_dwork = eff(metg_dwork);
+    let eff_mpilist = eff(metg_mpilist);
+
+    let pmake_eligible = stats.file_sync && eff_pmake >= EFF_FLOOR;
+    let mpilist_eligible = is_flat_map(&stats) && eff_mpilist >= EFF_FLOOR;
+
+    let pmake_reason = if !stats.file_sync {
+        "tasks declare no file outputs; nothing for file-based sync to watch".to_string()
+    } else if eff_pmake < EFF_FLOOR {
+        format!("tasks of {} are below the {} launch cost", fmt_t(t_mean), fmt_t(metg_pmake))
+    } else {
+        "file-synchronized graph, tasks dwarf the job-step launch cost".to_string()
+    };
+    let mpilist_reason = if !is_flat_map(&stats) {
+        format!(
+            "not a flat uniform map (depth {}, cv {:.2}); static assignment would idle ranks",
+            stats.depth, stats.cv_task_s
+        )
+    } else if eff_mpilist < EFF_FLOOR {
+        format!("straggler spread {} per task overwhelms {}", fmt_t(metg_mpilist), fmt_t(t_mean))
+    } else {
+        "flat uniform map: static assignment needs no synchronization at all".to_string()
+    };
+    let dwork_reason = if eff_dwork >= EFF_FLOOR {
+        "dependency-aware pulling absorbs irregular shape and granularity".to_string()
+    } else {
+        format!(
+            "WARNING: mean task {} is under dwork's METG {}; expect <50% efficiency",
+            fmt_t(t_mean),
+            fmt_t(metg_dwork)
+        )
+    };
+
+    // ---- preference among the eligible ------------------------------
+    let choice = if pmake_eligible {
+        Tool::Pmake
+    } else if mpilist_eligible {
+        Tool::MpiList
+    } else {
+        Tool::Dwork
+    };
+
+    let assessments = vec![
+        Assessment {
+            tool: Tool::Pmake,
+            eligible: pmake_eligible,
+            efficiency: eff_pmake,
+            metg_s: metg_pmake,
+            est_makespan_s: est_pmake,
+            reason: pmake_reason,
+        },
+        Assessment {
+            tool: Tool::Dwork,
+            eligible: true,
+            efficiency: eff_dwork,
+            metg_s: metg_dwork,
+            est_makespan_s: est_dwork,
+            reason: dwork_reason,
+        },
+        Assessment {
+            tool: Tool::MpiList,
+            eligible: mpilist_eligible,
+            efficiency: eff_mpilist,
+            metg_s: metg_mpilist,
+            est_makespan_s: est_mpilist,
+            reason: mpilist_reason,
+        },
+    ];
+
+    Ok(Recommendation { choice, ranks, stats, assessments })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::graph::TaskSpec;
+
+    fn model() -> CostModel {
+        CostModel::paper()
+    }
+
+    /// Deep file-dependency chain of coarse simulate steps -> pmake.
+    fn deep_file_chain(n: usize) -> WorkflowGraph {
+        let mut g = WorkflowGraph::new("chain");
+        for i in 0..n {
+            let mut t = TaskSpec::command(
+                format!("step{i}"),
+                format!("simulate > s{i}.trj"),
+            )
+            .outputs(&[&format!("s{i}.trj")])
+            .est(600.0);
+            if i > 0 {
+                t = t.after(&[&format!("step{}", i - 1)]);
+            }
+            g.add_task(t).unwrap();
+        }
+        g
+    }
+
+    /// Wide shallow fan of heterogeneous in-memory tasks -> dwork.
+    fn wide_shallow(n: usize) -> WorkflowGraph {
+        let mut g = WorkflowGraph::new("fan");
+        g.add_task(TaskSpec::new("root").est(1.0)).unwrap();
+        for i in 0..n {
+            // heterogeneous durations: stragglers under static assignment
+            let est = 0.2 + 3.0 * (i % 7) as f64;
+            g.add_task(
+                TaskSpec::kernel(format!("leaf{i}"), "atb_128", i as u64)
+                    .after(&["root"])
+                    .est(est),
+            )
+            .unwrap();
+        }
+        g
+    }
+
+    /// Flat uniform bulk-synchronous map -> mpi-list.
+    fn flat_map(n: usize) -> WorkflowGraph {
+        let mut g = WorkflowGraph::new("map");
+        for i in 0..n {
+            g.add_task(TaskSpec::kernel(format!("k{i}"), "atb_256", i as u64).est(0.05))
+                .unwrap();
+        }
+        g
+    }
+
+    #[test]
+    fn picks_pmake_for_deep_file_chain() {
+        let rec = select(&deep_file_chain(20), &model(), 864).unwrap();
+        assert_eq!(rec.choice, Tool::Pmake, "{}", rec.render());
+        assert!(rec.assessment(Tool::Pmake).eligible);
+        assert!(rec.assessment(Tool::Pmake).efficiency > 0.9);
+    }
+
+    #[test]
+    fn picks_dwork_for_wide_shallow_graph() {
+        let rec = select(&wide_shallow(200), &model(), 864).unwrap();
+        assert_eq!(rec.choice, Tool::Dwork, "{}", rec.render());
+        // pmake is out (no files), mpi-list is out (depth 2, heterogeneous)
+        assert!(!rec.assessment(Tool::Pmake).eligible);
+        assert!(!rec.assessment(Tool::MpiList).eligible);
+    }
+
+    #[test]
+    fn picks_mpilist_for_flat_bulk_synchronous_map() {
+        let rec = select(&flat_map(4096), &model(), 864).unwrap();
+        assert_eq!(rec.choice, Tool::MpiList, "{}", rec.render());
+        assert!(rec.assessment(Tool::MpiList).eligible);
+    }
+
+    #[test]
+    fn fine_grained_file_chain_falls_back_to_dwork() {
+        // file outputs but millisecond tasks: pmake's launch cost fails
+        // the METG test, dwork absorbs it
+        let mut g = WorkflowGraph::new("tiny");
+        for i in 0..10 {
+            let mut t = TaskSpec::command(format!("t{i}"), "true")
+                .outputs(&[&format!("t{i}.out")])
+                .est(0.005);
+            if i > 0 {
+                t = t.after(&[&format!("t{}", i - 1)]);
+            }
+            g.add_task(t).unwrap();
+        }
+        let rec = select(&g, &model(), 864).unwrap();
+        assert_eq!(rec.choice, Tool::Dwork, "{}", rec.render());
+        assert!(rec.assessment(Tool::Pmake).efficiency < 0.5);
+    }
+
+    #[test]
+    fn render_mentions_all_tools() {
+        let rec = select(&flat_map(64), &model(), 60).unwrap();
+        let txt = rec.render();
+        for t in Tool::ALL {
+            assert!(txt.contains(t.name()), "missing {} in:\n{txt}", t.name());
+        }
+        assert!(txt.contains("recommendation"));
+    }
+
+    #[test]
+    fn efficiency_matches_metg_definition() {
+        // at t̄ == METG the estimated efficiency is exactly 50%
+        let m = model();
+        let mut g = WorkflowGraph::new("edge");
+        let metg = m.metg_dwork(864);
+        for i in 0..864 {
+            g.add_task(TaskSpec::kernel(format!("k{i}"), "atb_64", i).est(metg)).unwrap();
+        }
+        let rec = select(&g, &m, 864).unwrap();
+        let eff = rec.assessment(Tool::Dwork).efficiency;
+        assert!((eff - 0.5).abs() < 1e-9, "eff={eff}");
+    }
+}

@@ -1,0 +1,290 @@
+//! YAML front-end for the workflow IR (reuses [`crate::substrate::yaml`]).
+//!
+//! Format (one document per workflow):
+//!
+//! ```yaml
+//! name: docking-campaign
+//! tasks:
+//!   - name: prep
+//!     script: |
+//!       echo ready > prep.out
+//!     outputs: [prep.out]
+//!     est: 30
+//!     resources: {time: 1, nrs: 1, cpu: 1}
+//!   - name: dock-0
+//!     kernel: atb_128
+//!     seed: 7
+//!     after: [prep]
+//!     est: 0.5
+//! ```
+//!
+//! Fields per task: `name` (required); exactly one of `script` / `kernel`
+//! (otherwise the task is a no-op barrier); `seed` (kernel only); `after`,
+//! `inputs`, `outputs` (lists or comma strings); `est` (seconds);
+//! `resources` (pmake-style flow map).
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::substrate::cluster::ResourceSet;
+use crate::substrate::yaml::{self, Yaml};
+
+use super::graph::{Payload, TaskSpec, WorkflowGraph};
+
+/// Parse a workflow document.  The graph is validated (acyclic, closed).
+pub fn parse_workflow(src: &str) -> Result<WorkflowGraph> {
+    let doc = yaml::parse(src)?;
+    let name = doc
+        .get("name")
+        .and_then(|y| y.as_text())
+        .unwrap_or_else(|| "workflow".to_string());
+    let mut g = WorkflowGraph::new(name);
+    let Some(tasks) = doc.get("tasks").and_then(Yaml::as_list) else {
+        bail!("workflow document needs a `tasks:` list");
+    };
+    for (i, entry) in tasks.iter().enumerate() {
+        let task = parse_task(entry).with_context(|| format!("tasks[{i}]"))?;
+        g.add_task(task)?;
+    }
+    g.validate()?;
+    Ok(g)
+}
+
+pub fn parse_workflow_file(path: &std::path::Path) -> Result<WorkflowGraph> {
+    let src =
+        std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    parse_workflow(&src).with_context(|| format!("parsing {path:?}"))
+}
+
+fn string_list(y: &Yaml, what: &str) -> Result<Vec<String>> {
+    match y {
+        Yaml::List(items) => items
+            .iter()
+            .map(|v| v.as_text().ok_or_else(|| anyhow!("{what}: list items must be scalars")))
+            .collect(),
+        // "a, b, c" convenience form
+        _ => match y.as_text() {
+            Some(t) if t.trim().is_empty() => Ok(vec![]),
+            Some(t) => Ok(t.split(',').map(|s| s.trim().to_string()).collect()),
+            None => bail!("{what} must be a list or a comma-separated string"),
+        },
+    }
+}
+
+fn parse_resources(y: &Yaml, what: &str) -> Result<ResourceSet> {
+    let mut rs = ResourceSet::default();
+    let Some(m) = y.as_map() else {
+        bail!("{what} must be a mapping like {{time: 10, nrs: 1, cpu: 1}}")
+    };
+    for (k, v) in m {
+        let num = v
+            .as_f64()
+            .ok_or_else(|| anyhow!("{what}.{k} must be numeric"))?;
+        match k.as_str() {
+            "time" => rs.time_min = num,
+            "nrs" => rs.nrs = num as usize,
+            "cpu" => rs.cpu = num as usize,
+            "gpu" => rs.gpu = num as usize,
+            "ranks" => rs.ranks_per_rs = (num as usize).max(1),
+            other => bail!("{what}: unknown resource key {other:?}"),
+        }
+    }
+    Ok(rs)
+}
+
+fn parse_task(y: &Yaml) -> Result<TaskSpec> {
+    let Some(members) = y.as_map() else {
+        bail!("each task must be a mapping");
+    };
+    let name = y
+        .get("name")
+        .and_then(|v| v.as_text())
+        .ok_or_else(|| anyhow!("task needs a name"))?;
+    let mut t = TaskSpec::new(name.clone());
+    let mut script: Option<String> = None;
+    let mut kernel: Option<String> = None;
+    let mut seed: Option<u64> = None;
+    for (k, v) in members {
+        match k.as_str() {
+            "name" => {}
+            "script" => {
+                script = Some(
+                    v.as_text()
+                        .ok_or_else(|| anyhow!("task {name}: script must be text"))?,
+                )
+            }
+            "kernel" => {
+                kernel = Some(
+                    v.as_text()
+                        .ok_or_else(|| anyhow!("task {name}: kernel must be a name"))?,
+                )
+            }
+            "seed" => {
+                seed = Some(
+                    v.as_i64()
+                        .and_then(|i| u64::try_from(i).ok())
+                        .ok_or_else(|| anyhow!("task {name}: seed must be a non-negative int"))?,
+                )
+            }
+            "after" => t.after = string_list(v, &format!("task {name}: after"))?,
+            "inputs" => t.inputs = string_list(v, &format!("task {name}: inputs"))?,
+            "outputs" => t.outputs = string_list(v, &format!("task {name}: outputs"))?,
+            "est" => {
+                t.est_s = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("task {name}: est must be numeric (seconds)"))?
+            }
+            "resources" => t.resources = parse_resources(v, &format!("task {name}: resources"))?,
+            other => bail!("task {name}: unknown field {other:?}"),
+        }
+    }
+    if seed.is_some() && kernel.is_none() {
+        bail!("task {name}: seed only applies to kernel tasks");
+    }
+    t.payload = match (script, kernel) {
+        (Some(_), Some(_)) => bail!("task {name}: script and kernel are mutually exclusive"),
+        (Some(s), None) => Payload::Command { script: s.trim_end().to_string() },
+        (None, Some(a)) => Payload::Kernel { artifact: a, seed: seed.unwrap_or(0) },
+        (None, None) => Payload::Noop,
+    };
+    Ok(t)
+}
+
+/// Serialize a graph back to the YAML front-end format (round-trip aid +
+/// `workflow lower` output for humans).
+pub fn to_yaml(g: &WorkflowGraph) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("name: {}\ntasks:\n", g.name));
+    for t in g.tasks() {
+        out.push_str(&format!("  - name: {}\n", t.name));
+        match &t.payload {
+            Payload::Command { script } => {
+                out.push_str("    script: |\n");
+                for line in script.lines() {
+                    out.push_str(&format!("      {line}\n"));
+                }
+            }
+            Payload::Kernel { artifact, seed } => {
+                out.push_str(&format!("    kernel: {artifact}\n    seed: {seed}\n"));
+            }
+            Payload::Noop => {}
+        }
+        let list = |items: &[String]| {
+            items.iter().map(|s| format!("\"{s}\"")).collect::<Vec<_>>().join(", ")
+        };
+        if !t.after.is_empty() {
+            out.push_str(&format!("    after: [{}]\n", list(&t.after)));
+        }
+        if !t.inputs.is_empty() {
+            out.push_str(&format!("    inputs: [{}]\n", list(&t.inputs)));
+        }
+        if !t.outputs.is_empty() {
+            out.push_str(&format!("    outputs: [{}]\n", list(&t.outputs)));
+        }
+        out.push_str(&format!("    est: {}\n", t.est_s));
+        let r = &t.resources;
+        out.push_str(&format!(
+            "    resources: {{time: {}, nrs: {}, cpu: {}, gpu: {}, ranks: {}}}\n",
+            r.time_min, r.nrs, r.cpu, r.gpu, r.ranks_per_rs
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const WF: &str = r#"
+name: demo
+tasks:
+  - name: prep
+    script: |
+      echo ready > prep.out
+    outputs: [prep.out]
+    est: 30
+    resources: {time: 1, nrs: 1, cpu: 1}
+  - name: dock-0
+    kernel: atb_128
+    seed: 7
+    after: [prep]
+    est: 0.5
+  - name: dock-1
+    kernel: atb_128
+    seed: 8
+    after: [prep]
+    est: 0.5
+  - name: report
+    script: "echo done > report.txt"
+    outputs: [report.txt]
+    after: "dock-0, dock-1"
+    est: 2
+"#;
+
+    #[test]
+    fn parses_demo() {
+        let g = parse_workflow(WF).unwrap();
+        assert_eq!(g.name, "demo");
+        assert_eq!(g.len(), 4);
+        let prep = g.get("prep").unwrap();
+        assert!(matches!(&prep.payload, Payload::Command { script } if script.contains("prep.out")));
+        assert_eq!(prep.outputs, vec!["prep.out"]);
+        assert!((prep.est_s - 30.0).abs() < 1e-12);
+        assert!((prep.resources.time_min - 1.0).abs() < 1e-12);
+        let d0 = g.get("dock-0").unwrap();
+        assert_eq!(d0.payload, Payload::Kernel { artifact: "atb_128".into(), seed: 7 });
+        assert_eq!(d0.after, vec!["prep"]);
+        // comma-string form of after
+        let rep = g.get("report").unwrap();
+        assert_eq!(rep.after, vec!["dock-0", "dock-1"]);
+    }
+
+    #[test]
+    fn yaml_roundtrip_preserves_graph() {
+        let g = parse_workflow(WF).unwrap();
+        let g2 = parse_workflow(&to_yaml(&g)).unwrap();
+        assert_eq!(g.len(), g2.len());
+        for t in g.tasks() {
+            let t2 = g2.get(&t.name).expect("task survives roundtrip");
+            assert_eq!(t.payload, t2.payload, "{}", t.name);
+            assert_eq!(t.after, t2.after);
+            assert_eq!(t.outputs, t2.outputs);
+            assert!((t.est_s - t2.est_s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_workflow("name: x\n").is_err(), "no tasks list");
+        assert!(parse_workflow("tasks:\n  - script: echo\n").is_err(), "no name");
+        assert!(
+            parse_workflow("tasks:\n  - name: a\n    script: x\n    kernel: y\n").is_err(),
+            "script+kernel"
+        );
+        assert!(
+            parse_workflow("tasks:\n  - name: a\n    bogus: 1\n").is_err(),
+            "unknown field"
+        );
+        assert!(
+            parse_workflow("tasks:\n  - name: a\n    script: x\n    seed: 4\n").is_err(),
+            "seed without kernel"
+        );
+        assert!(
+            parse_workflow("tasks:\n  - name: a\n    after: [ghost]\n").is_err(),
+            "dangling dep"
+        );
+        assert!(
+            parse_workflow("tasks:\n  - name: a\n    after: [b]\n  - name: b\n    after: [a]\n")
+                .is_err(),
+            "cycle"
+        );
+    }
+
+    #[test]
+    fn defaults() {
+        let g = parse_workflow("tasks:\n  - name: only\n").unwrap();
+        let t = g.get("only").unwrap();
+        assert_eq!(t.payload, Payload::Noop);
+        assert!((t.est_s - 1.0).abs() < 1e-12);
+        assert_eq!(g.name, "workflow");
+    }
+}

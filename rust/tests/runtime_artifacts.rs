@@ -1,6 +1,11 @@
 //! Integration: Rust loads + executes the python-AOT artifacts and checks
 //! numerics against an independent Rust oracle.  This is the cross-layer
 //! correctness proof (L1 Pallas == L2 jax == what L3 actually runs).
+//!
+//! Requires the `pjrt` feature (and `make artifacts`): the offline
+//! default build uses the interpreter fallback, whose coverage lives in
+//! `runtime::tests` instead.
+#![cfg(feature = "pjrt")]
 
 use threesched::runtime::service::RuntimeService;
 use threesched::runtime::{default_artifacts_dir, fill_f32, host_atb, HostBuf};

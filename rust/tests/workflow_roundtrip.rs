@@ -1,0 +1,208 @@
+//! Acceptance test for the workflow subsystem: one YAML workflow
+//! definition round-trips through all three lowerings, executes to
+//! completion on every back-end, and the METG-based selector recommends
+//! the right coordinator for each of the three canonical shapes.
+
+use std::path::{Path, PathBuf};
+
+use threesched::coordinator::{dwork, mpilist, pmake};
+use threesched::metg::simmodels::Tool;
+use threesched::substrate::cluster::costs::CostModel;
+use threesched::workflow::{self, Payload, TaskSpec, WorkflowGraph};
+
+const WF: &str = r#"
+name: campaign
+tasks:
+  - name: prep
+    script: |
+      echo params > params.txt
+    outputs: [params.txt]
+    est: 30
+  - name: sim-a
+    script: "cp params.txt a.trj"
+    outputs: [a.trj]
+    after: [prep]
+    est: 120
+  - name: sim-b
+    script: "cp params.txt b.trj"
+    outputs: [b.trj]
+    after: [prep]
+    est: 120
+  - name: crunch
+    kernel: atb_32
+    seed: 11
+    after: [sim-a]
+    est: 5
+  - name: report
+    script: |
+      cat a.trj b.trj > report.txt
+    outputs: [report.txt]
+    after: [sim-a, sim-b, crunch]
+    est: 10
+"#;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("threesched-wf-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+// ------------------------------------------------------------- round-trip
+
+#[test]
+fn yaml_roundtrips_through_all_three_lowerings() {
+    let g = workflow::parse_workflow(WF).unwrap();
+    assert_eq!(g.len(), 5);
+
+    // pmake: lowered text parses back and builds an equivalent file DAG
+    let (rules, targets) = pmake::from_workflow(&g, "/tmp/x").unwrap();
+    assert_eq!(rules.len(), 5);
+    let dag = pmake::Dag::build(&rules, &targets[0], &|_: &Path| false, &|_| String::new())
+        .unwrap();
+    assert_eq!(dag.tasks.len(), 5);
+    assert!(dag.is_topologically_valid());
+    let report = dag.producer("report.txt").unwrap();
+    assert_eq!(dag.tasks[report].deps.len(), 3, "report waits on sim-a, sim-b, crunch");
+
+    // dwork: ingested state serves tasks in dependency order
+    let mut state = dwork::SchedState::from_workflow(&g).unwrap();
+    let mut served = Vec::new();
+    loop {
+        let batch = state.steal("w", 16);
+        if batch.is_empty() {
+            break;
+        }
+        for t in &batch {
+            // dependency contract: everything this task waits on is done
+            served.push(t.name.clone());
+            state.complete("w", &t.name, true).unwrap();
+        }
+    }
+    assert!(state.all_done());
+    assert_eq!(served.len(), 5);
+    let pos = |n: &str| served.iter().position(|s| s == n).unwrap();
+    assert!(pos("prep") < pos("sim-a"));
+    assert!(pos("sim-a") < pos("crunch"));
+    assert!(pos("crunch") < pos("report"));
+
+    // mpi-list: the static plan covers every task once, levels respect deps
+    let plan = mpilist::from_workflow(&g, 3).unwrap();
+    assert_eq!(plan.total_tasks(), 5);
+    let level_of = |n: &str| {
+        let i = g.index_of(n).unwrap();
+        plan.levels.iter().position(|l| l.contains(&i)).unwrap()
+    };
+    assert!(level_of("prep") < level_of("sim-a"));
+    assert!(level_of("sim-a") < level_of("crunch"));
+    assert!(level_of("crunch") <= level_of("report"));
+    let mut seen = std::collections::HashSet::new();
+    for (li, level) in plan.levels.iter().enumerate() {
+        for rank in 0..plan.procs {
+            for &t in plan.rank_tasks(li, rank) {
+                assert!(seen.insert(t), "task {t} assigned twice");
+            }
+        }
+    }
+    assert_eq!(seen.len(), 5);
+}
+
+// -------------------------------------------------------------- execution
+
+#[test]
+fn same_yaml_executes_on_every_coordinator() {
+    let g = workflow::parse_workflow(WF).unwrap();
+    for tool in Tool::ALL {
+        let dir = tmpdir(&format!("exec-{}", tool.name().replace('-', "")));
+        let summary = workflow::dispatch(&g, tool, 3, &dir).unwrap();
+        assert_eq!(summary.tasks_run, 5, "{}", tool.name());
+        assert_eq!(summary.tasks_failed, 0, "{}", tool.name());
+        let report = std::fs::read_to_string(dir.join("report.txt"))
+            .unwrap_or_else(|_| panic!("{}: report.txt missing", tool.name()));
+        assert_eq!(report.matches("params").count(), 2, "{}", tool.name());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+// --------------------------------------------------------------- selector
+
+fn model() -> CostModel {
+    CostModel::paper()
+}
+
+#[test]
+fn selector_picks_dwork_for_wide_shallow_graph() {
+    let mut g = WorkflowGraph::new("fan");
+    g.add_task(TaskSpec::new("seed")).unwrap();
+    for i in 0..500 {
+        let est = 0.1 + (i % 11) as f64; // heterogeneous durations
+        g.add_task(
+            TaskSpec::kernel(format!("job{i}"), "atb_64", i as u64).after(&["seed"]).est(est),
+        )
+        .unwrap();
+    }
+    let rec = workflow::select(&g, &model(), 864).unwrap();
+    assert_eq!(rec.choice, Tool::Dwork, "{}", rec.render());
+}
+
+#[test]
+fn selector_picks_pmake_for_deep_file_dependency_chain() {
+    let mut g = WorkflowGraph::new("restart-chain");
+    for i in 0..30 {
+        let mut t = TaskSpec::command(format!("seg{i}"), format!("simulate > seg{i}.chk"))
+            .outputs(&[&format!("seg{i}.chk")])
+            .est(1800.0); // half-hour simulation segments
+        if i > 0 {
+            t = t.after(&[&format!("seg{}", i - 1)]);
+        }
+        g.add_task(t).unwrap();
+    }
+    let rec = workflow::select(&g, &model(), 864).unwrap();
+    assert_eq!(rec.choice, Tool::Pmake, "{}", rec.render());
+}
+
+#[test]
+fn selector_picks_mpilist_for_flat_bulk_synchronous_map() {
+    let mut g = WorkflowGraph::new("bsp-map");
+    for i in 0..2048 {
+        g.add_task(TaskSpec::kernel(format!("elt{i}"), "atb_128", i as u64).est(0.02)).unwrap();
+    }
+    let rec = workflow::select(&g, &model(), 864).unwrap();
+    assert_eq!(rec.choice, Tool::MpiList, "{}", rec.render());
+}
+
+// ------------------------------------------------------- payload fidelity
+
+#[test]
+fn payloads_survive_the_dwork_lowering() {
+    let g = workflow::parse_workflow(WF).unwrap();
+    for t in workflow::to_dwork(&g).unwrap() {
+        let payload = Payload::decode_body(&t.msg.body).unwrap();
+        let original = &g.get(&t.msg.name).unwrap().payload;
+        assert_eq!(&payload, original, "{}", t.msg.name);
+    }
+}
+
+#[test]
+fn lowered_pmake_files_are_standalone_runnable() {
+    // the written rules.yaml/targets.yaml must work through the plain
+    // pmake entry point (no workflow code in the loop), kernel marker
+    // lines included — they are comments to /bin/sh
+    let g = workflow::parse_workflow(WF).unwrap();
+    let dir = tmpdir("standalone");
+    let lowered = workflow::to_pmake(&g, &dir.to_string_lossy()).unwrap();
+    let rules_path = dir.join("rules.yaml");
+    let targets_path = dir.join("targets.yaml");
+    std::fs::write(&rules_path, &lowered.rules_yaml).unwrap();
+    std::fs::write(&targets_path, &lowered.targets_yaml).unwrap();
+    let cfg = pmake::SchedConfig {
+        nodes: 2,
+        machine: threesched::substrate::cluster::Machine::summit(2),
+        fifo: false,
+    };
+    let reports =
+        pmake::make(&rules_path, &targets_path, &pmake::ShellExecutor::default(), &cfg).unwrap();
+    assert!(reports.iter().all(|r| r.all_ok()));
+    assert!(dir.join("report.txt").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
