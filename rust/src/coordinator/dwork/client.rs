@@ -27,11 +27,22 @@ use super::messages::{Request, Response, StatusInfo, TaskMsg};
 pub struct Client {
     conn: Box<dyn ClientConn>,
     worker: String,
+    exit_on_drop: bool,
 }
 
 impl Client {
     pub fn new(conn: Box<dyn ClientConn>, worker: impl Into<String>) -> Client {
-        Client { conn, worker: worker.into() }
+        Client { conn, worker: worker.into(), exit_on_drop: false }
+    }
+
+    /// Announce departure (`Exit`) when this client is dropped, so a
+    /// worker that dies mid-campaign — panic unwinding included — hands
+    /// its assigned tasks back to the hub.  Best-effort: a vanished
+    /// server is ignored.  Harmless after a clean shutdown (an `Exit`
+    /// for a worker with no assignments is a no-op server-side).
+    pub fn exit_on_drop(mut self, yes: bool) -> Client {
+        self.exit_on_drop = yes;
+        self
     }
 
     pub fn worker(&self) -> &str {
@@ -58,14 +69,16 @@ impl Client {
 
     /// Steal one task.  Ok(None) = everything complete (server said Exit).
     /// NotFound (nothing ready *yet*) is surfaced as `StealOutcome` via
-    /// [`Client::steal_poll`]; this convenience blocks through it.
+    /// [`Client::steal_poll`]; this convenience blocks through it with
+    /// the shared idle backoff (a parked worker must not hammer the hub).
     pub fn steal(&mut self) -> Result<Option<TaskMsg>> {
+        let mut backoff = IdleBackoff::new();
         loop {
             match self.steal_poll()? {
                 StealOutcome::Task(t) => return Ok(Some(t)),
                 StealOutcome::AllDone => return Ok(None),
                 StealOutcome::NotReady => {
-                    std::thread::sleep(Duration::from_micros(200));
+                    backoff.sleep();
                 }
             }
         }
@@ -113,6 +126,14 @@ impl Client {
         self.expect_ok(&Request::Exit { worker: self.worker.clone() })
     }
 
+    /// Announce departure on behalf of another worker — the paper's
+    /// user-driven recovery for a worker that died without sending Exit
+    /// (its connection just vanished): its assignments re-enter the
+    /// ready queue at the front.
+    pub fn exit_for(&mut self, worker: &str) -> Result<()> {
+        self.expect_ok(&Request::Exit { worker: worker.to_string() })
+    }
+
     pub fn status(&mut self) -> Result<StatusInfo> {
         match self.roundtrip(&Request::Status)? {
             Response::Status(s) => Ok(s),
@@ -122,6 +143,61 @@ impl Client {
 
     pub fn save(&mut self) -> Result<()> {
         self.expect_ok(&Request::Save)
+    }
+
+    /// Completion query: poll `Status` every `poll` until everything the
+    /// hub has accepted is finished (done or errored), then return the
+    /// final counters.  This is how a remote submitter awaits a campaign
+    /// it cannot join() — the server-side drain signal.
+    pub fn await_drained(&mut self, poll: Duration) -> Result<StatusInfo> {
+        loop {
+            let st = self.status()?;
+            if st.is_drained() {
+                return Ok(st);
+            }
+            std::thread::sleep(poll);
+        }
+    }
+}
+
+impl Drop for Client {
+    fn drop(&mut self) {
+        if self.exit_on_drop {
+            let req = Request::Exit { worker: self.worker.clone() };
+            let _ = self.conn.request(&req.encode());
+        }
+    }
+}
+
+/// Idle backoff while the hub has nothing ready: starts at the in-proc
+/// RTT scale (200 µs, so a briefly empty queue costs nothing) and doubles
+/// to a 100 ms ceiling, because "parked on an idle hub waiting for the
+/// first submission" is a normal long-lived state in the remote
+/// deployment — thousands of steal round-trips per second against an
+/// empty queue would be pure hub load.  Reset on every served task.
+struct IdleBackoff {
+    current: Duration,
+}
+
+impl IdleBackoff {
+    const FLOOR: Duration = Duration::from_micros(200);
+    const CEILING: Duration = Duration::from_millis(100);
+
+    fn new() -> IdleBackoff {
+        IdleBackoff { current: IdleBackoff::FLOOR }
+    }
+
+    /// Sleep the current interval, then lengthen it.  Returns the time
+    /// actually slept (for idle accounting).
+    fn sleep(&mut self) -> f64 {
+        let t0 = Instant::now();
+        std::thread::sleep(self.current);
+        self.current = (self.current * 2).min(IdleBackoff::CEILING);
+        t0.elapsed().as_secs_f64()
+    }
+
+    fn reset(&mut self) {
+        self.current = IdleBackoff::FLOOR;
     }
 }
 
@@ -168,6 +244,7 @@ pub fn run_worker(
     let mut stats = WorkerStats::default();
     let mut buffer: VecDeque<TaskMsg> = VecDeque::new();
     let batch = prefetch.max(1);
+    let mut backoff = IdleBackoff::new();
     'outer: loop {
         // refill: keep `batch` tasks in hand
         while (buffer.len() as u32) < batch {
@@ -178,14 +255,15 @@ pub fn run_worker(
                 StealBatch::Tasks(ts) if ts.is_empty() => {
                     if buffer.is_empty() {
                         // nothing in hand and nothing ready: back off
-                        let t0 = Instant::now();
-                        std::thread::sleep(Duration::from_micros(200));
-                        stats.idle_s += t0.elapsed().as_secs_f64();
+                        stats.idle_s += backoff.sleep();
                         continue 'outer;
                     }
                     break; // run what we have
                 }
-                StealBatch::Tasks(ts) => buffer.extend(ts),
+                StealBatch::Tasks(ts) => {
+                    backoff.reset();
+                    buffer.extend(ts);
+                }
                 StealBatch::AllDone => {
                     if buffer.is_empty() {
                         break 'outer;
@@ -335,6 +413,46 @@ mod tests {
         drop(creator);
         drop(connector);
         assert!(handle.join().unwrap().all_done());
+    }
+
+    #[test]
+    fn exit_on_drop_requeues_assignments() {
+        let (connector, handle) = spawn_inproc(farm(3), ServerConfig::default());
+        {
+            let mut dying =
+                Client::new(Box::new(connector.connect()), "dying").exit_on_drop(true);
+            match dying.steal_n(2).unwrap() {
+                StealBatch::Tasks(ts) => assert_eq!(ts.len(), 2),
+                other => panic!("expected a batch, got {other:?}"),
+            }
+        } // dropped holding 2 assigned tasks: Exit hands them back
+        let mut c = Client::new(Box::new(connector.connect()), "survivor");
+        let stats = run_worker(&mut c, 0, |_| Ok(())).unwrap();
+        assert_eq!(stats.tasks_run, 3, "re-queued tasks must reach the survivor");
+        drop(c);
+        drop(connector);
+        assert!(handle.join().unwrap().all_done());
+    }
+
+    #[test]
+    fn await_drained_returns_final_counters() {
+        let (connector, handle) = spawn_inproc(farm(5), ServerConfig::default());
+        let connector2 = connector.clone();
+        let watcher = std::thread::spawn(move || {
+            let mut c = Client::new(Box::new(connector2.connect()), "watcher");
+            let st = c.await_drained(Duration::from_millis(1)).unwrap();
+            drop(c);
+            st
+        });
+        let mut c = Client::new(Box::new(connector.connect()), "w0");
+        run_worker(&mut c, 1, |_| Ok(())).unwrap();
+        let st = watcher.join().unwrap();
+        assert!(st.is_drained());
+        assert_eq!(st.completed, 5);
+        assert_eq!(st.failed, 0);
+        drop(c);
+        drop(connector);
+        handle.join().unwrap();
     }
 
     #[test]

@@ -178,8 +178,27 @@ pub struct StatusInfo {
     pub waiting: u64,
     pub assigned: u64,
     pub completed: u64,
+    /// errored = failed + transitively-skipped successors
     pub errored: u64,
+    /// tasks a worker actually attempted and reported `success=false`
+    /// (subset of `errored`; the rest never reached a worker)
+    pub failed: u64,
     pub workers: u64,
+}
+
+impl StatusInfo {
+    /// Completion query: every task the hub has ever accepted is finished
+    /// (done or errored).  This is what a remote submitter polls — the
+    /// server-side analogue of the in-proc driver joining its workers.
+    pub fn is_drained(&self) -> bool {
+        self.completed + self.errored == self.total
+    }
+
+    /// Tasks that finished in the error state without ever being
+    /// attempted: dependents of a failure (the workflow "skipped" set).
+    pub fn skipped(&self) -> u64 {
+        self.errored.saturating_sub(self.failed)
+    }
 }
 
 /// Server replies.
@@ -244,6 +263,7 @@ impl Response {
                 w.uint(14, s.completed);
                 w.uint(15, s.errored);
                 w.uint(16, s.workers);
+                w.uint(17, s.failed);
             }
         }
         w.into_bytes()
@@ -280,6 +300,8 @@ impl Response {
                 completed: wire::get_u64(&fields, 14)?,
                 errored: wire::get_u64(&fields, 15)?,
                 workers: wire::get_u64(&fields, 16)?,
+                // absent on frames from pre-`failed` servers
+                failed: wire::get_u64(&fields, 17).unwrap_or(0),
             }),
             other => bail!("unknown response kind {other}"),
         })
@@ -341,6 +363,7 @@ mod tests {
             assigned: 3,
             completed: 80,
             errored: 2,
+            failed: 1,
             workers: 7,
         }));
     }
@@ -358,6 +381,21 @@ mod tests {
         let mut w = Writer::new();
         w.uint(1, 999);
         assert!(Request::decode(w.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn drained_and_skipped_queries() {
+        let st = StatusInfo {
+            total: 10,
+            completed: 6,
+            errored: 4,
+            failed: 1,
+            ..StatusInfo::default()
+        };
+        assert!(st.is_drained());
+        assert_eq!(st.skipped(), 3);
+        let running = StatusInfo { total: 10, completed: 6, ..StatusInfo::default() };
+        assert!(!running.is_drained());
     }
 
     #[test]

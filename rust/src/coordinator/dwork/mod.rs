@@ -14,7 +14,7 @@ pub mod messages;
 pub mod server;
 pub mod state;
 
-pub use client::{run_worker, Client, WorkerStats};
+pub use client::{run_worker, Client, StealBatch, StealOutcome, WorkerStats};
 pub use messages::{Request, Response, StatusInfo, TaskMsg};
 pub use server::{serve, spawn_inproc, spawn_tcp, ServerConfig};
-pub use state::{SchedState, TaskState};
+pub use state::{SchedState, TaskState, ERR_MARKER_DEP_ERRORED, ERR_MARKER_DUPLICATE};

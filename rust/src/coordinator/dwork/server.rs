@@ -53,24 +53,32 @@ pub fn serve_with_counters(
     let mut mutations = 0u64;
     for req in rx {
         counters.requests.fetch_add(1, Ordering::Relaxed);
+        // set only when THIS request changed scheduler state: the
+        // auto-snapshot gate must not fire on reads, malformed frames, or
+        // no-op steals sitting at a counter multiple (and never before
+        // the first mutation)
+        let mut mutated = false;
         let resp = match Request::decode(&req.payload) {
             Err(e) => Response::Err(format!("bad request: {e}")),
-            Ok(Request::Create { task, deps }) => {
-                mutations += 1;
-                match state.create(task, &deps) {
-                    Ok(()) => Response::Ok,
-                    Err(e) => Response::Err(e.to_string()),
+            Ok(Request::Create { task, deps }) => match state.create(task, &deps) {
+                Ok(()) => {
+                    mutated = true;
+                    Response::Ok
                 }
-            }
+                Err(e) => Response::Err(e.to_string()),
+            },
             Ok(Request::Steal { worker }) => {
-                mutations += 1;
                 let mut got = state.steal(&worker, 1);
                 match got.pop() {
                     Some(t) => {
+                        mutated = true;
                         counters.steals_served.fetch_add(1, Ordering::Relaxed);
                         Response::Task(t)
                     }
-                    None if state.all_done() => {
+                    // an empty hub parks the worker instead of dismissing
+                    // it: a freshly served dhub is fed by submitters that
+                    // may not have connected yet
+                    None if !state.is_empty() && state.all_done() => {
                         counters.exits_sent.fetch_add(1, Ordering::Relaxed);
                         Response::Exit
                     }
@@ -81,12 +89,12 @@ pub fn serve_with_counters(
                 }
             }
             Ok(Request::StealN { worker, n }) => {
-                mutations += 1;
                 let got = state.steal(&worker, n);
-                if got.is_empty() && state.all_done() {
+                if got.is_empty() && !state.is_empty() && state.all_done() {
                     counters.exits_sent.fetch_add(1, Ordering::Relaxed);
                     Response::Exit
                 } else {
+                    mutated = !got.is_empty();
                     counters
                         .steals_served
                         .fetch_add(got.len() as u64, Ordering::Relaxed);
@@ -94,22 +102,25 @@ pub fn serve_with_counters(
                 }
             }
             Ok(Request::Complete { worker, task, success }) => {
-                mutations += 1;
                 match state.complete(&worker, &task, success) {
-                    Ok(()) => Response::Ok,
+                    Ok(()) => {
+                        mutated = true;
+                        Response::Ok
+                    }
                     Err(e) => Response::Err(e.to_string()),
                 }
             }
             Ok(Request::Transfer { worker, task, new_deps }) => {
-                mutations += 1;
                 match state.transfer(&worker, &task, &new_deps) {
-                    Ok(()) => Response::Ok,
+                    Ok(()) => {
+                        mutated = true;
+                        Response::Ok
+                    }
                     Err(e) => Response::Err(e.to_string()),
                 }
             }
             Ok(Request::Exit { worker }) => {
-                mutations += 1;
-                state.exit_worker(&worker);
+                mutated = state.exit_worker(&worker) > 0;
                 Response::Ok
             }
             Ok(Request::Status) => Response::Status(state.status()),
@@ -118,8 +129,11 @@ pub fn serve_with_counters(
                 Err(e) => Response::Err(e.to_string()),
             },
         };
-        if cfg.snapshot_every > 0 && mutations % cfg.snapshot_every == 0 {
-            let _ = state.save();
+        if mutated {
+            mutations += 1;
+            if cfg.snapshot_every > 0 && mutations % cfg.snapshot_every == 0 {
+                let _ = state.save();
+            }
         }
         req.reply(resp.encode());
     }
@@ -206,6 +220,69 @@ mod tests {
             other => panic!("expected Err, got {other:?}"),
         }
         drop(raw);
+        drop(connector);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn snapshot_fires_only_on_actual_mutation() {
+        // regression: the auto-snapshot gate used to evaluate
+        // `mutations % snapshot_every == 0` on EVERY request, so
+        // non-mutating traffic (Status, malformed frames) re-triggered
+        // state.save() whenever the counter sat at a multiple — including
+        // at mutations == 0, before anything had happened
+        use crate::substrate::kvstore::KvStore;
+        let dir = std::env::temp_dir()
+            .join(format!("threesched-dwork-snap-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let kv = KvStore::open(&dir).unwrap();
+        let state = SchedState::with_store(kv);
+        let snap = dir.join("snapshot.kv");
+        let (connector, handle) =
+            spawn_inproc(state, ServerConfig { snapshot_every: 2 });
+        let mut c = Client::new(Box::new(connector.connect()), "w0");
+        // reads and failed steals at mutations == 0 must not snapshot
+        for _ in 0..3 {
+            c.status().unwrap();
+        }
+        assert!(matches!(c.steal_poll().unwrap(), super::super::client::StealOutcome::NotReady));
+        assert!(!snap.exists(), "non-mutating requests triggered the auto-snapshot");
+        c.create(TaskMsg::new("a", vec![]), &[]).unwrap(); // mutation 1
+        c.status().unwrap();
+        assert!(!snap.exists(), "snapshot fired before the interval elapsed");
+        c.create(TaskMsg::new("b", vec![]), &[]).unwrap(); // mutation 2 -> snapshot
+        c.status().unwrap(); // round-trip: snapshot already written when this returns
+        assert!(snap.exists(), "snapshot missing after snapshot_every mutations");
+        // with the counter parked at a multiple, reads must not re-save
+        std::fs::remove_file(&snap).unwrap();
+        for _ in 0..3 {
+            c.status().unwrap();
+        }
+        assert!(!snap.exists(), "reads at a counter multiple re-triggered the snapshot");
+        drop(c);
+        drop(connector);
+        handle.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_hub_parks_workers_instead_of_dismissing() {
+        // a worker that joins a freshly served hub (no submissions yet)
+        // must be told "nothing ready yet", not "all done, go away"
+        use crate::coordinator::dwork::client::StealOutcome;
+        let (connector, handle) = spawn_inproc(SchedState::new(), ServerConfig::default());
+        let mut c = Client::new(Box::new(connector.connect()), "early-bird");
+        assert!(matches!(c.steal_poll().unwrap(), StealOutcome::NotReady));
+        match c.steal_n(4).unwrap() {
+            super::super::client::StealBatch::Tasks(ts) => assert!(ts.is_empty()),
+            other => panic!("empty hub dismissed the worker: {other:?}"),
+        }
+        // once fed and drained, the hub does dismiss
+        c.create(TaskMsg::new("only", vec![]), &[]).unwrap();
+        let t = c.steal().unwrap().unwrap();
+        c.complete(&t.name, true).unwrap();
+        assert!(matches!(c.steal_poll().unwrap(), StealOutcome::AllDone));
+        drop(c);
         drop(connector);
         handle.join().unwrap();
     }

@@ -21,6 +21,15 @@ use crate::substrate::wire::{self, Reader, Writer};
 
 use super::messages::{StatusInfo, TaskMsg};
 
+/// Stable machine-readable markers embedded in Create refusal messages.
+/// The remote submitter (`workflow::run::submit_dwork_remote`) matches on
+/// these to distinguish a duplicate ack and a dependency-already-failed
+/// skip from a hard error, so they are part of the wire contract even
+/// though they travel inside `Response::Err` text — reword only together
+/// with that matcher and the pinning tests below.
+pub const ERR_MARKER_DUPLICATE: &str = "already exists";
+pub const ERR_MARKER_DEP_ERRORED: &str = "error state";
+
 /// Lifecycle of a task (paper Fig 2 semantics).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TaskState {
@@ -71,6 +80,9 @@ pub struct TaskEntry {
     pub seq: u64,
     /// front-of-queue flag for transferred (re-inserted) tasks
     pub reinserted: bool,
+    /// a worker attempted this task and reported failure (distinguishes
+    /// it from successors errored by propagation, which never ran)
+    pub failed: bool,
 }
 
 impl TaskEntry {
@@ -84,6 +96,7 @@ impl TaskEntry {
         w.strings(6, self.successors.iter().map(String::as_str));
         w.uint(7, self.seq);
         w.uint(8, self.reinserted as u64);
+        w.uint(9, self.failed as u64);
         w.into_bytes()
     }
 
@@ -105,6 +118,7 @@ impl TaskEntry {
             successors: wire::get_strs(&fields, 6).into_iter().map(str::to_string).collect(),
             seq: wire::get_u64(&fields, 7)?,
             reinserted: wire::get_u64(&fields, 8).unwrap_or(0) != 0,
+            failed: wire::get_u64(&fields, 9).unwrap_or(0) != 0,
         })
     }
 }
@@ -119,6 +133,8 @@ pub struct SchedState {
     seq: u64,
     completed: u64,
     errored: u64,
+    /// subset of `errored` that a worker actually attempted
+    failed: u64,
 }
 
 impl SchedState {
@@ -156,6 +172,7 @@ impl SchedState {
             seq: 0,
             completed: 0,
             errored: 0,
+            failed: 0,
         };
         s.rebuild();
         s
@@ -171,20 +188,36 @@ impl SchedState {
             .filter_map(|(_, v)| TaskEntry::decode(v).ok())
             .collect();
         entries.sort_by_key(|e| e.seq);
+        // transferred tasks are persisted as front-of-queue re-insertions
+        // (paper: "the same double-ended queue setup used for
+        // work-stealing"); a restart must not silently demote them
+        let mut front: Vec<String> = Vec::new();
         for mut e in entries {
             self.seq = self.seq.max(e.seq + 1);
             match e.state {
                 TaskState::Done => self.completed += 1,
-                TaskState::Error => self.errored += 1,
-                TaskState::Ready => self.ready.push_back(e.msg.name.clone()),
-                TaskState::Assigned => {
-                    // worker is gone: back to the pool
+                TaskState::Error => {
+                    self.errored += 1;
+                    if e.failed {
+                        self.failed += 1;
+                    }
+                }
+                TaskState::Ready | TaskState::Assigned => {
+                    // Assigned: worker is gone, back to the pool
                     e.state = TaskState::Ready;
-                    self.ready.push_back(e.msg.name.clone());
+                    if e.reinserted {
+                        front.push(e.msg.name.clone());
+                    } else {
+                        self.ready.push_back(e.msg.name.clone());
+                    }
                 }
                 TaskState::Waiting => {}
             }
             self.tasks.insert(e.msg.name.clone(), e);
+        }
+        // oldest re-inserted task ends up at the very front
+        for name in front.into_iter().rev() {
+            self.ready.push_front(name);
         }
     }
 
@@ -235,6 +268,7 @@ impl SchedState {
             assigned,
             completed: self.completed,
             errored: self.errored,
+            failed: self.failed,
             workers: self.assigned.iter().filter(|(_, t)| !t.is_empty()).count() as u64,
         }
     }
@@ -242,14 +276,14 @@ impl SchedState {
     /// Create a task with dependencies (paper Fig 2 `Create`).
     pub fn create(&mut self, msg: TaskMsg, deps: &[String]) -> Result<()> {
         if self.tasks.contains_key(&msg.name) {
-            bail!("task {:?} already exists", msg.name);
+            bail!("task {:?} {ERR_MARKER_DUPLICATE}", msg.name);
         }
         let mut join = 0u32;
         for d in deps {
             match self.tasks.get(d) {
                 None => bail!("dependency {d:?} does not exist"),
                 Some(e) if e.state == TaskState::Error => {
-                    bail!("dependency {d:?} is in the error state")
+                    bail!("dependency {d:?} is in the {ERR_MARKER_DEP_ERRORED}")
                 }
                 Some(e) if e.state == TaskState::Done => {}
                 Some(_) => join += 1,
@@ -263,6 +297,7 @@ impl SchedState {
             successors: Vec::new(),
             seq: self.seq,
             reinserted: false,
+            failed: false,
         };
         self.seq += 1;
         self.tasks.insert(name.clone(), entry);
@@ -346,6 +381,11 @@ impl SchedState {
                 self.persist(&s);
             }
         } else {
+            // the root of the failure ran and failed; its successors are
+            // errored by propagation without ever being attempted
+            let e = self.tasks.get_mut(task).expect("checked above");
+            e.failed = true;
+            self.failed += 1;
             self.error_recursive(task);
         }
         Ok(())
@@ -446,20 +486,24 @@ impl SchedState {
 
     /// A worker died or left (paper `Exit`): its assignments go back to
     /// the front of the ready pool (they are the oldest work in flight).
-    pub fn exit_worker(&mut self, worker: &str) {
-        let Some(tasks) = self.assigned.remove(worker) else { return };
+    /// Returns how many tasks were re-queued.
+    pub fn exit_worker(&mut self, worker: &str) -> usize {
+        let Some(tasks) = self.assigned.remove(worker) else { return 0 };
         let mut names: Vec<String> = tasks.into_iter().collect();
         // deterministic order: oldest first at the very front
         names.sort_by_key(|n| self.tasks.get(n).map(|e| e.seq).unwrap_or(u64::MAX));
+        let mut requeued = 0;
         for name in names.into_iter().rev() {
             if let Some(e) = self.tasks.get_mut(&name) {
                 if e.state == TaskState::Assigned {
                     e.state = TaskState::Ready;
                     self.ready.push_front(name.clone());
                     self.persist(&name);
+                    requeued += 1;
                 }
             }
         }
+        requeued
     }
 }
 
@@ -543,7 +587,23 @@ mod tests {
     fn duplicate_create_rejected() {
         let mut s = SchedState::new();
         s.create(t("a"), &[]).unwrap();
-        assert!(s.create(t("a"), &[]).is_err());
+        let err = s.create(t("a"), &[]).unwrap_err();
+        // the remote submitter treats this exact phrase as a duplicate
+        // ack (workflow::run::submit_dwork_remote) — reword both together
+        assert!(err.to_string().contains("already exists"), "{err}");
+    }
+
+    #[test]
+    fn errored_dep_create_message() {
+        let mut s = SchedState::new();
+        s.create(t("bad"), &[]).unwrap();
+        s.steal("w", 1);
+        s.complete("w", "bad", false).unwrap();
+        let err = s.create(t("late"), &["bad".into()]).unwrap_err();
+        // the remote submitter treats this exact phrase as
+        // skipped-at-submit (workflow::run::submit_dwork_remote) —
+        // reword both together
+        assert!(err.to_string().contains("error state"), "{err}");
     }
 
     #[test]
@@ -676,6 +736,76 @@ mod tests {
             assert_eq!(got, vec!["a", "c"]);
             s.complete("w", "a", true).unwrap();
             assert_eq!(s.steal("w", 1)[0].name, "b");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rebuild_honors_front_reinsertion() {
+        // regression: rebuild used to push every recovered task
+        // push_back, silently demoting transferred (re-inserted) tasks
+        // that are persisted as front-of-queue entries
+        let dir = std::env::temp_dir()
+            .join(format!("threesched-dwork-reins-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let kv = KvStore::open(&dir).unwrap();
+            let mut s = SchedState::with_store(kv);
+            s.create(t("x"), &[]).unwrap();
+            s.create(t("y"), &[]).unwrap();
+            s.create(t("z"), &[]).unwrap();
+            let got = s.steal("w1", 3); // x, y, z assigned
+            assert_eq!(got.len(), 3);
+            s.transfer("w1", "z", &[]).unwrap(); // z re-inserted at the FRONT
+            s.complete("w1", "x", true).unwrap();
+            // y stays assigned; queue is [z]
+        } // server "crashes"
+        {
+            let kv = KvStore::open(&dir).unwrap();
+            let mut s = SchedState::with_store(kv);
+            // z (re-inserted, seq 2) must come back BEFORE y (assigned ->
+            // ready, seq 1) even though seq order says otherwise
+            let got: Vec<String> = s.steal("w2", 2).into_iter().map(|m| m.name).collect();
+            assert_eq!(got, vec!["z", "y"]);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_vs_skipped_counters() {
+        let mut s = SchedState::new();
+        s.create(t("a"), &[]).unwrap();
+        s.create(t("b"), &["a".into()]).unwrap();
+        s.create(t("c"), &["b".into()]).unwrap();
+        s.steal("w", 1);
+        s.complete("w", "a", false).unwrap();
+        let st = s.status();
+        assert_eq!(st.errored, 3);
+        assert_eq!(st.failed, 1, "only the attempted root counts as failed");
+        assert_eq!(st.skipped(), 2);
+        assert!(st.is_drained());
+    }
+
+    #[test]
+    fn failed_counter_survives_restart() {
+        let dir = std::env::temp_dir()
+            .join(format!("threesched-dwork-failed-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let kv = KvStore::open(&dir).unwrap();
+            let mut s = SchedState::with_store(kv);
+            s.create(t("a"), &[]).unwrap();
+            s.create(t("b"), &["a".into()]).unwrap();
+            s.steal("w", 1);
+            s.complete("w", "a", false).unwrap();
+        }
+        {
+            let kv = KvStore::open(&dir).unwrap();
+            let s = SchedState::with_store(kv);
+            let st = s.status();
+            assert_eq!(st.errored, 2);
+            assert_eq!(st.failed, 1);
+            assert_eq!(st.skipped(), 1);
         }
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -2,6 +2,9 @@
 //!
 //! Subcommands:
 //!   pmake    — run a rules.yaml/targets.yaml campaign on this host
+//!   dhub     — serve | worker: a persistent TCP task server + workflow
+//!              workers that execute task-body payloads (the remote
+//!              deployment `workflow run --connect` submits to)
 //!   dwork    — serve | worker | create | status | drain  (TCP deployment)
 //!   task     — execute one AOT artifact through PJRT (the job-step body
 //!              that pmake scripts launch, and a smoke-check for the
@@ -37,18 +40,22 @@ usage: threesched <command> [flags]
 
 commands:
   pmake   --rules rules.yaml --targets targets.yaml [--nodes N] [--fifo]
+  dhub serve    --bind addr:port [--store dir] [--snapshot-every N]
+  dhub worker   --connect addr:port [--workers N] [--prefetch K] [--dir D]
+                [--name base] [--linger]       (workflow-payload workers)
   dwork serve   --bind addr:port [--db dir] [--snapshot-every N]
   dwork worker  --connect addr:port [--name w0] [--prefetch N] [--artifacts-dir D]
   dwork create  --connect addr:port --name task [--dep t1,t2]
   dwork status  --connect addr:port
-  dwork drain   --connect addr:port            (no-op worker: marks tasks done)
+  dwork drain   --connect addr:port    (no-op worker: waits for + completes tasks)
   task    --artifact atb_128 [--seed S] [--out file] [--artifacts-dir D]
   metg    [--rtt-us X]
   workflow plan   --file wf.yaml [--ranks N]     (stats + selector verdict)
   workflow lower  --file wf.yaml --coordinator pmake|dwork|mpilist
                   [--out dir] [--ranks N]
   workflow run    --file wf.yaml [--coordinator auto|pmake|dwork|mpilist]
-                  [--procs N] [--dir D]
+                  [--procs N] [--dir D] [--connect addr:port]
+  workflow submit --file wf.yaml --connect addr:port   (ingest + detach)
 ";
 
 fn main() {
@@ -71,6 +78,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     let rest = &argv[1..];
     match cmd {
         "pmake" => cmd_pmake(rest),
+        "dhub" => cmd_dhub(rest),
         "dwork" => cmd_dwork(rest),
         "task" => cmd_task(rest),
         "metg" => cmd_metg(rest),
@@ -121,6 +129,173 @@ fn cmd_pmake(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+// -------------------------------------------------------------------- dhub
+
+/// Shared body of `dhub serve` and the legacy `dwork serve` verb: run a
+/// persistent TCP dhub in the foreground until killed.
+fn serve_hub(bind: &str, store: Option<&str>, snapshot_every: u64) -> Result<()> {
+    let state = match store {
+        Some(dir) => dwork::SchedState::with_store(KvStore::open(Path::new(dir))?),
+        None => dwork::SchedState::new(),
+    };
+    let cfg = dwork::ServerConfig { snapshot_every };
+    let (addr, _guard, handle) = dwork::spawn_tcp(state, cfg, bind)?;
+    println!("dhub serving on {addr} (ctrl-c to stop)");
+    let _ = handle.join();
+    Ok(())
+}
+
+/// The remote-deployment front half: one long-lived task server many
+/// launch configurations can feed (the paper's Summit motivation), plus
+/// workflow-aware workers that decode task bodies as payloads.
+fn cmd_dhub(argv: &[String]) -> Result<()> {
+    let Some(verb) = argv.first().map(String::as_str) else {
+        bail!("dhub needs a verb: serve | worker\n{USAGE}");
+    };
+    let rest = &argv[1..];
+    match verb {
+        "serve" => {
+            let spec = [
+                Flag { name: "bind", help: "listen address", takes_value: true, default: Some("127.0.0.1:7117") },
+                Flag { name: "store", help: "persistence directory (restartable hub)", takes_value: true, default: None },
+                Flag { name: "snapshot-every", help: "mutations between auto-snapshots (0 = never)", takes_value: true, default: Some("0") },
+            ];
+            let args = parse(rest, &spec)?;
+            serve_hub(
+                args.get("bind").unwrap(),
+                args.get("store"),
+                args.get_usize("snapshot-every", 0)? as u64,
+            )
+        }
+        "worker" => {
+            let spec = [
+                Flag { name: "connect", help: "server address", takes_value: true, default: Some("127.0.0.1:7117") },
+                Flag { name: "workers", help: "pulling threads in this process", takes_value: true, default: Some("1") },
+                Flag { name: "prefetch", help: "tasks to buffer per thread", takes_value: true, default: Some("1") },
+                Flag { name: "dir", help: "campaign working directory", takes_value: true, default: Some(".") },
+                Flag { name: "name", help: "worker name prefix", takes_value: true, default: None },
+                Flag { name: "linger", help: "survive campaign boundaries: rejoin after the hub drains", takes_value: false, default: None },
+            ];
+            let args = parse(rest, &spec)?;
+            let addr = args.get("connect").unwrap().to_string();
+            let workers = args.get_usize("workers", 1)?.max(1);
+            let prefetch = args.get_usize("prefetch", 1)? as u32;
+            let linger = args.has("linger");
+            let dir = PathBuf::from(args.get("dir").unwrap());
+            std::fs::create_dir_all(&dir).with_context(|| format!("creating {dir:?}"))?;
+            // default name must be unique ACROSS hosts: the hub keys
+            // assignment state by worker name, and PIDs are only
+            // per-host, so two pools on different nodes could collide
+            // and corrupt each other's requeue accounting
+            let nonce = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.subsec_nanos())
+                .unwrap_or(0);
+            let base = args
+                .get("name")
+                .map(str::to_string)
+                .unwrap_or_else(|| {
+                    let host = std::env::var("HOSTNAME").unwrap_or_default();
+                    format!("dhub-{host}-{}-{nonce:08x}", std::process::id())
+                });
+            let totals: Vec<dwork::WorkerStats> = std::thread::scope(|s| {
+                (0..workers)
+                    .map(|i| {
+                        let addr = addr.clone();
+                        let dir = dir.clone();
+                        let name = format!("{base}.{i}");
+                        s.spawn(move || -> Result<dwork::WorkerStats> {
+                            let mut total = dwork::WorkerStats::default();
+                            // rejoin backoff between campaigns: a drained
+                            // hub dismisses workers instantly, so a
+                            // lingering pool must not reconnect-cycle at
+                            // full speed for the whole inter-campaign gap
+                            let rejoin_floor = std::time::Duration::from_millis(250);
+                            let rejoin_ceiling = std::time::Duration::from_secs(10);
+                            let mut rejoin = rejoin_floor;
+                            loop {
+                                let dial = TcpClient::connect_retry(
+                                    &addr,
+                                    std::time::Duration::from_secs(10),
+                                );
+                                let conn = match dial {
+                                    Ok(conn) => conn,
+                                    // a lingering pool must outlive hub
+                                    // outages of any length, not just the
+                                    // one dial window
+                                    Err(e) if linger => {
+                                        eprintln!("{name}: hub unreachable ({e:#}); retrying");
+                                        std::thread::sleep(rejoin);
+                                        rejoin = (rejoin * 2).min(rejoin_ceiling);
+                                        continue;
+                                    }
+                                    Err(e) => return Err(e),
+                                };
+                                // exit_on_drop: a dying thread hands its
+                                // assigned tasks back to the hub
+                                let mut c = Client::new(Box::new(conn), name.clone())
+                                    .exit_on_drop(true);
+                                let worked = dwork::run_worker(&mut c, prefetch, |t| {
+                                    // empty body: a bare synchronization
+                                    // task (e.g. via `dwork create`)
+                                    if t.body.is_empty() {
+                                        return Ok(());
+                                    }
+                                    let p =
+                                        threesched::workflow::Payload::decode_body(&t.body)?;
+                                    threesched::workflow::run::exec_payload(&p, &dir)
+                                });
+                                let stats = match worked {
+                                    Ok(stats) => stats,
+                                    // a lingering pool outlives hub
+                                    // restarts too: reconnect, don't die
+                                    Err(e) if linger => {
+                                        eprintln!("{name}: hub connection lost ({e:#}); rejoining");
+                                        std::thread::sleep(rejoin);
+                                        rejoin = (rejoin * 2).min(rejoin_ceiling);
+                                        continue;
+                                    }
+                                    Err(e) => return Err(e),
+                                };
+                                total.tasks_run += stats.tasks_run;
+                                total.tasks_failed += stats.tasks_failed;
+                                total.compute_s += stats.compute_s;
+                                total.comm_s += stats.comm_s;
+                                total.idle_s += stats.idle_s;
+                                // the hub dismisses workers when a campaign
+                                // drains (paper Exit); a lingering pool
+                                // serves successive campaigns on a
+                                // long-lived hub instead of exiting
+                                if !linger {
+                                    return Ok(total);
+                                }
+                                if stats.tasks_run > 0 {
+                                    rejoin = rejoin_floor; // productive campaign
+                                }
+                                std::thread::sleep(rejoin);
+                                rejoin = (rejoin * 2).min(rejoin_ceiling);
+                            }
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().expect("worker thread panicked"))
+                    .collect::<Result<Vec<_>>>()
+            })?;
+            let run: u64 = totals.iter().map(|s| s.tasks_run).sum();
+            let failed: u64 = totals.iter().map(|s| s.tasks_failed).sum();
+            let compute: f64 = totals.iter().map(|s| s.compute_s).sum();
+            let comm: f64 = totals.iter().map(|s| s.comm_s).sum();
+            println!(
+                "{base}: {workers} threads ran {run} tasks ({failed} failed), \
+                 compute {compute:.2}s, comm {comm:.2}s"
+            );
+            Ok(())
+        }
+        other => bail!("unknown dhub verb {other:?} (serve | worker)"),
+    }
+}
+
 // ------------------------------------------------------------------- dwork
 
 fn cmd_dwork(argv: &[String]) -> Result<()> {
@@ -136,17 +311,11 @@ fn cmd_dwork(argv: &[String]) -> Result<()> {
                 Flag { name: "snapshot-every", help: "mutations between snapshots", takes_value: true, default: Some("0") },
             ];
             let args = parse(rest, &spec)?;
-            let state = match args.get("db") {
-                Some(dir) => dwork::SchedState::with_store(KvStore::open(Path::new(dir))?),
-                None => dwork::SchedState::new(),
-            };
-            let cfg = dwork::ServerConfig {
-                snapshot_every: args.get_usize("snapshot-every", 0)? as u64,
-            };
-            let (addr, _guard, handle) = dwork::spawn_tcp(state, cfg, args.get("bind").unwrap())?;
-            println!("dhub serving on {addr} (ctrl-c to stop)");
-            let _ = handle.join();
-            Ok(())
+            serve_hub(
+                args.get("bind").unwrap(),
+                args.get("db"),
+                args.get_usize("snapshot-every", 0)? as u64,
+            )
         }
         "worker" => {
             let spec = [
@@ -211,8 +380,17 @@ fn cmd_dwork(argv: &[String]) -> Result<()> {
             let mut c = Client::new(Box::new(conn), "dquery");
             let st = c.status()?;
             println!(
-                "total={} ready={} waiting={} assigned={} completed={} errored={} workers={}",
-                st.total, st.ready, st.waiting, st.assigned, st.completed, st.errored, st.workers
+                "total={} ready={} waiting={} assigned={} completed={} errored={} \
+                 failed={} workers={} drained={}",
+                st.total,
+                st.ready,
+                st.waiting,
+                st.assigned,
+                st.completed,
+                st.errored,
+                st.failed,
+                st.workers,
+                st.is_drained()
             );
             Ok(())
         }
@@ -302,7 +480,7 @@ fn cmd_task(argv: &[String]) -> Result<()> {
 
 fn cmd_workflow(argv: &[String]) -> Result<()> {
     let Some(verb) = argv.first().map(String::as_str) else {
-        bail!("workflow needs a verb: plan | lower | run\n{USAGE}");
+        bail!("workflow needs a verb: plan | lower | run | submit\n{USAGE}");
     };
     let rest = &argv[1..];
     match verb {
@@ -356,12 +534,37 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
             }
             Ok(())
         }
+        "submit" => {
+            let spec = [
+                Flag { name: "file", help: "workflow yaml", takes_value: true, default: Some("workflow.yaml") },
+                Flag { name: "connect", help: "remote dhub address", takes_value: true, default: Some("127.0.0.1:7117") },
+            ];
+            let args = parse(rest, &spec)?;
+            let g = workflow::parse_workflow_file(Path::new(args.get("file").unwrap()))?;
+            let addr = args.get("connect").unwrap();
+            let sub =
+                workflow::submit_dwork_remote(&g, addr, &workflow::RemoteOpts::default())?;
+            println!(
+                "submitted {} tasks of workflow {:?} to dhub {addr} (detached; \
+                 poll with `threesched dwork status --connect {addr}`)",
+                sub.submitted, g.name
+            );
+            if sub.skipped_at_submit > 0 {
+                println!(
+                    "note: {} tasks skipped at submit (an upstream dependency had \
+                     already failed)",
+                    sub.skipped_at_submit
+                );
+            }
+            Ok(())
+        }
         "run" => {
             let spec = [
                 Flag { name: "file", help: "workflow yaml", takes_value: true, default: Some("workflow.yaml") },
                 Flag { name: "coordinator", help: "auto | pmake | dwork | mpilist", takes_value: true, default: Some("auto") },
                 Flag { name: "procs", help: "parallelism (nodes/workers/ranks)", takes_value: true, default: None },
                 Flag { name: "dir", help: "campaign working directory", takes_value: true, default: Some(".") },
+                Flag { name: "connect", help: "remote dhub address (implies dwork; workers join separately)", takes_value: true, default: None },
             ];
             let args = parse(rest, &spec)?;
             let g = workflow::parse_workflow_file(Path::new(args.get("file").unwrap()))?;
@@ -369,17 +572,39 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
             let procs = args.get_usize("procs", default_procs)?;
             let dir = Path::new(args.get("dir").unwrap());
-            let summary = match args.get("coordinator").unwrap() {
-                "auto" => {
+            let summary = match (args.get("connect"), args.get("coordinator").unwrap()) {
+                (Some(addr), "dwork" | "auto") => {
+                    // execution happens wherever the worker pools run:
+                    // local-driver knobs do not travel over the wire
+                    if args.get("procs").is_some() {
+                        eprintln!("warning: --procs is ignored with --connect \
+                                   (parallelism = whatever worker pools joined the hub)");
+                    }
+                    if args.get("dir") != Some(".") {
+                        eprintln!("warning: --dir is ignored with --connect \
+                                   (workers use their own `dhub worker --dir`)");
+                    }
+                    println!(
+                        "feeding remote dhub {addr} (join workers with \
+                         `threesched dhub worker --connect {addr}`)"
+                    );
+                    workflow::run_dwork_remote(&g, addr, &workflow::RemoteOpts::default())?
+                }
+                (Some(_), other) => {
+                    bail!("--connect is a dwork deployment (got --coordinator {other})")
+                }
+                (None, "auto") => {
                     let (rec, summary) =
                         workflow::run_auto(&g, &CostModel::paper(), procs, dir)?;
                     print!("{}", rec.render());
                     summary
                 }
-                "pmake" => workflow::dispatch(&g, Tool::Pmake, procs, dir)?,
-                "dwork" => workflow::dispatch(&g, Tool::Dwork, procs, dir)?,
-                "mpilist" => workflow::dispatch(&g, Tool::MpiList, procs, dir)?,
-                other => bail!("unknown coordinator {other:?} (auto | pmake | dwork | mpilist)"),
+                (None, "pmake") => workflow::dispatch(&g, Tool::Pmake, procs, dir)?,
+                (None, "dwork") => workflow::dispatch(&g, Tool::Dwork, procs, dir)?,
+                (None, "mpilist") => workflow::dispatch(&g, Tool::MpiList, procs, dir)?,
+                (None, other) => {
+                    bail!("unknown coordinator {other:?} (auto | pmake | dwork | mpilist)")
+                }
             };
             println!(
                 "{}: {} tasks run, {} failed, {} skipped, makespan {:.3}s",

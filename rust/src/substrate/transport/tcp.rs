@@ -5,10 +5,10 @@
 //! event loop is identical for in-proc and TCP deployments.
 
 use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -79,11 +79,27 @@ impl TcpServer {
     }
 }
 
+/// Where the unblock-accept dummy connection must dial: a wildcard bind
+/// address (`0.0.0.0` / `::`) is not itself connectable on every
+/// platform, so the dial goes to the loopback of the same family with
+/// the bound port.
+fn dial_addr(bound: SocketAddr) -> SocketAddr {
+    if bound.ip().is_unspecified() {
+        let loopback: IpAddr = match bound.ip() {
+            IpAddr::V4(_) => Ipv4Addr::LOCALHOST.into(),
+            IpAddr::V6(_) => Ipv6Addr::LOCALHOST.into(),
+        };
+        SocketAddr::new(loopback, bound.port())
+    } else {
+        bound
+    }
+}
+
 impl Drop for TcpServer {
     fn drop(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
         // unblock accept() with a dummy connection
-        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+        let _ = TcpStream::connect_timeout(&dial_addr(self.addr), Duration::from_millis(200));
         if let Some(h) = self.acceptor.take() {
             let _ = h.join();
         }
@@ -117,11 +133,46 @@ pub struct TcpClient {
     stream: TcpStream,
 }
 
+/// Per-syscall socket timeout: every dwork request gets an immediate
+/// reply (the server never parks a request), so a read blocked this long
+/// means the hub is wedged or the network black-holed — better to error
+/// (and let ReconnectConn redial, or a best-effort Drop give up) than to
+/// hang a worker forever.
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
 impl TcpClient {
     pub fn connect(addr: &str) -> Result<Self> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         stream.set_nodelay(true)?; // latency matters: this RTT is the METG driver
+        stream.set_read_timeout(Some(IO_TIMEOUT))?;
+        stream.set_write_timeout(Some(IO_TIMEOUT))?;
         Ok(TcpClient { stream })
+    }
+
+    /// Keep dialing `addr` with exponential backoff until it answers or
+    /// `timeout` elapses.  Remote deployments launch hub and workers from
+    /// independent job steps, so a worker routinely starts before the hub
+    /// has bound its socket; this absorbs that race.
+    pub fn connect_retry(addr: &str, timeout: Duration) -> Result<Self> {
+        let deadline = Instant::now() + timeout;
+        let mut delay = Duration::from_millis(5);
+        loop {
+            match Self::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return Err(e.context(format!(
+                            "no server reachable at {addr} within {timeout:?}"
+                        )));
+                    }
+                    // never sleep past the deadline: the last dial happens
+                    // AT the deadline, not delay-before it
+                    std::thread::sleep(delay.min(deadline - now));
+                    delay = (delay * 2).min(Duration::from_millis(250));
+                }
+            }
+        }
     }
 }
 
@@ -130,6 +181,68 @@ impl ClientConn for TcpClient {
         write_frame(&mut self.stream, msg)?;
         read_frame(&mut self.stream)?
             .ok_or_else(|| anyhow!("server closed connection mid-request"))
+    }
+}
+
+/// A self-healing [`ClientConn`] over TCP: dials lazily on first use, and
+/// when a request fails (connection reset, server restart) redials and
+/// replays the request up to `max_redials` times before surfacing the
+/// error — bounded, so a dead hub fails fast instead of spinning forever.
+///
+/// Replay caveat: a request the server applied just before the connection
+/// died is applied twice.  Every dwork message tolerates this — reads
+/// (`Status`, `Steal`) simply re-ask, and a duplicated mutation surfaces
+/// as a server-side `Err` the caller already handles (`Create` of an
+/// existing task, `Complete` of a finished one).  Use it for control-plane
+/// clients (submitters, status pollers); workers prefer a plain
+/// [`TcpClient`] so a dead worker's tasks are re-queued rather than
+/// replayed.
+pub struct ReconnectConn {
+    addr: String,
+    conn: Option<TcpClient>,
+    max_redials: u32,
+    connect_timeout: Duration,
+}
+
+impl ReconnectConn {
+    pub fn new(addr: impl Into<String>) -> ReconnectConn {
+        ReconnectConn {
+            addr: addr.into(),
+            conn: None,
+            max_redials: 3,
+            connect_timeout: Duration::from_secs(10),
+        }
+    }
+
+    /// Bound the redial count and the per-dial connect timeout.
+    pub fn with_limits(mut self, max_redials: u32, connect_timeout: Duration) -> ReconnectConn {
+        self.max_redials = max_redials;
+        self.connect_timeout = connect_timeout;
+        self
+    }
+}
+
+impl ClientConn for ReconnectConn {
+    fn request(&mut self, msg: &[u8]) -> Result<Vec<u8>> {
+        let mut redials = 0u32;
+        loop {
+            if self.conn.is_none() {
+                self.conn = Some(TcpClient::connect_retry(&self.addr, self.connect_timeout)?);
+            }
+            match self.conn.as_mut().expect("connection just established").request(msg) {
+                Ok(reply) => return Ok(reply),
+                Err(e) => {
+                    self.conn = None; // this connection is dead: redial
+                    if redials >= self.max_redials {
+                        return Err(e.context(format!(
+                            "request to {} failed after {redials} redials",
+                            self.addr
+                        )));
+                    }
+                    redials += 1;
+                }
+            }
+        }
     }
 }
 
@@ -191,5 +304,82 @@ mod tests {
     #[test]
     fn connect_to_nothing_errors() {
         assert!(TcpClient::connect("127.0.0.1:1").is_err());
+    }
+
+    #[test]
+    fn wildcard_bind_drop_does_not_stall() {
+        // regression: the unblock-accept dummy dial used to target the
+        // wildcard address verbatim, stalling Drop for the full 200 ms
+        // connect timeout on platforms where 0.0.0.0 is not connectable
+        let (server, _rx) = TcpServer::bind("0.0.0.0:0").unwrap();
+        let t0 = std::time::Instant::now();
+        drop(server);
+        assert!(
+            t0.elapsed() < Duration::from_millis(150),
+            "wildcard-bound server drop stalled {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn dial_addr_maps_wildcard_to_loopback() {
+        let v4: SocketAddr = "0.0.0.0:7117".parse().unwrap();
+        assert_eq!(dial_addr(v4), "127.0.0.1:7117".parse().unwrap());
+        let v6: SocketAddr = "[::]:7117".parse().unwrap();
+        assert_eq!(dial_addr(v6), "[::1]:7117".parse().unwrap());
+        let concrete: SocketAddr = "10.1.2.3:7117".parse().unwrap();
+        assert_eq!(dial_addr(concrete), concrete);
+    }
+
+    #[test]
+    fn connect_retry_waits_for_late_server() {
+        // grab a free port, release it, then bring the server up late
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap();
+        drop(probe);
+        let addr_s = addr.to_string();
+        let server_thread = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(100));
+            let (server, rx) = TcpServer::bind(&addr.to_string()).unwrap();
+            let echo = spawn_echo(rx);
+            (server, echo)
+        });
+        let mut c = TcpClient::connect_retry(&addr_s, Duration::from_secs(5)).unwrap();
+        assert_eq!(c.request(b"late").unwrap(), b"etal");
+        let (server, _echo) = server_thread.join().unwrap();
+        drop(c);
+        drop(server);
+    }
+
+    #[test]
+    fn connect_retry_gives_up_at_deadline() {
+        let t0 = std::time::Instant::now();
+        let r = TcpClient::connect_retry("127.0.0.1:1", Duration::from_millis(150));
+        assert!(r.is_err());
+        assert!(t0.elapsed() < Duration::from_secs(5), "retry loop ran away");
+    }
+
+    #[test]
+    fn reconnect_conn_serves_requests_and_bounds_redials() {
+        let (server, rx) = TcpServer::bind("127.0.0.1:0").unwrap();
+        // an event loop that dies after one request: the live connection
+        // is severed mid-session, exactly the failure ReconnectConn heals
+        let one_shot = std::thread::spawn(move || {
+            let req = rx.recv().unwrap();
+            let mut out = req.payload.clone();
+            out.reverse();
+            req.reply(out);
+            // rx drops here: every later forward fails, connections close
+        });
+        let mut c = ReconnectConn::new(server.addr.to_string())
+            .with_limits(2, Duration::from_millis(200));
+        assert_eq!(c.request(b"abc").unwrap(), b"cba");
+        one_shot.join().unwrap();
+        // redials reconnect fine (the acceptor still runs) but every
+        // replay fails: the bounded budget must surface the error quickly
+        let t0 = std::time::Instant::now();
+        assert!(c.request(b"again").is_err());
+        assert!(t0.elapsed() < Duration::from_secs(10), "redial loop ran away");
+        drop(server);
     }
 }

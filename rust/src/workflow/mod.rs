@@ -21,7 +21,10 @@
 //!   picks the coordinator whose overhead disappears at the workload's
 //!   task granularity;
 //! * [`run`] — drivers that execute the same graph to completion on any
-//!   back-end (`threesched workflow run --coordinator auto`).
+//!   back-end (`threesched workflow run --coordinator auto`), including
+//!   the distributed path: [`run::run_dwork_remote`] feeds a long-lived
+//!   TCP dhub (`threesched dhub serve`) drained by independently
+//!   launched worker processes (`threesched dhub worker`).
 //!
 //! Each coordinator module also gains a `from_workflow` ingestion API
 //! ([`crate::coordinator::pmake::from_workflow`],
@@ -37,6 +40,9 @@ pub mod spec;
 
 pub use graph::{GraphStats, Payload, TaskSpec, WorkflowGraph};
 pub use lower::{to_dwork, to_mpilist, to_pmake, DworkTask, LoweredPmake, MpiListPlan};
-pub use run::{dispatch, run_auto, run_dwork, run_mpilist, run_pmake, RunSummary};
+pub use run::{
+    await_dwork_remote, dispatch, run_auto, run_dwork, run_dwork_remote, run_mpilist,
+    run_pmake, submit_dwork_remote, RemoteOpts, RemoteSubmission, RunSummary,
+};
 pub use select::{select, Assessment, Recommendation};
 pub use spec::{parse_workflow, parse_workflow_file, to_yaml};

@@ -1,0 +1,281 @@
+//! Remote dhub integration: the paper's actual deployment scenario — one
+//! long-lived task server (dhub) over real TCP sockets, fed by a
+//! submitter and drained by independently launched worker pools.
+//!
+//! Multi-process-shaped: server, workers, and the submitting driver run
+//! on separate threads that talk only through the wire (`TcpClient` /
+//! `ReconnectConn`), never through shared state.  Asserts the acceptance
+//! contract: the same `WorkflowGraph` produces an equivalent
+//! `RunSummary` (tasks_run / tasks_failed / tasks_skipped) via in-proc
+//! `run_dwork` and via `dhub serve` + remote workers + the
+//! `workflow run --connect` driver — including failure propagation —
+//! and that a dead worker's assigned+prefetched tasks are re-queued.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use threesched::coordinator::dwork::{
+    self, Client, SchedState, ServerConfig, StealBatch, TaskMsg,
+};
+use threesched::substrate::transport::tcp::TcpClient;
+use threesched::workflow::{
+    self, run_dwork, run_dwork_remote, Payload, RemoteOpts, TaskSpec, WorkflowGraph,
+};
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "threesched-remote-{name}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn opts() -> RemoteOpts {
+    RemoteOpts { poll: Duration::from_millis(5), connect_timeout: Duration::from_secs(5) }
+}
+
+/// A worker pool of `n` threads joined to `addr` over real sockets, each
+/// running the standard `run_worker` loop on the workflow's payloads —
+/// the same execution `threesched dhub worker` performs (plus declared
+/// -output materialization for tasks it recognizes from `g`).
+fn spawn_worker_pool(
+    addr: String,
+    n: usize,
+    g: WorkflowGraph,
+    dir: PathBuf,
+    prefix: &str,
+) -> Vec<std::thread::JoinHandle<dwork::WorkerStats>> {
+    (0..n)
+        .map(|i| {
+            let addr = addr.clone();
+            let g = g.clone();
+            let dir = dir.clone();
+            let name = format!("{prefix}{i}");
+            std::thread::spawn(move || {
+                let conn = TcpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+                let mut c = Client::new(Box::new(conn), name).exit_on_drop(true);
+                dwork::run_worker(&mut c, 2, |t| match g.get(&t.name) {
+                    Some(spec) => workflow::run::exec_task(spec, &dir),
+                    None => workflow::run::exec_payload(&Payload::decode_body(&t.body)?, &dir),
+                })
+                .unwrap()
+            })
+        })
+        .collect()
+}
+
+fn file_pipeline() -> WorkflowGraph {
+    let mut g = WorkflowGraph::new("remote-pipe");
+    g.add_task(TaskSpec::command("gen", "echo 7 > data.txt").outputs(&["data.txt"]))
+        .unwrap();
+    g.add_task(TaskSpec::kernel("crunch", "atb_32", 5).after(&["gen"])).unwrap();
+    g.add_task(
+        TaskSpec::command("sum", "cp data.txt sum.txt")
+            .outputs(&["sum.txt"])
+            .after(&["gen", "crunch"]),
+    )
+    .unwrap();
+    g
+}
+
+fn failing_graph() -> WorkflowGraph {
+    let mut g = WorkflowGraph::new("remote-fail");
+    g.add_task(TaskSpec::command("boom", "exit 3")).unwrap();
+    g.add_task(TaskSpec::command("child", "true").after(&["boom"])).unwrap();
+    g.add_task(TaskSpec::command("grandchild", "true").after(&["child"])).unwrap();
+    g.add_task(TaskSpec::command("free", "true")).unwrap();
+    g
+}
+
+/// Run `g` through the full remote path and return (remote summary,
+/// final server state).
+fn run_remote(
+    g: &WorkflowGraph,
+    workers: usize,
+    dir: &Path,
+) -> (workflow::RunSummary, SchedState) {
+    let (addr, guard, handle) =
+        dwork::spawn_tcp(SchedState::new(), ServerConfig::default(), "127.0.0.1:0").unwrap();
+    // workers join BEFORE anything is submitted: an empty hub must park
+    // them (NotFound), not dismiss them (Exit)
+    let pool =
+        spawn_worker_pool(addr.to_string(), workers, g.clone(), dir.to_path_buf(), "w");
+    let summary = run_dwork_remote(g, &addr.to_string(), &opts()).unwrap();
+    for h in pool {
+        h.join().unwrap();
+    }
+    drop(guard);
+    let state = handle.join().unwrap();
+    (summary, state)
+}
+
+#[test]
+fn remote_summary_matches_inproc() {
+    let g = file_pipeline();
+    let dir_ref = tmp("ref");
+    let reference = run_dwork(&g, &dir_ref, 3, 1).unwrap();
+    let dir_remote = tmp("run");
+    let (summary, state) = run_remote(&g, 3, &dir_remote);
+    assert!(state.all_done());
+    assert_eq!(summary.tasks_run, reference.tasks_run);
+    assert_eq!(summary.tasks_failed, reference.tasks_failed);
+    assert_eq!(summary.tasks_skipped, reference.tasks_skipped);
+    assert!(summary.all_ok(), "{summary:?}");
+    // both worlds materialized the sink output
+    assert!(dir_ref.join("sum.txt").exists());
+    assert!(dir_remote.join("sum.txt").exists());
+    let _ = std::fs::remove_dir_all(&dir_ref);
+    let _ = std::fs::remove_dir_all(&dir_remote);
+}
+
+#[test]
+fn remote_failure_propagation_matches_inproc() {
+    let g = failing_graph();
+    let dir_ref = tmp("fail-ref");
+    let reference = run_dwork(&g, &dir_ref, 2, 0).unwrap();
+    assert_eq!(reference.tasks_run, 2, "boom + free ran");
+    assert_eq!(reference.tasks_failed, 1);
+    assert_eq!(reference.tasks_skipped, 2, "child + grandchild never served");
+    let dir_remote = tmp("fail-run");
+    let (summary, state) = run_remote(&g, 2, &dir_remote);
+    assert!(state.all_done(), "errored graph still terminates remotely");
+    assert_eq!(summary.tasks_run, reference.tasks_run);
+    assert_eq!(summary.tasks_failed, reference.tasks_failed);
+    assert_eq!(summary.tasks_skipped, reference.tasks_skipped);
+    let _ = std::fs::remove_dir_all(&dir_ref);
+    let _ = std::fs::remove_dir_all(&dir_remote);
+}
+
+#[test]
+fn submit_then_detach_then_await() {
+    // the `workflow submit --connect` path: ingest, walk away, let a
+    // late-joining pool drain, then reconstruct the summary by polling
+    let g = file_pipeline();
+    let dir = tmp("detach");
+    let (addr, guard, handle) =
+        dwork::spawn_tcp(SchedState::new(), ServerConfig::default(), "127.0.0.1:0").unwrap();
+    let submission = workflow::submit_dwork_remote(&g, &addr.to_string(), &opts()).unwrap();
+    assert_eq!(submission.submitted, 3);
+    assert_eq!(submission.duplicate_acks, 0);
+    assert_eq!(submission.skipped_at_submit, 0);
+    // submitter has detached; only now do workers appear
+    let pool = spawn_worker_pool(addr.to_string(), 2, g.clone(), dir.clone(), "late");
+    let summary =
+        workflow::await_dwork_remote(&addr.to_string(), &submission, &opts()).unwrap();
+    for h in pool {
+        h.join().unwrap();
+    }
+    assert_eq!(summary.tasks_run, 3);
+    assert!(summary.all_ok());
+    drop(guard);
+    assert!(handle.join().unwrap().all_done());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn dead_worker_tasks_requeue_and_campaign_finishes() {
+    // worker death mid-campaign (satellite): a TCP worker steals a batch
+    // (assigned + prefetched), dies holding it, and the campaign must
+    // still finish with all_done() once the hub re-queues its tasks
+    let (addr, guard, handle) =
+        dwork::spawn_tcp(SchedState::new(), ServerConfig::default(), "127.0.0.1:0").unwrap();
+    let addr_s = addr.to_string();
+    {
+        let conn = TcpClient::connect_retry(&addr_s, Duration::from_secs(5)).unwrap();
+        let mut feeder = Client::new(Box::new(conn), "feeder");
+        for i in 0..8 {
+            feeder.create(TaskMsg::new(format!("t{i}"), vec![]), &[]).unwrap();
+        }
+    }
+    // doomed worker grabs 3 tasks over TCP and dies holding all of them
+    {
+        let conn = TcpClient::connect_retry(&addr_s, Duration::from_secs(5)).unwrap();
+        let mut doomed = Client::new(Box::new(conn), "doomed").exit_on_drop(true);
+        match doomed.steal_n(3).unwrap() {
+            StealBatch::Tasks(ts) => assert_eq!(ts.len(), 3),
+            other => panic!("expected a batch, got {other:?}"),
+        }
+        // dropped here: Exit-on-drop (the worker-death path) fires
+    }
+    // a second worker dies WITHOUT announcing: its connection just drops.
+    // The paper's recovery is a user sending Exit on the dead worker's
+    // behalf — exercise that too.
+    {
+        let conn = TcpClient::connect_retry(&addr_s, Duration::from_secs(5)).unwrap();
+        let mut silent = Client::new(Box::new(conn), "silent");
+        match silent.steal_n(2).unwrap() {
+            StealBatch::Tasks(ts) => assert_eq!(ts.len(), 2),
+            other => panic!("expected a batch, got {other:?}"),
+        }
+        // no exit_on_drop: the connection vanishes with tasks assigned
+    }
+    {
+        let conn = TcpClient::connect_retry(&addr_s, Duration::from_secs(5)).unwrap();
+        let mut undertaker = Client::new(Box::new(conn), "undertaker");
+        undertaker.exit_for("silent").unwrap();
+    }
+    // one healthy survivor drains the whole campaign
+    let conn = TcpClient::connect_retry(&addr_s, Duration::from_secs(5)).unwrap();
+    let mut survivor = Client::new(Box::new(conn), "survivor").exit_on_drop(true);
+    let stats = dwork::run_worker(&mut survivor, 2, |_| Ok(())).unwrap();
+    assert_eq!(stats.tasks_run, 8, "every re-queued task reached the survivor");
+    drop(survivor);
+    drop(guard);
+    let state = handle.join().unwrap();
+    assert!(state.all_done());
+    assert_eq!(state.status().completed, 8);
+}
+
+#[test]
+fn resubmission_over_failed_hub_state_skips_doomed_tasks() {
+    // remote workers race the submitter: a dependency can already sit in
+    // the error state when a dependent's Create arrives, and the server
+    // refuses it.  Model the extreme case — the failure pre-dates the
+    // submission entirely (a resubmitted campaign) — and check the
+    // driver degrades to "skipped", not to an error or a hang.
+    let mut pre = SchedState::new();
+    pre.create(TaskMsg::new("boom", vec![]), &[]).unwrap();
+    pre.steal("old-worker", 1);
+    pre.complete("old-worker", "boom", false).unwrap(); // boom already failed
+    let (addr, guard, handle) =
+        dwork::spawn_tcp(pre, ServerConfig::default(), "127.0.0.1:0").unwrap();
+    let g = failing_graph(); // boom -> child -> grandchild, plus free
+    let submission = workflow::submit_dwork_remote(&g, &addr.to_string(), &opts()).unwrap();
+    // boom acked as duplicate + free created; child/grandchild doomed
+    assert_eq!(submission.submitted, 2);
+    assert_eq!(submission.duplicate_acks, 1, "boom pre-existed on the hub");
+    assert_eq!(submission.skipped_at_submit, 2);
+    // workers join only after submit: the pre-drained hub would have
+    // dismissed them earlier
+    let dir = tmp("resubmit");
+    let pool = spawn_worker_pool(addr.to_string(), 1, g.clone(), dir.clone(), "re");
+    let summary =
+        workflow::await_dwork_remote(&addr.to_string(), &submission, &opts()).unwrap();
+    for h in pool {
+        h.join().unwrap();
+    }
+    assert_eq!(summary.tasks_run, 1, "only `free` runs in the resubmission");
+    assert_eq!(summary.tasks_failed, 0, "boom's failure belongs to the old campaign");
+    assert_eq!(summary.tasks_skipped, 2, "child + grandchild skipped at submit");
+    drop(guard);
+    assert!(handle.join().unwrap().all_done());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn remote_counters_distinguish_failed_from_skipped() {
+    // the server-side completion query must expose enough to rebuild the
+    // failed/skipped split without worker-side stats
+    let g = failing_graph();
+    let dir = tmp("counters");
+    let (_summary, state) = run_remote(&g, 2, &dir);
+    let st = state.status();
+    assert!(st.is_drained());
+    assert_eq!(st.completed, 1, "only `free` completed");
+    assert_eq!(st.errored, 3);
+    assert_eq!(st.failed, 1);
+    assert_eq!(st.skipped(), 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
