@@ -1,0 +1,98 @@
+//! Cross-validation end to end: for each canonically shaped example
+//! workflow, lay the adaptive selector's *predicted* makespan next to
+//! the DES-*simulated* makespan for every back-end (with relative
+//! error), then run one small pipeline for real with tracing on, print
+//! its Fig-5-style breakdown, and put the *measured* makespan in the
+//! same table — the loop that lets the cost model be trusted (or
+//! recalibrated).
+//!
+//! Run: `cargo run --release --example trace_compare`
+
+use threesched::substrate::cluster::costs::CostModel;
+use threesched::trace::{self, Tracer};
+use threesched::workflow::{self, TaskSpec, WorkflowGraph};
+
+fn deep_file_chain() -> WorkflowGraph {
+    let mut g = WorkflowGraph::new("md-restart-chain");
+    for i in 0..24 {
+        let mut t = TaskSpec::command(format!("seg{i}"), format!("simulate > seg{i}.chk"))
+            .outputs(&[&format!("seg{i}.chk")])
+            .est(3600.0);
+        if i > 0 {
+            t = t.after(&[&format!("seg{}", i - 1)]);
+        }
+        g.add_task(t).unwrap();
+    }
+    g
+}
+
+fn wide_irregular_fan() -> WorkflowGraph {
+    let mut g = WorkflowGraph::new("docking-fan");
+    g.add_task(TaskSpec::new("receptor-prep").est(10.0)).unwrap();
+    for i in 0..300 {
+        let est = 0.5 + (i % 13) as f64;
+        g.add_task(
+            TaskSpec::kernel(format!("dock{i}"), "atb_128", i as u64)
+                .after(&["receptor-prep"])
+                .est(est),
+        )
+        .unwrap();
+    }
+    g
+}
+
+fn flat_uniform_map() -> WorkflowGraph {
+    let mut g = WorkflowGraph::new("frame-analysis");
+    for i in 0..4096 {
+        g.add_task(TaskSpec::kernel(format!("frame{i}"), "atb_256", i as u64).est(0.05))
+            .unwrap();
+    }
+    g
+}
+
+fn main() -> anyhow::Result<()> {
+    let m = CostModel::paper();
+
+    println!("=== predicted (selector) vs simulated (DES), 864 ranks ===\n");
+    for g in [deep_file_chain(), wide_irregular_fan(), flat_uniform_map()] {
+        let rows = trace::compare_backends(&g, &m, 864, 42, &[])?;
+        println!("{}", trace::render_comparison(&g.name, 864, &rows));
+        // the whole point: on the backend the selector picks, its
+        // closed-form estimate must be in the same ballpark as the DES
+        let selected = rows.iter().find(|r| r.selected).expect("one selected");
+        anyhow::ensure!(
+            selected.rel_err_pred_vs_sim() < 1.0,
+            "{}: selector predicts {:.2}s but the DES says {:.2}s on {}",
+            g.name,
+            selected.predicted_s,
+            selected.simulated_s,
+            selected.tool.name()
+        );
+    }
+
+    println!("=== measured cross-validation (real traced run) ===\n");
+    let mut g = WorkflowGraph::new("mini-pipeline");
+    g.add_task(
+        TaskSpec::command("gen", "seq 1 50 > input.txt").outputs(&["input.txt"]).est(0.01),
+    )?;
+    for i in 0..6 {
+        g.add_task(
+            TaskSpec::kernel(format!("crunch{i}"), "atb_64", i).after(&["gen"]).est(0.01),
+        )?;
+    }
+    let dir = std::env::temp_dir()
+        .join(format!("threesched-trace-compare-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let tracer = Tracer::memory();
+    let summary = workflow::run_dwork_traced(&g, &dir, 2, 1, &tracer)?;
+    anyhow::ensure!(summary.all_ok(), "mini-pipeline failed: {summary:?}");
+    let events = tracer.drain();
+    trace::validate(&events)?;
+    print!("{}", trace::TraceReport::from_events(&events).render("dwork"));
+
+    let measured = vec![("dwork".to_string(), trace::makespan(&events))];
+    let rows = trace::compare_backends(&g, &m, 2, 42, &measured)?;
+    println!("\n{}", trace::render_comparison(&g.name, 2, &rows));
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

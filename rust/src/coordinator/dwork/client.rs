@@ -20,8 +20,28 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::substrate::transport::ClientConn;
+use crate::trace::{EventKind, Tracer};
 
-use super::messages::{Request, Response, StatusInfo, TaskMsg};
+use super::messages::{RefusalCode, Request, Response, StatusInfo, TaskMsg};
+
+/// A server-side error surfaced through the typed client.  Downcast the
+/// `anyhow::Error` chain to this type to reach the machine-readable
+/// refusal `code`; it is absent for non-Create errors and on replies
+/// from pre-code hubs (whose message text still carries the
+/// `ERR_MARKER_*` strings as the compatibility fallback).
+#[derive(Debug)]
+pub struct ServerError {
+    pub code: Option<RefusalCode>,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ServerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for ServerError {}
 
 /// Typed request/reply client.
 pub struct Client {
@@ -57,7 +77,7 @@ impl Client {
     fn expect_ok(&mut self, req: &Request) -> Result<()> {
         match self.roundtrip(req)? {
             Response::Ok => Ok(()),
-            Response::Err(e) => bail!("server error: {e}"),
+            Response::Err { msg, code } => Err(ServerError { code, msg }.into()),
             other => bail!("unexpected reply {other:?}"),
         }
     }
@@ -90,7 +110,7 @@ impl Client {
             Response::Task(t) => Ok(StealOutcome::Task(t)),
             Response::NotFound => Ok(StealOutcome::NotReady),
             Response::Exit => Ok(StealOutcome::AllDone),
-            Response::Err(e) => bail!("server error: {e}"),
+            Response::Err { msg, code } => Err(ServerError { code, msg }.into()),
             other => bail!("unexpected reply {other:?}"),
         }
     }
@@ -100,7 +120,7 @@ impl Client {
         match self.roundtrip(&Request::StealN { worker: self.worker.clone(), n })? {
             Response::Tasks(ts) => Ok(StealBatch::Tasks(ts)),
             Response::Exit => Ok(StealBatch::AllDone),
-            Response::Err(e) => bail!("server error: {e}"),
+            Response::Err { msg, code } => Err(ServerError { code, msg }.into()),
             other => bail!("unexpected reply {other:?}"),
         }
     }
@@ -177,6 +197,8 @@ impl Drop for Client {
 /// empty queue would be pure hub load.  Reset on every served task.
 struct IdleBackoff {
     current: Duration,
+    floor: Duration,
+    ceiling: Duration,
 }
 
 impl IdleBackoff {
@@ -184,7 +206,14 @@ impl IdleBackoff {
     const CEILING: Duration = Duration::from_millis(100);
 
     fn new() -> IdleBackoff {
-        IdleBackoff { current: IdleBackoff::FLOOR }
+        IdleBackoff::with_bounds(IdleBackoff::FLOOR, IdleBackoff::CEILING)
+    }
+
+    /// Custom bounds (the `dhub worker` CLI exposes these); a zero floor
+    /// is clamped to 1 µs and the ceiling never drops below the floor.
+    fn with_bounds(floor: Duration, ceiling: Duration) -> IdleBackoff {
+        let floor = floor.max(Duration::from_micros(1));
+        IdleBackoff { current: floor, floor, ceiling: ceiling.max(floor) }
     }
 
     /// Sleep the current interval, then lengthen it.  Returns the time
@@ -192,12 +221,12 @@ impl IdleBackoff {
     fn sleep(&mut self) -> f64 {
         let t0 = Instant::now();
         std::thread::sleep(self.current);
-        self.current = (self.current * 2).min(IdleBackoff::CEILING);
+        self.current = (self.current * 2).min(self.ceiling);
         t0.elapsed().as_secs_f64()
     }
 
     fn reset(&mut self) {
-        self.current = IdleBackoff::FLOOR;
+        self.current = self.floor;
     }
 }
 
@@ -229,6 +258,38 @@ pub struct WorkerStats {
     pub idle_s: f64,
 }
 
+/// Knobs for the worker main loop.  Defaults reproduce the historical
+/// constants exactly: prefetch 1, idle backoff 200 µs → 100 ms, no
+/// tracing.
+#[derive(Clone, Debug)]
+pub struct WorkerOpts {
+    /// tasks to keep buffered locally (0 = strict steal→run→complete)
+    pub prefetch: u32,
+    /// idle-backoff bounds while the hub has nothing ready
+    pub idle_floor: Duration,
+    pub idle_ceiling: Duration,
+    /// worker-side lifecycle recorder (`Started` before each payload)
+    pub tracer: Tracer,
+    /// record Finished/Failed here too.  Leave off when the tracer is
+    /// shared with a traced [`SchedState`](super::state::SchedState) —
+    /// the server owns the terminal events then; turn on for standalone
+    /// worker traces (`dhub worker --trace`), whose hub stream lives in
+    /// another process.
+    pub trace_terminals: bool,
+}
+
+impl Default for WorkerOpts {
+    fn default() -> Self {
+        WorkerOpts {
+            prefetch: 1,
+            idle_floor: IdleBackoff::FLOOR,
+            idle_ceiling: IdleBackoff::CEILING,
+            tracer: Tracer::default(),
+            trace_terminals: false,
+        }
+    }
+}
+
 /// Worker main loop with a prefetch buffer of `prefetch` tasks.
 ///
 /// `exec` runs one task and returns Ok to report success.  With
@@ -239,12 +300,21 @@ pub struct WorkerStats {
 pub fn run_worker(
     client: &mut Client,
     prefetch: u32,
+    exec: impl FnMut(&TaskMsg) -> Result<()>,
+) -> Result<WorkerStats> {
+    run_worker_opts(client, &WorkerOpts { prefetch, ..WorkerOpts::default() }, exec)
+}
+
+/// [`run_worker`] with every knob exposed (backoff bounds, tracing).
+pub fn run_worker_opts(
+    client: &mut Client,
+    opts: &WorkerOpts,
     mut exec: impl FnMut(&TaskMsg) -> Result<()>,
 ) -> Result<WorkerStats> {
     let mut stats = WorkerStats::default();
     let mut buffer: VecDeque<TaskMsg> = VecDeque::new();
-    let batch = prefetch.max(1);
-    let mut backoff = IdleBackoff::new();
+    let batch = opts.prefetch.max(1);
+    let mut backoff = IdleBackoff::with_bounds(opts.idle_floor, opts.idle_ceiling);
     'outer: loop {
         // refill: keep `batch` tasks in hand
         while (buffer.len() as u32) < batch {
@@ -273,12 +343,17 @@ pub fn run_worker(
             }
         }
         let Some(task) = buffer.pop_front() else { continue };
+        opts.tracer.record(&task.name, EventKind::Started, client.worker());
         let t0 = Instant::now();
         let ok = exec(&task).is_ok();
         stats.compute_s += t0.elapsed().as_secs_f64();
         stats.tasks_run += 1;
         if !ok {
             stats.tasks_failed += 1;
+        }
+        if opts.trace_terminals {
+            let kind = if ok { EventKind::Finished } else { EventKind::Failed };
+            opts.tracer.record(&task.name, kind, client.worker());
         }
         let t0 = Instant::now();
         client.complete(&task.name, ok)?;

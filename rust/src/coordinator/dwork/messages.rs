@@ -170,6 +170,41 @@ impl Request {
     }
 }
 
+/// Machine-readable classification of a Create refusal.  Travels as an
+/// optional field on [`Response::Err`] (same wire kind), so pre-code
+/// clients still read the message text and pre-code servers simply omit
+/// it — the version-proof replacement for substring-matching the
+/// `ERR_MARKER_*` strings (which stay in the text for one more version
+/// as a compatibility fallback).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RefusalCode {
+    /// the task already exists (a replayed Create — the refusal IS the ack)
+    Duplicate,
+    /// a named dependency has not been created
+    DepMissing,
+    /// a named dependency is in the error state: the task can never run
+    DepErrored,
+}
+
+impl RefusalCode {
+    fn to_u64(self) -> u64 {
+        match self {
+            RefusalCode::Duplicate => 1,
+            RefusalCode::DepMissing => 2,
+            RefusalCode::DepErrored => 3,
+        }
+    }
+
+    fn from_u64(v: u64) -> Option<RefusalCode> {
+        match v {
+            1 => Some(RefusalCode::Duplicate),
+            2 => Some(RefusalCode::DepMissing),
+            3 => Some(RefusalCode::DepErrored),
+            _ => None,
+        }
+    }
+}
+
 /// Queue counters exposed through Status.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct StatusInfo {
@@ -214,8 +249,10 @@ pub enum Response {
     Exit,
     /// Mutation acknowledged.
     Ok,
-    /// Request failed server-side.
-    Err(String),
+    /// Request failed server-side.  `code` classifies Create refusals for
+    /// programmatic callers; absent on other errors and on frames from
+    /// pre-code servers.
+    Err { msg: String, code: Option<RefusalCode> },
     Status(StatusInfo),
 }
 
@@ -228,6 +265,11 @@ const RESP_ERR: u64 = 6;
 const RESP_STATUS: u64 = 7;
 
 impl Response {
+    /// An error reply with no refusal classification.
+    pub fn err(msg: impl Into<String>) -> Response {
+        Response::Err { msg: msg.into(), code: None }
+    }
+
     pub fn encode(&self) -> Vec<u8> {
         let mut w = Writer::with_capacity(32);
         match self {
@@ -250,9 +292,12 @@ impl Response {
             Response::Ok => {
                 w.uint(1, RESP_OK);
             }
-            Response::Err(msg) => {
+            Response::Err { msg, code } => {
                 w.uint(1, RESP_ERR);
                 w.string(3, msg);
+                if let Some(c) = code {
+                    w.uint(4, c.to_u64());
+                }
             }
             Response::Status(s) => {
                 w.uint(1, RESP_STATUS);
@@ -291,7 +336,11 @@ impl Response {
             RESP_NOT_FOUND => Response::NotFound,
             RESP_EXIT => Response::Exit,
             RESP_OK => Response::Ok,
-            RESP_ERR => Response::Err(wire::get_str(&fields, 3).unwrap_or("?").to_string()),
+            RESP_ERR => Response::Err {
+                msg: wire::get_str(&fields, 3).unwrap_or("?").to_string(),
+                // absent on frames from pre-code servers
+                code: wire::get_u64(&fields, 4).ok().and_then(RefusalCode::from_u64),
+            },
             RESP_STATUS => Response::Status(StatusInfo {
                 total: wire::get_u64(&fields, 10)?,
                 ready: wire::get_u64(&fields, 11)?,
@@ -355,7 +404,15 @@ mod tests {
         roundtrip_resp(Response::NotFound);
         roundtrip_resp(Response::Exit);
         roundtrip_resp(Response::Ok);
-        roundtrip_resp(Response::Err("boom".into()));
+        roundtrip_resp(Response::err("boom"));
+        roundtrip_resp(Response::Err {
+            msg: "task \"a\" already exists".into(),
+            code: Some(RefusalCode::Duplicate),
+        });
+        roundtrip_resp(Response::Err {
+            msg: "dependency gone".into(),
+            code: Some(RefusalCode::DepErrored),
+        });
         roundtrip_resp(Response::Status(StatusInfo {
             total: 100,
             ready: 5,
@@ -366,6 +423,22 @@ mod tests {
             failed: 1,
             workers: 7,
         }));
+    }
+
+    #[test]
+    fn pre_code_err_frame_decodes_with_no_code() {
+        assert_eq!(RefusalCode::from_u64(99), None);
+        // a pre-code server's Err frame has no code field: decode to None
+        let mut w = Writer::new();
+        w.uint(1, 6); // RESP_ERR
+        w.string(3, "boom");
+        match Response::decode(w.as_bytes()).unwrap() {
+            Response::Err { msg, code } => {
+                assert_eq!(msg, "boom");
+                assert!(code.is_none());
+            }
+            other => panic!("expected Err, got {other:?}"),
+        }
     }
 
     #[test]

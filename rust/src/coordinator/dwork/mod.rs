@@ -14,7 +14,12 @@ pub mod messages;
 pub mod server;
 pub mod state;
 
-pub use client::{run_worker, Client, StealBatch, StealOutcome, WorkerStats};
-pub use messages::{Request, Response, StatusInfo, TaskMsg};
+pub use client::{
+    run_worker, run_worker_opts, Client, ServerError, StealBatch, StealOutcome, WorkerOpts,
+    WorkerStats,
+};
+pub use messages::{RefusalCode, Request, Response, StatusInfo, TaskMsg};
 pub use server::{serve, spawn_inproc, spawn_tcp, ServerConfig};
-pub use state::{SchedState, TaskState, ERR_MARKER_DEP_ERRORED, ERR_MARKER_DUPLICATE};
+pub use state::{
+    CreateError, SchedState, TaskState, ERR_MARKER_DEP_ERRORED, ERR_MARKER_DUPLICATE,
+};

@@ -59,13 +59,14 @@ pub fn serve_with_counters(
         // the first mutation)
         let mut mutated = false;
         let resp = match Request::decode(&req.payload) {
-            Err(e) => Response::Err(format!("bad request: {e}")),
+            Err(e) => Response::err(format!("bad request: {e}")),
             Ok(Request::Create { task, deps }) => match state.create(task, &deps) {
                 Ok(()) => {
                     mutated = true;
                     Response::Ok
                 }
-                Err(e) => Response::Err(e.to_string()),
+                // typed refusal: the code rides next to the marker text
+                Err(e) => Response::Err { msg: e.to_string(), code: Some(e.code) },
             },
             Ok(Request::Steal { worker }) => {
                 let mut got = state.steal(&worker, 1);
@@ -107,7 +108,7 @@ pub fn serve_with_counters(
                         mutated = true;
                         Response::Ok
                     }
-                    Err(e) => Response::Err(e.to_string()),
+                    Err(e) => Response::err(e.to_string()),
                 }
             }
             Ok(Request::Transfer { worker, task, new_deps }) => {
@@ -116,7 +117,7 @@ pub fn serve_with_counters(
                         mutated = true;
                         Response::Ok
                     }
-                    Err(e) => Response::Err(e.to_string()),
+                    Err(e) => Response::err(e.to_string()),
                 }
             }
             Ok(Request::Exit { worker }) => {
@@ -126,7 +127,7 @@ pub fn serve_with_counters(
             Ok(Request::Status) => Response::Status(state.status()),
             Ok(Request::Save) => match state.save() {
                 Ok(()) => Response::Ok,
-                Err(e) => Response::Err(e.to_string()),
+                Err(e) => Response::err(e.to_string()),
             },
         };
         if mutated {
@@ -216,7 +217,7 @@ mod tests {
         let mut raw = connector.connect();
         let reply = raw.request(&[0xde, 0xad]).unwrap();
         match super::super::messages::Response::decode(&reply).unwrap() {
-            super::super::messages::Response::Err(_) => {}
+            super::super::messages::Response::Err { code, .. } => assert!(code.is_none()),
             other => panic!("expected Err, got {other:?}"),
         }
         drop(raw);

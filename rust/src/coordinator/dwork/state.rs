@@ -18,17 +18,41 @@ use anyhow::{bail, Result};
 
 use crate::substrate::kvstore::KvStore;
 use crate::substrate::wire::{self, Reader, Writer};
+use crate::trace::{EventKind, Tracer};
 
-use super::messages::{StatusInfo, TaskMsg};
+use super::messages::{RefusalCode, StatusInfo, TaskMsg};
 
 /// Stable machine-readable markers embedded in Create refusal messages.
-/// The remote submitter (`workflow::run::submit_dwork_remote`) matches on
-/// these to distinguish a duplicate ack and a dependency-already-failed
-/// skip from a hard error, so they are part of the wire contract even
-/// though they travel inside `Response::Err` text — reword only together
-/// with that matcher and the pinning tests below.
+/// Since the typed-refusal protocol ([`RefusalCode`] on the wire) these
+/// are a *compatibility fallback* only: the remote submitter
+/// (`workflow::run::submit_dwork_remote`) prefers the code and falls
+/// back to matching these strings against pre-code hubs.  Keep them in
+/// the text for one more version; reword only together with that
+/// matcher and the pinning tests below.
 pub const ERR_MARKER_DUPLICATE: &str = "already exists";
 pub const ERR_MARKER_DEP_ERRORED: &str = "error state";
+
+/// A refused Create: the typed classification plus the human-readable
+/// message (which still carries the `ERR_MARKER_*` strings).
+#[derive(Debug)]
+pub struct CreateError {
+    pub code: RefusalCode,
+    msg: String,
+}
+
+impl CreateError {
+    fn new(code: RefusalCode, msg: String) -> CreateError {
+        CreateError { code, msg }
+    }
+}
+
+impl std::fmt::Display for CreateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for CreateError {}
 
 /// Lifecycle of a task (paper Fig 2 semantics).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -135,6 +159,8 @@ pub struct SchedState {
     errored: u64,
     /// subset of `errored` that a worker actually attempted
     failed: u64,
+    /// lifecycle event recorder (no-op unless [`SchedState::set_tracer`])
+    tracer: Tracer,
 }
 
 impl SchedState {
@@ -173,9 +199,19 @@ impl SchedState {
             completed: 0,
             errored: 0,
             failed: 0,
+            tracer: Tracer::default(),
         };
         s.rebuild();
         s
+    }
+
+    /// Attach a tracer: every lifecycle transition this state machine
+    /// performs (Created/Ready/Launched/Finished/Failed/Requeued) is
+    /// recorded from the server's vantage point.  Worker-side `Started`
+    /// events come from [`super::client::run_worker_opts`] when the same
+    /// tracer (or a clone) is handed to the workers.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
     }
 
     /// Regenerate run-time structures from the persisted tables (paper:
@@ -273,17 +309,31 @@ impl SchedState {
         }
     }
 
-    /// Create a task with dependencies (paper Fig 2 `Create`).
-    pub fn create(&mut self, msg: TaskMsg, deps: &[String]) -> Result<()> {
+    /// Create a task with dependencies (paper Fig 2 `Create`).  Refusals
+    /// are typed ([`CreateError::code`]) so the server can put the
+    /// classification on the wire instead of leaving clients to parse
+    /// message text.
+    pub fn create(&mut self, msg: TaskMsg, deps: &[String]) -> Result<(), CreateError> {
         if self.tasks.contains_key(&msg.name) {
-            bail!("task {:?} {ERR_MARKER_DUPLICATE}", msg.name);
+            return Err(CreateError::new(
+                RefusalCode::Duplicate,
+                format!("task {:?} {ERR_MARKER_DUPLICATE}", msg.name),
+            ));
         }
         let mut join = 0u32;
         for d in deps {
             match self.tasks.get(d) {
-                None => bail!("dependency {d:?} does not exist"),
+                None => {
+                    return Err(CreateError::new(
+                        RefusalCode::DepMissing,
+                        format!("dependency {d:?} does not exist"),
+                    ))
+                }
                 Some(e) if e.state == TaskState::Error => {
-                    bail!("dependency {d:?} is in the {ERR_MARKER_DEP_ERRORED}")
+                    return Err(CreateError::new(
+                        RefusalCode::DepErrored,
+                        format!("dependency {d:?} is in the {ERR_MARKER_DEP_ERRORED}"),
+                    ))
                 }
                 Some(e) if e.state == TaskState::Done => {}
                 Some(_) => join += 1,
@@ -310,7 +360,9 @@ impl SchedState {
                 touched.push(d.clone());
             }
         }
+        self.tracer.record(&name, EventKind::Created, "");
         if join == 0 {
+            self.tracer.record(&name, EventKind::Ready, "");
             self.ready.push_back(name.clone());
         }
         self.persist(&name);
@@ -331,6 +383,7 @@ impl SchedState {
             debug_assert_eq!(e.state, TaskState::Ready);
             e.state = TaskState::Assigned;
             out.push(e.msg.clone());
+            self.tracer.record(&name, EventKind::Launched, worker);
             self.assigned.entry(worker.to_string()).or_default().insert(name.clone());
             self.persist(&name);
         }
@@ -358,6 +411,7 @@ impl SchedState {
                 e.successors.clone()
             };
             self.completed += 1;
+            self.tracer.record(task, EventKind::Finished, worker);
             self.persist(task);
             for s in succs {
                 let promote = {
@@ -371,6 +425,7 @@ impl SchedState {
                         se.state = TaskState::Ready;
                         se.reinserted
                     };
+                    self.tracer.record(&s, EventKind::Ready, "");
                     // paper: re-inserted tasks go to the FRONT of the deque
                     if front {
                         self.ready.push_front(s.clone());
@@ -386,12 +441,12 @@ impl SchedState {
             let e = self.tasks.get_mut(task).expect("checked above");
             e.failed = true;
             self.failed += 1;
-            self.error_recursive(task);
+            self.error_recursive(task, worker);
         }
         Ok(())
     }
 
-    fn error_recursive(&mut self, task: &str) {
+    fn error_recursive(&mut self, task: &str, worker: &str) {
         let mut stack = vec![task.to_string()];
         while let Some(name) = stack.pop() {
             let Some(e) = self.tasks.get_mut(&name) else { continue };
@@ -407,6 +462,10 @@ impl SchedState {
             }
             e.state = TaskState::Error;
             self.errored += 1;
+            // the root was attempted by `worker`; propagated successors
+            // never reached anyone
+            let who = if name == task { worker } else { "" };
+            self.tracer.record(&name, EventKind::Failed, who);
             stack.extend(e.successors.iter().cloned());
             self.persist(&name);
         }
@@ -448,8 +507,10 @@ impl SchedState {
         let e = self.tasks.get_mut(task).unwrap();
         e.join += join;
         e.reinserted = true;
+        self.tracer.record(task, EventKind::Requeued, worker);
         if e.join == 0 {
             e.state = TaskState::Ready;
+            self.tracer.record(task, EventKind::Ready, "");
             self.ready.push_front(task.to_string());
         } else {
             e.state = TaskState::Waiting;
@@ -497,6 +558,8 @@ impl SchedState {
             if let Some(e) = self.tasks.get_mut(&name) {
                 if e.state == TaskState::Assigned {
                     e.state = TaskState::Ready;
+                    self.tracer.record(&name, EventKind::Requeued, worker);
+                    self.tracer.record(&name, EventKind::Ready, "");
                     self.ready.push_front(name.clone());
                     self.persist(&name);
                     requeued += 1;
@@ -580,7 +643,8 @@ mod tests {
     #[test]
     fn unknown_dep_rejected() {
         let mut s = SchedState::new();
-        assert!(s.create(t("x"), &["ghost".into()]).is_err());
+        let err = s.create(t("x"), &["ghost".into()]).unwrap_err();
+        assert_eq!(err.code, RefusalCode::DepMissing);
     }
 
     #[test]
@@ -588,8 +652,9 @@ mod tests {
         let mut s = SchedState::new();
         s.create(t("a"), &[]).unwrap();
         let err = s.create(t("a"), &[]).unwrap_err();
-        // the remote submitter treats this exact phrase as a duplicate
-        // ack (workflow::run::submit_dwork_remote) — reword both together
+        assert_eq!(err.code, RefusalCode::Duplicate);
+        // compat fallback: pre-code clients still match this exact phrase
+        // (workflow::run::submit_dwork_remote) — reword both together
         assert!(err.to_string().contains("already exists"), "{err}");
     }
 
@@ -600,10 +665,42 @@ mod tests {
         s.steal("w", 1);
         s.complete("w", "bad", false).unwrap();
         let err = s.create(t("late"), &["bad".into()]).unwrap_err();
-        // the remote submitter treats this exact phrase as
-        // skipped-at-submit (workflow::run::submit_dwork_remote) —
-        // reword both together
+        assert_eq!(err.code, RefusalCode::DepErrored);
+        // compat fallback: pre-code clients still match this exact phrase
+        // (workflow::run::submit_dwork_remote) — reword both together
         assert!(err.to_string().contains("error state"), "{err}");
+    }
+
+    #[test]
+    fn traced_lifecycle_is_wellformed() {
+        use crate::trace;
+        let tracer = Tracer::memory();
+        let mut s = SchedState::new();
+        s.set_tracer(tracer.clone());
+        s.create(t("a"), &[]).unwrap();
+        s.create(t("b"), &["a".into()]).unwrap();
+        s.create(t("boom"), &[]).unwrap();
+        s.create(t("child"), &["boom".into()]).unwrap();
+        let got = s.steal("w1", 2); // a, boom
+        assert_eq!(got.len(), 2);
+        s.complete("w1", "a", true).unwrap();
+        s.complete("w1", "boom", false).unwrap();
+        let got = s.steal("w2", 2); // b
+        assert_eq!(got.len(), 1);
+        // w2 dies holding b; a survivor picks it up
+        s.exit_worker("w2");
+        s.steal("w3", 1);
+        s.complete("w3", "b", true).unwrap();
+        let evs = tracer.drain();
+        trace::validate(&evs).unwrap();
+        let c = trace::counts(&evs);
+        assert_eq!(c.completed, 2);
+        assert_eq!(c.failed, 1, "boom was attempted");
+        assert_eq!(c.skipped, 1, "child never launched");
+        // b's requeue cycle is visible
+        let b_kinds: Vec<EventKind> =
+            evs.iter().filter(|e| e.task == "b").map(|e| e.kind).collect();
+        assert!(b_kinds.contains(&EventKind::Requeued));
     }
 
     #[test]

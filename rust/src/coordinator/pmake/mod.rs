@@ -15,7 +15,7 @@ pub mod subst;
 pub use dag::{Dag, TaskInstance};
 pub use exec::{Executor, LaunchReport, ShellExecutor};
 pub use rules::{parse_rules, parse_rules_file, parse_targets, parse_targets_file, Rule, Target};
-pub use sched::{run, RunReport, SchedConfig};
+pub use sched::{run, run_traced, RunReport, SchedConfig};
 
 use anyhow::Result;
 use std::path::Path;

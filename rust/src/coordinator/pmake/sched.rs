@@ -14,6 +14,7 @@ use std::sync::mpsc;
 use anyhow::{bail, Result};
 
 use crate::substrate::cluster::Machine;
+use crate::trace::{EventKind, Tracer};
 
 use super::dag::{Dag, TaskInstance};
 use super::exec::{Executor, LaunchReport};
@@ -60,6 +61,19 @@ impl Default for SchedConfig {
 
 /// Run the DAG to completion on the executor.
 pub fn run(dag: &Dag, exec: &dyn Executor, cfg: &SchedConfig) -> Result<RunReport> {
+    run_traced(dag, exec, cfg, &Tracer::default())
+}
+
+/// [`run`] with a lifecycle tracer.  Task identity in the trace is the
+/// instance stem (rule + binding).  `Started` is reconstructed from the
+/// launch report's run time (the executor runs in its own thread), so
+/// the queue-wait / launch / compute split matches Fig 5's components.
+pub fn run_traced(
+    dag: &Dag,
+    exec: &dyn Executor,
+    cfg: &SchedConfig,
+    tracer: &Tracer,
+) -> Result<RunReport> {
     // static feasibility check: every task must fit the allocation
     for t in &dag.tasks {
         let need = t.resources.nodes_needed(&cfg.machine);
@@ -74,6 +88,11 @@ pub fn run(dag: &Dag, exec: &dyn Executor, cfg: &SchedConfig) -> Result<RunRepor
     }
     let t_start = std::time::Instant::now();
     let n = dag.tasks.len();
+    for t in &dag.tasks {
+        tracer.record(&t.stem(), EventKind::Created, "");
+    }
+    let mut ready_traced = vec![false; n];
+    let mut launched_at = vec![0f64; n];
     let mut report = RunReport::default();
     let mut done: HashSet<usize> = HashSet::new();
     let mut failed: HashSet<usize> = HashSet::new();
@@ -90,8 +109,23 @@ pub fn run(dag: &Dag, exec: &dyn Executor, cfg: &SchedConfig) -> Result<RunRepor
                     && !report.poisoned.contains(&t.id)
                     && t.deps.iter().any(|d| failed.contains(d) || report.poisoned.contains(d))
                 {
+                    // abandoned without an attempt: terminal Failed with
+                    // no Launched marks it skipped in trace accounting
+                    tracer.record(&t.stem(), EventKind::Failed, "");
                     report.poisoned.push(t.id);
                     launched.insert(t.id); // never launch
+                }
+            }
+            // ready pass: deps done, not yet launched/poisoned
+            if tracer.enabled() {
+                for t in &dag.tasks {
+                    if !ready_traced[t.id]
+                        && !launched.contains(&t.id)
+                        && t.deps.iter().all(|d| done.contains(d))
+                    {
+                        ready_traced[t.id] = true;
+                        tracer.record(&t.stem(), EventKind::Ready, "");
+                    }
                 }
             }
             // launch pass: runnable = deps done, not launched, fits nodes
@@ -121,6 +155,8 @@ pub fn run(dag: &Dag, exec: &dyn Executor, cfg: &SchedConfig) -> Result<RunRepor
                 }
                 let Some(task) = best else { break };
                 launched.insert(task.id);
+                launched_at[task.id] = tracer.now();
+                tracer.record(&task.stem(), EventKind::Launched, "pmake");
                 report.launch_order.push(task.id);
                 free_nodes -= task.resources.nodes_needed(&cfg.machine);
                 running += 1;
@@ -136,6 +172,20 @@ pub fn run(dag: &Dag, exec: &dyn Executor, cfg: &SchedConfig) -> Result<RunRepor
             // wait for one completion
             let (id, r) = done_rx.recv().expect("running task vanished");
             running -= 1;
+            if tracer.enabled() {
+                let t_done = tracer.now();
+                // the script ran for r.run_s ending ~now; clamp to the
+                // launch time so per-task order survives timer jitter
+                let started = (t_done - r.run_s).max(launched_at[id]);
+                let stem = dag.tasks[id].stem();
+                tracer.record_at(started, &stem, EventKind::Started, "pmake");
+                tracer.record_at(
+                    t_done,
+                    &stem,
+                    if r.success { EventKind::Finished } else { EventKind::Failed },
+                    "pmake",
+                );
+            }
             free_nodes += dag.tasks[id].resources.nodes_needed(&cfg.machine);
             report.total_launch_s += r.launch_s;
             report.total_run_s += r.run_s;

@@ -49,4 +49,5 @@ pub mod coordinator;
 pub mod metg;
 pub mod runtime;
 pub mod substrate;
+pub mod trace;
 pub mod workflow;

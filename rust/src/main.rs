@@ -12,10 +12,13 @@
 //!   metg     — print the paper-scale METG sweep (DES)
 //!   workflow — plan | lower | run: one workflow.yaml, three lowerings,
 //!              METG-based adaptive coordinator selection
+//!   trace    — report | compare: Fig-5-style breakdowns over lifecycle
+//!              traces, and selector-vs-DES-vs-measured cross-validation
 //!
 //! Run with no args for usage.
 
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 use anyhow::{bail, Context as _, Result};
 
@@ -32,6 +35,7 @@ use threesched::substrate::cluster::costs::CostModel;
 use threesched::substrate::cluster::Machine;
 use threesched::substrate::kvstore::KvStore;
 use threesched::substrate::transport::tcp::TcpClient;
+use threesched::trace::{self, Tracer};
 
 const USAGE: &str = "\
 threesched — three practical workflow schedulers (pmake, dwork, mpi-list)
@@ -41,8 +45,10 @@ usage: threesched <command> [flags]
 commands:
   pmake   --rules rules.yaml --targets targets.yaml [--nodes N] [--fifo]
   dhub serve    --bind addr:port [--store dir] [--snapshot-every N]
+                [--trace out.jsonl]            (hub-side lifecycle trace)
   dhub worker   --connect addr:port [--workers N] [--prefetch K] [--dir D]
-                [--name base] [--linger]       (workflow-payload workers)
+                [--name base] [--linger] [--trace out.jsonl]
+                [--idle-floor-us U] [--idle-ceiling-ms M]
   dwork serve   --bind addr:port [--db dir] [--snapshot-every N]
   dwork worker  --connect addr:port [--name w0] [--prefetch N] [--artifacts-dir D]
   dwork create  --connect addr:port --name task [--dep t1,t2]
@@ -54,8 +60,12 @@ commands:
   workflow lower  --file wf.yaml --coordinator pmake|dwork|mpilist
                   [--out dir] [--ranks N]
   workflow run    --file wf.yaml [--coordinator auto|pmake|dwork|mpilist]
-                  [--procs N] [--dir D] [--connect addr:port]
+                  [--procs N] [--dir D] [--trace out.jsonl]
+                  [--connect addr:port] [--poll-ms MS]
   workflow submit --file wf.yaml --connect addr:port   (ingest + detach)
+  trace report    --file trace.jsonl      (Fig-5-style time breakdown)
+  trace compare   --file wf.yaml [--ranks N] [--seed S] [--trace t.jsonl]
+                  (selector-predicted vs DES-simulated vs measured makespan)
 ";
 
 fn main() {
@@ -83,6 +93,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "task" => cmd_task(rest),
         "metg" => cmd_metg(rest),
         "workflow" => cmd_workflow(rest),
+        "trace" => cmd_trace(rest),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -132,12 +143,23 @@ fn cmd_pmake(argv: &[String]) -> Result<()> {
 // -------------------------------------------------------------------- dhub
 
 /// Shared body of `dhub serve` and the legacy `dwork serve` verb: run a
-/// persistent TCP dhub in the foreground until killed.
-fn serve_hub(bind: &str, store: Option<&str>, snapshot_every: u64) -> Result<()> {
-    let state = match store {
+/// persistent TCP dhub in the foreground until killed.  With `trace`,
+/// every lifecycle transition streams to the JSONL file as it happens
+/// (flushed per event, so a ctrl-c loses at most one line).
+fn serve_hub(
+    bind: &str,
+    store: Option<&str>,
+    snapshot_every: u64,
+    trace_path: Option<&str>,
+) -> Result<()> {
+    let mut state = match store {
         Some(dir) => dwork::SchedState::with_store(KvStore::open(Path::new(dir))?),
         None => dwork::SchedState::new(),
     };
+    if let Some(p) = trace_path {
+        state.set_tracer(Tracer::to_file(Path::new(p), "dwork")?);
+        println!("tracing lifecycle events to {p}");
+    }
     let cfg = dwork::ServerConfig { snapshot_every };
     let (addr, _guard, handle) = dwork::spawn_tcp(state, cfg, bind)?;
     println!("dhub serving on {addr} (ctrl-c to stop)");
@@ -159,12 +181,14 @@ fn cmd_dhub(argv: &[String]) -> Result<()> {
                 Flag { name: "bind", help: "listen address", takes_value: true, default: Some("127.0.0.1:7117") },
                 Flag { name: "store", help: "persistence directory (restartable hub)", takes_value: true, default: None },
                 Flag { name: "snapshot-every", help: "mutations between auto-snapshots (0 = never)", takes_value: true, default: Some("0") },
+                Flag { name: "trace", help: "stream lifecycle events to this JSONL file", takes_value: true, default: None },
             ];
             let args = parse(rest, &spec)?;
             serve_hub(
                 args.get("bind").unwrap(),
                 args.get("store"),
                 args.get_usize("snapshot-every", 0)? as u64,
+                args.get("trace"),
             )
         }
         "worker" => {
@@ -175,12 +199,24 @@ fn cmd_dhub(argv: &[String]) -> Result<()> {
                 Flag { name: "dir", help: "campaign working directory", takes_value: true, default: Some(".") },
                 Flag { name: "name", help: "worker name prefix", takes_value: true, default: None },
                 Flag { name: "linger", help: "survive campaign boundaries: rejoin after the hub drains", takes_value: false, default: None },
+                Flag { name: "trace", help: "stream worker-side lifecycle events to this JSONL file", takes_value: true, default: None },
+                Flag { name: "idle-floor-us", help: "idle-backoff floor, microseconds", takes_value: true, default: Some("200") },
+                Flag { name: "idle-ceiling-ms", help: "idle-backoff ceiling, milliseconds", takes_value: true, default: Some("100") },
             ];
             let args = parse(rest, &spec)?;
             let addr = args.get("connect").unwrap().to_string();
             let workers = args.get_usize("workers", 1)?.max(1);
             let prefetch = args.get_usize("prefetch", 1)? as u32;
             let linger = args.has("linger");
+            let idle_floor = Duration::from_micros(args.get_usize("idle-floor-us", 200)? as u64);
+            let idle_ceiling =
+                Duration::from_millis(args.get_usize("idle-ceiling-ms", 100)? as u64);
+            let tracer = match args.get("trace") {
+                // standalone worker trace: this process owns its stream,
+                // so it records terminals too (the hub's trace is elsewhere)
+                Some(p) => Tracer::to_file(Path::new(p), "dwork-worker")?,
+                None => Tracer::default(),
+            };
             let dir = PathBuf::from(args.get("dir").unwrap());
             std::fs::create_dir_all(&dir).with_context(|| format!("creating {dir:?}"))?;
             // default name must be unique ACROSS hosts: the hub keys
@@ -204,6 +240,13 @@ fn cmd_dhub(argv: &[String]) -> Result<()> {
                         let addr = addr.clone();
                         let dir = dir.clone();
                         let name = format!("{base}.{i}");
+                        let opts = dwork::WorkerOpts {
+                            prefetch,
+                            idle_floor,
+                            idle_ceiling,
+                            tracer: tracer.clone(),
+                            trace_terminals: true,
+                        };
                         s.spawn(move || -> Result<dwork::WorkerStats> {
                             let mut total = dwork::WorkerStats::default();
                             // rejoin backoff between campaigns: a drained
@@ -235,7 +278,7 @@ fn cmd_dhub(argv: &[String]) -> Result<()> {
                                 // assigned tasks back to the hub
                                 let mut c = Client::new(Box::new(conn), name.clone())
                                     .exit_on_drop(true);
-                                let worked = dwork::run_worker(&mut c, prefetch, |t| {
+                                let worked = dwork::run_worker_opts(&mut c, &opts, |t| {
                                     // empty body: a bare synchronization
                                     // task (e.g. via `dwork create`)
                                     if t.body.is_empty() {
@@ -315,6 +358,7 @@ fn cmd_dwork(argv: &[String]) -> Result<()> {
                 args.get("bind").unwrap(),
                 args.get("db"),
                 args.get_usize("snapshot-every", 0)? as u64,
+                None,
             )
         }
         "worker" => {
@@ -565,6 +609,8 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
                 Flag { name: "procs", help: "parallelism (nodes/workers/ranks)", takes_value: true, default: None },
                 Flag { name: "dir", help: "campaign working directory", takes_value: true, default: Some(".") },
                 Flag { name: "connect", help: "remote dhub address (implies dwork; workers join separately)", takes_value: true, default: None },
+                Flag { name: "poll-ms", help: "status poll interval with --connect, milliseconds", takes_value: true, default: Some("50") },
+                Flag { name: "trace", help: "write a lifecycle trace (JSONL) after the run", takes_value: true, default: None },
             ];
             let args = parse(rest, &spec)?;
             let g = workflow::parse_workflow_file(Path::new(args.get("file").unwrap()))?;
@@ -572,6 +618,9 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
             let procs = args.get_usize("procs", default_procs)?;
             let dir = Path::new(args.get("dir").unwrap());
+            let trace_path = args.get("trace").map(PathBuf::from);
+            let tracer =
+                if trace_path.is_some() { Tracer::memory() } else { Tracer::default() };
             let summary = match (args.get("connect"), args.get("coordinator").unwrap()) {
                 (Some(addr), "dwork" | "auto") => {
                     // execution happens wherever the worker pools run:
@@ -584,28 +633,50 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
                         eprintln!("warning: --dir is ignored with --connect \
                                    (workers use their own `dhub worker --dir`)");
                     }
+                    if trace_path.is_some() {
+                        bail!(
+                            "--trace is a local-driver flag; with --connect, trace the hub \
+                             (`dhub serve --trace`) and/or the workers (`dhub worker --trace`)"
+                        );
+                    }
                     println!(
                         "feeding remote dhub {addr} (join workers with \
                          `threesched dhub worker --connect {addr}`)"
                     );
-                    workflow::run_dwork_remote(&g, addr, &workflow::RemoteOpts::default())?
+                    let opts = workflow::RemoteOpts {
+                        poll: Duration::from_millis(args.get_usize("poll-ms", 50)? as u64),
+                        ..workflow::RemoteOpts::default()
+                    };
+                    workflow::run_dwork_remote(&g, addr, &opts)?
                 }
                 (Some(_), other) => {
                     bail!("--connect is a dwork deployment (got --coordinator {other})")
                 }
                 (None, "auto") => {
                     let (rec, summary) =
-                        workflow::run_auto(&g, &CostModel::paper(), procs, dir)?;
+                        workflow::run_auto_traced(&g, &CostModel::paper(), procs, dir, &tracer)?;
                     print!("{}", rec.render());
                     summary
                 }
-                (None, "pmake") => workflow::dispatch(&g, Tool::Pmake, procs, dir)?,
-                (None, "dwork") => workflow::dispatch(&g, Tool::Dwork, procs, dir)?,
-                (None, "mpilist") => workflow::dispatch(&g, Tool::MpiList, procs, dir)?,
+                (None, "pmake") => workflow::dispatch_traced(&g, Tool::Pmake, procs, dir, &tracer)?,
+                (None, "dwork") => workflow::dispatch_traced(&g, Tool::Dwork, procs, dir, &tracer)?,
+                (None, "mpilist") => {
+                    workflow::dispatch_traced(&g, Tool::MpiList, procs, dir, &tracer)?
+                }
                 (None, other) => {
                     bail!("unknown coordinator {other:?} (auto | pmake | dwork | mpilist)")
                 }
             };
+            if let Some(path) = &trace_path {
+                let events = tracer.drain();
+                trace::write_trace(path, summary.coordinator.name(), &events)?;
+                println!(
+                    "trace: {} events -> {} (inspect with `threesched trace report --file {}`)",
+                    events.len(),
+                    path.display(),
+                    path.display()
+                );
+            }
             println!(
                 "{}: {} tasks run, {} failed, {} skipped, makespan {:.3}s",
                 summary.coordinator.name(),
@@ -620,6 +691,65 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
             Ok(())
         }
         other => bail!("unknown workflow verb {other:?}"),
+    }
+}
+
+// ------------------------------------------------------------------- trace
+
+fn cmd_trace(argv: &[String]) -> Result<()> {
+    let Some(verb) = argv.first().map(String::as_str) else {
+        bail!("trace needs a verb: report | compare\n{USAGE}");
+    };
+    let rest = &argv[1..];
+    match verb {
+        "report" => {
+            let spec = [Flag {
+                name: "file",
+                help: "trace JSONL path (from `workflow run --trace`, `dhub serve --trace`, …)",
+                takes_value: true,
+                default: Some("trace.jsonl"),
+            }];
+            let args = parse(rest, &spec)?;
+            let path = Path::new(args.get("file").unwrap());
+            let (source, events) = trace::read_trace(path)?;
+            // a trace cut short (ctrl-c'd hub, killed worker) is exactly
+            // what the flush-per-event streaming sink exists to preserve:
+            // report it anyway, flagging the incompleteness
+            if let Err(e) = trace::validate(&events) {
+                eprintln!("warning: trace {path:?} is incomplete or malformed ({e}); \
+                           reporting the events present");
+            }
+            print!("{}", trace::TraceReport::from_events(&events).render(&source));
+            Ok(())
+        }
+        "compare" => {
+            let spec = [
+                Flag { name: "file", help: "workflow yaml", takes_value: true, default: Some("workflow.yaml") },
+                Flag { name: "ranks", help: "parallelism for prediction + simulation", takes_value: true, default: Some("864") },
+                Flag { name: "seed", help: "DES noise seed", takes_value: true, default: Some("42") },
+                Flag { name: "trace", help: "measured trace JSONL to lay alongside (optional)", takes_value: true, default: None },
+            ];
+            let args = parse(rest, &spec)?;
+            let g = workflow::parse_workflow_file(Path::new(args.get("file").unwrap()))?;
+            let ranks = args.get_usize("ranks", 864)?;
+            let seed = args.get_usize("seed", 42)? as u64;
+            let mut measured = Vec::new();
+            if let Some(p) = args.get("trace") {
+                let (source, events) = trace::read_trace(Path::new(p))?;
+                // an interrupted trace still yields a (lower-bound)
+                // measured makespan; flag it rather than refusing
+                if let Err(e) = trace::validate(&events) {
+                    eprintln!("warning: trace {p:?} is incomplete or malformed ({e}); \
+                               its makespan is a lower bound");
+                }
+                measured.push((source, trace::makespan(&events)));
+            }
+            let rows =
+                trace::compare_backends(&g, &CostModel::paper(), ranks, seed, &measured)?;
+            print!("{}", trace::render_comparison(&g.name, ranks, &rows));
+            Ok(())
+        }
+        other => bail!("unknown trace verb {other:?} (report | compare)"),
     }
 }
 

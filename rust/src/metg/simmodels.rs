@@ -9,6 +9,7 @@
 use crate::substrate::cluster::costs::CostModel;
 use crate::substrate::des::{key, Sim};
 use crate::substrate::rng::Rng;
+use crate::trace::{EventKind, Tracer};
 
 use super::{EffPoint, Workload};
 
@@ -87,6 +88,20 @@ fn rank_compute_prop(rng: &mut Rng, t_kernel: f64, kernels: u64) -> f64 {
 /// mpi-list: one launch, static assignment, barrier at the end.
 /// Overheads: python startup (once) + straggler sync per run.
 pub fn sim_mpilist(m: &CostModel, w: &Workload, ranks: usize, t_kernel: f64, seed: u64) -> SimRun {
+    sim_mpilist_traced(m, w, ranks, t_kernel, seed, &Tracer::default())
+}
+
+/// [`sim_mpilist`] emitting the standard lifecycle trace (virtual time):
+/// one traced "task" per rank — the rank's whole kernel batch, which is
+/// mpi-list's unit of work between barriers.
+pub fn sim_mpilist_traced(
+    m: &CostModel,
+    w: &Workload,
+    ranks: usize,
+    t_kernel: f64,
+    seed: u64,
+    tracer: &Tracer,
+) -> SimRun {
     let mut rng = Rng::new(seed);
     let mut fastest = f64::MAX;
     let mut slowest = 0.0f64;
@@ -94,6 +109,15 @@ pub fn sim_mpilist(m: &CostModel, w: &Workload, ranks: usize, t_kernel: f64, see
     for r in 0..ranks {
         let mut rr = rng.split(r as u64);
         let t = rank_compute_abs(&mut rr, m, t_kernel, w.kernels_per_rank);
+        if tracer.enabled() {
+            let name = format!("mpilist-r{r}");
+            let who = format!("rank{r}");
+            tracer.record_at(0.0, &name, EventKind::Created, "");
+            tracer.record_at(0.0, &name, EventKind::Ready, "");
+            tracer.record_at(0.0, &name, EventKind::Launched, &who);
+            tracer.record_at(0.0, &name, EventKind::Started, &who);
+            tracer.record_at(t, &name, EventKind::Finished, &who);
+        }
         fastest = fastest.min(t);
         slowest = slowest.max(t);
         total_compute += t;
@@ -114,6 +138,19 @@ pub fn sim_mpilist(m: &CostModel, w: &Workload, ranks: usize, t_kernel: f64, see
 /// communication with compute (paper's client).  DES with a FIFO server
 /// queue: each Steal/Complete pair occupies the server for `steal_rtt`.
 pub fn sim_dwork(m: &CostModel, w: &Workload, ranks: usize, t_kernel: f64, seed: u64) -> SimRun {
+    sim_dwork_traced(m, w, ranks, t_kernel, seed, &Tracer::default())
+}
+
+/// [`sim_dwork`] emitting the standard lifecycle trace (virtual time);
+/// task `dwork-r<r>-t<k>` is rank r's k-th pulled task.
+pub fn sim_dwork_traced(
+    m: &CostModel,
+    w: &Workload,
+    ranks: usize,
+    t_kernel: f64,
+    seed: u64,
+    tracer: &Tracer,
+) -> SimRun {
     // event kinds
     const REQ: u16 = 1; // worker asks for a task (joins server queue)
     const GRANT: u16 = 2; // server finished serving the head request
@@ -129,9 +166,19 @@ pub fn sim_dwork(m: &CostModel, w: &Workload, ranks: usize, t_kernel: f64, seed:
     let mut wait = vec![0.0f64; ranks];
     let mut req_at = vec![0.0f64; ranks];
     let mut finished_at = vec![0.0f64; ranks];
+    let task_name = |r: usize, remaining_r: u64| {
+        format!("dwork-r{r}-t{}", tasks_per_rank - remaining_r)
+    };
 
     let mut sim = Sim::new();
     for r in 0..ranks {
+        if tracer.enabled() {
+            for k in 0..tasks_per_rank {
+                let name = format!("dwork-r{r}-t{k}");
+                tracer.record_at(0.0, &name, EventKind::Created, "");
+                tracer.record_at(0.0, &name, EventKind::Ready, "");
+            }
+        }
         sim.at(0.0, key::pack(REQ, r as u64));
     }
     while let Some(ev) = sim.next() {
@@ -152,6 +199,12 @@ pub fn sim_dwork(m: &CostModel, w: &Workload, ranks: usize, t_kernel: f64, seed:
                 // worker starts computing one task
                 let mut rr = rng.split((r as u64) << 32 | remaining[r]);
                 let t = rank_compute_prop(&mut rr, t_kernel, kernels_per_task);
+                if tracer.enabled() {
+                    let name = task_name(r, remaining[r]);
+                    let who = format!("w{r}");
+                    tracer.record_at(now, &name, EventKind::Launched, &who);
+                    tracer.record_at(now, &name, EventKind::Started, &who);
+                }
                 compute[r] += t;
                 sim.after(t, key::pack(DONE, r as u64));
                 if queue.is_empty() {
@@ -162,6 +215,14 @@ pub fn sim_dwork(m: &CostModel, w: &Workload, ranks: usize, t_kernel: f64, seed:
             }
             DONE => {
                 let r = key::index(ev.key) as usize;
+                if tracer.enabled() {
+                    tracer.record_at(
+                        now,
+                        &task_name(r, remaining[r]),
+                        EventKind::Finished,
+                        &format!("w{r}"),
+                    );
+                }
                 remaining[r] -= 1;
                 if remaining[r] > 0 {
                     sim.at(now, key::pack(REQ, r as u64));
@@ -195,11 +256,30 @@ pub fn sim_dwork(m: &CostModel, w: &Workload, ranks: usize, t_kernel: f64, seed:
 /// `tasks_per_rank` sequential steps of jsrun + alloc + max-rank-compute
 /// (paper Fig 5: jsrun, alloc, compute, sync slices).
 pub fn sim_pmake(m: &CostModel, w: &Workload, ranks: usize, t_kernel: f64, seed: u64) -> SimRun {
+    sim_pmake_traced(m, w, ranks, t_kernel, seed, &Tracer::default())
+}
+
+/// [`sim_pmake`] emitting the standard lifecycle trace (virtual time);
+/// each job step `pmake-s<k>` occupies the whole allocation, so
+/// Launched→Started is exactly the jsrun+alloc window.
+pub fn sim_pmake_traced(
+    m: &CostModel,
+    w: &Workload,
+    ranks: usize,
+    t_kernel: f64,
+    seed: u64,
+    tracer: &Tracer,
+) -> SimRun {
     let mut rng = Rng::new(seed);
     let steps = w.tasks_per_rank().max(1);
     let kernels_per_task = w.kernels_per_rank / steps;
     let mut bd = Breakdown::default();
     let mut makespan = 0.0;
+    if tracer.enabled() {
+        for s in 0..steps {
+            tracer.record_at(0.0, &format!("pmake-s{s}"), EventKind::Created, "");
+        }
+    }
     for s in 0..steps {
         let jsrun = m.jsrun(ranks);
         let alloc = m.alloc;
@@ -210,6 +290,18 @@ pub fn sim_pmake(m: &CostModel, w: &Workload, ranks: usize, t_kernel: f64, seed:
             let t = rank_compute_abs(&mut rr, m, t_kernel, kernels_per_task);
             slowest = slowest.max(t);
             total += t;
+        }
+        if tracer.enabled() {
+            let name = format!("pmake-s{s}");
+            tracer.record_at(makespan, &name, EventKind::Ready, "");
+            tracer.record_at(makespan, &name, EventKind::Launched, "alloc");
+            tracer.record_at(makespan + jsrun + alloc, &name, EventKind::Started, "alloc");
+            tracer.record_at(
+                makespan + jsrun + alloc + slowest,
+                &name,
+                EventKind::Finished,
+                "alloc",
+            );
         }
         makespan += jsrun + alloc + slowest;
         // jsrun+alloc stall the entire allocation (cannot overlap; paper)
@@ -248,10 +340,24 @@ impl Tool {
         t_kernel: f64,
         seed: u64,
     ) -> SimRun {
+        self.simulate_traced(m, w, ranks, t_kernel, seed, &Tracer::default())
+    }
+
+    /// [`Tool::simulate`] with a lifecycle tracer (virtual timestamps,
+    /// identical schema to real-run traces).
+    pub fn simulate_traced(
+        &self,
+        m: &CostModel,
+        w: &Workload,
+        ranks: usize,
+        t_kernel: f64,
+        seed: u64,
+        tracer: &Tracer,
+    ) -> SimRun {
         match self {
-            Tool::Pmake => sim_pmake(m, w, ranks, t_kernel, seed),
-            Tool::Dwork => sim_dwork(m, w, ranks, t_kernel, seed),
-            Tool::MpiList => sim_mpilist(m, w, ranks, t_kernel, seed),
+            Tool::Pmake => sim_pmake_traced(m, w, ranks, t_kernel, seed, tracer),
+            Tool::Dwork => sim_dwork_traced(m, w, ranks, t_kernel, seed, tracer),
+            Tool::MpiList => sim_mpilist_traced(m, w, ranks, t_kernel, seed, tracer),
         }
     }
 }
@@ -378,6 +484,27 @@ mod tests {
                 tool.name(),
                 bd.total(),
                 aggregate
+            );
+        }
+    }
+
+    #[test]
+    fn traced_sim_runs_emit_wellformed_traces() {
+        let m = model();
+        let w = Workload::small();
+        for tool in Tool::ALL {
+            let tracer = Tracer::memory();
+            let run = tool.simulate_traced(&m, &w, 6, 0.001, 3, &tracer);
+            let evs = tracer.drain();
+            assert!(!evs.is_empty(), "{}", tool.name());
+            crate::trace::validate(&evs).unwrap_or_else(|e| panic!("{}: {e}", tool.name()));
+            // trace horizon matches the reported makespan
+            let last = evs.iter().map(|e| e.t).fold(0.0f64, f64::max);
+            assert!(
+                (last - run.makespan).abs() <= 1e-9 * run.makespan.max(1.0),
+                "{}: trace ends {last}, makespan {}",
+                tool.name(),
+                run.makespan
             );
         }
     }

@@ -1,0 +1,199 @@
+//! Cross-validation: selector-predicted vs DES-simulated vs measured
+//! makespan, per back-end.
+//!
+//! The adaptive selector ([`crate::workflow::select`]) picks a
+//! coordinator from closed-form makespan/efficiency estimates; the DES
+//! ([`super::sim`]) runs the same graph through each scheduler's actual
+//! queueing logic in virtual time; a trace file holds what a real run
+//! did.  Laying the three side by side — with relative errors — is how
+//! the cost model earns (or loses) trust, and the hook a future
+//! auto-calibration pass will close the loop on.
+
+use anyhow::Result;
+
+use crate::metg::harness::TextTable;
+use crate::metg::simmodels::Tool;
+use crate::substrate::cluster::costs::CostModel;
+use crate::workflow::{select, WorkflowGraph};
+
+use super::report::fmt_t;
+use super::sim::simulate_workflow;
+use super::Tracer;
+
+/// One back-end's predicted / simulated / measured triple.
+#[derive(Clone, Debug)]
+pub struct BackendComparison {
+    pub tool: Tool,
+    /// the selector's closed-form makespan estimate
+    pub predicted_s: f64,
+    /// DES makespan of the same graph on this back-end
+    pub simulated_s: f64,
+    /// makespan of a supplied measured trace, when one names this tool
+    pub measured_s: Option<f64>,
+    /// the selector would run this back-end
+    pub selected: bool,
+}
+
+impl BackendComparison {
+    /// |predicted − simulated| / simulated.
+    pub fn rel_err_pred_vs_sim(&self) -> f64 {
+        rel_err(self.predicted_s, self.simulated_s)
+    }
+
+    /// |simulated − measured| / measured, when a measurement exists.
+    pub fn rel_err_sim_vs_measured(&self) -> Option<f64> {
+        self.measured_s.map(|m| rel_err(self.simulated_s, m))
+    }
+}
+
+fn rel_err(a: f64, b: f64) -> f64 {
+    if b.abs() <= f64::MIN_POSITIVE {
+        if a.abs() <= f64::MIN_POSITIVE {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (a - b).abs() / b.abs()
+    }
+}
+
+/// Match a trace source label ("pmake", "des:dwork", "workflow/mpi-list")
+/// to the tool it describes.
+pub fn tool_of_source(source: &str) -> Option<Tool> {
+    // longest name first so "mpi-list" is never shadowed by a substring
+    let mut tools = Tool::ALL;
+    tools.sort_by_key(|t| std::cmp::Reverse(t.name().len()));
+    tools.into_iter().find(|t| source.contains(t.name()))
+}
+
+/// Run the three-way comparison for `g` at `ranks` parallelism.
+/// `measured` pairs a trace's source label with its makespan (from
+/// `trace::read_trace` + `trace::makespan`); traces whose source does
+/// not name a back-end are ignored.
+pub fn compare_backends(
+    g: &WorkflowGraph,
+    m: &CostModel,
+    ranks: usize,
+    seed: u64,
+    measured: &[(String, f64)],
+) -> Result<Vec<BackendComparison>> {
+    let rec = select(g, m, ranks)?;
+    let mut out = Vec::with_capacity(3);
+    for tool in Tool::ALL {
+        let sim = simulate_workflow(tool, g, m, ranks, seed, &Tracer::disabled())?;
+        let measured_s = measured
+            .iter()
+            .find(|(src, _)| tool_of_source(src) == Some(tool))
+            .map(|&(_, mk)| mk);
+        out.push(BackendComparison {
+            tool,
+            predicted_s: rec.assessment(tool).est_makespan_s,
+            simulated_s: sim.makespan,
+            measured_s,
+            selected: rec.choice == tool,
+        });
+    }
+    Ok(out)
+}
+
+/// Human-facing comparison table (the `trace compare` body).
+pub fn render_comparison(name: &str, ranks: usize, rows: &[BackendComparison]) -> String {
+    let mut t = TextTable::new(&[
+        "backend",
+        "predicted",
+        "simulated",
+        "|pred-sim|/sim",
+        "measured",
+        "|sim-meas|/meas",
+        "",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.tool.name().into(),
+            fmt_t(r.predicted_s),
+            fmt_t(r.simulated_s),
+            format!("{:.1}%", 100.0 * r.rel_err_pred_vs_sim()),
+            r.measured_s.map(fmt_t).unwrap_or_else(|| "-".into()),
+            r.rel_err_sim_vs_measured()
+                .map(|e| format!("{:.1}%", 100.0 * e))
+                .unwrap_or_else(|| "-".into()),
+            if r.selected { "<- selected" } else { "" }.into(),
+        ]);
+    }
+    format!(
+        "predicted (selector) vs simulated (DES) vs measured makespan \
+         for {name:?} at {ranks} ranks\n{}",
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::TaskSpec;
+
+    fn model() -> CostModel {
+        CostModel::paper()
+    }
+
+    fn farm(n: usize, est: f64) -> WorkflowGraph {
+        let mut g = WorkflowGraph::new("farm");
+        for i in 0..n {
+            g.add_task(TaskSpec::new(format!("t{i}")).est(est)).unwrap();
+        }
+        g
+    }
+
+    #[test]
+    fn covers_all_backends_and_marks_selection() {
+        let rows = compare_backends(&farm(64, 1.0), &model(), 8, 1, &[]).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows.iter().filter(|r| r.selected).count(), 1);
+        for r in &rows {
+            assert!(r.predicted_s > 0.0, "{}", r.tool.name());
+            assert!(r.simulated_s > 0.0, "{}", r.tool.name());
+            assert!(r.measured_s.is_none());
+        }
+        let txt = render_comparison("farm", 8, &rows);
+        for tool in Tool::ALL {
+            assert!(txt.contains(tool.name()), "{txt}");
+        }
+        assert!(txt.contains("<- selected"));
+    }
+
+    #[test]
+    fn predictions_track_simulation_for_coarse_flat_maps() {
+        // coarse uniform work is the regime every model agrees on: the
+        // selector's estimate and the DES should land within ~50%
+        let rows = compare_backends(&farm(64, 10.0), &model(), 8, 2, &[]).unwrap();
+        for r in &rows {
+            assert!(
+                r.rel_err_pred_vs_sim() < 0.5,
+                "{}: pred {} vs sim {}",
+                r.tool.name(),
+                r.predicted_s,
+                r.simulated_s
+            );
+        }
+    }
+
+    #[test]
+    fn measured_trace_attaches_to_its_backend() {
+        let measured = vec![("dwork".to_string(), 3.5), ("des:mpi-list".to_string(), 9.9)];
+        let rows = compare_backends(&farm(8, 1.0), &model(), 4, 1, &measured).unwrap();
+        let by = |t: Tool| rows.iter().find(|r| r.tool == t).unwrap();
+        assert_eq!(by(Tool::Dwork).measured_s, Some(3.5));
+        assert_eq!(by(Tool::MpiList).measured_s, Some(9.9));
+        assert_eq!(by(Tool::Pmake).measured_s, None);
+        assert!(by(Tool::Dwork).rel_err_sim_vs_measured().is_some());
+    }
+
+    #[test]
+    fn source_labels_resolve() {
+        assert_eq!(tool_of_source("pmake"), Some(Tool::Pmake));
+        assert_eq!(tool_of_source("des:dwork"), Some(Tool::Dwork));
+        assert_eq!(tool_of_source("workflow/mpi-list"), Some(Tool::MpiList));
+        assert_eq!(tool_of_source("mystery"), None);
+    }
+}

@@ -1,0 +1,722 @@
+//! Unified trace/telemetry: per-task lifecycle events across every
+//! execution layer.
+//!
+//! The paper's quantitative story — the Fig 5 per-component breakdowns,
+//! the Fig 4 efficiency-vs-granularity curves, the METG characterization
+//! itself — is built from per-task timing, yet a scheduler run normally
+//! surfaces only end-of-run counters.  This module is the missing
+//! substrate: a [`Tracer`] handle threaded through all three coordinators
+//! (pmake's push loop, the dwork server/state machine and its workers,
+//! the mpi-list rank loops) *and* through the discrete-event simulator
+//! models, so real runs and simulated runs emit one identical event
+//! schema.  On top of the stream sit:
+//!
+//! * [`report`] — a Fig-5-shaped per-component time breakdown (queue
+//!   wait / launch / compute / drain) plus a utilization summary;
+//! * [`sim`] — graph-aware DES models of the three back-ends (virtual
+//!   time, Table-4 cost model) emitting the same events;
+//! * [`compare`] — selector-predicted vs DES-simulated vs measured
+//!   makespan per back-end, with relative errors — the cross-validation
+//!   loop the adaptive selector's cost model rests on.
+//!
+//! Design constraints, in order: the *disabled* tracer must be a true
+//! no-op (no allocation, a single branch — tracing rides inside the
+//! coordinators' hot paths, including the dwork server loop whose
+//! dispatch rate bounds dwork's METG); the enabled path must be
+//! lock-cheap (one short mutex hold per event); and the on-disk format
+//! must be dumb enough to survive (JSON Lines, one event per line).
+
+pub mod compare;
+pub mod report;
+pub mod sim;
+
+use std::io::{Read as _, Write as _};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context as _, Result};
+
+pub use compare::{compare_backends, render_comparison, BackendComparison};
+pub use report::TraceReport;
+pub use sim::simulate_workflow;
+
+/// Schema marker written in the JSONL header line; bump on any change to
+/// the event encoding.  Real and simulated traces share it byte-for-byte.
+pub const SCHEMA: &str = "threesched-trace/1";
+
+/// One step of a task's lifecycle.  The same vocabulary covers all three
+/// coordinators and the DES models:
+///
+/// * `Created` — the scheduler learned of the task;
+/// * `Ready` — every dependency is satisfied, the task is eligible;
+/// * `Launched` — the scheduler handed it to an executor (pmake spawned
+///   the job step, dwork served the Steal, mpi-list's rank picked it up);
+/// * `Started` — the payload itself began executing;
+/// * `Finished` / `Failed` — terminal: the task succeeded, or it failed
+///   (attempted and errored) / was abandoned (a dependency failed first —
+///   distinguishable because such tasks were never `Launched`);
+/// * `Requeued` — the task went back to the pool (worker death, Transfer)
+///   and its `Ready`/`Launched`/`Started` cycle may repeat.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    Created,
+    Ready,
+    Launched,
+    Started,
+    Finished,
+    Failed,
+    Requeued,
+}
+
+impl EventKind {
+    pub const ALL: [EventKind; 7] = [
+        EventKind::Created,
+        EventKind::Ready,
+        EventKind::Launched,
+        EventKind::Started,
+        EventKind::Finished,
+        EventKind::Failed,
+        EventKind::Requeued,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Created => "created",
+            EventKind::Ready => "ready",
+            EventKind::Launched => "launched",
+            EventKind::Started => "started",
+            EventKind::Finished => "finished",
+            EventKind::Failed => "failed",
+            EventKind::Requeued => "requeued",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<EventKind> {
+        EventKind::ALL.into_iter().find(|k| k.name() == s)
+    }
+
+    /// Terminal events end a task's lifecycle: exactly one per task in a
+    /// well-formed trace.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, EventKind::Finished | EventKind::Failed)
+    }
+}
+
+/// One trace record.  `t` is seconds since the trace epoch — wall time
+/// for real runs, virtual time for DES runs; the schema does not care.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskEvent {
+    pub task: String,
+    pub kind: EventKind,
+    pub t: f64,
+    /// executing party when known ("w0", "rank3", …); empty for
+    /// scheduler-side bookkeeping events
+    pub who: String,
+}
+
+// ------------------------------------------------------------------ tracer
+
+enum Sink {
+    Memory(Vec<TaskEvent>),
+    /// streamed JSONL (long-lived hubs must not grow a Vec forever);
+    /// line-buffered so a killed process loses at most one event
+    File(std::io::BufWriter<std::fs::File>),
+}
+
+struct Inner {
+    epoch: Instant,
+    sink: Mutex<Sink>,
+}
+
+/// Cheap cloneable event recorder.  `Tracer::default()` is disabled:
+/// recording through it is a single `Option` branch with no allocation,
+/// so every coordinator can take a `&Tracer` unconditionally.  Clones
+/// share one sink and one epoch, which is what lets the dwork server
+/// thread and its worker threads interleave into a single stream.
+#[derive(Clone, Default)]
+pub struct Tracer(Option<Arc<Inner>>);
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(if self.enabled() { "Tracer(enabled)" } else { "Tracer(disabled)" })
+    }
+}
+
+impl Tracer {
+    /// The no-op tracer (same as `Tracer::default()`).
+    pub fn disabled() -> Tracer {
+        Tracer(None)
+    }
+
+    /// Collect events in memory; retrieve with [`Tracer::drain`].
+    pub fn memory() -> Tracer {
+        Tracer(Some(Arc::new(Inner {
+            epoch: Instant::now(),
+            sink: Mutex::new(Sink::Memory(Vec::new())),
+        })))
+    }
+
+    /// Stream events to `path` as JSONL (header line first).  Each event
+    /// is flushed as written — tracing a long-lived hub must survive the
+    /// operator's ctrl-c.
+    pub fn to_file(path: &Path, source: &str) -> Result<Tracer> {
+        if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::create_dir_all(parent).with_context(|| format!("creating {parent:?}"))?;
+        }
+        let f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+        let mut w = std::io::BufWriter::new(f);
+        writeln!(w, "{}", header_line(source)).with_context(|| format!("writing {path:?}"))?;
+        w.flush()?;
+        Ok(Tracer(Some(Arc::new(Inner {
+            epoch: Instant::now(),
+            sink: Mutex::new(Sink::File(w)),
+        }))))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Seconds since the trace epoch (0.0 when disabled).
+    pub fn now(&self) -> f64 {
+        match &self.0 {
+            Some(inner) => inner.epoch.elapsed().as_secs_f64(),
+            None => 0.0,
+        }
+    }
+
+    /// Record an event at the current wall clock.  Disabled: one branch,
+    /// no allocation, no time read.
+    #[inline]
+    pub fn record(&self, task: &str, kind: EventKind, who: &str) {
+        if let Some(inner) = &self.0 {
+            let t = inner.epoch.elapsed().as_secs_f64();
+            Self::push(inner, TaskEvent { task: task.to_string(), kind, t, who: who.to_string() });
+        }
+    }
+
+    /// Record an event at an explicit epoch-relative time — the DES path
+    /// (virtual timestamps) and post-hoc splits of a measured interval.
+    #[inline]
+    pub fn record_at(&self, t: f64, task: &str, kind: EventKind, who: &str) {
+        if let Some(inner) = &self.0 {
+            Self::push(inner, TaskEvent { task: task.to_string(), kind, t, who: who.to_string() });
+        }
+    }
+
+    fn push(inner: &Inner, ev: TaskEvent) {
+        let mut sink = inner.sink.lock().expect("trace sink poisoned");
+        match &mut *sink {
+            Sink::Memory(v) => v.push(ev),
+            Sink::File(w) => {
+                // best-effort: a full disk must not take the campaign down
+                let _ = writeln!(w, "{}", event_line(&ev));
+                let _ = w.flush();
+            }
+        }
+    }
+
+    /// Take every event collected so far (memory sinks; a file sink just
+    /// flushes and yields nothing — its events are already on disk).
+    pub fn drain(&self) -> Vec<TaskEvent> {
+        match &self.0 {
+            None => Vec::new(),
+            Some(inner) => {
+                let mut sink = inner.sink.lock().expect("trace sink poisoned");
+                match &mut *sink {
+                    Sink::Memory(v) => std::mem::take(v),
+                    Sink::File(w) => {
+                        let _ = w.flush();
+                        Vec::new()
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------- JSONL
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_unescape(s: &str) -> Result<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            Some('/') => out.push('/'),
+            Some('n') => out.push('\n'),
+            Some('r') => out.push('\r'),
+            Some('t') => out.push('\t'),
+            Some('u') => {
+                let hex: String = chars.by_ref().take(4).collect();
+                let code = u32::from_str_radix(&hex, 16)
+                    .map_err(|_| anyhow::anyhow!("bad \\u escape {hex:?}"))?;
+                out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+            }
+            other => bail!("bad escape \\{other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+/// Extract the raw (still-escaped) string value of `"key":"…"` from a
+/// flat one-line JSON object.  Scans for the key pattern outside string
+/// context the cheap way: our writer always emits `"key":"` verbatim and
+/// escapes embedded quotes, so the first unescaped `"` ends the value.
+fn json_str_field(line: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":\"");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let mut end = 0;
+    let bytes = rest.as_bytes();
+    while end < bytes.len() {
+        match bytes[end] {
+            b'\\' => end += 2,
+            b'"' => return json_unescape(&rest[..end]).ok(),
+            _ => end += 1,
+        }
+    }
+    None
+}
+
+fn json_num_field(line: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || "+-.eE".contains(c)))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+fn header_line(source: &str) -> String {
+    format!("{{\"schema\":\"{SCHEMA}\",\"source\":\"{}\"}}", json_escape(source))
+}
+
+fn event_line(ev: &TaskEvent) -> String {
+    format!(
+        "{{\"task\":\"{}\",\"kind\":\"{}\",\"t\":{:.9},\"who\":\"{}\"}}",
+        json_escape(&ev.task),
+        ev.kind.name(),
+        ev.t,
+        json_escape(&ev.who)
+    )
+}
+
+/// Serialize a trace (header + events) to a JSONL string.  `source`
+/// names the producer: a coordinator (`"pmake"`, `"dwork"`,
+/// `"mpi-list"`) or a DES run (`"des:pmake"`, …).
+pub fn to_jsonl(source: &str, events: &[TaskEvent]) -> String {
+    let mut out = header_line(source);
+    out.push('\n');
+    for ev in events {
+        out.push_str(&event_line(ev));
+        out.push('\n');
+    }
+    out
+}
+
+/// Write a trace file in one shot (the post-run path of
+/// `workflow run --trace`; streaming sinks write themselves).
+pub fn write_trace(path: &Path, source: &str, events: &[TaskEvent]) -> Result<()> {
+    if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+        std::fs::create_dir_all(parent).with_context(|| format!("creating {parent:?}"))?;
+    }
+    std::fs::write(path, to_jsonl(source, events)).with_context(|| format!("writing {path:?}"))
+}
+
+/// Parse a JSONL trace: returns (source, events).  Tolerates a missing
+/// header (source defaults to `"unknown"`) so hand-concatenated traces
+/// still load; unknown event kinds are an error, not silently dropped.
+pub fn parse_jsonl(text: &str) -> Result<(String, Vec<TaskEvent>)> {
+    let mut source = String::from("unknown");
+    let mut events = Vec::new();
+    for (n, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.contains("\"schema\":") {
+            let schema = json_str_field(line, "schema").unwrap_or_default();
+            if schema != SCHEMA {
+                bail!("line {}: unsupported trace schema {schema:?} (want {SCHEMA})", n + 1);
+            }
+            if let Some(s) = json_str_field(line, "source") {
+                source = s;
+            }
+            continue;
+        }
+        let task = json_str_field(line, "task")
+            .with_context(|| format!("line {}: missing \"task\"", n + 1))?;
+        let kind_name = json_str_field(line, "kind")
+            .with_context(|| format!("line {}: missing \"kind\"", n + 1))?;
+        let kind = EventKind::from_name(&kind_name)
+            .with_context(|| format!("line {}: unknown event kind {kind_name:?}", n + 1))?;
+        let t = json_num_field(line, "t")
+            .with_context(|| format!("line {}: missing \"t\"", n + 1))?;
+        let who = json_str_field(line, "who").unwrap_or_default();
+        events.push(TaskEvent { task, kind, t, who });
+    }
+    Ok((source, events))
+}
+
+/// Load a trace file written by [`write_trace`] or a streaming sink.
+pub fn read_trace(path: &Path) -> Result<(String, Vec<TaskEvent>)> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut text = String::new();
+    std::io::BufReader::new(f)
+        .read_to_string(&mut text)
+        .with_context(|| format!("reading {path:?}"))?;
+    parse_jsonl(&text)
+}
+
+// ------------------------------------------------------- wellformedness
+
+/// Lifecycle rank used by the validator: events of one task must appear
+/// in strictly increasing rank order between requeues.
+fn rank(kind: EventKind) -> u8 {
+    match kind {
+        EventKind::Created => 0,
+        EventKind::Ready => 1,
+        EventKind::Launched => 2,
+        EventKind::Started => 3,
+        EventKind::Finished | EventKind::Failed => 4,
+        EventKind::Requeued => u8::MAX, // handled specially
+    }
+}
+
+/// Check trace wellformedness:
+///
+/// * every task has exactly one terminal event, and it is the task's
+///   last event;
+/// * per-task timestamps are monotone non-decreasing;
+/// * the lifecycle order holds: `Created ≤ Ready ≤ Launched ≤ Started ≤
+///   Finished/Failed`, with each stage at most once per attempt;
+/// * `Requeued` only after `Launched`/`Started`, resetting the attempt
+///   (a fresh `Ready → Launched → Started` cycle may follow).
+pub fn validate(events: &[TaskEvent]) -> Result<()> {
+    use std::collections::HashMap;
+    // group by task, preserving stream order
+    let mut by_task: HashMap<&str, Vec<&TaskEvent>> = HashMap::new();
+    let mut order: Vec<&str> = Vec::new();
+    for ev in events {
+        let slot = by_task.entry(&ev.task).or_default();
+        if slot.is_empty() {
+            order.push(&ev.task);
+        }
+        slot.push(ev);
+    }
+    for task in order {
+        let evs = &by_task[task];
+        let mut last_t = f64::NEG_INFINITY;
+        let mut stage = -1i16; // highest rank seen in the current attempt
+        let mut terminals = 0usize;
+        for (i, ev) in evs.iter().enumerate() {
+            if ev.t < last_t {
+                bail!(
+                    "task {task:?}: timestamps not monotone ({} at {:.9} after {:.9})",
+                    ev.kind.name(),
+                    ev.t,
+                    last_t
+                );
+            }
+            last_t = ev.t;
+            if ev.kind == EventKind::Requeued {
+                if stage < rank(EventKind::Launched) as i16 {
+                    bail!("task {task:?}: requeued before ever being launched");
+                }
+                stage = rank(EventKind::Ready) as i16 - 1;
+                continue;
+            }
+            let r = rank(ev.kind) as i16;
+            if r <= stage {
+                bail!(
+                    "task {task:?}: {} out of lifecycle order (or repeated)",
+                    ev.kind.name()
+                );
+            }
+            stage = r;
+            if ev.kind.is_terminal() {
+                terminals += 1;
+                if i + 1 != evs.len() {
+                    bail!("task {task:?}: events after terminal {}", ev.kind.name());
+                }
+            }
+        }
+        if terminals != 1 {
+            bail!("task {task:?}: {terminals} terminal events (want exactly 1)");
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- summaries
+
+/// Counters derived purely from a trace — comparable against the
+/// coordinator's own `RunSummary` (the equivalence the tests pin).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceCounts {
+    /// tasks with a Finished terminal
+    pub completed: usize,
+    /// tasks with a Failed terminal that were attempted (Launched/Started)
+    pub failed: usize,
+    /// tasks with a Failed terminal that never launched — dependents of a
+    /// failure, abandoned without an attempt
+    pub skipped: usize,
+}
+
+impl TraceCounts {
+    /// attempted = completed + failed (the `tasks_run` analogue)
+    pub fn attempted(&self) -> usize {
+        self.completed + self.failed
+    }
+}
+
+/// Derive [`TraceCounts`] + makespan from an event stream.
+pub fn counts(events: &[TaskEvent]) -> TraceCounts {
+    use std::collections::HashMap;
+    let mut attempted: HashMap<&str, bool> = HashMap::new();
+    let mut out = TraceCounts::default();
+    for ev in events {
+        match ev.kind {
+            EventKind::Launched | EventKind::Started => {
+                attempted.insert(&ev.task, true);
+            }
+            EventKind::Created | EventKind::Ready | EventKind::Requeued => {
+                attempted.entry(&ev.task).or_insert(false);
+            }
+            EventKind::Finished => out.completed += 1,
+            EventKind::Failed => {
+                if attempted.get(ev.task.as_str()).copied().unwrap_or(false) {
+                    out.failed += 1;
+                } else {
+                    out.skipped += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Trace makespan: latest event time (the epoch is the run start).
+pub fn makespan(events: &[TaskEvent]) -> f64 {
+    events.iter().map(|e| e.t).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(task: &str, kind: EventKind, t: f64, who: &str) -> TaskEvent {
+        TaskEvent { task: task.into(), kind, t, who: who.into() }
+    }
+
+    fn lifecycle(task: &str, t0: f64, ok: bool) -> Vec<TaskEvent> {
+        let terminal = if ok { EventKind::Finished } else { EventKind::Failed };
+        vec![
+            ev(task, EventKind::Created, t0, ""),
+            ev(task, EventKind::Ready, t0 + 0.1, ""),
+            ev(task, EventKind::Launched, t0 + 0.2, "w0"),
+            ev(task, EventKind::Started, t0 + 0.3, "w0"),
+            ev(task, terminal, t0 + 0.9, "w0"),
+        ]
+    }
+
+    #[test]
+    fn disabled_tracer_is_inert() {
+        let t = Tracer::disabled();
+        assert!(!t.enabled());
+        t.record("x", EventKind::Created, "");
+        t.record_at(1.0, "x", EventKind::Finished, "");
+        assert!(t.drain().is_empty());
+        assert_eq!(t.now(), 0.0);
+    }
+
+    #[test]
+    fn memory_tracer_collects_in_order() {
+        let t = Tracer::memory();
+        t.record("a", EventKind::Created, "");
+        t.record("a", EventKind::Started, "w1");
+        let evs = t.drain();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].kind, EventKind::Created);
+        assert!(evs[0].t <= evs[1].t);
+        assert_eq!(evs[1].who, "w1");
+        assert!(t.drain().is_empty(), "drain takes");
+    }
+
+    #[test]
+    fn clones_share_one_sink_and_epoch() {
+        let t = Tracer::memory();
+        let t2 = t.clone();
+        t.record("a", EventKind::Created, "");
+        t2.record("a", EventKind::Finished, "");
+        assert_eq!(t.drain().len(), 2);
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let events = vec![
+            ev("gen", EventKind::Created, 0.0, ""),
+            ev("gen", EventKind::Finished, 1.25e-3, "w0"),
+            ev("na\"me\\n", EventKind::Failed, 2.0, "rank\t7"),
+        ];
+        let text = to_jsonl("pmake", &events);
+        let (source, parsed) = parse_jsonl(&text).unwrap();
+        assert_eq!(source, "pmake");
+        assert_eq!(parsed, events);
+    }
+
+    #[test]
+    fn file_sink_streams_valid_jsonl() {
+        let path = std::env::temp_dir()
+            .join(format!("threesched-trace-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let t = Tracer::to_file(&path, "dwork").unwrap();
+            t.record("a", EventKind::Created, "");
+            t.record("a", EventKind::Launched, "w0");
+            assert!(t.drain().is_empty(), "file sink holds nothing in memory");
+        }
+        let (source, evs) = read_trace(&path).unwrap();
+        assert_eq!(source, "dwork");
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[1].kind, EventKind::Launched);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn unknown_kind_rejected_not_dropped() {
+        let text = format!(
+            "{}\n{{\"task\":\"a\",\"kind\":\"warped\",\"t\":0.0,\"who\":\"\"}}\n",
+            header_line("x")
+        );
+        assert!(parse_jsonl(&text).is_err());
+    }
+
+    #[test]
+    fn wrong_schema_rejected() {
+        assert!(parse_jsonl("{\"schema\":\"threesched-trace/999\",\"source\":\"x\"}\n").is_err());
+    }
+
+    #[test]
+    fn validate_accepts_full_lifecycle() {
+        let mut evs = lifecycle("a", 0.0, true);
+        evs.extend(lifecycle("b", 0.5, false));
+        validate(&evs).unwrap();
+    }
+
+    #[test]
+    fn validate_accepts_requeue_cycle() {
+        let evs = vec![
+            ev("a", EventKind::Created, 0.0, ""),
+            ev("a", EventKind::Ready, 0.1, ""),
+            ev("a", EventKind::Launched, 0.2, "w0"),
+            ev("a", EventKind::Requeued, 0.3, "w0"),
+            ev("a", EventKind::Ready, 0.3, ""),
+            ev("a", EventKind::Launched, 0.4, "w1"),
+            ev("a", EventKind::Started, 0.5, "w1"),
+            ev("a", EventKind::Finished, 0.6, "w1"),
+        ];
+        validate(&evs).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_double_terminal() {
+        let mut evs = lifecycle("a", 0.0, true);
+        evs.push(ev("a", EventKind::Failed, 2.0, ""));
+        assert!(validate(&evs).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_missing_terminal() {
+        let evs = vec![ev("a", EventKind::Created, 0.0, "")];
+        assert!(validate(&evs).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_time_regression() {
+        let evs = vec![
+            ev("a", EventKind::Created, 1.0, ""),
+            ev("a", EventKind::Finished, 0.5, ""),
+        ];
+        assert!(validate(&evs).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_order_lifecycle() {
+        let evs = vec![
+            ev("a", EventKind::Started, 0.0, "w0"),
+            ev("a", EventKind::Launched, 0.1, "w0"),
+            ev("a", EventKind::Finished, 0.2, "w0"),
+        ];
+        assert!(validate(&evs).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_requeue_before_launch() {
+        let evs = vec![
+            ev("a", EventKind::Created, 0.0, ""),
+            ev("a", EventKind::Requeued, 0.1, ""),
+            ev("a", EventKind::Finished, 0.2, ""),
+        ];
+        assert!(validate(&evs).is_err());
+    }
+
+    #[test]
+    fn validate_allows_partial_chains() {
+        // a server-only trace has no Started; a skipped task has only
+        // Created + Failed — both are legal partial views
+        let evs = vec![
+            ev("a", EventKind::Created, 0.0, ""),
+            ev("a", EventKind::Launched, 0.1, "w0"),
+            ev("a", EventKind::Failed, 0.2, "w0"),
+            ev("b", EventKind::Created, 0.0, ""),
+            ev("b", EventKind::Failed, 0.2, ""),
+        ];
+        validate(&evs).unwrap();
+    }
+
+    #[test]
+    fn counts_distinguish_failed_from_skipped() {
+        let evs = vec![
+            ev("root", EventKind::Created, 0.0, ""),
+            ev("root", EventKind::Launched, 0.1, "w0"),
+            ev("root", EventKind::Started, 0.2, "w0"),
+            ev("root", EventKind::Failed, 0.3, "w0"),
+            ev("child", EventKind::Created, 0.0, ""),
+            ev("child", EventKind::Failed, 0.3, ""),
+            ev("free", EventKind::Created, 0.0, ""),
+            ev("free", EventKind::Launched, 0.1, "w1"),
+            ev("free", EventKind::Finished, 0.5, "w1"),
+        ];
+        let c = counts(&evs);
+        assert_eq!(c.completed, 1);
+        assert_eq!(c.failed, 1);
+        assert_eq!(c.skipped, 1);
+        assert_eq!(c.attempted(), 2);
+        assert!((makespan(&evs) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,238 @@
+//! Fig-5-shaped reporting over a trace: where each task's time went.
+//!
+//! The paper's Fig 5 splits aggregate rank time into compute and the
+//! per-scheduler overheads.  A lifecycle trace supports the same split
+//! generically, without knowing which coordinator produced it:
+//!
+//! * **queue wait** — `Ready → Launched`: the task was eligible but the
+//!   scheduler had no capacity (pmake's node limit, dwork's serialized
+//!   server, an mpi-list rank still busy with earlier block elements);
+//! * **launch** — `Launched → Started`: hand-off overhead (pmake's
+//!   jsrun+alloc window, a dwork task sitting in a worker's prefetch
+//!   buffer);
+//! * **compute** — `Started → Finished/Failed` (falls back to
+//!   `Launched → terminal` for server-only traces with no `Started`);
+//! * **drain** — per-worker idle tail: makespan minus the worker's last
+//!   recorded activity (stragglers leave the rest of the pool idle).
+//!
+//! Utilization = compute / (workers × makespan), directly comparable to
+//! the simulated [`Breakdown::compute_fraction`]
+//! (crate::metg::simmodels::Breakdown::compute_fraction).
+
+use std::collections::HashMap;
+
+use super::{makespan, counts, EventKind, TaskEvent, TraceCounts};
+
+/// Aggregate per-component seconds derived from one trace.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceReport {
+    pub counts: TraceCounts,
+    pub tasks: usize,
+    pub makespan_s: f64,
+    /// distinct non-empty `who` labels seen on Launched/Started/terminal
+    pub workers: usize,
+    pub queue_wait_s: f64,
+    pub launch_s: f64,
+    pub compute_s: f64,
+    pub drain_s: f64,
+}
+
+impl TraceReport {
+    /// Build the report from an event stream (any producer).
+    pub fn from_events(events: &[TaskEvent]) -> TraceReport {
+        let mut r = TraceReport {
+            counts: counts(events),
+            makespan_s: makespan(events),
+            ..TraceReport::default()
+        };
+        // per-task attempt walk: interval starts reset on Requeued
+        #[derive(Default)]
+        struct Cursor {
+            ready: Option<f64>,
+            launched: Option<f64>,
+            started: Option<f64>,
+        }
+        let mut cursors: HashMap<&str, Cursor> = HashMap::new();
+        let mut last_activity: HashMap<&str, f64> = HashMap::new();
+        for ev in events {
+            if !ev.who.is_empty()
+                && matches!(
+                    ev.kind,
+                    EventKind::Launched
+                        | EventKind::Started
+                        | EventKind::Finished
+                        | EventKind::Failed
+                )
+            {
+                let t = last_activity.entry(&ev.who).or_insert(ev.t);
+                *t = t.max(ev.t);
+            }
+            let c = cursors.entry(&ev.task).or_default();
+            match ev.kind {
+                EventKind::Created => {}
+                EventKind::Ready => c.ready = Some(ev.t),
+                EventKind::Launched => {
+                    c.launched = Some(ev.t);
+                    if let Some(rdy) = c.ready {
+                        r.queue_wait_s += ev.t - rdy;
+                    }
+                }
+                EventKind::Started => {
+                    c.started = Some(ev.t);
+                    if let Some(l) = c.launched {
+                        r.launch_s += ev.t - l;
+                    }
+                }
+                EventKind::Finished | EventKind::Failed => {
+                    if let Some(s) = c.started.or(c.launched) {
+                        r.compute_s += ev.t - s;
+                    }
+                }
+                EventKind::Requeued => *c = Cursor::default(),
+            }
+        }
+        r.tasks = cursors.len();
+        r.workers = last_activity.len();
+        r.drain_s = last_activity
+            .values()
+            .map(|&t| (r.makespan_s - t).max(0.0))
+            .sum();
+        r
+    }
+
+    /// Fraction of worker-seconds spent computing (0 when unknowable).
+    pub fn utilization(&self) -> f64 {
+        let denom = self.workers as f64 * self.makespan_s;
+        if denom <= 0.0 {
+            0.0
+        } else {
+            (self.compute_s / denom).min(1.0)
+        }
+    }
+
+    /// Human-facing report (the `trace report` body).
+    pub fn render(&self, source: &str) -> String {
+        let c = &self.counts;
+        let mut out = format!(
+            "trace: source {source}, {} tasks ({} completed, {} failed, {} skipped), \
+             makespan {}, {} worker(s)\n",
+            self.tasks,
+            c.completed,
+            c.failed,
+            c.skipped,
+            fmt_t(self.makespan_s),
+            self.workers
+        );
+        let total = (self.queue_wait_s + self.launch_s + self.compute_s + self.drain_s)
+            .max(f64::MIN_POSITIVE);
+        out.push_str("  component     aggregate    share\n");
+        for (name, v) in [
+            ("compute", self.compute_s),
+            ("queue wait", self.queue_wait_s),
+            ("launch", self.launch_s),
+            ("drain", self.drain_s),
+        ] {
+            out.push_str(&format!(
+                "  {:<12} {:>10}   {:>5.1}%\n",
+                name,
+                fmt_t(v),
+                100.0 * v / total
+            ));
+        }
+        out.push_str(&format!(
+            "  utilization  {:>5.1}% of {} worker(s) x {}\n",
+            100.0 * self.utilization(),
+            self.workers,
+            fmt_t(self.makespan_s)
+        ));
+        out
+    }
+}
+
+pub(crate) fn fmt_t(t: f64) -> String {
+    if t >= 1.0 {
+        format!("{t:.3}s")
+    } else if t >= 1e-3 {
+        format!("{:.3}ms", t * 1e3)
+    } else {
+        format!("{:.1}us", t * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(task: &str, kind: EventKind, t: f64, who: &str) -> TaskEvent {
+        TaskEvent { task: task.into(), kind, t, who: who.into() }
+    }
+
+    #[test]
+    fn components_add_up() {
+        let evs = vec![
+            ev("a", EventKind::Created, 0.0, ""),
+            ev("a", EventKind::Ready, 0.0, ""),
+            ev("a", EventKind::Launched, 0.5, "w0"), // 0.5 queue
+            ev("a", EventKind::Started, 0.7, "w0"),  // 0.2 launch
+            ev("a", EventKind::Finished, 1.7, "w0"), // 1.0 compute
+            ev("b", EventKind::Created, 0.0, ""),
+            ev("b", EventKind::Ready, 0.0, ""),
+            ev("b", EventKind::Launched, 0.0, "w1"),
+            ev("b", EventKind::Started, 0.0, "w1"),
+            ev("b", EventKind::Finished, 1.0, "w1"), // 1.0 compute, 0.7 drain
+        ];
+        let r = TraceReport::from_events(&evs);
+        assert_eq!(r.tasks, 2);
+        assert_eq!(r.workers, 2);
+        assert!((r.queue_wait_s - 0.5).abs() < 1e-12);
+        assert!((r.launch_s - 0.2).abs() < 1e-12);
+        assert!((r.compute_s - 2.0).abs() < 1e-12);
+        assert!((r.drain_s - 0.7).abs() < 1e-12, "{}", r.drain_s);
+        assert!((r.makespan_s - 1.7).abs() < 1e-12);
+        // utilization = 2.0 / (2 * 1.7)
+        assert!((r.utilization() - 2.0 / 3.4).abs() < 1e-12);
+        let txt = r.render("test");
+        assert!(txt.contains("compute"));
+        assert!(txt.contains("utilization"));
+    }
+
+    #[test]
+    fn server_only_trace_still_reports_compute() {
+        // no Started events: Launched→terminal counts as compute
+        let evs = vec![
+            ev("a", EventKind::Created, 0.0, ""),
+            ev("a", EventKind::Launched, 0.1, "w0"),
+            ev("a", EventKind::Finished, 1.1, "w0"),
+        ];
+        let r = TraceReport::from_events(&evs);
+        assert!((r.compute_s - 1.0).abs() < 1e-12);
+        assert!((r.launch_s - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn requeue_resets_attempt_intervals() {
+        let evs = vec![
+            ev("a", EventKind::Created, 0.0, ""),
+            ev("a", EventKind::Ready, 0.0, ""),
+            ev("a", EventKind::Launched, 0.1, "w0"),
+            ev("a", EventKind::Requeued, 5.0, "w0"),
+            ev("a", EventKind::Ready, 5.0, ""),
+            ev("a", EventKind::Launched, 5.1, "w1"),
+            ev("a", EventKind::Started, 5.2, "w1"),
+            ev("a", EventKind::Finished, 6.2, "w1"),
+        ];
+        let r = TraceReport::from_events(&evs);
+        // compute must come from the SECOND attempt only (1.0s), not 6.1
+        assert!((r.compute_s - 1.0).abs() < 1e-12, "{}", r.compute_s);
+        // queue wait: 0.1 (first) + 0.1 (second)
+        assert!((r.queue_wait_s - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_trace_renders() {
+        let r = TraceReport::from_events(&[]);
+        assert_eq!(r.tasks, 0);
+        assert_eq!(r.utilization(), 0.0);
+        assert!(r.render("x").contains("0 tasks"));
+    }
+}

@@ -1,0 +1,394 @@
+//! Graph-aware DES models: run one [`WorkflowGraph`] through each
+//! coordinator's scheduling logic in *virtual* time.
+//!
+//! [`crate::metg::simmodels`] simulates the paper's weak-scaling
+//! benchmark workload; this module simulates an arbitrary workflow IR
+//! graph instead, against the same Table-4 cost model — the missing
+//! middle rung between the selector's closed-form makespan estimate and
+//! a measured run.  Every model emits the standard lifecycle trace
+//! ([`super::TaskEvent`]) with virtual timestamps, so `trace report`
+//! and the wellformedness validator apply to simulated runs unchanged.
+
+use anyhow::Result;
+
+use crate::metg::simmodels::{Breakdown, SimRun, Tool};
+use crate::substrate::cluster::costs::CostModel;
+use crate::substrate::des::{key, Sim};
+use crate::substrate::rng::Rng;
+use crate::workflow::WorkflowGraph;
+
+use super::{EventKind, Tracer};
+
+/// Sampled task duration: the estimate plus small Gumbel execution
+/// jitter (heavy right tail, like the calibrated models), floored so a
+/// task never takes less than half its estimate.
+fn noisy(rng: &mut Rng, est: f64, beta: f64) -> f64 {
+    if est <= 0.0 {
+        return 0.0;
+    }
+    (est + rng.gumbel(0.0, beta)).max(est * 0.5)
+}
+
+/// Dependency scaffolding shared by the queue-driven models: successor
+/// lists, join (unfinished-dependency) counts, and the t=0 ready queue —
+/// with the Created/Ready trace seeding done once.
+fn seed_graph(
+    g: &WorkflowGraph,
+    tracer: &Tracer,
+) -> (Vec<Vec<usize>>, Vec<usize>, std::collections::VecDeque<usize>) {
+    let preds = (0..g.len()).map(|i| g.deps_of(i)).collect::<Vec<_>>();
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); g.len()];
+    let mut join: Vec<usize> = preds.iter().map(Vec::len).collect();
+    for (i, ps) in preds.iter().enumerate() {
+        for &p in ps {
+            succs[p].push(i);
+        }
+    }
+    let mut ready: std::collections::VecDeque<usize> = Default::default();
+    for (i, t) in g.tasks().iter().enumerate() {
+        tracer.record_at(0.0, &t.name, EventKind::Created, "");
+        if join[i] == 0 {
+            tracer.record_at(0.0, &t.name, EventKind::Ready, "");
+            ready.push_back(i);
+        }
+    }
+    (succs, join, ready)
+}
+
+/// Simulate `g` on `tool` at `ranks` parallelism.  Deterministic for a
+/// given seed.  The tracer (virtual timestamps) may be disabled.
+pub fn simulate_workflow(
+    tool: Tool,
+    g: &WorkflowGraph,
+    m: &CostModel,
+    ranks: usize,
+    seed: u64,
+    tracer: &Tracer,
+) -> Result<SimRun> {
+    g.validate()?;
+    let ranks = ranks.max(1);
+    match tool {
+        Tool::Pmake => sim_wf_pmake(g, m, ranks, seed, tracer),
+        Tool::Dwork => sim_wf_dwork(g, m, ranks, seed, tracer),
+        Tool::MpiList => sim_wf_mpilist(g, m, ranks, seed, tracer),
+    }
+}
+
+// ------------------------------------------------------------------ pmake
+
+/// pmake: every task is a job step pushed onto an allocation of `ranks`
+/// slots; each launch pays jsrun + alloc before compute begins.
+fn sim_wf_pmake(
+    g: &WorkflowGraph,
+    m: &CostModel,
+    ranks: usize,
+    seed: u64,
+    tracer: &Tracer,
+) -> Result<SimRun> {
+    const DONE: u16 = 1;
+    let mut rng = Rng::new(seed);
+    let (succs, mut join, mut ready) = seed_graph(g, tracer);
+    let launch = m.metg_pmake(ranks); // jsrun + alloc per job step
+    let mut bd = Breakdown::default();
+    let mut free = ranks;
+    let mut makespan = 0.0f64;
+    let mut sim = Sim::new();
+    // launch pass shared by t=0 and every completion
+    let dispatch = |sim: &mut Sim,
+                    ready: &mut std::collections::VecDeque<usize>,
+                    free: &mut usize,
+                    bd: &mut Breakdown,
+                    rng: &mut Rng| {
+        while *free > 0 {
+            let Some(i) = ready.pop_front() else { break };
+            *free -= 1;
+            let t = &g.tasks()[i];
+            let now = sim.now();
+            tracer.record_at(now, &t.name, EventKind::Launched, "pmake");
+            tracer.record_at(now + launch, &t.name, EventKind::Started, "pmake");
+            let dur = noisy(rng, t.est_s, m.gumbel_beta_per_task);
+            bd.jsrun += m.jsrun(ranks);
+            bd.alloc += m.alloc;
+            bd.compute += dur;
+            sim.after(launch + dur, key::pack(DONE, i as u64));
+        }
+    };
+    dispatch(&mut sim, &mut ready, &mut free, &mut bd, &mut rng);
+    while let Some(ev) = sim.next() {
+        let i = key::index(ev.key) as usize;
+        let now = sim.now();
+        makespan = makespan.max(now);
+        tracer.record_at(now, &g.tasks()[i].name, EventKind::Finished, "pmake");
+        free += 1;
+        for &s in &succs[i] {
+            join[s] -= 1;
+            if join[s] == 0 {
+                tracer.record_at(now, &g.tasks()[s].name, EventKind::Ready, "");
+                ready.push_back(s);
+            }
+        }
+        dispatch(&mut sim, &mut ready, &mut free, &mut bd, &mut rng);
+    }
+    Ok(SimRun { makespan, breakdown: bd })
+}
+
+// ------------------------------------------------------------------ dwork
+
+/// dwork: `ranks` pulling workers against one serialized server; each
+/// Steal/Complete pair occupies the server for `steal_rtt`.
+fn sim_wf_dwork(
+    g: &WorkflowGraph,
+    m: &CostModel,
+    ranks: usize,
+    seed: u64,
+    tracer: &Tracer,
+) -> Result<SimRun> {
+    const REQ: u16 = 1; // worker joins the server queue
+    const GRANT: u16 = 2; // server finished serving the head request
+    const DONE: u16 = 3; // worker finished a task (index = task<<20 | worker)
+    const WBITS: u64 = 20;
+    anyhow::ensure!(
+        ranks < (1 << WBITS) && g.len() < (1 << (48 - WBITS)),
+        "dwork workflow sim limits: ranks < 2^20, tasks < 2^28"
+    );
+
+    let mut rng = Rng::new(seed);
+    let (succs, mut join, mut ready) = seed_graph(g, tracer);
+    let workers = ranks.min(g.len().max(1));
+    let mut server_q: std::collections::VecDeque<usize> = Default::default();
+    let mut parked: Vec<usize> = Vec::new(); // workers granted while nothing was ready
+    let mut server_busy = false;
+    let mut req_at = vec![0.0f64; workers];
+    let mut assigned = 0usize;
+    let mut finished = 0usize;
+    let mut bd = Breakdown::default();
+    let mut makespan = 0.0f64;
+    let mut sim = Sim::new();
+    for w in 0..workers {
+        sim.at(0.0, key::pack(REQ, w as u64));
+    }
+    while let Some(ev) = sim.next() {
+        let now = sim.now();
+        match key::kind(ev.key) {
+            REQ => {
+                let w = key::index(ev.key) as usize;
+                req_at[w] = now;
+                server_q.push_back(w);
+                if !server_busy {
+                    server_busy = true;
+                    sim.after(m.steal_rtt, key::pack(GRANT, 0));
+                }
+            }
+            GRANT => {
+                let w = server_q.pop_front().expect("grant with empty queue");
+                bd.communication += now - req_at[w];
+                match ready.pop_front() {
+                    Some(i) => {
+                        assigned += 1;
+                        let name = &g.tasks()[i].name;
+                        let who = format!("w{w}");
+                        tracer.record_at(now, name, EventKind::Launched, &who);
+                        tracer.record_at(now, name, EventKind::Started, &who);
+                        let est = g.tasks()[i].est_s;
+                        let dur = noisy(&mut rng, est, 0.02 * est);
+                        bd.compute += dur;
+                        sim.after(dur, key::pack(DONE, ((i as u64) << WBITS) | w as u64));
+                    }
+                    // nothing ready: the worker parks until a completion
+                    // promotes a successor (the NotFound path)
+                    None => parked.push(w),
+                }
+                if server_q.is_empty() {
+                    server_busy = false;
+                } else {
+                    sim.after(m.steal_rtt, key::pack(GRANT, 0));
+                }
+            }
+            DONE => {
+                let idx = key::index(ev.key);
+                let (i, w) = ((idx >> WBITS) as usize, (idx & ((1 << WBITS) - 1)) as usize);
+                makespan = makespan.max(now);
+                tracer.record_at(now, &g.tasks()[i].name, EventKind::Finished, &format!("w{w}"));
+                finished += 1;
+                for &s in &succs[i] {
+                    join[s] -= 1;
+                    if join[s] == 0 {
+                        tracer.record_at(now, &g.tasks()[s].name, EventKind::Ready, "");
+                        ready.push_back(s);
+                        // wake one parked worker per newly ready task
+                        if let Some(pw) = parked.pop() {
+                            sim.at(now, key::pack(REQ, pw as u64));
+                        }
+                    }
+                }
+                if assigned < g.len() {
+                    sim.at(now, key::pack(REQ, w as u64));
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+    debug_assert_eq!(finished, g.len());
+    // residual idle: aggregate worker time minus compute and server wait
+    bd.sync = (workers as f64 * makespan - bd.compute - bd.communication).max(0.0);
+    Ok(SimRun { makespan, breakdown: bd })
+}
+
+// --------------------------------------------------------------- mpi-list
+
+/// mpi-list: the static plan — per topological level, each rank runs its
+/// contiguous block sequentially, then everyone barriers.
+fn sim_wf_mpilist(
+    g: &WorkflowGraph,
+    m: &CostModel,
+    ranks: usize,
+    seed: u64,
+    tracer: &Tracer,
+) -> Result<SimRun> {
+    use crate::coordinator::mpilist::block_range;
+    let mut rng = Rng::new(seed);
+    let levels = g.levels()?;
+    for t in g.tasks() {
+        tracer.record_at(0.0, &t.name, EventKind::Created, "");
+    }
+    let mut bd = Breakdown::default();
+    let mut phase_start = 0.0f64;
+    for level in &levels {
+        let mut phase_end = phase_start;
+        let mut busy_total = 0.0f64;
+        for r in 0..ranks {
+            let (start, count) = block_range(r, ranks, level.len() as u64);
+            let mut cursor = phase_start;
+            let who = format!("rank{r}");
+            for k in start..start + count {
+                let t = &g.tasks()[level[k as usize]];
+                tracer.record_at(phase_start, &t.name, EventKind::Ready, "");
+                tracer.record_at(cursor, &t.name, EventKind::Launched, &who);
+                tracer.record_at(cursor, &t.name, EventKind::Started, &who);
+                let dur = noisy(&mut rng, t.est_s, m.gumbel_beta_per_task);
+                cursor += dur;
+                bd.compute += dur;
+                tracer.record_at(cursor, &t.name, EventKind::Finished, &who);
+            }
+            busy_total += cursor - phase_start;
+            phase_end = phase_end.max(cursor);
+        }
+        // aggregate idle at the phase barrier (stragglers)
+        bd.sync += (phase_end - phase_start) * ranks as f64 - busy_total;
+        phase_start = phase_end;
+    }
+    Ok(SimRun { makespan: phase_start, breakdown: bd })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{counts, validate};
+    use crate::workflow::TaskSpec;
+
+    fn model() -> CostModel {
+        CostModel::paper()
+    }
+
+    fn diamond() -> WorkflowGraph {
+        let mut g = WorkflowGraph::new("diamond");
+        g.add_task(TaskSpec::new("root").est(2.0)).unwrap();
+        g.add_task(TaskSpec::new("l").after(&["root"]).est(3.0)).unwrap();
+        g.add_task(TaskSpec::new("r").after(&["root"]).est(1.0)).unwrap();
+        g.add_task(TaskSpec::new("join").after(&["l", "r"]).est(1.0)).unwrap();
+        g
+    }
+
+    #[test]
+    fn all_three_sims_emit_wellformed_traces() {
+        let g = diamond();
+        for tool in Tool::ALL {
+            let tracer = Tracer::memory();
+            let run = simulate_workflow(tool, &g, &model(), 4, 7, &tracer).unwrap();
+            let evs = tracer.drain();
+            validate(&evs).unwrap_or_else(|e| panic!("{}: {e}", tool.name()));
+            let c = counts(&evs);
+            assert_eq!(c.completed, 4, "{}", tool.name());
+            assert_eq!(c.failed + c.skipped, 0, "{}", tool.name());
+            assert!(run.makespan > 0.0, "{}", tool.name());
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = diamond();
+        for tool in Tool::ALL {
+            let a = simulate_workflow(tool, &g, &model(), 4, 9, &Tracer::disabled()).unwrap();
+            let b = simulate_workflow(tool, &g, &model(), 4, 9, &Tracer::disabled()).unwrap();
+            assert_eq!(a.makespan, b.makespan, "{}", tool.name());
+        }
+    }
+
+    #[test]
+    fn makespan_respects_critical_path_and_overheads() {
+        let g = diamond(); // critical path 6s
+        let m = model();
+        // dwork/mpi-list add tiny per-task overheads: makespan ~ critical path
+        for tool in [Tool::Dwork, Tool::MpiList] {
+            let run = simulate_workflow(tool, &g, &m, 4, 1, &Tracer::disabled()).unwrap();
+            assert!(
+                (5.0..12.0).contains(&run.makespan),
+                "{}: {}",
+                tool.name(),
+                run.makespan
+            );
+        }
+        // pmake pays 3 levels of jsrun+alloc (~4.2s each) on the path
+        let run = simulate_workflow(Tool::Pmake, &g, &m, 4, 1, &Tracer::disabled()).unwrap();
+        assert!(
+            run.makespan > 6.0 + 2.5 * m.metg_pmake(4),
+            "pmake makespan {} must carry launch overhead",
+            run.makespan
+        );
+    }
+
+    #[test]
+    fn dwork_sim_serializes_on_the_server_for_tiny_tasks() {
+        // 512 zero-ish tasks: makespan floor = n * rtt (server bound)
+        let mut g = WorkflowGraph::new("tiny");
+        for i in 0..512 {
+            g.add_task(TaskSpec::new(format!("t{i}")).est(0.0)).unwrap();
+        }
+        let m = model();
+        let run = simulate_workflow(Tool::Dwork, &g, &m, 64, 3, &Tracer::disabled()).unwrap();
+        let floor = 512.0 * m.steal_rtt;
+        assert!(
+            run.makespan >= floor * 0.9,
+            "makespan {} vs server floor {floor}",
+            run.makespan
+        );
+    }
+
+    #[test]
+    fn parallelism_speeds_up_flat_maps() {
+        let mut g = WorkflowGraph::new("map");
+        for i in 0..64 {
+            g.add_task(TaskSpec::new(format!("k{i}")).est(1.0)).unwrap();
+        }
+        for tool in Tool::ALL {
+            let slow = simulate_workflow(tool, &g, &model(), 1, 5, &Tracer::disabled()).unwrap();
+            let fast = simulate_workflow(tool, &g, &model(), 32, 5, &Tracer::disabled()).unwrap();
+            assert!(
+                slow.makespan > fast.makespan * 4.0,
+                "{}: {} vs {}",
+                tool.name(),
+                slow.makespan,
+                fast.makespan
+            );
+        }
+    }
+
+    #[test]
+    fn empty_graph_is_zero() {
+        let g = WorkflowGraph::new("void");
+        for tool in Tool::ALL {
+            let run = simulate_workflow(tool, &g, &model(), 4, 1, &Tracer::disabled()).unwrap();
+            assert_eq!(run.makespan, 0.0, "{}", tool.name());
+        }
+    }
+}

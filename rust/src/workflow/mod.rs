@@ -41,8 +41,9 @@ pub mod spec;
 pub use graph::{GraphStats, Payload, TaskSpec, WorkflowGraph};
 pub use lower::{to_dwork, to_mpilist, to_pmake, DworkTask, LoweredPmake, MpiListPlan};
 pub use run::{
-    await_dwork_remote, dispatch, run_auto, run_dwork, run_dwork_remote, run_mpilist,
-    run_pmake, submit_dwork_remote, RemoteOpts, RemoteSubmission, RunSummary,
+    await_dwork_remote, dispatch, dispatch_traced, run_auto, run_auto_traced, run_dwork,
+    run_dwork_remote, run_dwork_traced, run_mpilist, run_mpilist_traced, run_pmake,
+    run_pmake_traced, submit_dwork_remote, RemoteOpts, RemoteSubmission, RunSummary,
 };
 pub use select::{select, Assessment, Recommendation};
 pub use spec::{parse_workflow, parse_workflow_file, to_yaml};

@@ -14,13 +14,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context as _, Result};
 
-use crate::coordinator::dwork::{self, Client, StatusInfo};
+use crate::coordinator::dwork::{self, Client, RefusalCode, ServerError, StatusInfo};
 use crate::coordinator::mpilist::{block_range, Context};
 use crate::coordinator::pmake::{self, Executor, LaunchReport, ShellExecutor, TaskInstance};
 use crate::metg::simmodels::Tool;
 use crate::runtime::{atb_tile, fill_f32, host_atb};
 use crate::substrate::cluster::Machine;
 use crate::substrate::cluster::costs::CostModel;
+use crate::trace::{EventKind, Tracer};
 
 use super::graph::{Payload, TaskSpec, WorkflowGraph};
 use super::lower;
@@ -145,6 +146,16 @@ impl Executor for WorkflowExecutor {
 /// is part of the contract), build the file DAG and push it onto the
 /// allocation.
 pub fn run_pmake(g: &WorkflowGraph, dir: &Path, nodes: usize) -> Result<RunSummary> {
+    run_pmake_traced(g, dir, nodes, &Tracer::default())
+}
+
+/// [`run_pmake`] with a lifecycle tracer threaded into the scheduler.
+pub fn run_pmake_traced(
+    g: &WorkflowGraph,
+    dir: &Path,
+    nodes: usize,
+    tracer: &Tracer,
+) -> Result<RunSummary> {
     std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
     let dir_str = dir.to_string_lossy().to_string();
     let lowered = lower::to_pmake(g, &dir_str)?;
@@ -181,7 +192,7 @@ pub fn run_pmake(g: &WorkflowGraph, dir: &Path, nodes: usize) -> Result<RunSumma
             &|p: &Path| p.exists(),
             &|rs| pmake::default_mpirun(rs),
         )?;
-        let report = pmake::run(&dag, &exec, &cfg)?;
+        let report = pmake::run_traced(&dag, &exec, &cfg, tracer)?;
         outcomes.push((dag, report));
     }
     let (run, failed, skipped) = summarize_pmake(&outcomes);
@@ -225,6 +236,19 @@ fn summarize_pmake(outcomes: &[(pmake::Dag, pmake::RunReport)]) -> (usize, usize
 /// Run the workflow under dwork: seed an in-proc dhub from the graph and
 /// drain it with `workers` pulling threads.
 pub fn run_dwork(g: &WorkflowGraph, dir: &Path, workers: usize, prefetch: u32) -> Result<RunSummary> {
+    run_dwork_traced(g, dir, workers, prefetch, &Tracer::default())
+}
+
+/// [`run_dwork`] with a lifecycle tracer: the server side records the
+/// Created/Ready/Launched/Finished/Failed transitions, the worker
+/// threads add `Started` into the same stream.
+pub fn run_dwork_traced(
+    g: &WorkflowGraph,
+    dir: &Path,
+    workers: usize,
+    prefetch: u32,
+    tracer: &Tracer,
+) -> Result<RunSummary> {
     std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
     if g.is_empty() {
         // workers would park forever on a hub that never receives a task
@@ -236,7 +260,10 @@ pub fn run_dwork(g: &WorkflowGraph, dir: &Path, workers: usize, prefetch: u32) -
             makespan_s: 0.0,
         });
     }
-    let state = dwork::SchedState::from_workflow(g)?;
+    // the tracer must be in place BEFORE ingestion so Created events land
+    let mut state = dwork::SchedState::new();
+    state.set_tracer(tracer.clone());
+    state.ingest_workflow(g)?;
     let (connector, handle) = dwork::spawn_inproc(state, dwork::ServerConfig::default());
     let workers = workers.max(1);
     let t0 = Instant::now();
@@ -245,9 +272,15 @@ pub fn run_dwork(g: &WorkflowGraph, dir: &Path, workers: usize, prefetch: u32) -
             .map(|w| {
                 let conn = connector.connect();
                 let dir = dir.to_path_buf();
+                // server owns the terminal events; workers add Started
+                let opts = dwork::WorkerOpts {
+                    prefetch,
+                    tracer: tracer.clone(),
+                    ..dwork::WorkerOpts::default()
+                };
                 s.spawn(move || {
                     let mut c = Client::new(Box::new(conn), format!("wf-w{w}"));
-                    let stats = dwork::run_worker(&mut c, prefetch, |t| match g.get(&t.name) {
+                    let stats = dwork::run_worker_opts(&mut c, &opts, |t| match g.get(&t.name) {
                         // known task: full semantics incl. declared-output
                         // materialization for kernel/noop payloads
                         Some(spec) => exec_task(spec, &dir),
@@ -331,6 +364,23 @@ pub struct RemoteSubmission {
     pub baseline: StatusInfo,
 }
 
+/// Classify a Create failure.  The typed [`RefusalCode`] the hub put on
+/// the wire wins; for pre-code hubs (one-version compatibility window)
+/// fall back to the stable `ERR_MARKER_*` strings in the message text.
+fn create_refusal(e: &anyhow::Error) -> Option<RefusalCode> {
+    let se = e.downcast_ref::<ServerError>()?;
+    if se.code.is_some() {
+        return se.code;
+    }
+    if se.msg.contains(dwork::ERR_MARKER_DUPLICATE) {
+        return Some(RefusalCode::Duplicate);
+    }
+    if se.msg.contains(dwork::ERR_MARKER_DEP_ERRORED) {
+        return Some(RefusalCode::DepErrored);
+    }
+    None
+}
+
 /// Ingest `g` into the remote dhub at `addr`: Create messages in
 /// topological order, exactly what the server's Create API requires.
 pub fn submit_dwork_remote(
@@ -352,20 +402,22 @@ pub fn submit_dwork_remote(
         let name = t.msg.name.clone();
         match c.create(t.msg, &t.deps) {
             Ok(()) => submitted += 1,
-            // a reconnect mid-submit can replay a Create the server had
-            // already applied; the duplicate error IS the ack then
-            Err(e) if e.to_string().contains(dwork::ERR_MARKER_DUPLICATE) => {
-                submitted += 1;
-                duplicate_acks += 1;
-            }
-            // a remote worker already ran and failed a dependency while
-            // this submission was in flight: the server (correctly)
-            // refuses the Create — the task is skipped, like any other
-            // dependent of a failure
-            Err(e) if e.to_string().contains(dwork::ERR_MARKER_DEP_ERRORED) => {
-                doomed.insert(name);
-            }
-            Err(e) => return Err(e.context(format!("submitting workflow to {addr}"))),
+            Err(e) => match create_refusal(&e) {
+                // a reconnect mid-submit can replay a Create the server
+                // had already applied; the duplicate refusal IS the ack
+                Some(RefusalCode::Duplicate) => {
+                    submitted += 1;
+                    duplicate_acks += 1;
+                }
+                // a remote worker already ran and failed a dependency
+                // while this submission was in flight: the server
+                // (correctly) refuses the Create — the task is skipped,
+                // like any other dependent of a failure
+                Some(RefusalCode::DepErrored) => {
+                    doomed.insert(name);
+                }
+                _ => return Err(e.context(format!("submitting workflow to {addr}"))),
+            },
         }
     }
     Ok(RemoteSubmission {
@@ -453,21 +505,51 @@ pub fn run_dwork_remote(g: &WorkflowGraph, addr: &str, opts: &RemoteOpts) -> Res
 /// the static plan phase by phase, with a barrier after each phase and no
 /// other synchronization.
 pub fn run_mpilist(g: &WorkflowGraph, dir: &Path, procs: usize) -> Result<RunSummary> {
+    run_mpilist_traced(g, dir, procs, &Tracer::default())
+}
+
+/// [`run_mpilist`] with a lifecycle tracer; each rank records its own
+/// block's events (`who = "rank<r>"`).
+pub fn run_mpilist_traced(
+    g: &WorkflowGraph,
+    dir: &Path,
+    procs: usize,
+    tracer: &Tracer,
+) -> Result<RunSummary> {
     std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
     let procs = procs.max(1);
     let plan = lower::to_mpilist(g, procs)?;
+    for t in g.tasks() {
+        tracer.record(&t.name, EventKind::Created, "");
+    }
     let t0 = Instant::now();
     let per_rank: Vec<(usize, usize)> = Context::run(procs, |ctx| {
         let mut run = 0usize;
         let mut failed = 0usize;
+        let who = format!("rank{}", ctx.rank());
         for level in &plan.levels {
             let (start, count) = block_range(ctx.rank(), procs, level.len() as u64);
+            // every task of the block is Ready the moment its rank enters
+            // the phase; Launched−Ready is then the rank-serialization
+            // wait (earlier block elements), matching the DES model and
+            // the report's queue-wait semantics
+            for k in start..start + count {
+                tracer.record(&g.tasks()[level[k as usize]].name, EventKind::Ready, "");
+            }
             for k in start..start + count {
                 let t = &g.tasks()[level[k as usize]];
+                tracer.record(&t.name, EventKind::Launched, &who);
+                tracer.record(&t.name, EventKind::Started, &who);
                 run += 1;
-                if exec_task(t, dir).is_err() {
+                let ok = exec_task(t, dir).is_ok();
+                if !ok {
                     failed += 1;
                 }
+                tracer.record(
+                    &t.name,
+                    if ok { EventKind::Finished } else { EventKind::Failed },
+                    &who,
+                );
             }
             // the phase barrier IS the synchronization mechanism
             ctx.comm.barrier();
@@ -495,17 +577,40 @@ pub fn run_auto(
     parallelism: usize,
     dir: &Path,
 ) -> Result<(Recommendation, RunSummary)> {
+    run_auto_traced(g, m, parallelism, dir, &Tracer::default())
+}
+
+/// [`run_auto`] with a lifecycle tracer threaded into whichever back-end
+/// the selector picks.
+pub fn run_auto_traced(
+    g: &WorkflowGraph,
+    m: &CostModel,
+    parallelism: usize,
+    dir: &Path,
+    tracer: &Tracer,
+) -> Result<(Recommendation, RunSummary)> {
     let rec = select(g, m, parallelism)?;
-    let summary = dispatch(g, rec.choice, parallelism, dir)?;
+    let summary = dispatch_traced(g, rec.choice, parallelism, dir, tracer)?;
     Ok((rec, summary))
 }
 
 /// Run `g` on an explicitly chosen coordinator.
 pub fn dispatch(g: &WorkflowGraph, tool: Tool, parallelism: usize, dir: &Path) -> Result<RunSummary> {
+    dispatch_traced(g, tool, parallelism, dir, &Tracer::default())
+}
+
+/// [`dispatch`] with a lifecycle tracer threaded into the chosen driver.
+pub fn dispatch_traced(
+    g: &WorkflowGraph,
+    tool: Tool,
+    parallelism: usize,
+    dir: &Path,
+    tracer: &Tracer,
+) -> Result<RunSummary> {
     match tool {
-        Tool::Pmake => run_pmake(g, dir, parallelism),
-        Tool::Dwork => run_dwork(g, dir, parallelism, 1),
-        Tool::MpiList => run_mpilist(g, dir, parallelism),
+        Tool::Pmake => run_pmake_traced(g, dir, parallelism, tracer),
+        Tool::Dwork => run_dwork_traced(g, dir, parallelism, 1, tracer),
+        Tool::MpiList => run_mpilist_traced(g, dir, parallelism, tracer),
     }
 }
 

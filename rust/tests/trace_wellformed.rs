@@ -1,0 +1,217 @@
+//! Trace wellformedness + RunSummary equivalence across every execution
+//! layer: random DAGs run under in-proc dwork, pmake, and mpi-list must
+//! emit validator-clean lifecycle traces whose derived counts match the
+//! coordinator's own `RunSummary`; the graph-aware DES models must emit
+//! the identical (byte-compatible) schema.
+
+use std::path::PathBuf;
+
+use threesched::metg::simmodels::Tool;
+use threesched::substrate::cluster::costs::CostModel;
+use threesched::substrate::prop::{check, Gen};
+use threesched::trace::{self, TaskEvent, Tracer};
+use threesched::workflow::{self, RunSummary, TaskSpec, WorkflowGraph};
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "threesched-tracewf-{name}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Random small DAG: noop payloads with occasional forced failures
+/// (`false` commands), edges only to earlier tasks so it is acyclic by
+/// construction.
+fn random_graph(g: &mut Gen, label: &str) -> WorkflowGraph {
+    let n = g.usize(1..8);
+    let mut wf = WorkflowGraph::new(format!("prop-{label}-{}", g.case));
+    for i in 0..n {
+        let mut t = if g.bool(0.2) {
+            TaskSpec::command(format!("t{i}"), "false")
+        } else {
+            TaskSpec::new(format!("t{i}"))
+        };
+        if i > 0 {
+            let mut deps = std::collections::BTreeSet::new();
+            for _ in 0..g.usize(0..3) {
+                deps.insert(g.usize(0..i));
+            }
+            let names: Vec<String> = deps.into_iter().map(|d| format!("t{d}")).collect();
+            t = t.after(&names);
+        }
+        wf.add_task(t.est(0.001)).unwrap();
+    }
+    wf
+}
+
+/// The pinned equivalence: validator-clean trace, and trace-derived
+/// counts identical to the coordinator's own summary.
+fn assert_trace_matches(tool: &str, summary: &RunSummary, events: &[TaskEvent]) {
+    trace::validate(events).unwrap_or_else(|e| panic!("{tool}: malformed trace: {e}"));
+    let c = trace::counts(events);
+    assert_eq!(c.attempted(), summary.tasks_run, "{tool}: attempted vs tasks_run");
+    assert_eq!(c.failed, summary.tasks_failed, "{tool}: failed");
+    assert_eq!(c.skipped, summary.tasks_skipped, "{tool}: skipped");
+}
+
+#[test]
+fn dwork_traces_wellformed_and_equivalent() {
+    check("dwork trace wellformed", 10, |g| {
+        let wf = random_graph(g, "dwork");
+        let dir = tmp("dwork");
+        let tracer = Tracer::memory();
+        let workers = g.usize(1..4);
+        let summary = workflow::run_dwork_traced(&wf, &dir, workers, 1, &tracer).unwrap();
+        assert_trace_matches("dwork", &summary, &tracer.drain());
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
+fn pmake_traces_wellformed_and_equivalent() {
+    check("pmake trace wellformed", 6, |g| {
+        let wf = random_graph(g, "pmake");
+        let dir = tmp("pmake");
+        let tracer = Tracer::memory();
+        let summary = workflow::run_pmake_traced(&wf, &dir, 2, &tracer).unwrap();
+        assert_trace_matches("pmake", &summary, &tracer.drain());
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
+fn mpilist_traces_wellformed_and_equivalent() {
+    check("mpi-list trace wellformed", 10, |g| {
+        let wf = random_graph(g, "mpilist");
+        let dir = tmp("mpilist");
+        let tracer = Tracer::memory();
+        let procs = g.usize(1..4);
+        let summary = workflow::run_mpilist_traced(&wf, &dir, procs, &tracer).unwrap();
+        assert_trace_matches("mpi-list", &summary, &tracer.drain());
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
+fn des_traces_wellformed_on_random_graphs() {
+    let m = CostModel::paper();
+    check("DES trace wellformed", 20, |g| {
+        let wf = random_graph(g, "des");
+        for tool in Tool::ALL {
+            let tracer = Tracer::memory();
+            trace::simulate_workflow(tool, &wf, &m, 3, g.case, &tracer).unwrap();
+            let events = tracer.drain();
+            trace::validate(&events)
+                .unwrap_or_else(|e| panic!("des:{}: {e}", tool.name()));
+            // the DES models no failures: every task completes
+            assert_eq!(trace::counts(&events).completed, wf.len(), "{}", tool.name());
+        }
+    });
+}
+
+/// One fixed mixed graph (success + failing root + poisoned dependents)
+/// through all three real back-ends: the equivalence must hold in the
+/// presence of failure propagation, not just on clean runs.
+#[test]
+fn failure_propagation_equivalence_on_all_backends() {
+    let mut g = WorkflowGraph::new("mixed");
+    g.add_task(TaskSpec::command("gen", "echo 1 > d.txt").outputs(&["d.txt"]).est(0.01))
+        .unwrap();
+    g.add_task(TaskSpec::command("boom", "exit 3").after(&["gen"]).est(0.01)).unwrap();
+    g.add_task(TaskSpec::new("child").after(&["boom"]).est(0.01)).unwrap();
+    g.add_task(TaskSpec::new("grandchild").after(&["child"]).est(0.01)).unwrap();
+    g.add_task(TaskSpec::kernel("free", "atb_16", 1).after(&["gen"]).est(0.01)).unwrap();
+    for tool in Tool::ALL {
+        let dir = tmp(&format!("mixed-{}", tool.name().replace('-', "")));
+        let tracer = Tracer::memory();
+        let summary = workflow::dispatch_traced(&g, tool, 2, &dir, &tracer).unwrap();
+        let events = tracer.drain();
+        assert_trace_matches(tool.name(), &summary, &events);
+        match tool {
+            // the static plan runs everything; the other two skip the
+            // poisoned chain
+            Tool::MpiList => {
+                assert_eq!(summary.tasks_run, 5, "mpi-list runs all");
+                assert_eq!(summary.tasks_skipped, 0);
+            }
+            _ => {
+                assert_eq!(summary.tasks_failed, 1, "{}", tool.name());
+                assert_eq!(summary.tasks_skipped, 2, "{}", tool.name());
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Real runs and DES runs must serialize to the same on-disk schema:
+/// parse(serialize(x)) == x and serialize(parse(serialize(x))) is
+/// byte-identical, for both producers, through the same code path a
+/// `--trace` file takes.
+#[test]
+fn real_and_simulated_traces_share_one_schema() {
+    let mut g = WorkflowGraph::new("schema");
+    g.add_task(TaskSpec::new("a").est(0.001)).unwrap();
+    g.add_task(TaskSpec::new("b").after(&["a"]).est(0.001)).unwrap();
+    g.add_task(TaskSpec::new("c").after(&["a"]).est(0.001)).unwrap();
+
+    let dir = tmp("schema");
+    let real = Tracer::memory();
+    workflow::run_dwork_traced(&g, &dir, 2, 1, &real).unwrap();
+    let real_events = real.drain();
+
+    let sim = Tracer::memory();
+    trace::simulate_workflow(Tool::Dwork, &g, &CostModel::paper(), 2, 1, &sim).unwrap();
+    let sim_events = sim.drain();
+
+    for (source, events) in [("dwork", &real_events), ("des:dwork", &sim_events)] {
+        assert!(!events.is_empty(), "{source}");
+        let text = trace::to_jsonl(source, events);
+        let (parsed_source, parsed) = trace::parse_jsonl(&text).unwrap();
+        assert_eq!(parsed_source, source);
+        assert_eq!(&parsed, events, "{source}: lossless parse");
+        assert_eq!(
+            trace::to_jsonl(&parsed_source, &parsed),
+            text,
+            "{source}: byte-stable reserialization"
+        );
+        trace::validate(&parsed).unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// End-to-end file path: write with one producer, read back, report.
+#[test]
+fn trace_file_roundtrip_feeds_report_and_compare() {
+    let mut g = WorkflowGraph::new("roundtrip");
+    for i in 0..5 {
+        g.add_task(TaskSpec::new(format!("t{i}")).est(0.002)).unwrap();
+    }
+    let dir = tmp("roundtrip");
+    let tracer = Tracer::memory();
+    let summary = workflow::run_dwork_traced(&g, &dir, 2, 1, &tracer).unwrap();
+    assert!(summary.all_ok());
+    let events = tracer.drain();
+    let path = dir.join("trace.jsonl");
+    trace::write_trace(&path, "dwork", &events).unwrap();
+    let (source, loaded) = trace::read_trace(&path).unwrap();
+    assert_eq!(source, "dwork");
+    assert_eq!(loaded, events);
+    let report = trace::TraceReport::from_events(&loaded);
+    assert_eq!(report.counts.completed, 5);
+    assert!(report.compute_s >= 0.0);
+    assert!(report.makespan_s > 0.0);
+    // the measured makespan lands in the dwork row of the comparison
+    let measured = vec![(source, trace::makespan(&loaded))];
+    let rows =
+        trace::compare_backends(&g, &CostModel::paper(), 2, 7, &measured).unwrap();
+    let dwork_row = rows.iter().find(|r| r.tool == Tool::Dwork).unwrap();
+    assert!(dwork_row.measured_s.is_some());
+    assert!(rows
+        .iter()
+        .filter(|r| r.tool != Tool::Dwork)
+        .all(|r| r.measured_s.is_none()));
+    let _ = std::fs::remove_dir_all(&dir);
+}
