@@ -1,0 +1,101 @@
+//! The calibration loop end to end: simulate the three standard
+//! calibration workloads under a *perturbed* cost model (standing in
+//! for "your cluster", whose constants differ from the paper's Table
+//! 4), write the lifecycle traces to disk, fit a profile back from the
+//! trace files alone, check the injected constants are recovered,
+//! cross-validate fitted-vs-default prediction error, and persist the
+//! profile — exactly what `threesched calibrate <traces...> --out
+//! profile.toml --report` automates.
+//!
+//! Run: `cargo run --release --example calibrate_roundtrip`
+//!
+//! Set `THREESCHED_CALIBRATE_DIR` to keep the traces and profile on
+//! disk (CI does, and uploads them as workflow artifacts).
+
+use std::path::PathBuf;
+
+use threesched::calibrate::{self, workloads, CalibrationProfile};
+use threesched::substrate::cluster::costs::CostModel;
+use threesched::trace;
+
+fn main() -> anyhow::Result<()> {
+    let keep = std::env::var_os("THREESCHED_CALIBRATE_DIR").map(PathBuf::from);
+    let dir = keep.clone().unwrap_or_else(|| {
+        std::env::temp_dir().join(format!("threesched-calibrate-rt-{}", std::process::id()))
+    });
+    std::fs::create_dir_all(&dir)?;
+
+    // the "real cluster": Table 4, deliberately warped (the same ground
+    // truth the CI golden-model regression asserts against)
+    let inj = workloads::perturbed_model();
+
+    println!("=== 1. simulate the calibration workloads (known constants) ===\n");
+    let mut files = Vec::new();
+    for run in workloads::standard() {
+        let (source, events) = workloads::simulate(&run, &inj, 42)?;
+        let path = dir.join(format!("{}.jsonl", run.tool.name()));
+        trace::write_trace(&path, &source, &events)?;
+        println!(
+            "  {:>8}: {} tasks at {} ranks -> {}",
+            run.tool.name(),
+            run.graph.len(),
+            run.ranks,
+            path.display()
+        );
+        files.push(path);
+    }
+
+    println!("\n=== 2. fit a profile from the trace files alone ===\n");
+    let base = CostModel::paper();
+    let mut traces = Vec::new();
+    for f in &files {
+        let (source, events) = trace::read_trace(f)?;
+        traces.push(calibrate::classify_trace(&source, events, None)?);
+    }
+    let cal = calibrate::fit_traces(&traces, &base)?;
+    print!("{}", calibrate::render_calibration(&cal));
+
+    // the whole point: the loop must close on the injected constants
+    let fitted = cal.profile.model();
+    let rel = |a: f64, b: f64| (a - b).abs() / b.abs();
+    anyhow::ensure!(
+        rel(fitted.steal_rtt, inj.steal_rtt) < 0.10,
+        "steal_rtt recovery: fitted {} vs injected {}",
+        fitted.steal_rtt,
+        inj.steal_rtt
+    );
+    anyhow::ensure!(
+        rel(fitted.gumbel_beta_per_task, inj.gumbel_beta_per_task) < 0.10,
+        "gumbel beta recovery: fitted {} vs injected {}",
+        fitted.gumbel_beta_per_task,
+        inj.gumbel_beta_per_task
+    );
+    anyhow::ensure!(
+        rel(fitted.metg_pmake(1), inj.metg_pmake(1)) < 0.10,
+        "pmake launch-law recovery: fitted {} vs injected {}",
+        fitted.metg_pmake(1),
+        inj.metg_pmake(1)
+    );
+    println!("recovery: every fitted parameter within 10% of the injected value");
+
+    println!("\n=== 3. cross-validate: fitted model vs Table-4 defaults ===\n");
+    let v = calibrate::validate_profile(&traces, &base, &cal.profile, 7)?;
+    print!("{}", calibrate::render_validation(&v));
+    anyhow::ensure!(
+        v.improved(),
+        "fitted profile must predict the measured traces strictly better"
+    );
+
+    let out = dir.join("profile.toml");
+    cal.profile.save(&out)?;
+    let loaded = CalibrationProfile::load(&out)?;
+    anyhow::ensure!(loaded == cal.profile, "profile TOML round-trip must be identity");
+    println!(
+        "\nwrote {} (use with `threesched workflow plan --calibration ...`)",
+        out.display()
+    );
+    if keep.is_none() {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    Ok(())
+}

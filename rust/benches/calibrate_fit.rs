@@ -1,0 +1,69 @@
+//! Calibration fitting throughput: sample extraction, fitting, and
+//! workload reconstruction over a large trace.  The fitter runs
+//! offline, but it must stay comfortably sub-second for campaign-scale
+//! traces (10^5 events) or nobody will put it in a loop with
+//! `trace compare`.
+//!
+//! Run: `cargo bench --bench calibrate_fit`
+
+use std::time::Instant;
+
+use threesched::calibrate::{classify_trace, fit_traces, workloads};
+use threesched::substrate::cluster::costs::CostModel;
+use threesched::trace::samples::{graph_from_trace, PhaseSamples};
+
+fn main() {
+    println!("=== bench: calibrate_fit ===\n");
+    let m = CostModel::paper();
+
+    // campaign-scale dwork trace: ~5 events per task
+    let farm = workloads::CalibrationRun {
+        tool: threesched::metg::simmodels::Tool::Dwork,
+        graph: workloads::dwork_fine_farm(20_000, 5e-4),
+        ranks: 128,
+    };
+    let t0 = Instant::now();
+    let (source, events) = workloads::simulate(&farm, &m, 9).expect("simulate");
+    println!(
+        "simulate: {} events in {:.3}s",
+        events.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    let t0 = Instant::now();
+    let samples = PhaseSamples::from_events(&events);
+    let dt_extract = t0.elapsed().as_secs_f64();
+    println!(
+        "extract:  {} compute + {} launch-gap samples in {:.3}s ({:.0} events/ms)",
+        samples.compute.len(),
+        samples.launch_gaps().len(),
+        dt_extract,
+        events.len() as f64 / (dt_extract * 1e3)
+    );
+    assert!(
+        dt_extract < 2.0,
+        "sample extraction took {dt_extract:.2}s over {} events",
+        events.len()
+    );
+
+    let t0 = Instant::now();
+    let trace = classify_trace(&source, events.clone(), None).expect("classify");
+    let cal = fit_traces(std::slice::from_ref(&trace), &m).expect("fit");
+    let dt_fit = t0.elapsed().as_secs_f64();
+    println!(
+        "fit:      steal_rtt {:.2}us (n={}) in {:.3}s",
+        cal.profile.overrides.steal_rtt.unwrap_or(f64::NAN) * 1e6,
+        cal.estimates[0].estimate.n,
+        dt_fit
+    );
+    assert!(dt_fit < 5.0, "fitting took {dt_fit:.2}s");
+
+    let t0 = Instant::now();
+    let g = graph_from_trace(&source, &events).expect("reconstruct");
+    let dt_g = t0.elapsed().as_secs_f64();
+    println!("rebuild:  {} tasks reconstructed in {:.3}s", g.len(), dt_g);
+    assert_eq!(g.len(), 20_000);
+    assert!(dt_g < 5.0, "reconstruction took {dt_g:.2}s");
+
+    println!("\nok");
+}

@@ -1,0 +1,418 @@
+//! Per-backend parameter estimators: measured traces in, a
+//! [`CalibrationProfile`] of fitted [`CostModel`] constants out.
+//!
+//! Each backend's METG law exposes one trace-measurable signature:
+//!
+//! * **pmake** — every job step pays `jsrun(P) + alloc` between
+//!   `Launched` and `Started`; the per-trace median launch window,
+//!   regressed against `log2 P` across traces (Theil–Sen), recovers the
+//!   launch law.  With a single rank count the slope is unidentifiable,
+//!   so the default `jsrun_b` is kept and only the intercept refits.
+//! * **dwork** — a saturated task server serializes steals, so the gaps
+//!   between consecutive `Launched` events cluster at exactly one
+//!   steal/complete RTT; the MAD-inlier mean of the pooled gaps is the
+//!   estimate (idle-period gaps are the outliers being rejected).
+//! * **mpi-list** — straggler spread comes from per-task Gumbel noise
+//!   with scale `gumbel_beta_per_task`; the interdecile range of the
+//!   compute durations estimates the scale with the per-task base
+//!   duration cancelling (uniform calibration workloads make this
+//!   exact; heterogeneous ones inflate it, which the report's CI shows).
+//!
+//! Parameters no lifecycle trace constrains (python imports, connection
+//! storms) are left at their Table-4 defaults — the profile simply does
+//! not mention them.
+
+use anyhow::{bail, Result};
+
+use crate::metg::simmodels::Tool;
+use crate::substrate::cluster::costs::CostModel;
+use crate::trace::compare::tool_of_source;
+use crate::trace::samples::PhaseSamples;
+use crate::trace::TaskEvent;
+
+use super::profile::CalibrationProfile;
+use super::robust::{self, Estimate};
+
+/// Fewest pooled launch gaps worth fitting an RTT from.
+const MIN_GAPS: usize = 8;
+/// Fewest launch-window samples for a per-trace pmake point.
+const MIN_LAUNCH: usize = 3;
+/// MAD multiplier for inlier filtering.
+const OUTLIER_K: f64 = 3.5;
+
+/// One input trace, classified and pre-digested for fitting.
+#[derive(Clone, Debug)]
+pub struct ClassifiedTrace {
+    pub source: String,
+    pub tool: Tool,
+    /// parallelism the trace ran at (explicit override or inferred)
+    pub ranks: usize,
+    pub samples: PhaseSamples,
+    pub makespan_s: f64,
+    pub events: Vec<TaskEvent>,
+}
+
+/// Classify a trace by its source label and infer its parallelism
+/// (worker labels, else peak in-flight tasks) unless overridden.
+pub fn classify_trace(
+    source: &str,
+    events: Vec<TaskEvent>,
+    ranks_override: Option<usize>,
+) -> Result<ClassifiedTrace> {
+    let Some(tool) = tool_of_source(source) else {
+        bail!(
+            "trace source {source:?} does not name a backend \
+             (want pmake, dwork, or mpi-list in the label)"
+        );
+    };
+    let samples = PhaseSamples::from_events(&events);
+    let ranks = ranks_override.unwrap_or_else(|| samples.inferred_parallelism(&events)).max(1);
+    Ok(ClassifiedTrace {
+        source: source.to_string(),
+        tool,
+        ranks,
+        makespan_s: samples.makespan_s,
+        samples,
+        events,
+    })
+}
+
+/// One fitted parameter with its provenance.
+#[derive(Clone, Debug)]
+pub struct ParamEstimate {
+    /// `CostOverrides` field name
+    pub param: &'static str,
+    /// backend whose traces produced it
+    pub tool: Tool,
+    /// the Table-4 default it replaces
+    pub default: f64,
+    pub estimate: Estimate,
+}
+
+/// Everything a fitting pass produced.
+#[derive(Clone, Debug, Default)]
+pub struct Calibration {
+    pub profile: CalibrationProfile,
+    pub estimates: Vec<ParamEstimate>,
+    /// human-readable notes on what could NOT be fitted, and why
+    pub notes: Vec<String>,
+}
+
+/// Fit a calibration profile from classified traces against `base`
+/// (normally [`CostModel::paper`]).  Backends with no usable traces
+/// contribute nothing; an entirely unusable input set is an error.
+pub fn fit_traces(traces: &[ClassifiedTrace], base: &CostModel) -> Result<Calibration> {
+    if traces.is_empty() {
+        bail!("no traces to fit");
+    }
+    let mut cal = Calibration {
+        profile: CalibrationProfile::new(format!(
+            "fitted by threesched calibrate from {} trace(s)",
+            traces.len()
+        )),
+        ..Calibration::default()
+    };
+    fit_dwork(traces, base, &mut cal);
+    fit_mpilist(traces, base, &mut cal);
+    fit_pmake(traces, base, &mut cal);
+    if cal.profile.is_empty() {
+        bail!(
+            "no parameter could be fitted from the supplied traces:\n  {}",
+            cal.notes.join("\n  ")
+        );
+    }
+    Ok(cal)
+}
+
+fn fit_dwork(traces: &[ClassifiedTrace], base: &CostModel, cal: &mut Calibration) {
+    let mut gaps: Vec<f64> = Vec::new();
+    let mut n_traces = 0usize;
+    for t in traces.iter().filter(|t| t.tool == Tool::Dwork) {
+        gaps.extend(t.samples.launch_gaps());
+        n_traces += 1;
+    }
+    if n_traces == 0 {
+        cal.notes.push("steal_rtt: no dwork traces supplied".into());
+        return;
+    }
+    if gaps.len() < MIN_GAPS {
+        cal.notes.push(format!(
+            "steal_rtt: only {} launch gap(s) across {n_traces} dwork trace(s) \
+             (need >= {MIN_GAPS}; run a finer-grained calibration workload)",
+            gaps.len()
+        ));
+        return;
+    }
+    let Some(est) = robust::robust_mean(&gaps, OUTLIER_K) else {
+        return;
+    };
+    if !(est.value.is_finite() && est.value > 0.0) {
+        cal.notes.push(format!("steal_rtt: degenerate estimate {}", est.value));
+        return;
+    }
+    cal.profile.overrides.steal_rtt = Some(est.value);
+    cal.estimates.push(ParamEstimate {
+        param: "steal_rtt",
+        tool: Tool::Dwork,
+        default: base.steal_rtt,
+        estimate: est,
+    });
+}
+
+fn fit_mpilist(traces: &[ClassifiedTrace], base: &CostModel, cal: &mut Calibration) {
+    // per-trace scale estimates (pooling across traces would mix base
+    // durations and wreck the location-cancelling interdecile)
+    let mut per: Vec<Estimate> = Vec::new();
+    let mut n_traces = 0usize;
+    for t in traces.iter().filter(|t| t.tool == Tool::MpiList) {
+        n_traces += 1;
+        match robust::gumbel_scale(&t.samples.compute) {
+            Some(e) if e.value.is_finite() && e.value > 0.0 => per.push(e),
+            _ => cal.notes.push(format!(
+                "gumbel_beta_per_task: trace {:?} has too few or degenerate \
+                 compute samples ({})",
+                t.source,
+                t.samples.compute.len()
+            )),
+        }
+    }
+    if n_traces == 0 {
+        cal.notes.push("gumbel_beta_per_task: no mpi-list traces supplied".into());
+        return;
+    }
+    if per.is_empty() {
+        return;
+    }
+    // combine: sample-count-weighted mean, conservative CI
+    let wsum: f64 = per.iter().map(|e| e.n as f64).sum();
+    let value = per.iter().map(|e| e.value * e.n as f64).sum::<f64>() / wsum;
+    let ci95 = per.iter().map(|e| e.ci95).fold(0.0, f64::max);
+    let n = per.iter().map(|e| e.n).sum();
+    cal.profile.overrides.gumbel_beta_per_task = Some(value);
+    cal.estimates.push(ParamEstimate {
+        param: "gumbel_beta_per_task",
+        tool: Tool::MpiList,
+        default: base.gumbel_beta_per_task,
+        estimate: Estimate { value, ci95, n, rejected: 0 },
+    });
+}
+
+fn fit_pmake(traces: &[ClassifiedTrace], base: &CostModel, cal: &mut Calibration) {
+    // one (log2 ranks, median launch window, CI) point per pmake trace
+    let mut points: Vec<(f64, f64, Estimate)> = Vec::new();
+    let mut n_traces = 0usize;
+    for t in traces.iter().filter(|t| t.tool == Tool::Pmake) {
+        n_traces += 1;
+        if t.samples.launch.len() < MIN_LAUNCH {
+            cal.notes.push(format!(
+                "pmake launch law: trace {:?} has only {} launch sample(s) \
+                 (need >= {MIN_LAUNCH})",
+                t.source,
+                t.samples.launch.len()
+            ));
+            continue;
+        }
+        if let Some(e) = robust::robust_mean(&t.samples.launch, OUTLIER_K) {
+            points.push(((t.ranks as f64).log2(), e.value, e));
+        }
+    }
+    if n_traces == 0 {
+        cal.notes.push("pmake launch law: no pmake traces supplied".into());
+        return;
+    }
+    if points.is_empty() {
+        return;
+    }
+    let ci95 = points.iter().map(|&(_, _, e)| e.ci95).fold(0.0, f64::max);
+    let n: usize = points.iter().map(|&(_, _, e)| e.n).sum();
+    let rejected: usize = points.iter().map(|&(_, _, e)| e.rejected).sum();
+    let mut distinct: Vec<f64> = points.iter().map(|&(x, _, _)| x).collect();
+    distinct.sort_by(f64::total_cmp);
+    distinct.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+
+    // the launch window is jsrun(P) + alloc; alloc and the jsrun
+    // intercept are not separable from launch data, so alloc keeps its
+    // default and the intercept absorbs the difference
+    let (jsrun_b, slope_fitted) = if distinct.len() >= 2 {
+        let xs: Vec<f64> = points.iter().map(|&(x, _, _)| x).collect();
+        let ys: Vec<f64> = points.iter().map(|&(_, y, _)| y).collect();
+        match robust::theil_sen(&xs, &ys) {
+            Some((_, b)) if b >= 0.0 => (b, true),
+            _ => {
+                cal.notes.push(
+                    "pmake launch law: cross-rank slope unusable (negative or \
+                     degenerate); keeping the default jsrun_b"
+                        .into(),
+                );
+                (base.jsrun_b, false)
+            }
+        }
+    } else {
+        (base.jsrun_b, false)
+    };
+    // intercept: weighted mean of per-trace (launch − b·log2 P) − alloc
+    let wsum: f64 = points.iter().map(|&(_, _, e)| e.n as f64).sum();
+    let jsrun_a = points
+        .iter()
+        .map(|&(x, y, e)| (y - jsrun_b * x) * e.n as f64)
+        .sum::<f64>()
+        / wsum
+        - base.alloc;
+
+    if !jsrun_a.is_finite() || !jsrun_b.is_finite() {
+        cal.notes.push("pmake launch law: non-finite fit discarded".into());
+        return;
+    }
+    cal.profile.overrides.jsrun_a = Some(jsrun_a);
+    cal.estimates.push(ParamEstimate {
+        param: "jsrun_a",
+        tool: Tool::Pmake,
+        default: base.jsrun_a,
+        estimate: Estimate { value: jsrun_a, ci95, n, rejected },
+    });
+    if slope_fitted {
+        cal.profile.overrides.jsrun_b = Some(jsrun_b);
+        cal.estimates.push(ParamEstimate {
+            param: "jsrun_b",
+            tool: Tool::Pmake,
+            default: base.jsrun_b,
+            estimate: Estimate { value: jsrun_b, ci95, n, rejected },
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calibrate::workloads;
+    use crate::substrate::cluster::costs::CostOverrides;
+
+    fn perturbed() -> CostModel {
+        workloads::perturbed_model()
+    }
+
+    fn classified(m: &CostModel) -> Vec<ClassifiedTrace> {
+        workloads::standard()
+            .iter()
+            .map(|run| {
+                let (source, events) = workloads::simulate(run, m, 42).unwrap();
+                classify_trace(&source, events, None).unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn classify_requires_backend_in_source() {
+        assert!(classify_trace("mystery", Vec::new(), None).is_err());
+        let t = classify_trace("des:dwork", Vec::new(), Some(8)).unwrap();
+        assert_eq!(t.tool, Tool::Dwork);
+        assert_eq!(t.ranks, 8);
+    }
+
+    #[test]
+    fn fit_recovers_injected_constants() {
+        let inj = perturbed();
+        let base = CostModel::paper();
+        let traces = classified(&inj);
+        let cal = fit_traces(&traces, &base).unwrap();
+        let fitted = cal.profile.model();
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs();
+        assert!(
+            rel(fitted.steal_rtt, inj.steal_rtt) < 0.10,
+            "steal_rtt {} vs injected {}",
+            fitted.steal_rtt,
+            inj.steal_rtt
+        );
+        assert!(
+            rel(fitted.gumbel_beta_per_task, inj.gumbel_beta_per_task) < 0.10,
+            "beta {} vs injected {}",
+            fitted.gumbel_beta_per_task,
+            inj.gumbel_beta_per_task
+        );
+        // the chain ran at 1 rank: the fitted launch law must match there
+        assert!(
+            rel(fitted.metg_pmake(1), inj.metg_pmake(1)) < 0.10,
+            "metg_pmake(1) {} vs injected {}",
+            fitted.metg_pmake(1),
+            inj.metg_pmake(1)
+        );
+    }
+
+    #[test]
+    fn fit_is_deterministic() {
+        let inj = perturbed();
+        let base = CostModel::paper();
+        let a = fit_traces(&classified(&inj), &base).unwrap();
+        let b = fit_traces(&classified(&inj), &base).unwrap();
+        assert_eq!(a.profile, b.profile);
+    }
+
+    #[test]
+    fn missing_backends_noted_not_fatal() {
+        let inj = perturbed();
+        let run = &workloads::standard()[1]; // the dwork farm
+        assert_eq!(run.tool, Tool::Dwork);
+        let (source, events) = workloads::simulate(run, &inj, 7).unwrap();
+        let traces = vec![classify_trace(&source, events, None).unwrap()];
+        let cal = fit_traces(&traces, &CostModel::paper()).unwrap();
+        assert!(cal.profile.overrides.steal_rtt.is_some());
+        assert!(cal.profile.overrides.jsrun_a.is_none());
+        assert!(cal.profile.overrides.gumbel_beta_per_task.is_none());
+        assert!(cal.notes.iter().any(|n| n.contains("no pmake traces")));
+        assert!(cal.notes.iter().any(|n| n.contains("no mpi-list traces")));
+    }
+
+    #[test]
+    fn empty_input_is_an_error() {
+        assert!(fit_traces(&[], &CostModel::paper()).is_err());
+    }
+
+    #[test]
+    fn unusable_traces_are_an_error_with_notes() {
+        // a dwork trace with a single task has no launch gaps at all
+        let g = workloads::dwork_fine_farm(1, 0.01);
+        let run = workloads::CalibrationRun { tool: Tool::Dwork, graph: g, ranks: 2 };
+        let (source, events) = workloads::simulate(&run, &CostModel::paper(), 1).unwrap();
+        let traces = vec![classify_trace(&source, events, None).unwrap()];
+        let err = fit_traces(&traces, &CostModel::paper()).unwrap_err();
+        assert!(err.to_string().contains("launch gap"), "{err:#}");
+    }
+
+    #[test]
+    fn multi_rank_pmake_traces_fit_the_slope() {
+        // farms wide enough to saturate the allocation at two rank
+        // counts give the regression a usable cross-rank slope
+        let mut inj = CostModel::paper();
+        inj.jsrun_b *= 1.5;
+        inj.jsrun_a *= 1.3;
+        let base = CostModel::paper();
+        let mut traces = Vec::new();
+        for ranks in [4usize, 32] {
+            let g = workloads::pmake_wave_farm(ranks * 3, 5.0);
+            let run = workloads::CalibrationRun { tool: Tool::Pmake, graph: g, ranks };
+            let (source, events) = workloads::simulate(&run, &inj, 11).unwrap();
+            traces.push(classify_trace(&source, events, None).unwrap());
+        }
+        assert_eq!(traces[0].ranks, 4, "peak-concurrency inference");
+        assert_eq!(traces[1].ranks, 32);
+        let cal = fit_traces(&traces, &base).unwrap();
+        let fitted = cal.profile.model();
+        for ranks in [4usize, 32] {
+            let rel = (fitted.metg_pmake(ranks) - inj.metg_pmake(ranks)).abs()
+                / inj.metg_pmake(ranks);
+            assert!(rel < 0.10, "metg_pmake({ranks}) off by {:.1}%", rel * 100.0);
+        }
+        assert!(cal.profile.overrides.jsrun_b.is_some());
+    }
+
+    #[test]
+    fn profile_only_overrides_constrained_fields() {
+        let traces = classified(&perturbed());
+        let cal = fit_traces(&traces, &CostModel::paper()).unwrap();
+        let o: CostOverrides = cal.profile.overrides;
+        assert!(o.py_alloc.is_none());
+        assert!(o.imp_a.is_none());
+        assert!(o.conn_a.is_none());
+        assert!(o.alloc.is_none(), "alloc is not separable from jsrun_a");
+    }
+}

@@ -1,0 +1,305 @@
+//! Trace-driven cost-model auto-calibration: close the
+//! predict → measure → refit loop.
+//!
+//! The adaptive selector ([`crate::workflow::select`]) prices every
+//! backend with a [`CostModel`] whose constants were hand-transcribed
+//! from the paper's Table 4, and `trace compare` (PR 3) *measures* how
+//! wrong those predictions are without doing anything about it.  This
+//! subsystem is the missing arrow back: fit the constants from measured
+//! JSONL lifecycle traces, persist them as a versioned
+//! [`CalibrationProfile`], and let `workflow plan|run --calibration`
+//! and `trace compare --calibration` price workloads with *your*
+//! cluster's numbers instead of the paper's.
+//!
+//! The moving parts:
+//!
+//! * [`robust`] — median/MAD outlier rejection, interdecile Gumbel
+//!   scale, Theil–Sen regression, confidence intervals;
+//! * [`fit`] — per-backend estimators over
+//!   [`PhaseSamples`](crate::trace::samples::PhaseSamples): launch
+//!   windows → pmake's `jsrun+alloc` law, saturated launch gaps →
+//!   dwork's steal RTT, compute-duration dispersion → mpi-list's
+//!   straggler scale;
+//! * [`profile`] — the persisted TOML artifact (field-wise
+//!   [`CostOverrides`](crate::substrate::cluster::costs::CostOverrides),
+//!   unconstrained parameters keep their Table-4 defaults);
+//! * [`workloads`] — canonical per-backend calibration graphs, shared
+//!   by the CI golden-model regression and real calibration runs;
+//! * [`validate_profile`] — the honesty gate: re-simulate each trace's
+//!   reconstructed workload under the default and the fitted model
+//!   (the same DES behind
+//!   [`compare_backends`](crate::trace::compare_backends)) and compare
+//!   both against the measured makespan; `threesched calibrate`
+//!   refuses to emit a profile that does not lower the mean error.
+
+pub mod fit;
+pub mod profile;
+pub mod robust;
+pub mod workloads;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::metg::harness::TextTable;
+use crate::metg::simmodels::Tool;
+use crate::substrate::cluster::costs::CostModel;
+use crate::trace::samples::graph_from_trace;
+use crate::trace::sim::simulate_workflow;
+use crate::trace::Tracer;
+
+pub use fit::{classify_trace, fit_traces, Calibration, ClassifiedTrace, ParamEstimate};
+pub use profile::{CalibrationProfile, PROFILE_VERSION};
+pub use robust::Estimate;
+
+/// One trace's prediction error under the default and fitted models.
+#[derive(Clone, Debug)]
+pub struct ValidationRow {
+    pub source: String,
+    pub tool: Tool,
+    pub ranks: usize,
+    pub measured_s: f64,
+    /// |DES(default) − measured| / measured
+    pub err_default: f64,
+    /// |DES(fitted) − measured| / measured
+    pub err_fitted: f64,
+}
+
+/// Before/after cross-validation of a fitted profile.
+#[derive(Clone, Debug)]
+pub struct Validation {
+    pub rows: Vec<ValidationRow>,
+    pub mean_err_default: f64,
+    pub mean_err_fitted: f64,
+}
+
+impl Validation {
+    /// The fitted model predicts the measured traces strictly better.
+    pub fn improved(&self) -> bool {
+        self.mean_err_fitted < self.mean_err_default
+    }
+}
+
+/// Cross-validate `profile` against the traces it was fitted from (or
+/// any other classified traces): reconstruct each trace's workload
+/// ([`graph_from_trace`]), DES-simulate it under the default and the
+/// fitted model at the trace's own parallelism, and score each model by
+/// relative makespan error against the measured trace.  `seed` drives
+/// the validation DES noise and should differ from any generation seed.
+pub fn validate_profile(
+    traces: &[ClassifiedTrace],
+    base: &CostModel,
+    profile: &CalibrationProfile,
+    seed: u64,
+) -> Result<Validation> {
+    if traces.is_empty() {
+        bail!("no traces to validate against");
+    }
+    let fitted = base.clone().with_overrides(&profile.overrides);
+    let mut rows = Vec::with_capacity(traces.len());
+    for t in traces {
+        if !(t.makespan_s.is_finite() && t.makespan_s > 0.0) {
+            bail!("trace {:?} has no usable makespan ({})", t.source, t.makespan_s);
+        }
+        let g = graph_from_trace(&t.source, &t.events)
+            .with_context(|| format!("reconstructing workload of {:?}", t.source))?;
+        if g.is_empty() {
+            bail!("trace {:?} contains no finished tasks to validate against", t.source);
+        }
+        // only the trace's own backend matters here, so simulate it
+        // directly (the same DES `trace compare` runs for all three)
+        let err_of = |m: &CostModel| -> Result<f64> {
+            let sim = simulate_workflow(t.tool, &g, m, t.ranks, seed, &Tracer::disabled())
+                .with_context(|| format!("simulating {:?} under a candidate model", t.source))?;
+            Ok((sim.makespan - t.makespan_s).abs() / t.makespan_s)
+        };
+        rows.push(ValidationRow {
+            source: t.source.clone(),
+            tool: t.tool,
+            ranks: t.ranks,
+            measured_s: t.makespan_s,
+            err_default: err_of(base)?,
+            err_fitted: err_of(&fitted)?,
+        });
+    }
+    let n = rows.len() as f64;
+    Ok(Validation {
+        mean_err_default: rows.iter().map(|r| r.err_default).sum::<f64>() / n,
+        mean_err_fitted: rows.iter().map(|r| r.err_fitted).sum::<f64>() / n,
+        rows,
+    })
+}
+
+/// Signed adaptive time/value formatting (fitted constants span
+/// microseconds to seconds; slopes and intercepts may be negative).
+fn fmt_val(v: f64) -> String {
+    let (sign, a) = if v < 0.0 { ("-", -v) } else { ("", v) };
+    let body = if a == 0.0 {
+        "0".to_string()
+    } else if a >= 1.0 {
+        format!("{a:.3}s")
+    } else if a >= 1e-3 {
+        format!("{:.3}ms", a * 1e3)
+    } else {
+        format!("{:.2}us", a * 1e6)
+    };
+    format!("{sign}{body}")
+}
+
+/// Human-facing fit report (the `threesched calibrate` body).
+pub fn render_calibration(cal: &Calibration) -> String {
+    let mut t = TextTable::new(&[
+        "parameter",
+        "backend",
+        "default",
+        "fitted",
+        "change",
+        "+-95%",
+        "samples",
+        "rejected",
+    ]);
+    for e in &cal.estimates {
+        let change = if e.default.abs() > 0.0 {
+            format!("{:+.1}%", 100.0 * (e.estimate.value - e.default) / e.default.abs())
+        } else {
+            "-".into()
+        };
+        t.row(vec![
+            e.param.into(),
+            e.tool.name().into(),
+            fmt_val(e.default),
+            fmt_val(e.estimate.value),
+            change,
+            fmt_val(e.estimate.ci95),
+            e.estimate.n.to_string(),
+            e.estimate.rejected.to_string(),
+        ]);
+    }
+    let mut out = format!("calibration fit ({})\n{}", cal.profile.source, t.render());
+    if !cal.notes.is_empty() {
+        out.push_str("notes:\n");
+        for n in &cal.notes {
+            out.push_str(&format!("  - {n}\n"));
+        }
+    }
+    out
+}
+
+/// Human-facing before/after table (the `calibrate --report` body).
+pub fn render_validation(v: &Validation) -> String {
+    let mut t = TextTable::new(&[
+        "trace",
+        "backend",
+        "ranks",
+        "measured",
+        "err(default)",
+        "err(fitted)",
+    ]);
+    for r in &v.rows {
+        t.row(vec![
+            r.source.clone(),
+            r.tool.name().into(),
+            r.ranks.to_string(),
+            fmt_val(r.measured_s),
+            format!("{:.2}%", 100.0 * r.err_default),
+            format!("{:.2}%", 100.0 * r.err_fitted),
+        ]);
+    }
+    format!(
+        "cross-validation: DES under each model vs measured makespan\n{}\
+         mean relative makespan error: default {:.2}% -> fitted {:.2}%  [{}]\n",
+        t.render(),
+        100.0 * v.mean_err_default,
+        100.0 * v.mean_err_fitted,
+        if v.improved() { "improved" } else { "NOT improved" }
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn perturbed() -> CostModel {
+        workloads::perturbed_model()
+    }
+
+    fn golden_traces(m: &CostModel, seed: u64) -> Vec<ClassifiedTrace> {
+        workloads::standard()
+            .iter()
+            .map(|run| {
+                let (source, events) = workloads::simulate(run, m, seed).unwrap();
+                classify_trace(&source, events, None).unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fitted_profile_validates_better_than_defaults() {
+        let base = CostModel::paper();
+        let traces = golden_traces(&perturbed(), 42);
+        let cal = fit_traces(&traces, &base).unwrap();
+        let v = validate_profile(&traces, &base, &cal.profile, 1234).unwrap();
+        assert!(
+            v.improved(),
+            "mean err default {:.3}% vs fitted {:.3}%\n{}",
+            100.0 * v.mean_err_default,
+            100.0 * v.mean_err_fitted,
+            render_validation(&v)
+        );
+        // the perturbation-dominated backends must improve individually
+        for tool in [Tool::Pmake, Tool::Dwork] {
+            let r = v.rows.iter().find(|r| r.tool == tool).unwrap();
+            assert!(
+                r.err_fitted < r.err_default,
+                "{}: fitted {:.3}% vs default {:.3}%",
+                tool.name(),
+                100.0 * r.err_fitted,
+                100.0 * r.err_default
+            );
+        }
+    }
+
+    #[test]
+    fn unperturbed_traces_validate_near_zero_either_way() {
+        // fitting traces generated by the default model must not make
+        // things worse: the profile reproduces the defaults
+        let base = CostModel::paper();
+        let traces = golden_traces(&base, 7);
+        let cal = fit_traces(&traces, &base).unwrap();
+        let fitted = cal.profile.model();
+        assert!((fitted.steal_rtt - base.steal_rtt).abs() / base.steal_rtt < 0.1);
+        let v = validate_profile(&traces, &base, &cal.profile, 99).unwrap();
+        assert!(v.mean_err_fitted < 0.10, "{}", render_validation(&v));
+    }
+
+    #[test]
+    fn renders_mention_every_fitted_param() {
+        let base = CostModel::paper();
+        let traces = golden_traces(&perturbed(), 5);
+        let cal = fit_traces(&traces, &base).unwrap();
+        let txt = render_calibration(&cal);
+        for p in ["steal_rtt", "gumbel_beta_per_task", "jsrun_a"] {
+            assert!(txt.contains(p), "missing {p} in:\n{txt}");
+        }
+        let v = validate_profile(&traces, &base, &cal.profile, 11).unwrap();
+        let txt = render_validation(&v);
+        assert!(txt.contains("mean relative makespan error"), "{txt}");
+        for tool in Tool::ALL {
+            assert!(txt.contains(tool.name()), "{txt}");
+        }
+    }
+
+    #[test]
+    fn validation_rejects_empty_and_degenerate_input() {
+        let base = CostModel::paper();
+        assert!(validate_profile(&[], &base, &CalibrationProfile::new(""), 1).is_err());
+        let t = classify_trace("des:dwork", Vec::new(), Some(4)).unwrap();
+        assert!(validate_profile(&[t], &base, &CalibrationProfile::new(""), 1).is_err());
+    }
+
+    #[test]
+    fn fmt_val_covers_ranges_and_sign() {
+        assert_eq!(fmt_val(0.0), "0");
+        assert_eq!(fmt_val(2.5), "2.500s");
+        assert_eq!(fmt_val(-0.002), "-2.000ms");
+        assert_eq!(fmt_val(23e-6), "23.00us");
+    }
+}

@@ -1,0 +1,288 @@
+//! The persisted artifact of a calibration run: a versioned, field-wise
+//! set of [`CostModel`] overrides, serialized as TOML (hand-rolled —
+//! serde is unavailable offline, and the format is ten numeric keys).
+//!
+//! A profile never stores a *whole* cost model: parameters a trace
+//! cannot constrain (python import scaling, connection-storm slopes at
+//! rank counts nobody traced) stay `None` and fall back to the Table-4
+//! defaults, so loading a profile fitted from one backend's traces
+//! leaves the other components exactly as the paper calibrated them.
+
+use std::path::Path;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::substrate::cluster::costs::{CostModel, CostOverrides};
+
+/// Bump on any change to the on-disk format.
+pub const PROFILE_VERSION: u32 = 1;
+
+/// A versioned calibration profile: provenance plus field-wise cost
+/// model overrides.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CalibrationProfile {
+    pub version: u32,
+    /// free-text provenance ("fitted from 3 traces by threesched calibrate")
+    pub source: String,
+    pub overrides: CostOverrides,
+}
+
+impl CalibrationProfile {
+    pub fn new(source: impl Into<String>) -> CalibrationProfile {
+        CalibrationProfile {
+            version: PROFILE_VERSION,
+            source: source.into(),
+            overrides: CostOverrides::default(),
+        }
+    }
+
+    /// No field is overridden (fitting found nothing usable).
+    pub fn is_empty(&self) -> bool {
+        self.overrides.fields().iter().all(|(_, v)| v.is_none())
+    }
+
+    /// The cost model this profile denotes: Table-4 defaults with the
+    /// fitted fields swapped in.
+    pub fn model(&self) -> CostModel {
+        CostModel::from_profile(&self.overrides)
+    }
+
+    // ------------------------------------------------------------ TOML
+
+    /// Serialize to TOML.  `f64` values print via Rust's shortest
+    /// round-trip formatting, so parse(to_toml(p)) == p exactly.
+    pub fn to_toml(&self) -> String {
+        let mut out = String::from("# threesched calibration profile\n");
+        out.push_str(&format!("version = {}\n", self.version));
+        out.push_str(&format!("source = \"{}\"\n", toml_escape(&self.source)));
+        out.push_str("\n[cost_model]\n");
+        for (name, v) in self.overrides.fields() {
+            if let Some(x) = v {
+                out.push_str(&format!("{name} = {}\n", fmt_f64(x)));
+            }
+        }
+        out
+    }
+
+    /// Parse the TOML emitted by [`CalibrationProfile::to_toml`].
+    /// Unknown keys are an error (a typo'd override silently falling
+    /// back to the default would defeat the whole subsystem).
+    pub fn parse_toml(text: &str) -> Result<CalibrationProfile> {
+        let mut p = CalibrationProfile { version: 0, ..CalibrationProfile::default() };
+        let mut section = String::new();
+        for (n, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: malformed section header {line:?}", n + 1);
+                };
+                section = name.trim().to_string();
+                if section != "cost_model" {
+                    bail!("line {}: unknown section [{section}]", n + 1);
+                }
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                bail!("line {}: expected key = value, got {line:?}", n + 1);
+            };
+            let (key, value) = (key.trim(), value.trim());
+            match (section.as_str(), key) {
+                ("", "version") => {
+                    p.version = value
+                        .parse()
+                        .with_context(|| format!("line {}: bad version {value:?}", n + 1))?;
+                }
+                ("", "source") => {
+                    let inner = value
+                        .strip_prefix('"')
+                        .and_then(|v| v.strip_suffix('"'))
+                        .with_context(|| format!("line {}: source must be quoted", n + 1))?;
+                    p.source = toml_unescape(inner)?;
+                }
+                ("cost_model", _) => {
+                    let x: f64 = value
+                        .parse()
+                        .with_context(|| format!("line {}: bad number {value:?}", n + 1))?;
+                    if !x.is_finite() {
+                        bail!("line {}: {key} must be finite, got {value:?}", n + 1);
+                    }
+                    if !p.overrides.set(key, x) {
+                        bail!("line {}: unknown cost_model field {key:?}", n + 1);
+                    }
+                }
+                _ => bail!("line {}: unknown key {key:?}", n + 1),
+            }
+        }
+        if p.version != PROFILE_VERSION {
+            bail!(
+                "unsupported calibration profile version {} (want {PROFILE_VERSION})",
+                p.version
+            );
+        }
+        Ok(p)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(parent).with_context(|| format!("creating {parent:?}"))?;
+        }
+        std::fs::write(path, self.to_toml()).with_context(|| format!("writing {path:?}"))
+    }
+
+    pub fn load(path: &Path) -> Result<CalibrationProfile> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Self::parse_toml(&text).with_context(|| format!("parsing {path:?}"))
+    }
+}
+
+/// Shortest round-trip float formatting that stays valid TOML (TOML
+/// floats require a decimal point or exponent; Rust prints `1` for 1.0).
+fn fmt_f64(x: f64) -> String {
+    let s = format!("{x}");
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        s
+    } else {
+        format!("{s}.0")
+    }
+}
+
+fn toml_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn toml_unescape(s: &str) -> Result<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            other => bail!("bad escape \\{other:?} in source string"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prop::check;
+
+    fn sample() -> CalibrationProfile {
+        let mut p = CalibrationProfile::new("unit test");
+        p.overrides.steal_rtt = Some(17.5e-6);
+        p.overrides.jsrun_a = Some(-0.25);
+        p.overrides.gumbel_beta_per_task = Some(1.0625e-4);
+        p
+    }
+
+    #[test]
+    fn toml_roundtrip_exact() {
+        let p = sample();
+        let text = p.to_toml();
+        let q = CalibrationProfile::parse_toml(&text).unwrap();
+        assert_eq!(p, q, "{text}");
+    }
+
+    #[test]
+    fn empty_profile_roundtrips() {
+        let p = CalibrationProfile::new("");
+        assert!(p.is_empty());
+        let q = CalibrationProfile::parse_toml(&p.to_toml()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn model_applies_only_overridden_fields() {
+        let p = sample();
+        let base = CostModel::paper();
+        let m = p.model();
+        assert_eq!(m.steal_rtt, 17.5e-6);
+        assert_eq!(m.jsrun_a, -0.25);
+        assert_eq!(m.alloc, base.alloc, "untouched field keeps the default");
+        assert_eq!(m.conn_b, base.conn_b);
+    }
+
+    #[test]
+    fn unknown_field_rejected() {
+        let text = "version = 1\nsource = \"x\"\n[cost_model]\nwarp_drive = 9.0\n";
+        assert!(CalibrationProfile::parse_toml(text).is_err());
+    }
+
+    #[test]
+    fn unknown_section_rejected() {
+        assert!(CalibrationProfile::parse_toml("version = 1\n[mystery]\nx = 1.0\n").is_err());
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let text = "version = 99\nsource = \"x\"\n";
+        let err = CalibrationProfile::parse_toml(text).unwrap_err();
+        assert!(err.to_string().contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn missing_version_rejected() {
+        assert!(CalibrationProfile::parse_toml("source = \"x\"\n").is_err());
+    }
+
+    #[test]
+    fn non_finite_rejected() {
+        let text = "version = 1\n[cost_model]\nsteal_rtt = NaN\n";
+        assert!(CalibrationProfile::parse_toml(text).is_err());
+        let text = "version = 1\n[cost_model]\nsteal_rtt = inf\n";
+        assert!(CalibrationProfile::parse_toml(text).is_err());
+    }
+
+    #[test]
+    fn source_escaping_roundtrips() {
+        let mut p = CalibrationProfile::new("quo\"te\\slash\nnewline\ttab");
+        p.overrides.alloc = Some(2.0);
+        let q = CalibrationProfile::parse_toml(&p.to_toml()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn prop_serialize_deserialize_identity() {
+        // the satellite property test: arbitrary finite values in every
+        // field (including negatives, subnormal-ish magnitudes, and the
+        // None pattern) survive the TOML round-trip bit-for-bit
+        check("profile toml roundtrip", 200, |g| {
+            let mut p = CalibrationProfile::new("prop");
+            let names: Vec<&'static str> =
+                p.overrides.fields().iter().map(|&(n, _)| n).collect();
+            for name in names {
+                if g.bool(0.7) {
+                    let mag = g.f64(-30.0, 30.0);
+                    let x = g.f64(-1.0, 1.0) * 10f64.powf(mag);
+                    assert!(p.overrides.set(name, x), "unknown field {name}");
+                }
+            }
+            let q = CalibrationProfile::parse_toml(&p.to_toml())
+                .unwrap_or_else(|e| panic!("reparse failed: {e}\n{}", p.to_toml()));
+            assert_eq!(p, q, "{}", p.to_toml());
+        });
+    }
+}

@@ -1,0 +1,235 @@
+//! Robust estimation primitives for trace fitting: median/MAD outlier
+//! rejection, quantile-based scale estimation, Theil–Sen line fitting,
+//! and a mean-with-confidence-interval summary.
+//!
+//! Trace samples are contaminated by design — a dwork launch-gap stream
+//! mixes server-serialized steals (the signal) with idle-period think
+//! time (arbitrarily large), a wall-clock trace picks up GC pauses and
+//! scheduler noise — so every fitter in [`super::fit`] goes through
+//! these instead of raw moments.
+
+/// Median of a sample set (copies + sorts; empty input is a caller bug).
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "median of empty sample set");
+    let mut v = xs.to_vec();
+    v.sort_by(f64::total_cmp);
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Median absolute deviation around `center`.
+pub fn mad(xs: &[f64], center: f64) -> f64 {
+    let devs: Vec<f64> = xs.iter().map(|&x| (x - center).abs()).collect();
+    median(&devs)
+}
+
+/// Quantile by linear interpolation on the sorted sample; `q` in [0, 1].
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty sample set");
+    assert!((0.0..=1.0).contains(&q), "quantile {q} outside [0, 1]");
+    let mut v = xs.to_vec();
+    v.sort_by(f64::total_cmp);
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    v[lo] * (1.0 - frac) + v[hi] * frac
+}
+
+/// Keep samples within `k` MADs of the median (the classical robust
+/// inlier filter; `k = 3.5` is the usual default).  A zero MAD — every
+/// deterministic DES stream lands here — degenerates to keeping only
+/// samples (numerically) equal to the median, which is exactly right:
+/// the majority value IS the signal.
+pub fn inliers(xs: &[f64], k: f64) -> Vec<f64> {
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    let med = median(xs);
+    let spread = mad(xs, med);
+    let tol = if spread > 0.0 { k * spread } else { 1e-9 * med.abs().max(f64::MIN_POSITIVE) };
+    xs.iter().copied().filter(|&x| (x - med).abs() <= tol).collect()
+}
+
+/// A robustly estimated parameter: the value, a 95% confidence
+/// half-width, and the sample accounting behind it.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Estimate {
+    pub value: f64,
+    /// 95% confidence half-width (0 when n < 2)
+    pub ci95: f64,
+    /// inlier samples the value rests on
+    pub n: usize,
+    /// samples rejected as outliers
+    pub rejected: usize,
+}
+
+/// Mean of the MAD-inliers with a normal-theory 95% CI.
+pub fn robust_mean(xs: &[f64], k: f64) -> Option<Estimate> {
+    if xs.is_empty() {
+        return None;
+    }
+    let kept = inliers(xs, k);
+    let n = kept.len();
+    let mean = kept.iter().sum::<f64>() / n as f64;
+    let ci95 = if n >= 2 {
+        let var = kept.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64;
+        1.96 * (var / n as f64).sqrt()
+    } else {
+        0.0
+    };
+    Some(Estimate { value: mean, ci95, n, rejected: xs.len() - n })
+}
+
+/// Gumbel scale from the interdecile range: for `X ~ Gumbel(mu, beta)`,
+/// `Q(0.9) − Q(0.1) = beta · (ln(−ln 0.1) − ln(−ln 0.9))` ≈ 3.0844·beta,
+/// independent of `mu` — so a constant location shift (the task's true
+/// duration) cancels, and the extreme 10% on both sides never enter.
+/// The CI comes from chunked re-estimation (split into `m` blocks,
+/// spread of the per-block values).
+pub fn gumbel_scale(xs: &[f64]) -> Option<Estimate> {
+    const MIN_SAMPLES: usize = 20;
+    if xs.len() < MIN_SAMPLES {
+        return None;
+    }
+    let idr_factor = (-(0.1f64.ln())).ln() - (-(0.9f64.ln())).ln(); // ≈ 3.0844
+    let scale = |s: &[f64]| (quantile(s, 0.9) - quantile(s, 0.1)) / idr_factor;
+    let value = scale(xs);
+    let chunks = (xs.len() / MIN_SAMPLES).clamp(1, 8);
+    let ci95 = if chunks >= 2 {
+        let per: Vec<f64> = xs.chunks(xs.len().div_ceil(chunks)).map(scale).collect();
+        let m = per.len() as f64;
+        let mean = per.iter().sum::<f64>() / m;
+        let var = per.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (m - 1.0);
+        1.96 * (var / m).sqrt()
+    } else {
+        0.0
+    };
+    Some(Estimate { value, ci95, n: xs.len(), rejected: 0 })
+}
+
+/// Theil–Sen line fit `y = a + b·x`: slope is the median of all
+/// pairwise slopes, intercept the median of `y − b·x`.  Breakdown point
+/// ~29%, no leverage-point blowup — the right tool for regressing a
+/// handful of per-trace medians against log-ranks.
+pub fn theil_sen(xs: &[f64], ys: &[f64]) -> Option<(f64, f64)> {
+    assert_eq!(xs.len(), ys.len());
+    if xs.len() < 2 {
+        return None;
+    }
+    let mut slopes = Vec::new();
+    for i in 0..xs.len() {
+        for j in (i + 1)..xs.len() {
+            let dx = xs[j] - xs[i];
+            if dx.abs() > 1e-12 {
+                slopes.push((ys[j] - ys[i]) / dx);
+            }
+        }
+    }
+    if slopes.is_empty() {
+        return None; // all x equal: no slope information
+    }
+    let b = median(&slopes);
+    let residuals: Vec<f64> = xs.iter().zip(ys).map(|(&x, &y)| y - b * x).collect();
+    Some((median(&residuals), b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::rng::Rng;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn mad_of_symmetric_set() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(mad(&xs, 3.0), 1.0);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [0.0, 1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 0.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert!((quantile(&xs, 0.5) - 2.0).abs() < 1e-12);
+        assert!((quantile(&xs, 0.25) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inliers_reject_gross_outliers() {
+        let mut xs = vec![1.0; 20];
+        for (i, x) in xs.iter_mut().enumerate() {
+            *x += (i as f64 - 10.0) * 1e-3;
+        }
+        xs.push(50.0);
+        xs.push(-30.0);
+        let kept = inliers(&xs, 3.5);
+        assert_eq!(kept.len(), 20);
+        assert!(kept.iter().all(|&x| (x - 1.0).abs() < 0.1));
+    }
+
+    #[test]
+    fn inliers_degenerate_spread_keeps_majority_value() {
+        // deterministic DES stream: >half the gaps are exactly the RTT
+        let mut xs = vec![23e-6; 30];
+        xs.extend([1.0, 2.0, 0.5]);
+        let kept = inliers(&xs, 3.5);
+        assert_eq!(kept.len(), 30);
+        assert!(kept.iter().all(|&x| x == 23e-6));
+    }
+
+    #[test]
+    fn robust_mean_recovers_center_with_ci() {
+        let mut xs: Vec<f64> = (0..100).map(|i| 5.0 + ((i % 7) as f64 - 3.0) * 0.01).collect();
+        xs.push(1e6);
+        let e = robust_mean(&xs, 3.5).unwrap();
+        assert!((e.value - 5.0).abs() < 0.02, "{e:?}");
+        assert_eq!(e.rejected, 1);
+        assert!(e.ci95 > 0.0 && e.ci95 < 0.01);
+    }
+
+    #[test]
+    fn gumbel_scale_recovers_beta() {
+        let mut rng = Rng::new(7);
+        let beta = 0.02;
+        // location shifts (the per-task base duration) must cancel
+        let xs: Vec<f64> = (0..4000).map(|_| 1.5 + rng.gumbel(0.0, beta)).collect();
+        let e = gumbel_scale(&xs).unwrap();
+        assert!(
+            (e.value - beta).abs() / beta < 0.08,
+            "beta {} vs true {beta}",
+            e.value
+        );
+        assert!(e.ci95 > 0.0);
+    }
+
+    #[test]
+    fn gumbel_scale_needs_samples() {
+        assert!(gumbel_scale(&[1.0; 10]).is_none());
+    }
+
+    #[test]
+    fn theil_sen_exact_line_with_outlier() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let mut ys: Vec<f64> = xs.iter().map(|x| 2.0 + 0.5 * x).collect();
+        ys[4] = 100.0; // one wrecked point must not move the fit
+        let (a, b) = theil_sen(&xs, &ys).unwrap();
+        assert!((b - 0.5).abs() < 1e-9, "b={b}");
+        assert!((a - 2.0).abs() < 1e-9, "a={a}");
+    }
+
+    #[test]
+    fn theil_sen_degenerate_x() {
+        assert!(theil_sen(&[1.0, 1.0], &[2.0, 3.0]).is_none());
+        assert!(theil_sen(&[1.0], &[2.0]).is_none());
+    }
+}

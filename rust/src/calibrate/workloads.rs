@@ -1,0 +1,142 @@
+//! Canonical calibration workloads: one graph per backend, shaped so
+//! that backend's cost constant dominates its trace and the fitters in
+//! [`super::fit`] see a clean signal.
+//!
+//! * the **pmake chain** is strictly serial, so every hop pays the full
+//!   `jsrun + alloc` launch window with no queueing ambiguity;
+//! * the **dwork farm** is thousands of sub-millisecond tasks, enough
+//!   demand to saturate the serialized server so consecutive launches
+//!   are exactly one steal RTT apart;
+//! * the **mpi-list map** is a flat uniform bulk-synchronous level, so
+//!   compute-duration dispersion is pure straggler (Gumbel) noise.
+//!
+//! The same graphs serve three callers: the CI golden-model regression
+//! (simulate with *known* perturbed constants, fit, assert recovery),
+//! the `calibrate_roundtrip` example, and users producing real
+//! calibration traces with `workflow run --trace`.
+
+use anyhow::Result;
+
+use crate::metg::simmodels::Tool;
+use crate::substrate::cluster::costs::CostModel;
+use crate::trace::sim::simulate_workflow;
+use crate::trace::{TaskEvent, Tracer};
+use crate::workflow::{TaskSpec, WorkflowGraph};
+
+/// One calibration workload: a graph plus the scale to run it at.
+#[derive(Clone, Debug)]
+pub struct CalibrationRun {
+    pub tool: Tool,
+    pub graph: WorkflowGraph,
+    pub ranks: usize,
+}
+
+/// Strictly serial chain of coarse tasks (`seg0 -> seg1 -> …`).
+pub fn pmake_chain(len: usize, est_s: f64) -> WorkflowGraph {
+    let mut g = WorkflowGraph::new("calibrate-pmake-chain");
+    for i in 0..len {
+        let mut t = TaskSpec::new(format!("seg{i}")).est(est_s);
+        if i > 0 {
+            t = t.after(&[&format!("seg{}", i - 1)]);
+        }
+        g.add_task(t).expect("chain task");
+    }
+    g
+}
+
+/// Wide flat farm of coarse tasks — the multi-rank variant for fitting
+/// the launch law's slope (several of these at different rank counts).
+pub fn pmake_wave_farm(n: usize, est_s: f64) -> WorkflowGraph {
+    let mut g = WorkflowGraph::new("calibrate-pmake-farm");
+    for i in 0..n {
+        g.add_task(TaskSpec::new(format!("job{i}")).est(est_s)).expect("farm task");
+    }
+    g
+}
+
+/// Flat farm of tiny independent tasks (server-saturating).
+pub fn dwork_fine_farm(n: usize, est_s: f64) -> WorkflowGraph {
+    let mut g = WorkflowGraph::new("calibrate-dwork-farm");
+    for i in 0..n {
+        g.add_task(TaskSpec::new(format!("t{i}")).est(est_s)).expect("farm task");
+    }
+    g
+}
+
+/// Flat uniform bulk-synchronous map.
+pub fn mpilist_uniform_map(n: usize, est_s: f64) -> WorkflowGraph {
+    let mut g = WorkflowGraph::new("calibrate-mpilist-map");
+    for i in 0..n {
+        g.add_task(TaskSpec::new(format!("k{i}")).est(est_s)).expect("map task");
+    }
+    g
+}
+
+/// The standard three-workload calibration suite, in [`Tool::ALL`]
+/// order: pmake chain (serial, 16×5 s), dwork farm (1536×0.5 ms at 64
+/// workers), mpi-list map (4096×0.1 s at 16 ranks).
+pub fn standard() -> Vec<CalibrationRun> {
+    vec![
+        CalibrationRun { tool: Tool::Pmake, graph: pmake_chain(16, 5.0), ranks: 1 },
+        CalibrationRun { tool: Tool::Dwork, graph: dwork_fine_farm(1536, 5e-4), ranks: 64 },
+        CalibrationRun { tool: Tool::MpiList, graph: mpilist_uniform_map(4096, 0.1), ranks: 16 },
+    ]
+}
+
+/// The golden-model ground truth: Table-4 constants deliberately warped
+/// (a stand-in for "your cluster").  One definition shared by the CI
+/// `calibration-regression` job, the `calibrate_roundtrip` example, and
+/// the unit tests, so every golden check asserts the same truth.
+pub fn perturbed_model() -> CostModel {
+    let mut m = CostModel::paper();
+    m.jsrun_a *= 1.7;
+    m.alloc *= 1.4;
+    m.steal_rtt *= 2.2;
+    m.gumbel_beta_per_task *= 2.5;
+    m
+}
+
+/// DES-simulate one calibration run under `m` and return the trace as
+/// (source label, events) — exactly what `trace::write_trace` persists
+/// and `threesched calibrate` reads back.
+pub fn simulate(run: &CalibrationRun, m: &CostModel, seed: u64) -> Result<(String, Vec<TaskEvent>)> {
+    let tracer = Tracer::memory();
+    simulate_workflow(run.tool, &run.graph, m, run.ranks, seed, &tracer)?;
+    Ok((format!("des:{}", run.tool.name()), tracer.drain()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::validate;
+
+    #[test]
+    fn standard_suite_covers_all_backends_in_order() {
+        let runs = standard();
+        assert_eq!(runs.len(), 3);
+        for (run, tool) in runs.iter().zip(Tool::ALL) {
+            assert_eq!(run.tool, tool);
+            run.graph.validate().unwrap();
+            assert!(run.ranks >= 1);
+        }
+    }
+
+    #[test]
+    fn simulated_traces_are_wellformed_and_labeled() {
+        let m = CostModel::paper();
+        for run in standard() {
+            let (source, events) = simulate(&run, &m, 3).unwrap();
+            assert!(source.starts_with("des:"));
+            validate(&events).unwrap_or_else(|e| panic!("{source}: {e}"));
+            assert!(!events.is_empty());
+        }
+    }
+
+    #[test]
+    fn chain_is_serial() {
+        let g = pmake_chain(5, 1.0);
+        let (stats, _) = g.analyze().unwrap();
+        assert_eq!(stats.depth, 5);
+        assert_eq!(stats.width, 1);
+    }
+}

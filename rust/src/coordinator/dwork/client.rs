@@ -27,8 +27,9 @@ use super::messages::{RefusalCode, Request, Response, StatusInfo, TaskMsg};
 /// A server-side error surfaced through the typed client.  Downcast the
 /// `anyhow::Error` chain to this type to reach the machine-readable
 /// refusal `code`; it is absent for non-Create errors and on replies
-/// from pre-code hubs (whose message text still carries the
-/// `ERR_MARKER_*` strings as the compatibility fallback).
+/// from pre-code hubs (which current submitters no longer accommodate —
+/// the `ERR_MARKER_*` string fallback is gone after its one-version
+/// compatibility window).
 #[derive(Debug)]
 pub struct ServerError {
     pub code: Option<RefusalCode>,

@@ -174,8 +174,9 @@ impl Request {
 /// optional field on [`Response::Err`] (same wire kind), so pre-code
 /// clients still read the message text and pre-code servers simply omit
 /// it — the version-proof replacement for substring-matching the
-/// `ERR_MARKER_*` strings (which stay in the text for one more version
-/// as a compatibility fallback).
+/// `ERR_MARKER_*` strings.  The submitter-side string fallback is gone
+/// (its one-version window elapsed); the markers remain in the message
+/// text purely for pre-code clients.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RefusalCode {
     /// the task already exists (a replayed Create — the refusal IS the ack)

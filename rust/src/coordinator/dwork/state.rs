@@ -23,12 +23,12 @@ use crate::trace::{EventKind, Tracer};
 use super::messages::{RefusalCode, StatusInfo, TaskMsg};
 
 /// Stable machine-readable markers embedded in Create refusal messages.
-/// Since the typed-refusal protocol ([`RefusalCode`] on the wire) these
-/// are a *compatibility fallback* only: the remote submitter
-/// (`workflow::run::submit_dwork_remote`) prefers the code and falls
-/// back to matching these strings against pre-code hubs.  Keep them in
-/// the text for one more version; reword only together with that
-/// matcher and the pinning tests below.
+/// The typed-refusal protocol ([`RefusalCode`] on the wire) is the only
+/// classification our own submitter reads — its string fallback was
+/// dropped after the one-version compatibility window — but the markers
+/// stay in the message text for *pre-code clients* (old binaries
+/// substring-matching a new hub's refusals).  Reword only together with
+/// the pinning tests below.
 pub const ERR_MARKER_DUPLICATE: &str = "already exists";
 pub const ERR_MARKER_DEP_ERRORED: &str = "error state";
 
@@ -653,8 +653,8 @@ mod tests {
         s.create(t("a"), &[]).unwrap();
         let err = s.create(t("a"), &[]).unwrap_err();
         assert_eq!(err.code, RefusalCode::Duplicate);
-        // compat fallback: pre-code clients still match this exact phrase
-        // (workflow::run::submit_dwork_remote) — reword both together
+        // compat: the server keeps emitting this exact phrase for
+        // pre-code clients (our own submitter reads only the typed code)
         assert!(err.to_string().contains("already exists"), "{err}");
     }
 
@@ -666,8 +666,8 @@ mod tests {
         s.complete("w", "bad", false).unwrap();
         let err = s.create(t("late"), &["bad".into()]).unwrap_err();
         assert_eq!(err.code, RefusalCode::DepErrored);
-        // compat fallback: pre-code clients still match this exact phrase
-        // (workflow::run::submit_dwork_remote) — reword both together
+        // compat: the server keeps emitting this exact phrase for
+        // pre-code clients (our own submitter reads only the typed code)
         assert!(err.to_string().contains("error state"), "{err}");
     }
 

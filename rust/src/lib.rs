@@ -44,7 +44,16 @@
 //! threesched workflow lower --file wf.yaml --coordinator pmake
 //! threesched workflow run   --file wf.yaml --coordinator auto
 //! ```
+//!
+//! The [`trace`] subsystem records per-task lifecycle telemetry from
+//! every execution layer (real and simulated) and cross-validates the
+//! selector's predictions against DES and measured makespans; the
+//! [`calibrate`] subsystem closes that loop, fitting the cost model's
+//! constants from measured traces into a versioned profile that
+//! `workflow plan|run --calibration` loads in place of the Table-4
+//! defaults.
 
+pub mod calibrate;
 pub mod coordinator;
 pub mod metg;
 pub mod runtime;

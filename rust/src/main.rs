@@ -14,6 +14,9 @@
 //!              METG-based adaptive coordinator selection
 //!   trace    — report | compare: Fig-5-style breakdowns over lifecycle
 //!              traces, and selector-vs-DES-vs-measured cross-validation
+//!   calibrate — fit the CostModel from measured traces into a profile
+//!              that workflow plan|run and trace compare load with
+//!              --calibration in place of the Table-4 defaults
 //!
 //! Run with no args for usage.
 
@@ -22,6 +25,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context as _, Result};
 
+use threesched::calibrate::{self, CalibrationProfile};
 use threesched::coordinator::dwork::{self, Client, TaskMsg};
 use threesched::coordinator::pmake;
 use threesched::metg::harness::{metg_sweep, render_metg, PAPER_RANKS};
@@ -56,16 +60,24 @@ commands:
   dwork drain   --connect addr:port    (no-op worker: waits for + completes tasks)
   task    --artifact atb_128 [--seed S] [--out file] [--artifacts-dir D]
   metg    [--rtt-us X]
-  workflow plan   --file wf.yaml [--ranks N]     (stats + selector verdict)
+  workflow plan   --file wf.yaml [--ranks N] [--calibration profile.toml]
+                  (stats + selector verdict)
   workflow lower  --file wf.yaml --coordinator pmake|dwork|mpilist
                   [--out dir] [--ranks N]
   workflow run    --file wf.yaml [--coordinator auto|pmake|dwork|mpilist]
                   [--procs N] [--dir D] [--trace out.jsonl]
                   [--connect addr:port] [--poll-ms MS]
+                  [--calibration profile.toml]
   workflow submit --file wf.yaml --connect addr:port   (ingest + detach)
   trace report    --file trace.jsonl      (Fig-5-style time breakdown)
   trace compare   --file wf.yaml [--ranks N] [--seed S] [--trace t.jsonl]
+                  [--calibration profile.toml]
                   (selector-predicted vs DES-simulated vs measured makespan)
+  calibrate <trace.jsonl...> [--out profile.toml] [--report] [--ranks N]
+                  [--seed S]
+                  (fit the cost model from measured lifecycle traces;
+                   --out refuses a profile that cross-validates worse
+                   than the Table-4 defaults)
 ";
 
 fn main() {
@@ -94,6 +106,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "metg" => cmd_metg(rest),
         "workflow" => cmd_workflow(rest),
         "trace" => cmd_trace(rest),
+        "calibrate" => cmd_calibrate(rest),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -522,6 +535,19 @@ fn cmd_task(argv: &[String]) -> Result<()> {
 
 // ---------------------------------------------------------------- workflow
 
+/// The cost model a `--calibration profile.toml` flag denotes: Table-4
+/// defaults when absent, the profile's fitted overrides otherwise.
+fn load_model(calibration: Option<&str>) -> Result<CostModel> {
+    match calibration {
+        None => Ok(CostModel::paper()),
+        Some(p) => {
+            let prof = CalibrationProfile::load(Path::new(p))?;
+            println!("calibration: {p} ({})", prof.source);
+            Ok(prof.model())
+        }
+    }
+}
+
 fn cmd_workflow(argv: &[String]) -> Result<()> {
     let Some(verb) = argv.first().map(String::as_str) else {
         bail!("workflow needs a verb: plan | lower | run | submit\n{USAGE}");
@@ -532,11 +558,13 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
             let spec = [
                 Flag { name: "file", help: "workflow yaml", takes_value: true, default: Some("workflow.yaml") },
                 Flag { name: "ranks", help: "target scale for the selector", takes_value: true, default: Some("864") },
+                Flag { name: "calibration", help: "fitted cost-model profile (from `threesched calibrate`)", takes_value: true, default: None },
             ];
             let args = parse(rest, &spec)?;
             let g = workflow::parse_workflow_file(Path::new(args.get("file").unwrap()))?;
             let ranks = args.get_usize("ranks", 864)?;
-            let rec = workflow::select(&g, &CostModel::paper(), ranks)?;
+            let m = load_model(args.get("calibration"))?;
+            let rec = workflow::select(&g, &m, ranks)?;
             print!("workflow {:?}\n{}", g.name, rec.render());
             Ok(())
         }
@@ -611,6 +639,7 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
                 Flag { name: "connect", help: "remote dhub address (implies dwork; workers join separately)", takes_value: true, default: None },
                 Flag { name: "poll-ms", help: "status poll interval with --connect, milliseconds", takes_value: true, default: Some("50") },
                 Flag { name: "trace", help: "write a lifecycle trace (JSONL) after the run", takes_value: true, default: None },
+                Flag { name: "calibration", help: "fitted cost-model profile for the auto selector", takes_value: true, default: None },
             ];
             let args = parse(rest, &spec)?;
             let g = workflow::parse_workflow_file(Path::new(args.get("file").unwrap()))?;
@@ -621,6 +650,13 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
             let trace_path = args.get("trace").map(PathBuf::from);
             let tracer =
                 if trace_path.is_some() { Tracer::memory() } else { Tracer::default() };
+            if args.get("calibration").is_some()
+                && (args.get("connect").is_some() || args.get("coordinator") != Some("auto"))
+            {
+                eprintln!(
+                    "warning: --calibration only affects the auto selector; ignored here"
+                );
+            }
             let summary = match (args.get("connect"), args.get("coordinator").unwrap()) {
                 (Some(addr), "dwork" | "auto") => {
                     // execution happens wherever the worker pools run:
@@ -653,8 +689,9 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
                     bail!("--connect is a dwork deployment (got --coordinator {other})")
                 }
                 (None, "auto") => {
+                    let m = load_model(args.get("calibration"))?;
                     let (rec, summary) =
-                        workflow::run_auto_traced(&g, &CostModel::paper(), procs, dir, &tracer)?;
+                        workflow::run_auto_traced(&g, &m, procs, dir, &tracer)?;
                     print!("{}", rec.render());
                     summary
                 }
@@ -728,6 +765,7 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
                 Flag { name: "ranks", help: "parallelism for prediction + simulation", takes_value: true, default: Some("864") },
                 Flag { name: "seed", help: "DES noise seed", takes_value: true, default: Some("42") },
                 Flag { name: "trace", help: "measured trace JSONL to lay alongside (optional)", takes_value: true, default: None },
+                Flag { name: "calibration", help: "fitted cost-model profile (from `threesched calibrate`)", takes_value: true, default: None },
             ];
             let args = parse(rest, &spec)?;
             let g = workflow::parse_workflow_file(Path::new(args.get("file").unwrap()))?;
@@ -744,13 +782,80 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
                 }
                 measured.push((source, trace::makespan(&events)));
             }
-            let rows =
-                trace::compare_backends(&g, &CostModel::paper(), ranks, seed, &measured)?;
+            let m = load_model(args.get("calibration"))?;
+            let rows = trace::compare_backends(&g, &m, ranks, seed, &measured)?;
             print!("{}", trace::render_comparison(&g.name, ranks, &rows));
             Ok(())
         }
         other => bail!("unknown trace verb {other:?} (report | compare)"),
     }
+}
+
+// --------------------------------------------------------------- calibrate
+
+fn cmd_calibrate(argv: &[String]) -> Result<()> {
+    let spec = [
+        Flag { name: "out", help: "write the fitted profile here (TOML)", takes_value: true, default: None },
+        Flag { name: "report", help: "print the full before/after cross-validation table", takes_value: false, default: None },
+        Flag { name: "ranks", help: "force the per-trace parallelism instead of inferring it", takes_value: true, default: None },
+        Flag { name: "seed", help: "DES seed for cross-validation", takes_value: true, default: Some("1234") },
+    ];
+    let args = parse(argv, &spec)?;
+    if args.positional.is_empty() {
+        bail!("calibrate needs at least one trace JSONL file\n{USAGE}");
+    }
+    let ranks_override = match args.get("ranks") {
+        Some(_) => Some(args.get_usize("ranks", 0)?.max(1)),
+        None => None,
+    };
+    let base = CostModel::paper();
+    let mut traces = Vec::new();
+    for p in &args.positional {
+        let (source, events) = trace::read_trace(Path::new(p))?;
+        // an interrupted trace still carries usable samples; fit what is
+        // there and let the CIs reflect the thinner evidence
+        if let Err(e) = trace::validate(&events) {
+            eprintln!(
+                "warning: trace {p:?} is incomplete or malformed ({e}); \
+                 fitting the events present"
+            );
+        }
+        traces.push(
+            calibrate::classify_trace(&source, events, ranks_override)
+                .with_context(|| format!("classifying {p:?}"))?,
+        );
+    }
+    let cal = calibrate::fit_traces(&traces, &base)?;
+    print!("{}", calibrate::render_calibration(&cal));
+    let seed = args.get_usize("seed", 1234)? as u64;
+    let v = calibrate::validate_profile(&traces, &base, &cal.profile, seed)?;
+    if args.has("report") {
+        print!("{}", calibrate::render_validation(&v));
+    } else {
+        println!(
+            "mean relative makespan error: default {:.2}% -> fitted {:.2}% \
+             (--report for the per-trace table)",
+            100.0 * v.mean_err_default,
+            100.0 * v.mean_err_fitted
+        );
+    }
+    if let Some(out) = args.get("out") {
+        if !v.improved() {
+            bail!(
+                "refusing to write {out:?}: the fitted profile does not lower the mean \
+                 prediction error on these traces (default {:.2}%, fitted {:.2}%) — \
+                 record longer or cleaner calibration runs and refit",
+                100.0 * v.mean_err_default,
+                100.0 * v.mean_err_fitted
+            );
+        }
+        cal.profile.save(Path::new(out))?;
+        println!(
+            "wrote {out} (use with `threesched workflow plan --calibration {out}` or \
+             `trace compare --calibration {out}`)"
+        );
+    }
+    Ok(())
 }
 
 // -------------------------------------------------------------------- metg

@@ -49,6 +49,63 @@ pub struct CostModel {
     pub conn_b: f64,
 }
 
+/// Field-wise overrides for a [`CostModel`]: every parameter optional,
+/// `None` meaning "keep the base value".  This is the hand-off format of
+/// the trace-fitting subsystem ([`crate::calibrate`]): a calibration
+/// profile carries one of these, and only the parameters a measured
+/// trace actually constrained are set.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostOverrides {
+    pub jsrun_a: Option<f64>,
+    pub jsrun_b: Option<f64>,
+    pub alloc: Option<f64>,
+    pub steal_rtt: Option<f64>,
+    pub gumbel_beta_per_task: Option<f64>,
+    pub py_alloc: Option<f64>,
+    pub imp_a: Option<f64>,
+    pub imp_b: Option<f64>,
+    pub conn_a: Option<f64>,
+    pub conn_b: Option<f64>,
+}
+
+impl CostOverrides {
+    /// Stable (name, value) view over every field — the single source of
+    /// truth profile serialization and reports iterate.
+    pub fn fields(&self) -> [(&'static str, Option<f64>); 10] {
+        [
+            ("jsrun_a", self.jsrun_a),
+            ("jsrun_b", self.jsrun_b),
+            ("alloc", self.alloc),
+            ("steal_rtt", self.steal_rtt),
+            ("gumbel_beta_per_task", self.gumbel_beta_per_task),
+            ("py_alloc", self.py_alloc),
+            ("imp_a", self.imp_a),
+            ("imp_b", self.imp_b),
+            ("conn_a", self.conn_a),
+            ("conn_b", self.conn_b),
+        ]
+    }
+
+    /// Set a field by name; false when the name is unknown.
+    pub fn set(&mut self, name: &str, value: f64) -> bool {
+        let slot = match name {
+            "jsrun_a" => &mut self.jsrun_a,
+            "jsrun_b" => &mut self.jsrun_b,
+            "alloc" => &mut self.alloc,
+            "steal_rtt" => &mut self.steal_rtt,
+            "gumbel_beta_per_task" => &mut self.gumbel_beta_per_task,
+            "py_alloc" => &mut self.py_alloc,
+            "imp_a" => &mut self.imp_a,
+            "imp_b" => &mut self.imp_b,
+            "conn_a" => &mut self.conn_a,
+            "conn_b" => &mut self.conn_b,
+            _ => return false,
+        };
+        *slot = Some(value);
+        true
+    }
+}
+
 impl CostModel {
     /// Calibrate every component against the Table 4 anchors.
     pub fn paper() -> CostModel {
@@ -87,6 +144,49 @@ impl CostModel {
     pub fn with_measured_rtt(mut self, rtt_s: f64) -> CostModel {
         self.steal_rtt = rtt_s;
         self
+    }
+
+    /// Apply field-wise overrides: every `Some` replaces the base value,
+    /// every `None` keeps it.
+    pub fn with_overrides(mut self, o: &CostOverrides) -> CostModel {
+        if let Some(v) = o.jsrun_a {
+            self.jsrun_a = v;
+        }
+        if let Some(v) = o.jsrun_b {
+            self.jsrun_b = v;
+        }
+        if let Some(v) = o.alloc {
+            self.alloc = v;
+        }
+        if let Some(v) = o.steal_rtt {
+            self.steal_rtt = v;
+        }
+        if let Some(v) = o.gumbel_beta_per_task {
+            self.gumbel_beta_per_task = v;
+        }
+        if let Some(v) = o.py_alloc {
+            self.py_alloc = v;
+        }
+        if let Some(v) = o.imp_a {
+            self.imp_a = v;
+        }
+        if let Some(v) = o.imp_b {
+            self.imp_b = v;
+        }
+        if let Some(v) = o.conn_a {
+            self.conn_a = v;
+        }
+        if let Some(v) = o.conn_b {
+            self.conn_b = v;
+        }
+        self
+    }
+
+    /// The model a calibration profile denotes: Table-4 defaults with
+    /// the fitted fields swapped in (see
+    /// [`crate::calibrate::CalibrationProfile::model`]).
+    pub fn from_profile(o: &CostOverrides) -> CostModel {
+        CostModel::paper().with_overrides(o)
     }
 
     /// Job-step launch time at P ranks.
@@ -229,5 +329,29 @@ mod tests {
     fn measured_rtt_override() {
         let m = CostModel::paper().with_measured_rtt(10e-6);
         assert!((m.metg_dwork(1000) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overrides_apply_field_wise() {
+        let base = CostModel::paper();
+        let mut o = CostOverrides::default();
+        assert!(o.set("steal_rtt", 11e-6));
+        assert!(o.set("jsrun_b", 0.5));
+        assert!(!o.set("warp_drive", 1.0));
+        let m = CostModel::from_profile(&o);
+        assert_eq!(m.steal_rtt, 11e-6);
+        assert_eq!(m.jsrun_b, 0.5);
+        assert_eq!(m.alloc, base.alloc);
+        assert_eq!(m.jsrun_a, base.jsrun_a);
+        assert_eq!(m.gumbel_beta_per_task, base.gumbel_beta_per_task);
+    }
+
+    #[test]
+    fn overrides_fields_view_matches_setters() {
+        let mut o = CostOverrides::default();
+        for (name, _) in CostOverrides::default().fields() {
+            assert!(o.set(name, 1.25), "{name}");
+        }
+        assert!(o.fields().iter().all(|&(_, v)| v == Some(1.25)));
     }
 }

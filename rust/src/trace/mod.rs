@@ -17,7 +17,10 @@
 //!   time, Table-4 cost model) emitting the same events;
 //! * [`compare`] — selector-predicted vs DES-simulated vs measured
 //!   makespan per back-end, with relative errors — the cross-validation
-//!   loop the adaptive selector's cost model rests on.
+//!   loop the adaptive selector's cost model rests on;
+//! * [`samples`] — per-task phase samples (queue wait, launch window,
+//!   compute duration, launch gaps) plus workload reconstruction, the
+//!   extraction layer [`crate::calibrate`] fits the cost model against.
 //!
 //! Design constraints, in order: the *disabled* tracer must be a true
 //! no-op (no allocation, a single branch — tracing rides inside the
@@ -28,6 +31,7 @@
 
 pub mod compare;
 pub mod report;
+pub mod samples;
 pub mod sim;
 
 use std::io::{Read as _, Write as _};
@@ -39,6 +43,7 @@ use anyhow::{bail, Context as _, Result};
 
 pub use compare::{compare_backends, render_comparison, BackendComparison};
 pub use report::TraceReport;
+pub use samples::{graph_from_trace, PhaseSamples};
 pub use sim::simulate_workflow;
 
 /// Schema marker written in the JSONL header line; bump on any change to

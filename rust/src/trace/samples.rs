@@ -1,0 +1,420 @@
+//! Per-task phase samples extracted from a lifecycle trace — the raw
+//! material the calibration subsystem ([`crate::calibrate`]) fits the
+//! [`CostModel`](crate::substrate::cluster::costs::CostModel) against.
+//!
+//! A trace is a flat stream of [`TaskEvent`]s; a fitter wants *samples*:
+//! every `Ready → Launched` queue wait, every `Launched → Started` launch
+//! window (pmake's jsrun+alloc lives here), every `Started → terminal`
+//! compute duration (the mpi-list straggler noise lives in its
+//! dispersion), the gaps between consecutive `Launched` events (a
+//! saturated dwork server serializes these at exactly one steal RTT),
+//! and the observed parallelism.  This module does the extraction; it
+//! deliberately knows nothing about cost models.
+
+use std::collections::HashMap;
+
+use super::{makespan, EventKind, TaskEvent};
+use crate::workflow::{TaskSpec, WorkflowGraph};
+
+/// Interval samples pulled from one trace.  All values in seconds; one
+/// entry per task *attempt* (a requeue restarts the attempt, exactly as
+/// in [`super::report::TraceReport`]).
+#[derive(Clone, Debug, Default)]
+pub struct PhaseSamples {
+    /// `Ready → Launched` per attempt
+    pub queue_wait: Vec<f64>,
+    /// `Launched → Started` per attempt (pmake: the job-step launch)
+    pub launch: Vec<f64>,
+    /// `Started → Finished/Failed` per attempt (falls back to
+    /// `Launched → terminal` for server-only traces with no `Started`)
+    pub compute: Vec<f64>,
+    /// `Created → Started` first-attempt round-trip per task
+    pub create_to_start: Vec<f64>,
+    /// every `Launched` timestamp, in stream order (NOT sorted: DES
+    /// producers may emit future-dated events early)
+    pub launched_at: Vec<f64>,
+    /// distinct non-empty `who` labels on Launched/Started/terminal
+    pub workers: usize,
+    /// distinct task names
+    pub tasks: usize,
+    /// latest event time
+    pub makespan_s: f64,
+}
+
+impl PhaseSamples {
+    /// Extract samples from an event stream (any producer).
+    pub fn from_events(events: &[TaskEvent]) -> PhaseSamples {
+        #[derive(Default)]
+        struct Cursor {
+            created: Option<f64>,
+            ready: Option<f64>,
+            launched: Option<f64>,
+            started: Option<f64>,
+            saw_start: bool,
+        }
+        let mut out = PhaseSamples { makespan_s: makespan(events), ..PhaseSamples::default() };
+        let mut cursors: HashMap<&str, Cursor> = HashMap::new();
+        let mut whos: std::collections::HashSet<&str> = Default::default();
+        for ev in events {
+            if !ev.who.is_empty()
+                && matches!(
+                    ev.kind,
+                    EventKind::Launched
+                        | EventKind::Started
+                        | EventKind::Finished
+                        | EventKind::Failed
+                )
+            {
+                whos.insert(&ev.who);
+            }
+            let c = cursors.entry(&ev.task).or_default();
+            match ev.kind {
+                EventKind::Created => c.created = Some(ev.t),
+                EventKind::Ready => c.ready = Some(ev.t),
+                EventKind::Launched => {
+                    c.launched = Some(ev.t);
+                    out.launched_at.push(ev.t);
+                    if let Some(r) = c.ready {
+                        out.queue_wait.push(ev.t - r);
+                    }
+                }
+                EventKind::Started => {
+                    c.started = Some(ev.t);
+                    if let Some(l) = c.launched {
+                        out.launch.push(ev.t - l);
+                    }
+                    if let (Some(cr), false) = (c.created, c.saw_start) {
+                        out.create_to_start.push(ev.t - cr);
+                    }
+                    c.saw_start = true;
+                }
+                EventKind::Finished | EventKind::Failed => {
+                    if let Some(s) = c.started.or(c.launched) {
+                        out.compute.push(ev.t - s);
+                    }
+                }
+                EventKind::Requeued => {
+                    let created = c.created;
+                    let saw_start = c.saw_start;
+                    *c = Cursor { created, saw_start, ..Cursor::default() };
+                }
+            }
+        }
+        out.tasks = cursors.len();
+        out.workers = whos.len();
+        out
+    }
+
+    /// Positive gaps between consecutive `Launched` events in time order.
+    /// On a saturated dwork server these are the steal/complete RTT; on
+    /// an idle one they include think time, which is why fitters apply
+    /// outlier rejection on top.
+    pub fn launch_gaps(&self) -> Vec<f64> {
+        let mut ts = self.launched_at.clone();
+        ts.sort_by(f64::total_cmp);
+        ts.windows(2).map(|w| w[1] - w[0]).filter(|&g| g > 0.0).collect()
+    }
+
+    /// The parallelism this trace ran at.  Per-worker `who` labels
+    /// ("w3", "rank7") count directly; producers that label everything
+    /// with one name (pmake's single managing process) fall back to the
+    /// peak number of simultaneously in-flight tasks.
+    pub fn inferred_parallelism(&self, events: &[TaskEvent]) -> usize {
+        if self.workers > 1 {
+            return self.workers;
+        }
+        peak_in_flight(events).max(1)
+    }
+}
+
+/// Peak number of tasks simultaneously between `Launched` and their
+/// terminal event (a sweep over interval endpoints).
+fn peak_in_flight(events: &[TaskEvent]) -> usize {
+    #[derive(Default)]
+    struct Span {
+        start: Option<f64>,
+        end: Option<f64>,
+    }
+    let mut spans: HashMap<&str, Span> = HashMap::new();
+    for ev in events {
+        let s = spans.entry(&ev.task).or_default();
+        match ev.kind {
+            EventKind::Launched => {
+                if s.start.is_none() {
+                    s.start = Some(ev.t);
+                }
+            }
+            EventKind::Finished | EventKind::Failed => s.end = Some(ev.t),
+            _ => {}
+        }
+    }
+    // +1 at each start, -1 at each end; ends sort before starts at equal
+    // times so back-to-back serial tasks don't read as concurrent
+    let mut deltas: Vec<(f64, i32)> = Vec::new();
+    for s in spans.values() {
+        if let (Some(a), Some(b)) = (s.start, s.end) {
+            deltas.push((a, 1));
+            deltas.push((b, -1));
+        }
+    }
+    deltas.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+    let mut cur = 0i32;
+    let mut peak = 0i32;
+    for (_, d) in deltas {
+        cur += d;
+        peak = peak.max(cur);
+    }
+    peak.max(0) as usize
+}
+
+/// Reconstruct a workload graph from a trace: one task per traced task
+/// with its *measured* compute duration as the estimate, and dependency
+/// edges inferred from timing — a task whose `Ready` coincides with
+/// another task's `Finished` is taken to depend on it.  Exact for DES
+/// traces (a successor becomes Ready at the virtual instant its last
+/// dependency finishes); a heuristic for wall-clock traces.  Tasks that
+/// never reached a terminal event are dropped.
+///
+/// This is what lets `threesched calibrate` cross-validate a fitted
+/// cost model against the very traces it was fitted from, without
+/// requiring the original `workflow.yaml`.
+pub fn graph_from_trace(name: &str, events: &[TaskEvent]) -> anyhow::Result<WorkflowGraph> {
+    #[derive(Clone, Default)]
+    struct Obs {
+        ready: Option<f64>,
+        launched: Option<f64>,
+        started: Option<f64>,
+        finish: Option<f64>,
+        dur: f64,
+    }
+    let mut obs: HashMap<String, Obs> = HashMap::new();
+    let mut order: Vec<String> = Vec::new();
+    for ev in events {
+        if !obs.contains_key(&ev.task) {
+            order.push(ev.task.clone());
+        }
+        let o = obs.entry(ev.task.clone()).or_default();
+        match ev.kind {
+            EventKind::Created => {}
+            EventKind::Ready => o.ready = Some(o.ready.unwrap_or(ev.t)),
+            EventKind::Launched => o.launched = Some(ev.t),
+            EventKind::Started => o.started = Some(ev.t),
+            EventKind::Finished | EventKind::Failed => {
+                o.finish = Some(ev.t);
+                if let Some(s) = o.started.or(o.launched) {
+                    o.dur = (ev.t - s).max(0.0);
+                }
+            }
+            EventKind::Requeued => {
+                o.launched = None;
+                o.started = None;
+            }
+        }
+    }
+    // insertion order: by first-ready time, then finish, then name —
+    // guarantees every inferred dependency precedes its dependent
+    let mut done: Vec<(String, Obs)> = order
+        .into_iter()
+        .filter_map(|n| {
+            let o = obs[&n].clone();
+            o.finish.map(|_| (n, o))
+        })
+        .collect();
+    done.sort_by(|a, b| {
+        let ka = (a.1.ready.unwrap_or(0.0), a.1.finish.unwrap_or(0.0));
+        let kb = (b.1.ready.unwrap_or(0.0), b.1.finish.unwrap_or(0.0));
+        ka.0.total_cmp(&kb.0).then(ka.1.total_cmp(&kb.1)).then(a.0.cmp(&b.0))
+    });
+    // traced names may use characters the IR forbids ("atb_64@3"):
+    // sanitize uniformly, deduplicating collisions deterministically
+    let mut seen: std::collections::HashSet<String> = Default::default();
+    let safe: Vec<String> = done
+        .iter()
+        .map(|(task, _)| {
+            let mut s: String = task
+                .chars()
+                .map(|c| if c.is_ascii_alphanumeric() || "_-.".contains(c) { c } else { '_' })
+                .collect();
+            if s.is_empty() || s.starts_with('-') {
+                s = format!("t{s}");
+            }
+            let mut unique = s.clone();
+            let mut n = 1;
+            while !seen.insert(unique.clone()) {
+                unique = format!("{s}-{n}");
+                n += 1;
+            }
+            unique
+        })
+        .collect();
+    // finish-time index for dependency lookup (binary search instead of
+    // an O(n²) scan: campaign traces reach 10^5 tasks)
+    let mut by_finish: Vec<(f64, usize)> = done
+        .iter()
+        .enumerate()
+        .map(|(j, (_, o))| (o.finish.expect("filtered to finished"), j))
+        .collect();
+    by_finish.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut g = WorkflowGraph::new(name);
+    for (i, (_, o)) in done.iter().enumerate() {
+        let mut spec = TaskSpec::new(safe[i].clone()).est(o.dur);
+        if let Some(r) = o.ready.filter(|&r| r > 0.0) {
+            let eps = 1e-9 * r.abs().max(1.0);
+            let lo = by_finish.partition_point(|&(f, _)| f < r - eps);
+            let deps: Vec<&str> = by_finish[lo..]
+                .iter()
+                .take_while(|&&(f, _)| f <= r + eps)
+                .filter(|&&(_, j)| j < i)
+                .map(|&(_, j)| safe[j].as_str())
+                .collect();
+            if !deps.is_empty() {
+                spec = spec.after(&deps);
+            }
+        }
+        g.add_task(spec)?;
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(task: &str, kind: EventKind, t: f64, who: &str) -> TaskEvent {
+        TaskEvent { task: task.into(), kind, t, who: who.into() }
+    }
+
+    fn lifecycle(task: &str, t0: f64, who: &str) -> Vec<TaskEvent> {
+        vec![
+            ev(task, EventKind::Created, 0.0, ""),
+            ev(task, EventKind::Ready, t0, ""),
+            ev(task, EventKind::Launched, t0 + 0.1, who),
+            ev(task, EventKind::Started, t0 + 0.3, who),
+            ev(task, EventKind::Finished, t0 + 1.3, who),
+        ]
+    }
+
+    #[test]
+    fn intervals_extracted_per_phase() {
+        let mut evs = lifecycle("a", 0.0, "w0");
+        evs.extend(lifecycle("b", 2.0, "w1"));
+        let s = PhaseSamples::from_events(&evs);
+        assert_eq!(s.tasks, 2);
+        assert_eq!(s.workers, 2);
+        assert_eq!(s.queue_wait, vec![0.1, 0.1]);
+        assert_eq!(s.launch, vec![0.2, 0.2]);
+        assert_eq!(s.compute, vec![1.0, 1.0]);
+        assert_eq!(s.create_to_start, vec![0.3, 2.3]);
+        assert!((s.makespan_s - 3.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn launch_gaps_sorted_and_positive() {
+        // stream order deliberately scrambled (DES future-dating)
+        let evs = vec![
+            ev("a", EventKind::Launched, 0.5, "w0"),
+            ev("b", EventKind::Launched, 0.1, "w0"),
+            ev("c", EventKind::Launched, 0.1, "w1"),
+            ev("d", EventKind::Launched, 0.9, "w1"),
+        ];
+        let s = PhaseSamples::from_events(&evs);
+        // gaps: 0.1->0.5 and 0.5->0.9 (the zero gap is dropped)
+        assert_eq!(s.launch_gaps(), vec![0.4, 0.4]);
+    }
+
+    #[test]
+    fn requeue_restarts_the_attempt() {
+        let evs = vec![
+            ev("a", EventKind::Created, 0.0, ""),
+            ev("a", EventKind::Ready, 0.0, ""),
+            ev("a", EventKind::Launched, 0.2, "w0"),
+            ev("a", EventKind::Requeued, 1.0, "w0"),
+            ev("a", EventKind::Ready, 1.0, ""),
+            ev("a", EventKind::Launched, 1.5, "w1"),
+            ev("a", EventKind::Started, 1.6, "w1"),
+            ev("a", EventKind::Finished, 2.6, "w1"),
+        ];
+        let s = PhaseSamples::from_events(&evs);
+        assert_eq!(s.queue_wait, vec![0.2, 0.5]);
+        assert_eq!(s.compute, vec![1.0]);
+        // Created -> first Started, once
+        assert_eq!(s.create_to_start, vec![1.6]);
+    }
+
+    #[test]
+    fn parallelism_from_workers_else_peak_overlap() {
+        let mut evs = lifecycle("a", 0.0, "w0");
+        evs.extend(lifecycle("b", 0.0, "w1"));
+        let s = PhaseSamples::from_events(&evs);
+        assert_eq!(s.inferred_parallelism(&evs), 2);
+
+        // single label ("pmake"): fall back to overlap counting —
+        // a+b overlap, c runs after both
+        let mut evs = lifecycle("a", 0.0, "p");
+        evs.extend(lifecycle("b", 0.0, "p"));
+        evs.extend(lifecycle("c", 5.0, "p"));
+        let s = PhaseSamples::from_events(&evs);
+        assert_eq!(s.inferred_parallelism(&evs), 2);
+    }
+
+    #[test]
+    fn serial_chain_has_parallelism_one() {
+        let mut evs = lifecycle("a", 0.0, "p");
+        // b launches exactly when a finishes: must not read as overlap
+        evs.extend(vec![
+            ev("b", EventKind::Created, 0.0, ""),
+            ev("b", EventKind::Ready, 1.3, ""),
+            ev("b", EventKind::Launched, 1.3, "p"),
+            ev("b", EventKind::Started, 1.4, "p"),
+            ev("b", EventKind::Finished, 2.4, "p"),
+        ]);
+        let s = PhaseSamples::from_events(&evs);
+        assert_eq!(s.inferred_parallelism(&evs), 1);
+    }
+
+    #[test]
+    fn graph_reconstruction_recovers_chain_and_durations() {
+        // a -> b: b becomes Ready the instant a finishes
+        let evs = vec![
+            ev("a", EventKind::Created, 0.0, ""),
+            ev("a", EventKind::Ready, 0.0, ""),
+            ev("a", EventKind::Launched, 0.0, "p"),
+            ev("a", EventKind::Started, 0.5, "p"),
+            ev("a", EventKind::Finished, 2.5, "p"),
+            ev("b", EventKind::Created, 0.0, ""),
+            ev("b", EventKind::Ready, 2.5, ""),
+            ev("b", EventKind::Launched, 2.5, "p"),
+            ev("b", EventKind::Started, 3.0, "p"),
+            ev("b", EventKind::Finished, 6.0, "p"),
+        ];
+        let g = graph_from_trace("rt", &evs).unwrap();
+        assert_eq!(g.len(), 2);
+        let a = g.get("a").unwrap();
+        let b = g.get("b").unwrap();
+        assert!((a.est_s - 2.0).abs() < 1e-12);
+        assert!((b.est_s - 3.0).abs() < 1e-12);
+        assert_eq!(b.after, vec!["a".to_string()]);
+        assert!(a.after.is_empty());
+    }
+
+    #[test]
+    fn graph_reconstruction_flat_map_has_no_edges() {
+        let mut evs = Vec::new();
+        for i in 0..4 {
+            evs.extend(lifecycle(&format!("t{i}"), 0.0, "w0"));
+        }
+        let g = graph_from_trace("flat", &evs).unwrap();
+        assert_eq!(g.len(), 4);
+        assert!(g.tasks().iter().all(|t| t.after.is_empty()));
+    }
+
+    #[test]
+    fn unfinished_tasks_dropped_from_reconstruction() {
+        let mut evs = lifecycle("done", 0.0, "w0");
+        evs.push(ev("hung", EventKind::Created, 0.0, ""));
+        evs.push(ev("hung", EventKind::Launched, 0.1, "w1"));
+        let g = graph_from_trace("partial", &evs).unwrap();
+        assert_eq!(g.len(), 1);
+        assert!(g.get("done").is_some());
+    }
+}

@@ -364,21 +364,14 @@ pub struct RemoteSubmission {
     pub baseline: StatusInfo,
 }
 
-/// Classify a Create failure.  The typed [`RefusalCode`] the hub put on
-/// the wire wins; for pre-code hubs (one-version compatibility window)
-/// fall back to the stable `ERR_MARKER_*` strings in the message text.
+/// Classify a Create failure by the typed [`RefusalCode`] the hub put
+/// on the wire.  The `ERR_MARKER_*` string fallback for pre-code hubs
+/// served its one-version compatibility window and is gone; a hub old
+/// enough to omit the code is now simply an error.  (The server still
+/// embeds the marker strings in its message text so *pre-code clients*
+/// talking to a new hub keep working.)
 fn create_refusal(e: &anyhow::Error) -> Option<RefusalCode> {
-    let se = e.downcast_ref::<ServerError>()?;
-    if se.code.is_some() {
-        return se.code;
-    }
-    if se.msg.contains(dwork::ERR_MARKER_DUPLICATE) {
-        return Some(RefusalCode::Duplicate);
-    }
-    if se.msg.contains(dwork::ERR_MARKER_DEP_ERRORED) {
-        return Some(RefusalCode::DepErrored);
-    }
-    None
+    e.downcast_ref::<ServerError>()?.code
 }
 
 /// Ingest `g` into the remote dhub at `addr`: Create messages in
@@ -648,6 +641,21 @@ mod tests {
     fn kernel_exec_runs_atb_only() {
         assert!(exec_kernel("atb_16", 3).is_ok());
         assert!(exec_kernel("mystery", 3).is_err());
+    }
+
+    #[test]
+    fn create_refusal_reads_only_the_typed_code() {
+        // the ERR_MARKER_* string fallback is gone: a code-less refusal
+        // (pre-code hub) is unclassified even when the text matches
+        let coded: anyhow::Error =
+            ServerError { code: Some(RefusalCode::Duplicate), msg: "task already exists".into() }
+                .into();
+        assert_eq!(create_refusal(&coded), Some(RefusalCode::Duplicate));
+        let uncoded: anyhow::Error =
+            ServerError { code: None, msg: format!("task {}", dwork::ERR_MARKER_DUPLICATE) }
+                .into();
+        assert_eq!(create_refusal(&uncoded), None);
+        assert_eq!(create_refusal(&anyhow::anyhow!("plain error")), None);
     }
 
     #[test]

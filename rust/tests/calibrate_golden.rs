@@ -1,0 +1,187 @@
+//! Golden-model calibration regression — the CI `calibration-regression`
+//! job runs exactly this file on every PR.
+//!
+//! Protocol: DES-simulate the three standard calibration workloads
+//! ([`threesched::calibrate::workloads::standard`]) under a cost model
+//! with *known, deliberately perturbed* constants (deterministic seed),
+//! fit a [`CalibrationProfile`] from nothing but the resulting traces,
+//! and assert the loop closes:
+//!
+//! 1. every fitted parameter recovers its injected value within 10%;
+//! 2. cross-validation (DES under each model vs the measured traces,
+//!    via `trace::compare_backends`) scores the fitted profile strictly
+//!    better than the Table-4 defaults on mean relative makespan error;
+//! 3. the profile survives its TOML round-trip bit-for-bit, and loading
+//!    one through the `workflow plan --calibration` path actually
+//!    changes the selector's choice when the METG ordering flips.
+
+use threesched::calibrate::{
+    classify_trace, fit_traces, validate_profile, workloads, CalibrationProfile,
+    ClassifiedTrace,
+};
+use threesched::metg::simmodels::Tool;
+use threesched::substrate::cluster::costs::CostModel;
+use threesched::workflow::{select, TaskSpec, WorkflowGraph};
+
+/// Seed for generating the golden traces.
+const GEN_SEED: u64 = 42;
+/// Seed for the validation DES — deliberately different, so validation
+/// never scores a model by replaying the exact noise it was fitted on.
+const VAL_SEED: u64 = 20260731;
+/// Per-parameter recovery tolerance (the acceptance criterion).
+const TOL: f64 = 0.10;
+
+/// The injected ground truth: Table-4 constants, deliberately warped —
+/// one shared definition so this test, the example, and the unit tests
+/// all assert the same truth.
+fn injected() -> CostModel {
+    workloads::perturbed_model()
+}
+
+fn golden_traces(m: &CostModel) -> Vec<ClassifiedTrace> {
+    workloads::standard()
+        .iter()
+        .map(|run| {
+            let (source, events) = workloads::simulate(run, m, GEN_SEED).unwrap();
+            classify_trace(&source, events, None).unwrap()
+        })
+        .collect()
+}
+
+fn rel(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs()
+}
+
+#[test]
+fn golden_roundtrip_recovers_injected_constants() {
+    let inj = injected();
+    let base = CostModel::paper();
+    let traces = golden_traces(&inj);
+    let cal = fit_traces(&traces, &base).unwrap();
+    let fitted = cal.profile.model();
+
+    let rtt = rel(fitted.steal_rtt, inj.steal_rtt);
+    assert!(
+        rtt < TOL,
+        "steal_rtt: fitted {} vs injected {} ({:.1}% off)",
+        fitted.steal_rtt,
+        inj.steal_rtt,
+        100.0 * rtt
+    );
+    let beta = rel(fitted.gumbel_beta_per_task, inj.gumbel_beta_per_task);
+    assert!(
+        beta < TOL,
+        "gumbel_beta_per_task: fitted {} vs injected {} ({:.1}% off)",
+        fitted.gumbel_beta_per_task,
+        inj.gumbel_beta_per_task,
+        100.0 * beta
+    );
+    // the chain trace ran at 1 rank; the launch law must match there
+    // (alloc and the jsrun intercept are fitted as one launch constant)
+    let pmake = rel(fitted.metg_pmake(1), inj.metg_pmake(1));
+    assert!(
+        pmake < TOL,
+        "metg_pmake(1): fitted {} vs injected {} ({:.1}% off)",
+        fitted.metg_pmake(1),
+        inj.metg_pmake(1),
+        100.0 * pmake
+    );
+}
+
+#[test]
+fn golden_fit_is_deterministic() {
+    let inj = injected();
+    let base = CostModel::paper();
+    let a = fit_traces(&golden_traces(&inj), &base).unwrap();
+    let b = fit_traces(&golden_traces(&inj), &base).unwrap();
+    assert_eq!(a.profile, b.profile, "same seed, same traces, same profile");
+}
+
+#[test]
+fn golden_fitted_profile_beats_table4_defaults() {
+    let inj = injected();
+    let base = CostModel::paper();
+    let traces = golden_traces(&inj);
+    let cal = fit_traces(&traces, &base).unwrap();
+    let v = validate_profile(&traces, &base, &cal.profile, VAL_SEED).unwrap();
+    assert!(
+        v.mean_err_fitted < v.mean_err_default,
+        "mean relative makespan error must strictly improve: \
+         default {:.3}% vs fitted {:.3}%",
+        100.0 * v.mean_err_default,
+        100.0 * v.mean_err_fitted
+    );
+    // the backends whose constants were perturbed beyond noise level
+    // must improve individually, not just on average
+    for tool in [Tool::Pmake, Tool::Dwork] {
+        let row = v.rows.iter().find(|r| r.tool == tool).unwrap();
+        assert!(
+            row.err_fitted < row.err_default,
+            "{}: fitted {:.3}% vs default {:.3}%",
+            tool.name(),
+            100.0 * row.err_fitted,
+            100.0 * row.err_default
+        );
+    }
+    // and the fitted model should land close on every trace
+    for row in &v.rows {
+        assert!(
+            row.err_fitted < 0.10,
+            "{}: fitted model still {:.1}% off its own trace",
+            row.source,
+            100.0 * row.err_fitted
+        );
+    }
+}
+
+#[test]
+fn golden_profile_survives_disk_roundtrip() {
+    let inj = injected();
+    let base = CostModel::paper();
+    let cal = fit_traces(&golden_traces(&inj), &base).unwrap();
+    let path = std::env::temp_dir()
+        .join(format!("threesched-golden-profile-{}.toml", std::process::id()));
+    cal.profile.save(&path).unwrap();
+    let loaded = CalibrationProfile::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(cal.profile, loaded, "TOML round-trip must be identity");
+    let (a, b) = (cal.profile.model(), loaded.model());
+    assert_eq!(a.steal_rtt, b.steal_rtt);
+    assert_eq!(a.jsrun_a, b.jsrun_a);
+    assert_eq!(a.gumbel_beta_per_task, b.gumbel_beta_per_task);
+}
+
+/// A flat uniform bulk-synchronous map: mpi-list's home turf under the
+/// Table-4 constants.
+fn flat_map(n: usize, est: f64) -> WorkflowGraph {
+    let mut g = WorkflowGraph::new("flip-map");
+    for i in 0..n {
+        g.add_task(TaskSpec::new(format!("k{i}")).est(est)).unwrap();
+    }
+    g
+}
+
+#[test]
+fn calibration_profile_flips_selector_choice() {
+    // default constants: straggler spread is microscopic next to 50 ms
+    // tasks, so the selector picks the static list
+    let g = flat_map(4096, 0.05);
+    let ranks = 864;
+    let base = CostModel::paper();
+    assert_eq!(select(&g, &base, ranks).unwrap().choice, Tool::MpiList);
+
+    // a (hypothetically measured) straggler scale of 50 ms per task
+    // pushes mpi-list's METG past the task duration: the profile must
+    // flip the recommendation to the dynamic task server — this is the
+    // exact path `workflow plan --calibration` exercises
+    let mut prof = CalibrationProfile::new("flip test");
+    prof.overrides.gumbel_beta_per_task = Some(0.05);
+    let path = std::env::temp_dir()
+        .join(format!("threesched-flip-profile-{}.toml", std::process::id()));
+    prof.save(&path).unwrap();
+    let loaded = CalibrationProfile::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let rec = select(&g, &loaded.model(), ranks).unwrap();
+    assert_eq!(rec.choice, Tool::Dwork, "{}", rec.render());
+    assert!(!rec.assessment(Tool::MpiList).eligible);
+}
