@@ -1,0 +1,95 @@
+//! The unified execution API end to end: ONE builder (`workflow::Session`)
+//! plans, lowers, and runs the same graph on every back-end, and returns
+//! ONE typed outcome (`RunOutcome`) carrying the plan that chose the
+//! coordinator plus per-backend detail the old `RunSummary`-only entry
+//! points threw away.
+//!
+//! Run: `cargo run --release --example session_api`
+
+use threesched::workflow::{
+    Backend, BackendDetail, Lowered, Session, TaskSpec, WorkflowGraph,
+};
+
+fn pipeline() -> anyhow::Result<WorkflowGraph> {
+    let mut g = WorkflowGraph::new("session-demo");
+    g.add_task(TaskSpec::command("gen", "seq 1 100 > input.txt").outputs(&["input.txt"]))?;
+    for i in 0..4 {
+        g.add_task(
+            TaskSpec::kernel(format!("crunch{i}"), "atb_32", i).after(&["gen"]).est(0.01),
+        )?;
+    }
+    g.add_task(
+        TaskSpec::command("wc", "wc -l < input.txt > count.txt")
+            .outputs(&["count.txt"])
+            .after(&["gen", "crunch0", "crunch1", "crunch2", "crunch3"]),
+    )?;
+    Ok(g)
+}
+
+fn main() -> anyhow::Result<()> {
+    let g = pipeline()?;
+
+    println!("=== 1. plan: the decision, without executing ===\n");
+    let plan = Session::new(&g).parallelism(4).plan()?;
+    print!("{}", plan.render());
+    println!();
+
+    println!("=== 2. lower: the planned coordinator's input format ===\n");
+    match Session::new(&g).backend(Backend::Dwork { remote: None }).lower()? {
+        Lowered::Dwork(tasks) => {
+            println!("dwork task list: {} creates in topological order", tasks.len())
+        }
+        other => anyhow::bail!("expected the dwork lowering, got {other:?}"),
+    }
+    println!();
+
+    println!("=== 3. run: same builder, every backend, typed detail ===\n");
+    for backend in [
+        Backend::Pmake,
+        Backend::Dwork { remote: None },
+        Backend::MpiList,
+    ] {
+        let dir = std::env::temp_dir()
+            .join(format!("threesched-session-demo-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let outcome = Session::new(&g).backend(backend).parallelism(2).dir(&dir).run()?;
+        anyhow::ensure!(outcome.all_ok(), "{:?}", outcome.summary);
+        let detail = match &outcome.detail {
+            BackendDetail::Pmake { reports } => {
+                format!("{} target report(s)", reports.len())
+            }
+            BackendDetail::Dwork { server } => format!(
+                "hub drained: {} completed / {} errored",
+                server.completed, server.errored
+            ),
+            BackendDetail::DworkRemote { server, .. } => {
+                format!("remote hub: {} completed", server.completed)
+            }
+            BackendDetail::MpiList { ranks } => format!("{} rank(s) reported", ranks.len()),
+        };
+        println!(
+            "{:<8} ran {} tasks in {:.3}s — {}",
+            outcome.summary.coordinator.name(),
+            outcome.summary.tasks_run,
+            outcome.summary.makespan_s,
+            detail
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    println!("\n=== 4. auto: selection verdict travels with the outcome ===\n");
+    let dir = std::env::temp_dir()
+        .join(format!("threesched-session-demo-auto-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let outcome = Session::new(&g).backend(Backend::Auto).parallelism(2).dir(&dir).run()?;
+    let rec = outcome.plan.recommendation.as_ref().expect("auto carries the verdict");
+    println!(
+        "selector picked {} ({} assessed); run confirmed with {} tasks",
+        rec.choice.name(),
+        rec.assessments.len(),
+        outcome.summary.tasks_run
+    );
+    anyhow::ensure!(outcome.all_ok(), "{:?}", outcome.summary);
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

@@ -10,7 +10,7 @@
 
 use threesched::substrate::cluster::costs::CostModel;
 use threesched::trace::{self, Tracer};
-use threesched::workflow::{self, TaskSpec, WorkflowGraph};
+use threesched::workflow::{Backend, Session, TaskSpec, WorkflowGraph};
 
 fn deep_file_chain() -> WorkflowGraph {
     let mut g = WorkflowGraph::new("md-restart-chain");
@@ -84,7 +84,13 @@ fn main() -> anyhow::Result<()> {
         .join(format!("threesched-trace-compare-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
     let tracer = Tracer::memory();
-    let summary = workflow::run_dwork_traced(&g, &dir, 2, 1, &tracer)?;
+    let summary = Session::new(&g)
+        .backend(Backend::Dwork { remote: None })
+        .parallelism(2)
+        .dir(&dir)
+        .tracer(tracer.clone())
+        .run()?
+        .summary;
     anyhow::ensure!(summary.all_ok(), "mini-pipeline failed: {summary:?}");
     let events = tracer.drain();
     trace::validate(&events)?;

@@ -7,7 +7,7 @@
 
 use threesched::metg::simmodels::Tool;
 use threesched::substrate::cluster::costs::CostModel;
-use threesched::workflow::{self, TaskSpec, WorkflowGraph};
+use threesched::workflow::{Backend, Session, TaskSpec, WorkflowGraph};
 
 fn deep_file_chain() -> WorkflowGraph {
     let mut g = WorkflowGraph::new("md-restart-chain");
@@ -51,8 +51,8 @@ fn main() -> anyhow::Result<()> {
     let m = CostModel::paper();
     println!("=== adaptive selection at the paper's 864-rank scale ===\n");
     for g in [deep_file_chain(), wide_irregular_fan(), flat_uniform_map()] {
-        let rec = workflow::select(&g, &m, 864)?;
-        println!("--- {} ---\n{}", g.name, rec.render());
+        let plan = Session::new(&g).cost_model(m.clone()).parallelism(864).plan()?;
+        println!("--- {} ---\n{}", g.name, plan.render());
     }
 
     println!("=== one pipeline, three executions ===\n");
@@ -71,7 +71,12 @@ fn main() -> anyhow::Result<()> {
             std::process::id()
         ));
         let _ = std::fs::remove_dir_all(&dir);
-        let summary = workflow::dispatch(&g, tool, 2, &dir)?;
+        let summary = Session::new(&g)
+            .backend(Backend::from_tool(tool))
+            .parallelism(2)
+            .dir(&dir)
+            .run()?
+            .summary;
         let count = std::fs::read_to_string(dir.join("count.txt"))?;
         println!(
             "{:<8} ran {} tasks ({} failed) in {:.3}s; count.txt = {}",

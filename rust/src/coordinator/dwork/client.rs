@@ -28,8 +28,8 @@ use super::messages::{RefusalCode, Request, Response, StatusInfo, TaskMsg};
 /// `anyhow::Error` chain to this type to reach the machine-readable
 /// refusal `code`; it is absent for non-Create errors and on replies
 /// from pre-code hubs (which current submitters no longer accommodate —
-/// the `ERR_MARKER_*` string fallback is gone after its one-version
-/// compatibility window).
+/// the marker-string fallback, and since this release the server-side
+/// marker embedding too, are gone after their compatibility windows).
 #[derive(Debug)]
 pub struct ServerError {
     pub code: Option<RefusalCode>,
@@ -269,7 +269,9 @@ pub struct WorkerOpts {
     /// idle-backoff bounds while the hub has nothing ready
     pub idle_floor: Duration,
     pub idle_ceiling: Duration,
-    /// worker-side lifecycle recorder (`Started` before each payload)
+    /// worker-side lifecycle recorder: `Connected` once at attach (the
+    /// raw material for observing connection storms), then `Started`
+    /// before each payload
     pub tracer: Tracer,
     /// record Finished/Failed here too.  Leave off when the tracer is
     /// shared with a traced [`SchedState`](super::state::SchedState) —
@@ -312,6 +314,10 @@ pub fn run_worker_opts(
     opts: &WorkerOpts,
     mut exec: impl FnMut(&TaskMsg) -> Result<()>,
 ) -> Result<WorkerStats> {
+    // worker-scoped attach marker (task field empty): a lingering pool
+    // re-entering this loop after a campaign boundary records one per
+    // attach, which is exactly what makes connection storms observable
+    opts.tracer.record("", EventKind::Connected, client.worker());
     let mut stats = WorkerStats::default();
     let mut buffer: VecDeque<TaskMsg> = VecDeque::new();
     let batch = opts.prefetch.max(1);

@@ -172,11 +172,12 @@ impl Request {
 
 /// Machine-readable classification of a Create refusal.  Travels as an
 /// optional field on [`Response::Err`] (same wire kind), so pre-code
-/// clients still read the message text and pre-code servers simply omit
-/// it — the version-proof replacement for substring-matching the
-/// `ERR_MARKER_*` strings.  The submitter-side string fallback is gone
-/// (its one-version window elapsed); the markers remain in the message
-/// text purely for pre-code clients.
+/// servers simply omit it — the version-proof replacement for
+/// substring-matching marker strings in the message text.  Both halves
+/// of that legacy protocol are gone now: the submitter-side string
+/// fallback (PR 4) and the server-side marker embedding (this release,
+/// after its compatibility window) — refusal message text is free-form
+/// and the code is the only classification.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RefusalCode {
     /// the task already exists (a replayed Create — the refusal IS the ack)

@@ -20,6 +20,4 @@ pub use client::{
 };
 pub use messages::{RefusalCode, Request, Response, StatusInfo, TaskMsg};
 pub use server::{serve, spawn_inproc, spawn_tcp, ServerConfig};
-pub use state::{
-    CreateError, SchedState, TaskState, ERR_MARKER_DEP_ERRORED, ERR_MARKER_DUPLICATE,
-};
+pub use state::{CreateError, SchedState, TaskState};

@@ -22,18 +22,21 @@ use crate::trace::{EventKind, Tracer};
 
 use super::messages::{RefusalCode, StatusInfo, TaskMsg};
 
-/// Stable machine-readable markers embedded in Create refusal messages.
-/// The typed-refusal protocol ([`RefusalCode`] on the wire) is the only
-/// classification our own submitter reads — its string fallback was
-/// dropped after the one-version compatibility window — but the markers
-/// stay in the message text for *pre-code clients* (old binaries
-/// substring-matching a new hub's refusals).  Reword only together with
-/// the pinning tests below.
-pub const ERR_MARKER_DUPLICATE: &str = "already exists";
-pub const ERR_MARKER_DEP_ERRORED: &str = "error state";
+/// The legacy marker phrases pre-code clients used to substring-match
+/// in Create refusal messages.  The typed-refusal protocol
+/// ([`RefusalCode`] on the wire) is the only classification now: the
+/// submitter-side string fallback went first (PR 4), and the
+/// server-side embedding of these phrases followed once its
+/// compatibility window elapsed — refusal text is free-form again.
+/// Kept crate-private solely for the pinning tests, which assert the
+/// server no longer relies on (or emits) them.
+#[allow(dead_code)] // referenced only from the pinning tests
+pub(crate) const ERR_MARKER_DUPLICATE: &str = "already exists";
+#[allow(dead_code)] // referenced only from the pinning tests
+pub(crate) const ERR_MARKER_DEP_ERRORED: &str = "error state";
 
-/// A refused Create: the typed classification plus the human-readable
-/// message (which still carries the `ERR_MARKER_*` strings).
+/// A refused Create: the typed classification plus a free-form
+/// human-readable message.
 #[derive(Debug)]
 pub struct CreateError {
     pub code: RefusalCode,
@@ -317,7 +320,7 @@ impl SchedState {
         if self.tasks.contains_key(&msg.name) {
             return Err(CreateError::new(
                 RefusalCode::Duplicate,
-                format!("task {:?} {ERR_MARKER_DUPLICATE}", msg.name),
+                format!("refusing duplicate create of task {:?}", msg.name),
             ));
         }
         let mut join = 0u32;
@@ -332,7 +335,7 @@ impl SchedState {
                 Some(e) if e.state == TaskState::Error => {
                     return Err(CreateError::new(
                         RefusalCode::DepErrored,
-                        format!("dependency {d:?} is in the {ERR_MARKER_DEP_ERRORED}"),
+                        format!("dependency {d:?} failed earlier; the new task could never run"),
                     ))
                 }
                 Some(e) if e.state == TaskState::Done => {}
@@ -653,9 +656,11 @@ mod tests {
         s.create(t("a"), &[]).unwrap();
         let err = s.create(t("a"), &[]).unwrap_err();
         assert_eq!(err.code, RefusalCode::Duplicate);
-        // compat: the server keeps emitting this exact phrase for
-        // pre-code clients (our own submitter reads only the typed code)
-        assert!(err.to_string().contains("already exists"), "{err}");
+        // the pre-code compatibility window has elapsed: classification
+        // is the typed code alone, and the message no longer embeds the
+        // legacy marker phrase old clients substring-matched
+        assert!(!err.to_string().contains(ERR_MARKER_DUPLICATE), "{err}");
+        assert!(err.to_string().contains("\"a\""), "message still names the task: {err}");
     }
 
     #[test]
@@ -666,9 +671,11 @@ mod tests {
         s.complete("w", "bad", false).unwrap();
         let err = s.create(t("late"), &["bad".into()]).unwrap_err();
         assert_eq!(err.code, RefusalCode::DepErrored);
-        // compat: the server keeps emitting this exact phrase for
-        // pre-code clients (our own submitter reads only the typed code)
-        assert!(err.to_string().contains("error state"), "{err}");
+        // the pre-code compatibility window has elapsed: classification
+        // is the typed code alone, and the message no longer embeds the
+        // legacy marker phrase old clients substring-matched
+        assert!(!err.to_string().contains(ERR_MARKER_DEP_ERRORED), "{err}");
+        assert!(err.to_string().contains("\"bad\""), "message still names the dep: {err}");
     }
 
     #[test]

@@ -53,8 +53,9 @@ impl Context {
 
 /// Workflow-IR ingestion: compile a [`WorkflowGraph`] into the static
 /// bulk-synchronous plan this coordinator executes (topological phases,
-/// each block-distributed with [`block_range`]).  Drive it with
-/// [`crate::workflow::run::run_mpilist`] or a custom SPMD loop.
+/// each block-distributed with [`block_range`]).  Drive it with a
+/// [`crate::workflow::Session`] on the mpi-list backend or a custom
+/// SPMD loop.
 pub fn from_workflow(
     g: &crate::workflow::WorkflowGraph,
     procs: usize,

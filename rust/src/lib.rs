@@ -34,10 +34,12 @@
 //! unified workflow IR (`WorkflowGraph` of `TaskSpec` nodes, with cycle
 //! detection and critical-path/width analysis), a YAML front-end, three
 //! lowerings (pmake rules, dwork task lists, mpi-list static rank plans),
-//! and an adaptive selector that matches graph shape + task granularity
-//! against each coordinator's METG to recommend — or auto-dispatch to —
-//! the cheapest synchronization mechanism.  Describe a campaign once,
-//! run it on any of the three schedulers:
+//! an adaptive selector that matches graph shape + task granularity
+//! against each coordinator's METG, and one builder-style execution API
+//! ([`workflow::Session`]): `Session::new(&g).backend(..).run()` plans,
+//! lowers, and executes on any back-end — local or remote — and returns
+//! a typed [`workflow::RunOutcome`].  Describe a campaign once, run it
+//! on any of the three schedulers:
 //!
 //! ```text
 //! threesched workflow plan  --file wf.yaml --ranks 864

@@ -10,8 +10,9 @@
 //!              that pmake scripts launch, and a smoke-check for the
 //!              runtime path)
 //!   metg     — print the paper-scale METG sweep (DES)
-//!   workflow — plan | lower | run: one workflow.yaml, three lowerings,
-//!              METG-based adaptive coordinator selection
+//!   workflow — plan | lower | run | submit: one workflow.yaml, three
+//!              lowerings, METG-based adaptive coordinator selection —
+//!              every verb is a thin veneer over `workflow::Session`
 //!   trace    — report | compare: Fig-5-style breakdowns over lifecycle
 //!              traces, and selector-vs-DES-vs-measured cross-validation
 //!   calibrate — fit the CostModel from measured traces into a profile
@@ -29,7 +30,6 @@ use threesched::calibrate::{self, CalibrationProfile};
 use threesched::coordinator::dwork::{self, Client, TaskMsg};
 use threesched::coordinator::pmake;
 use threesched::metg::harness::{metg_sweep, render_metg, PAPER_RANKS};
-use threesched::metg::simmodels::Tool;
 use threesched::metg::Workload;
 use threesched::workflow;
 use threesched::runtime::service::RuntimeService;
@@ -62,7 +62,7 @@ commands:
   metg    [--rtt-us X]
   workflow plan   --file wf.yaml [--ranks N] [--calibration profile.toml]
                   (stats + selector verdict)
-  workflow lower  --file wf.yaml --coordinator pmake|dwork|mpilist
+  workflow lower  --file wf.yaml --coordinator auto|pmake|dwork|mpilist
                   [--out dir] [--ranks N]
   workflow run    --file wf.yaml [--coordinator auto|pmake|dwork|mpilist]
                   [--procs N] [--dir D] [--trace out.jsonl]
@@ -217,134 +217,36 @@ fn cmd_dhub(argv: &[String]) -> Result<()> {
                 Flag { name: "idle-ceiling-ms", help: "idle-backoff ceiling, milliseconds", takes_value: true, default: Some("100") },
             ];
             let args = parse(rest, &spec)?;
-            let addr = args.get("connect").unwrap().to_string();
-            let workers = args.get_usize("workers", 1)?.max(1);
-            let prefetch = args.get_usize("prefetch", 1)? as u32;
-            let linger = args.has("linger");
-            let idle_floor = Duration::from_micros(args.get_usize("idle-floor-us", 200)? as u64);
-            let idle_ceiling =
-                Duration::from_millis(args.get_usize("idle-ceiling-ms", 100)? as u64);
             let tracer = match args.get("trace") {
                 // standalone worker trace: this process owns its stream,
                 // so it records terminals too (the hub's trace is elsewhere)
                 Some(p) => Tracer::to_file(Path::new(p), "dwork-worker")?,
                 None => Tracer::default(),
             };
-            let dir = PathBuf::from(args.get("dir").unwrap());
-            std::fs::create_dir_all(&dir).with_context(|| format!("creating {dir:?}"))?;
-            // default name must be unique ACROSS hosts: the hub keys
-            // assignment state by worker name, and PIDs are only
-            // per-host, so two pools on different nodes could collide
-            // and corrupt each other's requeue accounting
-            let nonce = std::time::SystemTime::now()
-                .duration_since(std::time::UNIX_EPOCH)
-                .map(|d| d.subsec_nanos())
-                .unwrap_or(0);
-            let base = args
-                .get("name")
-                .map(str::to_string)
-                .unwrap_or_else(|| {
-                    let host = std::env::var("HOSTNAME").unwrap_or_default();
-                    format!("dhub-{host}-{}-{nonce:08x}", std::process::id())
-                });
-            let totals: Vec<dwork::WorkerStats> = std::thread::scope(|s| {
-                (0..workers)
-                    .map(|i| {
-                        let addr = addr.clone();
-                        let dir = dir.clone();
-                        let name = format!("{base}.{i}");
-                        let opts = dwork::WorkerOpts {
-                            prefetch,
-                            idle_floor,
-                            idle_ceiling,
-                            tracer: tracer.clone(),
-                            trace_terminals: true,
-                        };
-                        s.spawn(move || -> Result<dwork::WorkerStats> {
-                            let mut total = dwork::WorkerStats::default();
-                            // rejoin backoff between campaigns: a drained
-                            // hub dismisses workers instantly, so a
-                            // lingering pool must not reconnect-cycle at
-                            // full speed for the whole inter-campaign gap
-                            let rejoin_floor = std::time::Duration::from_millis(250);
-                            let rejoin_ceiling = std::time::Duration::from_secs(10);
-                            let mut rejoin = rejoin_floor;
-                            loop {
-                                let dial = TcpClient::connect_retry(
-                                    &addr,
-                                    std::time::Duration::from_secs(10),
-                                );
-                                let conn = match dial {
-                                    Ok(conn) => conn,
-                                    // a lingering pool must outlive hub
-                                    // outages of any length, not just the
-                                    // one dial window
-                                    Err(e) if linger => {
-                                        eprintln!("{name}: hub unreachable ({e:#}); retrying");
-                                        std::thread::sleep(rejoin);
-                                        rejoin = (rejoin * 2).min(rejoin_ceiling);
-                                        continue;
-                                    }
-                                    Err(e) => return Err(e),
-                                };
-                                // exit_on_drop: a dying thread hands its
-                                // assigned tasks back to the hub
-                                let mut c = Client::new(Box::new(conn), name.clone())
-                                    .exit_on_drop(true);
-                                let worked = dwork::run_worker_opts(&mut c, &opts, |t| {
-                                    // empty body: a bare synchronization
-                                    // task (e.g. via `dwork create`)
-                                    if t.body.is_empty() {
-                                        return Ok(());
-                                    }
-                                    let p =
-                                        threesched::workflow::Payload::decode_body(&t.body)?;
-                                    threesched::workflow::run::exec_payload(&p, &dir)
-                                });
-                                let stats = match worked {
-                                    Ok(stats) => stats,
-                                    // a lingering pool outlives hub
-                                    // restarts too: reconnect, don't die
-                                    Err(e) if linger => {
-                                        eprintln!("{name}: hub connection lost ({e:#}); rejoining");
-                                        std::thread::sleep(rejoin);
-                                        rejoin = (rejoin * 2).min(rejoin_ceiling);
-                                        continue;
-                                    }
-                                    Err(e) => return Err(e),
-                                };
-                                total.tasks_run += stats.tasks_run;
-                                total.tasks_failed += stats.tasks_failed;
-                                total.compute_s += stats.compute_s;
-                                total.comm_s += stats.comm_s;
-                                total.idle_s += stats.idle_s;
-                                // the hub dismisses workers when a campaign
-                                // drains (paper Exit); a lingering pool
-                                // serves successive campaigns on a
-                                // long-lived hub instead of exiting
-                                if !linger {
-                                    return Ok(total);
-                                }
-                                if stats.tasks_run > 0 {
-                                    rejoin = rejoin_floor; // productive campaign
-                                }
-                                std::thread::sleep(rejoin);
-                                rejoin = (rejoin * 2).min(rejoin_ceiling);
-                            }
-                        })
-                    })
-                    .collect::<Vec<_>>()
-                    .into_iter()
-                    .map(|h| h.join().expect("worker thread panicked"))
-                    .collect::<Result<Vec<_>>>()
-            })?;
-            let run: u64 = totals.iter().map(|s| s.tasks_run).sum();
-            let failed: u64 = totals.iter().map(|s| s.tasks_failed).sum();
-            let compute: f64 = totals.iter().map(|s| s.compute_s).sum();
-            let comm: f64 = totals.iter().map(|s| s.comm_s).sum();
+            // the whole pull loop (rejoin backoff, linger semantics,
+            // exit-on-drop, payload decode) lives in workflow::WorkerPool
+            let mut pool = workflow::WorkerPool::new(args.get("connect").unwrap())
+                .threads(args.get_usize("workers", 1)?)
+                .prefetch(args.get_usize("prefetch", 1)? as u32)
+                .dir(args.get("dir").unwrap())
+                .linger(args.has("linger"))
+                .idle_backoff(
+                    Duration::from_micros(args.get_usize("idle-floor-us", 200)? as u64),
+                    Duration::from_millis(args.get_usize("idle-ceiling-ms", 100)? as u64),
+                )
+                .tracer(tracer);
+            if let Some(name) = args.get("name") {
+                pool = pool.name(name);
+            }
+            let stats = pool.run()?;
             println!(
-                "{base}: {workers} threads ran {run} tasks ({failed} failed), \
-                 compute {compute:.2}s, comm {comm:.2}s"
+                "{}: {} threads ran {} tasks ({} failed), compute {:.2}s, comm {:.2}s",
+                stats.name,
+                stats.threads,
+                stats.tasks_run,
+                stats.tasks_failed,
+                stats.compute_s,
+                stats.comm_s
             );
             Ok(())
         }
@@ -562,47 +464,63 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
             ];
             let args = parse(rest, &spec)?;
             let g = workflow::parse_workflow_file(Path::new(args.get("file").unwrap()))?;
-            let ranks = args.get_usize("ranks", 864)?;
-            let m = load_model(args.get("calibration"))?;
-            let rec = workflow::select(&g, &m, ranks)?;
-            print!("workflow {:?}\n{}", g.name, rec.render());
+            let plan = workflow::Session::new(&g)
+                .parallelism(args.get_usize("ranks", 864)?)
+                .cost_model(load_model(args.get("calibration"))?)
+                .plan()?;
+            print!("workflow {:?}\n{}", g.name, plan.render());
             Ok(())
         }
         "lower" => {
             let spec = [
                 Flag { name: "file", help: "workflow yaml", takes_value: true, default: Some("workflow.yaml") },
-                Flag { name: "coordinator", help: "pmake | dwork | mpilist", takes_value: true, default: Some("pmake") },
+                Flag { name: "coordinator", help: "auto | pmake | dwork | mpilist", takes_value: true, default: Some("pmake") },
                 Flag { name: "out", help: "write lowered files here (pmake only; default: print)", takes_value: true, default: None },
-                Flag { name: "ranks", help: "rank count for the mpilist plan", takes_value: true, default: Some("4") },
+                Flag { name: "ranks", help: "rank count for the mpilist plan and the auto selector", takes_value: true, default: Some("4") },
             ];
             let args = parse(rest, &spec)?;
             let g = workflow::parse_workflow_file(Path::new(args.get("file").unwrap()))?;
-            match args.get("coordinator").unwrap() {
-                "pmake" => {
-                    let dirname = args.get("out").unwrap_or(".").to_string();
-                    let low = workflow::to_pmake(&g, &dirname)?;
-                    match args.get("out") {
-                        Some(dir) => {
-                            std::fs::create_dir_all(dir)?;
-                            std::fs::write(Path::new(dir).join("rules.yaml"), &low.rules_yaml)?;
-                            std::fs::write(Path::new(dir).join("targets.yaml"), &low.targets_yaml)?;
-                            println!("wrote {dir}/rules.yaml and {dir}/targets.yaml");
-                        }
-                        None => print!(
-                            "# rules.yaml\n{}\n# targets.yaml\n{}",
-                            low.rules_yaml, low.targets_yaml
-                        ),
+            let coordinator = args.get("coordinator").unwrap();
+            let Some(backend) = workflow::Backend::from_name(coordinator) else {
+                bail!("unknown coordinator {coordinator:?} (auto | pmake | dwork | mpilist)")
+            };
+            let auto = backend == workflow::Backend::Auto;
+            let mut session = workflow::Session::new(&g)
+                .backend(backend)
+                .parallelism(args.get_usize("ranks", 4)?)
+                .dir(args.get("out").unwrap_or("."));
+            if auto {
+                // never silently disagree with `workflow plan`: name the
+                // verdict and the scale it was made at (--ranks here
+                // defaults to 4, plan's selector defaults to 864) — then
+                // pin the resolved backend so lower() doesn't re-select
+                let plan = session.plan()?;
+                eprintln!(
+                    "auto-selected coordinator: {} (selector at {} ranks; pass --ranks to \
+                     match your `workflow plan` scale)",
+                    plan.tool.name(),
+                    plan.parallelism
+                );
+                session = session.backend(workflow::Backend::from_tool(plan.tool));
+            }
+            let lowered = session.lower()?;
+            match lowered {
+                workflow::Lowered::Pmake(low) => match args.get("out") {
+                    Some(dir) => {
+                        std::fs::create_dir_all(dir)?;
+                        std::fs::write(Path::new(dir).join("rules.yaml"), &low.rules_yaml)?;
+                        std::fs::write(Path::new(dir).join("targets.yaml"), &low.targets_yaml)?;
+                        println!("wrote {dir}/rules.yaml and {dir}/targets.yaml");
                     }
-                }
-                "dwork" => {
-                    let tasks = workflow::to_dwork(&g)?;
+                    None => print!(
+                        "# rules.yaml\n{}\n# targets.yaml\n{}",
+                        low.rules_yaml, low.targets_yaml
+                    ),
+                },
+                workflow::Lowered::Dwork(tasks) => {
                     print!("{}", workflow::lower::render_dwork(&tasks));
                 }
-                "mpilist" => {
-                    let plan = workflow::to_mpilist(&g, args.get_usize("ranks", 4)?)?;
-                    print!("{}", plan.render(&g));
-                }
-                other => bail!("unknown coordinator {other:?} (pmake | dwork | mpilist)"),
+                workflow::Lowered::MpiList(plan) => print!("{}", plan.render(&g)),
             }
             Ok(())
         }
@@ -614,18 +532,19 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
             let args = parse(rest, &spec)?;
             let g = workflow::parse_workflow_file(Path::new(args.get("file").unwrap()))?;
             let addr = args.get("connect").unwrap();
-            let sub =
-                workflow::submit_dwork_remote(&g, addr, &workflow::RemoteOpts::default())?;
+            let sub = workflow::Session::new(&g)
+                .backend(workflow::Backend::Dwork { remote: Some(addr.into()) })
+                .submit()?;
             println!(
                 "submitted {} tasks of workflow {:?} to dhub {addr} (detached; \
                  poll with `threesched dwork status --connect {addr}`)",
-                sub.submitted, g.name
+                sub.accounting.submitted, g.name
             );
-            if sub.skipped_at_submit > 0 {
+            if sub.accounting.skipped_at_submit > 0 {
                 println!(
                     "note: {} tasks skipped at submit (an upstream dependency had \
                      already failed)",
-                    sub.skipped_at_submit
+                    sub.accounting.skipped_at_submit
                 );
             }
             Ok(())
@@ -643,10 +562,6 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
             ];
             let args = parse(rest, &spec)?;
             let g = workflow::parse_workflow_file(Path::new(args.get("file").unwrap()))?;
-            let default_procs =
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
-            let procs = args.get_usize("procs", default_procs)?;
-            let dir = Path::new(args.get("dir").unwrap());
             let trace_path = args.get("trace").map(PathBuf::from);
             let tracer =
                 if trace_path.is_some() { Tracer::memory() } else { Tracer::default() };
@@ -657,7 +572,16 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
                     "warning: --calibration only affects the auto selector; ignored here"
                 );
             }
-            let summary = match (args.get("connect"), args.get("coordinator").unwrap()) {
+            // one session carries every knob; the default parallelism is
+            // the machine's available parallelism, so --procs only needs
+            // forwarding when the user actually passed it
+            let mut session = workflow::Session::new(&g)
+                .dir(args.get("dir").unwrap())
+                .tracer(tracer.clone());
+            if args.get("procs").is_some() {
+                session = session.parallelism(args.get_usize("procs", 2)?);
+            }
+            let outcome = match (args.get("connect"), args.get("coordinator").unwrap()) {
                 (Some(addr), "dwork" | "auto") => {
                     // execution happens wherever the worker pools run:
                     // local-driver knobs do not travel over the wire
@@ -679,31 +603,33 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
                         "feeding remote dhub {addr} (join workers with \
                          `threesched dhub worker --connect {addr}`)"
                     );
-                    let opts = workflow::RemoteOpts {
-                        poll: Duration::from_millis(args.get_usize("poll-ms", 50)? as u64),
-                        ..workflow::RemoteOpts::default()
-                    };
-                    workflow::run_dwork_remote(&g, addr, &opts)?
+                    session
+                        .backend(workflow::Backend::Dwork { remote: Some(addr.into()) })
+                        .polling(workflow::PollCfg {
+                            poll: Duration::from_millis(args.get_usize("poll-ms", 50)? as u64),
+                            ..workflow::PollCfg::default()
+                        })
+                        .run()?
                 }
                 (Some(_), other) => {
                     bail!("--connect is a dwork deployment (got --coordinator {other})")
                 }
-                (None, "auto") => {
-                    let m = load_model(args.get("calibration"))?;
-                    let (rec, summary) =
-                        workflow::run_auto_traced(&g, &m, procs, dir, &tracer)?;
-                    print!("{}", rec.render());
-                    summary
-                }
-                (None, "pmake") => workflow::dispatch_traced(&g, Tool::Pmake, procs, dir, &tracer)?,
-                (None, "dwork") => workflow::dispatch_traced(&g, Tool::Dwork, procs, dir, &tracer)?,
-                (None, "mpilist") => {
-                    workflow::dispatch_traced(&g, Tool::MpiList, procs, dir, &tracer)?
-                }
-                (None, other) => {
-                    bail!("unknown coordinator {other:?} (auto | pmake | dwork | mpilist)")
+                (None, name) => {
+                    let Some(backend) = workflow::Backend::from_name(name) else {
+                        bail!("unknown coordinator {name:?} (auto | pmake | dwork | mpilist)")
+                    };
+                    if backend == workflow::Backend::Auto {
+                        session = session.cost_model(load_model(args.get("calibration"))?);
+                    }
+                    let outcome = session.backend(backend).run()?;
+                    // the selector's table, exactly as `workflow plan` prints it
+                    if let Some(rec) = &outcome.plan.recommendation {
+                        print!("{}", rec.render());
+                    }
+                    outcome
                 }
             };
+            let summary = &outcome.summary;
             if let Some(path) = &trace_path {
                 let events = tracer.drain();
                 trace::write_trace(path, summary.coordinator.name(), &events)?;

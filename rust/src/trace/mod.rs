@@ -47,12 +47,26 @@ pub use samples::{graph_from_trace, PhaseSamples};
 pub use sim::simulate_workflow;
 
 /// Schema marker written in the JSONL header line; bump on any change to
-/// the event encoding.  Real and simulated traces share it byte-for-byte.
-pub const SCHEMA: &str = "threesched-trace/1";
+/// the event encoding *or* the event-kind vocabulary, so an old reader
+/// fails cleanly at the header ("unsupported trace schema") instead of
+/// mid-stream on an event kind it has never heard of.  Real and
+/// simulated traces share it byte-for-byte.  `/2` added the
+/// worker-scoped `connected` kind; readers accept every schema listed
+/// in [`ACCEPTED_SCHEMAS`].
+pub const SCHEMA: &str = "threesched-trace/2";
+
+/// Schemas [`parse_jsonl`] accepts: the current one plus every older
+/// version whose events are a subset of the current vocabulary.
+pub const ACCEPTED_SCHEMAS: [&str; 2] = ["threesched-trace/1", SCHEMA];
 
 /// One step of a task's lifecycle.  The same vocabulary covers all three
 /// coordinators and the DES models:
 ///
+/// * `Connected` — a *worker* attached to the scheduler (`who` is the
+///   worker, `task` is empty): not part of any task's lifecycle, but the
+///   raw material for observing connection storms and startup costs,
+///   which per-task events cannot see.  Validators and counters ignore
+///   it;
 /// * `Created` — the scheduler learned of the task;
 /// * `Ready` — every dependency is satisfied, the task is eligible;
 /// * `Launched` — the scheduler handed it to an executor (pmake spawned
@@ -65,6 +79,7 @@ pub const SCHEMA: &str = "threesched-trace/1";
 ///   and its `Ready`/`Launched`/`Started` cycle may repeat.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EventKind {
+    Connected,
     Created,
     Ready,
     Launched,
@@ -75,7 +90,8 @@ pub enum EventKind {
 }
 
 impl EventKind {
-    pub const ALL: [EventKind; 7] = [
+    pub const ALL: [EventKind; 8] = [
+        EventKind::Connected,
         EventKind::Created,
         EventKind::Ready,
         EventKind::Launched,
@@ -87,6 +103,7 @@ impl EventKind {
 
     pub fn name(&self) -> &'static str {
         match self {
+            EventKind::Connected => "connected",
             EventKind::Created => "created",
             EventKind::Ready => "ready",
             EventKind::Launched => "launched",
@@ -365,7 +382,7 @@ pub fn parse_jsonl(text: &str) -> Result<(String, Vec<TaskEvent>)> {
         }
         if line.contains("\"schema\":") {
             let schema = json_str_field(line, "schema").unwrap_or_default();
-            if schema != SCHEMA {
+            if !ACCEPTED_SCHEMAS.contains(&schema.as_str()) {
                 bail!("line {}: unsupported trace schema {schema:?} (want {SCHEMA})", n + 1);
             }
             if let Some(s) = json_str_field(line, "source") {
@@ -408,7 +425,8 @@ fn rank(kind: EventKind) -> u8 {
         EventKind::Launched => 2,
         EventKind::Started => 3,
         EventKind::Finished | EventKind::Failed => 4,
-        EventKind::Requeued => u8::MAX, // handled specially
+        EventKind::Requeued => u8::MAX,  // handled specially
+        EventKind::Connected => u8::MAX, // worker-scoped: filtered before ranking
     }
 }
 
@@ -421,12 +439,19 @@ fn rank(kind: EventKind) -> u8 {
 ///   Finished/Failed`, with each stage at most once per attempt;
 /// * `Requeued` only after `Launched`/`Started`, resetting the attempt
 ///   (a fresh `Ready → Launched → Started` cycle may follow).
+///
+/// `Connected` events are worker-scoped, not task-scoped: they are
+/// ignored here (a worker may attach any number of times and never run
+/// a task).
 pub fn validate(events: &[TaskEvent]) -> Result<()> {
     use std::collections::HashMap;
     // group by task, preserving stream order
     let mut by_task: HashMap<&str, Vec<&TaskEvent>> = HashMap::new();
     let mut order: Vec<&str> = Vec::new();
     for ev in events {
+        if ev.kind == EventKind::Connected {
+            continue;
+        }
         let slot = by_task.entry(&ev.task).or_default();
         if slot.is_empty() {
             order.push(&ev.task);
@@ -506,6 +531,8 @@ pub fn counts(events: &[TaskEvent]) -> TraceCounts {
     let mut out = TraceCounts::default();
     for ev in events {
         match ev.kind {
+            // worker attach: not a task at all
+            EventKind::Connected => {}
             EventKind::Launched | EventKind::Started => {
                 attempted.insert(&ev.task, true);
             }
@@ -627,6 +654,17 @@ mod tests {
     }
 
     #[test]
+    fn older_schema_versions_still_load() {
+        // /1 traces (pre-Connected vocabulary) are a strict subset of the
+        // current schema: readers must keep accepting them
+        let text = "{\"schema\":\"threesched-trace/1\",\"source\":\"dwork\"}\n\
+                    {\"task\":\"a\",\"kind\":\"created\",\"t\":0.000000000,\"who\":\"\"}\n";
+        let (source, evs) = parse_jsonl(text).unwrap();
+        assert_eq!(source, "dwork");
+        assert_eq!(evs.len(), 1);
+    }
+
+    #[test]
     fn validate_accepts_full_lifecycle() {
         let mut evs = lifecycle("a", 0.0, true);
         evs.extend(lifecycle("b", 0.5, false));
@@ -702,6 +740,28 @@ mod tests {
             ev("b", EventKind::Failed, 0.2, ""),
         ];
         validate(&evs).unwrap();
+    }
+
+    #[test]
+    fn connected_events_are_worker_scoped_and_ignored_by_task_checks() {
+        // a worker attaches (twice — e.g. a lingering pool rejoining),
+        // runs one task; another attaches and never runs anything.  The
+        // validator and the counters must not treat the attaches as a
+        // task lifecycle.
+        let mut evs = vec![ev("", EventKind::Connected, 0.0, "w0")];
+        evs.extend(lifecycle("a", 0.1, true));
+        evs.push(ev("", EventKind::Connected, 1.5, "w0"));
+        evs.push(ev("", EventKind::Connected, 1.6, "w1"));
+        validate(&evs).unwrap();
+        let c = counts(&evs);
+        assert_eq!(c.completed, 1);
+        assert_eq!(c.failed, 0);
+        assert_eq!(c.skipped, 0);
+        // and the schema round-trips them like any other event
+        let text = to_jsonl("dwork-worker", &evs);
+        let (_, parsed) = parse_jsonl(&text).unwrap();
+        assert_eq!(parsed, evs);
+        assert_eq!(EventKind::from_name("connected"), Some(EventKind::Connected));
     }
 
     #[test]

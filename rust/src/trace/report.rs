@@ -55,6 +55,11 @@ impl TraceReport {
         let mut cursors: HashMap<&str, Cursor> = HashMap::new();
         let mut last_activity: HashMap<&str, f64> = HashMap::new();
         for ev in events {
+            // worker attach, not a task: skip before the cursor map sees
+            // its empty task name
+            if ev.kind == EventKind::Connected {
+                continue;
+            }
             if !ev.who.is_empty()
                 && matches!(
                     ev.kind,
@@ -69,6 +74,7 @@ impl TraceReport {
             }
             let c = cursors.entry(&ev.task).or_default();
             match ev.kind {
+                EventKind::Connected => unreachable!("filtered above"),
                 EventKind::Created => {}
                 EventKind::Ready => c.ready = Some(ev.t),
                 EventKind::Launched => {

@@ -56,6 +56,11 @@ impl PhaseSamples {
         let mut cursors: HashMap<&str, Cursor> = HashMap::new();
         let mut whos: std::collections::HashSet<&str> = Default::default();
         for ev in events {
+            // worker attach, not a task: skip before the cursor map
+            // sees its empty task name
+            if ev.kind == EventKind::Connected {
+                continue;
+            }
             if !ev.who.is_empty()
                 && matches!(
                     ev.kind,
@@ -69,6 +74,7 @@ impl PhaseSamples {
             }
             let c = cursors.entry(&ev.task).or_default();
             match ev.kind {
+                EventKind::Connected => unreachable!("filtered above"),
                 EventKind::Created => c.created = Some(ev.t),
                 EventKind::Ready => c.ready = Some(ev.t),
                 EventKind::Launched => {
@@ -190,11 +196,16 @@ pub fn graph_from_trace(name: &str, events: &[TaskEvent]) -> anyhow::Result<Work
     let mut obs: HashMap<String, Obs> = HashMap::new();
     let mut order: Vec<String> = Vec::new();
     for ev in events {
+        // worker attach, not a task: never becomes a workload node
+        if ev.kind == EventKind::Connected {
+            continue;
+        }
         if !obs.contains_key(&ev.task) {
             order.push(ev.task.clone());
         }
         let o = obs.entry(ev.task.clone()).or_default();
         match ev.kind {
+            EventKind::Connected => unreachable!("filtered above"),
             EventKind::Created => {}
             EventKind::Ready => o.ready = Some(o.ready.unwrap_or(ev.t)),
             EventKind::Launched => o.launched = Some(ev.t),

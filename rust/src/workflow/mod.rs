@@ -20,30 +20,69 @@
 //!   uniformity, file-sync) × the Table-4-calibrated METG cost model
 //!   picks the coordinator whose overhead disappears at the workload's
 //!   task granularity;
-//! * [`run`] — drivers that execute the same graph to completion on any
-//!   back-end (`threesched workflow run --coordinator auto`), including
-//!   the distributed path: [`run::run_dwork_remote`] feeds a long-lived
-//!   TCP dhub (`threesched dhub serve`) drained by independently
-//!   launched worker processes (`threesched dhub worker`).
+//! * [`session`] — **the execution API**: one builder-style
+//!   [`Session`](session::Session) owns the graph, the
+//!   [`Backend`](session::Backend) (typed execution mode — remote dwork
+//!   is data, not a separate function family), the tracer, the
+//!   calibration profile, and the polling knobs, and exposes
+//!   `plan()` / `lower()` / `run()` / `submit()`.  Results come back as
+//!   a typed [`RunOutcome`](session::RunOutcome): the common
+//!   [`RunSummary`](run::RunSummary) view, the
+//!   [`Plan`](session::Plan) that chose the back-end, and per-backend
+//!   detail (pmake `RunReport`s, dwork server counters, mpi-list rank
+//!   stats).  [`WorkerPool`](session::WorkerPool) is the library form
+//!   of `threesched dhub worker`;
+//! * [`run`] — the drivers behind the session, plus the deprecated
+//!   pre-`Session` free functions (kept one release as shims).
 //!
 //! Each coordinator module also gains a `from_workflow` ingestion API
 //! ([`crate::coordinator::pmake::from_workflow`],
 //! [`crate::coordinator::dwork::SchedState::from_workflow`],
 //! [`crate::coordinator::mpilist::from_workflow`]) so external tooling
 //! can feed graphs straight in without the text round-trip.
+//!
+//! # Migrating from the pre-`Session` entry points
+//!
+//! | old entry point | builder call |
+//! |---|---|
+//! | `run_pmake(g, dir, n)` | `Session::new(g).backend(Backend::Pmake).parallelism(n).dir(dir).run()` |
+//! | `run_dwork(g, dir, w, pf)` | `Session::new(g).backend(Backend::Dwork { remote: None }).parallelism(w).prefetch(pf).dir(dir).run()` |
+//! | `run_mpilist(g, dir, p)` | `Session::new(g).backend(Backend::MpiList).parallelism(p).dir(dir).run()` |
+//! | `run_*_traced(…, tracer)` | same builder chain + `.tracer(tracer.clone())` |
+//! | `dispatch(g, tool, p, dir)` | `Session::new(g).backend(Backend::from_tool(tool)).parallelism(p).dir(dir).run()` |
+//! | `run_auto(g, m, p, dir)` | `Session::new(g).cost_model(m.clone()).parallelism(p).dir(dir).run()` — the verdict is `outcome.plan.recommendation` |
+//! | `submit_dwork_remote(g, addr, opts)` | `Session::new(g).backend(Backend::Dwork { remote: Some(addr.into()) }).polling(cfg).submit()` |
+//! | `await_dwork_remote(addr, sub, opts)` | `Submission::wait()` on the value `submit()` returned |
+//! | `run_dwork_remote(g, addr, opts)` | the same dwork-remote builder chain + `.run()` |
+//! | `RemoteOpts { poll, connect_timeout }` | `PollCfg { poll, connect_timeout }` via `.polling(..)` |
+//!
+//! Every old entry point still works this release (as a `#[deprecated]`
+//! shim over the builder); CI builds the tree with `-D deprecated` to
+//! prove nothing in-tree depends on them.
 
 pub mod graph;
 pub mod lower;
 pub mod run;
 pub mod select;
+pub mod session;
 pub mod spec;
 
 pub use graph::{GraphStats, Payload, TaskSpec, WorkflowGraph};
 pub use lower::{to_dwork, to_mpilist, to_pmake, DworkTask, LoweredPmake, MpiListPlan};
+pub use run::{RemoteSubmission, RunSummary};
+pub use select::{select, Assessment, Recommendation};
+pub use session::{
+    Backend, BackendDetail, Lowered, Plan, PollCfg, PoolStats, RankStats, RemoteTarget,
+    RunOutcome, Session, Submission, WorkerPool,
+};
+pub use spec::{parse_workflow, parse_workflow_file, to_yaml};
+
+// The pre-Session execution API, re-exported one more release so
+// downstream `workflow::run_auto(..)` call sites keep compiling (with a
+// deprecation warning pointing at the builder equivalent).
+#[allow(deprecated)]
 pub use run::{
     await_dwork_remote, dispatch, dispatch_traced, run_auto, run_auto_traced, run_dwork,
     run_dwork_remote, run_dwork_traced, run_mpilist, run_mpilist_traced, run_pmake,
-    run_pmake_traced, submit_dwork_remote, RemoteOpts, RemoteSubmission, RunSummary,
+    run_pmake_traced, submit_dwork_remote, RemoteOpts,
 };
-pub use select::{select, Assessment, Recommendation};
-pub use spec::{parse_workflow, parse_workflow_file, to_yaml};

@@ -1,5 +1,5 @@
-//! Execution drivers: run one [`WorkflowGraph`] to completion on any of
-//! the three coordinators (or auto-dispatch through the selector).
+//! Execution drivers behind [`super::session::Session`]: run one
+//! [`WorkflowGraph`] to completion on any of the three coordinators.
 //!
 //! Payload execution is shared: `Command` scripts run under `/bin/sh` in
 //! the campaign directory, `Kernel` payloads run the pure-Rust `atb_N`
@@ -8,6 +8,11 @@
 //! [`WorkflowExecutor`] intercepts before handing the rest of the script
 //! to the shell — a comment to any plain `/bin/sh`, so lowered rules
 //! files stay valid standalone pmake inputs.
+//!
+//! The free functions of the pre-`Session` API (`run_pmake`,
+//! `run_dwork_traced`, `dispatch`, the remote triplet, …) survive one
+//! release as `#[deprecated]` shims delegating to the builder; see each
+//! deprecation note for the equivalent `Session` call.
 
 use std::path::Path;
 use std::time::{Duration, Instant};
@@ -25,7 +30,8 @@ use crate::trace::{EventKind, Tracer};
 
 use super::graph::{Payload, TaskSpec, WorkflowGraph};
 use super::lower;
-use super::select::{select, Recommendation};
+use super::select::Recommendation;
+use super::session::{Backend, PollCfg, RankStats, Session, Submission};
 
 /// Outcome of one workflow execution.  Semantics are identical across
 /// back-ends: `tasks_run` were attempted (success or failure),
@@ -144,18 +150,13 @@ impl Executor for WorkflowExecutor {
 /// Run the workflow under pmake in `dir` (created if missing): lower to
 /// rules/targets text, write both files, parse them back (the round-trip
 /// is part of the contract), build the file DAG and push it onto the
-/// allocation.
-pub fn run_pmake(g: &WorkflowGraph, dir: &Path, nodes: usize) -> Result<RunSummary> {
-    run_pmake_traced(g, dir, nodes, &Tracer::default())
-}
-
-/// [`run_pmake`] with a lifecycle tracer threaded into the scheduler.
-pub fn run_pmake_traced(
+/// allocation.  Returns the per-target reports next to the summary.
+pub(crate) fn pmake_driver(
     g: &WorkflowGraph,
     dir: &Path,
     nodes: usize,
     tracer: &Tracer,
-) -> Result<RunSummary> {
+) -> Result<(Vec<pmake::RunReport>, RunSummary)> {
     std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
     let dir_str = dir.to_string_lossy().to_string();
     let lowered = lower::to_pmake(g, &dir_str)?;
@@ -196,13 +197,14 @@ pub fn run_pmake_traced(
         outcomes.push((dag, report));
     }
     let (run, failed, skipped) = summarize_pmake(&outcomes);
-    Ok(RunSummary {
+    let summary = RunSummary {
         coordinator: Tool::Pmake,
         tasks_run: run,
         tasks_failed: failed,
         tasks_skipped: skipped,
         makespan_s: t0.elapsed().as_secs_f64(),
-    })
+    };
+    Ok((outcomes.into_iter().map(|(_, r)| r).collect(), summary))
 }
 
 /// Aggregate per-target reports into workflow-level counts.  Task
@@ -233,32 +235,27 @@ fn summarize_pmake(outcomes: &[(pmake::Dag, pmake::RunReport)]) -> (usize, usize
 
 // ------------------------------------------------------------------ dwork
 
-/// Run the workflow under dwork: seed an in-proc dhub from the graph and
-/// drain it with `workers` pulling threads.
-pub fn run_dwork(g: &WorkflowGraph, dir: &Path, workers: usize, prefetch: u32) -> Result<RunSummary> {
-    run_dwork_traced(g, dir, workers, prefetch, &Tracer::default())
-}
-
-/// [`run_dwork`] with a lifecycle tracer: the server side records the
-/// Created/Ready/Launched/Finished/Failed transitions, the worker
-/// threads add `Started` into the same stream.
-pub fn run_dwork_traced(
+/// Run the workflow under in-proc dwork: seed a dhub from the graph and
+/// drain it with `workers` pulling threads.  Returns the hub's final
+/// counters next to the summary.
+pub(crate) fn dwork_driver(
     g: &WorkflowGraph,
     dir: &Path,
     workers: usize,
     prefetch: u32,
     tracer: &Tracer,
-) -> Result<RunSummary> {
+) -> Result<(StatusInfo, RunSummary)> {
     std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
     if g.is_empty() {
         // workers would park forever on a hub that never receives a task
-        return Ok(RunSummary {
+        let summary = RunSummary {
             coordinator: Tool::Dwork,
             tasks_run: 0,
             tasks_failed: 0,
             tasks_skipped: 0,
             makespan_s: 0.0,
-        });
+        };
+        return Ok((StatusInfo::default(), summary));
     }
     // the tracer must be in place BEFORE ingestion so Created events land
     let mut state = dwork::SchedState::new();
@@ -302,7 +299,7 @@ pub fn run_dwork_traced(
         bail!("dwork run ended with unfinished tasks");
     }
     let tasks_run: usize = totals.iter().map(|&(r, _)| r as usize).sum();
-    Ok(RunSummary {
+    let summary = RunSummary {
         coordinator: Tool::Dwork,
         tasks_run,
         tasks_failed: totals.iter().map(|&(_, f)| f as usize).sum(),
@@ -310,48 +307,31 @@ pub fn run_dwork_traced(
         // reaching a worker: they are the skipped set
         tasks_skipped: g.len().saturating_sub(tasks_run),
         makespan_s: makespan,
-    })
+    };
+    Ok((state.status(), summary))
 }
 
 // --------------------------------------------------------- dwork (remote)
 
-/// Knobs for the remote-dhub driver.
-#[derive(Clone, Debug)]
-pub struct RemoteOpts {
-    /// status-poll interval while awaiting completion
-    pub poll: Duration,
-    /// how long to keep dialing a hub that is not up yet
-    pub connect_timeout: Duration,
-}
-
-impl Default for RemoteOpts {
-    fn default() -> Self {
-        RemoteOpts {
-            poll: Duration::from_millis(50),
-            connect_timeout: Duration::from_secs(10),
-        }
-    }
-}
-
-fn remote_client(addr: &str, role: &str, opts: &RemoteOpts) -> Client {
+fn remote_client(addr: &str, role: &str, cfg: &PollCfg) -> Client {
     let conn = crate::substrate::transport::tcp::ReconnectConn::new(addr)
-        .with_limits(3, opts.connect_timeout);
+        .with_limits(3, cfg.connect_timeout);
     Client::new(Box::new(conn), format!("wf-{role}-{}", std::process::id()))
 }
 
-/// What [`submit_dwork_remote`] handed the hub: the accounting
-/// [`await_dwork_remote`] needs to turn server-side counters into a
-/// [`RunSummary`].
+/// What a remote submission handed the hub: the accounting the await
+/// loop needs to turn server-side counters into a [`RunSummary`].
+/// Carried by [`super::session::Submission`].
 #[derive(Clone, Debug)]
 pub struct RemoteSubmission {
     /// tasks the hub accepted (successful Create round-trips, duplicate
     /// acks included)
     pub submitted: usize,
-    /// Creates acked as "already exists".  Either a replay of our own
-    /// Create after a reconnect, or a task a previous campaign left on
-    /// the hub — and in the latter case it may have finished *before*
-    /// the baseline, so the await loop must not demand its completion
-    /// show up in the post-baseline deltas (it would hang forever on a
+    /// Creates acked as "duplicate".  Either a replay of our own Create
+    /// after a reconnect, or a task a previous campaign left on the hub
+    /// — and in the latter case it may have finished *before* the
+    /// baseline, so the await loop must not demand its completion show
+    /// up in the post-baseline deltas (it would hang forever on a
     /// shared hub).
     pub duplicate_acks: usize,
     /// tasks never created because an upstream dependency had already
@@ -365,23 +345,23 @@ pub struct RemoteSubmission {
 }
 
 /// Classify a Create failure by the typed [`RefusalCode`] the hub put
-/// on the wire.  The `ERR_MARKER_*` string fallback for pre-code hubs
-/// served its one-version compatibility window and is gone; a hub old
-/// enough to omit the code is now simply an error.  (The server still
-/// embeds the marker strings in its message text so *pre-code clients*
-/// talking to a new hub keep working.)
+/// on the wire.  The typed code is the only classification: the
+/// `ERR_MARKER_*` string fallback (and, since this release, the
+/// server-side embedding of those phrases) served its compatibility
+/// window and is gone, so a hub old enough to omit the code is simply
+/// an error.
 fn create_refusal(e: &anyhow::Error) -> Option<RefusalCode> {
     e.downcast_ref::<ServerError>()?.code
 }
 
 /// Ingest `g` into the remote dhub at `addr`: Create messages in
 /// topological order, exactly what the server's Create API requires.
-pub fn submit_dwork_remote(
+pub(crate) fn remote_submit(
     g: &WorkflowGraph,
     addr: &str,
-    opts: &RemoteOpts,
+    cfg: &PollCfg,
 ) -> Result<RemoteSubmission> {
-    let mut c = remote_client(addr, "submit", opts);
+    let mut c = remote_client(addr, "submit", cfg);
     let baseline = c.status().with_context(|| format!("querying dhub at {addr}"))?;
     let tasks = lower::to_dwork(g)?;
     let mut doomed: std::collections::HashSet<String> = std::collections::HashSet::new();
@@ -424,7 +404,8 @@ pub fn submit_dwork_remote(
 /// Block until the submission has drained out of the hub at `addr`, then
 /// reconstruct the run summary from the server-side counters:
 /// `tasks_run` = completed + failed, `tasks_skipped` = (errored − failed)
-/// + skipped-at-submit.
+/// + skipped-at-submit.  Also returns the final hub counters (the
+/// remote [`super::session::BackendDetail`]).
 ///
 /// Termination, in order of preference: the hub reports fully drained,
 /// or the post-baseline finish count covers every Create including the
@@ -438,12 +419,12 @@ pub fn submit_dwork_remote(
 /// still-running task's eventual finish to nobody (it returns before
 /// that task completes), which is the price of not hanging forever on a
 /// shared hub.
-pub fn await_dwork_remote(
+pub(crate) fn remote_await(
     addr: &str,
     submission: &RemoteSubmission,
-    opts: &RemoteOpts,
-) -> Result<RunSummary> {
-    let mut c = remote_client(addr, "await", opts);
+    cfg: &PollCfg,
+) -> Result<(StatusInfo, RunSummary)> {
+    let mut c = remote_client(addr, "await", cfg);
     let baseline = &submission.baseline;
     let all = submission.submitted as u64;
     let surely_new = submission.submitted.saturating_sub(submission.duplicate_acks) as u64;
@@ -470,45 +451,30 @@ pub fn await_dwork_remote(
             let completed = st.completed.saturating_sub(baseline.completed) as usize;
             let failed = st.failed.saturating_sub(baseline.failed) as usize;
             let errored = st.errored.saturating_sub(baseline.errored) as usize;
-            return Ok(RunSummary {
+            let summary = RunSummary {
                 coordinator: Tool::Dwork,
                 tasks_run: completed + failed,
                 tasks_failed: failed,
                 tasks_skipped: errored.saturating_sub(failed) + submission.skipped_at_submit,
                 makespan_s: t0.elapsed().as_secs_f64(),
-            });
+            };
+            return Ok((st, summary));
         }
-        std::thread::sleep(opts.poll);
+        std::thread::sleep(cfg.poll);
     }
-}
-
-/// Run the workflow on a remote dhub over TCP: submit the graph, then
-/// block until remote workers (joined via `threesched dhub worker`) have
-/// drained it.  The paper's actual deployment scenario — one long-lived
-/// task server, many independently launched worker processes — with the
-/// same [`RunSummary`] semantics as the in-proc [`run_dwork`] driver.
-pub fn run_dwork_remote(g: &WorkflowGraph, addr: &str, opts: &RemoteOpts) -> Result<RunSummary> {
-    let submission = submit_dwork_remote(g, addr, opts)?;
-    await_dwork_remote(addr, &submission, opts)
 }
 
 // --------------------------------------------------------------- mpi-list
 
 /// Run the workflow under mpi-list: `procs` in-process SPMD ranks execute
 /// the static plan phase by phase, with a barrier after each phase and no
-/// other synchronization.
-pub fn run_mpilist(g: &WorkflowGraph, dir: &Path, procs: usize) -> Result<RunSummary> {
-    run_mpilist_traced(g, dir, procs, &Tracer::default())
-}
-
-/// [`run_mpilist`] with a lifecycle tracer; each rank records its own
-/// block's events (`who = "rank<r>"`).
-pub fn run_mpilist_traced(
+/// other synchronization.  Returns per-rank stats next to the summary.
+pub(crate) fn mpilist_driver(
     g: &WorkflowGraph,
     dir: &Path,
     procs: usize,
     tracer: &Tracer,
-) -> Result<RunSummary> {
+) -> Result<(Vec<RankStats>, RunSummary)> {
     std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
     let procs = procs.max(1);
     let plan = lower::to_mpilist(g, procs)?;
@@ -549,21 +515,188 @@ pub fn run_mpilist_traced(
         }
         (run, failed)
     });
-    Ok(RunSummary {
+    let ranks: Vec<RankStats> = per_rank
+        .iter()
+        .enumerate()
+        .map(|(rank, &(tasks_run, tasks_failed))| RankStats { rank, tasks_run, tasks_failed })
+        .collect();
+    let summary = RunSummary {
         coordinator: Tool::MpiList,
         tasks_run: per_rank.iter().map(|&(r, _)| r).sum(),
         tasks_failed: per_rank.iter().map(|&(_, f)| f).sum(),
         // the static plan runs every task regardless of upstream failures
         tasks_skipped: 0,
         makespan_s: t0.elapsed().as_secs_f64(),
-    })
+    };
+    Ok((ranks, summary))
 }
 
-// ------------------------------------------------------------------- auto
+// ------------------------------------------------------- deprecated shims
+//
+// The pre-Session entry points, kept one release as thin delegates.  New
+// code (and everything in-tree — CI builds with `-D deprecated`) goes
+// through `workflow::Session`.
 
-/// Select a coordinator for `g` (METG model + shape) and run it there.
-/// `parallelism` feeds both the selector's scale and the chosen driver
-/// (nodes for pmake, workers for dwork, ranks for mpi-list).
+/// Knobs for the remote-dhub driver (pre-`Session` API).
+#[deprecated(since = "0.3.0", note = "use workflow::PollCfg with Session::polling")]
+#[derive(Clone, Debug)]
+pub struct RemoteOpts {
+    /// status-poll interval while awaiting completion
+    pub poll: Duration,
+    /// how long to keep dialing a hub that is not up yet
+    pub connect_timeout: Duration,
+}
+
+#[allow(deprecated)]
+impl Default for RemoteOpts {
+    fn default() -> Self {
+        let cfg = PollCfg::default();
+        RemoteOpts { poll: cfg.poll, connect_timeout: cfg.connect_timeout }
+    }
+}
+
+#[allow(deprecated)]
+impl RemoteOpts {
+    fn poll_cfg(&self) -> PollCfg {
+        PollCfg { poll: self.poll, connect_timeout: self.connect_timeout }
+    }
+}
+
+#[deprecated(
+    since = "0.3.0",
+    note = "use Session::new(g).backend(Backend::Pmake).parallelism(nodes).dir(dir).run()"
+)]
+pub fn run_pmake(g: &WorkflowGraph, dir: &Path, nodes: usize) -> Result<RunSummary> {
+    run_pmake_traced(g, dir, nodes, &Tracer::default())
+}
+
+#[deprecated(
+    since = "0.3.0",
+    note = "use Session::new(g).backend(Backend::Pmake).tracer(t).run() — the tracer lives \
+            on the session now"
+)]
+pub fn run_pmake_traced(
+    g: &WorkflowGraph,
+    dir: &Path,
+    nodes: usize,
+    tracer: &Tracer,
+) -> Result<RunSummary> {
+    Ok(Session::new(g)
+        .backend(Backend::Pmake)
+        .parallelism(nodes)
+        .dir(dir)
+        .tracer(tracer.clone())
+        .run()?
+        .summary)
+}
+
+#[deprecated(
+    since = "0.3.0",
+    note = "use Session::new(g).backend(Backend::Dwork { remote: None }).parallelism(workers)\
+            .prefetch(prefetch).dir(dir).run()"
+)]
+pub fn run_dwork(g: &WorkflowGraph, dir: &Path, workers: usize, prefetch: u32) -> Result<RunSummary> {
+    run_dwork_traced(g, dir, workers, prefetch, &Tracer::default())
+}
+
+#[deprecated(
+    since = "0.3.0",
+    note = "use Session::new(g).backend(Backend::Dwork { remote: None }).tracer(t).run() — \
+            the tracer lives on the session now"
+)]
+pub fn run_dwork_traced(
+    g: &WorkflowGraph,
+    dir: &Path,
+    workers: usize,
+    prefetch: u32,
+    tracer: &Tracer,
+) -> Result<RunSummary> {
+    Ok(Session::new(g)
+        .backend(Backend::Dwork { remote: None })
+        .parallelism(workers)
+        .prefetch(prefetch)
+        .dir(dir)
+        .tracer(tracer.clone())
+        .run()?
+        .summary)
+}
+
+#[deprecated(
+    since = "0.3.0",
+    note = "use Session::new(g).backend(Backend::MpiList).parallelism(procs).dir(dir).run()"
+)]
+pub fn run_mpilist(g: &WorkflowGraph, dir: &Path, procs: usize) -> Result<RunSummary> {
+    run_mpilist_traced(g, dir, procs, &Tracer::default())
+}
+
+#[deprecated(
+    since = "0.3.0",
+    note = "use Session::new(g).backend(Backend::MpiList).tracer(t).run() — the tracer \
+            lives on the session now"
+)]
+pub fn run_mpilist_traced(
+    g: &WorkflowGraph,
+    dir: &Path,
+    procs: usize,
+    tracer: &Tracer,
+) -> Result<RunSummary> {
+    Ok(Session::new(g)
+        .backend(Backend::MpiList)
+        .parallelism(procs)
+        .dir(dir)
+        .tracer(tracer.clone())
+        .run()?
+        .summary)
+}
+
+#[deprecated(
+    since = "0.3.0",
+    note = "use Session::new(g).backend(Backend::Dwork { remote: Some(addr.into()) })\
+            .polling(cfg).submit() and keep the returned Submission"
+)]
+pub fn submit_dwork_remote(
+    g: &WorkflowGraph,
+    addr: &str,
+    opts: &RemoteOpts,
+) -> Result<RemoteSubmission> {
+    Ok(Session::new(g)
+        .backend(Backend::Dwork { remote: Some(addr.into()) })
+        .polling(opts.poll_cfg())
+        .submit()?
+        .accounting)
+}
+
+#[deprecated(
+    since = "0.3.0",
+    note = "use the Submission returned by Session::submit — Submission::wait() blocks and \
+            yields the full RunOutcome"
+)]
+pub fn await_dwork_remote(
+    addr: &str,
+    submission: &RemoteSubmission,
+    opts: &RemoteOpts,
+) -> Result<RunSummary> {
+    Ok(Submission::resume(addr, submission.clone(), opts.poll_cfg()).wait()?.summary)
+}
+
+#[deprecated(
+    since = "0.3.0",
+    note = "use Session::new(g).backend(Backend::Dwork { remote: Some(addr.into()) })\
+            .polling(cfg).run()"
+)]
+pub fn run_dwork_remote(g: &WorkflowGraph, addr: &str, opts: &RemoteOpts) -> Result<RunSummary> {
+    Ok(Session::new(g)
+        .backend(Backend::Dwork { remote: Some(addr.into()) })
+        .polling(opts.poll_cfg())
+        .run()?
+        .summary)
+}
+
+#[deprecated(
+    since = "0.3.0",
+    note = "use Session::new(g).cost_model(m).parallelism(p).dir(dir).run() — the outcome's \
+            plan.recommendation carries the selector verdict"
+)]
 pub fn run_auto(
     g: &WorkflowGraph,
     m: &CostModel,
@@ -573,8 +706,11 @@ pub fn run_auto(
     run_auto_traced(g, m, parallelism, dir, &Tracer::default())
 }
 
-/// [`run_auto`] with a lifecycle tracer threaded into whichever back-end
-/// the selector picks.
+#[deprecated(
+    since = "0.3.0",
+    note = "use Session::new(g).cost_model(m).tracer(t).run() — the outcome's \
+            plan.recommendation carries the selector verdict"
+)]
 pub fn run_auto_traced(
     g: &WorkflowGraph,
     m: &CostModel,
@@ -582,17 +718,33 @@ pub fn run_auto_traced(
     dir: &Path,
     tracer: &Tracer,
 ) -> Result<(Recommendation, RunSummary)> {
-    let rec = select(g, m, parallelism)?;
-    let summary = dispatch_traced(g, rec.choice, parallelism, dir, tracer)?;
-    Ok((rec, summary))
+    let outcome = Session::new(g)
+        .backend(Backend::Auto)
+        .cost_model(m.clone())
+        .parallelism(parallelism)
+        .dir(dir)
+        .tracer(tracer.clone())
+        .run()?;
+    let rec = outcome
+        .plan
+        .recommendation
+        .expect("an Auto plan always carries the selector's recommendation");
+    Ok((rec, outcome.summary))
 }
 
-/// Run `g` on an explicitly chosen coordinator.
+#[deprecated(
+    since = "0.3.0",
+    note = "use Session::new(g).backend(Backend::from_tool(tool)).parallelism(p).dir(dir).run()"
+)]
 pub fn dispatch(g: &WorkflowGraph, tool: Tool, parallelism: usize, dir: &Path) -> Result<RunSummary> {
     dispatch_traced(g, tool, parallelism, dir, &Tracer::default())
 }
 
-/// [`dispatch`] with a lifecycle tracer threaded into the chosen driver.
+#[deprecated(
+    since = "0.3.0",
+    note = "use Session::new(g).backend(Backend::from_tool(tool)).tracer(t).run() — the \
+            tracer lives on the session now"
+)]
 pub fn dispatch_traced(
     g: &WorkflowGraph,
     tool: Tool,
@@ -600,11 +752,13 @@ pub fn dispatch_traced(
     dir: &Path,
     tracer: &Tracer,
 ) -> Result<RunSummary> {
-    match tool {
-        Tool::Pmake => run_pmake_traced(g, dir, parallelism, tracer),
-        Tool::Dwork => run_dwork_traced(g, dir, parallelism, 1, tracer),
-        Tool::MpiList => run_mpilist_traced(g, dir, parallelism, tracer),
-    }
+    Ok(Session::new(g)
+        .backend(Backend::from_tool(tool))
+        .parallelism(parallelism)
+        .dir(dir)
+        .tracer(tracer.clone())
+        .run()?
+        .summary)
 }
 
 #[cfg(test)]
@@ -621,6 +775,10 @@ mod tests {
         let _ = std::fs::remove_dir_all(&d);
         std::fs::create_dir_all(&d).unwrap();
         d
+    }
+
+    fn pmake_session<'g>(g: &'g WorkflowGraph, dir: &Path, nodes: usize) -> Session<'g> {
+        Session::new(g).backend(Backend::Pmake).parallelism(nodes).dir(dir)
     }
 
     fn file_pipeline() -> WorkflowGraph {
@@ -646,33 +804,17 @@ mod tests {
     #[test]
     fn create_refusal_reads_only_the_typed_code() {
         // the ERR_MARKER_* string fallback is gone: a code-less refusal
-        // (pre-code hub) is unclassified even when the text matches
+        // (pre-code hub) is unclassified even when the text matches the
+        // legacy marker phrases
+        use crate::coordinator::dwork::state::ERR_MARKER_DUPLICATE;
         let coded: anyhow::Error =
             ServerError { code: Some(RefusalCode::Duplicate), msg: "task already exists".into() }
                 .into();
         assert_eq!(create_refusal(&coded), Some(RefusalCode::Duplicate));
         let uncoded: anyhow::Error =
-            ServerError { code: None, msg: format!("task {}", dwork::ERR_MARKER_DUPLICATE) }
-                .into();
+            ServerError { code: None, msg: format!("task {ERR_MARKER_DUPLICATE}") }.into();
         assert_eq!(create_refusal(&uncoded), None);
         assert_eq!(create_refusal(&anyhow::anyhow!("plain error")), None);
-    }
-
-    #[test]
-    fn same_graph_completes_on_all_three_backends() {
-        let g = file_pipeline();
-        for tool in Tool::ALL {
-            let dir = tmp(&format!("all3-{}", tool.name().replace('-', "")));
-            let summary = dispatch(&g, tool, 2, &dir).unwrap();
-            assert_eq!(summary.tasks_run, 3, "{}", tool.name());
-            assert_eq!(summary.tasks_failed, 0, "{}", tool.name());
-            assert!(
-                dir.join("sum.txt").exists(),
-                "{}: sink output missing",
-                tool.name()
-            );
-            let _ = std::fs::remove_dir_all(&dir);
-        }
     }
 
     #[test]
@@ -690,8 +832,13 @@ mod tests {
         .unwrap();
         for tool in Tool::ALL {
             let dir = tmp(&format!("kout-{}", tool.name().replace('-', "")));
-            let summary = dispatch(&g, tool, 2, &dir).unwrap();
-            assert!(summary.all_ok(), "{}: {summary:?}", tool.name());
+            let outcome = Session::new(&g)
+                .backend(Backend::from_tool(tool))
+                .parallelism(2)
+                .dir(&dir)
+                .run()
+                .unwrap();
+            assert!(outcome.all_ok(), "{}: {:?}", tool.name(), outcome.summary);
             assert!(dir.join("c.ok").exists(), "{}", tool.name());
             let _ = std::fs::remove_dir_all(&dir);
         }
@@ -709,8 +856,13 @@ mod tests {
         .unwrap();
         for tool in Tool::ALL {
             let dir = tmp(&format!("nested-{}", tool.name().replace('-', "")));
-            let summary = dispatch(&g, tool, 2, &dir).unwrap();
-            assert!(summary.all_ok(), "{}: {summary:?}", tool.name());
+            let outcome = Session::new(&g)
+                .backend(Backend::from_tool(tool))
+                .parallelism(2)
+                .dir(&dir)
+                .run()
+                .unwrap();
+            assert!(outcome.all_ok(), "{}: {:?}", tool.name(), outcome.summary);
             let _ = std::fs::remove_dir_all(&dir);
         }
     }
@@ -720,7 +872,7 @@ mod tests {
         let g = file_pipeline();
         let dir = tmp("clobber");
         std::fs::write(dir.join("rules.yaml"), "hand: made\n").unwrap();
-        let err = run_pmake(&g, &dir, 1).unwrap_err();
+        let err = pmake_session(&g, &dir, 1).run().unwrap_err();
         assert!(err.to_string().contains("refusing to overwrite"), "{err}");
         assert_eq!(
             std::fs::read_to_string(dir.join("rules.yaml")).unwrap(),
@@ -729,9 +881,9 @@ mod tests {
         );
         // rerunning over our OWN previous output is fine
         let _ = std::fs::remove_file(dir.join("rules.yaml"));
-        run_pmake(&g, &dir, 1).unwrap();
-        let summary = run_pmake(&g, &dir, 1).unwrap();
-        assert!(summary.all_ok(), "{summary:?}");
+        pmake_session(&g, &dir, 1).run().unwrap();
+        let outcome = pmake_session(&g, &dir, 1).run().unwrap();
+        assert!(outcome.all_ok(), "{:?}", outcome.summary);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -742,23 +894,9 @@ mod tests {
             .outputs(&["ran.txt"]))
             .unwrap();
         let dir = tmp("marker");
-        let summary = run_pmake(&g, &dir, 1).unwrap();
-        assert!(summary.all_ok(), "{summary:?}");
+        let outcome = pmake_session(&g, &dir, 1).run().unwrap();
+        assert!(outcome.all_ok(), "{:?}", outcome.summary);
         assert!(dir.join("ran.txt").exists());
-        let _ = std::fs::remove_dir_all(&dir);
-    }
-
-    #[test]
-    fn failing_command_reported_not_run_under_dwork() {
-        let mut g = WorkflowGraph::new("fail");
-        g.add_task(TaskSpec::command("boom", "exit 3")).unwrap();
-        g.add_task(TaskSpec::command("child", "true").after(&["boom"])).unwrap();
-        let dir = tmp("dwork-fail");
-        let summary = run_dwork(&g, &dir, 1, 0).unwrap();
-        assert_eq!(summary.tasks_run, 1, "child never served");
-        assert_eq!(summary.tasks_failed, 1);
-        assert_eq!(summary.tasks_skipped, 1, "child counted as skipped");
-        assert!(!summary.all_ok());
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -770,9 +908,10 @@ mod tests {
             g.add_task(TaskSpec::command(format!("t{i}"), script)).unwrap();
         }
         let dir = tmp("mpilist-fail");
-        let summary = run_mpilist(&g, &dir, 3).unwrap();
-        assert_eq!(summary.tasks_run, 6);
-        assert_eq!(summary.tasks_failed, 1);
+        let outcome =
+            Session::new(&g).backend(Backend::MpiList).parallelism(3).dir(&dir).run().unwrap();
+        assert_eq!(outcome.summary.tasks_run, 6);
+        assert_eq!(outcome.summary.tasks_failed, 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -854,25 +993,20 @@ tb:
     fn empty_workflow_zero_summary_under_dwork() {
         let g = WorkflowGraph::new("void");
         let dir = tmp("dwork-empty");
-        let summary = run_dwork(&g, &dir, 2, 1).unwrap();
-        assert_eq!(summary.tasks_run, 0);
-        assert!(summary.all_ok());
+        let outcome = Session::new(&g)
+            .backend(Backend::Dwork { remote: None })
+            .parallelism(2)
+            .dir(&dir)
+            .run()
+            .unwrap();
+        assert_eq!(outcome.summary.tasks_run, 0);
+        assert!(outcome.all_ok());
         let _ = std::fs::remove_dir_all(&dir);
     }
 
-    // NOTE: the TCP remote-driver equivalence path (run_dwork_remote vs
-    // run_dwork over real sockets, failure propagation, worker death) is
+    // NOTE: the TCP remote-driver equivalence path (remote Session vs
+    // in-proc over real sockets, failure propagation, worker death) is
     // covered end-to-end in rust/tests/dwork_remote.rs — not duplicated
-    // here.
-
-    #[test]
-    fn auto_runs_the_selected_backend() {
-        let g = file_pipeline();
-        let dir = tmp("auto");
-        let (rec, summary) = run_auto(&g, &CostModel::paper(), 2, &dir).unwrap();
-        assert_eq!(rec.choice, summary.coordinator);
-        assert_eq!(summary.tasks_run, 3);
-        assert!(summary.all_ok());
-        let _ = std::fs::remove_dir_all(&dir);
-    }
+    // here.  Session-vs-legacy-shim equivalence on random DAGs lives in
+    // rust/tests/session_api.rs.
 }

@@ -1,0 +1,919 @@
+//! The unified execution API: one builder, one outcome type, every
+//! back-end.
+//!
+//! Before this module, every cross-cutting execution feature doubled the
+//! driver surface: `run_pmake`/`run_pmake_traced`, `run_dwork` plus a
+//! remote triplet, per-call `RemoteOpts`, a calibration side-channel on
+//! some entry points and not others.  [`Session`] collapses all of it
+//! into one context object that owns the graph reference, the execution
+//! target, and the telemetry/calibration hooks — the shape task-server
+//! systems like Rain and Balsam converged on — so new scenarios (new
+//! back-ends, remote fan-out, elastic pools) are additive data on
+//! [`Backend`], not new function families.
+//!
+//! ```no_run
+//! use threesched::workflow::{Backend, Session, TaskSpec, WorkflowGraph};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut g = WorkflowGraph::new("demo");
+//! g.add_task(TaskSpec::command("gen", "echo hi > out.txt").outputs(&["out.txt"]))?;
+//! g.add_task(TaskSpec::kernel("crunch", "atb_32", 7).after(&["gen"]))?;
+//!
+//! // inspect what would run, without running it
+//! let plan = Session::new(&g).parallelism(4).plan()?;
+//! println!("{}", plan.render());
+//!
+//! // run it (Backend::Auto is the default: the selector picks)
+//! let outcome = Session::new(&g)
+//!     .backend(Backend::Auto)
+//!     .parallelism(4)
+//!     .dir("/tmp/demo")
+//!     .run()?;
+//! println!(
+//!     "{}: {} tasks run, {} failed",
+//!     outcome.summary.coordinator.name(),
+//!     outcome.summary.tasks_run,
+//!     outcome.summary.tasks_failed
+//! );
+//! # Ok(()) }
+//! ```
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::calibrate::CalibrationProfile;
+use crate::coordinator::dwork::{self, Client, StatusInfo};
+use crate::coordinator::pmake;
+use crate::metg::simmodels::Tool;
+use crate::substrate::cluster::costs::CostModel;
+use crate::substrate::transport::tcp::TcpClient;
+use crate::trace::Tracer;
+
+use super::graph::{Payload, WorkflowGraph};
+use super::lower::{self, DworkTask, LoweredPmake, MpiListPlan};
+use super::run::{self, RemoteSubmission, RunSummary};
+use super::select::{select, Recommendation};
+
+// ----------------------------------------------------------------- config
+
+/// Where a [`Session`] executes.  Execution modes are *data*: the remote
+/// dwork deployment is a field on [`Backend::Dwork`], not a separate
+/// function family.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// Let the METG + shape selector pick (the default).
+    #[default]
+    Auto,
+    /// File-synchronized parallel make.
+    Pmake,
+    /// The task-list server; `remote: Some(..)` feeds a long-lived TCP
+    /// dhub instead of spawning an in-proc hub + worker threads.
+    Dwork { remote: Option<RemoteTarget> },
+    /// Static bulk-synchronous rank lists.
+    MpiList,
+}
+
+impl Backend {
+    /// The explicit backend for a coordinator the caller already chose.
+    pub fn from_tool(tool: Tool) -> Backend {
+        match tool {
+            Tool::Pmake => Backend::Pmake,
+            Tool::Dwork => Backend::Dwork { remote: None },
+            Tool::MpiList => Backend::MpiList,
+        }
+    }
+
+    /// Parse a CLI-style name: `auto | pmake | dwork | mpilist | mpi-list`.
+    pub fn from_name(name: &str) -> Option<Backend> {
+        match name {
+            "auto" => Some(Backend::Auto),
+            "pmake" => Some(Backend::Pmake),
+            "dwork" => Some(Backend::Dwork { remote: None }),
+            "mpilist" | "mpi-list" => Some(Backend::MpiList),
+            _ => None,
+        }
+    }
+}
+
+/// A remote dhub to feed over TCP (`threesched dhub serve`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RemoteTarget {
+    pub addr: String,
+}
+
+impl RemoteTarget {
+    pub fn new(addr: impl Into<String>) -> RemoteTarget {
+        RemoteTarget { addr: addr.into() }
+    }
+}
+
+impl From<&str> for RemoteTarget {
+    fn from(addr: &str) -> RemoteTarget {
+        RemoteTarget::new(addr)
+    }
+}
+
+impl From<String> for RemoteTarget {
+    fn from(addr: String) -> RemoteTarget {
+        RemoteTarget::new(addr)
+    }
+}
+
+/// Polling knobs for the remote paths (the successor of the old
+/// `RemoteOpts`): how often to poll a hub for completion, and how long
+/// to keep dialing one that is not up yet.
+#[derive(Clone, Debug)]
+pub struct PollCfg {
+    /// status-poll interval while awaiting completion
+    pub poll: Duration,
+    /// how long to keep dialing a hub that is not up yet
+    pub connect_timeout: Duration,
+}
+
+impl Default for PollCfg {
+    fn default() -> Self {
+        PollCfg { poll: Duration::from_millis(50), connect_timeout: Duration::from_secs(10) }
+    }
+}
+
+fn default_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2)
+}
+
+// ------------------------------------------------------------------- plan
+
+/// The resolved execution decision: which coordinator, at what scale,
+/// against which target — plus the selector's full reasoning when the
+/// backend was [`Backend::Auto`].  Produced by [`Session::plan`] without
+/// executing anything.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// the coordinator that will run the graph
+    pub tool: Tool,
+    /// nodes (pmake) / workers (dwork) / ranks (mpi-list); 0 for remote
+    /// deployments, where execution parallelism is whatever worker
+    /// pools joined the hub
+    pub parallelism: usize,
+    /// remote dhub target, when the dwork deployment is distributed
+    pub remote: Option<RemoteTarget>,
+    /// the selector's assessments; `Some` iff the backend was `Auto`
+    pub recommendation: Option<Recommendation>,
+}
+
+impl Plan {
+    /// Human-facing report: the selector's full table for `Auto`, a
+    /// one-liner for an explicitly forced backend.
+    pub fn render(&self) -> String {
+        match (&self.recommendation, &self.remote) {
+            (Some(rec), _) => rec.render(),
+            (None, Some(t)) => format!(
+                "backend: {} (remote dhub at {}; parallelism = whatever worker pools \
+                 joined the hub)\n",
+                self.tool.name(),
+                t.addr
+            ),
+            (None, None) => format!(
+                "backend: {} (explicit, selector bypassed) at parallelism {}\n",
+                self.tool.name(),
+                self.parallelism
+            ),
+        }
+    }
+}
+
+/// A lowered (but not executed) workflow, from [`Session::lower`].
+#[derive(Clone, Debug)]
+pub enum Lowered {
+    /// pmake `rules.yaml` / `targets.yaml` text
+    Pmake(LoweredPmake),
+    /// dwork task list in topological creation order
+    Dwork(Vec<DworkTask>),
+    /// mpi-list static bulk-synchronous rank plan
+    MpiList(MpiListPlan),
+}
+
+// ---------------------------------------------------------------- outcome
+
+/// Per-rank accounting from an mpi-list run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RankStats {
+    pub rank: usize,
+    pub tasks_run: usize,
+    pub tasks_failed: usize,
+}
+
+/// What each back-end knows beyond the common [`RunSummary`] view.
+#[derive(Clone, Debug)]
+pub enum BackendDetail {
+    /// one [`pmake::RunReport`] per target (launch overhead, launch
+    /// order, per-target makespan)
+    Pmake { reports: Vec<pmake::RunReport> },
+    /// final hub counters after the in-proc run drained
+    Dwork { server: StatusInfo },
+    /// what was handed to the remote hub, and its counters at drain
+    DworkRemote { submission: RemoteSubmission, server: StatusInfo },
+    /// per-rank run/failed counts from the static plan
+    MpiList { ranks: Vec<RankStats> },
+}
+
+/// The typed result of [`Session::run`]: the common summary every
+/// back-end can produce, the [`Plan`] that chose the back-end, and the
+/// per-backend detail the old `RunSummary`-only API threw away.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    pub plan: Plan,
+    pub summary: RunSummary,
+    pub detail: BackendDetail,
+}
+
+impl RunOutcome {
+    /// No failures and nothing skipped.
+    pub fn all_ok(&self) -> bool {
+        self.summary.all_ok()
+    }
+}
+
+// ---------------------------------------------------------------- session
+
+/// One workflow execution context: graph + backend + every cross-cutting
+/// knob (parallelism, campaign dir, tracer, calibration, polling) in a
+/// single builder, carried through all three lowerings.
+///
+/// Defaults reproduce the historical free-function behavior exactly:
+/// `Backend::Auto`, the machine's available parallelism, the current
+/// directory, a disabled tracer, the Table-4 cost model, prefetch 1.
+/// See the [module docs](crate::workflow::session) for a worked example.
+#[derive(Clone, Debug)]
+pub struct Session<'g> {
+    graph: &'g WorkflowGraph,
+    backend: Backend,
+    parallelism: Option<usize>,
+    dir: PathBuf,
+    tracer: Tracer,
+    model: CostModel,
+    poll: PollCfg,
+    prefetch: u32,
+}
+
+impl<'g> Session<'g> {
+    pub fn new(graph: &'g WorkflowGraph) -> Session<'g> {
+        Session {
+            graph,
+            backend: Backend::Auto,
+            parallelism: None,
+            dir: PathBuf::from("."),
+            tracer: Tracer::default(),
+            model: CostModel::paper(),
+            poll: PollCfg::default(),
+            prefetch: 1,
+        }
+    }
+
+    /// Where to execute (default [`Backend::Auto`]).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Target scale: nodes for pmake, workers for dwork, ranks for
+    /// mpi-list — and the selector's scale under `Auto`.  Defaults to
+    /// the machine's available parallelism.
+    pub fn parallelism(mut self, n: usize) -> Self {
+        self.parallelism = Some(n);
+        self
+    }
+
+    /// Campaign working directory (created if missing; default `.`).
+    /// Local back-ends only: under a remote dwork target, payloads
+    /// execute wherever the worker pools run (`dhub worker --dir`).
+    pub fn dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.dir = dir.into();
+        self
+    }
+
+    /// Lifecycle tracer threaded into whichever *local* back-end runs
+    /// (default: disabled, a true no-op in the hot paths).  A session
+    /// tracer cannot observe remote execution, so combining an enabled
+    /// tracer with a remote dwork target is an error at
+    /// [`Session::run`]/[`Session::submit`] — trace the hub
+    /// (`dhub serve --trace`) and/or the workers (`dhub worker --trace`)
+    /// instead.
+    pub fn tracer(mut self, tracer: Tracer) -> Self {
+        self.tracer = tracer;
+        self
+    }
+
+    /// Price backends with a fitted calibration profile instead of the
+    /// Table-4 defaults (affects [`Backend::Auto`] selection only).
+    pub fn calibration(mut self, profile: &CalibrationProfile) -> Self {
+        self.model = profile.model();
+        self
+    }
+
+    /// Price backends with an explicit cost model (the lower-level form
+    /// of [`Session::calibration`]).
+    pub fn cost_model(mut self, model: CostModel) -> Self {
+        self.model = model;
+        self
+    }
+
+    /// Remote-path polling knobs (ignored for local backends).
+    pub fn polling(mut self, poll: PollCfg) -> Self {
+        self.poll = poll;
+        self
+    }
+
+    /// dwork worker prefetch depth for the in-proc driver (default 1;
+    /// ignored elsewhere — remote pools set their own prefetch via
+    /// [`WorkerPool::prefetch`] / `dhub worker --prefetch`).
+    pub fn prefetch(mut self, n: u32) -> Self {
+        self.prefetch = n;
+        self
+    }
+
+    fn resolved_parallelism(&self) -> usize {
+        self.parallelism.unwrap_or_else(default_parallelism).max(1)
+    }
+
+    /// Resolve the execution decision without executing: the selector
+    /// runs for [`Backend::Auto`], explicit backends pass through.
+    /// Touches neither the filesystem nor the network.
+    pub fn plan(&self) -> Result<Plan> {
+        let parallelism = self.resolved_parallelism();
+        let (tool, remote, recommendation) = match &self.backend {
+            Backend::Auto => {
+                let rec = select(self.graph, &self.model, parallelism)?;
+                (rec.choice, None, Some(rec))
+            }
+            Backend::Pmake => (Tool::Pmake, None, None),
+            Backend::Dwork { remote } => (Tool::Dwork, remote.clone(), None),
+            Backend::MpiList => (Tool::MpiList, None, None),
+        };
+        // remote execution happens wherever the worker pools run: the
+        // submitter's core count would be a lie, so the plan says 0
+        // ("unknown/remote") — the same convention Submission::resume uses
+        let parallelism = if remote.is_some() { 0 } else { parallelism };
+        Ok(Plan { tool, parallelism, remote, recommendation })
+    }
+
+    /// Lower the graph for the planned coordinator without executing.
+    /// The pmake lowering embeds the session's campaign dir as the
+    /// target dirname; the mpi-list plan uses the session's parallelism.
+    pub fn lower(&self) -> Result<Lowered> {
+        let plan = self.plan()?;
+        Ok(match plan.tool {
+            Tool::Pmake => {
+                Lowered::Pmake(lower::to_pmake(self.graph, &self.dir.to_string_lossy())?)
+            }
+            Tool::Dwork => Lowered::Dwork(lower::to_dwork(self.graph)?),
+            Tool::MpiList => Lowered::MpiList(lower::to_mpilist(self.graph, plan.parallelism)?),
+        })
+    }
+
+    /// Execute the graph to completion on the planned back-end.
+    pub fn run(&self) -> Result<RunOutcome> {
+        let plan = self.plan()?;
+        // a remote target only ever appears on the dwork plan: submit,
+        // then block for the server-side drain
+        if plan.remote.is_some() {
+            return self.submit_with_plan(plan)?.wait();
+        }
+        let (summary, detail) = match plan.tool {
+            Tool::Pmake => {
+                let (reports, summary) =
+                    run::pmake_driver(self.graph, &self.dir, plan.parallelism, &self.tracer)?;
+                (summary, BackendDetail::Pmake { reports })
+            }
+            Tool::Dwork => {
+                let (server, summary) = run::dwork_driver(
+                    self.graph,
+                    &self.dir,
+                    plan.parallelism,
+                    self.prefetch,
+                    &self.tracer,
+                )?;
+                (summary, BackendDetail::Dwork { server })
+            }
+            Tool::MpiList => {
+                let (ranks, summary) =
+                    run::mpilist_driver(self.graph, &self.dir, plan.parallelism, &self.tracer)?;
+                (summary, BackendDetail::MpiList { ranks })
+            }
+        };
+        Ok(RunOutcome { plan, summary, detail })
+    }
+
+    /// Ingest the graph into the remote hub and detach (the remote
+    /// analogue of firing off a campaign and walking away).  Requires
+    /// `Backend::Dwork { remote: Some(..) }`; block later with
+    /// [`Submission::wait`].
+    pub fn submit(&self) -> Result<Submission> {
+        let plan = self.plan()?;
+        self.submit_with_plan(plan)
+    }
+
+    fn submit_with_plan(&self, plan: Plan) -> Result<Submission> {
+        let Some(target) = plan.remote.clone() else {
+            bail!(
+                "submit() needs a remote target: use Backend::Dwork {{ remote: Some(..) }} \
+                 (a local run has nothing to detach from)"
+            );
+        };
+        // refuse rather than silently drop: a session tracer observes
+        // only local execution, and remote workers never see it
+        if self.tracer.enabled() {
+            bail!(
+                "a session tracer cannot observe remote execution; trace the hub \
+                 (`dhub serve --trace`) and/or the workers (`dhub worker --trace`) instead"
+            );
+        }
+        let accounting = run::remote_submit(self.graph, &target.addr, &self.poll)?;
+        Ok(Submission { plan, accounting, poll: self.poll.clone() })
+    }
+}
+
+/// A detached remote submission: what the hub accepted, plus everything
+/// needed to poll it to completion.
+#[derive(Clone, Debug)]
+pub struct Submission {
+    /// the plan the session resolved at submit time
+    pub plan: Plan,
+    /// per-Create accounting ([`Submission::wait`] needs it to turn
+    /// server-side counters into a [`RunSummary`])
+    pub accounting: RemoteSubmission,
+    poll: PollCfg,
+}
+
+impl Submission {
+    /// Rebuild a submission handle from its parts — the cross-process
+    /// detach workflow: submit in one process (persisting
+    /// [`Submission::accounting`]), then resume and [`Submission::wait`]
+    /// from another.  Also the path behind the deprecated
+    /// `await_dwork_remote` shim.
+    pub fn resume(addr: &str, accounting: RemoteSubmission, poll: PollCfg) -> Submission {
+        Submission {
+            plan: Plan {
+                tool: Tool::Dwork,
+                parallelism: 0, // remote: whatever pools joined the hub
+                remote: Some(RemoteTarget::new(addr)),
+                recommendation: None,
+            },
+            accounting,
+            poll,
+        }
+    }
+
+    /// The hub this submission went to.
+    pub fn addr(&self) -> &str {
+        &self.plan.remote.as_ref().expect("submission always has a remote target").addr
+    }
+
+    /// Block until the submission has drained out of the hub, then
+    /// reconstruct the outcome from the server-side counters.
+    pub fn wait(&self) -> Result<RunOutcome> {
+        let (server, summary) = run::remote_await(self.addr(), &self.accounting, &self.poll)?;
+        Ok(RunOutcome {
+            plan: self.plan.clone(),
+            summary,
+            detail: BackendDetail::DworkRemote { submission: self.accounting.clone(), server },
+        })
+    }
+}
+
+// ------------------------------------------------------------ worker pool
+
+/// Aggregate accounting from a [`WorkerPool`] run.
+#[derive(Clone, Debug, Default)]
+pub struct PoolStats {
+    /// the pool's base worker name (thread `i` is `"{name}.{i}"`)
+    pub name: String,
+    pub threads: usize,
+    pub tasks_run: u64,
+    pub tasks_failed: u64,
+    pub compute_s: f64,
+    pub comm_s: f64,
+    pub idle_s: f64,
+}
+
+/// A pool of workflow-aware worker threads joined to a remote dhub —
+/// the library form of `threesched dhub worker`.  Each thread runs the
+/// standard pull loop on task-body payloads (`Payload::decode_body`),
+/// parks with exponential backoff on an empty hub, and (with
+/// [`WorkerPool::linger`]) survives campaign boundaries and hub
+/// restarts instead of exiting at drain.
+#[derive(Clone, Debug)]
+pub struct WorkerPool {
+    addr: String,
+    threads: usize,
+    prefetch: u32,
+    dir: PathBuf,
+    base_name: Option<String>,
+    linger: bool,
+    idle_floor: Duration,
+    idle_ceiling: Duration,
+    connect_timeout: Duration,
+    tracer: Tracer,
+}
+
+impl WorkerPool {
+    pub fn new(addr: impl Into<String>) -> WorkerPool {
+        WorkerPool {
+            addr: addr.into(),
+            threads: 1,
+            prefetch: 1,
+            dir: PathBuf::from("."),
+            base_name: None,
+            linger: false,
+            idle_floor: Duration::from_micros(200),
+            idle_ceiling: Duration::from_millis(100),
+            connect_timeout: Duration::from_secs(10),
+            tracer: Tracer::default(),
+        }
+    }
+
+    /// Pulling threads in this process (default 1).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// Tasks to buffer per thread (default 1).
+    pub fn prefetch(mut self, n: u32) -> Self {
+        self.prefetch = n;
+        self
+    }
+
+    /// Campaign working directory payloads execute in (default `.`).
+    pub fn dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.dir = dir.into();
+        self
+    }
+
+    /// Worker name prefix.  The default is unique across hosts — the
+    /// hub keys assignment state by worker name, and PIDs are only
+    /// per-host, so two pools on different nodes could otherwise
+    /// collide and corrupt each other's requeue accounting.
+    pub fn name(mut self, base: impl Into<String>) -> Self {
+        self.base_name = Some(base.into());
+        self
+    }
+
+    /// Survive campaign boundaries: rejoin after the hub drains (the
+    /// hub still sends the paper-faithful Exit at drain).
+    pub fn linger(mut self, yes: bool) -> Self {
+        self.linger = yes;
+        self
+    }
+
+    /// Idle-backoff bounds while the hub has nothing ready.
+    pub fn idle_backoff(mut self, floor: Duration, ceiling: Duration) -> Self {
+        self.idle_floor = floor;
+        self.idle_ceiling = ceiling;
+        self
+    }
+
+    /// How long to keep dialing a hub that is not up yet (default 10s).
+    pub fn connect_timeout(mut self, t: Duration) -> Self {
+        self.connect_timeout = t;
+        self
+    }
+
+    /// Worker-side lifecycle recorder.  This pool owns its stream (the
+    /// hub's trace lives in another process), so it records `Connected`
+    /// on every attach plus `Started` and the terminals.
+    pub fn tracer(mut self, tracer: Tracer) -> Self {
+        self.tracer = tracer;
+        self
+    }
+
+    fn default_base_name() -> String {
+        let nonce = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos())
+            .unwrap_or(0);
+        let host = std::env::var("HOSTNAME").unwrap_or_default();
+        format!("dhub-{host}-{}-{nonce:08x}", std::process::id())
+    }
+
+    /// Join the hub and pull until dismissed (or forever, with
+    /// [`WorkerPool::linger`]).  Blocks the calling thread.
+    pub fn run(&self) -> Result<PoolStats> {
+        let base = self.base_name.clone().unwrap_or_else(Self::default_base_name);
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating {:?}", self.dir))?;
+        let totals: Vec<dwork::WorkerStats> = std::thread::scope(|s| {
+            (0..self.threads)
+                .map(|i| {
+                    let name = format!("{base}.{i}");
+                    s.spawn(move || self.run_thread(name))
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().expect("worker thread panicked"))
+                .collect::<Result<Vec<_>>>()
+        })?;
+        let mut out = PoolStats { name: base, threads: self.threads, ..PoolStats::default() };
+        for t in &totals {
+            out.tasks_run += t.tasks_run;
+            out.tasks_failed += t.tasks_failed;
+            out.compute_s += t.compute_s;
+            out.comm_s += t.comm_s;
+            out.idle_s += t.idle_s;
+        }
+        Ok(out)
+    }
+
+    /// One pulling thread: dial, drain, and — when lingering — rejoin
+    /// across campaign boundaries, hub outages, and hub restarts.
+    fn run_thread(&self, name: String) -> Result<dwork::WorkerStats> {
+        let opts = dwork::WorkerOpts {
+            prefetch: self.prefetch,
+            idle_floor: self.idle_floor,
+            idle_ceiling: self.idle_ceiling,
+            tracer: self.tracer.clone(),
+            trace_terminals: true,
+        };
+        let mut total = dwork::WorkerStats::default();
+        // rejoin backoff between campaigns: a drained hub dismisses
+        // workers instantly, so a lingering pool must not
+        // reconnect-cycle at full speed for the whole inter-campaign gap
+        let rejoin_floor = Duration::from_millis(250);
+        let rejoin_ceiling = Duration::from_secs(10);
+        let mut rejoin = rejoin_floor;
+        loop {
+            let dial = TcpClient::connect_retry(&self.addr, self.connect_timeout);
+            let conn = match dial {
+                Ok(conn) => conn,
+                // a lingering pool must outlive hub outages of any
+                // length, not just the one dial window
+                Err(e) if self.linger => {
+                    eprintln!("{name}: hub unreachable ({e:#}); retrying");
+                    std::thread::sleep(rejoin);
+                    rejoin = (rejoin * 2).min(rejoin_ceiling);
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            // exit_on_drop: a dying thread hands its assigned tasks
+            // back to the hub
+            let mut c = Client::new(Box::new(conn), name.clone()).exit_on_drop(true);
+            let dir = self.dir.clone();
+            let worked = dwork::run_worker_opts(&mut c, &opts, |t| {
+                // empty body: a bare synchronization task (e.g. via
+                // `dwork create`)
+                if t.body.is_empty() {
+                    return Ok(());
+                }
+                run::exec_payload(&Payload::decode_body(&t.body)?, &dir)
+            });
+            let stats = match worked {
+                Ok(stats) => stats,
+                // a lingering pool outlives hub restarts too:
+                // reconnect, don't die
+                Err(e) if self.linger => {
+                    eprintln!("{name}: hub connection lost ({e:#}); rejoining");
+                    std::thread::sleep(rejoin);
+                    rejoin = (rejoin * 2).min(rejoin_ceiling);
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            total.tasks_run += stats.tasks_run;
+            total.tasks_failed += stats.tasks_failed;
+            total.compute_s += stats.compute_s;
+            total.comm_s += stats.comm_s;
+            total.idle_s += stats.idle_s;
+            // the hub dismisses workers when a campaign drains (paper
+            // Exit); a lingering pool serves successive campaigns on a
+            // long-lived hub instead of exiting
+            if !self.linger {
+                return Ok(total);
+            }
+            if stats.tasks_run > 0 {
+                rejoin = rejoin_floor; // productive campaign
+            }
+            std::thread::sleep(rejoin);
+            rejoin = (rejoin * 2).min(rejoin_ceiling);
+        }
+    }
+}
+
+// ------------------------------------------------------------------ tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::graph::TaskSpec;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("threesched-session-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn file_pipeline() -> WorkflowGraph {
+        let mut g = WorkflowGraph::new("pipe");
+        g.add_task(TaskSpec::command("gen", "echo 7 > data.txt").outputs(&["data.txt"]))
+            .unwrap();
+        g.add_task(TaskSpec::kernel("crunch", "atb_32", 5).after(&["gen"])).unwrap();
+        g.add_task(
+            TaskSpec::command("sum", "cp data.txt sum.txt")
+                .outputs(&["sum.txt"])
+                .after(&["gen", "crunch"]),
+        )
+        .unwrap();
+        g
+    }
+
+    #[test]
+    fn same_graph_completes_on_all_three_backends() {
+        let g = file_pipeline();
+        for tool in Tool::ALL {
+            let dir = tmp(&format!("all3-{}", tool.name().replace('-', "")));
+            let outcome = Session::new(&g)
+                .backend(Backend::from_tool(tool))
+                .parallelism(2)
+                .dir(&dir)
+                .run()
+                .unwrap();
+            assert_eq!(outcome.summary.coordinator, tool);
+            assert_eq!(outcome.summary.tasks_run, 3, "{}", tool.name());
+            assert!(outcome.all_ok(), "{}", tool.name());
+            assert!(dir.join("sum.txt").exists(), "{}: sink output missing", tool.name());
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn auto_plan_carries_the_recommendation_and_run_honors_it() {
+        let g = file_pipeline();
+        let dir = tmp("auto");
+        let session = Session::new(&g).parallelism(2).dir(&dir);
+        let plan = session.plan().unwrap();
+        let rec = plan.recommendation.as_ref().expect("auto plan has a recommendation");
+        assert_eq!(rec.choice, plan.tool);
+        let outcome = session.run().unwrap();
+        assert_eq!(outcome.plan.tool, plan.tool);
+        assert_eq!(outcome.summary.coordinator, plan.tool);
+        assert!(outcome.all_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn explicit_plan_skips_the_selector_and_nothing_executes() {
+        let g = file_pipeline();
+        let dir = std::env::temp_dir().join(format!(
+            "threesched-session-noexec-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let plan = Session::new(&g)
+            .backend(Backend::Pmake)
+            .parallelism(3)
+            .dir(&dir)
+            .plan()
+            .unwrap();
+        assert_eq!(plan.tool, Tool::Pmake);
+        assert_eq!(plan.parallelism, 3);
+        assert!(plan.recommendation.is_none());
+        assert!(plan.render().contains("pmake"), "{}", plan.render());
+        assert!(!dir.exists(), "plan() must not touch the campaign dir");
+    }
+
+    #[test]
+    fn outcome_detail_matches_backend() {
+        let g = file_pipeline();
+        let dir = tmp("detail-pmake");
+        let outcome =
+            Session::new(&g).backend(Backend::Pmake).parallelism(2).dir(&dir).run().unwrap();
+        match &outcome.detail {
+            BackendDetail::Pmake { reports } => {
+                assert!(!reports.is_empty());
+                assert!(reports.iter().all(|r| r.all_ok()));
+            }
+            other => panic!("expected pmake detail, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let dir = tmp("detail-dwork");
+        let outcome = Session::new(&g)
+            .backend(Backend::Dwork { remote: None })
+            .parallelism(2)
+            .dir(&dir)
+            .run()
+            .unwrap();
+        match &outcome.detail {
+            BackendDetail::Dwork { server } => {
+                assert!(server.is_drained());
+                assert_eq!(server.completed, 3);
+                assert_eq!(server.failed, 0);
+            }
+            other => panic!("expected dwork detail, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let dir = tmp("detail-mpilist");
+        let outcome =
+            Session::new(&g).backend(Backend::MpiList).parallelism(3).dir(&dir).run().unwrap();
+        match &outcome.detail {
+            BackendDetail::MpiList { ranks } => {
+                assert_eq!(ranks.len(), 3);
+                let run: usize = ranks.iter().map(|r| r.tasks_run).sum();
+                assert_eq!(run, outcome.summary.tasks_run);
+            }
+            other => panic!("expected mpi-list detail, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dwork_server_counters_expose_the_failed_skipped_split() {
+        let mut g = WorkflowGraph::new("fail");
+        g.add_task(TaskSpec::command("boom", "exit 3")).unwrap();
+        g.add_task(TaskSpec::command("child", "true").after(&["boom"])).unwrap();
+        let dir = tmp("dwork-fail");
+        let outcome = Session::new(&g)
+            .backend(Backend::Dwork { remote: None })
+            .parallelism(1)
+            .prefetch(0)
+            .dir(&dir)
+            .run()
+            .unwrap();
+        assert_eq!(outcome.summary.tasks_run, 1, "child never served");
+        assert_eq!(outcome.summary.tasks_failed, 1);
+        assert_eq!(outcome.summary.tasks_skipped, 1);
+        match &outcome.detail {
+            BackendDetail::Dwork { server } => {
+                assert_eq!(server.failed, 1);
+                assert_eq!(server.skipped(), 1);
+                assert!(server.is_drained());
+            }
+            other => panic!("expected dwork detail, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lower_resolves_through_the_plan() {
+        let g = file_pipeline();
+        match Session::new(&g).backend(Backend::Pmake).lower().unwrap() {
+            Lowered::Pmake(low) => assert!(low.rules_yaml.contains("gen")),
+            other => panic!("expected pmake lowering, got {other:?}"),
+        }
+        match Session::new(&g).backend(Backend::Dwork { remote: None }).lower().unwrap() {
+            Lowered::Dwork(tasks) => assert_eq!(tasks.len(), 3),
+            other => panic!("expected dwork lowering, got {other:?}"),
+        }
+        match Session::new(&g).backend(Backend::MpiList).parallelism(2).lower().unwrap() {
+            Lowered::MpiList(plan) => assert_eq!(plan.total_tasks(), 3),
+            other => panic!("expected mpi-list lowering, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn submit_refuses_without_a_remote_target() {
+        let g = file_pipeline();
+        let err = Session::new(&g).backend(Backend::Dwork { remote: None }).submit();
+        assert!(err.is_err());
+        let err = Session::new(&g).backend(Backend::Pmake).submit();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn remote_target_refuses_a_session_tracer() {
+        // silently dropping the tracer would be worse than erroring: a
+        // session tracer observes only local execution.  The check fires
+        // before any dial, so the bogus address is never contacted.
+        let g = file_pipeline();
+        let err = Session::new(&g)
+            .backend(Backend::Dwork { remote: Some("127.0.0.1:1".into()) })
+            .tracer(Tracer::memory())
+            .submit()
+            .unwrap_err();
+        assert!(err.to_string().contains("cannot observe remote execution"), "{err}");
+        let err = Session::new(&g)
+            .backend(Backend::Dwork { remote: Some("127.0.0.1:1".into()) })
+            .tracer(Tracer::memory())
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().contains("cannot observe remote execution"), "{err}");
+    }
+
+    #[test]
+    fn backend_names_roundtrip() {
+        assert_eq!(Backend::from_name("auto"), Some(Backend::Auto));
+        assert_eq!(Backend::from_name("pmake"), Some(Backend::Pmake));
+        assert_eq!(Backend::from_name("dwork"), Some(Backend::Dwork { remote: None }));
+        assert_eq!(Backend::from_name("mpilist"), Some(Backend::MpiList));
+        assert_eq!(Backend::from_name("mpi-list"), Some(Backend::MpiList));
+        assert_eq!(Backend::from_name("warp"), None);
+        for tool in Tool::ALL {
+            let b = Backend::from_tool(tool);
+            assert_eq!(Backend::from_name(tool.name()), Some(b));
+        }
+    }
+}

@@ -6,9 +6,10 @@
 //! on separate threads that talk only through the wire (`TcpClient` /
 //! `ReconnectConn`), never through shared state.  Asserts the acceptance
 //! contract: the same `WorkflowGraph` produces an equivalent
-//! `RunSummary` (tasks_run / tasks_failed / tasks_skipped) via in-proc
-//! `run_dwork` and via `dhub serve` + remote workers + the
-//! `workflow run --connect` driver — including failure propagation —
+//! `RunSummary` (tasks_run / tasks_failed / tasks_skipped) via the
+//! in-proc `Session` dwork backend and via `dhub serve` + remote
+//! workers + a `Backend::Dwork { remote: Some(..) }` session (the
+//! `workflow run --connect` driver) — including failure propagation —
 //! and that a dead worker's assigned+prefetched tasks are re-queued.
 
 use std::path::{Path, PathBuf};
@@ -19,7 +20,7 @@ use threesched::coordinator::dwork::{
 };
 use threesched::substrate::transport::tcp::TcpClient;
 use threesched::workflow::{
-    self, run_dwork, run_dwork_remote, Payload, RemoteOpts, TaskSpec, WorkflowGraph,
+    self, Backend, PollCfg, Payload, Session, TaskSpec, WorkflowGraph,
 };
 
 fn tmp(name: &str) -> PathBuf {
@@ -32,8 +33,32 @@ fn tmp(name: &str) -> PathBuf {
     d
 }
 
-fn opts() -> RemoteOpts {
-    RemoteOpts { poll: Duration::from_millis(5), connect_timeout: Duration::from_secs(5) }
+fn poll_cfg() -> PollCfg {
+    PollCfg { poll: Duration::from_millis(5), connect_timeout: Duration::from_secs(5) }
+}
+
+/// A session feeding the remote hub at `addr`.
+fn remote_session<'g>(g: &'g WorkflowGraph, addr: &str) -> Session<'g> {
+    Session::new(g)
+        .backend(Backend::Dwork { remote: Some(addr.into()) })
+        .polling(poll_cfg())
+}
+
+/// The in-proc reference run the remote path must be equivalent to.
+fn inproc_summary(
+    g: &WorkflowGraph,
+    workers: usize,
+    prefetch: u32,
+    dir: &Path,
+) -> workflow::RunSummary {
+    Session::new(g)
+        .backend(Backend::Dwork { remote: None })
+        .parallelism(workers)
+        .prefetch(prefetch)
+        .dir(dir)
+        .run()
+        .unwrap()
+        .summary
 }
 
 /// A worker pool of `n` threads joined to `addr` over real sockets, each
@@ -102,7 +127,7 @@ fn run_remote(
     // them (NotFound), not dismiss them (Exit)
     let pool =
         spawn_worker_pool(addr.to_string(), workers, g.clone(), dir.to_path_buf(), "w");
-    let summary = run_dwork_remote(g, &addr.to_string(), &opts()).unwrap();
+    let summary = remote_session(g, &addr.to_string()).run().unwrap().summary;
     for h in pool {
         h.join().unwrap();
     }
@@ -115,7 +140,7 @@ fn run_remote(
 fn remote_summary_matches_inproc() {
     let g = file_pipeline();
     let dir_ref = tmp("ref");
-    let reference = run_dwork(&g, &dir_ref, 3, 1).unwrap();
+    let reference = inproc_summary(&g, 3, 1, &dir_ref);
     let dir_remote = tmp("run");
     let (summary, state) = run_remote(&g, 3, &dir_remote);
     assert!(state.all_done());
@@ -134,7 +159,7 @@ fn remote_summary_matches_inproc() {
 fn remote_failure_propagation_matches_inproc() {
     let g = failing_graph();
     let dir_ref = tmp("fail-ref");
-    let reference = run_dwork(&g, &dir_ref, 2, 0).unwrap();
+    let reference = inproc_summary(&g, 2, 0, &dir_ref);
     assert_eq!(reference.tasks_run, 2, "boom + free ran");
     assert_eq!(reference.tasks_failed, 1);
     assert_eq!(reference.tasks_skipped, 2, "child + grandchild never served");
@@ -156,19 +181,26 @@ fn submit_then_detach_then_await() {
     let dir = tmp("detach");
     let (addr, guard, handle) =
         dwork::spawn_tcp(SchedState::new(), ServerConfig::default(), "127.0.0.1:0").unwrap();
-    let submission = workflow::submit_dwork_remote(&g, &addr.to_string(), &opts()).unwrap();
-    assert_eq!(submission.submitted, 3);
-    assert_eq!(submission.duplicate_acks, 0);
-    assert_eq!(submission.skipped_at_submit, 0);
+    let submission = remote_session(&g, &addr.to_string()).submit().unwrap();
+    assert_eq!(submission.accounting.submitted, 3);
+    assert_eq!(submission.accounting.duplicate_acks, 0);
+    assert_eq!(submission.accounting.skipped_at_submit, 0);
     // submitter has detached; only now do workers appear
     let pool = spawn_worker_pool(addr.to_string(), 2, g.clone(), dir.clone(), "late");
-    let summary =
-        workflow::await_dwork_remote(&addr.to_string(), &submission, &opts()).unwrap();
+    let outcome = submission.wait().unwrap();
     for h in pool {
         h.join().unwrap();
     }
-    assert_eq!(summary.tasks_run, 3);
-    assert!(summary.all_ok());
+    assert_eq!(outcome.summary.tasks_run, 3);
+    assert!(outcome.all_ok());
+    // the detail carries the hub's drained counters
+    match &outcome.detail {
+        workflow::BackendDetail::DworkRemote { server, .. } => {
+            assert!(server.is_drained());
+            assert_eq!(server.completed, 3);
+        }
+        other => panic!("expected remote dwork detail, got {other:?}"),
+    }
     drop(guard);
     assert!(handle.join().unwrap().all_done());
     let _ = std::fs::remove_dir_all(&dir);
@@ -242,17 +274,16 @@ fn resubmission_over_failed_hub_state_skips_doomed_tasks() {
     let (addr, guard, handle) =
         dwork::spawn_tcp(pre, ServerConfig::default(), "127.0.0.1:0").unwrap();
     let g = failing_graph(); // boom -> child -> grandchild, plus free
-    let submission = workflow::submit_dwork_remote(&g, &addr.to_string(), &opts()).unwrap();
+    let submission = remote_session(&g, &addr.to_string()).submit().unwrap();
     // boom acked as duplicate + free created; child/grandchild doomed
-    assert_eq!(submission.submitted, 2);
-    assert_eq!(submission.duplicate_acks, 1, "boom pre-existed on the hub");
-    assert_eq!(submission.skipped_at_submit, 2);
+    assert_eq!(submission.accounting.submitted, 2);
+    assert_eq!(submission.accounting.duplicate_acks, 1, "boom pre-existed on the hub");
+    assert_eq!(submission.accounting.skipped_at_submit, 2);
     // workers join only after submit: the pre-drained hub would have
     // dismissed them earlier
     let dir = tmp("resubmit");
     let pool = spawn_worker_pool(addr.to_string(), 1, g.clone(), dir.clone(), "re");
-    let summary =
-        workflow::await_dwork_remote(&addr.to_string(), &submission, &opts()).unwrap();
+    let summary = submission.wait().unwrap().summary;
     for h in pool {
         h.join().unwrap();
     }

@@ -1,0 +1,198 @@
+//! API-equivalence acceptance for the `workflow::Session` redesign: a
+//! `Session` with defaults must reproduce the legacy free-function
+//! `RunSummary` (tasks_run / tasks_failed / tasks_skipped /
+//! coordinator) on random DAGs across all three back-ends, and the
+//! legacy `run_auto` verdict must match the session plan's
+//! recommendation.  The legacy entry points are `#[deprecated]` shims
+//! this release — this test is the only in-tree caller, by design.
+
+#![allow(deprecated)]
+
+use std::path::PathBuf;
+
+use threesched::metg::simmodels::Tool;
+use threesched::substrate::cluster::costs::CostModel;
+use threesched::substrate::prop::{check, Gen};
+use threesched::workflow::{self, Backend, RunSummary, Session, TaskSpec, WorkflowGraph};
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "threesched-sessionapi-{name}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Random small DAG: noop payloads with occasional forced failures
+/// (`false` commands), edges only to earlier tasks so it is acyclic by
+/// construction — the same shape the trace-wellformedness suite drives.
+fn random_graph(g: &mut Gen, label: &str) -> WorkflowGraph {
+    let n = g.usize(1..8);
+    let mut wf = WorkflowGraph::new(format!("prop-{label}-{}", g.case));
+    for i in 0..n {
+        let mut t = if g.bool(0.2) {
+            TaskSpec::command(format!("t{i}"), "false")
+        } else {
+            TaskSpec::new(format!("t{i}"))
+        };
+        if i > 0 {
+            let mut deps = std::collections::BTreeSet::new();
+            for _ in 0..g.usize(0..3) {
+                deps.insert(g.usize(0..i));
+            }
+            let names: Vec<String> = deps.into_iter().map(|d| format!("t{d}")).collect();
+            t = t.after(&names);
+        }
+        wf.add_task(t.est(0.001)).unwrap();
+    }
+    wf
+}
+
+fn assert_summaries_equal(tool: &str, legacy: &RunSummary, session: &RunSummary) {
+    assert_eq!(legacy.coordinator, session.coordinator, "{tool}: coordinator");
+    assert_eq!(legacy.tasks_run, session.tasks_run, "{tool}: tasks_run");
+    assert_eq!(legacy.tasks_failed, session.tasks_failed, "{tool}: tasks_failed");
+    assert_eq!(legacy.tasks_skipped, session.tasks_skipped, "{tool}: tasks_skipped");
+}
+
+#[test]
+fn session_reproduces_legacy_dispatch_on_random_dags() {
+    check("session vs dispatch", 8, |g| {
+        let wf = random_graph(g, "dispatch");
+        let parallelism = g.usize(1..4);
+        for tool in Tool::ALL {
+            let slug = tool.name().replace('-', "");
+            let dir_legacy = tmp(&format!("legacy-{slug}-{}", g.case));
+            let dir_session = tmp(&format!("session-{slug}-{}", g.case));
+            let legacy = workflow::dispatch(&wf, tool, parallelism, &dir_legacy).unwrap();
+            let outcome = Session::new(&wf)
+                .backend(Backend::from_tool(tool))
+                .parallelism(parallelism)
+                .dir(&dir_session)
+                .run()
+                .unwrap();
+            assert_summaries_equal(tool.name(), &legacy, &outcome.summary);
+            assert_eq!(outcome.plan.tool, tool);
+            let _ = std::fs::remove_dir_all(&dir_legacy);
+            let _ = std::fs::remove_dir_all(&dir_session);
+        }
+    });
+}
+
+#[test]
+fn session_auto_reproduces_legacy_run_auto_on_random_dags() {
+    let m = CostModel::paper();
+    check("session vs run_auto", 8, |g| {
+        let wf = random_graph(g, "auto");
+        let parallelism = g.usize(1..4);
+        let dir_legacy = tmp(&format!("autolegacy-{}", g.case));
+        let dir_session = tmp(&format!("autosession-{}", g.case));
+        let (rec, legacy) = workflow::run_auto(&wf, &m, parallelism, &dir_legacy).unwrap();
+        let outcome = Session::new(&wf)
+            .backend(Backend::Auto)
+            .cost_model(m.clone())
+            .parallelism(parallelism)
+            .dir(&dir_session)
+            .run()
+            .unwrap();
+        let plan_rec =
+            outcome.plan.recommendation.as_ref().expect("auto plan carries a recommendation");
+        assert_eq!(rec.choice, plan_rec.choice, "selector verdicts agree");
+        assert_eq!(rec.choice, outcome.summary.coordinator);
+        assert_summaries_equal("auto", &legacy, &outcome.summary);
+        let _ = std::fs::remove_dir_all(&dir_legacy);
+        let _ = std::fs::remove_dir_all(&dir_session);
+    });
+}
+
+#[test]
+fn traced_shims_share_the_session_tracer_path() {
+    // the *_traced shims forward their tracer into the session: the
+    // event stream must be identical in shape to a direct Session run
+    use threesched::trace::{self, Tracer};
+    let mut wf = WorkflowGraph::new("traced-shim");
+    wf.add_task(TaskSpec::new("a").est(0.001)).unwrap();
+    wf.add_task(TaskSpec::new("b").after(&["a"]).est(0.001)).unwrap();
+
+    let dir = tmp("traced-shim-legacy");
+    let legacy_tracer = Tracer::memory();
+    workflow::run_mpilist_traced(&wf, &dir, 2, &legacy_tracer).unwrap();
+    let legacy_events = legacy_tracer.drain();
+    trace::validate(&legacy_events).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let dir = tmp("traced-shim-session");
+    let session_tracer = Tracer::memory();
+    Session::new(&wf)
+        .backend(Backend::MpiList)
+        .parallelism(2)
+        .dir(&dir)
+        .tracer(session_tracer.clone())
+        .run()
+        .unwrap();
+    let session_events = session_tracer.drain();
+    trace::validate(&session_events).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let kinds = |evs: &[trace::TaskEvent]| {
+        let mut v: Vec<(String, &'static str)> =
+            evs.iter().map(|e| (e.task.clone(), e.kind.name())).collect();
+        v.sort();
+        v
+    };
+    assert_eq!(kinds(&legacy_events), kinds(&session_events));
+}
+
+#[test]
+fn legacy_remote_shims_delegate_to_the_session_path() {
+    // submit via the deprecated free function, await via the deprecated
+    // free function: both are shims over Session/Submission, and the
+    // counts must match an in-proc reference
+    use std::time::Duration;
+    use threesched::coordinator::dwork::{self, SchedState, ServerConfig};
+
+    let mut g = WorkflowGraph::new("remote-shim");
+    g.add_task(TaskSpec::command("boom", "exit 3")).unwrap();
+    g.add_task(TaskSpec::command("child", "true").after(&["boom"])).unwrap();
+    g.add_task(TaskSpec::command("free", "true")).unwrap();
+
+    let dir_ref = tmp("remote-shim-ref");
+    let reference = workflow::run_dwork(&g, &dir_ref, 2, 0).unwrap();
+
+    let (addr, guard, handle) =
+        dwork::spawn_tcp(SchedState::new(), ServerConfig::default(), "127.0.0.1:0").unwrap();
+    let opts = workflow::RemoteOpts {
+        poll: Duration::from_millis(5),
+        connect_timeout: Duration::from_secs(5),
+    };
+    let submission = workflow::submit_dwork_remote(&g, &addr.to_string(), &opts).unwrap();
+    // a worker drains the hub while the await shim polls
+    let dir_remote = tmp("remote-shim-run");
+    let addr_s = addr.to_string();
+    let g2 = g.clone();
+    let dir2 = dir_remote.clone();
+    let worker = std::thread::spawn(move || {
+        let conn = threesched::substrate::transport::tcp::TcpClient::connect_retry(
+            &addr_s,
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        let mut c = dwork::Client::new(Box::new(conn), "shim-w0").exit_on_drop(true);
+        dwork::run_worker(&mut c, 1, |t| match g2.get(&t.name) {
+            Some(spec) => workflow::run::exec_task(spec, &dir2),
+            None => Ok(()),
+        })
+        .unwrap()
+    });
+    let summary =
+        workflow::await_dwork_remote(&addr.to_string(), &submission, &opts).unwrap();
+    worker.join().unwrap();
+    drop(guard);
+    handle.join().unwrap();
+
+    assert_summaries_equal("dwork-remote", &reference, &summary);
+    let _ = std::fs::remove_dir_all(&dir_ref);
+    let _ = std::fs::remove_dir_all(&dir_remote);
+}

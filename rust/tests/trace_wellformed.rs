@@ -9,8 +9,8 @@ use std::path::PathBuf;
 use threesched::metg::simmodels::Tool;
 use threesched::substrate::cluster::costs::CostModel;
 use threesched::substrate::prop::{check, Gen};
-use threesched::trace::{self, TaskEvent, Tracer};
-use threesched::workflow::{self, RunSummary, TaskSpec, WorkflowGraph};
+use threesched::trace::{self, EventKind, TaskEvent, Tracer};
+use threesched::workflow::{Backend, RunSummary, Session, TaskSpec, WorkflowGraph};
 
 fn tmp(name: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!(
@@ -64,8 +64,18 @@ fn dwork_traces_wellformed_and_equivalent() {
         let dir = tmp("dwork");
         let tracer = Tracer::memory();
         let workers = g.usize(1..4);
-        let summary = workflow::run_dwork_traced(&wf, &dir, workers, 1, &tracer).unwrap();
-        assert_trace_matches("dwork", &summary, &tracer.drain());
+        let outcome = Session::new(&wf)
+            .backend(Backend::Dwork { remote: None })
+            .parallelism(workers)
+            .dir(&dir)
+            .tracer(tracer.clone())
+            .run()
+            .unwrap();
+        let events = tracer.drain();
+        assert_trace_matches("dwork", &outcome.summary, &events);
+        // every worker thread announced itself exactly once
+        let connects = events.iter().filter(|e| e.kind == EventKind::Connected).count();
+        assert_eq!(connects, workers, "one Connected per worker attach");
         let _ = std::fs::remove_dir_all(&dir);
     });
 }
@@ -76,8 +86,14 @@ fn pmake_traces_wellformed_and_equivalent() {
         let wf = random_graph(g, "pmake");
         let dir = tmp("pmake");
         let tracer = Tracer::memory();
-        let summary = workflow::run_pmake_traced(&wf, &dir, 2, &tracer).unwrap();
-        assert_trace_matches("pmake", &summary, &tracer.drain());
+        let outcome = Session::new(&wf)
+            .backend(Backend::Pmake)
+            .parallelism(2)
+            .dir(&dir)
+            .tracer(tracer.clone())
+            .run()
+            .unwrap();
+        assert_trace_matches("pmake", &outcome.summary, &tracer.drain());
         let _ = std::fs::remove_dir_all(&dir);
     });
 }
@@ -89,8 +105,14 @@ fn mpilist_traces_wellformed_and_equivalent() {
         let dir = tmp("mpilist");
         let tracer = Tracer::memory();
         let procs = g.usize(1..4);
-        let summary = workflow::run_mpilist_traced(&wf, &dir, procs, &tracer).unwrap();
-        assert_trace_matches("mpi-list", &summary, &tracer.drain());
+        let outcome = Session::new(&wf)
+            .backend(Backend::MpiList)
+            .parallelism(procs)
+            .dir(&dir)
+            .tracer(tracer.clone())
+            .run()
+            .unwrap();
+        assert_trace_matches("mpi-list", &outcome.summary, &tracer.drain());
         let _ = std::fs::remove_dir_all(&dir);
     });
 }
@@ -127,7 +149,14 @@ fn failure_propagation_equivalence_on_all_backends() {
     for tool in Tool::ALL {
         let dir = tmp(&format!("mixed-{}", tool.name().replace('-', "")));
         let tracer = Tracer::memory();
-        let summary = workflow::dispatch_traced(&g, tool, 2, &dir, &tracer).unwrap();
+        let summary = Session::new(&g)
+            .backend(Backend::from_tool(tool))
+            .parallelism(2)
+            .dir(&dir)
+            .tracer(tracer.clone())
+            .run()
+            .unwrap()
+            .summary;
         let events = tracer.drain();
         assert_trace_matches(tool.name(), &summary, &events);
         match tool {
@@ -159,8 +188,20 @@ fn real_and_simulated_traces_share_one_schema() {
 
     let dir = tmp("schema");
     let real = Tracer::memory();
-    workflow::run_dwork_traced(&g, &dir, 2, 1, &real).unwrap();
+    Session::new(&g)
+        .backend(Backend::Dwork { remote: None })
+        .parallelism(2)
+        .dir(&dir)
+        .tracer(real.clone())
+        .run()
+        .unwrap();
     let real_events = real.drain();
+    // the real stream now carries worker-scoped Connected events; they
+    // must survive the byte-stability round-trip like any other kind
+    assert!(
+        real_events.iter().any(|e| e.kind == EventKind::Connected),
+        "dwork workers record Connected at attach"
+    );
 
     let sim = Tracer::memory();
     trace::simulate_workflow(Tool::Dwork, &g, &CostModel::paper(), 2, 1, &sim).unwrap();
@@ -191,7 +232,14 @@ fn trace_file_roundtrip_feeds_report_and_compare() {
     }
     let dir = tmp("roundtrip");
     let tracer = Tracer::memory();
-    let summary = workflow::run_dwork_traced(&g, &dir, 2, 1, &tracer).unwrap();
+    let summary = Session::new(&g)
+        .backend(Backend::Dwork { remote: None })
+        .parallelism(2)
+        .dir(&dir)
+        .tracer(tracer.clone())
+        .run()
+        .unwrap()
+        .summary;
     assert!(summary.all_ok());
     let events = tracer.drain();
     let path = dir.join("trace.jsonl");

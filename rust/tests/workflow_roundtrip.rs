@@ -8,7 +8,7 @@ use std::path::{Path, PathBuf};
 use threesched::coordinator::{dwork, mpilist, pmake};
 use threesched::metg::simmodels::Tool;
 use threesched::substrate::cluster::costs::CostModel;
-use threesched::workflow::{self, Payload, TaskSpec, WorkflowGraph};
+use threesched::workflow::{self, Backend, Payload, Session, TaskSpec, WorkflowGraph};
 
 const WF: &str = r#"
 name: campaign
@@ -114,7 +114,13 @@ fn same_yaml_executes_on_every_coordinator() {
     let g = workflow::parse_workflow(WF).unwrap();
     for tool in Tool::ALL {
         let dir = tmpdir(&format!("exec-{}", tool.name().replace('-', "")));
-        let summary = workflow::dispatch(&g, tool, 3, &dir).unwrap();
+        let summary = Session::new(&g)
+            .backend(Backend::from_tool(tool))
+            .parallelism(3)
+            .dir(&dir)
+            .run()
+            .unwrap()
+            .summary;
         assert_eq!(summary.tasks_run, 5, "{}", tool.name());
         assert_eq!(summary.tasks_failed, 0, "{}", tool.name());
         let report = std::fs::read_to_string(dir.join("report.txt"))
