@@ -18,9 +18,15 @@
 //!   duration cancelling (uniform calibration workloads make this
 //!   exact; heterogeneous ones inflate it, which the report's CI shows).
 //!
-//! Parameters no lifecycle trace constrains (python imports, connection
-//! storms) are left at their Table-4 defaults — the profile simply does
-//! not mention them.
+//! A hub trace that records worker `Connected` events additionally
+//! constrains the **connection storm** law: attaches serialize at the
+//! hub, so consecutive attach-time gaps cluster at the per-attach cost
+//! `conn_b` (the slope of `conn(P) = conn_a + conn_b·P`; the intercept
+//! is not separable from one storm and keeps its default).
+//!
+//! Parameters no lifecycle trace constrains (python imports) are left
+//! at their Table-4 defaults — the profile simply does not mention
+//! them.
 
 use anyhow::{bail, Result};
 
@@ -28,13 +34,16 @@ use crate::metg::simmodels::Tool;
 use crate::substrate::cluster::costs::CostModel;
 use crate::trace::compare::tool_of_source;
 use crate::trace::samples::PhaseSamples;
-use crate::trace::TaskEvent;
+use crate::trace::{EventKind, TaskEvent};
 
 use super::profile::CalibrationProfile;
 use super::robust::{self, Estimate};
 
 /// Fewest pooled launch gaps worth fitting an RTT from.
 const MIN_GAPS: usize = 8;
+/// Fewest pooled attach gaps worth fitting a per-attach cost from
+/// (a storm of nine workers or more).
+const MIN_ATTACH_GAPS: usize = 8;
 /// Fewest launch-window samples for a per-trace pmake point.
 const MIN_LAUNCH: usize = 3;
 /// MAD multiplier for inlier filtering.
@@ -113,6 +122,7 @@ pub fn fit_traces(traces: &[ClassifiedTrace], base: &CostModel) -> Result<Calibr
         ..Calibration::default()
     };
     fit_dwork(traces, base, &mut cal);
+    fit_attach(traces, base, &mut cal);
     fit_mpilist(traces, base, &mut cal);
     fit_pmake(traces, base, &mut cal);
     if cal.profile.is_empty() {
@@ -155,6 +165,59 @@ fn fit_dwork(traces: &[ClassifiedTrace], base: &CostModel, cal: &mut Calibration
         param: "steal_rtt",
         tool: Tool::Dwork,
         default: base.steal_rtt,
+        estimate: est,
+    });
+}
+
+fn fit_attach(traces: &[ClassifiedTrace], base: &CostModel, cal: &mut Calibration) {
+    // a storm of workers joining a fresh hub serializes in the accept
+    // loop: consecutive Connected-event gaps cluster at the per-attach
+    // cost, which is the slope conn_b of conn(P) = conn_a + conn_b·P.
+    // Only real hub traces carry Connected events (the DES never emits
+    // them), so a purely simulated input set simply leaves conn_b alone.
+    let mut gaps: Vec<f64> = Vec::new();
+    let mut n_traces = 0usize;
+    let mut with_conn = 0usize;
+    for t in traces.iter().filter(|t| t.tool == Tool::Dwork) {
+        n_traces += 1;
+        let mut ts: Vec<f64> = t
+            .events
+            .iter()
+            .filter(|e| e.kind == EventKind::Connected)
+            .map(|e| e.t)
+            .collect();
+        if ts.len() < 2 {
+            continue;
+        }
+        with_conn += 1;
+        ts.sort_by(f64::total_cmp);
+        gaps.extend(ts.windows(2).map(|w| w[1] - w[0]));
+    }
+    if n_traces == 0 {
+        // the steal_rtt pass already noted the absence of dwork traces
+        return;
+    }
+    if gaps.len() < MIN_ATTACH_GAPS {
+        cal.notes.push(format!(
+            "conn_b: only {} attach gap(s) across {with_conn} dwork trace(s) with \
+             Connected events (need >= {MIN_ATTACH_GAPS}; trace a hub while a \
+             larger worker storm joins)",
+            gaps.len()
+        ));
+        return;
+    }
+    let Some(est) = robust::robust_mean(&gaps, OUTLIER_K) else {
+        return;
+    };
+    if !(est.value.is_finite() && est.value > 0.0) {
+        cal.notes.push(format!("conn_b: degenerate estimate {}", est.value));
+        return;
+    }
+    cal.profile.overrides.conn_b = Some(est.value);
+    cal.estimates.push(ParamEstimate {
+        param: "conn_b",
+        tool: Tool::Dwork,
+        default: base.conn_b,
         estimate: est,
     });
 }
@@ -376,6 +439,59 @@ mod tests {
         let traces = vec![classify_trace(&source, events, None).unwrap()];
         let err = fit_traces(&traces, &CostModel::paper()).unwrap_err();
         assert!(err.to_string().contains("launch gap"), "{err:#}");
+    }
+
+    /// Append a synthetic attach storm to a trace: `n` workers joining
+    /// serially with gaps cycling 2.9/3.0/3.1 ms (mean exactly 3 ms).
+    /// The DES never emits `Connected`, so tests synthesize the storm
+    /// the way a real hub trace records it.
+    fn push_storm(events: &mut Vec<TaskEvent>, n: usize) {
+        let mut t = 0.0;
+        for i in 0..n {
+            events.push(TaskEvent {
+                task: String::new(),
+                kind: EventKind::Connected,
+                t,
+                who: format!("w{i}"),
+            });
+            t += 0.003 + ((i % 3) as f64 - 1.0) * 1e-4;
+        }
+    }
+
+    #[test]
+    fn attach_storm_fits_conn_b() {
+        let base = CostModel::paper();
+        let run = &workloads::standard()[1]; // the dwork farm
+        assert_eq!(run.tool, Tool::Dwork);
+        let (source, mut events) = workloads::simulate(run, &base, 5).unwrap();
+        push_storm(&mut events, 19);
+        // one straggler two seconds later: an idle-period gap the MAD
+        // filter must reject rather than fold into the storm law
+        events.push(TaskEvent {
+            task: String::new(),
+            kind: EventKind::Connected,
+            t: 2.0,
+            who: "late".into(),
+        });
+        let traces = vec![classify_trace(&source, events, None).unwrap()];
+        let cal = fit_traces(&traces, &base).unwrap();
+        let got = cal.profile.overrides.conn_b.expect("conn_b fitted");
+        assert!((got - 0.003).abs() / 0.003 < 0.05, "conn_b {got}");
+        let est = cal.estimates.iter().find(|e| e.param == "conn_b").unwrap();
+        assert_eq!(est.tool, Tool::Dwork);
+        assert!(est.estimate.rejected >= 1, "straggler gap kept: {:?}", est.estimate);
+    }
+
+    #[test]
+    fn too_few_attach_gaps_noted_not_fitted() {
+        let base = CostModel::paper();
+        let run = &workloads::standard()[1];
+        let (source, mut events) = workloads::simulate(run, &base, 5).unwrap();
+        push_storm(&mut events, 3); // two gaps < MIN_ATTACH_GAPS
+        let traces = vec![classify_trace(&source, events, None).unwrap()];
+        let cal = fit_traces(&traces, &base).unwrap();
+        assert!(cal.profile.overrides.conn_b.is_none());
+        assert!(cal.notes.iter().any(|n| n.contains("attach gap")), "{:?}", cal.notes);
     }
 
     #[test]

@@ -19,6 +19,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::metrics::{Counter, MetricsSnapshot, Registry, Series};
 use crate::substrate::transport::ClientConn;
 use crate::trace::{EventKind, Tracer};
 
@@ -166,6 +167,18 @@ impl Client {
         self.expect_ok(&Request::Save)
     }
 
+    /// Fetch the hub's live [`MetricsSnapshot`].  A hub running without
+    /// an enabled registry answers with the version-0 sentinel (all
+    /// fields empty); a pre-metrics hub answers `Err` for the unknown
+    /// request kind, surfaced here as [`ServerError`].
+    pub fn metrics(&mut self) -> Result<MetricsSnapshot> {
+        match self.roundtrip(&Request::Metrics)? {
+            Response::Metrics(m) => Ok(m),
+            Response::Err { msg, code } => Err(ServerError { code, msg }.into()),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
     /// Completion query: poll `Status` every `poll` until everything the
     /// hub has accepted is finished (done or errored), then return the
     /// final counters.  This is how a remote submitter awaits a campaign
@@ -279,6 +292,10 @@ pub struct WorkerOpts {
     /// worker traces (`dhub worker --trace`), whose hub stream lives in
     /// another process.
     pub trace_terminals: bool,
+    /// worker-side live counters: poll/backoff/park transitions,
+    /// steal-RTT and task-compute histograms.  Disabled (no-op) by
+    /// default; share one enabled registry across a pool to aggregate.
+    pub metrics: Registry,
 }
 
 impl Default for WorkerOpts {
@@ -289,6 +306,7 @@ impl Default for WorkerOpts {
             idle_ceiling: IdleBackoff::CEILING,
             tracer: Tracer::default(),
             trace_terminals: false,
+            metrics: Registry::default(),
         }
     }
 }
@@ -322,22 +340,35 @@ pub fn run_worker_opts(
     let mut buffer: VecDeque<TaskMsg> = VecDeque::new();
     let batch = opts.prefetch.max(1);
     let mut backoff = IdleBackoff::with_bounds(opts.idle_floor, opts.idle_ceiling);
+    // park tracking: one WorkerParks per *episode* of consecutive empty
+    // polls, not per backoff sleep — the metric counts transitions into
+    // the idle state, matching the hub's view of a parked worker
+    let mut parked = false;
     'outer: loop {
         // refill: keep `batch` tasks in hand
         while (buffer.len() as u32) < batch {
             let t0 = Instant::now();
+            opts.metrics.inc(Counter::WorkerPolls);
             let outcome = client.steal_n(batch - buffer.len() as u32)?;
-            stats.comm_s += t0.elapsed().as_secs_f64();
+            let rtt = t0.elapsed();
+            opts.metrics.observe(Series::StealRtt, rtt);
+            stats.comm_s += rtt.as_secs_f64();
             match outcome {
                 StealBatch::Tasks(ts) if ts.is_empty() => {
                     if buffer.is_empty() {
                         // nothing in hand and nothing ready: back off
+                        if !parked {
+                            parked = true;
+                            opts.metrics.inc(Counter::WorkerParks);
+                        }
+                        opts.metrics.inc(Counter::WorkerBackoffs);
                         stats.idle_s += backoff.sleep();
                         continue 'outer;
                     }
                     break; // run what we have
                 }
                 StealBatch::Tasks(ts) => {
+                    parked = false;
                     backoff.reset();
                     buffer.extend(ts);
                 }
@@ -353,7 +384,9 @@ pub fn run_worker_opts(
         opts.tracer.record(&task.name, EventKind::Started, client.worker());
         let t0 = Instant::now();
         let ok = exec(&task).is_ok();
-        stats.compute_s += t0.elapsed().as_secs_f64();
+        let compute = t0.elapsed();
+        opts.metrics.observe(Series::TaskCompute, compute);
+        stats.compute_s += compute.as_secs_f64();
         stats.tasks_run += 1;
         if !ok {
             stats.tasks_failed += 1;
@@ -514,6 +547,28 @@ mod tests {
         drop(c);
         drop(connector);
         assert!(handle.join().unwrap().all_done());
+    }
+
+    #[test]
+    fn worker_metrics_count_polls_and_compute() {
+        let metrics = Registry::enabled();
+        let (connector, handle) = spawn_inproc(farm(8), ServerConfig::default());
+        let mut c = Client::new(Box::new(connector.connect()), "w0");
+        let opts = WorkerOpts { metrics: metrics.clone(), ..WorkerOpts::default() };
+        let stats = run_worker_opts(&mut c, &opts, |_| Ok(())).unwrap();
+        assert_eq!(stats.tasks_run, 8);
+        let snap = metrics.snapshot();
+        assert!(snap.counter("worker_polls") >= 8, "one poll per task at minimum");
+        let compute = snap.hist("task_compute").expect("task_compute histogram");
+        assert_eq!(compute.count, 8);
+        let rtt = snap.hist("steal_rtt").expect("steal_rtt histogram");
+        assert_eq!(rtt.count, snap.counter("worker_polls"));
+        // the farm never emptied mid-run, so parks only happen if a poll
+        // raced the drain — and then an episode is one park, not many
+        assert!(snap.counter("worker_parks") <= snap.counter("worker_backoffs").max(1));
+        drop(c);
+        drop(connector);
+        handle.join().unwrap();
     }
 
     #[test]

@@ -9,12 +9,14 @@
 //! | Transfer | Worker, [Task] | Ok              |
 //! | Exit     | Worker         | Ok              |
 //! | Status   | –              | Status          | (dquery support)
+//! | Metrics  | –              | Metrics         | (live-metrics extension)
 //!
 //! Workers are strings; Tasks are messages carrying arbitrary metadata —
 //! exactly the paper's protobuf choice, here via `substrate::wire`.
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::metrics::{HistSnapshot, MetricsSnapshot};
 use crate::substrate::wire::{self, Reader, Value, Writer};
 
 /// Task payload crossing the wire: name + opaque body + originator.
@@ -75,6 +77,10 @@ pub enum Request {
     Status,
     /// Ask the server to persist a snapshot now.
     Save,
+    /// Live-metrics snapshot (counters/gauges/histograms).  `Status`
+    /// is untouched, so this is wire-compatible with old servers: they
+    /// answer the unknown kind with `Response::Err`.
+    Metrics,
 }
 
 const REQ_CREATE: u64 = 1;
@@ -85,6 +91,7 @@ const REQ_TRANSFER: u64 = 5;
 const REQ_EXIT: u64 = 6;
 const REQ_STATUS: u64 = 7;
 const REQ_SAVE: u64 = 8;
+const REQ_METRICS: u64 = 9;
 
 impl Request {
     pub fn encode(&self) -> Vec<u8> {
@@ -126,6 +133,9 @@ impl Request {
             Request::Save => {
                 w.uint(1, REQ_SAVE);
             }
+            Request::Metrics => {
+                w.uint(1, REQ_METRICS);
+            }
         }
         w.into_bytes()
     }
@@ -165,6 +175,7 @@ impl Request {
             REQ_EXIT => Request::Exit { worker: worker()? },
             REQ_STATUS => Request::Status,
             REQ_SAVE => Request::Save,
+            REQ_METRICS => Request::Metrics,
             other => bail!("unknown request kind {other}"),
         })
     }
@@ -256,6 +267,8 @@ pub enum Response {
     /// pre-code servers.
     Err { msg: String, code: Option<RefusalCode> },
     Status(StatusInfo),
+    /// Live-metrics reply: a versioned name-addressed snapshot.
+    Metrics(MetricsSnapshot),
 }
 
 const RESP_TASK: u64 = 1;
@@ -265,6 +278,84 @@ const RESP_EXIT: u64 = 4;
 const RESP_OK: u64 = 5;
 const RESP_ERR: u64 = 6;
 const RESP_STATUS: u64 = 7;
+const RESP_METRICS: u64 = 8;
+
+// MetricsSnapshot wire layout (all inside the Response frame):
+//   field 20: snapshot version (uint)
+//   field 21: uptime seconds as f64 bits (uint — the codec has no
+//             float wire type, so floats travel as `f64::to_bits`)
+//   field 22: repeated counter submessage  {1: name, 2: value}
+//   field 23: repeated gauge submessage    {1: name, 2: value as u64
+//             two's complement}
+//   field 24: repeated histogram submessage {1: name, 2: repeated
+//             bucket count in index order (trailing zeros trimmed),
+//             3: sum seconds as f64 bits, 4: observation count}
+// Name-addressed series (not positional arrays) keep the snapshot
+// forward compatible: decoders ignore names they don't know.
+fn encode_metrics_into(w: &mut Writer, m: &MetricsSnapshot) {
+    w.uint(20, m.version as u64);
+    w.uint(21, m.uptime_s.to_bits());
+    for (name, v) in &m.counters {
+        let mut c = Writer::new();
+        c.string(1, name);
+        c.uint(2, *v);
+        w.message(22, &c);
+    }
+    for (name, v) in &m.gauges {
+        let mut g = Writer::new();
+        g.string(1, name);
+        g.uint(2, *v as u64);
+        w.message(23, &g);
+    }
+    for h in &m.hists {
+        let mut hw = Writer::new();
+        hw.string(1, &h.name);
+        for b in &h.buckets {
+            hw.uint(2, *b);
+        }
+        hw.uint(3, h.sum_s.to_bits());
+        hw.uint(4, h.count);
+        w.message(24, &hw);
+    }
+}
+
+fn decode_metrics(fields: &[(u32, Value)]) -> Result<MetricsSnapshot> {
+    let mut m = MetricsSnapshot {
+        version: wire::get_u64(fields, 20).unwrap_or(0) as u32,
+        uptime_s: f64::from_bits(wire::get_u64(fields, 21).unwrap_or(0)),
+        ..MetricsSnapshot::default()
+    };
+    for (f, v) in fields {
+        let Some(bytes) = v.as_bytes() else { continue };
+        match f {
+            22 => {
+                let sub = Reader::new(bytes).fields()?;
+                m.counters
+                    .push((wire::get_str(&sub, 1)?.to_string(), wire::get_u64(&sub, 2)?));
+            }
+            23 => {
+                let sub = Reader::new(bytes).fields()?;
+                m.gauges
+                    .push((wire::get_str(&sub, 1)?.to_string(), wire::get_u64(&sub, 2)? as i64));
+            }
+            24 => {
+                let sub = Reader::new(bytes).fields()?;
+                m.hists.push(HistSnapshot {
+                    name: wire::get_str(&sub, 1)?.to_string(),
+                    buckets: sub
+                        .iter()
+                        .filter(|(f, _)| *f == 2)
+                        .filter_map(|(_, v)| v.as_u64())
+                        .collect(),
+                    sum_s: f64::from_bits(wire::get_u64(&sub, 3).unwrap_or(0)),
+                    count: wire::get_u64(&sub, 4).unwrap_or(0),
+                });
+            }
+            _ => {}
+        }
+    }
+    Ok(m)
+}
 
 impl Response {
     /// An error reply with no refusal classification.
@@ -312,6 +403,10 @@ impl Response {
                 w.uint(16, s.workers);
                 w.uint(17, s.failed);
             }
+            Response::Metrics(m) => {
+                w.uint(1, RESP_METRICS);
+                encode_metrics_into(&mut w, m);
+            }
         }
         w.into_bytes()
     }
@@ -354,6 +449,7 @@ impl Response {
                 // absent on frames from pre-`failed` servers
                 failed: wire::get_u64(&fields, 17).unwrap_or(0),
             }),
+            RESP_METRICS => Response::Metrics(decode_metrics(&fields)?),
             other => bail!("unknown response kind {other}"),
         })
     }
@@ -393,6 +489,7 @@ mod tests {
         roundtrip_req(Request::Exit { worker: "w".into() });
         roundtrip_req(Request::Status);
         roundtrip_req(Request::Save);
+        roundtrip_req(Request::Metrics);
     }
 
     #[test]
@@ -425,6 +522,46 @@ mod tests {
             failed: 1,
             workers: 7,
         }));
+    }
+
+    #[test]
+    fn metrics_snapshot_roundtrips() {
+        // a realistic populated snapshot: counters, gauges (including a
+        // negative value to pin the two's-complement path), and a
+        // histogram with interior zero buckets
+        roundtrip_resp(Response::Metrics(MetricsSnapshot {
+            version: MetricsSnapshot::VERSION,
+            uptime_s: 12.75,
+            counters: vec![
+                ("tasks_created".into(), 100),
+                ("steals_served".into(), 42),
+                ("a_series_this_decoder_never_heard_of".into(), u64::MAX),
+            ],
+            gauges: vec![("queue_depth".into(), 7), ("drift".into(), -3)],
+            hists: vec![
+                HistSnapshot {
+                    name: "service_steal".into(),
+                    buckets: vec![0, 2, 0, 0, 5],
+                    sum_s: 0.0625,
+                    count: 7,
+                },
+                HistSnapshot { name: "empty".into(), buckets: vec![], sum_s: 0.0, count: 0 },
+            ],
+        }));
+        // the disabled-registry snapshot (version 0, all empty)
+        roundtrip_resp(Response::Metrics(MetricsSnapshot::default()));
+    }
+
+    #[test]
+    fn metrics_request_is_a_fresh_kind() {
+        // the new request must not collide with any pre-existing kind:
+        // decoding its frame on a current server yields Metrics, and the
+        // frame is a single kind field (payload-less, like Status)
+        let bytes = Request::Metrics.encode();
+        assert_eq!(Request::decode(&bytes).unwrap(), Request::Metrics);
+        let fields = crate::substrate::wire::Reader::new(&bytes).fields().unwrap();
+        assert_eq!(fields.len(), 1);
+        assert_eq!(wire::get_u64(&fields, 1).unwrap(), 9);
     }
 
     #[test]

@@ -6,9 +6,12 @@
 //! loop serializes all mutations — the paper's single-task-server design
 //! whose dispatch rate bounds dwork's METG.
 
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
+use crate::metrics::{Counter, Gauge, Registry, Series};
 use crate::substrate::transport::RequestRx;
 
 use super::messages::{Request, Response};
@@ -28,11 +31,17 @@ pub struct ServerCounters {
 pub struct ServerConfig {
     /// Auto-snapshot the store every N mutations (0 = never).
     pub snapshot_every: u64,
+    /// Live-metrics registry.  The disabled default costs one branch
+    /// per update; pass [`Registry::enabled`] to get per-request-kind
+    /// counts, service-time histograms, queue/inflight gauges, and the
+    /// `Request::Metrics` snapshot (the serve loop shares this registry
+    /// with the state machine via `SchedState::set_metrics`).
+    pub metrics: Registry,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { snapshot_every: 0 }
+        ServerConfig { snapshot_every: 0, metrics: Registry::default() }
     }
 }
 
@@ -50,15 +59,62 @@ pub fn serve_with_counters(
     cfg: ServerConfig,
     counters: &ServerCounters,
 ) {
+    let metrics = cfg.metrics.clone();
+    // one registry, shared: the state machine updates task-lifecycle
+    // counters and the queue/inflight gauges; this loop adds per-kind
+    // request counts, service times, and worker-population series
+    state.set_metrics(metrics.clone());
+    // worker names seen stealing since the last Exit — the hub-side
+    // notion of "attached".  Only maintained when metrics are on.
+    let mut attached: HashSet<String> = HashSet::new();
     let mut mutations = 0u64;
     for req in rx {
         counters.requests.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let decoded = Request::decode(&req.payload);
+        // per-kind arrival counter + the service-time series this
+        // request will observe into once handled
+        let (kind_counter, service) = match &decoded {
+            Err(_) => (Counter::ReqMalformed, None),
+            Ok(Request::Create { .. }) => (Counter::ReqCreate, Some(Series::ServiceCreate)),
+            Ok(Request::Steal { .. }) => (Counter::ReqSteal, Some(Series::ServiceSteal)),
+            Ok(Request::StealN { .. }) => (Counter::ReqStealN, Some(Series::ServiceSteal)),
+            Ok(Request::Complete { .. }) => {
+                (Counter::ReqComplete, Some(Series::ServiceComplete))
+            }
+            Ok(Request::Transfer { .. }) => {
+                (Counter::ReqTransfer, Some(Series::ServiceTransfer))
+            }
+            Ok(Request::Exit { .. }) => (Counter::ReqExit, Some(Series::ServiceExit)),
+            Ok(Request::Status) => (Counter::ReqStatus, Some(Series::ServiceStatus)),
+            Ok(Request::Save) => (Counter::ReqSave, Some(Series::ServiceSave)),
+            Ok(Request::Metrics) => (Counter::ReqMetrics, Some(Series::ServiceMetrics)),
+        };
+        metrics.inc(kind_counter);
+        if metrics.is_enabled() {
+            // first steal from a name = attach; Exit = detach
+            match &decoded {
+                Ok(Request::Steal { worker }) | Ok(Request::StealN { worker, .. }) => {
+                    if attached.insert(worker.clone()) {
+                        metrics.inc(Counter::WorkersAttached);
+                        metrics.gauge_add(Gauge::WorkersConnected, 1);
+                    }
+                }
+                Ok(Request::Exit { worker }) => {
+                    if attached.remove(worker) {
+                        metrics.inc(Counter::WorkersExited);
+                        metrics.gauge_add(Gauge::WorkersConnected, -1);
+                    }
+                }
+                _ => {}
+            }
+        }
         // set only when THIS request changed scheduler state: the
         // auto-snapshot gate must not fire on reads, malformed frames, or
         // no-op steals sitting at a counter multiple (and never before
         // the first mutation)
         let mut mutated = false;
-        let resp = match Request::decode(&req.payload) {
+        let resp = match decoded {
             Err(e) => Response::err(format!("bad request: {e}")),
             Ok(Request::Create { task, deps }) => match state.create(task, &deps) {
                 Ok(()) => {
@@ -74,6 +130,7 @@ pub fn serve_with_counters(
                     Some(t) => {
                         mutated = true;
                         counters.steals_served.fetch_add(1, Ordering::Relaxed);
+                        metrics.inc(Counter::StealsServed);
                         Response::Task(t)
                     }
                     // an empty hub parks the worker instead of dismissing
@@ -81,10 +138,12 @@ pub fn serve_with_counters(
                     // may not have connected yet
                     None if !state.is_empty() && state.all_done() => {
                         counters.exits_sent.fetch_add(1, Ordering::Relaxed);
+                        metrics.inc(Counter::StealsEmpty);
                         Response::Exit
                     }
                     None => {
                         counters.not_found.fetch_add(1, Ordering::Relaxed);
+                        metrics.inc(Counter::StealsEmpty);
                         Response::NotFound
                     }
                 }
@@ -93,12 +152,18 @@ pub fn serve_with_counters(
                 let got = state.steal(&worker, n);
                 if got.is_empty() && !state.is_empty() && state.all_done() {
                     counters.exits_sent.fetch_add(1, Ordering::Relaxed);
+                    metrics.inc(Counter::StealsEmpty);
                     Response::Exit
                 } else {
                     mutated = !got.is_empty();
                     counters
                         .steals_served
                         .fetch_add(got.len() as u64, Ordering::Relaxed);
+                    if got.is_empty() {
+                        metrics.inc(Counter::StealsEmpty);
+                    } else {
+                        metrics.add(Counter::StealsServed, got.len() as u64);
+                    }
                     Response::Tasks(got)
                 }
             }
@@ -129,12 +194,19 @@ pub fn serve_with_counters(
                 Ok(()) => Response::Ok,
                 Err(e) => Response::err(e.to_string()),
             },
+            // a snapshot of this very registry; version 0 (empty) when
+            // the hub was served without --metrics-addr and no enabled
+            // registry was passed in
+            Ok(Request::Metrics) => Response::Metrics(metrics.snapshot()),
         };
         if mutated {
             mutations += 1;
             if cfg.snapshot_every > 0 && mutations % cfg.snapshot_every == 0 {
                 let _ = state.save();
             }
+        }
+        if let Some(series) = service {
+            metrics.observe(series, t0.elapsed());
         }
         req.reply(resp.encode());
     }
@@ -239,8 +311,10 @@ mod tests {
         let kv = KvStore::open(&dir).unwrap();
         let state = SchedState::with_store(kv);
         let snap = dir.join("snapshot.kv");
-        let (connector, handle) =
-            spawn_inproc(state, ServerConfig { snapshot_every: 2 });
+        let (connector, handle) = spawn_inproc(
+            state,
+            ServerConfig { snapshot_every: 2, ..ServerConfig::default() },
+        );
         let mut c = Client::new(Box::new(connector.connect()), "w0");
         // reads and failed steals at mutations == 0 must not snapshot
         for _ in 0..3 {
@@ -283,6 +357,58 @@ mod tests {
         let t = c.steal().unwrap().unwrap();
         c.complete(&t.name, true).unwrap();
         assert!(matches!(c.steal_poll().unwrap(), StealOutcome::AllDone));
+        drop(c);
+        drop(connector);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn metrics_request_snapshots_live_hub_counters() {
+        let metrics = crate::metrics::Registry::enabled();
+        let cfg = ServerConfig { metrics: metrics.clone(), ..ServerConfig::default() };
+        let (connector, handle) = spawn_inproc(SchedState::new(), cfg);
+        let mut c = Client::new(Box::new(connector.connect()), "w0");
+        c.create(TaskMsg::new("a", vec![]), &[]).unwrap();
+        c.create(TaskMsg::new("b", vec![]), &["a".to_string()]).unwrap();
+        let t = c.steal().unwrap().unwrap();
+        c.complete(&t.name, true).unwrap();
+        let snap = c.metrics().unwrap();
+        assert_eq!(snap.version, crate::metrics::MetricsSnapshot::VERSION);
+        assert_eq!(snap.counter("requests_create"), 2);
+        assert_eq!(snap.counter("requests_steal"), 1);
+        assert_eq!(snap.counter("tasks_created"), 2);
+        assert_eq!(snap.counter("tasks_completed"), 1);
+        assert_eq!(snap.counter("steals_served"), 1);
+        assert_eq!(snap.counter("workers_attached"), 1);
+        assert_eq!(snap.gauge("workers_connected"), 1);
+        assert_eq!(snap.gauge("queue_depth"), 1, "b became ready when a completed");
+        assert_eq!(snap.gauge("tasks_inflight"), 0);
+        let svc = snap.hist("service_create").expect("create service histogram");
+        assert_eq!(svc.count, 2);
+        // worker exit flips the population series
+        let t = c.steal().unwrap().unwrap();
+        c.complete(&t.name, true).unwrap();
+        assert!(c.steal().unwrap().is_none(), "all done => Exit");
+        c.exit().unwrap();
+        drop(c);
+        drop(connector);
+        handle.join().unwrap();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.counter("workers_exited"), 1);
+        assert_eq!(snap.gauge("workers_connected"), 0);
+        assert_eq!(snap.counter("tasks_completed"), 2);
+    }
+
+    #[test]
+    fn disabled_metrics_request_answers_version_zero() {
+        // a hub served without an enabled registry still answers the
+        // Metrics request — with the version-0 "disabled" sentinel —
+        // so `dhub top` can say "metrics off" instead of erroring
+        let (connector, handle) = spawn_inproc(SchedState::new(), ServerConfig::default());
+        let mut c = Client::new(Box::new(connector.connect()), "w0");
+        let snap = c.metrics().unwrap();
+        assert_eq!(snap.version, 0);
+        assert!(snap.counters.is_empty());
         drop(c);
         drop(connector);
         handle.join().unwrap();

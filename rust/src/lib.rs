@@ -53,11 +53,15 @@
 //! [`calibrate`] subsystem closes that loop, fitting the cost model's
 //! constants from measured traces into a versioned profile that
 //! `workflow plan|run --calibration` loads in place of the Table-4
-//! defaults.
+//! defaults.  The [`metrics`] subsystem is the live counterpart: atomic
+//! counters/gauges/histograms across the hub and workers, queryable
+//! over the wire (`Request::Metrics`), scrapable as Prometheus text
+//! (`dhub serve --metrics-addr`), and watchable with `dhub top`.
 
 pub mod calibrate;
 pub mod coordinator;
 pub mod metg;
+pub mod metrics;
 pub mod runtime;
 pub mod substrate;
 pub mod trace;

@@ -2,9 +2,11 @@
 //!
 //! Subcommands:
 //!   pmake    — run a rules.yaml/targets.yaml campaign on this host
-//!   dhub     — serve | worker: a persistent TCP task server + workflow
-//!              workers that execute task-body payloads (the remote
-//!              deployment `workflow run --connect` submits to)
+//!   dhub     — serve | worker | top | status: a persistent TCP task
+//!              server + workflow workers that execute task-body
+//!              payloads (the remote deployment `workflow run
+//!              --connect` submits to), plus live metrics views of a
+//!              running hub
 //!   dwork    — serve | worker | create | status | drain  (TCP deployment)
 //!   task     — execute one AOT artifact through PJRT (the job-step body
 //!              that pmake scripts launch, and a smoke-check for the
@@ -22,7 +24,7 @@
 //! Run with no args for usage.
 
 use std::path::{Path, PathBuf};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context as _, Result};
 
@@ -30,6 +32,7 @@ use threesched::calibrate::{self, CalibrationProfile};
 use threesched::coordinator::dwork::{self, Client, TaskMsg};
 use threesched::coordinator::pmake;
 use threesched::metg::harness::{metg_sweep, render_metg, PAPER_RANKS};
+use threesched::metrics::{self, MetricsSnapshot, Registry};
 use threesched::metg::Workload;
 use threesched::workflow;
 use threesched::runtime::service::RuntimeService;
@@ -50,9 +53,14 @@ commands:
   pmake   --rules rules.yaml --targets targets.yaml [--nodes N] [--fifo]
   dhub serve    --bind addr:port [--store dir] [--snapshot-every N]
                 [--trace out.jsonl]            (hub-side lifecycle trace)
+                [--metrics-addr host:port]     (Prometheus text exposition)
   dhub worker   --connect addr:port [--workers N] [--prefetch K] [--dir D]
                 [--name base] [--linger] [--trace out.jsonl]
                 [--idle-floor-us U] [--idle-ceiling-ms M]
+  dhub top      --connect addr:port [--interval-ms MS] [--iters N]
+                (refreshing full-screen hub view: queue depth, workers,
+                 tasks/sec, steal-latency quantiles)
+  dhub status   --connect addr:port [--watch] [--interval-ms MS] [--iters N]
   dwork serve   --bind addr:port [--db dir] [--snapshot-every N]
   dwork worker  --connect addr:port [--name w0] [--prefetch N] [--artifacts-dir D]
   dwork create  --connect addr:port --name task [--dep t1,t2]
@@ -164,6 +172,7 @@ fn serve_hub(
     store: Option<&str>,
     snapshot_every: u64,
     trace_path: Option<&str>,
+    metrics_addr: Option<&str>,
 ) -> Result<()> {
     let mut state = match store {
         Some(dir) => dwork::SchedState::with_store(KvStore::open(Path::new(dir))?),
@@ -173,7 +182,15 @@ fn serve_hub(
         state.set_tracer(Tracer::to_file(Path::new(p), "dwork")?);
         println!("tracing lifecycle events to {p}");
     }
-    let cfg = dwork::ServerConfig { snapshot_every };
+    // a served hub always counts: the whole point of a persistent server
+    // is that `dhub top` and remote Metrics requests can look at it, and
+    // the per-request cost is a handful of relaxed atomic adds
+    let reg = Registry::enabled();
+    if let Some(maddr) = metrics_addr {
+        let (maddr, _scraper) = metrics::serve_exposition(reg.clone(), maddr)?;
+        println!("metrics exposition on {maddr} (Prometheus text format)");
+    }
+    let cfg = dwork::ServerConfig { snapshot_every, metrics: reg };
     let (addr, _guard, handle) = dwork::spawn_tcp(state, cfg, bind)?;
     println!("dhub serving on {addr} (ctrl-c to stop)");
     let _ = handle.join();
@@ -185,7 +202,7 @@ fn serve_hub(
 /// workflow-aware workers that decode task bodies as payloads.
 fn cmd_dhub(argv: &[String]) -> Result<()> {
     let Some(verb) = argv.first().map(String::as_str) else {
-        bail!("dhub needs a verb: serve | worker\n{USAGE}");
+        bail!("dhub needs a verb: serve | worker | top | status\n{USAGE}");
     };
     let rest = &argv[1..];
     match verb {
@@ -195,6 +212,7 @@ fn cmd_dhub(argv: &[String]) -> Result<()> {
                 Flag { name: "store", help: "persistence directory (restartable hub)", takes_value: true, default: None },
                 Flag { name: "snapshot-every", help: "mutations between auto-snapshots (0 = never)", takes_value: true, default: Some("0") },
                 Flag { name: "trace", help: "stream lifecycle events to this JSONL file", takes_value: true, default: None },
+                Flag { name: "metrics-addr", help: "serve Prometheus text exposition on this address", takes_value: true, default: None },
             ];
             let args = parse(rest, &spec)?;
             serve_hub(
@@ -202,6 +220,7 @@ fn cmd_dhub(argv: &[String]) -> Result<()> {
                 args.get("store"),
                 args.get_usize("snapshot-every", 0)? as u64,
                 args.get("trace"),
+                args.get("metrics-addr"),
             )
         }
         "worker" => {
@@ -250,7 +269,195 @@ fn cmd_dhub(argv: &[String]) -> Result<()> {
             );
             Ok(())
         }
-        other => bail!("unknown dhub verb {other:?} (serve | worker)"),
+        "top" => {
+            let spec = [
+                Flag { name: "connect", help: "hub address", takes_value: true, default: Some("127.0.0.1:7117") },
+                Flag { name: "interval-ms", help: "refresh interval, milliseconds", takes_value: true, default: Some("1000") },
+                Flag { name: "iters", help: "stop after N refreshes (0 = until the hub drains)", takes_value: true, default: Some("0") },
+            ];
+            let args = parse(rest, &spec)?;
+            watch_hub(
+                args.get("connect").unwrap(),
+                Duration::from_millis(args.get_usize("interval-ms", 1000)? as u64),
+                args.get_usize("iters", 0)?,
+                true,
+            )
+        }
+        "status" => {
+            let spec = [
+                Flag { name: "connect", help: "hub address", takes_value: true, default: Some("127.0.0.1:7117") },
+                Flag { name: "watch", help: "keep refreshing, one line per interval, until drained", takes_value: false, default: None },
+                Flag { name: "interval-ms", help: "refresh interval, milliseconds", takes_value: true, default: Some("1000") },
+                Flag { name: "iters", help: "stop after N refreshes (0 = until the hub drains)", takes_value: true, default: Some("0") },
+            ];
+            let args = parse(rest, &spec)?;
+            let addr = args.get("connect").unwrap();
+            if args.has("watch") {
+                watch_hub(
+                    addr,
+                    Duration::from_millis(args.get_usize("interval-ms", 1000)? as u64),
+                    args.get_usize("iters", 0)?,
+                    false,
+                )
+            } else {
+                let conn = TcpClient::connect(addr)?;
+                let mut c = Client::new(Box::new(conn), "dtop");
+                let st = c.status()?;
+                let m = c.metrics().ok().filter(|m| m.version != 0);
+                println!("{}", hub_line(&st, m.as_ref(), None));
+                Ok(())
+            }
+        }
+        other => bail!("unknown dhub verb {other:?} (serve | worker | top | status)"),
+    }
+}
+
+/// Shared loop of `dhub top` (full-screen) and `dhub status --watch`
+/// (one line per refresh): a Status + Metrics round-trip pair per
+/// interval, tasks/sec from completed-count deltas.  Stops after
+/// `iters` refreshes when nonzero (the scripting/CI escape hatch), or
+/// once a non-empty hub drains.
+fn watch_hub(addr: &str, interval: Duration, iters: usize, screen: bool) -> Result<()> {
+    let conn = TcpClient::connect(addr)?;
+    let mut c = Client::new(Box::new(conn), "dtop");
+    let mut last: Option<(Instant, u64)> = None;
+    let mut done = 0usize;
+    loop {
+        let st = c.status()?;
+        // best-effort: an old hub answers Err for the Metrics request
+        // kind and a metrics-disabled hub answers version 0 — the view
+        // degrades to Status-only rather than failing
+        let m = c.metrics().ok().filter(|m| m.version != 0);
+        let now = Instant::now();
+        let rate = last.map(|(t0, done0)| {
+            st.completed.saturating_sub(done0) as f64
+                / now.duration_since(t0).as_secs_f64().max(1e-9)
+        });
+        last = Some((now, st.completed));
+        done += 1;
+        if screen {
+            print!("\x1b[2J\x1b[H{}", render_top(addr, &st, m.as_ref(), rate));
+            std::io::Write::flush(&mut std::io::stdout())?;
+        } else {
+            println!("{}", hub_line(&st, m.as_ref(), rate));
+        }
+        if (iters > 0 && done >= iters) || (st.total > 0 && st.is_drained()) {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
+}
+
+/// The `dwork status` line, extended with rate and steal-latency fields
+/// when the hub exposes metrics.
+fn hub_line(st: &dwork::StatusInfo, m: Option<&MetricsSnapshot>, rate: Option<f64>) -> String {
+    let mut line = format!(
+        "total={} ready={} waiting={} assigned={} completed={} errored={} failed={} \
+         workers={} drained={}",
+        st.total,
+        st.ready,
+        st.waiting,
+        st.assigned,
+        st.completed,
+        st.errored,
+        st.failed,
+        st.workers,
+        st.is_drained()
+    );
+    if let Some(r) = rate {
+        line.push_str(&format!(" tasks/s={r:.1}"));
+    }
+    if let Some(m) = m {
+        line.push_str(&format!(
+            " steals={}/{} steal_p99={}",
+            m.counter("steals_served"),
+            m.counter("steals_served") + m.counter("steals_empty"),
+            fmt_q(m, "service_steal", 0.99),
+        ));
+    }
+    line
+}
+
+/// The `dhub top` dashboard body (everything below the ANSI clear).
+fn render_top(
+    addr: &str,
+    st: &dwork::StatusInfo,
+    m: Option<&MetricsSnapshot>,
+    rate: Option<f64>,
+) -> String {
+    let up = m.map_or_else(|| "-".into(), |m| format!("{:.0}s", m.uptime_s));
+    let mut out = format!("dhub {addr} — up {up}\n\n");
+    out.push_str(&format!(
+        "  tasks    total {:>8}  ready {:>8}  waiting {:>7}  assigned {:>6}\n",
+        st.total, st.ready, st.waiting, st.assigned
+    ));
+    out.push_str(&format!(
+        "           completed {:>4}  errored {:>6}  failed-at-a-worker {:>4}\n",
+        st.completed, st.errored, st.failed
+    ));
+    match rate {
+        Some(r) => out.push_str(&format!(
+            "  rate     {r:>14.1} tasks/s (completed, since last refresh)\n"
+        )),
+        None => out.push_str("  rate     (needs a second refresh)\n"),
+    }
+    let Some(m) = m else {
+        out.push_str(&format!("  workers  {:>8} connected\n", st.workers));
+        out.push_str("\n  (hub answered without metrics: old server or metrics disabled)\n");
+        return out;
+    };
+    out.push_str(&format!(
+        "  workers  {:>8} connected  attached-ever {:>3}  exited {:>8}\n",
+        m.gauge("workers_connected"),
+        m.counter("workers_attached"),
+        m.counter("workers_exited"),
+    ));
+    out.push_str(&format!(
+        "  queue    depth {:>8}  inflight {:>5}  requeued {:>8}\n",
+        m.gauge("queue_depth"),
+        m.gauge("tasks_inflight"),
+        m.counter("tasks_requeued"),
+    ));
+    out.push_str(&format!(
+        "  steals   served {:>7}  empty {:>8}  malformed-reqs {:>4}\n",
+        m.counter("steals_served"),
+        m.counter("steals_empty"),
+        m.counter("requests_malformed"),
+    ));
+    out.push_str("\n  hub service time        p50        p90        p99      count\n");
+    for name in ["service_steal", "service_create", "service_complete", "service_status"] {
+        if let Some(h) = m.hist(name) {
+            if h.count == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "    {:<16} {:>10} {:>10} {:>10} {:>10}\n",
+                name.trim_start_matches("service_"),
+                fmt_s(h.quantile(0.5)),
+                fmt_s(h.quantile(0.9)),
+                fmt_s(h.quantile(0.99)),
+                h.count,
+            ));
+        }
+    }
+    out
+}
+
+/// Human duration: sub-millisecond in µs, sub-second in ms, else seconds.
+fn fmt_s(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.0}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+fn fmt_q(m: &MetricsSnapshot, series: &str, q: f64) -> String {
+    match m.hist(series) {
+        Some(h) if h.count > 0 => fmt_s(h.quantile(q)),
+        _ => "-".into(),
     }
 }
 
@@ -273,6 +480,7 @@ fn cmd_dwork(argv: &[String]) -> Result<()> {
                 args.get("bind").unwrap(),
                 args.get("db"),
                 args.get_usize("snapshot-every", 0)? as u64,
+                None,
                 None,
             )
         }
@@ -674,7 +882,7 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
             }];
             let args = parse(rest, &spec)?;
             let path = Path::new(args.get("file").unwrap());
-            let (source, events) = trace::read_trace(path)?;
+            let (source, events, samples) = trace::read_trace_full(path)?;
             // a trace cut short (ctrl-c'd hub, killed worker) is exactly
             // what the flush-per-event streaming sink exists to preserve:
             // report it anyway, flagging the incompleteness
@@ -683,6 +891,7 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
                            reporting the events present");
             }
             print!("{}", trace::TraceReport::from_events(&events).render(&source));
+            print!("{}", trace::render_metrics(&samples));
             Ok(())
         }
         "compare" => {

@@ -1,0 +1,681 @@
+//! Live metrics: lock-cheap counters, gauges, and log-bucketed
+//! histograms with Prometheus text exposition.
+//!
+//! Same handle discipline as [`crate::trace::Tracer`] (the one
+//! `benches/trace_overhead.rs` pins): a disabled [`Registry`] — the
+//! `Default` — is a single `Option` branch per update, zero allocation,
+//! zero atomics, so instrumentation stays unconditionally compiled into
+//! the hub serve loop and the worker pull loop.  An enabled registry is
+//! one `Arc` of fixed-size atomic arrays: every update is a relaxed
+//! atomic op or two, no locks, no allocation on the hot path
+//! (`benches/metrics_overhead.rs` pins both properties).
+//!
+//! Where the post-hoc JSONL tracer answers "what happened", this module
+//! answers "what is the hub doing right now": it feeds the
+//! `Request::Metrics` wire query, the `dhub serve --metrics-addr`
+//! Prometheus endpoint ([`serve_exposition`]), and the `dhub top`
+//! terminal view.  Snapshots ([`Registry::snapshot`]) carry name–value
+//! pairs rather than indexed arrays, so the wire form stays forward
+//! compatible: a newer hub can add series without breaking an older
+//! `dhub top`.
+
+use std::fmt;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Monotonically increasing event counts.  `name()` is the stable
+/// identifier used in snapshots and Prometheus exposition (which
+/// appends `_total`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// per-`Request`-kind arrival counts (hub serve loop)
+    ReqCreate,
+    ReqSteal,
+    ReqStealN,
+    ReqComplete,
+    ReqTransfer,
+    ReqExit,
+    ReqStatus,
+    ReqSave,
+    ReqMetrics,
+    /// frames that failed to decode
+    ReqMalformed,
+    /// task lifecycle (scheduler state machine)
+    TasksCreated,
+    TasksCompleted,
+    /// attempted by a worker and reported `success=false`
+    TasksFailed,
+    /// errored by propagation without ever being attempted
+    TasksSkipped,
+    /// handed back to the ready queue (Transfer or worker Exit)
+    TasksRequeued,
+    /// steal outcomes (hub side)
+    StealsServed,
+    StealsEmpty,
+    /// worker population churn (hub side: first steal / Exit request)
+    WorkersAttached,
+    WorkersExited,
+    /// worker pull loop (client side)
+    WorkerPolls,
+    WorkerBackoffs,
+    /// transitions into the idle/backoff state (not each sleep)
+    WorkerParks,
+    /// local pmake/mpi-list driver lifecycle
+    DriverTasksLaunched,
+    DriverTasksCompleted,
+    DriverTasksFailed,
+}
+
+impl Counter {
+    pub const ALL: [Counter; 25] = [
+        Counter::ReqCreate,
+        Counter::ReqSteal,
+        Counter::ReqStealN,
+        Counter::ReqComplete,
+        Counter::ReqTransfer,
+        Counter::ReqExit,
+        Counter::ReqStatus,
+        Counter::ReqSave,
+        Counter::ReqMetrics,
+        Counter::ReqMalformed,
+        Counter::TasksCreated,
+        Counter::TasksCompleted,
+        Counter::TasksFailed,
+        Counter::TasksSkipped,
+        Counter::TasksRequeued,
+        Counter::StealsServed,
+        Counter::StealsEmpty,
+        Counter::WorkersAttached,
+        Counter::WorkersExited,
+        Counter::WorkerPolls,
+        Counter::WorkerBackoffs,
+        Counter::WorkerParks,
+        Counter::DriverTasksLaunched,
+        Counter::DriverTasksCompleted,
+        Counter::DriverTasksFailed,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::ReqCreate => "requests_create",
+            Counter::ReqSteal => "requests_steal",
+            Counter::ReqStealN => "requests_steal_n",
+            Counter::ReqComplete => "requests_complete",
+            Counter::ReqTransfer => "requests_transfer",
+            Counter::ReqExit => "requests_exit",
+            Counter::ReqStatus => "requests_status",
+            Counter::ReqSave => "requests_save",
+            Counter::ReqMetrics => "requests_metrics",
+            Counter::ReqMalformed => "requests_malformed",
+            Counter::TasksCreated => "tasks_created",
+            Counter::TasksCompleted => "tasks_completed",
+            Counter::TasksFailed => "tasks_failed",
+            Counter::TasksSkipped => "tasks_skipped",
+            Counter::TasksRequeued => "tasks_requeued",
+            Counter::StealsServed => "steals_served",
+            Counter::StealsEmpty => "steals_empty",
+            Counter::WorkersAttached => "workers_attached",
+            Counter::WorkersExited => "workers_exited",
+            Counter::WorkerPolls => "worker_polls",
+            Counter::WorkerBackoffs => "worker_backoffs",
+            Counter::WorkerParks => "worker_parks",
+            Counter::DriverTasksLaunched => "driver_tasks_launched",
+            Counter::DriverTasksCompleted => "driver_tasks_completed",
+            Counter::DriverTasksFailed => "driver_tasks_failed",
+        }
+    }
+}
+
+/// Instantaneous levels (can go up and down).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gauge {
+    /// tasks in the ready deque right now
+    QueueDepth,
+    /// tasks assigned to a worker right now
+    Inflight,
+    /// workers the hub believes are attached
+    WorkersConnected,
+}
+
+impl Gauge {
+    pub const ALL: [Gauge; 3] = [Gauge::QueueDepth, Gauge::Inflight, Gauge::WorkersConnected];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::QueueDepth => "queue_depth",
+            Gauge::Inflight => "tasks_inflight",
+            Gauge::WorkersConnected => "workers_connected",
+        }
+    }
+}
+
+/// Duration series, recorded into log2-bucketed histograms over
+/// nanoseconds: bucket `i` covers `[2^(i-1), 2^i)` ns, bucket 0 holds
+/// zero-length observations.  40 buckets reach ~9 minutes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Series {
+    /// hub-side service time per request kind (decode→reply)
+    ServiceCreate,
+    ServiceSteal,
+    ServiceComplete,
+    ServiceTransfer,
+    ServiceExit,
+    ServiceStatus,
+    ServiceSave,
+    ServiceMetrics,
+    /// worker-observed steal round-trip (request→batch in hand)
+    StealRtt,
+    /// worker-side payload execution time
+    TaskCompute,
+}
+
+impl Series {
+    pub const ALL: [Series; 10] = [
+        Series::ServiceCreate,
+        Series::ServiceSteal,
+        Series::ServiceComplete,
+        Series::ServiceTransfer,
+        Series::ServiceExit,
+        Series::ServiceStatus,
+        Series::ServiceSave,
+        Series::ServiceMetrics,
+        Series::StealRtt,
+        Series::TaskCompute,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Series::ServiceCreate => "service_create",
+            Series::ServiceSteal => "service_steal",
+            Series::ServiceComplete => "service_complete",
+            Series::ServiceTransfer => "service_transfer",
+            Series::ServiceExit => "service_exit",
+            Series::ServiceStatus => "service_status",
+            Series::ServiceSave => "service_save",
+            Series::ServiceMetrics => "service_metrics",
+            Series::StealRtt => "steal_rtt",
+            Series::TaskCompute => "task_compute",
+        }
+    }
+}
+
+/// Bucket count per histogram: log2 over ns, so 40 buckets span
+/// 1 ns .. 2^39 ns ≈ 550 s — beyond any per-request latency we serve.
+pub const HIST_BUCKETS: usize = 40;
+
+struct HistCell {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+}
+
+impl HistCell {
+    fn new() -> HistCell {
+        HistCell {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_ns: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn observe_ns(&self, ns: u64) {
+        let idx = if ns == 0 {
+            0
+        } else {
+            ((64 - ns.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+        };
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+struct Inner {
+    epoch: Instant,
+    counters: [AtomicU64; Counter::ALL.len()],
+    gauges: [AtomicI64; Gauge::ALL.len()],
+    hists: [HistCell; Series::ALL.len()],
+}
+
+/// A cheap-to-clone metrics handle.  `Registry::default()` is disabled:
+/// every update is one branch and nothing else.  [`Registry::enabled`]
+/// allocates the shared atomic store; clones observe into the same
+/// store, so the hub serve loop, the scheduler state machine, and any
+/// exposition threads can share one registry.
+#[derive(Clone, Default)]
+pub struct Registry(Option<Arc<Inner>>);
+
+impl fmt::Debug for Registry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.0 {
+            None => write!(f, "Registry(disabled)"),
+            Some(_) => write!(f, "Registry(enabled)"),
+        }
+    }
+}
+
+impl Registry {
+    /// An active registry (disabled is the `Default`).
+    pub fn enabled() -> Registry {
+        Registry(Some(Arc::new(Inner {
+            epoch: Instant::now(),
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            gauges: std::array::from_fn(|_| AtomicI64::new(0)),
+            hists: std::array::from_fn(|_| HistCell::new()),
+        })))
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    #[inline]
+    pub fn inc(&self, c: Counter) {
+        self.add(c, 1);
+    }
+
+    #[inline]
+    pub fn add(&self, c: Counter, n: u64) {
+        if let Some(inner) = &self.0 {
+            inner.counters[c as usize].fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn counter(&self, c: Counter) -> u64 {
+        match &self.0 {
+            Some(inner) => inner.counters[c as usize].load(Ordering::Relaxed),
+            None => 0,
+        }
+    }
+
+    #[inline]
+    pub fn gauge_add(&self, g: Gauge, delta: i64) {
+        if let Some(inner) = &self.0 {
+            inner.gauges[g as usize].fetch_add(delta, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn gauge_set(&self, g: Gauge, v: i64) {
+        if let Some(inner) = &self.0 {
+            inner.gauges[g as usize].store(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn gauge(&self, g: Gauge) -> i64 {
+        match &self.0 {
+            Some(inner) => inner.gauges[g as usize].load(Ordering::Relaxed),
+            None => 0,
+        }
+    }
+
+    /// Record one duration observation.
+    #[inline]
+    pub fn observe(&self, s: Series, d: Duration) {
+        if let Some(inner) = &self.0 {
+            inner.hists[s as usize].observe_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+        }
+    }
+
+    /// [`Registry::observe`] from fractional seconds (driver-side code
+    /// that already accounts in f64).
+    #[inline]
+    pub fn observe_s(&self, s: Series, seconds: f64) {
+        if let Some(inner) = &self.0 {
+            inner.hists[s as usize].observe_ns((seconds.max(0.0) * 1e9) as u64);
+        }
+    }
+
+    /// Materialize every series into a wire-friendly snapshot.  A
+    /// disabled registry yields the empty `MetricsSnapshot::default()`
+    /// (version 0) — callers can distinguish "metrics off" that way.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let Some(inner) = &self.0 else {
+            return MetricsSnapshot::default();
+        };
+        let counters = Counter::ALL
+            .iter()
+            .map(|&c| {
+                (c.name().to_string(), inner.counters[c as usize].load(Ordering::Relaxed))
+            })
+            .collect();
+        let gauges = Gauge::ALL
+            .iter()
+            .map(|&g| (g.name().to_string(), inner.gauges[g as usize].load(Ordering::Relaxed)))
+            .collect();
+        let hists = Series::ALL
+            .iter()
+            .map(|&s| {
+                let cell = &inner.hists[s as usize];
+                let mut buckets: Vec<u64> =
+                    cell.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+                while buckets.last() == Some(&0) {
+                    buckets.pop();
+                }
+                HistSnapshot {
+                    name: s.name().to_string(),
+                    buckets,
+                    sum_s: cell.sum_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+                    count: cell.count.load(Ordering::Relaxed),
+                }
+            })
+            .collect();
+        MetricsSnapshot {
+            version: MetricsSnapshot::VERSION,
+            uptime_s: inner.epoch.elapsed().as_secs_f64(),
+            counters,
+            gauges,
+            hists,
+        }
+    }
+}
+
+/// One histogram, frozen: per-bucket counts (trailing zero buckets
+/// trimmed), total observed time, and observation count.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistSnapshot {
+    pub name: String,
+    /// bucket `i` counts observations in `[2^(i-1), 2^i)` ns
+    pub buckets: Vec<u64>,
+    pub sum_s: f64,
+    pub count: u64,
+}
+
+impl HistSnapshot {
+    /// Upper bound of bucket `i`, in seconds.
+    pub fn bucket_le_s(i: usize) -> f64 {
+        (1u128 << i) as f64 * 1e-9
+    }
+
+    /// Approximate quantile (0..=1): the upper bound of the bucket the
+    /// rank falls in.  Log2 buckets make this exact to within 2x.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= rank {
+                return HistSnapshot::bucket_le_s(i);
+            }
+        }
+        HistSnapshot::bucket_le_s(self.buckets.len().saturating_sub(1))
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+}
+
+/// A versioned, name-addressed view of every metric at one instant.
+/// This is what crosses the wire (`Response::Metrics`), lands in
+/// `RunOutcome`, and renders to Prometheus text.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    /// snapshot schema version ([`MetricsSnapshot::VERSION`]); 0 means
+    /// "metrics disabled" (the `Default`)
+    pub version: u32,
+    /// seconds since the registry was enabled
+    pub uptime_s: f64,
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    pub hists: Vec<HistSnapshot>,
+}
+
+impl MetricsSnapshot {
+    pub const VERSION: u32 = 1;
+
+    /// Counter by name; 0 when absent (older hub, disabled registry).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(0)
+    }
+
+    /// Gauge by name; 0 when absent.
+    pub fn gauge(&self, name: &str) -> i64 {
+        self.gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(0)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.iter().find(|h| h.name == name)
+    }
+
+    /// Render in the Prometheus text exposition format (0.0.4): every
+    /// series prefixed `threesched_`, counters suffixed `_total`,
+    /// histograms as cumulative `_bucket{le=...}` + `_sum` + `_count`.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        out.push_str("# TYPE threesched_uptime_seconds gauge\n");
+        out.push_str(&format!("threesched_uptime_seconds {}\n", self.uptime_s));
+        for (name, v) in &self.counters {
+            out.push_str(&format!("# TYPE threesched_{name}_total counter\n"));
+            out.push_str(&format!("threesched_{name}_total {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            out.push_str(&format!("# TYPE threesched_{name} gauge\n"));
+            out.push_str(&format!("threesched_{name} {v}\n"));
+        }
+        for h in &self.hists {
+            let name = &h.name;
+            out.push_str(&format!("# TYPE threesched_{name}_seconds histogram\n"));
+            let mut cum = 0u64;
+            for (i, &b) in h.buckets.iter().enumerate() {
+                cum += b;
+                out.push_str(&format!(
+                    "threesched_{name}_seconds_bucket{{le=\"{le:e}\"}} {cum}\n",
+                    le = HistSnapshot::bucket_le_s(i)
+                ));
+            }
+            out.push_str(&format!(
+                "threesched_{name}_seconds_bucket{{le=\"+Inf\"}} {}\n",
+                h.count
+            ));
+            out.push_str(&format!("threesched_{name}_seconds_sum {}\n", h.sum_s));
+            out.push_str(&format!("threesched_{name}_seconds_count {}\n", h.count));
+        }
+        out
+    }
+}
+
+/// Serve `registry` as Prometheus text over plain TCP: a minimal
+/// HTTP/1.1 responder (every request path gets the exposition — scrape
+/// configs point at `/metrics` by convention).  Returns the bound
+/// address and the acceptor thread's handle; the thread runs until the
+/// process exits, which is exactly the lifetime of the `dhub serve`
+/// foreground loop it fronts.
+pub fn serve_exposition(
+    registry: Registry,
+    bind: &str,
+) -> anyhow::Result<(SocketAddr, std::thread::JoinHandle<()>)> {
+    use anyhow::Context as _;
+    let listener =
+        TcpListener::bind(bind).with_context(|| format!("binding metrics endpoint {bind}"))?;
+    let addr = listener.local_addr()?;
+    let handle = std::thread::Builder::new()
+        .name("metrics-http".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(mut s) = stream else { continue };
+                let _ = s.set_read_timeout(Some(Duration::from_secs(2)));
+                // drain the request line + headers (bounded); the reply
+                // is the same regardless of path or method
+                let mut buf = [0u8; 1024];
+                let mut seen: Vec<u8> = Vec::new();
+                loop {
+                    match s.read(&mut buf) {
+                        Ok(0) | Err(_) => break,
+                        Ok(n) => {
+                            seen.extend_from_slice(&buf[..n]);
+                            if seen.windows(4).any(|w| w == b"\r\n\r\n") || seen.len() > 8192 {
+                                break;
+                            }
+                        }
+                    }
+                }
+                let body = registry.snapshot().to_prometheus();
+                let resp = format!(
+                    "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+                     Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+                    body.len(),
+                    body
+                );
+                let _ = s.write_all(resp.as_bytes());
+            }
+        })
+        .expect("spawn metrics responder");
+    Ok((addr, handle))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_registry_is_inert() {
+        let r = Registry::default();
+        assert!(!r.is_enabled());
+        r.inc(Counter::TasksCreated);
+        r.gauge_add(Gauge::QueueDepth, 5);
+        r.observe(Series::StealRtt, Duration::from_micros(3));
+        assert_eq!(r.counter(Counter::TasksCreated), 0);
+        assert_eq!(r.gauge(Gauge::QueueDepth), 0);
+        let snap = r.snapshot();
+        assert_eq!(snap, MetricsSnapshot::default());
+        assert_eq!(snap.version, 0, "disabled snapshot is distinguishable");
+    }
+
+    #[test]
+    fn counters_and_gauges_accumulate_across_clones() {
+        let r = Registry::enabled();
+        let r2 = r.clone();
+        r.inc(Counter::StealsServed);
+        r2.add(Counter::StealsServed, 4);
+        r.gauge_add(Gauge::QueueDepth, 7);
+        r2.gauge_add(Gauge::QueueDepth, -2);
+        r.gauge_set(Gauge::WorkersConnected, 3);
+        assert_eq!(r.counter(Counter::StealsServed), 5);
+        assert_eq!(r2.gauge(Gauge::QueueDepth), 5);
+        let snap = r.snapshot();
+        assert_eq!(snap.version, MetricsSnapshot::VERSION);
+        assert_eq!(snap.counter("steals_served"), 5);
+        assert_eq!(snap.gauge("queue_depth"), 5);
+        assert_eq!(snap.gauge("workers_connected"), 3);
+        assert_eq!(snap.counter("no_such_counter"), 0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let r = Registry::enabled();
+        // 10 fast observations (~1 µs) and one slow outlier (~10 ms)
+        for _ in 0..10 {
+            r.observe(Series::StealRtt, Duration::from_micros(1));
+        }
+        r.observe(Series::StealRtt, Duration::from_millis(10));
+        let snap = r.snapshot();
+        let h = snap.hist("steal_rtt").expect("series present");
+        assert_eq!(h.count, 11);
+        assert!(h.sum_s > 0.009 && h.sum_s < 0.012, "sum {}", h.sum_s);
+        // p50 sits in the microsecond buckets, p99 in the millisecond one
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 >= 0.5e-6 && p50 <= 4e-6, "p50 {p50}");
+        assert!(p99 >= 0.005 && p99 <= 0.04, "p99 {p99}");
+        assert!(p50 <= p99);
+        // bucket invariant: per-bucket counts sum to count
+        assert_eq!(h.buckets.iter().sum::<u64>(), h.count);
+    }
+
+    #[test]
+    fn zero_and_huge_observations_stay_in_range() {
+        let r = Registry::enabled();
+        r.observe(Series::TaskCompute, Duration::ZERO);
+        r.observe(Series::TaskCompute, Duration::from_secs(3600));
+        let snap = r.snapshot();
+        let h = snap.hist("task_compute").unwrap();
+        assert_eq!(h.count, 2);
+        assert_eq!(h.buckets[0], 1, "zero lands in bucket 0");
+        assert_eq!(*h.buckets.last().unwrap(), 1, "overflow clamps to the last bucket");
+        assert!(h.buckets.len() <= HIST_BUCKETS);
+    }
+
+    #[test]
+    fn observe_s_matches_duration_path() {
+        let r = Registry::enabled();
+        r.observe_s(Series::TaskCompute, 1e-6);
+        r.observe(Series::TaskCompute, Duration::from_micros(1));
+        let h = r.snapshot().hist("task_compute").unwrap().clone();
+        assert_eq!(h.count, 2);
+        // both land in the same bucket
+        assert_eq!(h.buckets.iter().filter(|&&b| b > 0).count(), 1);
+        // negative seconds clamp to zero rather than wrapping
+        r.observe_s(Series::TaskCompute, -5.0);
+        let h = r.snapshot().hist("task_compute").unwrap().clone();
+        assert_eq!(h.buckets[0], 1);
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let r = Registry::enabled();
+        r.add(Counter::TasksCompleted, 42);
+        r.gauge_set(Gauge::QueueDepth, 3);
+        r.observe(Series::ServiceSteal, Duration::from_micros(7));
+        r.observe(Series::ServiceSteal, Duration::from_micros(9));
+        let text = r.snapshot().to_prometheus();
+        assert!(text.contains("# TYPE threesched_tasks_completed_total counter"));
+        assert!(text.contains("threesched_tasks_completed_total 42"));
+        assert!(text.contains("# TYPE threesched_queue_depth gauge"));
+        assert!(text.contains("threesched_queue_depth 3"));
+        assert!(text.contains("# TYPE threesched_service_steal_seconds histogram"));
+        assert!(text.contains("threesched_service_steal_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("threesched_service_steal_seconds_count 2"));
+        // cumulative buckets never decrease
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("threesched_service_steal_seconds_bucket"))
+        {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "non-monotone bucket line: {line}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn exposition_endpoint_serves_scrapes() {
+        use std::net::TcpStream;
+        let r = Registry::enabled();
+        r.add(Counter::StealsServed, 9);
+        let (addr, _handle) = serve_exposition(r.clone(), "127.0.0.1:0").unwrap();
+        // two scrapes: the responder must survive more than one connection
+        for _ in 0..2 {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+            let mut text = String::new();
+            s.read_to_string(&mut text).unwrap();
+            assert!(text.starts_with("HTTP/1.1 200 OK"), "{text}");
+            assert!(text.contains("text/plain; version=0.0.4"));
+            assert!(text.contains("threesched_steals_served_total 9"), "{text}");
+        }
+    }
+
+    #[test]
+    fn quantile_edge_cases() {
+        let h = HistSnapshot::default();
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram");
+        assert_eq!(h.mean_s(), 0.0);
+        let r = Registry::enabled();
+        r.observe(Series::StealRtt, Duration::from_micros(100));
+        let snap = r.snapshot();
+        let h = snap.hist("steal_rtt").unwrap();
+        // all quantiles of a single observation agree
+        assert_eq!(h.quantile(0.0), h.quantile(1.0));
+        assert!(h.mean_s() > 0.0);
+    }
+}

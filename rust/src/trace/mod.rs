@@ -42,7 +42,7 @@ use std::time::Instant;
 use anyhow::{bail, Context as _, Result};
 
 pub use compare::{compare_backends, render_comparison, BackendComparison};
-pub use report::TraceReport;
+pub use report::{render_metrics, TraceReport, WorkerRow};
 pub use samples::{graph_from_trace, PhaseSamples};
 pub use sim::simulate_workflow;
 
@@ -51,13 +51,15 @@ pub use sim::simulate_workflow;
 /// fails cleanly at the header ("unsupported trace schema") instead of
 /// mid-stream on an event kind it has never heard of.  Real and
 /// simulated traces share it byte-for-byte.  `/2` added the
-/// worker-scoped `connected` kind; readers accept every schema listed
-/// in [`ACCEPTED_SCHEMAS`].
-pub const SCHEMA: &str = "threesched-trace/2";
+/// worker-scoped `connected` kind; `/3` added interleaved metric-sample
+/// lines (`{"metric":…,"t":…,"value":…}`, e.g. periodic queue-depth
+/// folds from the live [`crate::metrics`] registry); readers accept
+/// every schema listed in [`ACCEPTED_SCHEMAS`].
+pub const SCHEMA: &str = "threesched-trace/3";
 
 /// Schemas [`parse_jsonl`] accepts: the current one plus every older
 /// version whose events are a subset of the current vocabulary.
-pub const ACCEPTED_SCHEMAS: [&str; 2] = ["threesched-trace/1", SCHEMA];
+pub const ACCEPTED_SCHEMAS: [&str; 3] = ["threesched-trace/1", "threesched-trace/2", SCHEMA];
 
 /// One step of a task's lifecycle.  The same vocabulary covers all three
 /// coordinators and the DES models:
@@ -137,10 +139,21 @@ pub struct TaskEvent {
     pub who: String,
 }
 
+/// One scalar metric sample folded into the trace stream (schema `/3`):
+/// a named value at an epoch-relative time — the periodic queue-depth /
+/// inflight snapshots a metrics-enabled run interleaves with its task
+/// events, so `trace report` can plot hub load over time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricSample {
+    pub name: String,
+    pub t: f64,
+    pub value: f64,
+}
+
 // ------------------------------------------------------------------ tracer
 
 enum Sink {
-    Memory(Vec<TaskEvent>),
+    Memory { events: Vec<TaskEvent>, metrics: Vec<MetricSample> },
     /// streamed JSONL (long-lived hubs must not grow a Vec forever);
     /// line-buffered so a killed process loses at most one event
     File(std::io::BufWriter<std::fs::File>),
@@ -175,7 +188,7 @@ impl Tracer {
     pub fn memory() -> Tracer {
         Tracer(Some(Arc::new(Inner {
             epoch: Instant::now(),
-            sink: Mutex::new(Sink::Memory(Vec::new())),
+            sink: Mutex::new(Sink::Memory { events: Vec::new(), metrics: Vec::new() }),
         })))
     }
 
@@ -227,10 +240,29 @@ impl Tracer {
         }
     }
 
+    /// Fold one scalar metric sample into the stream at the current wall
+    /// clock (schema `/3` metric lines).  Disabled: one branch, no
+    /// allocation, no time read — same discipline as [`Tracer::record`].
+    #[inline]
+    pub fn record_metric(&self, name: &str, value: f64) {
+        if let Some(inner) = &self.0 {
+            let t = inner.epoch.elapsed().as_secs_f64();
+            let sample = MetricSample { name: name.to_string(), t, value };
+            let mut sink = inner.sink.lock().expect("trace sink poisoned");
+            match &mut *sink {
+                Sink::Memory { metrics, .. } => metrics.push(sample),
+                Sink::File(w) => {
+                    let _ = writeln!(w, "{}", metric_line(&sample));
+                    let _ = w.flush();
+                }
+            }
+        }
+    }
+
     fn push(inner: &Inner, ev: TaskEvent) {
         let mut sink = inner.sink.lock().expect("trace sink poisoned");
         match &mut *sink {
-            Sink::Memory(v) => v.push(ev),
+            Sink::Memory { events, .. } => events.push(ev),
             Sink::File(w) => {
                 // best-effort: a full disk must not take the campaign down
                 let _ = writeln!(w, "{}", event_line(&ev));
@@ -247,7 +279,25 @@ impl Tracer {
             Some(inner) => {
                 let mut sink = inner.sink.lock().expect("trace sink poisoned");
                 match &mut *sink {
-                    Sink::Memory(v) => std::mem::take(v),
+                    Sink::Memory { events, .. } => std::mem::take(events),
+                    Sink::File(w) => {
+                        let _ = w.flush();
+                        Vec::new()
+                    }
+                }
+            }
+        }
+    }
+
+    /// Take every metric sample collected so far (memory sinks only; a
+    /// file sink's samples are already on disk).
+    pub fn drain_metrics(&self) -> Vec<MetricSample> {
+        match &self.0 {
+            None => Vec::new(),
+            Some(inner) => {
+                let mut sink = inner.sink.lock().expect("trace sink poisoned");
+                match &mut *sink {
+                    Sink::Memory { metrics, .. } => std::mem::take(metrics),
                     Sink::File(w) => {
                         let _ = w.flush();
                         Vec::new()
@@ -347,14 +397,33 @@ fn event_line(ev: &TaskEvent) -> String {
     )
 }
 
+fn metric_line(s: &MetricSample) -> String {
+    format!(
+        "{{\"metric\":\"{}\",\"t\":{:.9},\"value\":{}}}",
+        json_escape(&s.name),
+        s.t,
+        s.value
+    )
+}
+
 /// Serialize a trace (header + events) to a JSONL string.  `source`
 /// names the producer: a coordinator (`"pmake"`, `"dwork"`,
 /// `"mpi-list"`) or a DES run (`"des:pmake"`, …).
 pub fn to_jsonl(source: &str, events: &[TaskEvent]) -> String {
+    to_jsonl_full(source, events, &[])
+}
+
+/// [`to_jsonl`] with interleaved metric samples appended after the
+/// events (readers order by `t`, not line position).
+pub fn to_jsonl_full(source: &str, events: &[TaskEvent], metrics: &[MetricSample]) -> String {
     let mut out = header_line(source);
     out.push('\n');
     for ev in events {
         out.push_str(&event_line(ev));
+        out.push('\n');
+    }
+    for s in metrics {
+        out.push_str(&metric_line(s));
         out.push('\n');
     }
     out
@@ -363,18 +432,39 @@ pub fn to_jsonl(source: &str, events: &[TaskEvent]) -> String {
 /// Write a trace file in one shot (the post-run path of
 /// `workflow run --trace`; streaming sinks write themselves).
 pub fn write_trace(path: &Path, source: &str, events: &[TaskEvent]) -> Result<()> {
+    write_trace_full(path, source, events, &[])
+}
+
+/// [`write_trace`] carrying metric samples too.
+pub fn write_trace_full(
+    path: &Path,
+    source: &str,
+    events: &[TaskEvent],
+    metrics: &[MetricSample],
+) -> Result<()> {
     if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
         std::fs::create_dir_all(parent).with_context(|| format!("creating {parent:?}"))?;
     }
-    std::fs::write(path, to_jsonl(source, events)).with_context(|| format!("writing {path:?}"))
+    std::fs::write(path, to_jsonl_full(source, events, metrics))
+        .with_context(|| format!("writing {path:?}"))
 }
 
-/// Parse a JSONL trace: returns (source, events).  Tolerates a missing
-/// header (source defaults to `"unknown"`) so hand-concatenated traces
-/// still load; unknown event kinds are an error, not silently dropped.
+/// Parse a JSONL trace: returns (source, events).  Metric-sample lines
+/// are tolerated and skipped — use [`parse_jsonl_full`] to keep them.
+/// Tolerates a missing header (source defaults to `"unknown"`) so
+/// hand-concatenated traces still load; unknown event kinds are an
+/// error, not silently dropped.
 pub fn parse_jsonl(text: &str) -> Result<(String, Vec<TaskEvent>)> {
+    let (source, events, _) = parse_jsonl_full(text)?;
+    Ok((source, events))
+}
+
+/// Parse a JSONL trace keeping the schema-`/3` metric samples:
+/// returns (source, events, metric samples).
+pub fn parse_jsonl_full(text: &str) -> Result<(String, Vec<TaskEvent>, Vec<MetricSample>)> {
     let mut source = String::from("unknown");
     let mut events = Vec::new();
+    let mut metrics = Vec::new();
     for (n, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() {
@@ -390,6 +480,15 @@ pub fn parse_jsonl(text: &str) -> Result<(String, Vec<TaskEvent>)> {
             }
             continue;
         }
+        // metric lines have no "task"/"kind": route them first
+        if let Some(name) = json_str_field(line, "metric") {
+            let t = json_num_field(line, "t")
+                .with_context(|| format!("line {}: metric missing \"t\"", n + 1))?;
+            let value = json_num_field(line, "value")
+                .with_context(|| format!("line {}: metric missing \"value\"", n + 1))?;
+            metrics.push(MetricSample { name, t, value });
+            continue;
+        }
         let task = json_str_field(line, "task")
             .with_context(|| format!("line {}: missing \"task\"", n + 1))?;
         let kind_name = json_str_field(line, "kind")
@@ -401,17 +500,23 @@ pub fn parse_jsonl(text: &str) -> Result<(String, Vec<TaskEvent>)> {
         let who = json_str_field(line, "who").unwrap_or_default();
         events.push(TaskEvent { task, kind, t, who });
     }
-    Ok((source, events))
+    Ok((source, events, metrics))
 }
 
 /// Load a trace file written by [`write_trace`] or a streaming sink.
 pub fn read_trace(path: &Path) -> Result<(String, Vec<TaskEvent>)> {
+    let (source, events, _) = read_trace_full(path)?;
+    Ok((source, events))
+}
+
+/// [`read_trace`] keeping the metric samples.
+pub fn read_trace_full(path: &Path) -> Result<(String, Vec<TaskEvent>, Vec<MetricSample>)> {
     let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
     let mut text = String::new();
     std::io::BufReader::new(f)
         .read_to_string(&mut text)
         .with_context(|| format!("reading {path:?}"))?;
-    parse_jsonl(&text)
+    parse_jsonl_full(&text)
 }
 
 // ------------------------------------------------------- wellformedness
@@ -762,6 +867,61 @@ mod tests {
         let (_, parsed) = parse_jsonl(&text).unwrap();
         assert_eq!(parsed, evs);
         assert_eq!(EventKind::from_name("connected"), Some(EventKind::Connected));
+    }
+
+    #[test]
+    fn metric_samples_roundtrip_and_stay_out_of_events() {
+        let events = vec![
+            ev("a", EventKind::Created, 0.0, ""),
+            ev("a", EventKind::Finished, 1.0, "w0"),
+        ];
+        let metrics = vec![
+            MetricSample { name: "queue_depth".into(), t: 0.25, value: 3.0 },
+            MetricSample { name: "queue_depth".into(), t: 0.75, value: 0.0 },
+            MetricSample { name: "tasks_inflight".into(), t: 0.5, value: 1.0 },
+        ];
+        let text = to_jsonl_full("dwork", &events, &metrics);
+        let (source, evs, ms) = parse_jsonl_full(&text).unwrap();
+        assert_eq!(source, "dwork");
+        assert_eq!(evs, events);
+        assert_eq!(ms, metrics);
+        // the event-only reader tolerates (and drops) the metric lines
+        let (_, evs_only) = parse_jsonl(&text).unwrap();
+        assert_eq!(evs_only, events);
+        // and the combined stream still validates as a task trace
+        validate(&evs).unwrap();
+    }
+
+    #[test]
+    fn tracer_folds_metric_samples_into_both_sinks() {
+        let t = Tracer::memory();
+        t.record("a", EventKind::Created, "");
+        t.record_metric("queue_depth", 2.0);
+        let ms = t.drain_metrics();
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].name, "queue_depth");
+        assert_eq!(ms[0].value, 2.0);
+        assert_eq!(t.drain().len(), 1, "events unaffected by metric drain");
+        // disabled tracer: inert
+        let off = Tracer::disabled();
+        off.record_metric("queue_depth", 9.0);
+        assert!(off.drain_metrics().is_empty());
+        // file sink: metric lines land on disk and read back
+        let path = std::env::temp_dir()
+            .join(format!("threesched-trace-metrics-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let t = Tracer::to_file(&path, "dwork").unwrap();
+            t.record("a", EventKind::Created, "");
+            t.record_metric("queue_depth", 5.0);
+            t.record("a", EventKind::Finished, "w0");
+        }
+        let (_, evs, ms) = read_trace_full(&path).unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].value, 5.0);
+        assert!(ms[0].t >= evs[0].t && ms[0].t <= evs[1].t, "sample between the events");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

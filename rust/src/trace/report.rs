@@ -21,7 +21,24 @@
 
 use std::collections::HashMap;
 
-use super::{makespan, counts, EventKind, TaskEvent, TraceCounts};
+use super::{counts, makespan, EventKind, MetricSample, TaskEvent, TraceCounts};
+
+/// Gaps between a worker's consecutive task intervals longer than this
+/// count as park episodes: the worker sat in its poll/backoff loop
+/// rather than flowing straight into the next task.
+const PARK_GAP_S: f64 = 1e-3;
+
+/// Per-worker activity digest (one row of the utilization table).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WorkerRow {
+    pub who: String,
+    /// terminal events attributed to this worker
+    pub tasks: usize,
+    /// seconds inside its Started→terminal (or Launched→terminal) spans
+    pub busy_s: f64,
+    /// idle gaps between consecutive spans longer than [`PARK_GAP_S`]
+    pub parks: usize,
+}
 
 /// Aggregate per-component seconds derived from one trace.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -35,6 +52,9 @@ pub struct TraceReport {
     pub launch_s: f64,
     pub compute_s: f64,
     pub drain_s: f64,
+    /// who-tagged activity rows, sorted by worker name (empty when the
+    /// producer recorded no `who` labels)
+    pub per_worker: Vec<WorkerRow>,
 }
 
 impl TraceReport {
@@ -54,6 +74,7 @@ impl TraceReport {
         }
         let mut cursors: HashMap<&str, Cursor> = HashMap::new();
         let mut last_activity: HashMap<&str, f64> = HashMap::new();
+        let mut spans: HashMap<&str, Vec<(f64, f64)>> = HashMap::new();
         for ev in events {
             // worker attach, not a task: skip before the cursor map sees
             // its empty task name
@@ -92,6 +113,9 @@ impl TraceReport {
                 EventKind::Finished | EventKind::Failed => {
                     if let Some(s) = c.started.or(c.launched) {
                         r.compute_s += ev.t - s;
+                        if !ev.who.is_empty() {
+                            spans.entry(&ev.who).or_default().push((s, ev.t));
+                        }
                     }
                 }
                 EventKind::Requeued => *c = Cursor::default(),
@@ -103,6 +127,16 @@ impl TraceReport {
             .values()
             .map(|&t| (r.makespan_s - t).max(0.0))
             .sum();
+        r.per_worker = spans
+            .into_iter()
+            .map(|(who, mut iv)| {
+                iv.sort_by(|a, b| a.0.total_cmp(&b.0));
+                let busy_s = iv.iter().map(|(s, e)| (e - s).max(0.0)).sum();
+                let parks = iv.windows(2).filter(|w| w[1].0 - w[0].1 > PARK_GAP_S).count();
+                WorkerRow { who: who.to_string(), tasks: iv.len(), busy_s, parks }
+            })
+            .collect();
+        r.per_worker.sort_by(|a, b| a.who.cmp(&b.who));
         r
     }
 
@@ -151,8 +185,77 @@ impl TraceReport {
             self.workers,
             fmt_t(self.makespan_s)
         ));
+        if !self.per_worker.is_empty() {
+            out.push_str("  worker            tasks       busy   busy%  parks\n");
+            for w in &self.per_worker {
+                let frac = if self.makespan_s > 0.0 {
+                    (w.busy_s / self.makespan_s).min(1.0)
+                } else {
+                    0.0
+                };
+                out.push_str(&format!(
+                    "    {:<16} {:>5} {:>10}  {:>5.1}%  {:>5}\n",
+                    w.who,
+                    w.tasks,
+                    fmt_t(w.busy_s),
+                    100.0 * frac,
+                    w.parks
+                ));
+            }
+        }
         out
     }
+}
+
+/// Render the periodic gauge samples a tracer-enabled dwork run folds
+/// into its trace (`{"metric":…}` lines): queue depth over time, tasks
+/// in flight.  Each series gets a ten-bin time-bucketed mean row, the
+/// terminal's answer to Fig 5's queue-depth plots.  Empty input renders
+/// to the empty string so `trace report` stays byte-identical for
+/// traces without samples.
+pub fn render_metrics(samples: &[MetricSample]) -> String {
+    if samples.is_empty() {
+        return String::new();
+    }
+    let mut names: Vec<&str> = samples.iter().map(|s| s.name.as_str()).collect();
+    names.sort_unstable();
+    names.dedup();
+    const BINS: usize = 10;
+    let mut out = String::from("  sampled gauges (ten time-binned means, first -> last):\n");
+    for name in names {
+        let pts: Vec<&MetricSample> = samples.iter().filter(|s| s.name == name).collect();
+        let t0 = pts.iter().map(|s| s.t).fold(f64::INFINITY, f64::min);
+        let t1 = pts.iter().map(|s| s.t).fold(f64::NEG_INFINITY, f64::max);
+        let max = pts.iter().map(|s| s.value).fold(f64::NEG_INFINITY, f64::max);
+        let mean = pts.iter().map(|s| s.value).sum::<f64>() / pts.len() as f64;
+        let span = (t1 - t0).max(f64::MIN_POSITIVE);
+        let mut sum = [0.0f64; BINS];
+        let mut n = [0usize; BINS];
+        for s in &pts {
+            let b = (((s.t - t0) / span) * BINS as f64).min(BINS as f64 - 1.0) as usize;
+            sum[b] += s.value;
+            n[b] += 1;
+        }
+        let cells: Vec<String> = (0..BINS)
+            .map(|b| {
+                if n[b] == 0 {
+                    "-".into()
+                } else {
+                    format!("{:.0}", sum[b] / n[b] as f64)
+                }
+            })
+            .collect();
+        out.push_str(&format!(
+            "    {:<16} {:>4} samples over {:>9}  mean {:.1}  max {:.0}\n      [{}]\n",
+            name,
+            pts.len(),
+            fmt_t(t1 - t0),
+            mean,
+            max,
+            cells.join(" ")
+        ));
+    }
+    out
 }
 
 pub(crate) fn fmt_t(t: f64) -> String {
@@ -232,6 +335,53 @@ mod tests {
         assert!((r.compute_s - 1.0).abs() < 1e-12, "{}", r.compute_s);
         // queue wait: 0.1 (first) + 0.1 (second)
         assert!((r.queue_wait_s - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_worker_rows_count_tasks_busy_time_and_parks() {
+        let evs = vec![
+            // w0: two tasks with a 0.3s gap between them (one park), one
+            // back-to-back task 10µs later (no park)
+            ev("a", EventKind::Launched, 0.0, "w0"),
+            ev("a", EventKind::Started, 0.0, "w0"),
+            ev("a", EventKind::Finished, 0.2, "w0"),
+            ev("b", EventKind::Launched, 0.5, "w0"),
+            ev("b", EventKind::Started, 0.5, "w0"),
+            ev("b", EventKind::Finished, 0.7, "w0"),
+            ev("c", EventKind::Started, 0.70001, "w0"),
+            ev("c", EventKind::Finished, 0.9, "w0"),
+            // w1: one task
+            ev("d", EventKind::Started, 0.1, "w1"),
+            ev("d", EventKind::Finished, 0.4, "w1"),
+        ];
+        let r = TraceReport::from_events(&evs);
+        assert_eq!(r.per_worker.len(), 2);
+        let w0 = &r.per_worker[0];
+        assert_eq!((w0.who.as_str(), w0.tasks, w0.parks), ("w0", 3, 1));
+        assert!((w0.busy_s - (0.2 + 0.2 + 0.19999)).abs() < 1e-9, "{}", w0.busy_s);
+        let w1 = &r.per_worker[1];
+        assert_eq!((w1.who.as_str(), w1.tasks, w1.parks), ("w1", 1, 0));
+        let txt = r.render("test");
+        assert!(txt.contains("worker"), "{txt}");
+        assert!(txt.contains("parks"), "{txt}");
+    }
+
+    #[test]
+    fn metric_summary_bins_by_time() {
+        let samples: Vec<MetricSample> = (0..20)
+            .map(|i| MetricSample {
+                name: "queue_depth".into(),
+                t: i as f64 * 0.1,
+                value: if i < 10 { 10.0 } else { 0.0 },
+            })
+            .collect();
+        let txt = render_metrics(&samples);
+        assert!(txt.contains("queue_depth"), "{txt}");
+        assert!(txt.contains("20 samples"), "{txt}");
+        // first bin all-high, last bin all-zero
+        assert!(txt.contains("[10 "), "{txt}");
+        assert!(txt.trim_end().ends_with("0]"), "{txt}");
+        assert_eq!(render_metrics(&[]), "");
     }
 
     #[test]

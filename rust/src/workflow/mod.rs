@@ -32,8 +32,8 @@
 //!   detail (pmake `RunReport`s, dwork server counters, mpi-list rank
 //!   stats).  [`WorkerPool`](session::WorkerPool) is the library form
 //!   of `threesched dhub worker`;
-//! * [`run`] — the drivers behind the session, plus the deprecated
-//!   pre-`Session` free functions (kept one release as shims).
+//! * [`run`] — the drivers behind the session (payload execution, the
+//!   in-proc hub/worker fabric, the remote submit/await loop).
 //!
 //! Each coordinator module also gains a `from_workflow` ingestion API
 //! ([`crate::coordinator::pmake::from_workflow`],
@@ -43,7 +43,12 @@
 //!
 //! # Migrating from the pre-`Session` entry points
 //!
-//! | old entry point | builder call |
+//! The free-function API (`run_pmake`, `run_dwork`, `dispatch`,
+//! `run_auto`, the remote triplet, `RemoteOpts`) completed its
+//! one-release `#[deprecated]` window and was removed.  The mapping,
+//! for code migrating across that release boundary:
+//!
+//! | removed entry point | builder call |
 //! |---|---|
 //! | `run_pmake(g, dir, n)` | `Session::new(g).backend(Backend::Pmake).parallelism(n).dir(dir).run()` |
 //! | `run_dwork(g, dir, w, pf)` | `Session::new(g).backend(Backend::Dwork { remote: None }).parallelism(w).prefetch(pf).dir(dir).run()` |
@@ -55,10 +60,6 @@
 //! | `await_dwork_remote(addr, sub, opts)` | `Submission::wait()` on the value `submit()` returned |
 //! | `run_dwork_remote(g, addr, opts)` | the same dwork-remote builder chain + `.run()` |
 //! | `RemoteOpts { poll, connect_timeout }` | `PollCfg { poll, connect_timeout }` via `.polling(..)` |
-//!
-//! Every old entry point still works this release (as a `#[deprecated]`
-//! shim over the builder); CI builds the tree with `-D deprecated` to
-//! prove nothing in-tree depends on them.
 
 pub mod graph;
 pub mod lower;
@@ -76,13 +77,3 @@ pub use session::{
     RunOutcome, Session, Submission, WorkerPool,
 };
 pub use spec::{parse_workflow, parse_workflow_file, to_yaml};
-
-// The pre-Session execution API, re-exported one more release so
-// downstream `workflow::run_auto(..)` call sites keep compiling (with a
-// deprecation warning pointing at the builder equivalent).
-#[allow(deprecated)]
-pub use run::{
-    await_dwork_remote, dispatch, dispatch_traced, run_auto, run_auto_traced, run_dwork,
-    run_dwork_remote, run_dwork_traced, run_mpilist, run_mpilist_traced, run_pmake,
-    run_pmake_traced, submit_dwork_remote, RemoteOpts,
-};

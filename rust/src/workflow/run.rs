@@ -9,12 +9,14 @@
 //! to the shell — a comment to any plain `/bin/sh`, so lowered rules
 //! files stay valid standalone pmake inputs.
 //!
-//! The free functions of the pre-`Session` API (`run_pmake`,
-//! `run_dwork_traced`, `dispatch`, the remote triplet, …) survive one
-//! release as `#[deprecated]` shims delegating to the builder; see each
-//! deprecation note for the equivalent `Session` call.
+//! The pre-`Session` free functions (`run_pmake`, `run_dwork_traced`,
+//! `dispatch`, the remote triplet, …) finished their one-release
+//! deprecation window and are gone; every entry point is a
+//! [`super::session::Session`] builder call now.
 
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context as _, Result};
@@ -23,15 +25,14 @@ use crate::coordinator::dwork::{self, Client, RefusalCode, ServerError, StatusIn
 use crate::coordinator::mpilist::{block_range, Context};
 use crate::coordinator::pmake::{self, Executor, LaunchReport, ShellExecutor, TaskInstance};
 use crate::metg::simmodels::Tool;
+use crate::metrics::{Counter, Gauge, MetricsSnapshot, Registry};
 use crate::runtime::{atb_tile, fill_f32, host_atb};
 use crate::substrate::cluster::Machine;
-use crate::substrate::cluster::costs::CostModel;
 use crate::trace::{EventKind, Tracer};
 
 use super::graph::{Payload, TaskSpec, WorkflowGraph};
 use super::lower;
-use super::select::Recommendation;
-use super::session::{Backend, PollCfg, RankStats, Session, Submission};
+use super::session::{PollCfg, RankStats};
 
 /// Outcome of one workflow execution.  Semantics are identical across
 /// back-ends: `tasks_run` were attempted (success or failure),
@@ -156,6 +157,7 @@ pub(crate) fn pmake_driver(
     dir: &Path,
     nodes: usize,
     tracer: &Tracer,
+    metrics: &Registry,
 ) -> Result<(Vec<pmake::RunReport>, RunSummary)> {
     std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
     let dir_str = dir.to_string_lossy().to_string();
@@ -197,6 +199,11 @@ pub(crate) fn pmake_driver(
         outcomes.push((dag, report));
     }
     let (run, failed, skipped) = summarize_pmake(&outcomes);
+    // driver-level series: pmake pushes jobs itself, so the per-task
+    // counts come from the aggregated reports rather than a worker loop
+    metrics.add(Counter::DriverTasksLaunched, run as u64);
+    metrics.add(Counter::DriverTasksCompleted, (run - failed) as u64);
+    metrics.add(Counter::DriverTasksFailed, failed as u64);
     let summary = RunSummary {
         coordinator: Tool::Pmake,
         tasks_run: run,
@@ -237,15 +244,23 @@ fn summarize_pmake(outcomes: &[(pmake::Dag, pmake::RunReport)]) -> (usize, usize
 
 /// Run the workflow under in-proc dwork: seed a dhub from the graph and
 /// drain it with `workers` pulling threads.  Returns the hub's final
-/// counters next to the summary.
+/// counters and the run's [`MetricsSnapshot`] next to the summary.
+///
+/// The hub, its state machine, and every worker thread share one
+/// registry: the caller's when enabled, otherwise a locally enabled one
+/// — so the outcome always carries real counters even when the session
+/// never asked for live metrics.
 pub(crate) fn dwork_driver(
     g: &WorkflowGraph,
     dir: &Path,
     workers: usize,
     prefetch: u32,
     tracer: &Tracer,
-) -> Result<(StatusInfo, RunSummary)> {
+    metrics: &Registry,
+) -> Result<(StatusInfo, MetricsSnapshot, RunSummary)> {
     std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+    let registry =
+        if metrics.is_enabled() { metrics.clone() } else { Registry::enabled() };
     if g.is_empty() {
         // workers would park forever on a hub that never receives a task
         let summary = RunSummary {
@@ -255,16 +270,37 @@ pub(crate) fn dwork_driver(
             tasks_skipped: 0,
             makespan_s: 0.0,
         };
-        return Ok((StatusInfo::default(), summary));
+        return Ok((StatusInfo::default(), registry.snapshot(), summary));
     }
     // the tracer must be in place BEFORE ingestion so Created events land
     let mut state = dwork::SchedState::new();
     state.set_tracer(tracer.clone());
     state.ingest_workflow(g)?;
-    let (connector, handle) = dwork::spawn_inproc(state, dwork::ServerConfig::default());
+    let cfg = dwork::ServerConfig { metrics: registry.clone(), ..dwork::ServerConfig::default() };
+    let (connector, handle) = dwork::spawn_inproc(state, cfg);
+    // a traced run periodically folds registry deltas into the JSONL
+    // stream (schema /3 metric lines), so `trace report` can plot queue
+    // depth and inflight over the campaign's lifetime
+    let sampler = if tracer.enabled() {
+        let stop = Arc::new(AtomicBool::new(false));
+        let (reg, tr, stop2) = (registry.clone(), tracer.clone(), stop.clone());
+        let h = std::thread::Builder::new()
+            .name("metrics-fold".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    tr.record_metric("queue_depth", reg.gauge(Gauge::QueueDepth) as f64);
+                    tr.record_metric("tasks_inflight", reg.gauge(Gauge::Inflight) as f64);
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            })
+            .expect("spawn metrics-fold");
+        Some((stop, h))
+    } else {
+        None
+    };
     let workers = workers.max(1);
     let t0 = Instant::now();
-    let totals: Vec<(u64, u64)> = std::thread::scope(|s| {
+    let totals: Result<Vec<(u64, u64)>> = std::thread::scope(|s| {
         (0..workers)
             .map(|w| {
                 let conn = connector.connect();
@@ -273,10 +309,14 @@ pub(crate) fn dwork_driver(
                 let opts = dwork::WorkerOpts {
                     prefetch,
                     tracer: tracer.clone(),
+                    metrics: registry.clone(),
                     ..dwork::WorkerOpts::default()
                 };
                 s.spawn(move || {
-                    let mut c = Client::new(Box::new(conn), format!("wf-w{w}"));
+                    // exit-on-drop balances the hub's attach/exit pair, so
+                    // the final snapshot shows zero connected workers
+                    let mut c =
+                        Client::new(Box::new(conn), format!("wf-w{w}")).exit_on_drop(true);
                     let stats = dwork::run_worker_opts(&mut c, &opts, |t| match g.get(&t.name) {
                         // known task: full semantics incl. declared-output
                         // materialization for kernel/noop payloads
@@ -291,7 +331,12 @@ pub(crate) fn dwork_driver(
             .into_iter()
             .map(|h| h.join().expect("worker panicked"))
             .collect::<Result<Vec<_>>>()
-    })?;
+    });
+    if let Some((stop, h)) = sampler {
+        stop.store(true, Ordering::Relaxed);
+        let _ = h.join();
+    }
+    let totals = totals?;
     let makespan = t0.elapsed().as_secs_f64();
     drop(connector);
     let state = handle.join().expect("dhub panicked");
@@ -308,7 +353,7 @@ pub(crate) fn dwork_driver(
         tasks_skipped: g.len().saturating_sub(tasks_run),
         makespan_s: makespan,
     };
-    Ok((state.status(), summary))
+    Ok((state.status(), registry.snapshot(), summary))
 }
 
 // --------------------------------------------------------- dwork (remote)
@@ -464,6 +509,14 @@ pub(crate) fn remote_await(
     }
 }
 
+/// Best-effort fetch of a remote hub's live metrics: `None` when the
+/// hub predates the Metrics request (it answers Err for the unknown
+/// kind) or runs with its registry disabled (version-0 snapshot).
+pub(crate) fn remote_metrics(addr: &str, cfg: &PollCfg) -> Option<MetricsSnapshot> {
+    let mut c = remote_client(addr, "metrics", cfg);
+    c.metrics().ok().filter(|m| m.version != 0)
+}
+
 // --------------------------------------------------------------- mpi-list
 
 /// Run the workflow under mpi-list: `procs` in-process SPMD ranks execute
@@ -474,6 +527,7 @@ pub(crate) fn mpilist_driver(
     dir: &Path,
     procs: usize,
     tracer: &Tracer,
+    metrics: &Registry,
 ) -> Result<(Vec<RankStats>, RunSummary)> {
     std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
     let procs = procs.max(1);
@@ -499,9 +553,13 @@ pub(crate) fn mpilist_driver(
                 let t = &g.tasks()[level[k as usize]];
                 tracer.record(&t.name, EventKind::Launched, &who);
                 tracer.record(&t.name, EventKind::Started, &who);
+                metrics.inc(Counter::DriverTasksLaunched);
                 run += 1;
                 let ok = exec_task(t, dir).is_ok();
-                if !ok {
+                if ok {
+                    metrics.inc(Counter::DriverTasksCompleted);
+                } else {
+                    metrics.inc(Counter::DriverTasksFailed);
                     failed += 1;
                 }
                 tracer.record(
@@ -531,240 +589,11 @@ pub(crate) fn mpilist_driver(
     Ok((ranks, summary))
 }
 
-// ------------------------------------------------------- deprecated shims
-//
-// The pre-Session entry points, kept one release as thin delegates.  New
-// code (and everything in-tree — CI builds with `-D deprecated`) goes
-// through `workflow::Session`.
-
-/// Knobs for the remote-dhub driver (pre-`Session` API).
-#[deprecated(since = "0.3.0", note = "use workflow::PollCfg with Session::polling")]
-#[derive(Clone, Debug)]
-pub struct RemoteOpts {
-    /// status-poll interval while awaiting completion
-    pub poll: Duration,
-    /// how long to keep dialing a hub that is not up yet
-    pub connect_timeout: Duration,
-}
-
-#[allow(deprecated)]
-impl Default for RemoteOpts {
-    fn default() -> Self {
-        let cfg = PollCfg::default();
-        RemoteOpts { poll: cfg.poll, connect_timeout: cfg.connect_timeout }
-    }
-}
-
-#[allow(deprecated)]
-impl RemoteOpts {
-    fn poll_cfg(&self) -> PollCfg {
-        PollCfg { poll: self.poll, connect_timeout: self.connect_timeout }
-    }
-}
-
-#[deprecated(
-    since = "0.3.0",
-    note = "use Session::new(g).backend(Backend::Pmake).parallelism(nodes).dir(dir).run()"
-)]
-pub fn run_pmake(g: &WorkflowGraph, dir: &Path, nodes: usize) -> Result<RunSummary> {
-    run_pmake_traced(g, dir, nodes, &Tracer::default())
-}
-
-#[deprecated(
-    since = "0.3.0",
-    note = "use Session::new(g).backend(Backend::Pmake).tracer(t).run() — the tracer lives \
-            on the session now"
-)]
-pub fn run_pmake_traced(
-    g: &WorkflowGraph,
-    dir: &Path,
-    nodes: usize,
-    tracer: &Tracer,
-) -> Result<RunSummary> {
-    Ok(Session::new(g)
-        .backend(Backend::Pmake)
-        .parallelism(nodes)
-        .dir(dir)
-        .tracer(tracer.clone())
-        .run()?
-        .summary)
-}
-
-#[deprecated(
-    since = "0.3.0",
-    note = "use Session::new(g).backend(Backend::Dwork { remote: None }).parallelism(workers)\
-            .prefetch(prefetch).dir(dir).run()"
-)]
-pub fn run_dwork(g: &WorkflowGraph, dir: &Path, workers: usize, prefetch: u32) -> Result<RunSummary> {
-    run_dwork_traced(g, dir, workers, prefetch, &Tracer::default())
-}
-
-#[deprecated(
-    since = "0.3.0",
-    note = "use Session::new(g).backend(Backend::Dwork { remote: None }).tracer(t).run() — \
-            the tracer lives on the session now"
-)]
-pub fn run_dwork_traced(
-    g: &WorkflowGraph,
-    dir: &Path,
-    workers: usize,
-    prefetch: u32,
-    tracer: &Tracer,
-) -> Result<RunSummary> {
-    Ok(Session::new(g)
-        .backend(Backend::Dwork { remote: None })
-        .parallelism(workers)
-        .prefetch(prefetch)
-        .dir(dir)
-        .tracer(tracer.clone())
-        .run()?
-        .summary)
-}
-
-#[deprecated(
-    since = "0.3.0",
-    note = "use Session::new(g).backend(Backend::MpiList).parallelism(procs).dir(dir).run()"
-)]
-pub fn run_mpilist(g: &WorkflowGraph, dir: &Path, procs: usize) -> Result<RunSummary> {
-    run_mpilist_traced(g, dir, procs, &Tracer::default())
-}
-
-#[deprecated(
-    since = "0.3.0",
-    note = "use Session::new(g).backend(Backend::MpiList).tracer(t).run() — the tracer \
-            lives on the session now"
-)]
-pub fn run_mpilist_traced(
-    g: &WorkflowGraph,
-    dir: &Path,
-    procs: usize,
-    tracer: &Tracer,
-) -> Result<RunSummary> {
-    Ok(Session::new(g)
-        .backend(Backend::MpiList)
-        .parallelism(procs)
-        .dir(dir)
-        .tracer(tracer.clone())
-        .run()?
-        .summary)
-}
-
-#[deprecated(
-    since = "0.3.0",
-    note = "use Session::new(g).backend(Backend::Dwork { remote: Some(addr.into()) })\
-            .polling(cfg).submit() and keep the returned Submission"
-)]
-pub fn submit_dwork_remote(
-    g: &WorkflowGraph,
-    addr: &str,
-    opts: &RemoteOpts,
-) -> Result<RemoteSubmission> {
-    Ok(Session::new(g)
-        .backend(Backend::Dwork { remote: Some(addr.into()) })
-        .polling(opts.poll_cfg())
-        .submit()?
-        .accounting)
-}
-
-#[deprecated(
-    since = "0.3.0",
-    note = "use the Submission returned by Session::submit — Submission::wait() blocks and \
-            yields the full RunOutcome"
-)]
-pub fn await_dwork_remote(
-    addr: &str,
-    submission: &RemoteSubmission,
-    opts: &RemoteOpts,
-) -> Result<RunSummary> {
-    Ok(Submission::resume(addr, submission.clone(), opts.poll_cfg()).wait()?.summary)
-}
-
-#[deprecated(
-    since = "0.3.0",
-    note = "use Session::new(g).backend(Backend::Dwork { remote: Some(addr.into()) })\
-            .polling(cfg).run()"
-)]
-pub fn run_dwork_remote(g: &WorkflowGraph, addr: &str, opts: &RemoteOpts) -> Result<RunSummary> {
-    Ok(Session::new(g)
-        .backend(Backend::Dwork { remote: Some(addr.into()) })
-        .polling(opts.poll_cfg())
-        .run()?
-        .summary)
-}
-
-#[deprecated(
-    since = "0.3.0",
-    note = "use Session::new(g).cost_model(m).parallelism(p).dir(dir).run() — the outcome's \
-            plan.recommendation carries the selector verdict"
-)]
-pub fn run_auto(
-    g: &WorkflowGraph,
-    m: &CostModel,
-    parallelism: usize,
-    dir: &Path,
-) -> Result<(Recommendation, RunSummary)> {
-    run_auto_traced(g, m, parallelism, dir, &Tracer::default())
-}
-
-#[deprecated(
-    since = "0.3.0",
-    note = "use Session::new(g).cost_model(m).tracer(t).run() — the outcome's \
-            plan.recommendation carries the selector verdict"
-)]
-pub fn run_auto_traced(
-    g: &WorkflowGraph,
-    m: &CostModel,
-    parallelism: usize,
-    dir: &Path,
-    tracer: &Tracer,
-) -> Result<(Recommendation, RunSummary)> {
-    let outcome = Session::new(g)
-        .backend(Backend::Auto)
-        .cost_model(m.clone())
-        .parallelism(parallelism)
-        .dir(dir)
-        .tracer(tracer.clone())
-        .run()?;
-    let rec = outcome
-        .plan
-        .recommendation
-        .expect("an Auto plan always carries the selector's recommendation");
-    Ok((rec, outcome.summary))
-}
-
-#[deprecated(
-    since = "0.3.0",
-    note = "use Session::new(g).backend(Backend::from_tool(tool)).parallelism(p).dir(dir).run()"
-)]
-pub fn dispatch(g: &WorkflowGraph, tool: Tool, parallelism: usize, dir: &Path) -> Result<RunSummary> {
-    dispatch_traced(g, tool, parallelism, dir, &Tracer::default())
-}
-
-#[deprecated(
-    since = "0.3.0",
-    note = "use Session::new(g).backend(Backend::from_tool(tool)).tracer(t).run() — the \
-            tracer lives on the session now"
-)]
-pub fn dispatch_traced(
-    g: &WorkflowGraph,
-    tool: Tool,
-    parallelism: usize,
-    dir: &Path,
-    tracer: &Tracer,
-) -> Result<RunSummary> {
-    Ok(Session::new(g)
-        .backend(Backend::from_tool(tool))
-        .parallelism(parallelism)
-        .dir(dir)
-        .tracer(tracer.clone())
-        .run()?
-        .summary)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::workflow::graph::TaskSpec;
+    use crate::workflow::session::{Backend, Session};
     use std::path::PathBuf;
 
     fn tmp(name: &str) -> PathBuf {

@@ -12,7 +12,7 @@
 //! [`Backend`], not new function families.
 //!
 //! ```no_run
-//! use threesched::workflow::{Backend, Session, TaskSpec, WorkflowGraph};
+//! use threesched::workflow::{Backend, BackendDetail, Session, TaskSpec, WorkflowGraph};
 //!
 //! # fn main() -> anyhow::Result<()> {
 //! let mut g = WorkflowGraph::new("demo");
@@ -35,6 +35,15 @@
 //!     outcome.summary.tasks_run,
 //!     outcome.summary.tasks_failed
 //! );
+//!
+//! // a dwork run always carries the hub's final live-metrics snapshot
+//! if let BackendDetail::Dwork { metrics, .. } = &outcome.detail {
+//!     println!(
+//!         "steals served: {} (p99 steal service {:.1} µs)",
+//!         metrics.counter("steals_served"),
+//!         metrics.hist("service_steal").map_or(0.0, |h| h.quantile(0.99) * 1e6),
+//!     );
+//! }
 //! # Ok(()) }
 //! ```
 
@@ -47,6 +56,7 @@ use crate::calibrate::CalibrationProfile;
 use crate::coordinator::dwork::{self, Client, StatusInfo};
 use crate::coordinator::pmake;
 use crate::metg::simmodels::Tool;
+use crate::metrics::{MetricsSnapshot, Registry};
 use crate::substrate::cluster::costs::CostModel;
 use crate::substrate::transport::tcp::TcpClient;
 use crate::trace::Tracer;
@@ -210,10 +220,18 @@ pub enum BackendDetail {
     /// one [`pmake::RunReport`] per target (launch overhead, launch
     /// order, per-target makespan)
     Pmake { reports: Vec<pmake::RunReport> },
-    /// final hub counters after the in-proc run drained
-    Dwork { server: StatusInfo },
-    /// what was handed to the remote hub, and its counters at drain
-    DworkRemote { submission: RemoteSubmission, server: StatusInfo },
+    /// final hub counters after the in-proc run drained, plus the final
+    /// [`MetricsSnapshot`] — always populated (the driver enables a
+    /// local registry when the session's is disabled)
+    Dwork { server: StatusInfo, metrics: MetricsSnapshot },
+    /// what was handed to the remote hub, and its counters at drain;
+    /// `metrics` is best-effort — `None` when the hub predates the
+    /// Metrics request or runs with its registry disabled
+    DworkRemote {
+        submission: RemoteSubmission,
+        server: StatusInfo,
+        metrics: Option<MetricsSnapshot>,
+    },
     /// per-rank run/failed counts from the static plan
     MpiList { ranks: Vec<RankStats> },
 }
@@ -252,6 +270,7 @@ pub struct Session<'g> {
     parallelism: Option<usize>,
     dir: PathBuf,
     tracer: Tracer,
+    metrics: Registry,
     model: CostModel,
     poll: PollCfg,
     prefetch: u32,
@@ -265,6 +284,7 @@ impl<'g> Session<'g> {
             parallelism: None,
             dir: PathBuf::from("."),
             tracer: Tracer::default(),
+            metrics: Registry::default(),
             model: CostModel::paper(),
             poll: PollCfg::default(),
             prefetch: 1,
@@ -302,6 +322,16 @@ impl<'g> Session<'g> {
     /// instead.
     pub fn tracer(mut self, tracer: Tracer) -> Self {
         self.tracer = tracer;
+        self
+    }
+
+    /// Live-metrics registry threaded into whichever local back-end
+    /// runs (default: disabled).  Share one enabled
+    /// [`Registry`](crate::metrics::Registry) with a concurrently
+    /// scraped exposition endpoint to watch a session live; the final
+    /// snapshot lands on [`BackendDetail::Dwork`] either way.
+    pub fn metrics(mut self, metrics: Registry) -> Self {
+        self.metrics = metrics;
         self
     }
 
@@ -382,23 +412,34 @@ impl<'g> Session<'g> {
         }
         let (summary, detail) = match plan.tool {
             Tool::Pmake => {
-                let (reports, summary) =
-                    run::pmake_driver(self.graph, &self.dir, plan.parallelism, &self.tracer)?;
+                let (reports, summary) = run::pmake_driver(
+                    self.graph,
+                    &self.dir,
+                    plan.parallelism,
+                    &self.tracer,
+                    &self.metrics,
+                )?;
                 (summary, BackendDetail::Pmake { reports })
             }
             Tool::Dwork => {
-                let (server, summary) = run::dwork_driver(
+                let (server, metrics, summary) = run::dwork_driver(
                     self.graph,
                     &self.dir,
                     plan.parallelism,
                     self.prefetch,
                     &self.tracer,
+                    &self.metrics,
                 )?;
-                (summary, BackendDetail::Dwork { server })
+                (summary, BackendDetail::Dwork { server, metrics })
             }
             Tool::MpiList => {
-                let (ranks, summary) =
-                    run::mpilist_driver(self.graph, &self.dir, plan.parallelism, &self.tracer)?;
+                let (ranks, summary) = run::mpilist_driver(
+                    self.graph,
+                    &self.dir,
+                    plan.parallelism,
+                    &self.tracer,
+                    &self.metrics,
+                )?;
                 (summary, BackendDetail::MpiList { ranks })
             }
         };
@@ -450,8 +491,7 @@ impl Submission {
     /// Rebuild a submission handle from its parts — the cross-process
     /// detach workflow: submit in one process (persisting
     /// [`Submission::accounting`]), then resume and [`Submission::wait`]
-    /// from another.  Also the path behind the deprecated
-    /// `await_dwork_remote` shim.
+    /// from another.
     pub fn resume(addr: &str, accounting: RemoteSubmission, poll: PollCfg) -> Submission {
         Submission {
             plan: Plan {
@@ -471,13 +511,20 @@ impl Submission {
     }
 
     /// Block until the submission has drained out of the hub, then
-    /// reconstruct the outcome from the server-side counters.
+    /// reconstruct the outcome from the server-side counters.  The hub's
+    /// live metrics ride along when it exposes them (best-effort: an old
+    /// or metrics-disabled hub yields `None`).
     pub fn wait(&self) -> Result<RunOutcome> {
         let (server, summary) = run::remote_await(self.addr(), &self.accounting, &self.poll)?;
+        let metrics = run::remote_metrics(self.addr(), &self.poll);
         Ok(RunOutcome {
             plan: self.plan.clone(),
             summary,
-            detail: BackendDetail::DworkRemote { submission: self.accounting.clone(), server },
+            detail: BackendDetail::DworkRemote {
+                submission: self.accounting.clone(),
+                server,
+                metrics,
+            },
         })
     }
 }
@@ -515,6 +562,7 @@ pub struct WorkerPool {
     idle_ceiling: Duration,
     connect_timeout: Duration,
     tracer: Tracer,
+    metrics: Registry,
 }
 
 impl WorkerPool {
@@ -530,6 +578,7 @@ impl WorkerPool {
             idle_ceiling: Duration::from_millis(100),
             connect_timeout: Duration::from_secs(10),
             tracer: Tracer::default(),
+            metrics: Registry::default(),
         }
     }
 
@@ -588,6 +637,14 @@ impl WorkerPool {
         self
     }
 
+    /// Worker-side live counters (poll/backoff/park transitions,
+    /// steal-RTT and compute histograms), aggregated across all pool
+    /// threads.  Snapshot the registry you pass in to read them.
+    pub fn metrics(mut self, metrics: Registry) -> Self {
+        self.metrics = metrics;
+        self
+    }
+
     fn default_base_name() -> String {
         let nonce = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
@@ -634,6 +691,7 @@ impl WorkerPool {
             idle_ceiling: self.idle_ceiling,
             tracer: self.tracer.clone(),
             trace_terminals: true,
+            metrics: self.metrics.clone(),
         };
         let mut total = dwork::WorkerStats::default();
         // rejoin backoff between campaigns: a drained hub dismisses
@@ -807,10 +865,15 @@ mod tests {
             .run()
             .unwrap();
         match &outcome.detail {
-            BackendDetail::Dwork { server } => {
+            BackendDetail::Dwork { server, metrics } => {
                 assert!(server.is_drained());
                 assert_eq!(server.completed, 3);
                 assert_eq!(server.failed, 0);
+                // the driver always runs an enabled registry, so the
+                // outcome carries a live snapshot without opting in
+                assert_eq!(metrics.version, crate::metrics::MetricsSnapshot::VERSION);
+                assert_eq!(metrics.counter("tasks_completed"), 3);
+                assert_eq!(metrics.gauge("queue_depth"), 0);
             }
             other => panic!("expected dwork detail, got {other:?}"),
         }
@@ -847,10 +910,12 @@ mod tests {
         assert_eq!(outcome.summary.tasks_failed, 1);
         assert_eq!(outcome.summary.tasks_skipped, 1);
         match &outcome.detail {
-            BackendDetail::Dwork { server } => {
+            BackendDetail::Dwork { server, metrics } => {
                 assert_eq!(server.failed, 1);
                 assert_eq!(server.skipped(), 1);
                 assert!(server.is_drained());
+                assert_eq!(metrics.counter("tasks_failed"), 1);
+                assert_eq!(metrics.counter("tasks_skipped"), 1);
             }
             other => panic!("expected dwork detail, got {other:?}"),
         }

@@ -1,0 +1,115 @@
+//! Cross-validation of the two observability planes: on random DAGs
+//! run through the in-proc dwork fabric, the hub's `MetricsSnapshot`
+//! counters must agree exactly with what an independent lifecycle
+//! trace of the same run records (`trace::counts`), and with the
+//! driver's own `RunSummary`.  The counters and the trace are updated
+//! on different code paths — agreement here is what lets `dhub top`
+//! and `trace report` be read as two views of one run.
+
+use std::path::PathBuf;
+
+use threesched::metrics::{MetricsSnapshot, Registry};
+use threesched::substrate::prop::{check, Gen};
+use threesched::trace::{self, Tracer};
+use threesched::workflow::{Backend, BackendDetail, Session, TaskSpec, WorkflowGraph};
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "threesched-metricsacct-{name}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Random small DAG with occasional forced failures, acyclic by
+/// construction (edges only point at earlier tasks).
+fn random_graph(g: &mut Gen) -> WorkflowGraph {
+    let n = g.usize(1..10);
+    let mut wf = WorkflowGraph::new(format!("metrics-prop-{}", g.case));
+    for i in 0..n {
+        let mut t = if g.bool(0.25) {
+            TaskSpec::command(format!("t{i}"), "false")
+        } else {
+            TaskSpec::new(format!("t{i}"))
+        };
+        if i > 0 {
+            let mut deps = std::collections::BTreeSet::new();
+            for _ in 0..g.usize(0..3) {
+                deps.insert(g.usize(0..i));
+            }
+            let names: Vec<String> = deps.into_iter().map(|d| format!("t{d}")).collect();
+            t = t.after(&names);
+        }
+        wf.add_task(t.est(0.001)).unwrap();
+    }
+    wf
+}
+
+#[test]
+fn hub_counters_match_trace_counts_on_random_dags() {
+    check("metrics vs trace counts", 10, |g| {
+        let wf = random_graph(g);
+        let workers = g.usize(1..4);
+        let dir = tmp(&format!("{}", g.case));
+        let tracer = Tracer::memory();
+        let outcome = Session::new(&wf)
+            .backend(Backend::Dwork { remote: None })
+            .parallelism(workers)
+            .dir(&dir)
+            .tracer(tracer.clone())
+            .metrics(Registry::enabled())
+            .run()
+            .unwrap();
+        let events = tracer.drain();
+        trace::validate(&events).unwrap();
+        let c = trace::counts(&events);
+
+        let BackendDetail::Dwork { metrics: m, .. } = &outcome.detail else {
+            panic!("dwork backend yields Dwork detail, got {:?}", outcome.detail);
+        };
+        assert_eq!(m.version, MetricsSnapshot::VERSION);
+        assert_eq!(m.counter("tasks_created") as usize, wf.len(), "every task reached the hub");
+        assert_eq!(m.counter("tasks_completed") as usize, c.completed, "completed: hub vs trace");
+        assert_eq!(m.counter("tasks_failed") as usize, c.failed, "failed: hub vs trace");
+        assert_eq!(m.counter("tasks_skipped") as usize, c.skipped, "skipped: hub vs trace");
+        // ...and vs the driver's own summary
+        assert_eq!(c.completed + c.failed, outcome.summary.tasks_run);
+        assert_eq!(c.skipped, outcome.summary.tasks_skipped);
+        // a drained hub holds nothing
+        assert_eq!(m.gauge("queue_depth"), 0);
+        assert_eq!(m.gauge("tasks_inflight"), 0);
+        assert_eq!(m.gauge("workers_connected"), 0, "pool exited before the snapshot");
+        // every attempted task was handed out by a steal
+        assert!(
+            m.counter("steals_served") as usize >= outcome.summary.tasks_run,
+            "steals_served {} < tasks_run {}",
+            m.counter("steals_served"),
+            outcome.summary.tasks_run
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
+fn disabled_registry_still_reports_real_counters_in_the_outcome() {
+    // the driver substitutes a locally enabled registry so RunOutcome
+    // metrics are never silently all-zero
+    let mut wf = WorkflowGraph::new("metrics-disabled");
+    wf.add_task(TaskSpec::new("a").est(0.001)).unwrap();
+    wf.add_task(TaskSpec::new("b").after(&["a"]).est(0.001)).unwrap();
+    let dir = tmp("disabled");
+    let outcome = Session::new(&wf)
+        .backend(Backend::Dwork { remote: None })
+        .parallelism(1)
+        .dir(&dir)
+        .run()
+        .unwrap();
+    let BackendDetail::Dwork { metrics: m, .. } = &outcome.detail else {
+        panic!("dwork backend yields Dwork detail");
+    };
+    assert_eq!(m.version, MetricsSnapshot::VERSION);
+    assert_eq!(m.counter("tasks_completed"), 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,19 +1,16 @@
-//! API-equivalence acceptance for the `workflow::Session` redesign: a
-//! `Session` with defaults must reproduce the legacy free-function
-//! `RunSummary` (tasks_run / tasks_failed / tasks_skipped /
-//! coordinator) on random DAGs across all three back-ends, and the
-//! legacy `run_auto` verdict must match the session plan's
-//! recommendation.  The legacy entry points are `#[deprecated]` shims
-//! this release — this test is the only in-tree caller, by design.
-
-#![allow(deprecated)]
+//! Acceptance for the `workflow::Session` execution API, now the only
+//! entry point (the pre-`Session` free-function shims completed their
+//! one-release `#[deprecated]` window and are gone): on random DAGs the
+//! three back-ends must agree on the `RunSummary` accounting, the auto
+//! plan must pin the coordinator it recommends, traced runs must emit
+//! well-formed event streams, and the remote submit/wait path must
+//! reproduce the in-proc counts and carry the hub's live metrics.
 
 use std::path::PathBuf;
 
 use threesched::metg::simmodels::Tool;
-use threesched::substrate::cluster::costs::CostModel;
 use threesched::substrate::prop::{check, Gen};
-use threesched::workflow::{self, Backend, RunSummary, Session, TaskSpec, WorkflowGraph};
+use threesched::workflow::{Backend, BackendDetail, RunSummary, Session, TaskSpec, WorkflowGraph};
 
 fn tmp(name: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!(
@@ -50,126 +47,116 @@ fn random_graph(g: &mut Gen, label: &str) -> WorkflowGraph {
     wf
 }
 
-fn assert_summaries_equal(tool: &str, legacy: &RunSummary, session: &RunSummary) {
-    assert_eq!(legacy.coordinator, session.coordinator, "{tool}: coordinator");
-    assert_eq!(legacy.tasks_run, session.tasks_run, "{tool}: tasks_run");
-    assert_eq!(legacy.tasks_failed, session.tasks_failed, "{tool}: tasks_failed");
-    assert_eq!(legacy.tasks_skipped, session.tasks_skipped, "{tool}: tasks_skipped");
+fn assert_summaries_equal(tool: &str, a: &RunSummary, b: &RunSummary) {
+    assert_eq!(a.tasks_run, b.tasks_run, "{tool}: tasks_run");
+    assert_eq!(a.tasks_failed, b.tasks_failed, "{tool}: tasks_failed");
+    assert_eq!(a.tasks_skipped, b.tasks_skipped, "{tool}: tasks_skipped");
 }
 
 #[test]
-fn session_reproduces_legacy_dispatch_on_random_dags() {
-    check("session vs dispatch", 8, |g| {
-        let wf = random_graph(g, "dispatch");
+fn backends_agree_on_random_dag_accounting() {
+    // which tasks ran/failed/skipped is a property of the graph, not of
+    // the coordinator: all three lowerings of the same DAG must agree
+    check("session backends agree", 8, |g| {
+        let wf = random_graph(g, "agree");
         let parallelism = g.usize(1..4);
+        let mut summaries = Vec::new();
         for tool in Tool::ALL {
             let slug = tool.name().replace('-', "");
-            let dir_legacy = tmp(&format!("legacy-{slug}-{}", g.case));
-            let dir_session = tmp(&format!("session-{slug}-{}", g.case));
-            let legacy = workflow::dispatch(&wf, tool, parallelism, &dir_legacy).unwrap();
+            let dir = tmp(&format!("{slug}-{}", g.case));
             let outcome = Session::new(&wf)
                 .backend(Backend::from_tool(tool))
                 .parallelism(parallelism)
-                .dir(&dir_session)
+                .dir(&dir)
                 .run()
                 .unwrap();
-            assert_summaries_equal(tool.name(), &legacy, &outcome.summary);
-            assert_eq!(outcome.plan.tool, tool);
-            let _ = std::fs::remove_dir_all(&dir_legacy);
-            let _ = std::fs::remove_dir_all(&dir_session);
+            assert_eq!(outcome.plan.tool, tool, "explicit backend is pinned");
+            assert_eq!(outcome.summary.coordinator, tool);
+            summaries.push(outcome.summary);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+        for s in &summaries[1..] {
+            assert_summaries_equal(s.coordinator.name(), &summaries[0], s);
         }
     });
 }
 
 #[test]
-fn session_auto_reproduces_legacy_run_auto_on_random_dags() {
-    let m = CostModel::paper();
-    check("session vs run_auto", 8, |g| {
+fn auto_plan_recommendation_pins_the_coordinator() {
+    check("session auto plan", 8, |g| {
         let wf = random_graph(g, "auto");
         let parallelism = g.usize(1..4);
-        let dir_legacy = tmp(&format!("autolegacy-{}", g.case));
-        let dir_session = tmp(&format!("autosession-{}", g.case));
-        let (rec, legacy) = workflow::run_auto(&wf, &m, parallelism, &dir_legacy).unwrap();
-        let outcome = Session::new(&wf)
-            .backend(Backend::Auto)
-            .cost_model(m.clone())
-            .parallelism(parallelism)
-            .dir(&dir_session)
-            .run()
-            .unwrap();
-        let plan_rec =
-            outcome.plan.recommendation.as_ref().expect("auto plan carries a recommendation");
-        assert_eq!(rec.choice, plan_rec.choice, "selector verdicts agree");
-        assert_eq!(rec.choice, outcome.summary.coordinator);
-        assert_summaries_equal("auto", &legacy, &outcome.summary);
-        let _ = std::fs::remove_dir_all(&dir_legacy);
-        let _ = std::fs::remove_dir_all(&dir_session);
+        let dir = tmp(&format!("auto-{}", g.case));
+        let session = Session::new(&wf).backend(Backend::Auto).parallelism(parallelism).dir(&dir);
+        let plan = session.plan().unwrap();
+        let outcome = session.run().unwrap();
+        let rec = outcome.plan.recommendation.as_ref().expect("auto plan carries a verdict");
+        assert_eq!(rec.choice, outcome.summary.coordinator, "run uses the recommendation");
+        assert_eq!(plan.tool, outcome.plan.tool, "plan() and run() agree");
+        let _ = std::fs::remove_dir_all(&dir);
     });
 }
 
 #[test]
-fn traced_shims_share_the_session_tracer_path() {
-    // the *_traced shims forward their tracer into the session: the
-    // event stream must be identical in shape to a direct Session run
+fn traced_session_run_is_wellformed_and_matches_the_summary() {
     use threesched::trace::{self, Tracer};
-    let mut wf = WorkflowGraph::new("traced-shim");
+    let mut wf = WorkflowGraph::new("traced-session");
     wf.add_task(TaskSpec::new("a").est(0.001)).unwrap();
     wf.add_task(TaskSpec::new("b").after(&["a"]).est(0.001)).unwrap();
+    wf.add_task(TaskSpec::command("boom", "false").after(&["a"])).unwrap();
 
-    let dir = tmp("traced-shim-legacy");
-    let legacy_tracer = Tracer::memory();
-    workflow::run_mpilist_traced(&wf, &dir, 2, &legacy_tracer).unwrap();
-    let legacy_events = legacy_tracer.drain();
-    trace::validate(&legacy_events).unwrap();
-    let _ = std::fs::remove_dir_all(&dir);
-
-    let dir = tmp("traced-shim-session");
-    let session_tracer = Tracer::memory();
-    Session::new(&wf)
+    let dir = tmp("traced-session");
+    let tracer = Tracer::memory();
+    let outcome = Session::new(&wf)
         .backend(Backend::MpiList)
         .parallelism(2)
         .dir(&dir)
-        .tracer(session_tracer.clone())
+        .tracer(tracer.clone())
         .run()
         .unwrap();
-    let session_events = session_tracer.drain();
-    trace::validate(&session_events).unwrap();
+    let events = tracer.drain();
+    trace::validate(&events).unwrap();
+    let c = trace::counts(&events);
+    assert_eq!(c.completed + c.failed, outcome.summary.tasks_run);
+    assert_eq!(c.failed, outcome.summary.tasks_failed);
     let _ = std::fs::remove_dir_all(&dir);
-
-    let kinds = |evs: &[trace::TaskEvent]| {
-        let mut v: Vec<(String, &'static str)> =
-            evs.iter().map(|e| (e.task.clone(), e.kind.name())).collect();
-        v.sort();
-        v
-    };
-    assert_eq!(kinds(&legacy_events), kinds(&session_events));
 }
 
 #[test]
-fn legacy_remote_shims_delegate_to_the_session_path() {
-    // submit via the deprecated free function, await via the deprecated
-    // free function: both are shims over Session/Submission, and the
-    // counts must match an in-proc reference
+fn remote_submit_wait_matches_in_proc_counts_and_carries_metrics() {
+    // fire-and-forget against a live TCP hub, then wait: the summary
+    // reconstructed from server counters must match an in-proc dwork
+    // run of the same graph, and the hub's metrics snapshot rides along
     use std::time::Duration;
     use threesched::coordinator::dwork::{self, SchedState, ServerConfig};
+    use threesched::metrics::Registry;
+    use threesched::workflow;
 
-    let mut g = WorkflowGraph::new("remote-shim");
+    let mut g = WorkflowGraph::new("remote-session");
     g.add_task(TaskSpec::command("boom", "exit 3")).unwrap();
     g.add_task(TaskSpec::command("child", "true").after(&["boom"])).unwrap();
     g.add_task(TaskSpec::command("free", "true")).unwrap();
 
-    let dir_ref = tmp("remote-shim-ref");
-    let reference = workflow::run_dwork(&g, &dir_ref, 2, 0).unwrap();
+    let dir_ref = tmp("remote-session-ref");
+    let reference = Session::new(&g)
+        .backend(Backend::Dwork { remote: None })
+        .parallelism(2)
+        .dir(&dir_ref)
+        .run()
+        .unwrap();
 
-    let (addr, guard, handle) =
-        dwork::spawn_tcp(SchedState::new(), ServerConfig::default(), "127.0.0.1:0").unwrap();
-    let opts = workflow::RemoteOpts {
-        poll: Duration::from_millis(5),
-        connect_timeout: Duration::from_secs(5),
-    };
-    let submission = workflow::submit_dwork_remote(&g, &addr.to_string(), &opts).unwrap();
-    // a worker drains the hub while the await shim polls
-    let dir_remote = tmp("remote-shim-run");
+    let cfg = ServerConfig { metrics: Registry::enabled(), ..ServerConfig::default() };
+    let (addr, guard, handle) = dwork::spawn_tcp(SchedState::new(), cfg, "127.0.0.1:0").unwrap();
+    let submission = Session::new(&g)
+        .backend(Backend::Dwork { remote: Some(addr.to_string().into()) })
+        .polling(workflow::PollCfg {
+            poll: Duration::from_millis(5),
+            ..workflow::PollCfg::default()
+        })
+        .submit()
+        .unwrap();
+    // a worker drains the hub while wait() polls
+    let dir_remote = tmp("remote-session-run");
     let addr_s = addr.to_string();
     let g2 = g.clone();
     let dir2 = dir_remote.clone();
@@ -179,20 +166,29 @@ fn legacy_remote_shims_delegate_to_the_session_path() {
             Duration::from_secs(5),
         )
         .unwrap();
-        let mut c = dwork::Client::new(Box::new(conn), "shim-w0").exit_on_drop(true);
+        let mut c = dwork::Client::new(Box::new(conn), "sess-w0").exit_on_drop(true);
         dwork::run_worker(&mut c, 1, |t| match g2.get(&t.name) {
             Some(spec) => workflow::run::exec_task(spec, &dir2),
             None => Ok(()),
         })
         .unwrap()
     });
-    let summary =
-        workflow::await_dwork_remote(&addr.to_string(), &submission, &opts).unwrap();
+    let outcome = submission.wait().unwrap();
     worker.join().unwrap();
     drop(guard);
     handle.join().unwrap();
 
-    assert_summaries_equal("dwork-remote", &reference, &summary);
+    assert_summaries_equal("dwork-remote", &reference.summary, &outcome.summary);
+    let BackendDetail::DworkRemote { submission: acc, server, metrics } = &outcome.detail else {
+        panic!("remote wait yields DworkRemote detail, got {:?}", outcome.detail);
+    };
+    assert_eq!(acc.submitted, 3);
+    assert!(server.is_drained());
+    let m = metrics.as_ref().expect("metrics-enabled hub answers the Metrics request");
+    assert_eq!(m.counter("tasks_created"), 3);
+    assert_eq!(m.counter("tasks_completed"), 1, "only `free` succeeds");
+    assert_eq!(m.counter("tasks_failed"), 1);
+    assert_eq!(m.counter("tasks_skipped"), 1, "`child` rides its parent's failure");
     let _ = std::fs::remove_dir_all(&dir_ref);
     let _ = std::fs::remove_dir_all(&dir_remote);
 }
