@@ -1,0 +1,52 @@
+//! Analyzer throughput: a full lint of a lint-clean 10,000-task layered
+//! DAG must finish under 50 ms in release — the errors-only subset runs
+//! as a pre-flight gate inside every `Session::plan()`, so the analyzer
+//! has to be invisible next to any real campaign.
+//!
+//! Run: cargo bench --bench analyze_lint
+
+use std::time::Instant;
+
+use threesched::analyze::{analyze_graph, error_diagnostics, AnalyzeOpts};
+use threesched::workflow::{TaskSpec, WorkflowGraph};
+
+/// `levels` × `width` grid: each task reads its column-neighbor one
+/// level up (an implied file edge) and `after`s the next column over —
+/// two edges per task, all necessary, zero findings.
+fn layered(levels: usize, width: usize) -> WorkflowGraph {
+    let mut g = WorkflowGraph::new("bench-lint-layered");
+    for l in 0..levels {
+        for w in 0..width {
+            let mut t = TaskSpec::command(format!("t{l}_{w}"), format!("echo > o{l}_{w}.dat"))
+                .outputs(&[format!("o{l}_{w}.dat")])
+                .est(30.0);
+            if l > 0 {
+                t.inputs.push(format!("o{}_{w}.dat", l - 1));
+                t = t.after(&[format!("t{}_{}", l - 1, (w + 1) % width)]);
+            }
+            g.add_task(t).unwrap();
+        }
+    }
+    g
+}
+
+fn main() {
+    let g = layered(100, 100);
+    let opts = AnalyzeOpts::default();
+
+    let t0 = Instant::now();
+    let report = analyze_graph(&g, &opts);
+    let full = t0.elapsed();
+    assert!(report.is_clean(), "{}", report.render());
+
+    let t0 = Instant::now();
+    let errs = error_diagnostics(&g);
+    let gate = t0.elapsed();
+    assert!(errs.is_empty());
+
+    println!(
+        "analyze_lint: {} tasks  full lint {full:?}  plan-gate subset {gate:?}",
+        g.len()
+    );
+    assert!(full.as_millis() < 50, "full lint took {full:?}, budget 50 ms on a 10k-task DAG");
+}

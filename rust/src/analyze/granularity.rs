@@ -1,0 +1,120 @@
+//! METG granularity lints: the selector's silent shape/METG reasoning
+//! as explainable diagnostics.
+//!
+//! W101 warns when the workload's mean task duration sits below the
+//! target backend's METG at the planned rank count (estimated
+//! efficiency t̄/(t̄+METG) under the selector's 50% floor), W102 when a
+//! static mpi-list plan would idle ranks behind stragglers (duration
+//! cv over the flat-map tolerance), W103 when command/kernel tasks
+//! carry a zero estimate and would sail through both checks as "free".
+
+use super::{codes, AnalyzeOpts, Diagnostic};
+use crate::workflow::graph::{Payload, WorkflowGraph};
+use crate::workflow::select::{self, EFF_FLOOR, UNIFORM_CV};
+
+use crate::metg::simmodels::Tool;
+
+fn sample(names: &[&str]) -> String {
+    if names.len() > 8 {
+        format!("{}, …", names[..8].join(", "))
+    } else {
+        names.join(", ")
+    }
+}
+
+/// W101/W102/W103.  Callers run this only on graphs with no
+/// Error-severity findings (efficiency over an unrunnable graph is
+/// noise); a selector failure or an empty graph yields no lints.
+pub fn lint(g: &WorkflowGraph, opts: &AnalyzeOpts) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+
+    // W103: zero estimates on real payloads.  Noop barriers are exempt
+    // (zero is the truth for them), and so is the whole METG arithmetic
+    // below, which such tasks would drag toward "free".
+    let zero: Vec<&str> = g
+        .tasks()
+        .iter()
+        .filter(|t| !matches!(t.payload, Payload::Noop) && t.est_s <= 0.0)
+        .map(|t| t.name.as_str())
+        .collect();
+    if !zero.is_empty() {
+        out.push(
+            Diagnostic::warning(
+                codes::ZERO_EST,
+                zero.iter().map(|s| s.to_string()).collect(),
+                format!(
+                    "{} task(s) carry a zero duration estimate ({}): the METG check and \
+                     the selector treat them as free",
+                    zero.len(),
+                    sample(&zero)
+                ),
+            )
+            .suggest("set `est:` to the measured or expected seconds"),
+        );
+    }
+
+    if g.is_empty() {
+        return out;
+    }
+    let Ok(rec) = select::select(g, &opts.model, opts.ranks) else {
+        return out;
+    };
+    let target = opts.target.unwrap_or(rec.choice);
+    let a = rec.assessment(target);
+    let t_mean = rec.stats.mean_task_s;
+
+    // W101: sub-METG granularity at the target backend and scale.
+    if t_mean > 0.0 && a.efficiency < EFF_FLOOR {
+        let best = rec
+            .assessments
+            .iter()
+            .max_by(|x, y| x.efficiency.total_cmp(&y.efficiency))
+            .expect("all tools assessed");
+        let suggestion = if best.tool != target && best.efficiency >= EFF_FLOOR {
+            format!(
+                "batch more work per task, or run on {} (estimated {:.0}% efficient)",
+                best.tool.name(),
+                best.efficiency * 100.0
+            )
+        } else {
+            format!(
+                "batch more work per task ({} apiece or more), or lower --ranks",
+                select::fmt_t(a.metg_s)
+            )
+        };
+        out.push(
+            Diagnostic::warning(
+                codes::SUB_METG,
+                Vec::new(),
+                format!(
+                    "mean task duration {} is below {}'s METG {} at {} ranks: estimated \
+                     efficiency {:.0}% (floor {:.0}%)",
+                    select::fmt_t(t_mean),
+                    target.name(),
+                    select::fmt_t(a.metg_s),
+                    rec.ranks,
+                    a.efficiency * 100.0,
+                    EFF_FLOOR * 100.0
+                ),
+            )
+            .suggest(suggestion),
+        );
+    }
+
+    // W102: duration spread under a static rank plan.
+    if target == Tool::MpiList && rec.stats.cv_task_s > UNIFORM_CV {
+        out.push(
+            Diagnostic::warning(
+                codes::DURATION_CV,
+                Vec::new(),
+                format!(
+                    "task duration cv {:.2} exceeds {UNIFORM_CV} for a static mpi-list \
+                     plan: ranks idle behind stragglers every phase",
+                    rec.stats.cv_task_s
+                ),
+            )
+            .suggest("split the long tasks, or use dwork's dynamic pulling"),
+        );
+    }
+    out
+}

@@ -1,0 +1,459 @@
+//! Collect-all static analysis over the workflow IR (`workflow lint`).
+//!
+//! The paper's two silent failure modes both surface only *after* an
+//! allocation has burned.  A campaign whose tasks sit below the chosen
+//! scheduler's METG wastes the machine (paper §6), and a graph whose
+//! file outputs collide executes differently under pmake (file presence
+//! synchronizes) than under dwork/mpi-list (nothing watches the files).
+//! This module proves both properties before a single task launches,
+//! and reports *every* finding at once instead of bailing on the first:
+//!
+//! * [`races`] — the file-race detector: bitset transitive
+//!   reachability ([`reach`]) flags unordered write-write conflicts
+//!   (`E010`), shadowed duplicate outputs (`E011`), read-write hazards
+//!   (`E012`), and orphan inputs (`I201`);
+//! * [`granularity`] — the METG lints: estimated efficiency
+//!   t̄/(t̄+METG) at the planned rank count against the Table-4 (or a
+//!   fitted `--calibration`) cost model (`W101`), mpi-list duration-cv
+//!   violations (`W102`), zero estimates on real payloads (`W103`);
+//! * [`structure`] — structural hygiene: transitively-redundant
+//!   `after` edges (`W104`), dead zero-duration no-ops (`I202`);
+//! * referential integrity (`E001`–`E004`) — the checks
+//!   [`WorkflowGraph::validate`] has always enforced, re-expressed as
+//!   diagnostics.  `validate()` is now a thin first-error wrapper over
+//!   this engine (see [`first_error`]), preserving its error text.
+//!
+//! Surfaces: `threesched workflow lint` on the CLI,
+//! [`Session::analyze`](crate::workflow::Session::analyze) in the
+//! library, and the `Session::plan()`/`run()` pre-flight gate that
+//! refuses Error-severity diagnostics.
+//!
+//! # Worked example
+//!
+//! ```
+//! use threesched::analyze::{analyze_graph, AnalyzeOpts, Severity};
+//! use threesched::workflow::{TaskSpec, WorkflowGraph};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut g = WorkflowGraph::new("racy");
+//! g.add_task(TaskSpec::command("sim-a", "run > result.dat").outputs(&["result.dat"]))?;
+//! // a second, unordered writer of result.dat: a write-write race
+//! g.add_task(TaskSpec::command("sim-b", "run > result.dat").outputs(&["result.dat"]))?;
+//!
+//! let report = analyze_graph(&g, &AnalyzeOpts::default());
+//! assert_eq!(report.errors(), 1);
+//! let d = &report.diagnostics[0];
+//! assert_eq!((d.code, d.severity), ("E010", Severity::Error));
+//! assert!(d.message.contains("both declare output"));
+//! print!("{}", report.render()); // or report.to_json()
+//! # Ok(()) }
+//! ```
+
+pub mod granularity;
+pub mod races;
+pub mod reach;
+pub mod structure;
+
+use anyhow::Result;
+
+use crate::metg::simmodels::Tool;
+use crate::substrate::cluster::costs::CostModel;
+use crate::workflow::graph::WorkflowGraph;
+
+use reach::Reach;
+
+/// How bad a [`Diagnostic`] is.  `Error`s make the graph unrunnable
+/// (the `Session` pre-flight gate and `validate()` refuse them);
+/// `Warning`s burn the machine but execute; `Info`s are advisory.
+/// Ordered most-severe-first so reports sort naturally.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    Error,
+    Warning,
+    Info,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+            Severity::Info => "info",
+        }
+    }
+}
+
+/// Diagnostic code registry.  `E0xx` = graph is wrong (unrunnable),
+/// `W1xx` = graph is wasteful, `I2xx` = advisory.  [`CODE_TABLE`] holds
+/// the one-line description for each.
+pub mod codes {
+    /// `after` names a task that does not exist.
+    pub const UNKNOWN_DEP: &str = "E001";
+    /// Dependency cycle.
+    pub const CYCLE: &str = "E002";
+    /// A declared output collides with another task's `<name>.done` stamp.
+    pub const STAMP_COLLISION: &str = "E003";
+    /// An input names another task's internal synchronization stamp.
+    pub const STAMP_INPUT: &str = "E004";
+    /// Two tasks write the same output with no ordering path: a race.
+    pub const WRITE_WRITE_RACE: &str = "E010";
+    /// Two ordered tasks write the same output: the producer is ambiguous.
+    pub const DUPLICATE_OUTPUT: &str = "E011";
+    /// A task reads a file an unordered task writes.
+    pub const READ_WRITE_HAZARD: &str = "E012";
+    /// Mean task duration is below the target backend's METG.
+    pub const SUB_METG: &str = "W101";
+    /// Duration spread too wide for a static mpi-list rank plan.
+    pub const DURATION_CV: &str = "W102";
+    /// Zero duration estimate on a command/kernel task.
+    pub const ZERO_EST: &str = "W103";
+    /// An explicit `after` edge is transitively implied already.
+    pub const REDUNDANT_EDGE: &str = "W104";
+    /// An input no task produces (must pre-exist on disk).
+    pub const ORPHAN_INPUT: &str = "I201";
+    /// A zero-duration no-op nothing depends on.
+    pub const DEAD_TASK: &str = "I202";
+}
+
+/// Every code the analyzer can emit: (code, severity, description).
+/// The README's lint table and `workflow lint` docs derive from this.
+pub const CODE_TABLE: &[(&str, Severity, &str)] = &[
+    (codes::UNKNOWN_DEP, Severity::Error, "`after` names a task that does not exist"),
+    (codes::CYCLE, Severity::Error, "dependency cycle"),
+    (codes::STAMP_COLLISION, Severity::Error, "output collides with a task's `<name>.done` stamp"),
+    (codes::STAMP_INPUT, Severity::Error, "input names another task's internal stamp"),
+    (codes::WRITE_WRITE_RACE, Severity::Error, "two unordered tasks write the same output"),
+    (codes::DUPLICATE_OUTPUT, Severity::Error, "two ordered tasks write the same output"),
+    (codes::READ_WRITE_HAZARD, Severity::Error, "a task reads a file an unordered task writes"),
+    (codes::SUB_METG, Severity::Warning, "mean task duration below the backend's METG"),
+    (codes::DURATION_CV, Severity::Warning, "duration spread idles ranks under a static plan"),
+    (codes::ZERO_EST, Severity::Warning, "zero duration estimate on a real payload"),
+    (codes::REDUNDANT_EDGE, Severity::Warning, "explicit `after` edge is transitively implied"),
+    (codes::ORPHAN_INPUT, Severity::Info, "input no task produces (must pre-exist)"),
+    (codes::DEAD_TASK, Severity::Info, "zero-duration no-op nothing depends on"),
+];
+
+/// One finding: a stable code, a severity, the tasks involved (subject
+/// first), a human message, and an optional fix suggestion.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub code: &'static str,
+    pub severity: Severity,
+    pub tasks: Vec<String>,
+    pub message: String,
+    pub suggestion: Option<String>,
+}
+
+impl Diagnostic {
+    pub fn error(code: &'static str, tasks: Vec<String>, message: String) -> Diagnostic {
+        Diagnostic { code, severity: Severity::Error, tasks, message, suggestion: None }
+    }
+
+    pub fn warning(code: &'static str, tasks: Vec<String>, message: String) -> Diagnostic {
+        Diagnostic { code, severity: Severity::Warning, tasks, message, suggestion: None }
+    }
+
+    pub fn info(code: &'static str, tasks: Vec<String>, message: String) -> Diagnostic {
+        Diagnostic { code, severity: Severity::Info, tasks, message, suggestion: None }
+    }
+
+    pub fn suggest(mut self, s: impl Into<String>) -> Diagnostic {
+        self.suggestion = Some(s.into());
+        self
+    }
+
+    /// `severity[code]: message` — the first line of the text rendering.
+    pub fn headline(&self) -> String {
+        format!("{}[{}]: {}", self.severity.name(), self.code, self.message)
+    }
+}
+
+/// Knobs for [`analyze_graph`].
+#[derive(Clone, Debug)]
+pub struct AnalyzeOpts {
+    /// Target scale for the METG lints (the selector's rank count).
+    pub ranks: usize,
+    /// Cost model pricing the granularity lints: Table-4 defaults or a
+    /// fitted [`CalibrationProfile`](crate::calibrate::CalibrationProfile).
+    pub model: CostModel,
+    /// Lint granularity against this backend; `None` lints the
+    /// selector's own choice (nothing to warn about if the selector
+    /// would route around the problem).
+    pub target: Option<Tool>,
+}
+
+impl Default for AnalyzeOpts {
+    fn default() -> Self {
+        AnalyzeOpts { ranks: 864, model: CostModel::paper(), target: None }
+    }
+}
+
+/// The collect-all result of [`analyze_graph`], sorted most-severe
+/// first (stable within a severity: discovery order).
+#[derive(Clone, Debug)]
+pub struct AnalysisReport {
+    pub workflow: String,
+    /// rank count the granularity lints were evaluated at
+    pub ranks: usize,
+    /// number of tasks checked
+    pub tasks: usize,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl AnalysisReport {
+    pub fn count(&self, severity: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == severity).count()
+    }
+
+    pub fn errors(&self) -> usize {
+        self.count(Severity::Error)
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.count(Severity::Warning)
+    }
+
+    pub fn infos(&self) -> usize {
+        self.count(Severity::Info)
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// All diagnostics with a given code.
+    pub fn by_code<'a>(&'a self, code: &'a str) -> impl Iterator<Item = &'a Diagnostic> {
+        self.diagnostics.iter().filter(move |d| d.code == code)
+    }
+
+    /// Human-facing text report (the `workflow lint` body).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&d.headline());
+            out.push('\n');
+            if let Some(s) = &d.suggestion {
+                out.push_str(&format!("  help: {s}\n"));
+            }
+        }
+        if self.is_clean() {
+            out.push_str(&format!(
+                "workflow {:?}: clean ({} tasks checked at {} ranks)\n",
+                self.workflow, self.tasks, self.ranks
+            ));
+        } else {
+            out.push_str(&format!(
+                "workflow {:?}: {} error(s), {} warning(s), {} info ({} tasks checked at {} ranks)\n",
+                self.workflow,
+                self.errors(),
+                self.warnings(),
+                self.infos(),
+                self.tasks,
+                self.ranks
+            ));
+        }
+        out
+    }
+
+    /// Machine-readable report (one JSON object, `workflow lint --json`).
+    pub fn to_json(&self) -> String {
+        let mut out = format!(
+            "{{\"workflow\":\"{}\",\"ranks\":{},\"tasks\":{},\"errors\":{},\"warnings\":{},\"infos\":{},\"diagnostics\":[",
+            esc(&self.workflow),
+            self.ranks,
+            self.tasks,
+            self.errors(),
+            self.warnings(),
+            self.infos()
+        );
+        for (i, d) in self.diagnostics.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let tasks = d
+                .tasks
+                .iter()
+                .map(|t| format!("\"{}\"", esc(t)))
+                .collect::<Vec<_>>()
+                .join(",");
+            let suggestion = match &d.suggestion {
+                Some(s) => format!("\"{}\"", esc(s)),
+                None => "null".to_string(),
+            };
+            out.push_str(&format!(
+                "{{\"code\":\"{}\",\"severity\":\"{}\",\"tasks\":[{tasks}],\"message\":\"{}\",\"suggestion\":{suggestion}}}",
+                d.code,
+                d.severity.name(),
+                esc(&d.message)
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Turn severities into an exit verdict: errors always fail;
+    /// `deny_warnings` promotes warnings (the `--deny warnings` flag).
+    pub fn deny(&self, deny_warnings: bool) -> Result<()> {
+        let (e, w) = (self.errors(), self.warnings());
+        if e > 0 {
+            anyhow::bail!("workflow {:?}: {e} lint error(s)", self.workflow);
+        }
+        if deny_warnings && w > 0 {
+            anyhow::bail!("workflow {:?}: {w} warning(s) denied (--deny warnings)", self.workflow);
+        }
+        Ok(())
+    }
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Run every pass over `g` and collect all diagnostics.  Infallible:
+/// a broken graph *is* the result, not an error.  Granularity lints are
+/// skipped while the graph has Error-severity findings (efficiency
+/// numbers over a graph that cannot run would be noise).
+pub fn analyze_graph(g: &WorkflowGraph, opts: &AnalyzeOpts) -> AnalysisReport {
+    let mut diags = races::integrity(g);
+    let preds = g.preds_vec();
+    match g.topo_order_from(&preds) {
+        Ok(order) => {
+            let reach = Reach::ancestors(g.len(), &preds, &order);
+            diags.extend(races::races(g, Some(&reach)));
+            diags.extend(structure::lint(g, &preds, &reach));
+        }
+        Err(e) => {
+            diags.extend(races::races(g, None));
+            diags.push(Diagnostic::error(codes::CYCLE, Vec::new(), e.to_string()).suggest(
+                "break the cycle: some `after` edge or input/output pair points backwards",
+            ));
+        }
+    }
+    if !diags.iter().any(|d| d.severity == Severity::Error) {
+        diags.extend(granularity::lint(g, opts));
+    }
+    diags.sort_by_key(|d| d.severity);
+    AnalysisReport { workflow: g.name.clone(), ranks: opts.ranks, tasks: g.len(), diagnostics: diags }
+}
+
+/// The cheap errors-only subset (no cost model, no structural lints):
+/// what `WorkflowGraph::validate` and the `Session` pre-flight gate
+/// consume.  May include Info-severity findings from the race pass;
+/// callers filter by severity.
+pub fn error_diagnostics(g: &WorkflowGraph) -> Vec<Diagnostic> {
+    let mut diags = races::integrity(g);
+    let preds = g.preds_vec();
+    match g.topo_order_from(&preds) {
+        Ok(order) => {
+            let reach = Reach::ancestors(g.len(), &preds, &order);
+            diags.extend(races::races(g, Some(&reach)));
+        }
+        Err(e) => {
+            diags.extend(races::races(g, None));
+            diags.push(Diagnostic::error(codes::CYCLE, Vec::new(), e.to_string()));
+        }
+    }
+    diags
+}
+
+/// Bail-on-first compatibility shim: the first Error-severity
+/// diagnostic becomes the `Err`, preserving the pre-analyzer
+/// `validate()`/`check_integrity()` message text exactly.
+pub fn first_error(diags: Vec<Diagnostic>) -> Result<()> {
+    match diags.into_iter().find(|d| d.severity == Severity::Error) {
+        Some(d) => Err(anyhow::anyhow!(d.message)),
+        None => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::graph::TaskSpec;
+
+    fn opts() -> AnalyzeOpts {
+        AnalyzeOpts::default()
+    }
+
+    #[test]
+    fn clean_graph_reports_clean() {
+        let mut g = WorkflowGraph::new("ok");
+        g.add_task(TaskSpec::command("a", "echo > a.out").outputs(&["a.out"]).est(60.0))
+            .unwrap();
+        g.add_task(TaskSpec::command("b", "cat a.out").after(&["a"]).est(60.0)).unwrap();
+        let r = analyze_graph(&g, &opts());
+        assert!(r.is_clean(), "{}", r.render());
+        assert!(r.render().contains("clean"));
+    }
+
+    #[test]
+    fn every_emitted_code_is_documented() {
+        // kitchen-sink graph: one defect per class that can coexist
+        let mut g = WorkflowGraph::new("sink");
+        g.add_task(TaskSpec::command("w1", "x").outputs(&["f.out"]).est(60.0)).unwrap();
+        g.add_task(TaskSpec::command("w2", "x").outputs(&["f.out"]).est(60.0)).unwrap();
+        let mut reader = TaskSpec::command("r", "cat f.out").est(60.0);
+        reader.inputs = vec!["f.out".into(), "nowhere.dat".into()];
+        g.add_task(reader).unwrap();
+        g.add_task(TaskSpec::new("ghostly").after(&["ghost"])).unwrap();
+        g.add_task(TaskSpec::new("dead").est(0.0)).unwrap();
+        let r = analyze_graph(&g, &opts());
+        assert!(!r.is_clean());
+        for d in &r.diagnostics {
+            let row = CODE_TABLE.iter().find(|(c, ..)| *c == d.code);
+            let (_, sev, _) = row.unwrap_or_else(|| panic!("{} undocumented", d.code));
+            assert_eq!(*sev, d.severity, "{}", d.code);
+        }
+        // sorted most-severe first
+        let sevs: Vec<Severity> = r.diagnostics.iter().map(|d| d.severity).collect();
+        let mut sorted = sevs.clone();
+        sorted.sort();
+        assert_eq!(sevs, sorted);
+    }
+
+    #[test]
+    fn json_is_escaped_and_structured() {
+        let mut g = WorkflowGraph::new("json \"quoted\"");
+        g.add_task(TaskSpec::command("a", "x").outputs(&["f.out"]).est(60.0)).unwrap();
+        g.add_task(TaskSpec::command("b", "x").outputs(&["f.out"]).est(60.0)).unwrap();
+        let j = analyze_graph(&g, &opts()).to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
+        assert!(j.contains("\"workflow\":\"json \\\"quoted\\\"\""), "{j}");
+        assert!(j.contains("\"code\":\"E010\""), "{j}");
+        assert!(j.contains("\"errors\":1"), "{j}");
+    }
+
+    #[test]
+    fn deny_promotes_warnings() {
+        let mut g = WorkflowGraph::new("warny");
+        // sub-METG: microsecond tasks at paper scale
+        for i in 0..8 {
+            g.add_task(TaskSpec::kernel(format!("k{i}"), "atb_64", i).est(1e-6)).unwrap();
+        }
+        let r = analyze_graph(&g, &opts());
+        assert_eq!(r.errors(), 0);
+        assert!(r.warnings() > 0, "{}", r.render());
+        assert!(r.deny(false).is_ok());
+        assert!(r.deny(true).is_err());
+    }
+
+    #[test]
+    fn first_error_preserves_message_text() {
+        let mut g = WorkflowGraph::new("legacy");
+        g.add_task(TaskSpec::new("a").after(&["ghost"])).unwrap();
+        let err = first_error(error_diagnostics(&g)).unwrap_err();
+        assert_eq!(err.to_string(), "task \"a\" depends on unknown task \"ghost\"");
+    }
+}

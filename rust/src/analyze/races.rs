@@ -1,0 +1,202 @@
+//! Referential integrity and the file-race detector.
+//!
+//! [`integrity`] re-expresses the historical `check_integrity` checks
+//! (unknown deps, stamp collisions, stamp-named inputs) as collected
+//! diagnostics, preserving their message text so the bail-on-first
+//! wrappers stay byte-compatible.  [`races`] is new analysis: with
+//! every producer of every file in hand (not just the first-wins
+//! `by_output` entry) and ancestor bitsets from [`super::reach`], it
+//! flags unordered duplicate writers (E010), ordered-but-shadowed
+//! duplicates (E011), readers unordered against a writer of their
+//! input (E012), and inputs nothing produces (I201).
+
+use std::collections::HashMap;
+
+use super::reach::Reach;
+use super::{codes, Diagnostic};
+use crate::workflow::graph::WorkflowGraph;
+
+/// E001/E003/E004: dependency names resolve, no output collides with a
+/// `<name>.done` stamp, no input names another task's internal stamp.
+/// Same per-task check order and message text as the pre-analyzer
+/// `check_integrity`, so [`super::first_error`] reproduces it exactly.
+pub fn integrity(g: &WorkflowGraph) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for t in g.tasks() {
+        for d in &t.after {
+            if g.index_of(d).is_none() {
+                out.push(
+                    Diagnostic::error(
+                        codes::UNKNOWN_DEP,
+                        vec![t.name.clone()],
+                        format!("task {:?} depends on unknown task {d:?}", t.name),
+                    )
+                    .suggest(format!("declare task {d:?}, or drop the `after` entry")),
+                );
+            }
+        }
+        if t.outputs.is_empty() {
+            let stamp = format!("{}.done", t.name);
+            if let Some(p) = g.producer_of(&stamp) {
+                out.push(
+                    Diagnostic::error(
+                        codes::STAMP_COLLISION,
+                        vec![t.name.clone(), p.name.clone()],
+                        format!(
+                            "task {:?}'s synchronization stamp {stamp:?} collides with an \
+                             output declared by task {:?}",
+                            t.name, p.name
+                        ),
+                    )
+                    .suggest(format!(
+                        "rename task {:?}'s output, or give task {:?} explicit outputs",
+                        p.name, t.name
+                    )),
+                );
+            }
+        }
+        // an input naming another task's *internal* pmake stamp would
+        // order the tasks under pmake only (the stamp file never exists
+        // on the other back-ends): insist on an explicit edge
+        for f in &t.inputs {
+            if g.producer_of(f).is_some() {
+                continue;
+            }
+            if let Some(stem) = f.strip_suffix(".done") {
+                if let Some(p) = g.get(stem) {
+                    if p.outputs.is_empty() {
+                        out.push(
+                            Diagnostic::error(
+                                codes::STAMP_INPUT,
+                                vec![t.name.clone(), p.name.clone()],
+                                format!(
+                                    "task {:?} input {f:?} names task {stem:?}'s internal \
+                                     synchronization stamp; use `after: [{stem}]` instead",
+                                    t.name
+                                ),
+                            )
+                            .suggest(format!("replace the input with `after: [{stem}]`")),
+                        );
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// E010/E011/E012/I201: the file-race pass.  `reach` is `None` only
+/// when the graph is cyclic (no topological order exists); duplicate
+/// writers are then reported without an ordering verdict.
+pub fn races(g: &WorkflowGraph, reach: Option<&Reach>) -> Vec<Diagnostic> {
+    // writers/readers per file, files kept in first-mention order so
+    // the report is stable (HashMap iteration order is not)
+    let mut files: HashMap<&str, (Vec<usize>, Vec<usize>)> = HashMap::new();
+    let mut order: Vec<&str> = Vec::new();
+    for (i, t) in g.tasks().iter().enumerate() {
+        for f in &t.outputs {
+            let entry = files.entry(f).or_insert_with(|| {
+                order.push(f);
+                Default::default()
+            });
+            if entry.0.last() != Some(&i) {
+                entry.0.push(i); // a task listing a file twice is one writer
+            }
+        }
+    }
+    for (i, t) in g.tasks().iter().enumerate() {
+        for f in &t.inputs {
+            let entry = files.entry(f).or_insert_with(|| {
+                order.push(f);
+                Default::default()
+            });
+            if entry.1.last() != Some(&i) {
+                entry.1.push(i);
+            }
+        }
+    }
+
+    let name = |i: usize| g.tasks()[i].name.clone();
+    let mut out = Vec::new();
+    for f in order {
+        let (writers, readers) = &files[f];
+        // every duplicate-writer pair is wrong; reachability decides how
+        for (ai, &a) in writers.iter().enumerate() {
+            for &b in &writers[ai + 1..] {
+                let (na, nb) = (name(a), name(b));
+                match reach.map(|r| r.ordered(a, b)) {
+                    Some(false) => out.push(
+                        Diagnostic::error(
+                            codes::WRITE_WRITE_RACE,
+                            vec![na.clone(), nb.clone()],
+                            format!(
+                                "tasks {na:?} and {nb:?} both declare output {f:?} with no \
+                                 ordering path between them: the writes race under dwork \
+                                 and mpi-list, and pmake keeps whichever rule fires last"
+                            ),
+                        )
+                        .suggest(
+                            "add an `after:` edge ordering one write, or write distinct files",
+                        ),
+                    ),
+                    _ => out.push(
+                        Diagnostic::error(
+                            codes::DUPLICATE_OUTPUT,
+                            vec![na.clone(), nb.clone()],
+                            format!(
+                                "tasks {na:?} and {nb:?} both declare output {f:?}: implied \
+                                 producer edges resolve to {na:?} only, and the later write \
+                                 shadows it"
+                            ),
+                        )
+                        .suggest("give each task a distinct output file"),
+                    ),
+                }
+            }
+        }
+        // a reader must be ordered against EVERY writer of its input;
+        // implied edges only order it after the first-declared producer
+        if let Some(r) = reach {
+            for &rd in readers {
+                for &w in writers {
+                    if w != rd && !r.ordered(w, rd) {
+                        let (nr, nw) = (name(rd), name(w));
+                        out.push(
+                            Diagnostic::error(
+                                codes::READ_WRITE_HAZARD,
+                                vec![nr.clone(), nw.clone()],
+                                format!(
+                                    "task {nr:?} reads {f:?} but has no ordering path to \
+                                     task {nw:?}, which also writes it: works only by \
+                                     accident under pmake, races under dwork and mpi-list"
+                                ),
+                            )
+                            .suggest(format!("add `after: [{nw}]` to task {nr:?}")),
+                        );
+                    }
+                }
+            }
+        }
+        if writers.is_empty() {
+            let mut names: Vec<String> = readers.iter().map(|&i| name(i)).collect();
+            names.dedup();
+            let shown = if names.len() > 5 {
+                format!("{}, …", names[..5].join(", "))
+            } else {
+                names.join(", ")
+            };
+            out.push(
+                Diagnostic::info(
+                    codes::ORPHAN_INPUT,
+                    names,
+                    format!(
+                        "input {f:?} is produced by no task (read by {shown}): the file \
+                         must already exist in the campaign directory"
+                    ),
+                )
+                .suggest("declare it as some task's output if the workflow should create it"),
+            );
+        }
+    }
+    out
+}

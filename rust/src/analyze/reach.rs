@@ -1,0 +1,77 @@
+//! Bitset transitive reachability over a DAG.
+//!
+//! One flat `Vec<u64>` of n ancestor rows, filled in a single
+//! topological sweep: `anc(i) = ⋃ over preds p of anc(p) ∪ {p}`.
+//! O(E·n/64) time and n²/8 bytes — ~12 MB and a few milliseconds for a
+//! 10k-task graph, which is what lets the race detector check every
+//! producer pair instead of running a DFS per pair.
+
+/// Ancestor bitsets for every node of a DAG.
+pub struct Reach {
+    words: usize,
+    bits: Vec<u64>,
+}
+
+impl Reach {
+    /// Build ancestor sets from predecessor lists and a topological
+    /// order (callers get both from `WorkflowGraph::preds_vec` /
+    /// `topo_order_from`).
+    pub fn ancestors(n: usize, preds: &[Vec<usize>], order: &[usize]) -> Reach {
+        let words = n.div_ceil(64);
+        let mut bits = vec![0u64; n * words];
+        for &i in order {
+            for &p in &preds[i] {
+                bits[i * words + p / 64] |= 1 << (p % 64);
+                for w in 0..words {
+                    let row_p = bits[p * words + w];
+                    bits[i * words + w] |= row_p;
+                }
+            }
+        }
+        Reach { words, bits }
+    }
+
+    /// Is `a` a strict ancestor of `d` (some path a → … → d)?
+    pub fn is_ancestor(&self, a: usize, d: usize) -> bool {
+        (self.bits[d * self.words + a / 64] >> (a % 64)) & 1 == 1
+    }
+
+    /// Is there an ordering path between the two, in either direction?
+    pub fn ordered(&self, a: usize, b: usize) -> bool {
+        self.is_ancestor(a, b) || self.is_ancestor(b, a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diamond_ancestry() {
+        // 0 → {1, 2} → 3
+        let preds = vec![vec![], vec![0], vec![0], vec![1, 2]];
+        let order = vec![0, 1, 2, 3];
+        let r = Reach::ancestors(4, &preds, &order);
+        assert!(r.is_ancestor(0, 1));
+        assert!(r.is_ancestor(0, 3));
+        assert!(!r.is_ancestor(1, 2), "siblings are unordered");
+        assert!(!r.is_ancestor(3, 0), "strict: no reverse edges");
+        assert!(!r.is_ancestor(0, 0), "strict: not its own ancestor");
+        assert!(r.ordered(0, 3) && r.ordered(3, 0));
+        assert!(!r.ordered(1, 2));
+    }
+
+    #[test]
+    fn wide_graph_crosses_word_boundaries() {
+        // chain of 130 nodes: everything reaches everything downstream
+        let n = 130;
+        let preds: Vec<Vec<usize>> = (0..n).map(|i| if i == 0 { vec![] } else { vec![i - 1] }).collect();
+        let order: Vec<usize> = (0..n).collect();
+        let r = Reach::ancestors(n, &preds, &order);
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(r.is_ancestor(i, j), i < j, "({i},{j})");
+            }
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! Structural hygiene lints: transitively-redundant explicit `after`
+//! edges (W104) and dead zero-duration no-ops (I202).
+
+use super::reach::Reach;
+use super::{codes, Diagnostic};
+use crate::workflow::graph::{Payload, WorkflowGraph};
+
+/// W104/I202 over a prebuilt adjacency + ancestor bitsets.
+pub fn lint(g: &WorkflowGraph, preds: &[Vec<usize>], reach: &Reach) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+
+    // W104: an explicit `after: [p]` on task i is redundant when some
+    // OTHER predecessor q already has p among its ancestors — the edge
+    // adds no ordering, only noise (and hides the real critical path).
+    // Implied producer edges are never flagged: they carry data.
+    for (i, t) in g.tasks().iter().enumerate() {
+        for dep in &t.after {
+            let Some(p) = g.index_of(dep) else { continue }; // E001's problem
+            if p == i {
+                continue;
+            }
+            if let Some(&q) = preds[i].iter().find(|&&q| q != p && reach.is_ancestor(p, q)) {
+                out.push(
+                    Diagnostic::warning(
+                        codes::REDUNDANT_EDGE,
+                        vec![t.name.clone(), dep.clone()],
+                        format!(
+                            "`after: [{dep:?}]` on task {:?} is transitively redundant: \
+                             {dep:?} already precedes it through {:?}",
+                            t.name,
+                            g.tasks()[q].name
+                        ),
+                    )
+                    .suggest("drop the redundant edge"),
+                );
+            }
+        }
+    }
+
+    // I202: a zero-duration no-op with no outputs that nothing depends
+    // on synchronizes nothing — deleting it changes no backend's run.
+    // (Noop barriers with dependents, and est-bearing placeholders the
+    // selector should price, are NOT flagged.)
+    let mut has_succ = vec![false; g.len()];
+    for ps in preds {
+        for &p in ps {
+            has_succ[p] = true;
+        }
+    }
+    for (i, t) in g.tasks().iter().enumerate() {
+        if matches!(t.payload, Payload::Noop)
+            && t.est_s == 0.0
+            && t.outputs.is_empty()
+            && !has_succ[i]
+        {
+            out.push(
+                Diagnostic::info(
+                    codes::DEAD_TASK,
+                    vec![t.name.clone()],
+                    format!(
+                        "task {:?} is dead: a zero-duration no-op with no outputs that no \
+                         task depends on",
+                        t.name
+                    ),
+                )
+                .suggest("delete it, or give it work / an estimate / dependents"),
+            );
+        }
+    }
+    out
+}

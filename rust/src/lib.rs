@@ -57,7 +57,14 @@
 //! counters/gauges/histograms across the hub and workers, queryable
 //! over the wire (`Request::Metrics`), scrapable as Prometheus text
 //! (`dhub serve --metrics-addr`), and watchable with `dhub top`.
+//!
+//! Before anything runs, the [`analyze`] subsystem lints the graph:
+//! a collect-all static analyzer (`threesched workflow lint`,
+//! [`workflow::Session::analyze`]) detects file races via bitset
+//! transitive reachability, prices granularity against each backend's
+//! METG, and gates `Session::plan()/run()` on Error-severity findings.
 
+pub mod analyze;
 pub mod calibrate;
 pub mod coordinator;
 pub mod metg;

@@ -12,9 +12,10 @@
 //!              that pmake scripts launch, and a smoke-check for the
 //!              runtime path)
 //!   metg     — print the paper-scale METG sweep (DES)
-//!   workflow — plan | lower | run | submit: one workflow.yaml, three
-//!              lowerings, METG-based adaptive coordinator selection —
-//!              every verb is a thin veneer over `workflow::Session`
+//!   workflow — plan | lower | lint | run | submit: one workflow.yaml,
+//!              three lowerings, METG-based adaptive coordinator
+//!              selection, collect-all static analysis — every verb is
+//!              a thin veneer over `workflow::Session` / `analyze`
 //!   trace    — report | compare: Fig-5-style breakdowns over lifecycle
 //!              traces, and selector-vs-DES-vs-measured cross-validation
 //!   calibrate — fit the CostModel from measured traces into a profile
@@ -28,11 +29,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context as _, Result};
 
+use threesched::analyze::{analyze_graph, AnalyzeOpts};
 use threesched::calibrate::{self, CalibrationProfile};
 use threesched::coordinator::dwork::{self, Client, TaskMsg};
 use threesched::coordinator::pmake;
 use threesched::metg::harness::{metg_sweep, render_metg, PAPER_RANKS};
 use threesched::metrics::{self, MetricsSnapshot, Registry};
+use threesched::metg::simmodels::Tool;
 use threesched::metg::Workload;
 use threesched::workflow;
 use threesched::runtime::service::RuntimeService;
@@ -72,6 +75,11 @@ commands:
                   (stats + selector verdict)
   workflow lower  --file wf.yaml --coordinator auto|pmake|dwork|mpilist
                   [--out dir] [--ranks N]
+  workflow lint   [wf.yaml] [--file wf.yaml] [--json] [--deny warnings]
+                  [--ranks N] [--coordinator auto|pmake|dwork|mpilist]
+                  [--calibration profile.toml] [--standard]
+                  (collect-all static analysis: file races, METG
+                   granularity lints, structural hygiene)
   workflow run    --file wf.yaml [--coordinator auto|pmake|dwork|mpilist]
                   [--procs N] [--dir D] [--trace out.jsonl]
                   [--connect addr:port] [--poll-ms MS]
@@ -660,7 +668,7 @@ fn load_model(calibration: Option<&str>) -> Result<CostModel> {
 
 fn cmd_workflow(argv: &[String]) -> Result<()> {
     let Some(verb) = argv.first().map(String::as_str) else {
-        bail!("workflow needs a verb: plan | lower | run | submit\n{USAGE}");
+        bail!("workflow needs a verb: plan | lower | lint | run | submit\n{USAGE}");
     };
     let rest = &argv[1..];
     match verb {
@@ -731,6 +739,63 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
                 workflow::Lowered::MpiList(plan) => print!("{}", plan.render(&g)),
             }
             Ok(())
+        }
+        "lint" => {
+            let spec = [
+                Flag { name: "file", help: "workflow yaml", takes_value: true, default: Some("workflow.yaml") },
+                Flag { name: "json", help: "emit one JSON object per report", takes_value: false, default: None },
+                Flag { name: "deny", help: "treat this severity as fatal (only `warnings`)", takes_value: true, default: None },
+                Flag { name: "ranks", help: "target scale for the METG lints", takes_value: true, default: Some("864") },
+                Flag { name: "coordinator", help: "lint granularity against this backend (auto = the selector's own choice)", takes_value: true, default: Some("auto") },
+                Flag { name: "calibration", help: "fitted cost-model profile (from `threesched calibrate`)", takes_value: true, default: None },
+                Flag { name: "standard", help: "lint the calibrate::workloads::standard() suite instead of a file", takes_value: false, default: None },
+            ];
+            let args = parse(rest, &spec)?;
+            let deny_warnings = match args.get("deny") {
+                None => false,
+                Some("warnings") => true,
+                Some(other) => bail!("--deny accepts only `warnings`, got {other:?}"),
+            };
+            let target = match args.get("coordinator").unwrap() {
+                "auto" => None,
+                "pmake" => Some(Tool::Pmake),
+                "dwork" => Some(Tool::Dwork),
+                "mpilist" | "mpi-list" => Some(Tool::MpiList),
+                other => bail!("unknown coordinator {other:?} (auto | pmake | dwork | mpilist)"),
+            };
+            let model = load_model(args.get("calibration"))?;
+            let mut reports = Vec::new();
+            if args.has("standard") {
+                // each calibration workload lints at its own scale
+                for run in calibrate::workloads::standard() {
+                    let opts =
+                        AnalyzeOpts { ranks: run.ranks, model: model.clone(), target };
+                    reports.push(analyze_graph(&run.graph, &opts));
+                }
+            } else {
+                // positional form (`workflow lint wf.yaml`) wins over --file
+                let file = match args.positional.first() {
+                    Some(p) => p.as_str(),
+                    None => args.get("file").unwrap(),
+                };
+                // the loose parse admits defective graphs so every finding
+                // lands in one report instead of a bail on the first
+                let g = workflow::parse_workflow_file_loose(Path::new(file))?;
+                let opts = AnalyzeOpts { ranks: args.get_usize("ranks", 864)?, model, target };
+                reports.push(analyze_graph(&g, &opts));
+            }
+            let mut verdict = Ok(());
+            for r in &reports {
+                if args.has("json") {
+                    println!("{}", r.to_json());
+                } else {
+                    print!("{}", r.render());
+                }
+                if verdict.is_ok() {
+                    verdict = r.deny(deny_warnings);
+                }
+            }
+            verdict
         }
         "submit" => {
             let spec = [

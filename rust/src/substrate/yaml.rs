@@ -448,6 +448,32 @@ fn parse_scalar(s: &str) -> Yaml {
     Yaml::Str(t.to_string())
 }
 
+/// 1-based source line numbers of the items of the top-level block
+/// list under `key` (e.g. each `- name: …` entry of a `tasks:` list).
+/// The parsed [`Yaml`] tree drops positions; consumers that want
+/// `file:line:` diagnostics (the workflow spec parser) recover them
+/// here without re-parsing.  Unknown key or non-list value → empty.
+pub fn list_item_lines(src: &str, key: &str) -> Vec<usize> {
+    let lines = scan_lines(src);
+    let Some(start) = lines.iter().position(|l| l.text == format!("{key}:")) else {
+        return Vec::new();
+    };
+    let key_indent = lines[start].indent;
+    let mut out = Vec::new();
+    let mut item_indent = None;
+    for l in &lines[start + 1..] {
+        if l.indent <= key_indent {
+            break;
+        }
+        // list items sit at one common indent; deeper lines are bodies
+        let expected = *item_indent.get_or_insert(l.indent);
+        if l.indent == expected && (l.text.starts_with("- ") || l.text == "-") {
+            out.push(l.num);
+        }
+    }
+    out
+}
+
 /// Parse a file.
 pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Yaml> {
     let src = std::fs::read_to_string(path)
@@ -507,6 +533,18 @@ mod tests {
         let l = y.get("jobs").unwrap().as_list().unwrap();
         assert_eq!(l[0].get("name"), Some(&Yaml::Str("a".into())));
         assert_eq!(l[1].get("cpus"), Some(&Yaml::Int(4)));
+    }
+
+    #[test]
+    fn list_item_lines_recovers_positions() {
+        let src = "name: wf\n\n# a comment line\ntasks:\n  - name: a\n    est: 1\n  - name: b\n";
+        assert_eq!(list_item_lines(src, "tasks"), vec![5, 7]);
+        assert_eq!(list_item_lines(src, "missing"), Vec::<usize>::new());
+        // scalar value under the key → no items
+        assert_eq!(list_item_lines("tasks: none\n", "tasks"), Vec::<usize>::new());
+        // nested deeper lines are item bodies, not items
+        let src = "tasks:\n  - name: a\n    inputs:\n      - x.txt\n  - name: b\n";
+        assert_eq!(list_item_lines(src, "tasks"), vec![2, 5]);
     }
 
     #[test]

@@ -264,74 +264,41 @@ impl WorkflowGraph {
                 );
             }
         }
-        for out in &task.outputs {
-            if let Some(&other) = self.by_output.get(out) {
-                bail!(
-                    "tasks {:?} and {:?} both declare output {out:?}",
-                    self.tasks[other].name,
-                    task.name
-                );
-            }
-        }
         let id = self.tasks.len();
+        // duplicate declared outputs are ADMITTED here (first producer
+        // wins in `by_output`, keeping `producer_of` and implied edges
+        // deterministic) so the analyzer can see the whole graph and
+        // report every collision at once (E010/E011); `validate()`
+        // still hard-errors on them before anything runs
         for out in &task.outputs {
-            self.by_output.insert(out.clone(), id);
+            self.by_output.entry(out.clone()).or_insert(id);
         }
         self.index.insert(task.name.clone(), id);
         self.tasks.push(task);
         Ok(())
     }
 
-    /// Check referential integrity + acyclicity.  Every analysis and
-    /// lowering entry point calls this first.
+    /// Check referential integrity, acyclicity, and file-race freedom.
+    /// A thin bail-on-first wrapper over the collect-all analyzer
+    /// ([`crate::analyze::error_diagnostics`]): the first Error-severity
+    /// diagnostic becomes the `Err`, with the historical message text.
+    /// Every analysis and lowering entry point calls at least
+    /// [`WorkflowGraph::check_integrity`]; the spec parser and the
+    /// `Session` pre-flight gate call this.
     pub fn validate(&self) -> Result<()> {
-        self.check_integrity()?;
-        self.topo_order().map(|_| ())
+        crate::analyze::first_error(crate::analyze::error_diagnostics(self))
     }
 
     /// Non-topological integrity: dependency names resolve, and no
     /// declared output collides with another task's synthesized
     /// `<name>.done` stamp (the pmake lowering would emit two rules for
-    /// one file and silently drop a task).
+    /// one file and silently drop a task).  Bail-on-first wrapper over
+    /// [`crate::analyze::races::integrity`]; deliberately does NOT
+    /// include the race checks, so `Session::allow_lint_errors(true)`
+    /// can still lower a duplicate-output graph (first producer wins,
+    /// deterministically).
     pub(crate) fn check_integrity(&self) -> Result<()> {
-        for t in &self.tasks {
-            for d in &t.after {
-                if !self.index.contains_key(d) {
-                    bail!("task {:?} depends on unknown task {d:?}", t.name);
-                }
-            }
-            if t.outputs.is_empty() {
-                let stamp = format!("{}.done", t.name);
-                if let Some(&p) = self.by_output.get(&stamp) {
-                    bail!(
-                        "task {:?}'s synchronization stamp {stamp:?} collides with an \
-                         output declared by task {:?}",
-                        t.name,
-                        self.tasks[p].name
-                    );
-                }
-            }
-            // an input naming another task's *internal* pmake stamp would
-            // order the tasks under pmake only (the stamp file never
-            // exists on the other back-ends): insist on an explicit edge
-            for f in &t.inputs {
-                if self.by_output.contains_key(f) {
-                    continue;
-                }
-                if let Some(stem) = f.strip_suffix(".done") {
-                    if let Some(&p) = self.index.get(stem) {
-                        if self.tasks[p].outputs.is_empty() {
-                            bail!(
-                                "task {:?} input {f:?} names task {stem:?}'s internal \
-                                 synchronization stamp; use `after: [{stem}]` instead",
-                                t.name
-                            );
-                        }
-                    }
-                }
-            }
-        }
-        Ok(())
+        crate::analyze::first_error(crate::analyze::races::integrity(self))
     }
 
     /// Dependencies of task `i`: explicit `after` edges plus *implicit*
@@ -602,13 +569,17 @@ mod tests {
     }
 
     #[test]
-    fn duplicate_outputs_rejected() {
+    fn duplicate_outputs_rejected_by_validate() {
+        // admitted at insert time (the analyzer needs to see the whole
+        // graph to report every collision), hard error before running;
+        // `producer_of` stays deterministic: the first producer wins
         let mut g = WorkflowGraph::new("dup");
         g.add_task(TaskSpec::command("a", "touch x").outputs(&["x.out"])).unwrap();
-        let err = g
-            .add_task(TaskSpec::command("b", "touch x").outputs(&["x.out"]))
-            .unwrap_err();
+        g.add_task(TaskSpec::command("b", "touch x").outputs(&["x.out"])).unwrap();
+        let err = g.validate().unwrap_err();
         assert!(err.to_string().contains("both declare"), "{err}");
+        assert_eq!(g.producer_of("x.out").unwrap().name, "a");
+        assert!(g.check_integrity().is_ok(), "integrity alone admits it (escape hatch)");
     }
 
     #[test]

@@ -12,7 +12,9 @@
 //!   with cycle detection, topological levels, and critical-path/width
 //!   analysis;
 //! * [`spec`] — the YAML front-end (`workflow.yaml`), on
-//!   [`crate::substrate::yaml`];
+//!   [`crate::substrate::yaml`]; parse errors carry source line
+//!   numbers, and the `_loose` variants skip graph validation so
+//!   [`crate::analyze`] can report every defect at once;
 //! * [`lower`] — three lowerings: pmake `rules.yaml`/`targets.yaml`
 //!   text, a dwork task list with dependency edges, and an mpi-list
 //!   static bulk-synchronous rank plan;
@@ -76,4 +78,6 @@ pub use session::{
     Backend, BackendDetail, Lowered, Plan, PollCfg, PoolStats, RankStats, RemoteTarget,
     RunOutcome, Session, Submission, WorkerPool,
 };
-pub use spec::{parse_workflow, parse_workflow_file, to_yaml};
+pub use spec::{
+    parse_workflow, parse_workflow_file, parse_workflow_file_loose, parse_workflow_loose, to_yaml,
+};

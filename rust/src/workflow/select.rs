@@ -28,11 +28,13 @@ use crate::substrate::cluster::costs::CostModel;
 use super::graph::{GraphStats, WorkflowGraph};
 
 /// Flat-map levels tolerate this much duration spread before the static
-/// assignment's stragglers argue for dynamic pulling instead.
-const UNIFORM_CV: f64 = 0.25;
+/// assignment's stragglers argue for dynamic pulling instead.  Shared
+/// with the analyzer's W102 lint (`crate::analyze::granularity`).
+pub(crate) const UNIFORM_CV: f64 = 0.25;
 
 /// Minimum estimated efficiency for a coordinator to be "eligible".
-const EFF_FLOOR: f64 = 0.5;
+/// Shared with the analyzer's W101 lint.
+pub(crate) const EFF_FLOOR: f64 = 0.5;
 
 /// Per-coordinator verdict.
 #[derive(Clone, Debug)]
@@ -101,7 +103,7 @@ impl Recommendation {
     }
 }
 
-fn fmt_t(t: f64) -> String {
+pub(crate) fn fmt_t(t: f64) -> String {
     if t >= 1.0 {
         format!("{t:.2}s")
     } else if t >= 1e-3 {

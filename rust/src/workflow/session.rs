@@ -274,6 +274,7 @@ pub struct Session<'g> {
     model: CostModel,
     poll: PollCfg,
     prefetch: u32,
+    allow_lint_errors: bool,
 }
 
 impl<'g> Session<'g> {
@@ -288,6 +289,7 @@ impl<'g> Session<'g> {
             model: CostModel::paper(),
             poll: PollCfg::default(),
             prefetch: 1,
+            allow_lint_errors: false,
         }
     }
 
@@ -363,14 +365,76 @@ impl<'g> Session<'g> {
         self
     }
 
+    /// Escape hatch for the pre-flight lint gate: run the graph even
+    /// though the analyzer found Error-severity diagnostics (duplicate
+    /// outputs, write-write races, read-write hazards).  First-declared
+    /// producer wins every `by_output` lookup, deterministically.
+    /// Referential integrity (unknown deps, cycles, stamp collisions)
+    /// still fails inside the lowerings — there is no graph to run.
+    pub fn allow_lint_errors(mut self, allow: bool) -> Self {
+        self.allow_lint_errors = allow;
+        self
+    }
+
     fn resolved_parallelism(&self) -> usize {
         self.parallelism.unwrap_or_else(default_parallelism).max(1)
     }
 
+    /// Run the full static analyzer over the session's graph at the
+    /// session's scale, cost model, and backend: the library form of
+    /// `threesched workflow lint`.  Infallible — a broken graph *is*
+    /// the report (see [`crate::analyze`]).
+    pub fn analyze(&self) -> crate::analyze::AnalysisReport {
+        let target = match &self.backend {
+            Backend::Auto => None,
+            Backend::Pmake => Some(Tool::Pmake),
+            Backend::Dwork { .. } => Some(Tool::Dwork),
+            Backend::MpiList => Some(Tool::MpiList),
+        };
+        let opts = crate::analyze::AnalyzeOpts {
+            ranks: self.resolved_parallelism(),
+            model: self.model.clone(),
+            target,
+        };
+        crate::analyze::analyze_graph(self.graph, &opts)
+    }
+
+    /// The pre-flight gate behind [`Session::plan`]: refuse
+    /// Error-severity diagnostics unless the escape hatch is open.
+    fn lint_gate(&self) -> Result<()> {
+        if self.allow_lint_errors {
+            return Ok(());
+        }
+        let errors: Vec<crate::analyze::Diagnostic> =
+            crate::analyze::error_diagnostics(self.graph)
+                .into_iter()
+                .filter(|d| d.severity == crate::analyze::Severity::Error)
+                .collect();
+        if errors.is_empty() {
+            return Ok(());
+        }
+        let mut list = String::new();
+        for d in &errors {
+            list.push_str("  ");
+            list.push_str(&d.headline());
+            list.push('\n');
+        }
+        bail!(
+            "workflow {:?} fails lint with {} error(s):\n{list}  \
+             (inspect with `threesched workflow lint`; bypass with \
+             Session::allow_lint_errors(true))",
+            self.graph.name,
+            errors.len()
+        );
+    }
+
     /// Resolve the execution decision without executing: the selector
     /// runs for [`Backend::Auto`], explicit backends pass through.
-    /// Touches neither the filesystem nor the network.
+    /// Refuses graphs with Error-severity lint diagnostics (see
+    /// [`Session::allow_lint_errors`]).  Touches neither the filesystem
+    /// nor the network.
     pub fn plan(&self) -> Result<Plan> {
+        self.lint_gate()?;
         let parallelism = self.resolved_parallelism();
         let (tool, remote, recommendation) = match &self.backend {
             Backend::Auto => {

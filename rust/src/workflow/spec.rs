@@ -30,8 +30,21 @@ use crate::substrate::yaml::{self, Yaml};
 
 use super::graph::{Payload, TaskSpec, WorkflowGraph};
 
-/// Parse a workflow document.  The graph is validated (acyclic, closed).
+/// Parse a workflow document.  The graph is validated (acyclic, closed,
+/// race-free) — use [`parse_workflow_loose`] to get a possibly-broken
+/// graph for the analyzer to report on.
 pub fn parse_workflow(src: &str) -> Result<WorkflowGraph> {
+    let g = parse_workflow_loose(src)?;
+    g.validate()?;
+    Ok(g)
+}
+
+/// Parse without validating: syntax and per-task field errors still
+/// fail (with source line numbers, e.g. `line 17: tasks[2]: task
+/// "prep": outputs must be a list …`), but graph-level defects (cycles,
+/// races, dangling deps) are admitted so `workflow lint` can report all
+/// of them at once instead of dying on the first.
+pub fn parse_workflow_loose(src: &str) -> Result<WorkflowGraph> {
     let doc = yaml::parse(src)?;
     let name = doc
         .get("name")
@@ -41,11 +54,14 @@ pub fn parse_workflow(src: &str) -> Result<WorkflowGraph> {
     let Some(tasks) = doc.get("tasks").and_then(Yaml::as_list) else {
         bail!("workflow document needs a `tasks:` list");
     };
+    let item_lines = yaml::list_item_lines(src, "tasks");
     for (i, entry) in tasks.iter().enumerate() {
-        let task = parse_task(entry).with_context(|| format!("tasks[{i}]"))?;
+        let task = parse_task(entry).with_context(|| match item_lines.get(i) {
+            Some(line) => format!("line {line}: tasks[{i}]"),
+            None => format!("tasks[{i}]"),
+        })?;
         g.add_task(task)?;
     }
-    g.validate()?;
     Ok(g)
 }
 
@@ -53,6 +69,14 @@ pub fn parse_workflow_file(path: &std::path::Path) -> Result<WorkflowGraph> {
     let src =
         std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
     parse_workflow(&src).with_context(|| format!("parsing {path:?}"))
+}
+
+/// File form of [`parse_workflow_loose`] (the `workflow lint` entry
+/// point: parse errors are fatal, graph defects become diagnostics).
+pub fn parse_workflow_file_loose(path: &std::path::Path) -> Result<WorkflowGraph> {
+    let src =
+        std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    parse_workflow_loose(&src).with_context(|| format!("parsing {path:?}"))
 }
 
 fn string_list(y: &Yaml, what: &str) -> Result<Vec<String>> {
@@ -277,6 +301,22 @@ tasks:
                 .is_err(),
             "cycle"
         );
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        // the bad entry (`outputs` as a flow map) starts on source line 5
+        let src = "name: x\ntasks:\n  - name: ok\n    est: 1\n  - name: bad\n    outputs: {a: 1}\n";
+        let err = parse_workflow(src).unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("line 5: tasks[1]"), "{chain}");
+        assert!(chain.contains("outputs must be a list"), "{chain}");
+        // loose parse admits graph-level defects for the analyzer…
+        let racy = "tasks:\n  - name: a\n    after: [ghost]\n";
+        let g = parse_workflow_loose(racy).unwrap();
+        assert_eq!(g.len(), 1);
+        // …which strict parsing still refuses
+        assert!(parse_workflow(racy).is_err());
     }
 
     #[test]

@@ -1,0 +1,353 @@
+//! Acceptance for the `analyze` static analyzer (`workflow lint`):
+//! seeded defects in otherwise lint-clean random DAGs must each be
+//! caught with its documented code, lint-clean graphs must report zero
+//! diagnostics AND run green on all three backends, the calibration
+//! suite and the in-tree example workflows must stay clean, and the
+//! `Session` pre-flight gate must refuse (only) Error-severity graphs.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use threesched::analyze::{analyze_graph, codes, AnalysisReport, AnalyzeOpts};
+use threesched::metg::simmodels::Tool;
+use threesched::substrate::prop::{check, Gen};
+use threesched::workflow::{Backend, Session, TaskSpec, WorkflowGraph};
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "threesched-analyzelint-{name}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn opts(ranks: usize) -> AnalyzeOpts {
+    AnalyzeOpts { ranks, ..AnalyzeOpts::default() }
+}
+
+fn count(r: &AnalysisReport, code: &str) -> usize {
+    r.by_code(code).count()
+}
+
+/// Lint-clean by construction: coarse uniform command tasks, each
+/// writing its own file; every task's dependencies form an antichain
+/// (no edge is transitively implied, so no W104), realized either as a
+/// file input (an implied producer edge) or an explicit `after`.
+/// Returns (graph, strict-ancestor sets, deps per task, file reads as
+/// (reader, producer)).
+#[allow(clippy::type_complexity)]
+fn clean_dag(
+    g: &mut Gen,
+) -> (WorkflowGraph, Vec<BTreeSet<usize>>, Vec<Vec<usize>>, Vec<(usize, usize)>) {
+    let n = g.usize(3..12);
+    let mut wf = WorkflowGraph::new(format!("prop-lint-{}", g.case));
+    let mut anc: Vec<BTreeSet<usize>> = Vec::new();
+    let mut deps_of: Vec<Vec<usize>> = Vec::new();
+    let mut reads: Vec<(usize, usize)> = Vec::new();
+    for i in 0..n {
+        let mut deps: Vec<usize> = Vec::new();
+        if i > 0 {
+            for _ in 0..g.usize(0..3) {
+                let d = g.usize(0..i);
+                let comparable = deps
+                    .iter()
+                    .any(|&p| p == d || anc[p].contains(&d) || anc[d].contains(&p));
+                if !comparable {
+                    deps.push(d);
+                }
+            }
+        }
+        let mut t = TaskSpec::command(format!("t{i}"), format!("echo {i} > o{i}.txt"))
+            .outputs(&[format!("o{i}.txt")])
+            .est(60.0);
+        let mut afters: Vec<String> = Vec::new();
+        for &d in &deps {
+            if g.bool(0.4) {
+                t.inputs.push(format!("o{d}.txt"));
+                reads.push((i, d));
+            } else {
+                afters.push(format!("t{d}"));
+            }
+        }
+        if !afters.is_empty() {
+            t = t.after(&afters);
+        }
+        let mut my = BTreeSet::new();
+        for &d in &deps {
+            my.insert(d);
+            my.extend(anc[d].iter().copied());
+        }
+        anc.push(my);
+        deps_of.push(deps);
+        wf.add_task(t).unwrap();
+    }
+    (wf, anc, deps_of, reads)
+}
+
+/// Re-add every task through a tweak: seeded mutations on clean graphs.
+fn rebuilt(wf: &WorkflowGraph, tweak: impl Fn(usize, &mut TaskSpec)) -> WorkflowGraph {
+    let mut out = WorkflowGraph::new(wf.name.clone());
+    for (i, t) in wf.tasks().iter().enumerate() {
+        let mut t = t.clone();
+        tweak(i, &mut t);
+        out.add_task(t).unwrap();
+    }
+    out
+}
+
+#[test]
+fn seeded_defects_are_each_caught_with_their_documented_code() {
+    check("lint catches seeded defects", 120, |g| {
+        let (wf, anc, deps_of, reads) = clean_dag(g);
+        let n = wf.len();
+        let at8 = opts(8);
+
+        // baseline: clean, and the bail-on-first wrapper agrees
+        let base = analyze_graph(&wf, &at8);
+        assert!(base.is_clean(), "{}", base.render());
+        wf.validate().unwrap();
+
+        let v = g.usize(0..n);
+
+        // E010: an unordered second writer of o{v}.txt
+        let mut racy = wf.clone();
+        racy.add_task(
+            TaskSpec::command("rogue", "echo x").outputs(&[format!("o{v}.txt")]).est(60.0),
+        )
+        .unwrap();
+        let r = analyze_graph(&racy, &at8);
+        assert!(count(&r, codes::WRITE_WRITE_RACE) >= 1, "{}", r.render());
+        assert!(racy.validate().is_err());
+
+        // E011: the same duplicate writer, ordered after the original —
+        // no longer a race, still an ambiguous producer
+        let mut dup = wf.clone();
+        dup.add_task(
+            TaskSpec::command("rogue", "echo x")
+                .outputs(&[format!("o{v}.txt")])
+                .after(&[format!("t{v}")])
+                .est(60.0),
+        )
+        .unwrap();
+        let r = analyze_graph(&dup, &at8);
+        assert!(count(&r, codes::DUPLICATE_OUTPUT) >= 1, "{}", r.render());
+        assert_eq!(count(&r, codes::WRITE_WRITE_RACE), 0, "{}", r.render());
+
+        // E012: a reader left unordered against a second writer of its
+        // input (the implied edge only orders it after the first)
+        if let Some(&(rd, d)) = reads.first() {
+            let mut hazard = wf.clone();
+            hazard
+                .add_task(
+                    TaskSpec::command("rogue", "echo x")
+                        .outputs(&[format!("o{d}.txt")])
+                        .after(&[format!("t{d}")])
+                        .est(60.0),
+                )
+                .unwrap();
+            let r = analyze_graph(&hazard, &at8);
+            assert!(
+                count(&r, codes::READ_WRITE_HAZARD) >= 1,
+                "t{rd} reads o{d}.txt:\n{}",
+                r.render()
+            );
+        }
+
+        // I201: deleting a producer's declaration orphans its readers —
+        // advisory only, the graph still validates
+        if let Some(&(_, d)) = reads.first() {
+            let orphan = rebuilt(&wf, |i, t| {
+                if i == d {
+                    t.outputs.clear();
+                }
+            });
+            let r = analyze_graph(&orphan, &at8);
+            assert_eq!(r.errors(), 0, "{}", r.render());
+            assert!(count(&r, codes::ORPHAN_INPUT) >= 1, "{}", r.render());
+            orphan.validate().unwrap();
+        }
+
+        // W104: an explicit edge to a dependency's own ancestor is
+        // transitively redundant
+        let redundant = (0..n).find_map(|i| {
+            deps_of[i].iter().find_map(|&q| anc[q].iter().next().map(|&a| (i, a)))
+        });
+        if let Some((i, a)) = redundant {
+            let noisy = rebuilt(&wf, |j, t| {
+                if j == i {
+                    t.after.push(format!("t{a}"));
+                }
+            });
+            let r = analyze_graph(&noisy, &at8);
+            assert_eq!(r.errors(), 0, "{}", r.render());
+            assert!(count(&r, codes::REDUNDANT_EDGE) >= 1, "{}", r.render());
+        }
+
+        // W101: microsecond tasks are sub-METG on every backend at scale
+        let fine = rebuilt(&wf, |_, t| t.est_s = 1e-6);
+        let r = analyze_graph(&fine, &opts(864));
+        assert_eq!(r.errors(), 0, "{}", r.render());
+        assert!(count(&r, codes::SUB_METG) >= 1, "{}", r.render());
+
+        // W103: a zero estimate on a real payload
+        let zeroed = rebuilt(&wf, |i, t| {
+            if i == v {
+                t.est_s = 0.0;
+            }
+        });
+        let r = analyze_graph(&zeroed, &at8);
+        assert!(count(&r, codes::ZERO_EST) >= 1, "{}", r.render());
+
+        // E001: an `after` edge into thin air
+        let ghost = rebuilt(&wf, |i, t| {
+            if i == v {
+                t.after.push("ghost".to_string());
+            }
+        });
+        let r = analyze_graph(&ghost, &at8);
+        assert!(count(&r, codes::UNKNOWN_DEP) >= 1, "{}", r.render());
+        assert!(ghost.validate().unwrap_err().to_string().contains("unknown task"));
+
+        // E002: a two-task cycle
+        let cyclic = rebuilt(&wf, |i, t| {
+            if i == 0 {
+                t.after.push("t1".to_string());
+            }
+            if i == 1 {
+                t.after.push("t0".to_string());
+            }
+        });
+        let r = analyze_graph(&cyclic, &at8);
+        assert!(count(&r, codes::CYCLE) >= 1, "{}", r.render());
+        assert!(cyclic.validate().unwrap_err().to_string().contains("cycle"));
+
+        // E003: another task claims t{v}'s synchronization stamp
+        let mut stamped = rebuilt(&wf, |i, t| {
+            if i == v {
+                t.outputs.clear();
+            }
+        });
+        stamped
+            .add_task(
+                TaskSpec::command("collider", "touch stamp")
+                    .outputs(&[format!("t{v}.done")])
+                    .est(60.0),
+            )
+            .unwrap();
+        let r = analyze_graph(&stamped, &at8);
+        assert!(count(&r, codes::STAMP_COLLISION) >= 1, "{}", r.render());
+
+        // E004: an input naming t{v}'s internal stamp
+        let w = (v + 1) % n;
+        let sneaky = rebuilt(&wf, |i, t| {
+            if i == v {
+                t.outputs.clear();
+            }
+            if i == w {
+                t.inputs.push(format!("t{v}.done"));
+            }
+        });
+        let r = analyze_graph(&sneaky, &at8);
+        assert!(count(&r, codes::STAMP_INPUT) >= 1, "{}", r.render());
+
+        // I202: a dead zero-duration no-op barrier
+        let mut barren = wf.clone();
+        barren.add_task(TaskSpec::new("ghost-barrier").est(0.0)).unwrap();
+        let r = analyze_graph(&barren, &at8);
+        assert_eq!(r.errors(), 0, "{}", r.render());
+        assert!(count(&r, codes::DEAD_TASK) >= 1, "{}", r.render());
+    });
+}
+
+#[test]
+fn lint_clean_graphs_run_green_on_every_backend() {
+    check("lint-clean runs green", 5, |g| {
+        let (wf, ..) = clean_dag(g);
+        let report = analyze_graph(&wf, &opts(8));
+        assert!(report.is_clean(), "{}", report.render());
+        for tool in Tool::ALL {
+            let dir = tmp(&format!("{}-{}", tool.name().replace('-', ""), g.case));
+            let outcome = Session::new(&wf)
+                .backend(Backend::from_tool(tool))
+                .parallelism(2)
+                .dir(&dir)
+                .run()
+                .unwrap();
+            assert_eq!(outcome.summary.tasks_run, wf.len(), "{}", tool.name());
+            assert_eq!(outcome.summary.tasks_failed, 0, "{}", tool.name());
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    });
+}
+
+#[test]
+fn calibration_suite_is_lint_clean_and_the_farm_is_knowingly_sub_metg() {
+    // at each run's own scale with no pinned backend, the selector
+    // routes every probe to the tool it was shaped for: zero findings
+    for run in threesched::calibrate::workloads::standard() {
+        let r = analyze_graph(&run.graph, &opts(run.ranks));
+        assert!(r.is_clean(), "{} at {} ranks:\n{}", run.graph.name, run.ranks, r.render());
+    }
+    // pinned to dwork, the fine farm is *deliberately* below METG (the
+    // probe exists to saturate the serialized server) — W101 says so
+    let farm = threesched::calibrate::workloads::standard().remove(1);
+    let pinned =
+        AnalyzeOpts { ranks: farm.ranks, target: Some(Tool::Dwork), ..AnalyzeOpts::default() };
+    let r = analyze_graph(&farm.graph, &pinned);
+    assert_eq!(count(&r, codes::SUB_METG), 1, "{}", r.render());
+}
+
+#[test]
+fn in_tree_example_workflows_lint_clean_and_the_racy_fixture_does_not() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/workflows");
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension() == Some(std::ffi::OsStr::new("yaml")))
+        .collect();
+    paths.sort();
+    assert!(paths.len() >= 3, "expected the example workflows, found {}", paths.len());
+    for path in paths {
+        let wf = threesched::workflow::parse_workflow_file_loose(&path).unwrap();
+        let r = analyze_graph(&wf, &AnalyzeOpts::default());
+        assert!(r.is_clean(), "{}:\n{}", path.display(), r.render());
+    }
+
+    let racy = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/racy.yaml");
+    let wf = threesched::workflow::parse_workflow_file_loose(&racy).unwrap();
+    let r = analyze_graph(&wf, &AnalyzeOpts::default());
+    assert_eq!(count(&r, codes::WRITE_WRITE_RACE), 1, "{}", r.render());
+}
+
+#[test]
+fn session_gate_refuses_lint_errors_unless_escaped() {
+    let mut wf = WorkflowGraph::new("gated");
+    wf.add_task(TaskSpec::command("a", "echo a > x.dat").outputs(&["x.dat"]).est(1.0)).unwrap();
+    wf.add_task(TaskSpec::command("b", "echo b > x.dat").outputs(&["x.dat"]).est(1.0)).unwrap();
+
+    let err =
+        Session::new(&wf).backend(Backend::Dwork { remote: None }).parallelism(2).plan().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("fails lint"), "{msg}");
+    assert!(msg.contains("E010"), "{msg}");
+
+    let report = Session::new(&wf).backend(Backend::Dwork { remote: None }).analyze();
+    assert_eq!(report.errors(), 1);
+    assert_eq!(report.diagnostics[0].code, codes::WRITE_WRITE_RACE);
+
+    // the escape hatch admits the graph (first-declared producer wins
+    // deterministically) and the run completes
+    let dir = tmp("gate-escape");
+    let outcome = Session::new(&wf)
+        .backend(Backend::Dwork { remote: None })
+        .parallelism(2)
+        .dir(&dir)
+        .allow_lint_errors(true)
+        .run()
+        .unwrap();
+    assert_eq!(outcome.summary.tasks_failed, 0);
+    assert_eq!(outcome.summary.tasks_run, 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
