@@ -453,6 +453,7 @@ mod tests {
                 kind: EventKind::Connected,
                 t,
                 who: format!("w{i}"),
+                seq: 0,
             });
             t += 0.003 + ((i % 3) as f64 - 1.0) * 1e-4;
         }
@@ -472,6 +473,7 @@ mod tests {
             kind: EventKind::Connected,
             t: 2.0,
             who: "late".into(),
+            seq: 0,
         });
         let traces = vec![classify_trace(&source, events, None).unwrap()];
         let cal = fit_traces(&traces, &base).unwrap();

@@ -21,7 +21,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::metrics::{Counter, MetricsSnapshot, Registry, Series};
 use crate::substrate::transport::ClientConn;
-use crate::trace::{EventKind, Tracer};
+use crate::trace::{EventKind, TaskEvent, Tracer};
 
 use super::messages::{RefusalCode, Request, Response, StatusInfo, TaskMsg};
 
@@ -179,6 +179,26 @@ impl Client {
         }
     }
 
+    /// One live-event long-poll (`dhub tail`): registers this client's
+    /// worker name as a subscriber on first contact, then drains up to
+    /// `max` queued lifecycle events (0 = server default batch).  Only
+    /// events emitted *after* registration are seen; `prefix` filters
+    /// by task-name prefix server-side.  A pre-streaming hub answers
+    /// `Err` for the unknown request kind, surfaced as [`ServerError`].
+    pub fn subscribe(&mut self, prefix: &str, max: u32) -> Result<EventBatch> {
+        match self.roundtrip(&Request::Subscribe {
+            worker: self.worker.clone(),
+            prefix: prefix.to_string(),
+            max,
+        })? {
+            Response::Events { events, dropped, done } => {
+                Ok(EventBatch { events, dropped, done })
+            }
+            Response::Err { msg, code } => Err(ServerError { code, msg }.into()),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
     /// Completion query: poll `Status` every `poll` until everything the
     /// hub has accepted is finished (done or errored), then return the
     /// final counters.  This is how a remote submitter awaits a campaign
@@ -257,6 +277,17 @@ pub enum StealOutcome {
 pub enum StealBatch {
     Tasks(Vec<TaskMsg>),
     AllDone,
+}
+
+/// One [`Client::subscribe`] long-poll's yield.
+#[derive(Debug)]
+pub struct EventBatch {
+    pub events: Vec<TaskEvent>,
+    /// events lost to the bounded server-side queue since the last poll
+    pub dropped: u64,
+    /// the hub's graph is non-empty and fully drained — a following
+    /// tail can stop polling
+    pub done: bool,
 }
 
 /// Per-worker accounting returned by [`run_worker`]: the Fig 5 breakdown

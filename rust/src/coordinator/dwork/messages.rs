@@ -10,14 +10,21 @@
 //! | Exit     | Worker         | Ok              |
 //! | Status   | –              | Status          | (dquery support)
 //! | Metrics  | –              | Metrics         | (live-metrics extension)
+//! | Subscribe| Worker, pfx, n | Events          | (lifecycle tail extension)
 //!
 //! Workers are strings; Tasks are messages carrying arbitrary metadata —
 //! exactly the paper's protobuf choice, here via `substrate::wire`.
+//!
+//! `Subscribe` is a *long-poll*: the transport is strict request/reply,
+//! so a tail client calls it repeatedly and each reply drains whatever
+//! the hub buffered for that subscriber since the previous call (bounded
+//! queue, drop-oldest — a slow tail can never stall the serve loop).
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::metrics::{HistSnapshot, MetricsSnapshot};
 use crate::substrate::wire::{self, Reader, Value, Writer};
+use crate::trace::{EventKind, TaskEvent};
 
 /// Task payload crossing the wire: name + opaque body + originator.
 ///
@@ -81,6 +88,12 @@ pub enum Request {
     /// is untouched, so this is wire-compatible with old servers: they
     /// answer the unknown kind with `Response::Err`.
     Metrics,
+    /// Long-poll the hub's lifecycle event stream.  The first call from
+    /// a `worker` name registers the subscriber (with an optional task
+    /// name `prefix` filter); every call drains up to `max` buffered
+    /// events (0 = server default).  Old servers answer the unknown
+    /// kind with `Response::Err`, so tail clients degrade cleanly.
+    Subscribe { worker: String, prefix: String, max: u32 },
 }
 
 const REQ_CREATE: u64 = 1;
@@ -92,6 +105,7 @@ const REQ_EXIT: u64 = 6;
 const REQ_STATUS: u64 = 7;
 const REQ_SAVE: u64 = 8;
 const REQ_METRICS: u64 = 9;
+const REQ_SUBSCRIBE: u64 = 10;
 
 impl Request {
     pub fn encode(&self) -> Vec<u8> {
@@ -136,6 +150,16 @@ impl Request {
             Request::Metrics => {
                 w.uint(1, REQ_METRICS);
             }
+            Request::Subscribe { worker, prefix, max } => {
+                w.uint(1, REQ_SUBSCRIBE);
+                w.string(4, worker);
+                if !prefix.is_empty() {
+                    w.string(6, prefix);
+                }
+                if *max != 0 {
+                    w.uint(5, *max as u64);
+                }
+            }
         }
         w.into_bytes()
     }
@@ -176,6 +200,11 @@ impl Request {
             REQ_STATUS => Request::Status,
             REQ_SAVE => Request::Save,
             REQ_METRICS => Request::Metrics,
+            REQ_SUBSCRIBE => Request::Subscribe {
+                worker: worker()?,
+                prefix: wire::get_str(&fields, 6).unwrap_or_default().to_string(),
+                max: wire::get_u64(&fields, 5).unwrap_or(0) as u32,
+            },
             other => bail!("unknown request kind {other}"),
         })
     }
@@ -269,6 +298,10 @@ pub enum Response {
     Status(StatusInfo),
     /// Live-metrics reply: a versioned name-addressed snapshot.
     Metrics(MetricsSnapshot),
+    /// Subscribe reply: buffered lifecycle events since the last poll,
+    /// the subscriber's cumulative drop-oldest count, and whether the
+    /// hub has drained (so a non-follow tail knows when to stop).
+    Events { events: Vec<TaskEvent>, dropped: u64, done: bool },
 }
 
 const RESP_TASK: u64 = 1;
@@ -279,6 +312,39 @@ const RESP_OK: u64 = 5;
 const RESP_ERR: u64 = 6;
 const RESP_STATUS: u64 = 7;
 const RESP_METRICS: u64 = 8;
+const RESP_EVENTS: u64 = 9;
+
+// TaskEvent wire layout (repeated sub-message, field 30 of an Events
+// frame): {1: task, 2: kind name, 3: t as f64 bits (uint — same float
+// convention as the metrics snapshot), 4: who, 5: seq}.  The kind
+// travels as its schema name so the wire stays aligned with the JSONL
+// vocabulary (an unknown kind is a decode error, not silence).
+fn encode_event_into(w: &mut Writer, field: u32, ev: &TaskEvent) {
+    let mut e = Writer::new();
+    e.string(1, &ev.task);
+    e.string(2, ev.kind.name());
+    e.uint(3, ev.t.to_bits());
+    if !ev.who.is_empty() {
+        e.string(4, &ev.who);
+    }
+    if ev.seq != 0 {
+        e.uint(5, ev.seq);
+    }
+    w.message(field, &e);
+}
+
+fn decode_event(bytes: &[u8]) -> Result<TaskEvent> {
+    let sub = Reader::new(bytes).fields()?;
+    let kind_name = wire::get_str(&sub, 2)?;
+    Ok(TaskEvent {
+        task: wire::get_str(&sub, 1).unwrap_or_default().to_string(),
+        kind: EventKind::from_name(kind_name)
+            .ok_or_else(|| anyhow!("unknown event kind {kind_name:?}"))?,
+        t: f64::from_bits(wire::get_u64(&sub, 3).unwrap_or(0)),
+        who: wire::get_str(&sub, 4).unwrap_or_default().to_string(),
+        seq: wire::get_u64(&sub, 5).unwrap_or(0),
+    })
+}
 
 // MetricsSnapshot wire layout (all inside the Response frame):
 //   field 20: snapshot version (uint)
@@ -407,6 +473,16 @@ impl Response {
                 w.uint(1, RESP_METRICS);
                 encode_metrics_into(&mut w, m);
             }
+            Response::Events { events, dropped, done } => {
+                w.uint(1, RESP_EVENTS);
+                for ev in events {
+                    encode_event_into(&mut w, 30, ev);
+                }
+                if *dropped != 0 {
+                    w.uint(31, *dropped);
+                }
+                w.uint(32, *done as u64);
+            }
         }
         w.into_bytes()
     }
@@ -450,6 +526,18 @@ impl Response {
                 failed: wire::get_u64(&fields, 17).unwrap_or(0),
             }),
             RESP_METRICS => Response::Metrics(decode_metrics(&fields)?),
+            RESP_EVENTS => Response::Events {
+                events: fields
+                    .iter()
+                    .filter(|(f, _)| *f == 30)
+                    .map(|(_, v)| match v {
+                        Value::Bytes(b) => decode_event(b),
+                        _ => bail!("event field has wrong wire type"),
+                    })
+                    .collect::<Result<Vec<TaskEvent>>>()?,
+                dropped: wire::get_u64(&fields, 31).unwrap_or(0),
+                done: wire::get_u64(&fields, 32).unwrap_or(0) != 0,
+            },
             other => bail!("unknown response kind {other}"),
         })
     }
@@ -490,6 +578,16 @@ mod tests {
         roundtrip_req(Request::Status);
         roundtrip_req(Request::Save);
         roundtrip_req(Request::Metrics);
+        roundtrip_req(Request::Subscribe {
+            worker: "tail-1".into(),
+            prefix: String::new(),
+            max: 0,
+        });
+        roundtrip_req(Request::Subscribe {
+            worker: "tail-1".into(),
+            prefix: "dock-".into(),
+            max: 512,
+        });
     }
 
     #[test]
@@ -550,6 +648,49 @@ mod tests {
         }));
         // the disabled-registry snapshot (version 0, all empty)
         roundtrip_resp(Response::Metrics(MetricsSnapshot::default()));
+    }
+
+    #[test]
+    fn events_responses_roundtrip() {
+        let ev = |task: &str, kind: EventKind, t: f64, who: &str, seq: u64| TaskEvent {
+            task: task.into(),
+            kind,
+            t,
+            who: who.into(),
+            seq,
+        };
+        roundtrip_resp(Response::Events { events: vec![], dropped: 0, done: false });
+        roundtrip_resp(Response::Events { events: vec![], dropped: 7, done: true });
+        roundtrip_resp(Response::Events {
+            events: vec![
+                ev("dock-1", EventKind::Created, 0.0, "", 0),
+                ev("dock-1", EventKind::Ready, 1.5e-3, "", 1),
+                ev("dock-1", EventKind::Launched, 2.5e-3, "w0", 2),
+                ev("dock-1", EventKind::Finished, 0.25, "w0", 3),
+                ev("", EventKind::Connected, 0.1, "w1", 4),
+            ],
+            dropped: 0,
+            done: false,
+        });
+        // negative / huge timestamps survive the f64-bits convention
+        roundtrip_resp(Response::Events {
+            events: vec![ev("t", EventKind::Failed, 1.0e9 + 0.125, "rank3", u64::MAX)],
+            dropped: u64::MAX,
+            done: true,
+        });
+    }
+
+    #[test]
+    fn subscribe_request_is_a_fresh_kind() {
+        // kind 10, the next free slot after Metrics (9): a current server
+        // decodes it; a pre-subscribe server answers Err for the unknown
+        // kind, which the tail client surfaces as ServerError
+        let req =
+            Request::Subscribe { worker: "tail".into(), prefix: String::new(), max: 0 };
+        let bytes = req.encode();
+        assert_eq!(Request::decode(&bytes).unwrap(), req);
+        let fields = crate::substrate::wire::Reader::new(&bytes).fields().unwrap();
+        assert_eq!(wire::get_u64(&fields, 1).unwrap(), 10);
     }
 
     #[test]

@@ -15,8 +15,8 @@ pub mod server;
 pub mod state;
 
 pub use client::{
-    run_worker, run_worker_opts, Client, ServerError, StealBatch, StealOutcome, WorkerOpts,
-    WorkerStats,
+    run_worker, run_worker_opts, Client, EventBatch, ServerError, StealBatch, StealOutcome,
+    WorkerOpts, WorkerStats,
 };
 pub use messages::{RefusalCode, Request, Response, StatusInfo, TaskMsg};
 pub use server::{serve, spawn_inproc, spawn_tcp, ServerConfig};

@@ -89,6 +89,9 @@ pub fn serve_with_counters(
             Ok(Request::Status) => (Counter::ReqStatus, Some(Series::ServiceStatus)),
             Ok(Request::Save) => (Counter::ReqSave, Some(Series::ServiceSave)),
             Ok(Request::Metrics) => (Counter::ReqMetrics, Some(Series::ServiceMetrics)),
+            Ok(Request::Subscribe { .. }) => {
+                (Counter::ReqSubscribe, Some(Series::ServiceSubscribe))
+            }
         };
         metrics.inc(kind_counter);
         if metrics.is_enabled() {
@@ -187,6 +190,8 @@ pub fn serve_with_counters(
             }
             Ok(Request::Exit { worker }) => {
                 mutated = state.exit_worker(&worker) > 0;
+                // a departing tail also drops its event subscription
+                state.unsubscribe(&worker);
                 Response::Ok
             }
             Ok(Request::Status) => Response::Status(state.status()),
@@ -198,6 +203,13 @@ pub fn serve_with_counters(
             // the hub was served without --metrics-addr and no enabled
             // registry was passed in
             Ok(Request::Metrics) => Response::Metrics(metrics.snapshot()),
+            // long-poll: drain whatever is queued for this subscriber
+            // (registering it on first contact); `done` tells the tail
+            // the graph has fully drained so --follow can stop
+            Ok(Request::Subscribe { worker, prefix, max }) => {
+                let (events, dropped) = state.subscribe_poll(&worker, &prefix, max as usize);
+                Response::Events { events, dropped, done: !state.is_empty() && state.all_done() }
+            }
         };
         if mutated {
             mutations += 1;
@@ -412,6 +424,42 @@ mod tests {
         drop(c);
         drop(connector);
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn subscribe_long_poll_streams_lifecycle() {
+        use crate::trace::EventKind;
+        let (connector, handle) = spawn_inproc(SchedState::new(), ServerConfig::default());
+        let mut tail = Client::new(Box::new(connector.connect()), "tail0");
+        // first poll registers the subscriber; nothing is retroactive
+        let b = tail.subscribe("", 0).unwrap();
+        assert!(b.events.is_empty());
+        assert!(!b.done, "empty hub is not 'done'");
+        let mut c = Client::new(Box::new(connector.connect()), "w0");
+        c.create(TaskMsg::new("a", vec![]), &[]).unwrap();
+        let t = c.steal().unwrap().unwrap();
+        c.complete(&t.name, true).unwrap();
+        let b = tail.subscribe("", 0).unwrap();
+        assert_eq!(b.dropped, 0);
+        let kinds: Vec<EventKind> = b.events.iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                EventKind::Created,
+                EventKind::Ready,
+                EventKind::Launched,
+                EventKind::Finished
+            ]
+        );
+        assert!(b.events.iter().all(|e| e.task == "a"));
+        assert!(b.done, "graph fully drained");
+        // Exit detaches the subscription server-side
+        tail.exit().unwrap();
+        drop(tail);
+        drop(c);
+        drop(connector);
+        let state = handle.join().unwrap();
+        assert_eq!(state.subscriber_count(), 0);
     }
 
     #[test]

@@ -13,13 +13,14 @@
 //! * `Exit` moves a dead worker's assignments back into the ready pool.
 
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::metrics::{Counter, Gauge, Registry};
 use crate::substrate::kvstore::KvStore;
 use crate::substrate::wire::{self, Reader, Writer};
-use crate::trace::{EventKind, Tracer};
+use crate::trace::{EventKind, TaskEvent, Tracer};
 
 use super::messages::{RefusalCode, StatusInfo, TaskMsg};
 
@@ -151,6 +152,38 @@ impl TaskEntry {
     }
 }
 
+/// Per-subscriber queue cap: a tail that stops draining loses the
+/// *oldest* events (drop-oldest) and learns how many via the `dropped`
+/// count in every [`super::messages::Response::Events`] reply — the
+/// serve loop never blocks on a slow consumer.
+pub(crate) const SUB_QUEUE_CAP: usize = 8192;
+
+/// Events handed out per Subscribe long-poll when the client asks for
+/// `max == 0` ("server default").
+pub(crate) const SUB_BATCH_DEFAULT: usize = 1024;
+
+/// One live subscriber's pending events plus its task-name filter.
+struct SubQueue {
+    q: VecDeque<TaskEvent>,
+    prefix: String,
+    dropped: u64,
+}
+
+/// Fan-out side of live event streaming (`dhub tail`).  Plain fields,
+/// no atomics: the hub serve loop is single-threaded, and the long-poll
+/// protocol means subscribers only ever touch this through requests the
+/// same loop serves.  With no subscribers attached, the only cost per
+/// lifecycle event is one `is_empty` branch — zero allocations.
+#[derive(Default)]
+struct EventHub {
+    subs: HashMap<String, SubQueue>,
+    /// hub-stamped monotone sequence across all fanned-out events
+    seq: u64,
+    /// timestamp epoch when no tracer is attached; set lazily at the
+    /// first subscribe so idle hubs never read the clock
+    epoch: Option<Instant>,
+}
+
 /// The scheduler state machine.
 pub struct SchedState {
     tasks: HashMap<String, TaskEntry>,
@@ -167,6 +200,8 @@ pub struct SchedState {
     tracer: Tracer,
     /// live counters/gauges (no-op unless [`SchedState::set_metrics`])
     metrics: Registry,
+    /// live event fan-out to `Subscribe` long-pollers (`dhub tail`)
+    hub: EventHub,
 }
 
 impl SchedState {
@@ -207,6 +242,7 @@ impl SchedState {
             failed: 0,
             tracer: Tracer::default(),
             metrics: Registry::default(),
+            hub: EventHub::default(),
         };
         s.rebuild();
         s
@@ -245,6 +281,86 @@ impl SchedState {
 
     fn sync_queue_gauge(&self) {
         self.metrics.gauge_set(Gauge::QueueDepth, self.ready.len() as i64);
+    }
+
+    /// Record one lifecycle event: into the tracer (if attached) and
+    /// into every live subscriber queue whose prefix matches.  With no
+    /// subscribers the fan-out half is a single `is_empty` branch —
+    /// no clock read, no allocation (pinned by `benches/trace_profile`).
+    fn emit(&mut self, task: &str, kind: EventKind, who: &str) {
+        self.tracer.record(task, kind, who);
+        if self.hub.subs.is_empty() {
+            return;
+        }
+        let t = if self.tracer.enabled() {
+            self.tracer.now()
+        } else {
+            // epoch is set when the first subscriber attached
+            self.hub.epoch.map_or(0.0, |e| e.elapsed().as_secs_f64())
+        };
+        let seq = self.hub.seq;
+        self.hub.seq += 1;
+        let ev = TaskEvent {
+            task: task.to_string(),
+            kind,
+            t,
+            who: who.to_string(),
+            seq,
+        };
+        for sub in self.hub.subs.values_mut() {
+            if !ev.task.starts_with(sub.prefix.as_str()) {
+                continue;
+            }
+            if sub.q.len() >= SUB_QUEUE_CAP {
+                sub.q.pop_front();
+                sub.dropped += 1;
+                self.metrics.inc(Counter::SubscribeDropped);
+            }
+            sub.q.push_back(ev.clone());
+        }
+    }
+
+    /// One Subscribe long-poll from `worker`: register it (first call)
+    /// or update its filter, then hand back up to `max` queued events
+    /// (0 = [`SUB_BATCH_DEFAULT`]) plus the number dropped since the
+    /// last poll.  Only events emitted *after* registration are seen.
+    pub fn subscribe_poll(
+        &mut self,
+        worker: &str,
+        prefix: &str,
+        max: usize,
+    ) -> (Vec<TaskEvent>, u64) {
+        if self.hub.epoch.is_none() {
+            self.hub.epoch = Some(Instant::now());
+        }
+        // lookup-then-insert instead of entry(): an idle long-poll from a
+        // registered subscriber must not allocate (the key clone entry()
+        // requires would) — the parked-tail serve path is benched at zero
+        if !self.hub.subs.contains_key(worker) {
+            self.hub.subs.insert(
+                worker.to_string(),
+                SubQueue { q: VecDeque::new(), prefix: String::new(), dropped: 0 },
+            );
+        }
+        let sub = self.hub.subs.get_mut(worker).expect("just inserted");
+        if sub.prefix != prefix {
+            sub.prefix = prefix.to_string();
+        }
+        let max = if max == 0 { SUB_BATCH_DEFAULT } else { max };
+        let n = sub.q.len().min(max);
+        let events: Vec<TaskEvent> = sub.q.drain(..n).collect();
+        let dropped = std::mem::take(&mut sub.dropped);
+        (events, dropped)
+    }
+
+    /// Drop `worker`'s subscription (its Exit, or a vanished tail).
+    pub fn unsubscribe(&mut self, worker: &str) {
+        self.hub.subs.remove(worker);
+    }
+
+    /// Live subscriber count (monitoring/tests).
+    pub fn subscriber_count(&self) -> usize {
+        self.hub.subs.len()
     }
 
     /// Regenerate run-time structures from the persisted tables (paper:
@@ -393,10 +509,10 @@ impl SchedState {
                 touched.push(d.clone());
             }
         }
-        self.tracer.record(&name, EventKind::Created, "");
+        self.emit(&name, EventKind::Created, "");
         self.metrics.inc(Counter::TasksCreated);
         if join == 0 {
-            self.tracer.record(&name, EventKind::Ready, "");
+            self.emit(&name, EventKind::Ready, "");
             self.ready.push_back(name.clone());
             self.sync_queue_gauge();
         }
@@ -418,7 +534,7 @@ impl SchedState {
             debug_assert_eq!(e.state, TaskState::Ready);
             e.state = TaskState::Assigned;
             out.push(e.msg.clone());
-            self.tracer.record(&name, EventKind::Launched, worker);
+            self.emit(&name, EventKind::Launched, worker);
             self.assigned.entry(worker.to_string()).or_default().insert(name.clone());
             self.persist(&name);
         }
@@ -452,7 +568,7 @@ impl SchedState {
             };
             self.completed += 1;
             self.metrics.inc(Counter::TasksCompleted);
-            self.tracer.record(task, EventKind::Finished, worker);
+            self.emit(task, EventKind::Finished, worker);
             self.persist(task);
             for s in succs {
                 let promote = {
@@ -466,7 +582,7 @@ impl SchedState {
                         se.state = TaskState::Ready;
                         se.reinserted
                     };
-                    self.tracer.record(&s, EventKind::Ready, "");
+                    self.emit(&s, EventKind::Ready, "");
                     // paper: re-inserted tasks go to the FRONT of the deque
                     if front {
                         self.ready.push_front(s.clone());
@@ -492,18 +608,21 @@ impl SchedState {
     fn error_recursive(&mut self, task: &str, worker: &str) {
         let mut stack = vec![task.to_string()];
         while let Some(name) = stack.pop() {
-            let Some(e) = self.tasks.get_mut(&name) else { continue };
-            if e.state == TaskState::Error {
-                continue;
-            }
-            if e.state == TaskState::Done {
-                continue; // already finished before the failure propagated
-            }
-            if e.state == TaskState::Ready {
-                // remove from the ready queue
-                self.ready.retain(|r| r != &name);
-            }
-            e.state = TaskState::Error;
+            let succs = {
+                let Some(e) = self.tasks.get_mut(&name) else { continue };
+                if e.state == TaskState::Error {
+                    continue;
+                }
+                if e.state == TaskState::Done {
+                    continue; // already finished before the failure propagated
+                }
+                if e.state == TaskState::Ready {
+                    // remove from the ready queue
+                    self.ready.retain(|r| r != &name);
+                }
+                e.state = TaskState::Error;
+                e.successors.clone()
+            };
             self.errored += 1;
             // the root was attempted by `worker`; propagated successors
             // never reached anyone
@@ -511,8 +630,8 @@ impl SchedState {
             if name != task {
                 self.metrics.inc(Counter::TasksSkipped);
             }
-            self.tracer.record(&name, EventKind::Failed, who);
-            stack.extend(e.successors.iter().cloned());
+            self.emit(&name, EventKind::Failed, who);
+            stack.extend(succs);
             self.persist(&name);
         }
         self.sync_queue_gauge();
@@ -551,18 +670,20 @@ impl SchedState {
                 }
             }
         }
-        let e = self.tasks.get_mut(task).unwrap();
-        e.join += join;
-        e.reinserted = true;
-        self.tracer.record(task, EventKind::Requeued, worker);
+        let now_ready = {
+            let e = self.tasks.get_mut(task).unwrap();
+            e.join += join;
+            e.reinserted = true;
+            let now_ready = e.join == 0;
+            e.state = if now_ready { TaskState::Ready } else { TaskState::Waiting };
+            now_ready
+        };
+        self.emit(task, EventKind::Requeued, worker);
         self.metrics.inc(Counter::TasksRequeued);
         self.metrics.gauge_add(Gauge::Inflight, -1);
-        if e.join == 0 {
-            e.state = TaskState::Ready;
-            self.tracer.record(task, EventKind::Ready, "");
+        if now_ready {
+            self.emit(task, EventKind::Ready, "");
             self.ready.push_front(task.to_string());
-        } else {
-            e.state = TaskState::Waiting;
         }
         self.sync_queue_gauge();
         self.persist(task);
@@ -605,15 +726,20 @@ impl SchedState {
         names.sort_by_key(|n| self.tasks.get(n).map(|e| e.seq).unwrap_or(u64::MAX));
         let mut requeued = 0;
         for name in names.into_iter().rev() {
-            if let Some(e) = self.tasks.get_mut(&name) {
+            let was_assigned = self.tasks.get_mut(&name).is_some_and(|e| {
                 if e.state == TaskState::Assigned {
                     e.state = TaskState::Ready;
-                    self.tracer.record(&name, EventKind::Requeued, worker);
-                    self.tracer.record(&name, EventKind::Ready, "");
-                    self.ready.push_front(name.clone());
-                    self.persist(&name);
-                    requeued += 1;
+                    true
+                } else {
+                    false
                 }
+            });
+            if was_assigned {
+                self.emit(&name, EventKind::Requeued, worker);
+                self.emit(&name, EventKind::Ready, "");
+                self.ready.push_front(name.clone());
+                self.persist(&name);
+                requeued += 1;
             }
         }
         if requeued > 0 {
@@ -1050,5 +1176,100 @@ mod tests {
         }
         assert_eq!(n, 100_000);
         assert!(s.all_done());
+    }
+
+    #[test]
+    fn subscriber_sees_lifecycle_events_after_attach() {
+        let mut s = SchedState::new();
+        s.create(t("before"), &[]).unwrap(); // emitted pre-attach: invisible
+        let (evs, dropped) = s.subscribe_poll("tail", "", 0);
+        assert!(evs.is_empty(), "attach returns nothing retroactively");
+        assert_eq!(dropped, 0);
+        s.create(t("a"), &[]).unwrap();
+        s.steal("w", 2); // before, a
+        s.complete("w", "a", true).unwrap();
+        let (evs, dropped) = s.subscribe_poll("tail", "", 0);
+        assert_eq!(dropped, 0);
+        let kinds: Vec<(String, EventKind)> =
+            evs.iter().map(|e| (e.task.clone(), e.kind)).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                ("a".to_string(), EventKind::Created),
+                ("a".to_string(), EventKind::Ready),
+                ("before".to_string(), EventKind::Launched),
+                ("a".to_string(), EventKind::Launched),
+                ("a".to_string(), EventKind::Finished),
+            ]
+        );
+        // hub-stamped seq is monotone, timestamps never go backwards
+        for w in evs.windows(2) {
+            assert!(w[0].seq < w[1].seq);
+            assert!(w[0].t <= w[1].t);
+        }
+        // queue drained: next poll is empty
+        assert!(s.subscribe_poll("tail", "", 0).0.is_empty());
+    }
+
+    #[test]
+    fn subscriber_prefix_filters_and_unsubscribe_detaches() {
+        let mut s = SchedState::new();
+        s.subscribe_poll("tail", "app/", 0);
+        s.create(t("app/x"), &[]).unwrap();
+        s.create(t("sys/y"), &[]).unwrap();
+        let (evs, _) = s.subscribe_poll("tail", "app/", 0);
+        assert!(!evs.is_empty());
+        assert!(evs.iter().all(|e| e.task.starts_with("app/")), "{evs:?}");
+        assert_eq!(s.subscriber_count(), 1);
+        s.unsubscribe("tail");
+        assert_eq!(s.subscriber_count(), 0);
+        // further events don't accumulate anywhere
+        s.create(t("app/z"), &[]).unwrap();
+        let (evs, _) = s.subscribe_poll("tail", "app/", 0);
+        assert!(evs.is_empty(), "re-attach starts fresh");
+    }
+
+    #[test]
+    fn slow_subscriber_drops_oldest_and_counts() {
+        let r = Registry::enabled();
+        let mut s = SchedState::new();
+        s.set_metrics(r.clone());
+        s.subscribe_poll("tail", "", 0);
+        // each create emits Created+Ready: overflow the cap
+        let creates = SUB_QUEUE_CAP / 2 + 10;
+        for i in 0..creates {
+            s.create(t(&format!("t{i}")), &[]).unwrap();
+        }
+        let expect_dropped = (creates * 2 - SUB_QUEUE_CAP) as u64;
+        // drain fully in bounded batches
+        let mut got = 0usize;
+        let mut dropped = 0u64;
+        loop {
+            let (evs, d) = s.subscribe_poll("tail", "", 4096);
+            dropped += d;
+            if evs.is_empty() {
+                break;
+            }
+            got += evs.len();
+        }
+        assert_eq!(got, SUB_QUEUE_CAP, "queue holds exactly the cap");
+        assert_eq!(dropped, expect_dropped);
+        assert_eq!(r.counter(Counter::SubscribeDropped), expect_dropped);
+        // the oldest events went first: the survivor stream starts late
+        let (evs, _) = s.subscribe_poll("tail", "", 1);
+        assert!(evs.is_empty());
+    }
+
+    #[test]
+    fn subscribe_batch_size_is_respected() {
+        let mut s = SchedState::new();
+        s.subscribe_poll("tail", "", 0);
+        for i in 0..10 {
+            s.create(t(&format!("t{i}")), &[]).unwrap();
+        }
+        let (evs, _) = s.subscribe_poll("tail", "", 3);
+        assert_eq!(evs.len(), 3);
+        let (evs, _) = s.subscribe_poll("tail", "", 0);
+        assert_eq!(evs.len(), 17, "default batch takes the rest (20 total)");
     }
 }

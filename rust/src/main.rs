@@ -64,6 +64,10 @@ commands:
                 (refreshing full-screen hub view: queue depth, workers,
                  tasks/sec, steal-latency quantiles)
   dhub status   --connect addr:port [--watch] [--interval-ms MS] [--iters N]
+  dhub tail     --connect addr:port [--follow] [--task PREFIX] [--json]
+                [--interval-ms MS]
+                (live lifecycle event stream; without --follow, prints one
+                 poll interval's worth of events and exits)
   dwork serve   --bind addr:port [--db dir] [--snapshot-every N]
   dwork worker  --connect addr:port [--name w0] [--prefetch N] [--artifacts-dir D]
   dwork create  --connect addr:port --name task [--dep t1,t2]
@@ -86,6 +90,12 @@ commands:
                   [--calibration profile.toml]
   workflow submit --file wf.yaml --connect addr:port   (ingest + detach)
   trace report    --file trace.jsonl      (Fig-5-style time breakdown)
+  trace profile   [trace.jsonl] [--file trace.jsonl] [--json]
+                  [--chrome out.json]
+                  (makespan attribution: the realized critical path with
+                   per-task blame, queue/launch/compute/drain phases,
+                   straggler flags; --chrome writes a chrome://tracing /
+                   Perfetto-loadable trace-event file)
   trace compare   --file wf.yaml [--ranks N] [--seed S] [--trace t.jsonl]
                   [--calibration profile.toml]
                   (selector-predicted vs DES-simulated vs measured makespan)
@@ -210,7 +220,7 @@ fn serve_hub(
 /// workflow-aware workers that decode task bodies as payloads.
 fn cmd_dhub(argv: &[String]) -> Result<()> {
     let Some(verb) = argv.first().map(String::as_str) else {
-        bail!("dhub needs a verb: serve | worker | top | status\n{USAGE}");
+        bail!("dhub needs a verb: serve | worker | top | status | tail\n{USAGE}");
     };
     let rest = &argv[1..];
     match verb {
@@ -316,7 +326,75 @@ fn cmd_dhub(argv: &[String]) -> Result<()> {
                 Ok(())
             }
         }
-        other => bail!("unknown dhub verb {other:?} (serve | worker | top | status)"),
+        "tail" => {
+            let spec = [
+                Flag { name: "connect", help: "hub address", takes_value: true, default: Some("127.0.0.1:7117") },
+                Flag { name: "follow", help: "keep polling until the hub drains (ctrl-c to stop)", takes_value: false, default: None },
+                Flag { name: "task", help: "only events whose task name starts with this prefix", takes_value: true, default: None },
+                Flag { name: "json", help: "one trace-JSONL event object per line", takes_value: false, default: None },
+                Flag { name: "interval-ms", help: "poll interval, milliseconds", takes_value: true, default: Some("100") },
+            ];
+            let args = parse(rest, &spec)?;
+            tail_hub(
+                args.get("connect").unwrap(),
+                args.get("task").unwrap_or(""),
+                args.has("follow"),
+                args.has("json"),
+                Duration::from_millis(args.get_usize("interval-ms", 100)? as u64),
+            )
+        }
+        other => bail!("unknown dhub verb {other:?} (serve | worker | top | status | tail)"),
+    }
+}
+
+/// `dhub tail`: attach a live-event subscription to a running hub and
+/// print lifecycle events as they happen.  The subscription registers on
+/// the first long-poll, so only events after attach appear.  Without
+/// `--follow` one poll interval's worth of events is printed (a sample
+/// window for scripting); with it, polling continues until the hub
+/// reports the graph drained.  Server-side overflow (this tail polling
+/// too slowly for the event rate) surfaces as a stderr warning with the
+/// dropped count — the hub never blocks on us.
+fn tail_hub(
+    addr: &str,
+    prefix: &str,
+    follow: bool,
+    json: bool,
+    interval: Duration,
+) -> Result<()> {
+    let conn = TcpClient::connect(addr)?;
+    let name = format!("tail-{}", std::process::id());
+    // exit_on_drop detaches the subscription when we leave
+    let mut c = Client::new(Box::new(conn), name).exit_on_drop(true);
+    let first = c.subscribe(prefix, 0)?;
+    if first.done && !follow {
+        return Ok(()); // drained hub: nothing will ever arrive
+    }
+    loop {
+        std::thread::sleep(interval);
+        let batch = c.subscribe(prefix, 0)?;
+        if batch.dropped > 0 {
+            eprintln!(
+                "warning: {} events dropped server-side (tail polling too slowly)",
+                batch.dropped
+            );
+        }
+        for ev in &batch.events {
+            if json {
+                println!("{}", trace::event_line(ev));
+            } else {
+                println!(
+                    "{:>14.6}s  {:<9} {:<32} {}",
+                    ev.t,
+                    ev.kind.name(),
+                    ev.task,
+                    ev.who
+                );
+            }
+        }
+        if !follow || batch.done {
+            return Ok(());
+        }
     }
 }
 
@@ -867,9 +945,12 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
                                    (workers use their own `dhub worker --dir`)");
                     }
                     if trace_path.is_some() {
-                        bail!(
-                            "--trace is a local-driver flag; with --connect, trace the hub \
-                             (`dhub serve --trace`) and/or the workers (`dhub worker --trace`)"
+                        // a remote campaign is traced by subscribing to
+                        // the hub's live event stream while we await the
+                        // drain; the local tracer fills from that feed
+                        println!(
+                            "tracing remote campaign via live hub subscription \
+                             (server-side timestamps)"
                         );
                     }
                     println!(
@@ -934,7 +1015,7 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
 
 fn cmd_trace(argv: &[String]) -> Result<()> {
     let Some(verb) = argv.first().map(String::as_str) else {
-        bail!("trace needs a verb: report | compare\n{USAGE}");
+        bail!("trace needs a verb: report | profile | compare\n{USAGE}");
     };
     let rest = &argv[1..];
     match verb {
@@ -957,6 +1038,39 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
             }
             print!("{}", trace::TraceReport::from_events(&events).render(&source));
             print!("{}", trace::render_metrics(&samples));
+            Ok(())
+        }
+        "profile" => {
+            let spec = [
+                Flag { name: "file", help: "trace JSONL path", takes_value: true, default: Some("trace.jsonl") },
+                Flag { name: "json", help: "emit the profile as one JSON object", takes_value: false, default: None },
+                Flag { name: "chrome", help: "also write a Chrome trace-event file (chrome://tracing, ui.perfetto.dev)", takes_value: true, default: None },
+            ];
+            let args = parse(rest, &spec)?;
+            // positional form (`trace profile t.jsonl`) wins over --file
+            let path = match args.positional.first() {
+                Some(p) => Path::new(p.as_str()),
+                None => Path::new(args.get("file").unwrap()),
+            };
+            let (source, events, _samples) = trace::read_trace_full(path)?;
+            if let Err(e) = trace::validate(&events) {
+                eprintln!(
+                    "warning: trace {path:?} is incomplete or malformed ({e}); \
+                     profiling the events present"
+                );
+            }
+            let profile = trace::TraceProfile::from_events(&events);
+            if let Some(out) = args.get("chrome") {
+                std::fs::write(out, trace::chrome_trace(&events, &profile))
+                    .with_context(|| format!("writing {out:?}"))?;
+                // stderr so `--json > profile.json` stays clean JSON
+                eprintln!("chrome trace: {out} (load in chrome://tracing or ui.perfetto.dev)");
+            }
+            if args.has("json") {
+                println!("{}", profile.to_json(&source));
+            } else {
+                print!("{}", profile.render(&source));
+            }
             Ok(())
         }
         "compare" => {
@@ -987,7 +1101,7 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
             print!("{}", trace::render_comparison(&g.name, ranks, &rows));
             Ok(())
         }
-        other => bail!("unknown trace verb {other:?} (report | compare)"),
+        other => bail!("unknown trace verb {other:?} (report | profile | compare)"),
     }
 }
 

@@ -67,10 +67,14 @@ pub enum Counter {
     DriverTasksLaunched,
     DriverTasksCompleted,
     DriverTasksFailed,
+    /// live event streaming (`Request::Subscribe` long-polls)
+    ReqSubscribe,
+    /// events discarded because a subscriber queue hit its cap
+    SubscribeDropped,
 }
 
 impl Counter {
-    pub const ALL: [Counter; 25] = [
+    pub const ALL: [Counter; 27] = [
         Counter::ReqCreate,
         Counter::ReqSteal,
         Counter::ReqStealN,
@@ -96,6 +100,8 @@ impl Counter {
         Counter::DriverTasksLaunched,
         Counter::DriverTasksCompleted,
         Counter::DriverTasksFailed,
+        Counter::ReqSubscribe,
+        Counter::SubscribeDropped,
     ];
 
     pub fn name(self) -> &'static str {
@@ -125,6 +131,8 @@ impl Counter {
             Counter::DriverTasksLaunched => "driver_tasks_launched",
             Counter::DriverTasksCompleted => "driver_tasks_completed",
             Counter::DriverTasksFailed => "driver_tasks_failed",
+            Counter::ReqSubscribe => "requests_subscribe",
+            Counter::SubscribeDropped => "subscribe_dropped",
         }
     }
 }
@@ -170,10 +178,12 @@ pub enum Series {
     StealRtt,
     /// worker-side payload execution time
     TaskCompute,
+    /// hub-side service time for Subscribe long-polls
+    ServiceSubscribe,
 }
 
 impl Series {
-    pub const ALL: [Series; 10] = [
+    pub const ALL: [Series; 11] = [
         Series::ServiceCreate,
         Series::ServiceSteal,
         Series::ServiceComplete,
@@ -184,6 +194,7 @@ impl Series {
         Series::ServiceMetrics,
         Series::StealRtt,
         Series::TaskCompute,
+        Series::ServiceSubscribe,
     ];
 
     pub fn name(self) -> &'static str {
@@ -198,6 +209,7 @@ impl Series {
             Series::ServiceMetrics => "service_metrics",
             Series::StealRtt => "steal_rtt",
             Series::TaskCompute => "task_compute",
+            Series::ServiceSubscribe => "service_subscribe",
         }
     }
 }
@@ -391,8 +403,10 @@ impl HistSnapshot {
         (1u128 << i) as f64 * 1e-9
     }
 
-    /// Approximate quantile (0..=1): the upper bound of the bucket the
-    /// rank falls in.  Log2 buckets make this exact to within 2x.
+    /// Approximate quantile (0..=1): linearly interpolated within the
+    /// log2 bucket the rank falls in.  Assuming observations spread
+    /// uniformly inside a bucket this is far tighter than the bucket's
+    /// upper bound (which alone can overestimate by 2x).
     pub fn quantile(&self, q: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
@@ -400,9 +414,17 @@ impl HistSnapshot {
         let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
         let mut cum = 0u64;
         for (i, &b) in self.buckets.iter().enumerate() {
+            let before = cum;
             cum += b;
             if cum >= rank {
-                return HistSnapshot::bucket_le_s(i);
+                let lo = if i == 0 {
+                    0.0
+                } else {
+                    HistSnapshot::bucket_le_s(i - 1)
+                };
+                let hi = HistSnapshot::bucket_le_s(i);
+                let frac = (rank - before) as f64 / b as f64;
+                return lo + frac * (hi - lo);
             }
         }
         HistSnapshot::bucket_le_s(self.buckets.len().saturating_sub(1))
@@ -677,5 +699,35 @@ mod tests {
         // all quantiles of a single observation agree
         assert_eq!(h.quantile(0.0), h.quantile(1.0));
         assert!(h.mean_s() > 0.0);
+    }
+
+    #[test]
+    fn quantile_interpolates_within_a_bucket() {
+        // 512 observations of 512..1024 ns all land in the same log2
+        // bucket ([512, 1024) ns, index 10).  Before interpolation every
+        // quantile collapsed to the bucket's upper bound (1024 ns ≈ 2x
+        // the true median); interpolation spreads the mass uniformly.
+        let r = Registry::enabled();
+        for ns in 512..1024u64 {
+            r.observe(Series::TaskCompute, Duration::from_nanos(ns));
+        }
+        let snap = r.snapshot();
+        let h = snap.hist("task_compute").unwrap();
+        assert_eq!(h.count, 512);
+        // rank(q) = ceil(q * 512); lo = 512 ns, hi = 1024 ns, so
+        // quantile(q) = (512 + rank(q)) ns exactly.
+        for &(q, rank) in &[(0.25, 128u64), (0.5, 256), (0.75, 384), (0.99, 507)] {
+            let want = (512 + rank) as f64 * 1e-9;
+            let got = h.quantile(q);
+            assert!(
+                (got - want).abs() < 1e-12,
+                "q={q}: got {got:e}, want {want:e}"
+            );
+        }
+        // strictly increasing across distinct ranks, and never the old
+        // flat upper bound for mid-bucket quantiles
+        assert!(h.quantile(0.25) < h.quantile(0.5));
+        assert!(h.quantile(0.5) < h.quantile(0.75));
+        assert!(h.quantile(0.5) < HistSnapshot::bucket_le_s(10));
     }
 }

@@ -30,6 +30,7 @@
 //! must be dumb enough to survive (JSON Lines, one event per line).
 
 pub mod compare;
+pub mod profile;
 pub mod report;
 pub mod samples;
 pub mod sim;
@@ -42,6 +43,7 @@ use std::time::Instant;
 use anyhow::{bail, Context as _, Result};
 
 pub use compare::{compare_backends, render_comparison, BackendComparison};
+pub use profile::{chrome_trace, PathLink, TraceProfile};
 pub use report::{render_metrics, TraceReport, WorkerRow};
 pub use samples::{graph_from_trace, PhaseSamples};
 pub use sim::simulate_workflow;
@@ -53,13 +55,16 @@ pub use sim::simulate_workflow;
 /// simulated traces share it byte-for-byte.  `/2` added the
 /// worker-scoped `connected` kind; `/3` added interleaved metric-sample
 /// lines (`{"metric":…,"t":…,"value":…}`, e.g. periodic queue-depth
-/// folds from the live [`crate::metrics`] registry); readers accept
-/// every schema listed in [`ACCEPTED_SCHEMAS`].
-pub const SCHEMA: &str = "threesched-trace/3";
+/// folds from the live [`crate::metrics`] registry); `/4` added the
+/// per-writer monotone `seq` field, so merged multi-writer traces sort
+/// stably at equal timestamps (readers default a missing `seq` to 0);
+/// readers accept every schema listed in [`ACCEPTED_SCHEMAS`].
+pub const SCHEMA: &str = "threesched-trace/4";
 
 /// Schemas [`parse_jsonl`] accepts: the current one plus every older
 /// version whose events are a subset of the current vocabulary.
-pub const ACCEPTED_SCHEMAS: [&str; 3] = ["threesched-trace/1", "threesched-trace/2", SCHEMA];
+pub const ACCEPTED_SCHEMAS: [&str; 4] =
+    ["threesched-trace/1", "threesched-trace/2", "threesched-trace/3", SCHEMA];
 
 /// One step of a task's lifecycle.  The same vocabulary covers all three
 /// coordinators and the DES models:
@@ -137,6 +142,10 @@ pub struct TaskEvent {
     /// executing party when known ("w0", "rank3", …); empty for
     /// scheduler-side bookkeeping events
     pub who: String,
+    /// per-writer monotone sequence number (schema `/4`): breaks ties
+    /// between equal timestamps when merging multi-writer traces.  0 for
+    /// events loaded from pre-`/4` traces.
+    pub seq: u64,
 }
 
 /// One scalar metric sample folded into the trace stream (schema `/3`):
@@ -161,6 +170,10 @@ enum Sink {
 
 struct Inner {
     epoch: Instant,
+    /// next `seq` to stamp: per-writer monotone, shared across clones
+    /// (one writer = one sink), so a merged multi-writer trace sorts
+    /// stably by `(t, seq)` within each writer's stream
+    seq: std::sync::atomic::AtomicU64,
     sink: Mutex<Sink>,
 }
 
@@ -188,6 +201,7 @@ impl Tracer {
     pub fn memory() -> Tracer {
         Tracer(Some(Arc::new(Inner {
             epoch: Instant::now(),
+            seq: std::sync::atomic::AtomicU64::new(0),
             sink: Mutex::new(Sink::Memory { events: Vec::new(), metrics: Vec::new() }),
         })))
     }
@@ -205,6 +219,7 @@ impl Tracer {
         w.flush()?;
         Ok(Tracer(Some(Arc::new(Inner {
             epoch: Instant::now(),
+            seq: std::sync::atomic::AtomicU64::new(0),
             sink: Mutex::new(Sink::File(w)),
         }))))
     }
@@ -227,7 +242,11 @@ impl Tracer {
     pub fn record(&self, task: &str, kind: EventKind, who: &str) {
         if let Some(inner) = &self.0 {
             let t = inner.epoch.elapsed().as_secs_f64();
-            Self::push(inner, TaskEvent { task: task.to_string(), kind, t, who: who.to_string() });
+            let seq = inner.seq.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            Self::push(
+                inner,
+                TaskEvent { task: task.to_string(), kind, t, who: who.to_string(), seq },
+            );
         }
     }
 
@@ -236,7 +255,11 @@ impl Tracer {
     #[inline]
     pub fn record_at(&self, t: f64, task: &str, kind: EventKind, who: &str) {
         if let Some(inner) = &self.0 {
-            Self::push(inner, TaskEvent { task: task.to_string(), kind, t, who: who.to_string() });
+            let seq = inner.seq.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            Self::push(
+                inner,
+                TaskEvent { task: task.to_string(), kind, t, who: who.to_string(), seq },
+            );
         }
     }
 
@@ -310,7 +333,7 @@ impl Tracer {
 
 // ------------------------------------------------------------------- JSONL
 
-fn json_escape(s: &str) -> String {
+pub(crate) fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {
@@ -387,13 +410,17 @@ fn header_line(source: &str) -> String {
     format!("{{\"schema\":\"{SCHEMA}\",\"source\":\"{}\"}}", json_escape(source))
 }
 
-fn event_line(ev: &TaskEvent) -> String {
+/// One event as its trace-JSONL line (no trailing newline) — the same
+/// encoding [`to_jsonl`] writes, exposed so live consumers (`dhub tail
+/// --json`) emit stream-compatible records.
+pub fn event_line(ev: &TaskEvent) -> String {
     format!(
-        "{{\"task\":\"{}\",\"kind\":\"{}\",\"t\":{:.9},\"who\":\"{}\"}}",
+        "{{\"task\":\"{}\",\"kind\":\"{}\",\"t\":{:.9},\"who\":\"{}\",\"seq\":{}}}",
         json_escape(&ev.task),
         ev.kind.name(),
         ev.t,
-        json_escape(&ev.who)
+        json_escape(&ev.who),
+        ev.seq
     )
 }
 
@@ -461,46 +488,84 @@ pub fn parse_jsonl(text: &str) -> Result<(String, Vec<TaskEvent>)> {
 
 /// Parse a JSONL trace keeping the schema-`/3` metric samples:
 /// returns (source, events, metric samples).
+///
+/// A truncated *final* line — the file does not end in a newline, so the
+/// writer died (or is still writing) mid-record — is skipped with a
+/// warning rather than erroring: a killed worker or a live `--follow`
+/// race must not make the rest of the trace unreadable.  A malformed
+/// line anywhere else is still an error.
 pub fn parse_jsonl_full(text: &str) -> Result<(String, Vec<TaskEvent>, Vec<MetricSample>)> {
     let mut source = String::from("unknown");
     let mut events = Vec::new();
     let mut metrics = Vec::new();
-    for (n, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        if line.contains("\"schema\":") {
-            let schema = json_str_field(line, "schema").unwrap_or_default();
-            if !ACCEPTED_SCHEMAS.contains(&schema.as_str()) {
-                bail!("line {}: unsupported trace schema {schema:?} (want {SCHEMA})", n + 1);
+    let lines: Vec<&str> = text.lines().collect();
+    let unterminated_last = !text.is_empty() && !text.ends_with('\n');
+    for (n, raw) in lines.iter().enumerate() {
+        let line = raw.trim();
+        let truncatable = unterminated_last && n + 1 == lines.len();
+        match parse_line(line, &mut source, &mut events, &mut metrics) {
+            Ok(()) => {}
+            Err(e) if truncatable => {
+                eprintln!(
+                    "warning: trace line {} is a truncated partial record ({e}); skipping it",
+                    n + 1
+                );
             }
-            if let Some(s) = json_str_field(line, "source") {
-                source = s;
-            }
-            continue;
+            Err(e) => return Err(e.context(format!("line {}", n + 1))),
         }
-        // metric lines have no "task"/"kind": route them first
-        if let Some(name) = json_str_field(line, "metric") {
-            let t = json_num_field(line, "t")
-                .with_context(|| format!("line {}: metric missing \"t\"", n + 1))?;
-            let value = json_num_field(line, "value")
-                .with_context(|| format!("line {}: metric missing \"value\"", n + 1))?;
-            metrics.push(MetricSample { name, t, value });
-            continue;
-        }
-        let task = json_str_field(line, "task")
-            .with_context(|| format!("line {}: missing \"task\"", n + 1))?;
-        let kind_name = json_str_field(line, "kind")
-            .with_context(|| format!("line {}: missing \"kind\"", n + 1))?;
-        let kind = EventKind::from_name(&kind_name)
-            .with_context(|| format!("line {}: unknown event kind {kind_name:?}", n + 1))?;
-        let t = json_num_field(line, "t")
-            .with_context(|| format!("line {}: missing \"t\"", n + 1))?;
-        let who = json_str_field(line, "who").unwrap_or_default();
-        events.push(TaskEvent { task, kind, t, who });
     }
     Ok((source, events, metrics))
+}
+
+/// Parse one trace line into whichever of `source`/`events`/`metrics` it
+/// belongs to.  Blank lines are a no-op.
+fn parse_line(
+    line: &str,
+    source: &mut String,
+    events: &mut Vec<TaskEvent>,
+    metrics: &mut Vec<MetricSample>,
+) -> Result<()> {
+    if line.is_empty() {
+        return Ok(());
+    }
+    if line.contains("\"schema\":") {
+        let schema = json_str_field(line, "schema").unwrap_or_default();
+        if !ACCEPTED_SCHEMAS.contains(&schema.as_str()) {
+            bail!("unsupported trace schema {schema:?} (want {SCHEMA})");
+        }
+        if let Some(s) = json_str_field(line, "source") {
+            *source = s;
+        }
+        return Ok(());
+    }
+    // metric lines have no "task"/"kind": route them first
+    if let Some(name) = json_str_field(line, "metric") {
+        let t = json_num_field(line, "t").context("metric missing \"t\"")?;
+        let value = json_num_field(line, "value").context("metric missing \"value\"")?;
+        metrics.push(MetricSample { name, t, value });
+        return Ok(());
+    }
+    let task = json_str_field(line, "task").context("missing \"task\"")?;
+    let kind_name = json_str_field(line, "kind").context("missing \"kind\"")?;
+    let kind = EventKind::from_name(&kind_name)
+        .with_context(|| format!("unknown event kind {kind_name:?}"))?;
+    let t = json_num_field(line, "t").context("missing \"t\"")?;
+    let who = json_str_field(line, "who").unwrap_or_default();
+    // pre-/4 traces have no seq: default 0 (stable sorts fall back to
+    // stream order for those)
+    let seq = json_num_field(line, "seq").map(|s| s.max(0.0) as u64).unwrap_or(0);
+    events.push(TaskEvent { task, kind, t, who, seq });
+    Ok(())
+}
+
+/// Sort a (possibly merged, multi-writer) event stream into a stable
+/// global order: by time, then per-writer `seq`, then writer — so equal
+/// timestamps from one writer keep their emission order and ties across
+/// writers break deterministically.
+pub fn sort_events(events: &mut [TaskEvent]) {
+    events.sort_by(|a, b| {
+        a.t.total_cmp(&b.t).then_with(|| a.seq.cmp(&b.seq)).then_with(|| a.who.cmp(&b.who))
+    });
 }
 
 /// Load a trace file written by [`write_trace`] or a streaming sink.
@@ -667,7 +732,7 @@ mod tests {
     use super::*;
 
     fn ev(task: &str, kind: EventKind, t: f64, who: &str) -> TaskEvent {
-        TaskEvent { task: task.into(), kind, t, who: who.into() }
+        TaskEvent { task: task.into(), kind, t, who: who.into(), seq: 0 }
     }
 
     fn lifecycle(task: &str, t0: f64, ok: bool) -> Vec<TaskEvent> {
@@ -922,6 +987,72 @@ mod tests {
         assert_eq!(ms[0].value, 5.0);
         assert!(ms[0].t >= evs[0].t && ms[0].t <= evs[1].t, "sample between the events");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn seq_is_per_writer_monotone_and_roundtrips() {
+        let t = Tracer::memory();
+        let t2 = t.clone();
+        t.record("a", EventKind::Created, "");
+        t2.record("a", EventKind::Ready, "");
+        t.record("a", EventKind::Finished, "w0");
+        let evs = t.drain();
+        assert_eq!(evs.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![0, 1, 2]);
+        let text = to_jsonl("dwork", &evs);
+        assert!(text.contains("\"seq\":2"));
+        let (_, parsed) = parse_jsonl(&text).unwrap();
+        assert_eq!(parsed, evs);
+    }
+
+    #[test]
+    fn truncated_final_line_is_skipped_not_fatal() {
+        // a killed writer (or a live --follow race) leaves a partial
+        // final record with no trailing newline
+        let text = format!(
+            "{}\n{}\n{{\"task\":\"b\",\"ki",
+            header_line("dwork"),
+            event_line(&ev("a", EventKind::Created, 0.0, ""))
+        );
+        let (source, evs) = parse_jsonl(&text).unwrap();
+        assert_eq!(source, "dwork");
+        assert_eq!(evs.len(), 1, "the complete record survives");
+        // but a malformed line in the MIDDLE is still an error
+        let bad = format!(
+            "{}\n{{\"task\":\"b\",\"ki\n{}\n",
+            header_line("dwork"),
+            event_line(&ev("a", EventKind::Created, 0.0, ""))
+        );
+        assert!(parse_jsonl(&bad).is_err());
+        // and so is a newline-terminated garbage final line
+        let bad2 = format!("{}\n{{\"task\":\"b\",\"ki\n", header_line("dwork"));
+        assert!(parse_jsonl(&bad2).is_err());
+    }
+
+    #[test]
+    fn sort_events_is_stable_across_merged_writers() {
+        // two writers emitted at the same timestamp: per-writer seq keeps
+        // each stream's emission order; the writer name breaks cross-
+        // writer ties deterministically
+        let mut evs = vec![
+            TaskEvent { task: "x".into(), kind: EventKind::Started, t: 1.0, who: "w1".into(), seq: 1 },
+            TaskEvent { task: "x".into(), kind: EventKind::Launched, t: 1.0, who: "w1".into(), seq: 0 },
+            TaskEvent { task: "y".into(), kind: EventKind::Started, t: 1.0, who: "w0".into(), seq: 0 },
+            TaskEvent { task: "z".into(), kind: EventKind::Created, t: 0.5, who: "".into(), seq: 9 },
+        ];
+        sort_events(&mut evs);
+        assert_eq!(evs[0].task, "z");
+        assert_eq!((evs[1].kind, evs[1].who.as_str()), (EventKind::Started, "w0"));
+        assert_eq!((evs[2].kind, evs[2].who.as_str()), (EventKind::Launched, "w1"));
+        assert_eq!((evs[3].kind, evs[3].who.as_str()), (EventKind::Started, "w1"));
+    }
+
+    #[test]
+    fn pre_seq_schema_defaults_seq_to_zero() {
+        let text = "{\"schema\":\"threesched-trace/3\",\"source\":\"dwork\"}\n\
+                    {\"task\":\"a\",\"kind\":\"created\",\"t\":0.000000000,\"who\":\"\"}\n";
+        let (_, evs) = parse_jsonl(text).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].seq, 0);
     }
 
     #[test]

@@ -1,0 +1,760 @@
+//! Makespan attribution: the *realized* critical path of a finished run.
+//!
+//! `trace report` answers "where did the aggregate time go"; this module
+//! answers the sharper question every perf PR needs — *which chain of
+//! tasks and scheduler phases actually bounded the makespan*.  From any
+//! lifecycle trace (real or DES) it reconstructs a dependency-respecting
+//! chain of `Created→Ready→Launched→Started→Finished` intervals whose
+//! spans telescope to exactly the measured makespan, attributes each
+//! link to the Fig-5 phases (queue wait / launch / compute) plus a drain
+//! residual, and reports per-link blame percentages, finish-slack
+//! statistics for off-path tasks, and MAD-based straggler flags.
+//!
+//! Traces carry no dependency edges, so the walk uses the standard
+//! realized-path reconstruction: walking backward from the last
+//! finisher, a task's binding predecessor is either the latest task to
+//! finish at-or-before its `Ready` (the dependency that released it) or
+//! the latest same-worker task to finish at-or-before its `Launched`
+//! (the task that held its executor) — whichever finished *later* is
+//! the constraint that actually gated it.  On DES traces this is exact
+//! (a dependency's `Finished` and its successor's `Ready` share one
+//! virtual instant); on wall-clock traces it is the tightest
+//! reconstruction the event stream supports.
+//!
+//! [`chrome_trace`] renders the same picture as Chrome trace-event JSON
+//! (`chrome://tracing` / Perfetto): one row per worker, phase-colored
+//! slices, the critical path chained with flow arrows.
+
+use std::collections::{HashMap, HashSet};
+
+use super::{json_escape, EventKind, TaskEvent};
+
+/// Per-task observation: the final attempt's lifecycle timestamps.
+#[derive(Clone, Debug, Default)]
+struct Obs {
+    created: Option<f64>,
+    ready: Option<f64>,
+    launched: Option<f64>,
+    started: Option<f64>,
+    finish: Option<f64>,
+    failed: bool,
+    who: String,
+}
+
+/// How a link joined the critical path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkVia {
+    /// chain root: nothing observable gated this task
+    Root,
+    /// released by a dependency finishing (latest finish at its `Ready`)
+    Dep,
+    /// gated by its worker finishing a previous task
+    Worker,
+}
+
+impl LinkVia {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinkVia::Root => "root",
+            LinkVia::Dep => "dep",
+            LinkVia::Worker => "worker",
+        }
+    }
+}
+
+/// One link of the realized critical path.  The link covers
+/// `[start_s, finish_s]` where `start_s` is the previous link's finish
+/// (0 for the root), so link spans telescope to the last finish time.
+#[derive(Clone, Debug)]
+pub struct PathLink {
+    pub task: String,
+    pub who: String,
+    pub via: LinkVia,
+    /// span start: previous link's finish (0 for the root link)
+    pub start_s: f64,
+    pub finish_s: f64,
+    /// span portion before the executor had the task (start → Launched)
+    pub queue_s: f64,
+    /// Launched → Started
+    pub launch_s: f64,
+    /// Started (or Launched when the trace has no Started) → terminal
+    pub compute_s: f64,
+    /// this link's share of the makespan, in percent
+    pub blame_pct: f64,
+}
+
+impl PathLink {
+    pub fn span_s(&self) -> f64 {
+        self.finish_s - self.start_s
+    }
+}
+
+/// A task whose compute duration is a MAD outlier.
+#[derive(Clone, Debug)]
+pub struct Straggler {
+    pub task: String,
+    pub who: String,
+    pub compute_s: f64,
+    /// median + 3.5 robust sigmas at the time of flagging
+    pub threshold_s: f64,
+}
+
+/// The profiler output: critical path + phase attribution + off-path
+/// slack + stragglers.  Invariant (tested): the link spans plus
+/// `drain_s` sum to exactly `makespan_s`.
+#[derive(Clone, Debug, Default)]
+pub struct TraceProfile {
+    pub makespan_s: f64,
+    /// tasks observed with a terminal event
+    pub tasks: usize,
+    /// chronological (root first)
+    pub path: Vec<PathLink>,
+    /// makespan minus the last link's finish: run teardown the path
+    /// cannot see (worker exits, final bookkeeping)
+    pub drain_s: f64,
+    /// phase totals over the path links
+    pub queue_s: f64,
+    pub launch_s: f64,
+    pub compute_s: f64,
+    /// per-task finish slack (makespan − finish) for tasks *off* the
+    /// path, sorted ascending
+    pub off_path_slack_s: Vec<f64>,
+    pub stragglers: Vec<Straggler>,
+}
+
+/// Fold the stream into per-task final-attempt observations.  `Requeued`
+/// resets the attempt (the final attempt wins, matching the report
+/// module's cursor discipline).
+fn collect(events: &[TaskEvent]) -> (HashMap<&str, Obs>, f64) {
+    let mut obs: HashMap<&str, Obs> = HashMap::new();
+    let mut makespan = 0.0f64;
+    for ev in events {
+        makespan = makespan.max(ev.t);
+        if ev.kind == EventKind::Connected {
+            continue;
+        }
+        let o = obs.entry(&ev.task).or_default();
+        match ev.kind {
+            EventKind::Created => o.created = Some(ev.t),
+            EventKind::Ready => o.ready = Some(ev.t),
+            EventKind::Launched => o.launched = Some(ev.t),
+            EventKind::Started => o.started = Some(ev.t),
+            EventKind::Finished | EventKind::Failed => {
+                o.finish = Some(ev.t);
+                o.failed = ev.kind == EventKind::Failed;
+            }
+            EventKind::Requeued => {
+                o.ready = None;
+                o.launched = None;
+                o.started = None;
+            }
+            EventKind::Connected => unreachable!(),
+        }
+        if !ev.who.is_empty() && !ev.kind.is_terminal() {
+            o.who = ev.who.clone();
+        } else if !ev.who.is_empty() && o.who.is_empty() {
+            o.who = ev.who.clone();
+        }
+    }
+    (obs, makespan)
+}
+
+/// Comparison slop for "finished at the same instant as": DES traces
+/// put a dependency's finish and its successor's ready at one virtual
+/// time; wall-clock traces are strictly ordered but float formatting
+/// wobbles in the last bits.
+fn eps_at(t: f64) -> f64 {
+    1e-9 * t.abs().max(1.0)
+}
+
+impl TraceProfile {
+    /// Profile an event stream.  Works on any trace [`super::validate`]
+    /// accepts, including partial views (no `Started`, skipped tasks).
+    pub fn from_events(events: &[TaskEvent]) -> TraceProfile {
+        let (obs, makespan_s) = collect(events);
+        // finished tasks, sorted by finish time — the walk's search index
+        let mut by_finish: Vec<(&str, &Obs)> = obs
+            .iter()
+            .filter(|(_, o)| o.finish.is_some())
+            .map(|(k, o)| (*k, o))
+            .collect();
+        by_finish.sort_by(|a, b| a.1.finish.unwrap().total_cmp(&b.1.finish.unwrap()));
+        let tasks = by_finish.len();
+        let mut profile = TraceProfile { makespan_s, tasks, ..TraceProfile::default() };
+        let Some(&(last_task, _)) = by_finish.last() else {
+            profile.drain_s = makespan_s;
+            return profile;
+        };
+
+        // ------------------------------------------------ backward walk
+        // latest finisher at-or-before `t`, optionally restricted to one
+        // worker, excluding `not` (the task being explained)
+        let latest_before = |t: f64, who: Option<&str>, not: &str| -> Option<&str> {
+            let hi = by_finish.partition_point(|(_, o)| o.finish.unwrap() <= t + eps_at(t));
+            by_finish[..hi]
+                .iter()
+                .rev()
+                .find(|(name, o)| *name != not && who.map_or(true, |w| o.who == w))
+                .map(|(name, _)| *name)
+        };
+        let mut chain: Vec<(&str, LinkVia)> = Vec::new();
+        let mut visited: HashSet<&str> = HashSet::new();
+        let mut cur = last_task;
+        loop {
+            visited.insert(cur);
+            let o = &obs[cur];
+            let fin = o.finish.unwrap();
+            // the dependency that released us vs the task that held our
+            // worker: the LATER finisher is the binding constraint
+            let dep = o.ready.and_then(|r| latest_before(r, None, cur));
+            let wrk = (!o.who.is_empty())
+                .then(|| o.launched.and_then(|l| latest_before(l, Some(&o.who), cur)))
+                .flatten();
+            let fin_of = |name: &str| obs[name].finish.unwrap();
+            let next = match (dep, wrk) {
+                (Some(d), Some(w)) => {
+                    if fin_of(w) > fin_of(d) {
+                        Some((w, LinkVia::Worker))
+                    } else {
+                        Some((d, LinkVia::Dep))
+                    }
+                }
+                (Some(d), None) => Some((d, LinkVia::Dep)),
+                (None, Some(w)) => Some((w, LinkVia::Worker)),
+                (None, None) => None,
+            };
+            match next {
+                // causality guard: a "blocker" finishing at-or-after us is
+                // noise (a parallel finisher at one instant), not a cause;
+                // `via` labels how *cur* was gated, so an accepted blocker
+                // stamps cur before the walk moves on
+                Some((n, v)) if !visited.contains(n) && fin_of(n) < fin - eps_at(fin) => {
+                    chain.push((cur, v));
+                    cur = n;
+                }
+                _ => {
+                    chain.push((cur, LinkVia::Root));
+                    break;
+                }
+            }
+        }
+        chain.reverse(); // chronological: root first
+
+        // ------------------------------------- telescoping links + phases
+        let mut lo = 0.0f64;
+        for (name, via) in &chain {
+            let o = &obs[*name];
+            let fin = o.finish.unwrap();
+            // clamp the lifecycle marks into [lo, fin]: a mark before the
+            // previous link's finish is time already attributed upstream
+            let a = o.launched.unwrap_or(lo).clamp(lo, fin);
+            let b = o.started.unwrap_or(a).clamp(a, fin);
+            profile.path.push(PathLink {
+                task: (*name).to_string(),
+                who: o.who.clone(),
+                via: *via,
+                start_s: lo,
+                finish_s: fin,
+                queue_s: a - lo,
+                launch_s: b - a,
+                compute_s: fin - b,
+                blame_pct: if makespan_s > 0.0 { 100.0 * (fin - lo) / makespan_s } else { 0.0 },
+            });
+            lo = fin;
+        }
+        profile.drain_s = makespan_s - lo;
+        for l in &profile.path {
+            profile.queue_s += l.queue_s;
+            profile.launch_s += l.launch_s;
+            profile.compute_s += l.compute_s;
+        }
+
+        // ------------------------------------------------ off-path slack
+        let on_path: HashSet<&str> = chain.iter().map(|(n, _)| *n).collect();
+        profile.off_path_slack_s = by_finish
+            .iter()
+            .filter(|(name, _)| !on_path.contains(name))
+            .map(|(_, o)| makespan_s - o.finish.unwrap())
+            .collect();
+        profile.off_path_slack_s.sort_by(f64::total_cmp);
+
+        // ------------------------------------------------ MAD stragglers
+        let mut computes: Vec<(&str, &Obs, f64)> = by_finish
+            .iter()
+            .filter_map(|(name, o)| {
+                o.started.map(|s| (*name, *o, o.finish.unwrap() - s))
+            })
+            .collect();
+        if computes.len() >= 4 {
+            let mut xs: Vec<f64> = computes.iter().map(|(_, _, c)| *c).collect();
+            xs.sort_by(f64::total_cmp);
+            let med = xs[xs.len() / 2];
+            let mut dev: Vec<f64> = xs.iter().map(|x| (x - med).abs()).collect();
+            dev.sort_by(f64::total_cmp);
+            let mad = dev[dev.len() / 2];
+            if mad > 0.0 {
+                let threshold = med + 3.5 * 1.4826 * mad;
+                computes.sort_by(|a, b| b.2.total_cmp(&a.2));
+                for (name, o, c) in computes {
+                    if c <= threshold {
+                        break;
+                    }
+                    profile.stragglers.push(Straggler {
+                        task: name.to_string(),
+                        who: o.who.clone(),
+                        compute_s: c,
+                        threshold_s: threshold,
+                    });
+                }
+            }
+        }
+        profile
+    }
+
+    /// Sum of link spans plus the drain residual — equal to
+    /// [`TraceProfile::makespan_s`] by construction (the tested
+    /// invariant).
+    pub fn critical_path_s(&self) -> f64 {
+        self.path.iter().map(|l| l.span_s()).sum::<f64>() + self.drain_s
+    }
+
+    /// drain's share of the makespan, in percent.
+    pub fn drain_pct(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            100.0 * self.drain_s / self.makespan_s
+        } else {
+            0.0
+        }
+    }
+
+    fn slack_quantile(&self, q: f64) -> f64 {
+        let s = &self.off_path_slack_s;
+        if s.is_empty() {
+            return 0.0;
+        }
+        let i = (q.clamp(0.0, 1.0) * (s.len() - 1) as f64).round() as usize;
+        s[i]
+    }
+
+    /// Human-facing report (the `trace profile` body).
+    pub fn render(&self, source: &str) -> String {
+        use super::report::fmt_t;
+        let mut out = format!(
+            "profile: source {source}, {} finished task(s), makespan {}, \
+             critical path {} link(s) + drain {} ({:.1}%)\n",
+            self.tasks,
+            fmt_t(self.makespan_s),
+            self.path.len(),
+            fmt_t(self.drain_s),
+            self.drain_pct()
+        );
+        if self.path.is_empty() {
+            return out;
+        }
+        out.push_str(
+            "  #   task                     worker        via     span      queue     launch    compute   blame\n",
+        );
+        for (i, l) in self.path.iter().enumerate() {
+            out.push_str(&format!(
+                "  {:<3} {:<24} {:<12}  {:<6} {:>9} {:>9} {:>9} {:>9}  {:>5.1}%\n",
+                i + 1,
+                truncate(&l.task, 24),
+                truncate(if l.who.is_empty() { "-" } else { &l.who }, 12),
+                l.via.name(),
+                fmt_t(l.span_s()),
+                fmt_t(l.queue_s),
+                fmt_t(l.launch_s),
+                fmt_t(l.compute_s),
+                l.blame_pct
+            ));
+        }
+        let total = self.makespan_s.max(f64::MIN_POSITIVE);
+        out.push_str(&format!(
+            "  phase totals on path: queue {:.1}%  launch {:.1}%  compute {:.1}%  drain {:.1}%\n",
+            100.0 * self.queue_s / total,
+            100.0 * self.launch_s / total,
+            100.0 * self.compute_s / total,
+            self.drain_pct()
+        ));
+        if !self.off_path_slack_s.is_empty() {
+            out.push_str(&format!(
+                "  off-path slack ({} task(s)): p50 {}  p90 {}  p99 {}  max {}\n",
+                self.off_path_slack_s.len(),
+                fmt_t(self.slack_quantile(0.50)),
+                fmt_t(self.slack_quantile(0.90)),
+                fmt_t(self.slack_quantile(0.99)),
+                fmt_t(*self.off_path_slack_s.last().unwrap()),
+            ));
+            out.push_str(&slack_histogram(&self.off_path_slack_s));
+        }
+        if !self.stragglers.is_empty() {
+            out.push_str("  straggler(s) (> median + 3.5 robust sigmas):\n");
+            for s in self.stragglers.iter().take(10) {
+                out.push_str(&format!(
+                    "    {:<24} {:<12} compute {:>9} (threshold {})\n",
+                    truncate(&s.task, 24),
+                    truncate(if s.who.is_empty() { "-" } else { &s.who }, 12),
+                    fmt_t(s.compute_s),
+                    fmt_t(s.threshold_s)
+                ));
+            }
+            if self.stragglers.len() > 10 {
+                out.push_str(&format!("    … and {} more\n", self.stragglers.len() - 10));
+            }
+        }
+        out
+    }
+
+    /// Machine-facing report (the `trace profile --json` body): one JSON
+    /// object, hand-rolled like every other writer in this crate.
+    pub fn to_json(&self, source: &str) -> String {
+        let mut out = format!(
+            "{{\"source\":\"{}\",\"makespan_s\":{:.9},\"tasks\":{},\"critical_path_s\":{:.9},\
+             \"drain_s\":{:.9},\"drain_pct\":{:.4},\"queue_s\":{:.9},\"launch_s\":{:.9},\
+             \"compute_s\":{:.9},\"path\":[",
+            json_escape(source),
+            self.makespan_s,
+            self.tasks,
+            self.critical_path_s(),
+            self.drain_s,
+            self.drain_pct(),
+            self.queue_s,
+            self.launch_s,
+            self.compute_s
+        );
+        for (i, l) in self.path.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"task\":\"{}\",\"who\":\"{}\",\"via\":\"{}\",\"start_s\":{:.9},\
+                 \"finish_s\":{:.9},\"queue_s\":{:.9},\"launch_s\":{:.9},\"compute_s\":{:.9},\
+                 \"blame_pct\":{:.4}}}",
+                json_escape(&l.task),
+                json_escape(&l.who),
+                l.via.name(),
+                l.start_s,
+                l.finish_s,
+                l.queue_s,
+                l.launch_s,
+                l.compute_s,
+                l.blame_pct
+            ));
+        }
+        out.push_str("],\"off_path\":{");
+        out.push_str(&format!(
+            "\"count\":{},\"slack_p50_s\":{:.9},\"slack_p90_s\":{:.9},\"slack_p99_s\":{:.9},\
+             \"slack_max_s\":{:.9}}}",
+            self.off_path_slack_s.len(),
+            self.slack_quantile(0.50),
+            self.slack_quantile(0.90),
+            self.slack_quantile(0.99),
+            self.off_path_slack_s.last().copied().unwrap_or(0.0)
+        ));
+        out.push_str(",\"stragglers\":[");
+        for (i, s) in self.stragglers.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"task\":\"{}\",\"who\":\"{}\",\"compute_s\":{:.9},\"threshold_s\":{:.9}}}",
+                json_escape(&s.task),
+                json_escape(&s.who),
+                s.compute_s,
+                s.threshold_s
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.chars().count() <= n {
+        s.to_string()
+    } else {
+        let cut: String = s.chars().take(n.saturating_sub(1)).collect();
+        format!("{cut}…")
+    }
+}
+
+/// Eight-bin ASCII histogram of off-path finish slack.
+fn slack_histogram(sorted: &[f64]) -> String {
+    const BINS: usize = 8;
+    let lo = sorted[0];
+    let hi = *sorted.last().unwrap();
+    let span = (hi - lo).max(f64::MIN_POSITIVE);
+    let mut counts = [0usize; BINS];
+    for &s in sorted {
+        let b = (((s - lo) / span) * BINS as f64).min(BINS as f64 - 1.0) as usize;
+        counts[b] += 1;
+    }
+    let max = counts.iter().copied().max().unwrap_or(1).max(1);
+    let mut out = String::new();
+    use super::report::fmt_t;
+    for (b, &n) in counts.iter().enumerate() {
+        let from = lo + span * b as f64 / BINS as f64;
+        let to = lo + span * (b + 1) as f64 / BINS as f64;
+        let bar = "#".repeat((n * 40).div_ceil(max).min(40).max(usize::from(n > 0)));
+        out.push_str(&format!(
+            "    [{:>9} .. {:>9}) {:>6} {}\n",
+            fmt_t(from),
+            fmt_t(to),
+            n,
+            bar
+        ));
+    }
+    out
+}
+
+// ------------------------------------------------------------ chrome export
+
+/// Render an event stream + its profile as Chrome trace-event JSON
+/// (loadable in `chrome://tracing` and Perfetto): one thread row per
+/// worker (tid 0 = scheduler-side events with an empty `who`), a
+/// phase-colored complete (`"ph":"X"`) slice per task — launch window and
+/// compute separately — and the critical path as a flow-arrow chain
+/// through its compute slices.  Timestamps are microseconds, per the
+/// trace-event spec.
+pub fn chrome_trace(events: &[TaskEvent], profile: &TraceProfile) -> String {
+    let (obs, _) = collect(events);
+    // stable worker → tid map: sorted names, tid 1.. (0 = scheduler)
+    let mut workers: Vec<&str> =
+        obs.values().map(|o| o.who.as_str()).filter(|w| !w.is_empty()).collect();
+    workers.sort_unstable();
+    workers.dedup();
+    let tid_of = |who: &str| -> usize {
+        if who.is_empty() {
+            0
+        } else {
+            1 + workers.binary_search(&who).unwrap_or(0)
+        }
+    };
+    let on_path: HashSet<&str> = profile.path.iter().map(|l| l.task.as_str()).collect();
+    let us = |t: f64| t * 1e6;
+    let mut ev_out: Vec<String> = Vec::new();
+    // process/thread metadata rows
+    ev_out.push(
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\
+         \"args\":{\"name\":\"threesched\"}}"
+            .to_string(),
+    );
+    ev_out.push(
+        "{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\
+         \"args\":{\"name\":\"scheduler\"}}"
+            .to_string(),
+    );
+    for &w in &workers {
+        ev_out.push(format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{},\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            tid_of(w),
+            json_escape(w)
+        ));
+    }
+    // one launch slice (Launched → Started) + one compute slice
+    // (Started/Launched → terminal) per finished task
+    let mut names: Vec<&str> = obs.keys().copied().collect();
+    names.sort_unstable(); // deterministic output
+    for name in names {
+        let o = &obs[name];
+        let Some(fin) = o.finish else { continue };
+        let tid = tid_of(&o.who);
+        if let (Some(l), Some(s)) = (o.launched, o.started) {
+            if s > l {
+                ev_out.push(format!(
+                    "{{\"name\":\"{}\",\"cat\":\"launch\",\"ph\":\"X\",\"pid\":1,\
+                     \"tid\":{tid},\"ts\":{:.3},\"dur\":{:.3},\
+                     \"cname\":\"thread_state_runnable\",\"args\":{{\"phase\":\"launch\"}}}}",
+                    json_escape(name),
+                    us(l),
+                    us(s - l)
+                ));
+            }
+        }
+        let start = o.started.or(o.launched).or(o.ready).or(o.created).unwrap_or(fin);
+        let cname = if o.failed {
+            "terrible"
+        } else if on_path.contains(name) {
+            "bad"
+        } else {
+            "thread_state_running"
+        };
+        ev_out.push(format!(
+            "{{\"name\":\"{}\",\"cat\":\"task\",\"ph\":\"X\",\"pid\":1,\"tid\":{tid},\
+             \"ts\":{:.3},\"dur\":{:.3},\"cname\":\"{cname}\",\
+             \"args\":{{\"phase\":\"compute\",\"on_path\":{}}}}}",
+            json_escape(name),
+            us(start),
+            us(fin - start),
+            on_path.contains(name)
+        ));
+    }
+    // critical-path flow chain through the compute slices: s → t… → f
+    if profile.path.len() >= 2 {
+        let n = profile.path.len();
+        for (i, l) in profile.path.iter().enumerate() {
+            let o = &obs[l.task.as_str()];
+            let fin = o.finish.unwrap();
+            let start = o.started.or(o.launched).or(o.ready).or(o.created).unwrap_or(fin);
+            // bind inside the compute slice (bp "e" = enclosing slice)
+            let ts = us(start + (fin - start) * 0.5);
+            let (ph, bp) = if i == 0 {
+                ("s", "")
+            } else if i + 1 == n {
+                ("f", ",\"bp\":\"e\"")
+            } else {
+                ("t", "")
+            };
+            ev_out.push(format!(
+                "{{\"name\":\"critical-path\",\"cat\":\"critical-path\",\"ph\":\"{ph}\"{bp},\
+                 \"id\":1,\"pid\":1,\"tid\":{},\"ts\":{ts:.3}}}",
+                tid_of(&o.who)
+            ));
+        }
+    }
+    format!("{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[{}]}}", ev_out.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(task: &str, kind: EventKind, t: f64, who: &str) -> TaskEvent {
+        TaskEvent { task: task.into(), kind, t, who: who.into(), seq: 0 }
+    }
+
+    fn lifecycle(task: &str, ready: f64, launched: f64, fin: f64, who: &str) -> Vec<TaskEvent> {
+        vec![
+            ev(task, EventKind::Created, 0.0, ""),
+            ev(task, EventKind::Ready, ready, ""),
+            ev(task, EventKind::Launched, launched, who),
+            ev(task, EventKind::Started, launched + 0.01, who),
+            ev(task, EventKind::Finished, fin, who),
+        ]
+    }
+
+    #[test]
+    fn empty_trace_profiles_to_nothing() {
+        let p = TraceProfile::from_events(&[]);
+        assert_eq!(p.tasks, 0);
+        assert!(p.path.is_empty());
+        assert_eq!(p.makespan_s, 0.0);
+        assert_eq!(p.critical_path_s(), 0.0);
+    }
+
+    #[test]
+    fn chain_follows_dependency_releases() {
+        // a → b → c, each ready the instant its parent finishes
+        let mut evs = lifecycle("a", 0.0, 0.1, 1.0, "w0");
+        evs.extend(lifecycle("b", 1.0, 1.1, 2.0, "w1"));
+        evs.extend(lifecycle("c", 2.0, 2.1, 3.0, "w0"));
+        let p = TraceProfile::from_events(&evs);
+        let names: Vec<&str> = p.path.iter().map(|l| l.task.as_str()).collect();
+        assert_eq!(names, vec!["a", "b", "c"]);
+        assert_eq!(p.path[0].via, LinkVia::Root);
+        assert_eq!(p.path[1].via, LinkVia::Dep);
+        assert!((p.critical_path_s() - p.makespan_s).abs() < 1e-9);
+        let blame: f64 = p.path.iter().map(|l| l.blame_pct).sum::<f64>() + p.drain_pct();
+        assert!((blame - 100.0).abs() < 1e-6, "blame sums to 100%, got {blame}");
+    }
+
+    #[test]
+    fn worker_contention_is_attributed_to_the_worker() {
+        // both ready at t=0, one worker: "second" waits for "first" to
+        // free w0 — a worker link, not a dep link
+        let mut evs = lifecycle("first", 0.0, 0.0, 1.0, "w0");
+        evs.extend(lifecycle("second", 0.0, 1.0, 2.5, "w0"));
+        let p = TraceProfile::from_events(&evs);
+        let names: Vec<&str> = p.path.iter().map(|l| l.task.as_str()).collect();
+        assert_eq!(names, vec!["first", "second"]);
+        assert_eq!(p.path[1].via, LinkVia::Worker);
+        assert!((p.critical_path_s() - p.makespan_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn off_path_tasks_report_finish_slack() {
+        let mut evs = lifecycle("long", 0.0, 0.0, 10.0, "w0");
+        evs.extend(lifecycle("quick", 0.0, 0.0, 1.0, "w1"));
+        let p = TraceProfile::from_events(&evs);
+        assert_eq!(p.path.len(), 1, "quick is not on the path");
+        assert_eq!(p.off_path_slack_s.len(), 1);
+        assert!((p.off_path_slack_s[0] - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phases_are_nonnegative_and_fill_each_span() {
+        let mut evs = lifecycle("a", 0.0, 0.4, 1.0, "w0");
+        evs.extend(lifecycle("b", 1.0, 1.5, 3.0, "w1"));
+        let p = TraceProfile::from_events(&evs);
+        for l in &p.path {
+            assert!(l.queue_s >= 0.0 && l.launch_s >= 0.0 && l.compute_s >= 0.0);
+            let sum = l.queue_s + l.launch_s + l.compute_s;
+            assert!((sum - l.span_s()).abs() < 1e-9, "phases fill the span");
+        }
+    }
+
+    #[test]
+    fn requeued_tasks_profile_their_final_attempt() {
+        let evs = vec![
+            ev("a", EventKind::Created, 0.0, ""),
+            ev("a", EventKind::Ready, 0.0, ""),
+            ev("a", EventKind::Launched, 0.1, "dead"),
+            ev("a", EventKind::Requeued, 0.5, "dead"),
+            ev("a", EventKind::Ready, 0.5, ""),
+            ev("a", EventKind::Launched, 0.6, "w1"),
+            ev("a", EventKind::Started, 0.7, "w1"),
+            ev("a", EventKind::Finished, 2.0, "w1"),
+        ];
+        let p = TraceProfile::from_events(&evs);
+        assert_eq!(p.path.len(), 1);
+        assert_eq!(p.path[0].who, "w1");
+        assert!((p.critical_path_s() - p.makespan_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mad_flags_the_straggler() {
+        let mut evs = Vec::new();
+        for i in 0..20 {
+            let launched = 0.1 * i as f64;
+            // computes 0.11 .. 0.129: nonzero spread so the MAD is > 0
+            evs.extend(lifecycle(
+                &format!("t{i}"),
+                0.0,
+                launched,
+                launched + 0.11 + 0.001 * i as f64,
+                "w0",
+            ));
+        }
+        evs.extend(lifecycle("slow", 0.0, 5.0, 9.0, "w1"));
+        let p = TraceProfile::from_events(&evs);
+        assert_eq!(p.stragglers.len(), 1, "stragglers: {:?}", p.stragglers);
+        assert_eq!(p.stragglers[0].task, "slow");
+    }
+
+    #[test]
+    fn chrome_export_has_one_compute_slice_per_finished_task() {
+        let mut evs = lifecycle("a", 0.0, 0.1, 1.0, "w0");
+        evs.extend(lifecycle("b", 1.0, 1.1, 2.0, "w1"));
+        let p = TraceProfile::from_events(&evs);
+        let json = chrome_trace(&evs, &p);
+        assert_eq!(json.matches("\"phase\":\"compute\"").count(), 2);
+        assert!(json.contains("\"thread_name\""));
+        assert!(json.contains("\"ph\":\"s\"") && json.contains("\"ph\":\"f\""));
+        assert!(json.starts_with("{\"displayTimeUnit\""));
+    }
+
+    #[test]
+    fn json_report_is_self_consistent() {
+        let mut evs = lifecycle("a", 0.0, 0.1, 1.0, "w0");
+        evs.extend(lifecycle("b", 1.0, 1.1, 2.0, "w1"));
+        let p = TraceProfile::from_events(&evs);
+        let j = p.to_json("dwork");
+        assert!(j.contains("\"source\":\"dwork\""));
+        assert!(j.contains("\"path\":["));
+        assert!(j.contains("\"blame_pct\""));
+        // render shouldn't panic on the same profile
+        let r = p.render("dwork");
+        assert!(r.contains("critical path"));
+    }
+}

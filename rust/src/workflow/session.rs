@@ -48,6 +48,8 @@
 //! ```
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{bail, Context as _, Result};
@@ -315,13 +317,15 @@ impl<'g> Session<'g> {
         self
     }
 
-    /// Lifecycle tracer threaded into whichever *local* back-end runs
-    /// (default: disabled, a true no-op in the hot paths).  A session
-    /// tracer cannot observe remote execution, so combining an enabled
-    /// tracer with a remote dwork target is an error at
-    /// [`Session::run`]/[`Session::submit`] — trace the hub
-    /// (`dhub serve --trace`) and/or the workers (`dhub worker --trace`)
-    /// instead.
+    /// Lifecycle tracer threaded into whichever back-end runs (default:
+    /// disabled, a true no-op in the hot paths).  Local back-ends record
+    /// directly.  A remote dwork target attaches a live event
+    /// subscription to the hub (`Request::Subscribe`) *before* the graph
+    /// is submitted and feeds the tracer from that stream while
+    /// [`Submission::wait`] polls for the drain — server-side timestamps,
+    /// so the resulting trace profiles/compares like a hub-side one.
+    /// (Worker-local `Started` events still only appear in worker traces:
+    /// `dhub worker --trace`.)
     pub fn tracer(mut self, tracer: Tracer) -> Self {
         self.tracer = tracer;
         self
@@ -526,16 +530,103 @@ impl<'g> Session<'g> {
                  (a local run has nothing to detach from)"
             );
         };
-        // refuse rather than silently drop: a session tracer observes
-        // only local execution, and remote workers never see it
-        if self.tracer.enabled() {
-            bail!(
-                "a session tracer cannot observe remote execution; trace the hub \
-                 (`dhub serve --trace`) and/or the workers (`dhub worker --trace`) instead"
-            );
-        }
+        // a session tracer rides the hub's live event stream: the
+        // subscription MUST register before the first Create lands, so
+        // the trace covers the campaign from its first lifecycle event
+        let tail = if self.tracer.enabled() {
+            TailHandle::spawn(&target.addr, self.tracer.clone(), &self.poll)
+                .context("attaching trace subscription to the remote hub")?
+        } else {
+            TailHandle::default()
+        };
         let accounting = run::remote_submit(self.graph, &target.addr, &self.poll)?;
-        Ok(Submission { plan, accounting, poll: self.poll.clone() })
+        Ok(Submission { plan, accounting, poll: self.poll.clone(), tail })
+    }
+}
+
+/// A background subscriber thread feeding a local [`Tracer`] from a
+/// remote hub's live event stream.  Arc-shared so [`Submission`] stays
+/// `Clone`; the first [`TailHandle::finish`] joins the thread, later
+/// calls are no-ops.
+#[derive(Clone, Default)]
+struct TailHandle(Option<Arc<TailInner>>);
+
+struct TailInner {
+    stop: AtomicBool,
+    thread: Mutex<Option<std::thread::JoinHandle<u64>>>,
+}
+
+impl std::fmt::Debug for TailHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.0 {
+            None => write!(f, "TailHandle(detached)"),
+            Some(_) => write!(f, "TailHandle(subscribed)"),
+        }
+    }
+}
+
+impl TailHandle {
+    /// Dial the hub, register the subscription synchronously (events
+    /// only accumulate server-side from this moment), then start the
+    /// polling thread.
+    fn spawn(addr: &str, tracer: Tracer, poll: &PollCfg) -> Result<TailHandle> {
+        let conn = TcpClient::connect_retry(addr, poll.connect_timeout)?;
+        let name = format!("wf-tail-{}", std::process::id());
+        // exit_on_drop: leaving detaches the subscription server-side
+        let mut c = Client::new(Box::new(conn), name).exit_on_drop(true);
+        c.subscribe("", 0)?;
+        let inner = Arc::new(TailInner {
+            stop: AtomicBool::new(false),
+            thread: Mutex::new(None),
+        });
+        let inner2 = inner.clone();
+        let interval = poll.poll;
+        let handle = std::thread::Builder::new()
+            .name("wf-tail".into())
+            .spawn(move || {
+                let mut dropped = 0u64;
+                loop {
+                    let b = match c.subscribe("", 0) {
+                        Ok(b) => b,
+                        Err(_) => break, // hub gone: the trace ends here
+                    };
+                    dropped += b.dropped;
+                    for ev in &b.events {
+                        tracer.record_at(ev.t, &ev.task, ev.kind, &ev.who);
+                    }
+                    if b.events.is_empty() {
+                        // drain fully before honoring done/stop: events
+                        // emitted before the drain signal are still queued
+                        if b.done || inner2.stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        std::thread::sleep(interval);
+                    }
+                }
+                dropped
+            })
+            .context("spawning the trace-subscription thread")?;
+        *inner.thread.lock().expect("tail thread slot poisoned") = Some(handle);
+        Ok(TailHandle(Some(inner)))
+    }
+
+    /// Signal the subscriber to stop once its queue is drained, then
+    /// join it.  Safe to call from any [`Submission`] clone; only the
+    /// first call joins.
+    fn finish(&self) {
+        let Some(inner) = &self.0 else { return };
+        inner.stop.store(true, Ordering::Relaxed);
+        let handle = inner.thread.lock().expect("tail thread slot poisoned").take();
+        if let Some(h) = handle {
+            if let Ok(dropped) = h.join() {
+                if dropped > 0 {
+                    eprintln!(
+                        "warning: {dropped} trace events dropped by the hub \
+                         (subscriber polled too slowly); the local trace is incomplete"
+                    );
+                }
+            }
+        }
     }
 }
 
@@ -549,6 +640,8 @@ pub struct Submission {
     /// server-side counters into a [`RunSummary`])
     pub accounting: RemoteSubmission,
     poll: PollCfg,
+    /// live trace subscription, when the session had an enabled tracer
+    tail: TailHandle,
 }
 
 impl Submission {
@@ -566,6 +659,7 @@ impl Submission {
             },
             accounting,
             poll,
+            tail: TailHandle::default(),
         }
     }
 
@@ -580,6 +674,9 @@ impl Submission {
     /// or metrics-disabled hub yields `None`).
     pub fn wait(&self) -> Result<RunOutcome> {
         let (server, summary) = run::remote_await(self.addr(), &self.accounting, &self.poll)?;
+        // the drain is server-side fact now: let the subscriber empty
+        // its queue and stop, so the local trace is complete on return
+        self.tail.finish();
         let metrics = run::remote_metrics(self.addr(), &self.poll);
         Ok(RunOutcome {
             plan: self.plan.clone(),
@@ -1013,23 +1110,22 @@ mod tests {
     }
 
     #[test]
-    fn remote_target_refuses_a_session_tracer() {
-        // silently dropping the tracer would be worse than erroring: a
-        // session tracer observes only local execution.  The check fires
-        // before any dial, so the bogus address is never contacted.
+    fn remote_tracer_attaches_a_subscription_or_fails_fast() {
+        // a session tracer on a remote target attaches a live hub
+        // subscription (it used to be refused outright); with no hub
+        // listening, the attach fails at dial time, bounded by the
+        // connect timeout, and names the subscription in the error
         let g = file_pipeline();
         let err = Session::new(&g)
             .backend(Backend::Dwork { remote: Some("127.0.0.1:1".into()) })
+            .polling(PollCfg {
+                connect_timeout: Duration::from_millis(50),
+                ..PollCfg::default()
+            })
             .tracer(Tracer::memory())
             .submit()
             .unwrap_err();
-        assert!(err.to_string().contains("cannot observe remote execution"), "{err}");
-        let err = Session::new(&g)
-            .backend(Backend::Dwork { remote: Some("127.0.0.1:1".into()) })
-            .tracer(Tracer::memory())
-            .run()
-            .unwrap_err();
-        assert!(err.to_string().contains("cannot observe remote execution"), "{err}");
+        assert!(err.to_string().contains("trace subscription"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,548 @@
+//! Makespan attribution profiler: the acceptance contract.
+//!
+//! * **Critical path == makespan**: on any lifecycle trace the profiler
+//!   accepts — random DAGs DES-simulated on all three backends, plus the
+//!   standard calibration suite — the realized critical path's link
+//!   spans plus the drain residual must sum to the measured makespan,
+//!   and the Fig-5 phase attribution (queue/launch/compute/drain) must
+//!   partition it.
+//! * **Chrome export is valid JSON**: parsed here by a dependency-free
+//!   recursive-descent parser, with exactly one compute slice per task
+//!   that reached a terminal event and the critical path present as a
+//!   flow chain.
+//! * **`dhub tail` sees what the server records**: a subscriber attached
+//!   before the first Create receives, over real TCP, an event stream
+//!   whose `trace::counts` (and per-kind multiset) equal the server-side
+//!   tracer's — the property `Session` relies on to trace remote runs.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use threesched::calibrate::workloads;
+use threesched::coordinator::dwork::{self, Client, SchedState, ServerConfig, TaskMsg};
+use threesched::metg::simmodels::Tool;
+use threesched::substrate::cluster::costs::CostModel;
+use threesched::substrate::transport::tcp::TcpClient;
+use threesched::trace::{self, chrome_trace, simulate_workflow, TaskEvent, TraceProfile, Tracer};
+use threesched::workflow::{Backend, PollCfg, Session, TaskSpec, WorkflowGraph};
+
+// ---------------------------------------------------------- random DAGs
+
+/// Deterministic split-mix style generator — no rand dependency, stable
+/// across platforms so failures reproduce from the seed in the message.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n.max(1)
+    }
+
+    fn unit(&mut self) -> f64 {
+        (self.next() % 1_000_000) as f64 / 1_000_000.0
+    }
+}
+
+/// A random DAG: each task depends on up to 3 uniformly chosen earlier
+/// tasks, with estimated durations spread over ~a decade so the critical
+/// path is non-trivial on every backend.
+fn random_dag(n: usize, seed: u64) -> WorkflowGraph {
+    let mut rng = Lcg(seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1));
+    let mut g = WorkflowGraph::new("random-dag");
+    for i in 0..n {
+        let mut t = TaskSpec::new(format!("t{i}")).est(0.05 + 0.95 * rng.unit());
+        let mut deps: Vec<String> = Vec::new();
+        if i > 0 {
+            for _ in 0..rng.below(4) {
+                let d = format!("t{}", rng.below(i as u64));
+                if !deps.contains(&d) {
+                    deps.push(d);
+                }
+            }
+        }
+        if !deps.is_empty() {
+            t = t.after(&deps);
+        }
+        g.add_task(t).unwrap();
+    }
+    g
+}
+
+/// The tested invariants, checked on every trace this file produces:
+/// path + drain telescopes to the makespan, the phase attribution
+/// partitions it, blame percentages + drain share total 100, and links
+/// are chronological and gap-free.
+fn assert_profile_invariants(source: &str, events: &[TaskEvent]) -> TraceProfile {
+    let p = TraceProfile::from_events(events);
+    let eps = 1e-6 * p.makespan_s.max(1.0);
+    assert!(
+        (p.critical_path_s() - p.makespan_s).abs() <= eps,
+        "{source}: critical path {} != makespan {}",
+        p.critical_path_s(),
+        p.makespan_s
+    );
+    assert!(
+        (p.makespan_s - trace::makespan(events)).abs() <= eps,
+        "{source}: profile makespan {} != trace makespan {}",
+        p.makespan_s,
+        trace::makespan(events)
+    );
+    let phases = p.queue_s + p.launch_s + p.compute_s + p.drain_s;
+    assert!(
+        (phases - p.makespan_s).abs() <= eps,
+        "{source}: phases {phases} don't partition makespan {}",
+        p.makespan_s
+    );
+    if p.makespan_s > 0.0 {
+        let blame: f64 = p.path.iter().map(|l| l.blame_pct).sum();
+        assert!(
+            (blame + p.drain_pct() - 100.0).abs() <= 1e-6,
+            "{source}: blame {blame}% + drain {}% != 100%",
+            p.drain_pct()
+        );
+    }
+    for w in p.path.windows(2) {
+        assert!(
+            (w[1].start_s - w[0].finish_s).abs() <= 1e-12,
+            "{source}: gap between links {} and {}",
+            w[0].task,
+            w[1].task
+        );
+        assert!(w[0].finish_s <= w[1].finish_s, "{source}: links out of order");
+    }
+    p
+}
+
+#[test]
+fn critical_path_equals_makespan_on_random_dags() {
+    let m = CostModel::paper();
+    for seed in [1u64, 7, 42] {
+        let g = random_dag(24, seed);
+        for tool in Tool::ALL {
+            let tracer = Tracer::memory();
+            simulate_workflow(tool, &g, &m, 4, seed, &tracer)
+                .unwrap_or_else(|e| panic!("des:{} seed {seed}: {e}", tool.name()));
+            let events = tracer.drain();
+            assert!(!events.is_empty(), "des:{} seed {seed}: empty trace", tool.name());
+            let p =
+                assert_profile_invariants(&format!("des:{} seed {seed}", tool.name()), &events);
+            assert_eq!(p.tasks, 24, "des:{} seed {seed}", tool.name());
+            assert!(!p.path.is_empty());
+        }
+    }
+}
+
+#[test]
+fn standard_suite_critical_path_matches_makespan() {
+    // the acceptance workload: the calibration suite's three DES runs
+    let m = CostModel::paper();
+    for run in workloads::standard() {
+        let (source, events) = workloads::simulate(&run, &m, 11).unwrap();
+        let p = assert_profile_invariants(&source, &events);
+        assert!(p.tasks > 0, "{source}: no finished tasks");
+        assert!(p.makespan_s > 0.0, "{source}: zero makespan");
+    }
+}
+
+// ------------------------------------------------------- chrome export
+
+/// Minimal strict JSON value + recursive-descent parser: enough to
+/// verify the Chrome export is loadable, without a serde dependency.
+#[derive(Debug)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn num(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    fn arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+fn parse_json(s: &str) -> Result<Json, String> {
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    let v = parse_value(b, &mut i)?;
+    skip_ws(b, &mut i);
+    if i != b.len() {
+        return Err(format!("trailing bytes at offset {i}"));
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], i: &mut usize) {
+    while *i < b.len() && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r') {
+        *i += 1;
+    }
+}
+
+fn expect(b: &[u8], i: &mut usize, lit: &str) -> Result<(), String> {
+    if b[*i..].starts_with(lit.as_bytes()) {
+        *i += lit.len();
+        Ok(())
+    } else {
+        Err(format!("expected {lit:?} at offset {}", *i))
+    }
+}
+
+fn parse_value(b: &[u8], i: &mut usize) -> Result<Json, String> {
+    skip_ws(b, i);
+    match b.get(*i) {
+        None => Err("unexpected end of input".into()),
+        Some(b'{') => {
+            *i += 1;
+            let mut kv = Vec::new();
+            skip_ws(b, i);
+            if b.get(*i) == Some(&b'}') {
+                *i += 1;
+                return Ok(Json::Obj(kv));
+            }
+            loop {
+                skip_ws(b, i);
+                let k = parse_string(b, i)?;
+                skip_ws(b, i);
+                expect(b, i, ":")?;
+                kv.push((k, parse_value(b, i)?));
+                skip_ws(b, i);
+                match b.get(*i) {
+                    Some(b',') => *i += 1,
+                    Some(b'}') => {
+                        *i += 1;
+                        return Ok(Json::Obj(kv));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at offset {}", *i)),
+                }
+            }
+        }
+        Some(b'[') => {
+            *i += 1;
+            let mut a = Vec::new();
+            skip_ws(b, i);
+            if b.get(*i) == Some(&b']') {
+                *i += 1;
+                return Ok(Json::Arr(a));
+            }
+            loop {
+                a.push(parse_value(b, i)?);
+                skip_ws(b, i);
+                match b.get(*i) {
+                    Some(b',') => *i += 1,
+                    Some(b']') => {
+                        *i += 1;
+                        return Ok(Json::Arr(a));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at offset {}", *i)),
+                }
+            }
+        }
+        Some(b'"') => Ok(Json::Str(parse_string(b, i)?)),
+        Some(b't') => expect(b, i, "true").map(|()| Json::Bool(true)),
+        Some(b'f') => expect(b, i, "false").map(|()| Json::Bool(false)),
+        Some(b'n') => expect(b, i, "null").map(|()| Json::Null),
+        Some(_) => {
+            let start = *i;
+            while *i < b.len()
+                && matches!(b[*i], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+            {
+                *i += 1;
+            }
+            std::str::from_utf8(&b[start..*i])
+                .ok()
+                .and_then(|s| s.parse::<f64>().ok())
+                .map(Json::Num)
+                .ok_or_else(|| format!("bad number at offset {start}"))
+        }
+    }
+}
+
+fn parse_string(b: &[u8], i: &mut usize) -> Result<String, String> {
+    if b.get(*i) != Some(&b'"') {
+        return Err(format!("expected '\"' at offset {}", *i));
+    }
+    *i += 1;
+    let mut out: Vec<u8> = Vec::new();
+    while let Some(&c) = b.get(*i) {
+        *i += 1;
+        match c {
+            b'"' => return String::from_utf8(out).map_err(|e| e.to_string()),
+            b'\\' => {
+                let e = *b.get(*i).ok_or("end of input in escape")?;
+                *i += 1;
+                match e {
+                    b'"' | b'\\' | b'/' => out.push(e),
+                    b'b' => out.push(0x08),
+                    b'f' => out.push(0x0c),
+                    b'n' => out.push(b'\n'),
+                    b'r' => out.push(b'\r'),
+                    b't' => out.push(b'\t'),
+                    b'u' => {
+                        if *i + 4 > b.len() {
+                            return Err("truncated \\u escape".into());
+                        }
+                        let hex = std::str::from_utf8(&b[*i..*i + 4])
+                            .map_err(|e| e.to_string())?;
+                        let n = u32::from_str_radix(hex, 16).map_err(|e| e.to_string())?;
+                        *i += 4;
+                        let mut buf = [0u8; 4];
+                        out.extend_from_slice(
+                            char::from_u32(n).unwrap_or('\u{fffd}').encode_utf8(&mut buf).as_bytes(),
+                        );
+                    }
+                    _ => return Err(format!("bad escape '\\{}'", e as char)),
+                }
+            }
+            _ => out.push(c),
+        }
+    }
+    Err("unterminated string".into())
+}
+
+#[test]
+fn chrome_export_is_valid_json_with_one_slice_per_finished_task() {
+    let m = CostModel::paper();
+    let g = random_dag(16, 5);
+    let tracer = Tracer::memory();
+    simulate_workflow(Tool::Dwork, &g, &m, 4, 5, &tracer).unwrap();
+    let events = tracer.drain();
+    let p = TraceProfile::from_events(&events);
+    assert_eq!(p.tasks, 16);
+
+    let out = chrome_trace(&events, &p);
+    let v = parse_json(&out).unwrap_or_else(|e| panic!("chrome export is not valid JSON: {e}"));
+    assert_eq!(v.get("displayTimeUnit").and_then(Json::str), Some("ms"));
+    let evs = v.get("traceEvents").and_then(Json::arr).expect("traceEvents array");
+    assert!(!evs.is_empty());
+
+    let mut task_slices = 0usize;
+    let mut on_path_slices = 0usize;
+    let mut flow_events = 0usize;
+    let mut thread_names = 0usize;
+    for e in evs {
+        let ph = e.get("ph").and_then(Json::str).expect("every event has a ph");
+        let cat = e.get("cat").and_then(Json::str).unwrap_or("");
+        match (ph, cat) {
+            ("X", "task") => {
+                task_slices += 1;
+                assert!(e.get("name").and_then(Json::str).is_some_and(|n| !n.is_empty()));
+                assert!(e.get("ts").and_then(Json::num).is_some_and(|t| t >= 0.0));
+                assert!(e.get("dur").and_then(Json::num).is_some_and(|d| d >= 0.0));
+                assert!(e.get("tid").and_then(Json::num).is_some());
+                let args = e.get("args").expect("task slices carry args");
+                assert_eq!(args.get("phase").and_then(Json::str), Some("compute"));
+                if let Some(&Json::Bool(true)) = args.get("on_path") {
+                    on_path_slices += 1;
+                }
+            }
+            ("s" | "t" | "f", "critical-path") => flow_events += 1,
+            ("M", _) => {
+                if e.get("name").and_then(Json::str) == Some("thread_name") {
+                    thread_names += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    // one compute slice per task that reached a terminal event, with
+    // exactly the critical-path links highlighted
+    assert_eq!(task_slices, p.tasks);
+    assert_eq!(on_path_slices, p.path.len());
+    // the critical path renders as a complete flow chain
+    let want_flow = if p.path.len() >= 2 { p.path.len() } else { 0 };
+    assert_eq!(flow_events, want_flow);
+    // scheduler row plus at least one worker row got named
+    assert!(thread_names >= 2, "expected named threads, saw {thread_names}");
+}
+
+// -------------------------------------------------- live hub streaming
+
+#[test]
+fn tail_subscription_sees_exactly_what_the_server_trace_records() {
+    let server_tracer = Tracer::memory();
+    let mut state = SchedState::new();
+    state.set_tracer(server_tracer.clone());
+    let (addr, guard, handle) =
+        dwork::spawn_tcp(state, ServerConfig::default(), "127.0.0.1:0").unwrap();
+    let addr_s = addr.to_string();
+
+    // the tail attaches BEFORE the first Create — the same ordering
+    // Session::submit uses — so the stream covers the whole campaign
+    let conn = TcpClient::connect_retry(&addr_s, Duration::from_secs(5)).unwrap();
+    let mut tail = Client::new(Box::new(conn), "tail");
+    let first = tail.subscribe("", 0).unwrap();
+    assert!(first.events.is_empty() && !first.done);
+
+    {
+        let conn = TcpClient::connect_retry(&addr_s, Duration::from_secs(5)).unwrap();
+        let mut feeder = Client::new(Box::new(conn), "feeder");
+        for i in 0..7 {
+            feeder.create(TaskMsg::new(format!("t{i}"), vec![]), &[]).unwrap();
+        }
+        feeder.create(TaskMsg::new("boom", vec![]), &[]).unwrap();
+    }
+
+    // a worker drains the campaign concurrently, over its own socket
+    let worker = std::thread::spawn({
+        let addr_s = addr_s.clone();
+        move || {
+            let conn = TcpClient::connect_retry(&addr_s, Duration::from_secs(5)).unwrap();
+            let mut c = Client::new(Box::new(conn), "w0").exit_on_drop(true);
+            dwork::run_worker(&mut c, 2, |t| {
+                if t.name == "boom" {
+                    Err(anyhow::anyhow!("boom"))
+                } else {
+                    Ok(())
+                }
+            })
+            .unwrap()
+        }
+    });
+
+    // long-poll until the hub reports the campaign drained AND the
+    // subscriber queue is empty (events precede the done flag)
+    let mut streamed: Vec<TaskEvent> = Vec::new();
+    let mut dropped = 0u64;
+    loop {
+        let b = tail.subscribe("", 0).unwrap();
+        dropped += b.dropped;
+        let empty = b.events.is_empty();
+        streamed.extend(b.events);
+        if empty {
+            if b.done {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    worker.join().unwrap();
+    tail.exit().unwrap();
+    drop(guard);
+    let state = handle.join().unwrap();
+    assert!(state.all_done());
+    assert_eq!(dropped, 0, "an attentive subscriber loses nothing");
+
+    // the live stream and the server-side trace describe the same run
+    let recorded = server_tracer.drain();
+    let sc = trace::counts(&streamed);
+    let rc = trace::counts(&recorded);
+    assert_eq!(
+        (sc.completed, sc.failed, sc.skipped),
+        (rc.completed, rc.failed, rc.skipped),
+        "stream counts diverge from the server trace"
+    );
+    assert_eq!(sc.completed, 7);
+    assert_eq!(sc.failed, 1);
+    assert_eq!(sc.skipped, 0);
+    let st = state.status();
+    assert_eq!(st.completed, 7);
+    assert_eq!(st.failed, 1);
+
+    // per-kind multiset equality: the stream IS the trace
+    let by_kind = |evs: &[TaskEvent]| -> HashMap<&'static str, usize> {
+        let mut m = HashMap::new();
+        for ev in evs {
+            *m.entry(ev.kind.name()).or_insert(0) += 1;
+        }
+        m
+    };
+    assert_eq!(by_kind(&streamed), by_kind(&recorded));
+
+    // hub delivery order: the stamped seq is strictly increasing
+    for w in streamed.windows(2) {
+        assert!(w[0].seq < w[1].seq, "stream arrived out of hub order");
+    }
+    // and the profiler accepts the streamed view directly
+    assert_profile_invariants("tail-stream", &streamed);
+}
+
+#[test]
+fn remote_session_tracer_matches_server_side_counters() {
+    // the acceptance contract for tracing remote campaigns: a Session
+    // with a tracer and a remote dwork target rides the hub's Subscribe
+    // stream, and the local trace it produces counts exactly what the
+    // server's own counters say happened
+    let mut g = WorkflowGraph::new("remote-traced");
+    g.add_task(TaskSpec::new("a")).unwrap();
+    g.add_task(TaskSpec::new("b").after(&["a"])).unwrap();
+    g.add_task(TaskSpec::new("c").after(&["a"])).unwrap();
+    g.add_task(TaskSpec::new("d").after(&["b", "c"])).unwrap();
+
+    let (addr, guard, handle) =
+        dwork::spawn_tcp(SchedState::new(), ServerConfig::default(), "127.0.0.1:0").unwrap();
+    let addr_s = addr.to_string();
+    // workers park on the empty hub before anything is submitted
+    let pool: Vec<_> = (0..2)
+        .map(|i| {
+            let addr_s = addr_s.clone();
+            std::thread::spawn(move || {
+                let conn = TcpClient::connect_retry(&addr_s, Duration::from_secs(5)).unwrap();
+                let mut c =
+                    Client::new(Box::new(conn), format!("rw{i}")).exit_on_drop(true);
+                dwork::run_worker(&mut c, 1, |_| Ok(())).unwrap()
+            })
+        })
+        .collect();
+
+    let tracer = Tracer::memory();
+    let outcome = Session::new(&g)
+        .backend(Backend::Dwork { remote: Some(addr_s.clone().into()) })
+        .polling(PollCfg {
+            poll: Duration::from_millis(5),
+            connect_timeout: Duration::from_secs(5),
+        })
+        .tracer(tracer.clone())
+        .run()
+        .unwrap();
+    for h in pool {
+        h.join().unwrap();
+    }
+    drop(guard);
+    let state = handle.join().unwrap();
+    assert!(state.all_done());
+    assert_eq!(outcome.summary.tasks_run, 4);
+
+    // `wait()` drained the subscription before returning: the local
+    // trace is complete, with server-side timestamps
+    let local = tracer.drain();
+    let c = trace::counts(&local);
+    let st = state.status();
+    assert_eq!(c.completed as u64, st.completed, "local trace vs hub counters");
+    assert_eq!(c.failed as u64, st.failed);
+    assert_eq!(c.completed, 4);
+    assert_eq!(c.attempted(), outcome.summary.tasks_run);
+    // dependency order survived the stream
+    assert!(trace::validate(&local).is_ok());
+    assert_profile_invariants("remote-session", &local);
+}
