@@ -14,7 +14,7 @@
 
 use std::time::Instant;
 
-use threesched::coordinator::dwork::{self, Client, TaskMsg};
+use threesched::coordinator::dwork::{self, Client, Completion, TaskMsg};
 use threesched::coordinator::pmake::{self, dag::Dag, exec::LaunchReport, sched};
 use threesched::metg::harness::TextTable;
 use threesched::metg::simmodels::{sim_dwork, sim_mpilist};
@@ -40,12 +40,14 @@ fn ablation_steal_n() {
         let t0 = Instant::now();
         let mut drained = 0usize;
         loop {
-            match c.steal_n(batch).unwrap() {
+            match c.acquire(batch).unwrap() {
                 dwork::client::StealBatch::Tasks(ts) if ts.is_empty() => break,
                 dwork::client::StealBatch::Tasks(ts) => {
-                    for task in &ts {
-                        c.complete(&task.name, true).unwrap();
-                    }
+                    // report the whole batch in one frame: completion-side
+                    // batching is the symmetric half of Steal-n
+                    let done: Vec<Completion> =
+                        ts.iter().map(|t| Completion::ok(t.name.as_str())).collect();
+                    c.report(&done).unwrap();
                     drained += ts.len();
                 }
                 dwork::client::StealBatch::AllDone => break,
@@ -83,8 +85,12 @@ fn ablation_forwarding() {
             None => Client::new(Box::new(connector.connect()), "bench"),
         };
         let t0 = Instant::now();
-        while let Some(task) = c.steal().unwrap() {
-            c.complete(&task.name, true).unwrap();
+        loop {
+            let ts = match c.acquire(1).unwrap() {
+                dwork::client::StealBatch::Tasks(ts) if !ts.is_empty() => ts,
+                _ => break,
+            };
+            c.report(&[Completion::ok(ts[0].name.as_str())]).unwrap();
         }
         let dt = t0.elapsed().as_secs_f64();
         t.row(vec![

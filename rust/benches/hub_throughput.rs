@@ -1,0 +1,182 @@
+//! Hub saturation throughput: batched wire ops (CreateBatch /
+//! Steal-n / CompleteBatch via `Client::acquire`/`report`) against the
+//! per-RTT single-shot protocol, swept over simulated worker counts,
+//! plus a shard-count sweep and a calibrate cross-check: the RTT the
+//! fitter recovers from a batched trace must be strictly below the one
+//! it recovers from a per-task trace of the same campaign.
+//!
+//! Full run: `cargo bench --bench hub_throughput`
+//! Smoke:    `HUB_THROUGHPUT_SMOKE=1 cargo bench --bench hub_throughput`
+//! Artifact: set `HUB_THROUGHPUT_JSON=path` to also write the results
+//! as JSON (the CI job uploads this for trend tracking).
+
+use std::time::Instant;
+
+use threesched::calibrate::{classify_trace, fit_traces};
+use threesched::coordinator::dwork::{self, Client, TaskMsg, WorkerOpts};
+use threesched::metg::harness::TextTable;
+use threesched::substrate::cluster::costs::CostModel;
+use threesched::trace::Tracer;
+
+struct Point {
+    workers: usize,
+    batch: u32,
+    shards: usize,
+    tasks: usize,
+    tasks_per_sec: f64,
+}
+
+/// Drain `tasks` independent tasks through an in-proc hub with
+/// `workers` worker threads, each running the production worker loop
+/// at the given acquire/report batch size.  Returns tasks/second.
+fn drain_campaign(
+    workers: usize,
+    tasks: usize,
+    batch: u32,
+    shards: usize,
+    tracer: Option<&Tracer>,
+) -> f64 {
+    let mut state = dwork::SchedState::with_shards(shards);
+    if let Some(t) = tracer {
+        state.set_tracer(t.clone());
+    }
+    for i in 0..tasks {
+        state.create(TaskMsg::new(format!("t{i}"), vec![]), &[]).unwrap();
+    }
+    let (connector, handle) = dwork::spawn_inproc(state, dwork::ServerConfig::default());
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let conn = connector.connect();
+            s.spawn(move || {
+                let mut c = Client::new(Box::new(conn), format!("w{w}"));
+                let opts = WorkerOpts {
+                    prefetch: batch,
+                    report_batch: batch as usize,
+                    ..WorkerOpts::default()
+                };
+                dwork::run_worker_opts(&mut c, &opts, |_| Ok(())).unwrap();
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    drop(connector);
+    let state = handle.join().unwrap();
+    assert!(state.all_done());
+    tasks as f64 / dt
+}
+
+/// Run a traced campaign and return the steal RTT the calibration
+/// fitter recovers from its launch gaps.
+fn fitted_rtt(workers: usize, tasks: usize, batch: u32, label: &str) -> f64 {
+    let tracer = Tracer::memory();
+    drain_campaign(workers, tasks, batch, 1, Some(&tracer));
+    let events = tracer.drain();
+    let trace = classify_trace(label, events, Some(workers)).expect("classify");
+    let cal = fit_traces(std::slice::from_ref(&trace), &CostModel::paper()).expect("fit");
+    cal.profile.overrides.steal_rtt.expect("steal_rtt fitted")
+}
+
+fn json_blob(
+    smoke: bool,
+    points: &[Point],
+    speedup: f64,
+    rtt_per_task: f64,
+    rtt_batched: f64,
+) -> String {
+    let rows: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"workers\": {}, \"batch\": {}, \"shards\": {}, \"tasks\": {}, \
+                 \"tasks_per_sec\": {:.1}}}",
+                p.workers, p.batch, p.shards, p.tasks, p.tasks_per_sec
+            )
+        })
+        .collect();
+    format!(
+        "{{\n  \"smoke\": {smoke},\n  \"points\": [\n{}\n  ],\n  \
+         \"batched_speedup_at_top_workers\": {speedup:.2},\n  \
+         \"fitted_steal_rtt_s\": {{\"per_task\": {rtt_per_task:.3e}, \
+         \"batched\": {rtt_batched:.3e}}}\n}}\n",
+        rows.join(",\n")
+    )
+}
+
+fn main() {
+    println!("=== bench: hub_throughput ===\n");
+    let smoke = std::env::var("HUB_THROUGHPUT_SMOKE").is_ok_and(|v| v != "0");
+    if smoke {
+        println!("(smoke mode: reduced task counts)\n");
+    }
+    let tasks = if smoke { 8_000 } else { 32_000 };
+    let sweep: &[usize] = if smoke { &[4, 64] } else { &[1, 4, 16, 64] };
+    let top = *sweep.last().unwrap();
+
+    // --- saturation curve: workers x {per-RTT, batched}
+    let mut points: Vec<Point> = Vec::new();
+    let mut t = TextTable::new(&["workers", "batch", "shards", "tasks/s"]);
+    for &workers in sweep {
+        for batch in [1u32, 64] {
+            let tps = drain_campaign(workers, tasks, batch, 1, None);
+            t.row(vec![
+                workers.to_string(),
+                batch.to_string(),
+                "1".into(),
+                format!("{tps:.0}"),
+            ]);
+            points.push(Point { workers, batch, shards: 1, tasks, tasks_per_sec: tps });
+        }
+    }
+    // --- shard sweep at the top worker count, batched wire
+    for shards in [2usize, 4] {
+        let tps = drain_campaign(top, tasks, 64, shards, None);
+        t.row(vec![top.to_string(), "64".into(), shards.to_string(), format!("{tps:.0}")]);
+        points.push(Point { workers: top, batch: 64, shards, tasks, tasks_per_sec: tps });
+    }
+    println!("{}", t.render());
+
+    let at = |batch: u32| {
+        points
+            .iter()
+            .find(|p| p.workers == top && p.batch == batch && p.shards == 1)
+            .unwrap()
+            .tasks_per_sec
+    };
+    let speedup = at(64) / at(1);
+    println!(
+        "batched vs per-RTT at {top} workers: {speedup:.1}x ({:.0} vs {:.0} tasks/s)",
+        at(64),
+        at(1)
+    );
+    assert!(
+        speedup >= 5.0,
+        "batched wire must be >= 5x per-RTT at {top} workers, got {speedup:.2}x"
+    );
+
+    // --- calibrate cross-check: the fitter sees the batching in the
+    // launch gaps of a real hub trace
+    let cal_workers = 8;
+    let cal_tasks = if smoke { 2_000 } else { 6_000 };
+    let rtt_per_task =
+        fitted_rtt(cal_workers, cal_tasks, 1, "dwork hub_throughput per-task");
+    let rtt_batched = fitted_rtt(cal_workers, cal_tasks, 64, "dwork hub_throughput batched");
+    println!(
+        "calibrate fit: steal_rtt {:.2} us per-task, {:.2} us batched",
+        rtt_per_task * 1e6,
+        rtt_batched * 1e6
+    );
+    assert!(
+        rtt_batched < rtt_per_task,
+        "fitted RTT from a batched trace ({rtt_batched:.3e}s) must be strictly below \
+         the per-task fit ({rtt_per_task:.3e}s)"
+    );
+
+    let blob = json_blob(smoke, &points, speedup, rtt_per_task, rtt_batched);
+    if let Ok(path) = std::env::var("HUB_THROUGHPUT_JSON") {
+        std::fs::write(&path, &blob).expect("write JSON artifact");
+        println!("wrote {path}");
+    }
+    println!("\n{blob}");
+    println!("ok: batched wire >= 5x per-RTT at {top} workers; batched trace fits lower RTT");
+}

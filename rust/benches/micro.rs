@@ -10,7 +10,7 @@
 
 use std::time::Instant;
 
-use threesched::coordinator::dwork::{self, Client, Request, Response, TaskMsg};
+use threesched::coordinator::dwork::{self, Client, Completion, Request, Response, StealBatch, TaskMsg};
 use threesched::substrate::kvstore::KvStore;
 use threesched::substrate::wire::{Reader, Writer};
 
@@ -99,8 +99,14 @@ fn bench_steal_rtt() {
         let (connector, handle) = dwork::spawn_inproc(state, dwork::ServerConfig::default());
         let mut c = Client::new(Box::new(connector.connect()), "bench");
         let t0 = Instant::now();
-        while let Some(t) = c.steal().unwrap() {
-            c.complete(&t.name, true).unwrap();
+        loop {
+            // acquire(1)/report(1): the same two round-trips per task the
+            // paper's steal+complete pair costs
+            let ts = match c.acquire(1).unwrap() {
+                StealBatch::Tasks(ts) if !ts.is_empty() => ts,
+                _ => break,
+            };
+            c.report(&[Completion::ok(ts[0].name.as_str())]).unwrap();
         }
         let dt = t0.elapsed().as_secs_f64();
         drop(c);

@@ -11,7 +11,7 @@
 
 use std::time::Instant;
 
-use threesched::coordinator::dwork::{self, Client, TaskMsg};
+use threesched::coordinator::dwork::{self, Client, Completion, StealBatch, TaskMsg};
 use threesched::metg::harness::render_table4;
 use threesched::substrate::cluster::costs::CostModel;
 
@@ -26,15 +26,19 @@ pub fn measure_steal_rtt(tasks: usize) -> f64 {
     let mut c = Client::new(Box::new(connector.connect()), "bench");
     let t0 = Instant::now();
     let mut n = 0u64;
-    while let Some(t) = c.steal().unwrap() {
-        c.complete(&t.name, true).unwrap();
+    loop {
+        let ts = match c.acquire(1).unwrap() {
+            StealBatch::Tasks(ts) if !ts.is_empty() => ts,
+            _ => break,
+        };
+        c.report(&[Completion::ok(ts[0].name.as_str())]).unwrap();
         n += 1;
     }
     let dt = t0.elapsed().as_secs_f64();
     drop(c);
     drop(connector);
     handle.join().unwrap();
-    dt / (2.0 * n as f64) // two round-trips per task
+    dt / (2.0 * n as f64) // one acquire + one report: two round-trips per task
 }
 
 fn measure_tcp_rtt(tasks: usize) -> f64 {
@@ -48,8 +52,12 @@ fn measure_tcp_rtt(tasks: usize) -> f64 {
     let mut c = Client::new(Box::new(conn), "bench");
     let t0 = Instant::now();
     let mut n = 0u64;
-    while let Some(t) = c.steal().unwrap() {
-        c.complete(&t.name, true).unwrap();
+    loop {
+        let ts = match c.acquire(1).unwrap() {
+            StealBatch::Tasks(ts) if !ts.is_empty() => ts,
+            _ => break,
+        };
+        c.report(&[Completion::ok(ts[0].name.as_str())]).unwrap();
         n += 1;
     }
     let dt = t0.elapsed().as_secs_f64();

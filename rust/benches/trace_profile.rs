@@ -116,8 +116,8 @@ enum Attach {
 
 /// Allocations across a steal+complete serve loop over `tasks`
 /// pre-created independent tasks (creation is outside the window).
-fn serve_loop_allocs(tasks: usize, attach: &Attach) -> u64 {
-    let mut state = SchedState::new();
+fn serve_loop_allocs(tasks: usize, shards: usize, attach: &Attach) -> u64 {
+    let mut state = SchedState::with_shards(shards);
     for i in 0..tasks {
         state.create(TaskMsg::new(format!("t{i}"), vec![]), &[]).unwrap();
     }
@@ -146,9 +146,9 @@ fn bench_subscribe_path() {
     // steal+complete emits 2 events/task; stay under SUB_QUEUE_CAP so
     // the Live run measures fan-out, not drop-oldest
     const TASKS: usize = 4096;
-    let never = serve_loop_allocs(TASKS, &Attach::Never);
-    let detached = serve_loop_allocs(TASKS, &Attach::Detached);
-    let live = serve_loop_allocs(TASKS, &Attach::Live);
+    let never = serve_loop_allocs(TASKS, 1, &Attach::Never);
+    let detached = serve_loop_allocs(TASKS, 1, &Attach::Detached);
+    let live = serve_loop_allocs(TASKS, 1, &Attach::Live);
     let per = |a: u64| a as f64 / TASKS as f64;
     println!(
         "serve:    {:.2} allocs/cycle bare, {:.2} after detach, {:.2} with live subscriber",
@@ -187,9 +187,31 @@ fn bench_subscribe_path() {
     assert_eq!(allocs, 0, "idle subscribe_poll allocated {allocs} times — not a no-op");
 }
 
+// ------------------------------------------------ sharded-queue parity
+
+/// The sharded ready-queue must not tax the serve path: a
+/// steal+complete cycle against a 4-shard hub allocates exactly as
+/// much as against the single-shard one (shard selection is hashing
+/// plus VecDeque pops — no per-request heap traffic).
+fn bench_sharded_serve_parity() {
+    const TASKS: usize = 4096;
+    let one = serve_loop_allocs(TASKS, 1, &Attach::Never);
+    let four = serve_loop_allocs(TASKS, 4, &Attach::Never);
+    let per = |a: u64| a as f64 / TASKS as f64;
+    println!("shards:   {:.2} allocs/cycle at 1 shard, {:.2} at 4 shards", per(one), per(four));
+    assert_eq!(
+        one, four,
+        "sharded serve loop allocates differently than single-shard ({four} vs {one})"
+    );
+}
+
 fn main() {
     println!("=== bench: trace_profile ===\n");
     bench_profile();
     bench_subscribe_path();
-    println!("\nok: 10k-task profile < 100 ms; subscribe path free when unused");
+    bench_sharded_serve_parity();
+    println!(
+        "\nok: 10k-task profile < 100 ms; subscribe path free when unused; \
+         sharding free on the serve path"
+    );
 }

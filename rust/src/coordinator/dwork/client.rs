@@ -23,7 +23,9 @@ use crate::metrics::{Counter, MetricsSnapshot, Registry, Series};
 use crate::substrate::transport::ClientConn;
 use crate::trace::{EventKind, TaskEvent, Tracer};
 
-use super::messages::{RefusalCode, Request, Response, StatusInfo, TaskMsg};
+use super::messages::{
+    BatchItem, Completion, CreateItem, RefusalCode, Request, Response, StatusInfo, TaskMsg,
+};
 
 /// A server-side error surfaced through the typed client.  Downcast the
 /// `anyhow::Error` chain to this type to reach the machine-readable
@@ -45,16 +47,54 @@ impl std::fmt::Display for ServerError {
 
 impl std::error::Error for ServerError {}
 
+/// Per-item result of a [`Client::submit`] batch: either the task was
+/// created, or the hub refused it (duplicate, missing/errored dep — the
+/// typed [`RefusalCode`] rides inside).  Transport-level failures abort
+/// the whole call instead of appearing here.
+#[derive(Debug)]
+pub enum SubmitOutcome {
+    Created,
+    Refused(ServerError),
+}
+
+impl SubmitOutcome {
+    pub fn is_created(&self) -> bool {
+        matches!(self, SubmitOutcome::Created)
+    }
+
+    /// The typed refusal code, when this item was refused with one.
+    pub fn code(&self) -> Option<RefusalCode> {
+        match self {
+            SubmitOutcome::Created => None,
+            SubmitOutcome::Refused(e) => e.code,
+        }
+    }
+}
+
+/// Whether the connected hub speaks the batched wire kinds.  Probed
+/// lazily on the first [`Client::submit`]/[`Client::report`]: a current
+/// hub answers `Response::Batch` (never a whole-frame `Err`, even when
+/// every item is refused), while a pre-batch hub answers `Err` for the
+/// unknown request kind — the degrade signal that pins this to
+/// `PerTask` for the rest of the connection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BatchSupport {
+    Unknown,
+    Native,
+    PerTask,
+}
+
 /// Typed request/reply client.
 pub struct Client {
     conn: Box<dyn ClientConn>,
     worker: String,
     exit_on_drop: bool,
+    batch: BatchSupport,
 }
 
 impl Client {
     pub fn new(conn: Box<dyn ClientConn>, worker: impl Into<String>) -> Client {
-        Client { conn, worker: worker.into(), exit_on_drop: false }
+        Client { conn, worker: worker.into(), exit_on_drop: false, batch: BatchSupport::Unknown }
     }
 
     /// Announce departure (`Exit`) when this client is dropped, so a
@@ -84,8 +124,114 @@ impl Client {
         }
     }
 
+    /// Submit a batch of tasks in one round-trip, returning one
+    /// [`SubmitOutcome`] per item in order.  Against a pre-batch hub the
+    /// first call detects the unknown request kind and transparently
+    /// degrades to per-task `Create` round-trips (same outcomes, more
+    /// RTTs) for the rest of the connection.
+    pub fn submit(&mut self, items: &[CreateItem]) -> Result<Vec<SubmitOutcome>> {
+        if items.is_empty() {
+            return Ok(Vec::new());
+        }
+        if self.batch != BatchSupport::PerTask {
+            let req = Request::CreateBatch { items: items.to_vec() };
+            match self.roundtrip(&req)? {
+                Response::Batch(results) => {
+                    self.batch = BatchSupport::Native;
+                    if results.len() != items.len() {
+                        bail!(
+                            "batch reply carries {} results for {} items",
+                            results.len(),
+                            items.len()
+                        );
+                    }
+                    return Ok(results
+                        .into_iter()
+                        .map(|r| match r {
+                            BatchItem::Ok => SubmitOutcome::Created,
+                            BatchItem::Err { msg, code } => {
+                                SubmitOutcome::Refused(ServerError { code, msg })
+                            }
+                        })
+                        .collect());
+                }
+                // a whole-frame Err to a batch kind only comes from a
+                // pre-batch hub ("bad request: unknown request kind"):
+                // degrade to per-task mode for good
+                Response::Err { .. } => self.batch = BatchSupport::PerTask,
+                other => bail!("unexpected reply {other:?}"),
+            }
+        }
+        let mut out = Vec::with_capacity(items.len());
+        for item in items {
+            match self.create_impl(item.task.clone(), &item.deps) {
+                Ok(()) => out.push(SubmitOutcome::Created),
+                Err(e) => match e.downcast::<ServerError>() {
+                    Ok(se) => out.push(SubmitOutcome::Refused(se)),
+                    Err(e) => return Err(e),
+                },
+            }
+        }
+        Ok(out)
+    }
+
+    /// Acquire up to `n` ready tasks in one round-trip (the paper's
+    /// "Steal n" batching — the batch-first name for it).
+    pub fn acquire(&mut self, n: u32) -> Result<StealBatch> {
+        self.steal_n_impl(n)
+    }
+
+    /// Report a batch of completions in one round-trip (the symmetric
+    /// twin of [`Client::acquire`]).  Per-item failures (unknown task,
+    /// wrong state) surface as the first [`ServerError`]; against a
+    /// pre-batch hub this degrades to per-task `Complete` round-trips
+    /// like [`Client::submit`].
+    pub fn report(&mut self, completions: &[Completion]) -> Result<()> {
+        if completions.is_empty() {
+            return Ok(());
+        }
+        if self.batch != BatchSupport::PerTask {
+            let req = Request::CompleteBatch {
+                worker: self.worker.clone(),
+                completions: completions.to_vec(),
+            };
+            match self.roundtrip(&req)? {
+                Response::Batch(results) => {
+                    self.batch = BatchSupport::Native;
+                    for r in results {
+                        if let BatchItem::Err { msg, code } = r {
+                            return Err(ServerError { code, msg }.into());
+                        }
+                    }
+                    return Ok(());
+                }
+                Response::Err { .. } => self.batch = BatchSupport::PerTask,
+                other => bail!("unexpected reply {other:?}"),
+            }
+        }
+        for c in completions {
+            self.complete_impl(&c.task, c.success)?;
+        }
+        Ok(())
+    }
+
+    /// Did the probed hub speak the batched wire kinds?  `None` until
+    /// the first [`Client::submit`]/[`Client::report`] ran.
+    pub fn uses_batch_wire(&self) -> Option<bool> {
+        match self.batch {
+            BatchSupport::Unknown => None,
+            BatchSupport::Native => Some(true),
+            BatchSupport::PerTask => Some(false),
+        }
+    }
+
     /// Create a task with dependencies.
+    #[deprecated(since = "0.3.0", note = "use the batch-first `submit` (single-item batch)")]
     pub fn create(&mut self, task: TaskMsg, deps: &[String]) -> Result<()> {
+        self.create_impl(task, deps)
+    }
+
+    fn create_impl(&mut self, task: TaskMsg, deps: &[String]) -> Result<()> {
         self.expect_ok(&Request::Create { task, deps: deps.to_vec() })
     }
 
@@ -93,10 +239,15 @@ impl Client {
     /// NotFound (nothing ready *yet*) is surfaced as `StealOutcome` via
     /// [`Client::steal_poll`]; this convenience blocks through it with
     /// the shared idle backoff (a parked worker must not hammer the hub).
+    #[deprecated(since = "0.3.0", note = "use `acquire` and back off on an empty batch")]
     pub fn steal(&mut self) -> Result<Option<TaskMsg>> {
+        self.steal_impl()
+    }
+
+    fn steal_impl(&mut self) -> Result<Option<TaskMsg>> {
         let mut backoff = IdleBackoff::new();
         loop {
-            match self.steal_poll()? {
+            match self.steal_poll_impl()? {
                 StealOutcome::Task(t) => return Ok(Some(t)),
                 StealOutcome::AllDone => return Ok(None),
                 StealOutcome::NotReady => {
@@ -107,7 +258,12 @@ impl Client {
     }
 
     /// Non-blocking steal: one round-trip, three-way outcome.
+    #[deprecated(since = "0.3.0", note = "use `acquire(1)`")]
     pub fn steal_poll(&mut self) -> Result<StealOutcome> {
+        self.steal_poll_impl()
+    }
+
+    fn steal_poll_impl(&mut self) -> Result<StealOutcome> {
         match self.roundtrip(&Request::Steal { worker: self.worker.clone() })? {
             Response::Task(t) => Ok(StealOutcome::Task(t)),
             Response::NotFound => Ok(StealOutcome::NotReady),
@@ -118,7 +274,12 @@ impl Client {
     }
 
     /// Steal up to n tasks (batching extension).
+    #[deprecated(since = "0.3.0", note = "renamed to `acquire`")]
     pub fn steal_n(&mut self, n: u32) -> Result<StealBatch> {
+        self.steal_n_impl(n)
+    }
+
+    fn steal_n_impl(&mut self, n: u32) -> Result<StealBatch> {
         match self.roundtrip(&Request::StealN { worker: self.worker.clone(), n })? {
             Response::Tasks(ts) => Ok(StealBatch::Tasks(ts)),
             Response::Exit => Ok(StealBatch::AllDone),
@@ -127,7 +288,12 @@ impl Client {
         }
     }
 
+    #[deprecated(since = "0.3.0", note = "use the batch-first `report` (single-item batch)")]
     pub fn complete(&mut self, task: &str, success: bool) -> Result<()> {
+        self.complete_impl(task, success)
+    }
+
+    fn complete_impl(&mut self, task: &str, success: bool) -> Result<()> {
         self.expect_ok(&Request::Complete {
             worker: self.worker.clone(),
             task: task.to_string(),
@@ -327,6 +493,15 @@ pub struct WorkerOpts {
     /// steal-RTT and task-compute histograms.  Disabled (no-op) by
     /// default; share one enabled registry across a pool to aggregate.
     pub metrics: Registry,
+    /// completions to buffer locally before one batched
+    /// [`Client::report`] round-trip.  1 (the default) reports after
+    /// every task — the historical behavior; larger values amortize the
+    /// completion RTT across `report_batch` tasks.  The buffer is always
+    /// flushed before parking (buffered completions may be gating
+    /// successors) and before the loop returns, so a worker that exits —
+    /// or dies and lets `exit_on_drop` fire — never strands reported
+    /// work; 0 is clamped to 1.
+    pub report_batch: usize,
 }
 
 impl Default for WorkerOpts {
@@ -338,6 +513,7 @@ impl Default for WorkerOpts {
             tracer: Tracer::default(),
             trace_terminals: false,
             metrics: Registry::default(),
+            report_batch: 1,
         }
     }
 }
@@ -370,7 +546,21 @@ pub fn run_worker_opts(
     let mut stats = WorkerStats::default();
     let mut buffer: VecDeque<TaskMsg> = VecDeque::new();
     let batch = opts.prefetch.max(1);
+    let report_batch = opts.report_batch.max(1);
+    // completions finished locally but not yet reported to the hub
+    let mut pending: Vec<Completion> = Vec::new();
     let mut backoff = IdleBackoff::with_bounds(opts.idle_floor, opts.idle_ceiling);
+    // one batched report round-trip for everything buffered
+    fn flush(client: &mut Client, pending: &mut Vec<Completion>, stats: &mut WorkerStats) -> Result<()> {
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let r = client.report(pending);
+        stats.comm_s += t0.elapsed().as_secs_f64();
+        pending.clear();
+        r
+    }
     // park tracking: one WorkerParks per *episode* of consecutive empty
     // polls, not per backoff sleep — the metric counts transitions into
     // the idle state, matching the hub's view of a parked worker
@@ -380,13 +570,19 @@ pub fn run_worker_opts(
         while (buffer.len() as u32) < batch {
             let t0 = Instant::now();
             opts.metrics.inc(Counter::WorkerPolls);
-            let outcome = client.steal_n(batch - buffer.len() as u32)?;
+            let outcome = client.acquire(batch - buffer.len() as u32)?;
             let rtt = t0.elapsed();
             opts.metrics.observe(Series::StealRtt, rtt);
             stats.comm_s += rtt.as_secs_f64();
             match outcome {
                 StealBatch::Tasks(ts) if ts.is_empty() => {
                     if buffer.is_empty() {
+                        // our own unreported completions may be gating
+                        // successors — flush, then retry before parking
+                        if !pending.is_empty() {
+                            flush(client, &mut pending, &mut stats)?;
+                            continue 'outer;
+                        }
                         // nothing in hand and nothing ready: back off
                         if !parked {
                             parked = true;
@@ -426,10 +622,12 @@ pub fn run_worker_opts(
             let kind = if ok { EventKind::Finished } else { EventKind::Failed };
             opts.tracer.record(&task.name, kind, client.worker());
         }
-        let t0 = Instant::now();
-        client.complete(&task.name, ok)?;
-        stats.comm_s += t0.elapsed().as_secs_f64();
+        pending.push(Completion { task: task.name.clone(), success: ok });
+        if pending.len() >= report_batch {
+            flush(client, &mut pending, &mut stats)?;
+        }
     }
+    flush(client, &mut pending, &mut stats)?;
     Ok(stats)
 }
 
@@ -541,15 +739,22 @@ mod tests {
         let (connector, handle) = spawn_inproc(farm(0), ServerConfig::default());
         {
             let mut seed = Client::new(Box::new(connector.connect()), "user");
-            seed.create(TaskMsg::new("expand", vec![]), &[]).unwrap();
+            let out =
+                seed.submit(&[CreateItem::new(TaskMsg::new("expand", vec![]), vec![])]).unwrap();
+            assert!(out.iter().all(SubmitOutcome::is_created));
         }
         let mut c = Client::new(Box::new(connector.connect()), "w0");
         let conn2 = connector.connect();
         let mut creator = Client::new(Box::new(conn2), "w0-creator");
         let stats = run_worker(&mut c, 0, |t| {
             if t.name == "expand" {
-                creator.create(TaskMsg::new("child-1", vec![]), &[]).unwrap();
-                creator.create(TaskMsg::new("child-2", vec![]), &[]).unwrap();
+                let out = creator
+                    .submit(&[
+                        CreateItem::new(TaskMsg::new("child-1", vec![]), vec![]),
+                        CreateItem::new(TaskMsg::new("child-2", vec![]), vec![]),
+                    ])
+                    .unwrap();
+                assert!(out.iter().all(SubmitOutcome::is_created));
             }
             Ok(())
         })
@@ -567,7 +772,7 @@ mod tests {
         {
             let mut dying =
                 Client::new(Box::new(connector.connect()), "dying").exit_on_drop(true);
-            match dying.steal_n(2).unwrap() {
+            match dying.acquire(2).unwrap() {
                 StealBatch::Tasks(ts) => assert_eq!(ts.len(), 2),
                 other => panic!("expected a batch, got {other:?}"),
             }
@@ -600,6 +805,94 @@ mod tests {
         drop(c);
         drop(connector);
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn submit_reports_per_item_outcomes_in_order() {
+        let (connector, handle) = spawn_inproc(SchedState::new(), ServerConfig::default());
+        let mut c = Client::new(Box::new(connector.connect()), "user");
+        assert_eq!(c.uses_batch_wire(), None, "unprobed before the first batch call");
+        let out = c
+            .submit(&[
+                CreateItem::new(TaskMsg::new("a", vec![]), vec![]),
+                CreateItem::new(TaskMsg::new("a", vec![]), vec![]), // duplicate
+                CreateItem::new(TaskMsg::new("b", vec![]), vec!["ghost".into()]), // missing dep
+                CreateItem::new(TaskMsg::new("c", vec![]), vec!["a".into()]),
+            ])
+            .unwrap();
+        assert_eq!(c.uses_batch_wire(), Some(true), "current hub speaks batch kinds");
+        assert_eq!(out.len(), 4);
+        assert!(out[0].is_created());
+        assert_eq!(out[1].code(), Some(RefusalCode::Duplicate));
+        assert_eq!(out[2].code(), Some(RefusalCode::DepMissing));
+        assert!(out[3].is_created());
+        // a refusal inside the batch never poisoned the frame: the
+        // accepted items are live and drainable
+        let mut w = Client::new(Box::new(connector.connect()), "w0");
+        let stats = run_worker(&mut w, 0, |_| Ok(())).unwrap();
+        assert_eq!(stats.tasks_run, 2);
+        drop(c);
+        drop(w);
+        drop(connector);
+        assert!(handle.join().unwrap().all_done());
+    }
+
+    #[test]
+    fn report_flags_bad_completions() {
+        let (connector, handle) = spawn_inproc(farm(2), ServerConfig::default());
+        let mut c = Client::new(Box::new(connector.connect()), "w0");
+        let ts = match c.acquire(2).unwrap() {
+            StealBatch::Tasks(ts) => ts,
+            other => panic!("expected tasks, got {other:?}"),
+        };
+        assert_eq!(ts.len(), 2);
+        // one good completion + one for a task we never stole
+        let err = c
+            .report(&[Completion::ok(&ts[0].name), Completion::ok("never-stolen")])
+            .unwrap_err();
+        let se = err.downcast::<ServerError>().expect("typed server error");
+        assert!(se.msg.contains("never-stolen"), "{se}");
+        // the good half of the batch landed
+        c.report(&[Completion::ok(&ts[1].name)]).unwrap();
+        let st = c.status().unwrap();
+        assert_eq!(st.completed, 2);
+        drop(c);
+        drop(connector);
+        assert!(handle.join().unwrap().all_done());
+    }
+
+    #[test]
+    fn batched_reporting_drains_dependency_chains() {
+        // report_batch > 1 buffers completions locally; the flush-before-
+        // park rule must kick in when buffered completions gate the only
+        // remaining successors, or this chain would deadlock
+        let mut s = SchedState::new();
+        s.create(TaskMsg::new("c0", vec![]), &[]).unwrap();
+        for i in 1..6 {
+            s.create(TaskMsg::new(format!("c{i}"), vec![]), &[format!("c{}", i - 1)]).unwrap();
+        }
+        let (connector, handle) = spawn_inproc(s, ServerConfig::default());
+        let mut c = Client::new(Box::new(connector.connect()), "w0");
+        let opts = WorkerOpts { report_batch: 4, ..WorkerOpts::default() };
+        let stats = run_worker_opts(&mut c, &opts, |_| Ok(())).unwrap();
+        assert_eq!(stats.tasks_run, 6);
+        drop(c);
+        drop(connector);
+        assert!(handle.join().unwrap().all_done());
+    }
+
+    #[test]
+    fn report_batch_sizes_all_drain_farm() {
+        for report_batch in [1, 3, 16, 64] {
+            let (connector, handle) = spawn_inproc(farm(40), ServerConfig::default());
+            let mut c = Client::new(Box::new(connector.connect()), "w0");
+            let opts = WorkerOpts { prefetch: 4, report_batch, ..WorkerOpts::default() };
+            let stats = run_worker_opts(&mut c, &opts, |_| Ok(())).unwrap();
+            assert_eq!(stats.tasks_run, 40, "report_batch={report_batch}");
+            drop(c);
+            drop(connector);
+            assert!(handle.join().unwrap().all_done());
+        }
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //! | Status   | –              | Status          | (dquery support)
 //! | Metrics  | –              | Metrics         | (live-metrics extension)
 //! | Subscribe| Worker, pfx, n | Events          | (lifecycle tail extension)
+//! | CreateBatch   | [Task, [Task]]   | Batch    | (throughput extension)
+//! | CompleteBatch | Worker, [(Task, ok)] | Batch| (throughput extension)
 //!
 //! Workers are strings; Tasks are messages carrying arbitrary metadata —
 //! exactly the paper's protobuf choice, here via `substrate::wire`.
@@ -65,6 +67,37 @@ impl TaskMsg {
     }
 }
 
+/// One task of a batched Create: the task plus its dependency names —
+/// the payload of one classic `Create` request, batchable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CreateItem {
+    pub task: TaskMsg,
+    pub deps: Vec<String>,
+}
+
+impl CreateItem {
+    pub fn new(task: TaskMsg, deps: Vec<String>) -> CreateItem {
+        CreateItem { task, deps }
+    }
+}
+
+/// One completion report inside a batched Complete.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Completion {
+    pub task: String,
+    pub success: bool,
+}
+
+impl Completion {
+    pub fn ok(task: impl Into<String>) -> Completion {
+        Completion { task: task.into(), success: true }
+    }
+
+    pub fn failed(task: impl Into<String>) -> Completion {
+        Completion { task: task.into(), success: false }
+    }
+}
+
 /// Requests a client can send to dhub.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
@@ -94,6 +127,18 @@ pub enum Request {
     /// events (0 = server default).  Old servers answer the unknown
     /// kind with `Response::Err`, so tail clients degrade cleanly.
     Subscribe { worker: String, prefix: String, max: u32 },
+    /// Batched Create: every item is one classic Create, applied in
+    /// request order, answered with per-item results
+    /// ([`Response::Batch`]) so refusals keep their classification.
+    /// Old hubs answer the unknown kind with a whole-frame
+    /// `Response::Err`, which tells the client to degrade to per-task
+    /// mode — the submit side of the throughput extension.
+    CreateBatch { items: Vec<CreateItem> },
+    /// Batched Complete, the `StealN`-symmetric completion path: one
+    /// worker reports many finished tasks in one round trip.  Same
+    /// per-item `Batch` reply and same old-hub degrade signal as
+    /// `CreateBatch`.
+    CompleteBatch { worker: String, completions: Vec<Completion> },
 }
 
 const REQ_CREATE: u64 = 1;
@@ -106,6 +151,8 @@ const REQ_STATUS: u64 = 7;
 const REQ_SAVE: u64 = 8;
 const REQ_METRICS: u64 = 9;
 const REQ_SUBSCRIBE: u64 = 10;
+const REQ_CREATE_BATCH: u64 = 11;
+const REQ_COMPLETE_BATCH: u64 = 12;
 
 impl Request {
     pub fn encode(&self) -> Vec<u8> {
@@ -160,6 +207,29 @@ impl Request {
                     w.uint(5, *max as u64);
                 }
             }
+            Request::CreateBatch { items } => {
+                w.uint(1, REQ_CREATE_BATCH);
+                // repeated item submessages (field 8), each reusing the
+                // classic Create's inner layout: 2 = task, 3 = deps
+                for item in items {
+                    let mut iw = Writer::new();
+                    item.task.encode_into(&mut iw, 2);
+                    iw.strings(3, item.deps.iter().map(String::as_str));
+                    w.message(8, &iw);
+                }
+            }
+            Request::CompleteBatch { worker, completions } => {
+                w.uint(1, REQ_COMPLETE_BATCH);
+                w.string(4, worker);
+                // repeated completion submessages (field 8), each
+                // reusing Complete's layout: 6 = task name, 7 = success
+                for c in completions {
+                    let mut cw = Writer::new();
+                    cw.string(6, &c.task);
+                    cw.uint(7, c.success as u64);
+                    w.message(8, &cw);
+                }
+            }
         }
         w.into_bytes()
     }
@@ -204,6 +274,47 @@ impl Request {
                 worker: worker()?,
                 prefix: wire::get_str(&fields, 6).unwrap_or_default().to_string(),
                 max: wire::get_u64(&fields, 5).unwrap_or(0) as u32,
+            },
+            REQ_CREATE_BATCH => Request::CreateBatch {
+                items: fields
+                    .iter()
+                    .filter(|(f, _)| *f == 8)
+                    .map(|(_, v)| -> Result<CreateItem> {
+                        let bytes = v
+                            .as_bytes()
+                            .ok_or_else(|| anyhow!("batch item has wrong wire type"))?;
+                        let sub = Reader::new(bytes).fields()?;
+                        let tb = sub
+                            .iter()
+                            .find(|(f, _)| *f == 2)
+                            .and_then(|(_, v)| v.as_bytes())
+                            .ok_or_else(|| anyhow!("CreateBatch item missing task"))?;
+                        Ok(CreateItem {
+                            task: TaskMsg::decode(tb)?,
+                            deps: wire::get_strs(&sub, 3)
+                                .into_iter()
+                                .map(str::to_string)
+                                .collect(),
+                        })
+                    })
+                    .collect::<Result<Vec<CreateItem>>>()?,
+            },
+            REQ_COMPLETE_BATCH => Request::CompleteBatch {
+                worker: worker()?,
+                completions: fields
+                    .iter()
+                    .filter(|(f, _)| *f == 8)
+                    .map(|(_, v)| -> Result<Completion> {
+                        let bytes = v
+                            .as_bytes()
+                            .ok_or_else(|| anyhow!("batch item has wrong wire type"))?;
+                        let sub = Reader::new(bytes).fields()?;
+                        Ok(Completion {
+                            task: wire::get_str(&sub, 6)?.to_string(),
+                            success: wire::get_u64(&sub, 7).unwrap_or(1) != 0,
+                        })
+                    })
+                    .collect::<Result<Vec<Completion>>>()?,
             },
             other => bail!("unknown request kind {other}"),
         })
@@ -302,6 +413,34 @@ pub enum Response {
     /// the subscriber's cumulative drop-oldest count, and whether the
     /// hub has drained (so a non-follow tail knows when to stop).
     Events { events: Vec<TaskEvent>, dropped: u64, done: bool },
+    /// Per-item batch results, order-aligned with the request's items.
+    /// The only reply a current hub sends for `CreateBatch` /
+    /// `CompleteBatch` — a whole-frame `Err` to a batch request
+    /// therefore always means the hub predates the batch kinds.
+    Batch(Vec<BatchItem>),
+}
+
+/// Outcome of one item inside a batched request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BatchItem {
+    Ok,
+    /// This item failed server-side; `code` classifies Create refusals
+    /// exactly like the single-shot [`Response::Err`] does.
+    Err { msg: String, code: Option<RefusalCode> },
+}
+
+impl BatchItem {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, BatchItem::Ok)
+    }
+
+    /// The refusal classification, if this item was refused with one.
+    pub fn code(&self) -> Option<RefusalCode> {
+        match self {
+            BatchItem::Ok => None,
+            BatchItem::Err { code, .. } => *code,
+        }
+    }
 }
 
 const RESP_TASK: u64 = 1;
@@ -313,6 +452,7 @@ const RESP_ERR: u64 = 6;
 const RESP_STATUS: u64 = 7;
 const RESP_METRICS: u64 = 8;
 const RESP_EVENTS: u64 = 9;
+const RESP_BATCH: u64 = 10;
 
 // TaskEvent wire layout (repeated sub-message, field 30 of an Events
 // frame): {1: task, 2: kind name, 3: t as f64 bits (uint — same float
@@ -483,6 +623,25 @@ impl Response {
                 }
                 w.uint(32, *done as u64);
             }
+            Response::Batch(results) => {
+                w.uint(1, RESP_BATCH);
+                // repeated result submessages (field 40):
+                // {1: err flag, 2: msg, 3: refusal code}
+                for r in results {
+                    let mut rw = Writer::new();
+                    match r {
+                        BatchItem::Ok => rw.uint(1, 0),
+                        BatchItem::Err { msg, code } => {
+                            rw.uint(1, 1);
+                            rw.string(2, msg);
+                            if let Some(c) = code {
+                                rw.uint(3, c.to_u64());
+                            }
+                        }
+                    }
+                    w.message(40, &rw);
+                }
+            }
         }
         w.into_bytes()
     }
@@ -538,6 +697,28 @@ impl Response {
                 dropped: wire::get_u64(&fields, 31).unwrap_or(0),
                 done: wire::get_u64(&fields, 32).unwrap_or(0) != 0,
             },
+            RESP_BATCH => Response::Batch(
+                fields
+                    .iter()
+                    .filter(|(f, _)| *f == 40)
+                    .map(|(_, v)| -> Result<BatchItem> {
+                        let bytes = v
+                            .as_bytes()
+                            .ok_or_else(|| anyhow!("batch result has wrong wire type"))?;
+                        let sub = Reader::new(bytes).fields()?;
+                        Ok(if wire::get_u64(&sub, 1).unwrap_or(0) == 0 {
+                            BatchItem::Ok
+                        } else {
+                            BatchItem::Err {
+                                msg: wire::get_str(&sub, 2).unwrap_or("?").to_string(),
+                                code: wire::get_u64(&sub, 3)
+                                    .ok()
+                                    .and_then(RefusalCode::from_u64),
+                            }
+                        })
+                    })
+                    .collect::<Result<Vec<BatchItem>>>()?,
+            ),
             other => bail!("unknown response kind {other}"),
         })
     }
@@ -678,6 +859,79 @@ mod tests {
             dropped: u64::MAX,
             done: true,
         });
+    }
+
+    #[test]
+    fn batch_requests_roundtrip() {
+        roundtrip_req(Request::CreateBatch { items: vec![] });
+        roundtrip_req(Request::CreateBatch {
+            items: vec![
+                CreateItem::new(TaskMsg::new("prep", vec![]), vec![]),
+                CreateItem::new(
+                    TaskMsg {
+                        name: "dock-7".into(),
+                        body: vec![1, 2, 3],
+                        originator: "user".into(),
+                    },
+                    vec!["prep".into()],
+                ),
+                CreateItem::new(TaskMsg::new("タスク-α", vec![0xf0]), vec!["dock-7".into()]),
+            ],
+        });
+        roundtrip_req(Request::CompleteBatch {
+            worker: "w-001".into(),
+            completions: vec![],
+        });
+        roundtrip_req(Request::CompleteBatch {
+            worker: "w".into(),
+            completions: vec![
+                Completion::ok("a"),
+                Completion::failed("b"),
+                Completion { task: "依存-β".into(), success: true },
+            ],
+        });
+    }
+
+    #[test]
+    fn batch_responses_roundtrip() {
+        roundtrip_resp(Response::Batch(vec![]));
+        roundtrip_resp(Response::Batch(vec![
+            BatchItem::Ok,
+            BatchItem::Err { msg: "task \"a\" already exists".into(), code: Some(RefusalCode::Duplicate) },
+            BatchItem::Err { msg: "dep gone".into(), code: Some(RefusalCode::DepErrored) },
+            BatchItem::Err { msg: "not assigned".into(), code: None },
+            BatchItem::Ok,
+        ]));
+    }
+
+    #[test]
+    fn batch_kinds_are_fresh() {
+        // kinds 11 and 12 (requests) and 10 (response), the next free
+        // slots: a current server decodes them, while a pre-batch hub
+        // answers the unknown request kind with Err — the degrade
+        // signal batch clients fall back on
+        let req = Request::CreateBatch {
+            items: vec![CreateItem::new(TaskMsg::new("t", vec![]), vec![])],
+        };
+        let bytes = req.encode();
+        assert_eq!(Request::decode(&bytes).unwrap(), req);
+        let fields = crate::substrate::wire::Reader::new(&bytes).fields().unwrap();
+        assert_eq!(wire::get_u64(&fields, 1).unwrap(), 11);
+
+        let req = Request::CompleteBatch {
+            worker: "w".into(),
+            completions: vec![Completion::ok("t")],
+        };
+        let bytes = req.encode();
+        assert_eq!(Request::decode(&bytes).unwrap(), req);
+        let fields = crate::substrate::wire::Reader::new(&bytes).fields().unwrap();
+        assert_eq!(wire::get_u64(&fields, 1).unwrap(), 12);
+
+        let resp = Response::Batch(vec![BatchItem::Ok]);
+        let bytes = resp.encode();
+        assert_eq!(Response::decode(&bytes).unwrap(), resp);
+        let fields = crate::substrate::wire::Reader::new(&bytes).fields().unwrap();
+        assert_eq!(wire::get_u64(&fields, 1).unwrap(), 10);
     }
 
     #[test]

@@ -16,8 +16,10 @@ pub mod state;
 
 pub use client::{
     run_worker, run_worker_opts, Client, EventBatch, ServerError, StealBatch, StealOutcome,
-    WorkerOpts, WorkerStats,
+    SubmitOutcome, WorkerOpts, WorkerStats,
 };
-pub use messages::{RefusalCode, Request, Response, StatusInfo, TaskMsg};
+pub use messages::{
+    BatchItem, Completion, CreateItem, RefusalCode, Request, Response, StatusInfo, TaskMsg,
+};
 pub use server::{serve, spawn_inproc, spawn_tcp, ServerConfig};
 pub use state::{CreateError, SchedState, TaskState};

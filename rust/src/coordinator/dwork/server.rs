@@ -14,7 +14,7 @@ use std::time::Instant;
 use crate::metrics::{Counter, Gauge, Registry, Series};
 use crate::substrate::transport::RequestRx;
 
-use super::messages::{Request, Response};
+use super::messages::{BatchItem, Request, Response};
 use super::state::SchedState;
 
 /// Counters the server publishes for benches/monitoring.
@@ -91,6 +91,12 @@ pub fn serve_with_counters(
             Ok(Request::Metrics) => (Counter::ReqMetrics, Some(Series::ServiceMetrics)),
             Ok(Request::Subscribe { .. }) => {
                 (Counter::ReqSubscribe, Some(Series::ServiceSubscribe))
+            }
+            Ok(Request::CreateBatch { .. }) => {
+                (Counter::ReqCreateBatch, Some(Series::ServiceCreateBatch))
+            }
+            Ok(Request::CompleteBatch { .. }) => {
+                (Counter::ReqCompleteBatch, Some(Series::ServiceCompleteBatch))
             }
         };
         metrics.inc(kind_counter);
@@ -210,6 +216,40 @@ pub fn serve_with_counters(
                 let (events, dropped) = state.subscribe_poll(&worker, &prefix, max as usize);
                 Response::Events { events, dropped, done: !state.is_empty() && state.all_done() }
             }
+            // batched wire ops: one frame, one reply, per-item results.
+            // Refusals/errors stay per-item (the whole frame never turns
+            // into Response::Err — that reply is reserved for pre-batch
+            // hubs, whose "unknown request kind" Err is the client's
+            // degrade-to-per-task signal).  The snapshot gate and the
+            // service-time observation run once per wire message, not
+            // once per task.
+            Ok(Request::CreateBatch { items }) => {
+                let mut results = Vec::with_capacity(items.len());
+                for item in items {
+                    match state.create(item.task, &item.deps) {
+                        Ok(()) => {
+                            mutated = true;
+                            results.push(BatchItem::Ok);
+                        }
+                        Err(e) => results
+                            .push(BatchItem::Err { msg: e.to_string(), code: Some(e.code) }),
+                    }
+                }
+                Response::Batch(results)
+            }
+            Ok(Request::CompleteBatch { worker, completions }) => {
+                let mut results = Vec::with_capacity(completions.len());
+                for c in completions {
+                    match state.complete(&worker, &c.task, c.success) {
+                        Ok(()) => {
+                            mutated = true;
+                            results.push(BatchItem::Ok);
+                        }
+                        Err(e) => results.push(BatchItem::Err { msg: e.to_string(), code: None }),
+                    }
+                }
+                Response::Batch(results)
+            }
         };
         if mutated {
             mutations += 1;
@@ -272,23 +312,37 @@ pub fn counters() -> Arc<ServerCounters> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::dwork::client::Client;
-    use crate::coordinator::dwork::messages::TaskMsg;
+    use crate::coordinator::dwork::client::{Client, StealBatch};
+    use crate::coordinator::dwork::messages::{Completion, CreateItem, TaskMsg};
     use crate::substrate::transport::ClientConn;
+
+    /// Acquire exactly one task, asserting the hub still has work.
+    fn take_one(c: &mut Client) -> TaskMsg {
+        match c.acquire(1).unwrap() {
+            StealBatch::Tasks(mut ts) if ts.len() == 1 => ts.pop().unwrap(),
+            other => panic!("expected one task, got {other:?}"),
+        }
+    }
 
     #[test]
     fn inproc_end_to_end() {
         let (connector, handle) = spawn_inproc(SchedState::new(), ServerConfig::default());
         let mut c = Client::new(Box::new(connector.connect()), "w0");
-        c.create(TaskMsg::new("a", vec![1]), &[]).unwrap();
-        c.create(TaskMsg::new("b", vec![2]), &["a".to_string()]).unwrap();
-        let t = c.steal().unwrap().unwrap();
+        let out = c
+            .submit(&[
+                CreateItem::new(TaskMsg::new("a", vec![1]), vec![]),
+                CreateItem::new(TaskMsg::new("b", vec![2]), vec!["a".to_string()]),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|o| o.is_created()));
+        let t = take_one(&mut c);
         assert_eq!(t.name, "a");
-        c.complete(&t.name, true).unwrap();
-        let t = c.steal().unwrap().unwrap();
+        c.report(&[Completion::ok(&t.name)]).unwrap();
+        let t = take_one(&mut c);
         assert_eq!(t.name, "b");
-        c.complete(&t.name, true).unwrap();
-        assert!(c.steal().unwrap().is_none(), "all done => Exit");
+        c.report(&[Completion::ok(&t.name)]).unwrap();
+        assert!(matches!(c.acquire(1).unwrap(), StealBatch::AllDone), "all done => Exit");
         drop(c);
         drop(connector);
         let state = handle.join().unwrap();
@@ -332,12 +386,13 @@ mod tests {
         for _ in 0..3 {
             c.status().unwrap();
         }
-        assert!(matches!(c.steal_poll().unwrap(), super::super::client::StealOutcome::NotReady));
+        assert!(matches!(c.acquire(1).unwrap(), StealBatch::Tasks(ts) if ts.is_empty()));
         assert!(!snap.exists(), "non-mutating requests triggered the auto-snapshot");
-        c.create(TaskMsg::new("a", vec![]), &[]).unwrap(); // mutation 1
+        // one single-item batch frame = one mutation against the gate
+        c.submit(&[CreateItem::new(TaskMsg::new("a", vec![]), vec![])]).unwrap(); // mutation 1
         c.status().unwrap();
         assert!(!snap.exists(), "snapshot fired before the interval elapsed");
-        c.create(TaskMsg::new("b", vec![]), &[]).unwrap(); // mutation 2 -> snapshot
+        c.submit(&[CreateItem::new(TaskMsg::new("b", vec![]), vec![])]).unwrap(); // mutation 2 -> snapshot
         c.status().unwrap(); // round-trip: snapshot already written when this returns
         assert!(snap.exists(), "snapshot missing after snapshot_every mutations");
         // with the counter parked at a multiple, reads must not re-save
@@ -356,19 +411,17 @@ mod tests {
     fn empty_hub_parks_workers_instead_of_dismissing() {
         // a worker that joins a freshly served hub (no submissions yet)
         // must be told "nothing ready yet", not "all done, go away"
-        use crate::coordinator::dwork::client::StealOutcome;
         let (connector, handle) = spawn_inproc(SchedState::new(), ServerConfig::default());
         let mut c = Client::new(Box::new(connector.connect()), "early-bird");
-        assert!(matches!(c.steal_poll().unwrap(), StealOutcome::NotReady));
-        match c.steal_n(4).unwrap() {
-            super::super::client::StealBatch::Tasks(ts) => assert!(ts.is_empty()),
+        match c.acquire(4).unwrap() {
+            StealBatch::Tasks(ts) => assert!(ts.is_empty()),
             other => panic!("empty hub dismissed the worker: {other:?}"),
         }
         // once fed and drained, the hub does dismiss
-        c.create(TaskMsg::new("only", vec![]), &[]).unwrap();
-        let t = c.steal().unwrap().unwrap();
-        c.complete(&t.name, true).unwrap();
-        assert!(matches!(c.steal_poll().unwrap(), StealOutcome::AllDone));
+        c.submit(&[CreateItem::new(TaskMsg::new("only", vec![]), vec![])]).unwrap();
+        let t = take_one(&mut c);
+        c.report(&[Completion::ok(&t.name)]).unwrap();
+        assert!(matches!(c.acquire(1).unwrap(), StealBatch::AllDone));
         drop(c);
         drop(connector);
         handle.join().unwrap();
@@ -380,14 +433,20 @@ mod tests {
         let cfg = ServerConfig { metrics: metrics.clone(), ..ServerConfig::default() };
         let (connector, handle) = spawn_inproc(SchedState::new(), cfg);
         let mut c = Client::new(Box::new(connector.connect()), "w0");
-        c.create(TaskMsg::new("a", vec![]), &[]).unwrap();
-        c.create(TaskMsg::new("b", vec![]), &["a".to_string()]).unwrap();
-        let t = c.steal().unwrap().unwrap();
-        c.complete(&t.name, true).unwrap();
+        c.submit(&[
+            CreateItem::new(TaskMsg::new("a", vec![]), vec![]),
+            CreateItem::new(TaskMsg::new("b", vec![]), vec!["a".to_string()]),
+        ])
+        .unwrap();
+        let t = take_one(&mut c);
+        c.report(&[Completion::ok(&t.name)]).unwrap();
         let snap = c.metrics().unwrap();
         assert_eq!(snap.version, crate::metrics::MetricsSnapshot::VERSION);
-        assert_eq!(snap.counter("requests_create"), 2);
-        assert_eq!(snap.counter("requests_steal"), 1);
+        // the batched surface costs ONE create frame for the whole
+        // submission and one complete frame per report
+        assert_eq!(snap.counter("requests_create_batch"), 1);
+        assert_eq!(snap.counter("requests_complete_batch"), 1);
+        assert_eq!(snap.counter("requests_steal_n"), 1);
         assert_eq!(snap.counter("tasks_created"), 2);
         assert_eq!(snap.counter("tasks_completed"), 1);
         assert_eq!(snap.counter("steals_served"), 1);
@@ -395,12 +454,12 @@ mod tests {
         assert_eq!(snap.gauge("workers_connected"), 1);
         assert_eq!(snap.gauge("queue_depth"), 1, "b became ready when a completed");
         assert_eq!(snap.gauge("tasks_inflight"), 0);
-        let svc = snap.hist("service_create").expect("create service histogram");
-        assert_eq!(svc.count, 2);
+        let svc = snap.hist("service_create_batch").expect("create-batch service histogram");
+        assert_eq!(svc.count, 1, "service time observed per wire message, not per task");
         // worker exit flips the population series
-        let t = c.steal().unwrap().unwrap();
-        c.complete(&t.name, true).unwrap();
-        assert!(c.steal().unwrap().is_none(), "all done => Exit");
+        let t = take_one(&mut c);
+        c.report(&[Completion::ok(&t.name)]).unwrap();
+        assert!(matches!(c.acquire(1).unwrap(), StealBatch::AllDone), "all done => Exit");
         c.exit().unwrap();
         drop(c);
         drop(connector);
@@ -436,9 +495,9 @@ mod tests {
         assert!(b.events.is_empty());
         assert!(!b.done, "empty hub is not 'done'");
         let mut c = Client::new(Box::new(connector.connect()), "w0");
-        c.create(TaskMsg::new("a", vec![]), &[]).unwrap();
-        let t = c.steal().unwrap().unwrap();
-        c.complete(&t.name, true).unwrap();
+        c.submit(&[CreateItem::new(TaskMsg::new("a", vec![]), vec![])]).unwrap();
+        let t = take_one(&mut c);
+        c.report(&[Completion::ok(&t.name)]).unwrap();
         let b = tail.subscribe("", 0).unwrap();
         assert_eq!(b.dropped, 0);
         let kinds: Vec<EventKind> = b.events.iter().map(|e| e.kind).collect();
@@ -469,11 +528,93 @@ mod tests {
         let conn =
             crate::substrate::transport::tcp::TcpClient::connect(&addr.to_string()).unwrap();
         let mut c = Client::new(Box::new(conn), "w0");
-        c.create(TaskMsg::new("t1", b"payload".to_vec()), &[]).unwrap();
-        let t = c.steal().unwrap().unwrap();
+        c.submit(&[CreateItem::new(TaskMsg::new("t1", b"payload".to_vec()), vec![])]).unwrap();
+        let t = take_one(&mut c);
         assert_eq!(t.body, b"payload");
-        c.complete(&t.name, true).unwrap();
+        c.report(&[Completion::ok(&t.name)]).unwrap();
         let st = c.status().unwrap();
         assert_eq!(st.completed, 1);
+    }
+
+    #[test]
+    fn single_shot_kinds_still_served() {
+        // wire compatibility: an old client speaking per-task Create /
+        // Steal / Complete must keep working against the batch-era hub
+        use super::super::messages::{Request, Response};
+        let (connector, handle) = spawn_inproc(SchedState::new(), ServerConfig::default());
+        let mut raw = connector.connect();
+        let rt = |raw: &mut dyn ClientConn, req: &Request| {
+            Response::decode(&raw.request(&req.encode()).unwrap()).unwrap()
+        };
+        let r = rt(
+            &mut raw,
+            &Request::Create { task: TaskMsg::new("solo", vec![7]), deps: vec![] },
+        );
+        assert!(matches!(r, Response::Ok), "{r:?}");
+        let r = rt(&mut raw, &Request::Steal { worker: "old-worker".into() });
+        let Response::Task(t) = r else { panic!("expected Task, got {r:?}") };
+        assert_eq!(t.name, "solo");
+        assert_eq!(t.body, vec![7]);
+        let r = rt(
+            &mut raw,
+            &Request::Complete { worker: "old-worker".into(), task: "solo".into(), success: true },
+        );
+        assert!(matches!(r, Response::Ok), "{r:?}");
+        drop(raw);
+        drop(connector);
+        assert!(handle.join().unwrap().all_done());
+    }
+
+    #[test]
+    fn batch_frame_never_answers_whole_frame_err() {
+        // the degrade contract: clients treat a whole-frame Err to a
+        // batch kind as "pre-batch hub".  A current hub must therefore
+        // answer Response::Batch even when EVERY item is refused.
+        use super::super::messages::{BatchItem, Request, Response};
+        let (connector, handle) = spawn_inproc(SchedState::new(), ServerConfig::default());
+        let mut raw = connector.connect();
+        let req = Request::CreateBatch {
+            items: vec![
+                CreateItem::new(TaskMsg::new("x", vec![]), vec!["ghost".into()]),
+                CreateItem::new(TaskMsg::new("y", vec![]), vec!["ghost".into()]),
+            ],
+        };
+        let r = Response::decode(&raw.request(&req.encode()).unwrap()).unwrap();
+        let Response::Batch(items) = r else { panic!("expected Batch, got {r:?}") };
+        assert_eq!(items.len(), 2);
+        assert!(items.iter().all(|i| !i.is_ok()));
+        assert!(items.iter().all(|i| matches!(i, BatchItem::Err { .. })));
+        drop(raw);
+        drop(connector);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn sharded_hub_serves_batches_end_to_end() {
+        let (connector, handle) =
+            spawn_inproc(SchedState::with_shards(4), ServerConfig::default());
+        let mut c = Client::new(Box::new(connector.connect()), "submitter");
+        let items: Vec<CreateItem> = (0..64)
+            .map(|i| CreateItem::new(TaskMsg::new(format!("t{i}"), vec![]), vec![]))
+            .collect();
+        let out = c.submit(&items).unwrap();
+        assert!(out.iter().all(|o| o.is_created()));
+        let mut done = 0;
+        loop {
+            match c.acquire(8).unwrap() {
+                StealBatch::Tasks(ts) if ts.is_empty() => break,
+                StealBatch::AllDone => break,
+                StealBatch::Tasks(ts) => {
+                    let report: Vec<Completion> =
+                        ts.iter().map(|t| Completion::ok(&t.name)).collect();
+                    done += report.len();
+                    c.report(&report).unwrap();
+                }
+            }
+        }
+        assert_eq!(done, 64);
+        drop(c);
+        drop(connector);
+        assert!(handle.join().unwrap().all_done());
     }
 }

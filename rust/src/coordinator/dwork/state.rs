@@ -8,7 +8,10 @@
 //!   can be generated from these tables on startup" — exactly what
 //!   [`SchedState::rebuild`] does;
 //! * FIFO assignment with *front* re-insertion for transferred tasks: "the
-//!   same double-ended queue setup used for work-stealing";
+//!   same double-ended queue setup used for work-stealing" — optionally
+//!   split into N hash-keyed shards ([`SchedState::with_shards`]) with
+//!   cross-shard stealing on miss, so hundreds of concurrent workers stop
+//!   serializing on one deque; N = 1 (the default) is today's behavior;
 //! * the server never serves a task whose dependencies are incomplete;
 //! * `Exit` moves a dead worker's assignments back into the ready pool.
 
@@ -184,10 +187,91 @@ struct EventHub {
     epoch: Option<Instant>,
 }
 
+/// FNV-1a over a name: a stable, dependency-free hash so shard
+/// assignment is identical across runs, platforms, and restarts
+/// (`DefaultHasher` guarantees none of that).
+pub(crate) fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The ready pool, split into N shards keyed by task-name hash.  Each
+/// shard is the same double-ended queue the paper describes (FIFO
+/// `push_back`, front re-insertion for transferred/requeued tasks); a
+/// steal drains the worker's home shard first and work-steals from the
+/// other shards on miss, so concurrent workers mostly touch disjoint
+/// deques.  `N = 1` collapses to exactly the single-deque behavior the
+/// pre-shard tests pin.
+struct ReadyQueue {
+    shards: Vec<VecDeque<String>>,
+}
+
+impl ReadyQueue {
+    fn new(shards: usize) -> ReadyQueue {
+        ReadyQueue { shards: vec![VecDeque::new(); shards.max(1)] }
+    }
+
+    fn shard_of(&self, name: &str) -> usize {
+        if self.shards.len() == 1 {
+            0
+        } else {
+            (fnv1a(name) % self.shards.len() as u64) as usize
+        }
+    }
+
+    /// A worker's preferred shard — same hash family as the tasks, so
+    /// distinct workers spread across shards.
+    fn home(&self, worker: &str) -> usize {
+        if self.shards.len() == 1 {
+            0
+        } else {
+            (fnv1a(worker) % self.shards.len() as u64) as usize
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.shards.iter().map(VecDeque::len).sum()
+    }
+
+    fn push_back(&mut self, name: String) {
+        let i = self.shard_of(&name);
+        self.shards[i].push_back(name);
+    }
+
+    fn push_front(&mut self, name: String) {
+        let i = self.shard_of(&name);
+        self.shards[i].push_front(name);
+    }
+
+    /// Pop one ready task for a worker whose home shard is `home`: the
+    /// home shard first, then the others in wrap-around order
+    /// (work-stealing on miss).
+    fn pop_for(&mut self, home: usize) -> Option<String> {
+        let n = self.shards.len();
+        for k in 0..n {
+            if let Some(name) = self.shards[(home + k) % n].pop_front() {
+                return Some(name);
+            }
+        }
+        None
+    }
+
+    /// Targeted removal (error propagation): only the owning shard is
+    /// scanned.
+    fn remove(&mut self, name: &str) {
+        let i = self.shard_of(name);
+        self.shards[i].retain(|r| r != name);
+    }
+}
+
 /// The scheduler state machine.
 pub struct SchedState {
     tasks: HashMap<String, TaskEntry>,
-    ready: VecDeque<String>,
+    ready: ReadyQueue,
     /// worker -> assigned task names
     assigned: HashMap<String, HashSet<String>>,
     kv: KvStore,
@@ -205,9 +289,20 @@ pub struct SchedState {
 }
 
 impl SchedState {
-    /// Fresh volatile state.
+    /// Fresh volatile state (single ready-queue shard).
     pub fn new() -> SchedState {
         SchedState::with_store(KvStore::in_memory())
+    }
+
+    /// Fresh volatile state with an `n`-sharded ready queue (`n = 1`
+    /// reproduces [`SchedState::new`] exactly; 0 is clamped to 1).
+    pub fn with_shards(n: usize) -> SchedState {
+        SchedState::with_store_sharded(KvStore::in_memory(), n)
+    }
+
+    /// Ready-queue shard count this state was built with.
+    pub fn shard_count(&self) -> usize {
+        self.ready.shards.len()
     }
 
     /// Workflow-IR ingestion: a fresh volatile state pre-loaded with the
@@ -231,9 +326,16 @@ impl SchedState {
 
     /// State backed by a persistent store; replays any existing records.
     pub fn with_store(kv: KvStore) -> SchedState {
+        SchedState::with_store_sharded(kv, 1)
+    }
+
+    /// Persistent state with an `n`-sharded ready queue.  Shard count is
+    /// run-time configuration, not persisted state: a restart may pick a
+    /// different `n` and [`SchedState::rebuild`] redistributes.
+    pub fn with_store_sharded(kv: KvStore, n: usize) -> SchedState {
         let mut s = SchedState {
             tasks: HashMap::new(),
-            ready: VecDeque::new(),
+            ready: ReadyQueue::new(n),
             assigned: HashMap::new(),
             kv,
             seq: 0,
@@ -527,9 +629,10 @@ impl SchedState {
     /// empty Vec when nothing is ready — the caller distinguishes
     /// NotFound/Exit via [`SchedState::all_done`].
     pub fn steal(&mut self, worker: &str, n: u32) -> Vec<TaskMsg> {
+        let home = self.ready.home(worker);
         let mut out = Vec::new();
         for _ in 0..n {
-            let Some(name) = self.ready.pop_front() else { break };
+            let Some(name) = self.ready.pop_for(home) else { break };
             let e = self.tasks.get_mut(&name).expect("ready task must exist");
             debug_assert_eq!(e.state, TaskState::Ready);
             e.state = TaskState::Assigned;
@@ -617,8 +720,8 @@ impl SchedState {
                     continue; // already finished before the failure propagated
                 }
                 if e.state == TaskState::Ready {
-                    // remove from the ready queue
-                    self.ready.retain(|r| r != &name);
+                    // remove from the ready queue (owning shard only)
+                    self.ready.remove(&name);
                 }
                 e.state = TaskState::Error;
                 e.successors.clone()
@@ -1176,6 +1279,214 @@ mod tests {
         }
         assert_eq!(n, 100_000);
         assert!(s.all_done());
+    }
+
+    /// Drive the same op sequence through two states and assert the
+    /// steal order matches step for step.
+    fn assert_same_order(a: &mut SchedState, b: &mut SchedState) {
+        for i in 0..24 {
+            a.create(t(&format!("task{i}")), &[]).unwrap();
+            b.create(t(&format!("task{i}")), &[]).unwrap();
+        }
+        let (sa, sb) = (a.steal("w1", 5), b.steal("w1", 5));
+        assert_eq!(sa.iter().map(|m| &m.name).collect::<Vec<_>>(),
+                   sb.iter().map(|m| &m.name).collect::<Vec<_>>());
+        // a transfer (front re-insert) and a worker death in the middle
+        a.transfer("w1", &sa[2].name, &[]).unwrap();
+        b.transfer("w1", &sb[2].name, &[]).unwrap();
+        a.complete("w1", &sa[0].name, true).unwrap();
+        b.complete("w1", &sb[0].name, true).unwrap();
+        a.exit_worker("w1");
+        b.exit_worker("w1");
+        loop {
+            let (na, nb) = (a.steal("w2", 3), b.steal("w2", 3));
+            assert_eq!(na.iter().map(|m| &m.name).collect::<Vec<_>>(),
+                       nb.iter().map(|m| &m.name).collect::<Vec<_>>());
+            if na.is_empty() {
+                break;
+            }
+            for m in na {
+                a.complete("w2", &m.name, true).unwrap();
+                b.complete("w2", &m.name, true).unwrap();
+            }
+        }
+        assert!(a.all_done() && b.all_done());
+    }
+
+    #[test]
+    fn one_shard_matches_unsharded_exactly() {
+        // the N=1 pin: with_shards(1) must reproduce the single-deque
+        // scheduling order through creates, transfers, and a worker death
+        let mut a = SchedState::new();
+        let mut b = SchedState::with_shards(1);
+        assert_eq!(b.shard_count(), 1);
+        assert_same_order(&mut a, &mut b);
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let mut a = SchedState::new();
+        let mut b = SchedState::with_shards(0);
+        assert_eq!(b.shard_count(), 1);
+        assert_same_order(&mut a, &mut b);
+    }
+
+    #[test]
+    fn sharded_steal_crosses_shards_on_miss() {
+        // one worker must still drain everything: its home shard first,
+        // then work-stealing from the other shards
+        let mut s = SchedState::with_shards(4);
+        assert_eq!(s.shard_count(), 4);
+        for i in 0..32 {
+            s.create(t(&format!("task{i}")), &[]).unwrap();
+        }
+        let got = s.steal("lone-worker", 32);
+        assert_eq!(got.len(), 32, "a miss on the home shard steals elsewhere");
+        for m in &got {
+            s.complete("lone-worker", &m.name, true).unwrap();
+        }
+        assert!(s.all_done());
+    }
+
+    #[test]
+    fn sharded_preserves_per_shard_fifo_and_dependencies() {
+        let mut s = SchedState::with_shards(3);
+        s.create(t("a"), &[]).unwrap();
+        s.create(t("b"), &["a".into()]).unwrap();
+        // dependency gating is shard-independent
+        let got = s.steal("w", 10);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].name, "a");
+        s.complete("w", "a", true).unwrap();
+        assert_eq!(s.steal("w", 1)[0].name, "b");
+        s.complete("w", "b", true).unwrap();
+        assert!(s.all_done());
+    }
+
+    #[test]
+    fn sharded_error_propagation_leaves_other_shards_intact() {
+        let mut s = SchedState::with_shards(4);
+        s.create(t("boom"), &[]).unwrap();
+        s.create(t("child"), &["boom".into()]).unwrap();
+        // boom is the only ready task, so any shard scan must yield it
+        assert_eq!(s.steal("w", 1)[0].name, "boom");
+        for i in 0..8 {
+            s.create(t(&format!("ok{i}")), &[]).unwrap();
+        }
+        s.complete("w", "boom", false).unwrap();
+        assert_eq!(s.get("child").unwrap().state, TaskState::Error);
+        // the 8 independent tasks are untouched and fully drainable
+        let mut n = 0;
+        loop {
+            let batch = s.steal("w", 3);
+            if batch.is_empty() {
+                break;
+            }
+            for m in &batch {
+                s.complete("w", &m.name, true).unwrap();
+            }
+            n += batch.len();
+        }
+        assert_eq!(n, 8);
+        assert!(s.all_done());
+    }
+
+    #[test]
+    fn partial_batch_death_requeues_only_unreported() {
+        // regression (batched completion): a worker that stole a batch,
+        // reported part of it, then died must put back ONLY the
+        // unreported remainder — at the front, in seq order per shard
+        let mut s = SchedState::with_shards(4);
+        for name in ["a", "b", "c", "d"] {
+            s.create(t(name), &[]).unwrap();
+        }
+        let got = s.steal("doomed", 4);
+        assert_eq!(got.len(), 4);
+        s.complete("doomed", "a", true).unwrap();
+        s.complete("doomed", "c", true).unwrap();
+        let requeued = s.exit_worker("doomed");
+        assert_eq!(requeued, 2, "only the unreported half returns");
+        let back: Vec<String> = s.steal("w2", 4).into_iter().map(|m| m.name).collect();
+        assert_eq!(back.len(), 2);
+        assert!(back.contains(&"b".to_string()) && back.contains(&"d".to_string()));
+        for name in back {
+            s.complete("w2", &name, true).unwrap();
+        }
+        assert!(s.all_done());
+    }
+
+    #[test]
+    fn sharded_exit_requeue_fronts_per_shard() {
+        // a dead worker's tasks re-enter at the front OF THEIR SHARD in
+        // seq order, ahead of that shard's never-assigned tasks
+        let n = 4usize;
+        let mut s = SchedState::with_shards(n);
+        let names: Vec<String> = (0..16).map(|i| format!("task{i}")).collect();
+        for nm in &names {
+            s.create(t(nm), &[]).unwrap();
+        }
+        let stolen: Vec<String> = s.steal("w1", 6).into_iter().map(|m| m.name).collect();
+        assert_eq!(stolen.len(), 6);
+        s.exit_worker("w1");
+        let order: Vec<String> = s.steal("w2", 16).into_iter().map(|m| m.name).collect();
+        assert_eq!(order.len(), 16);
+        let shard_of = |nm: &str| (fnv1a(nm) % n as u64) as usize;
+        let idx_of = |nm: &str| names.iter().position(|x| x == nm).unwrap();
+        let mut per_shard: std::collections::HashMap<usize, Vec<&String>> =
+            std::collections::HashMap::new();
+        for nm in &order {
+            per_shard.entry(shard_of(nm)).or_default().push(nm);
+        }
+        for (_, drained) in per_shard {
+            // within a shard: the requeued block first (seq order), then
+            // the fresh block (seq order)
+            let k = drained.iter().take_while(|nm| stolen.contains(**nm)).count();
+            assert!(
+                drained[k..].iter().all(|nm| !stolen.contains(*nm)),
+                "requeued tasks must precede fresh ones in-shard: {drained:?}"
+            );
+            assert!(drained[..k].windows(2).all(|w| idx_of(w[0]) < idx_of(w[1])));
+            assert!(drained[k..].windows(2).all(|w| idx_of(w[0]) < idx_of(w[1])));
+        }
+    }
+
+    #[test]
+    fn sharded_state_survives_restart_with_different_shard_count() {
+        // shard count is runtime config: a hub restarted with a
+        // different N redistributes the rebuilt queue and still honors
+        // front re-insertion within each shard
+        let dir = std::env::temp_dir()
+            .join(format!("threesched-dwork-shards-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let kv = KvStore::open(&dir).unwrap();
+            let mut s = SchedState::with_store_sharded(kv, 4);
+            for i in 0..8 {
+                s.create(t(&format!("task{i}")), &[]).unwrap();
+            }
+            let got = s.steal("w1", 2);
+            assert_eq!(got.len(), 2);
+            s.transfer("w1", &got[0].name, &[]).unwrap(); // reinserted
+        } // crash
+        {
+            let kv = KvStore::open(&dir).unwrap();
+            let mut s = SchedState::with_store_sharded(kv, 2);
+            assert_eq!(s.shard_count(), 2);
+            let mut drained = 0;
+            loop {
+                let batch = s.steal("w2", 3);
+                if batch.is_empty() {
+                    break;
+                }
+                for m in &batch {
+                    s.complete("w2", &m.name, true).unwrap();
+                }
+                drained += batch.len();
+            }
+            assert_eq!(drained, 8);
+            assert!(s.all_done());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -31,7 +31,7 @@ use anyhow::{bail, Context as _, Result};
 
 use threesched::analyze::{analyze_graph, AnalyzeOpts};
 use threesched::calibrate::{self, CalibrationProfile};
-use threesched::coordinator::dwork::{self, Client, TaskMsg};
+use threesched::coordinator::dwork::{self, Client, CreateItem, SubmitOutcome, TaskMsg};
 use threesched::coordinator::pmake;
 use threesched::metg::harness::{metg_sweep, render_metg, PAPER_RANKS};
 use threesched::metrics::{self, MetricsSnapshot, Registry};
@@ -45,6 +45,7 @@ use threesched::substrate::cluster::costs::CostModel;
 use threesched::substrate::cluster::Machine;
 use threesched::substrate::kvstore::KvStore;
 use threesched::substrate::transport::tcp::TcpClient;
+use threesched::substrate::transport::TransportCfg;
 use threesched::trace::{self, Tracer};
 
 const USAGE: &str = "\
@@ -55,9 +56,11 @@ usage: threesched <command> [flags]
 commands:
   pmake   --rules rules.yaml --targets targets.yaml [--nodes N] [--fifo]
   dhub serve    --bind addr:port [--store dir] [--snapshot-every N]
+                [--shards N]                   (ready-queue shards, default 1)
                 [--trace out.jsonl]            (hub-side lifecycle trace)
                 [--metrics-addr host:port]     (Prometheus text exposition)
   dhub worker   --connect addr:port [--workers N] [--prefetch K] [--dir D]
+                [--batch N]   (completions per report frame, default 1)
                 [--name base] [--linger] [--trace out.jsonl]
                 [--idle-floor-us U] [--idle-ceiling-ms M]
   dhub top      --connect addr:port [--interval-ms MS] [--iters N]
@@ -86,9 +89,10 @@ commands:
                    granularity lints, structural hygiene)
   workflow run    --file wf.yaml [--coordinator auto|pmake|dwork|mpilist]
                   [--procs N] [--dir D] [--trace out.jsonl]
-                  [--connect addr:port] [--poll-ms MS]
+                  [--connect addr:port] [--poll-ms MS] [--batch N]
                   [--calibration profile.toml]
-  workflow submit --file wf.yaml --connect addr:port   (ingest + detach)
+  workflow submit --file wf.yaml --connect addr:port [--batch N]
+                  (ingest + detach; N tasks per wire frame, default 64)
   trace report    --file trace.jsonl      (Fig-5-style time breakdown)
   trace profile   [trace.jsonl] [--file trace.jsonl] [--json]
                   [--chrome out.json]
@@ -189,12 +193,15 @@ fn serve_hub(
     bind: &str,
     store: Option<&str>,
     snapshot_every: u64,
+    shards: usize,
     trace_path: Option<&str>,
     metrics_addr: Option<&str>,
 ) -> Result<()> {
     let mut state = match store {
-        Some(dir) => dwork::SchedState::with_store(KvStore::open(Path::new(dir))?),
-        None => dwork::SchedState::new(),
+        Some(dir) => {
+            dwork::SchedState::with_store_sharded(KvStore::open(Path::new(dir))?, shards)
+        }
+        None => dwork::SchedState::with_shards(shards),
     };
     if let Some(p) = trace_path {
         state.set_tracer(Tracer::to_file(Path::new(p), "dwork")?);
@@ -229,6 +236,7 @@ fn cmd_dhub(argv: &[String]) -> Result<()> {
                 Flag { name: "bind", help: "listen address", takes_value: true, default: Some("127.0.0.1:7117") },
                 Flag { name: "store", help: "persistence directory (restartable hub)", takes_value: true, default: None },
                 Flag { name: "snapshot-every", help: "mutations between auto-snapshots (0 = never)", takes_value: true, default: Some("0") },
+                Flag { name: "shards", help: "ready-queue shards (task-name hashed; 1 = the classic single deque)", takes_value: true, default: Some("1") },
                 Flag { name: "trace", help: "stream lifecycle events to this JSONL file", takes_value: true, default: None },
                 Flag { name: "metrics-addr", help: "serve Prometheus text exposition on this address", takes_value: true, default: None },
             ];
@@ -237,6 +245,7 @@ fn cmd_dhub(argv: &[String]) -> Result<()> {
                 args.get("bind").unwrap(),
                 args.get("store"),
                 args.get_usize("snapshot-every", 0)? as u64,
+                args.get_usize("shards", 1)?,
                 args.get("trace"),
                 args.get("metrics-addr"),
             )
@@ -246,6 +255,7 @@ fn cmd_dhub(argv: &[String]) -> Result<()> {
                 Flag { name: "connect", help: "server address", takes_value: true, default: Some("127.0.0.1:7117") },
                 Flag { name: "workers", help: "pulling threads in this process", takes_value: true, default: Some("1") },
                 Flag { name: "prefetch", help: "tasks to buffer per thread", takes_value: true, default: Some("1") },
+                Flag { name: "batch", help: "completions to buffer per thread before one batched report", takes_value: true, default: Some("1") },
                 Flag { name: "dir", help: "campaign working directory", takes_value: true, default: Some(".") },
                 Flag { name: "name", help: "worker name prefix", takes_value: true, default: None },
                 Flag { name: "linger", help: "survive campaign boundaries: rejoin after the hub drains", takes_value: false, default: None },
@@ -265,6 +275,7 @@ fn cmd_dhub(argv: &[String]) -> Result<()> {
             let mut pool = workflow::WorkerPool::new(args.get("connect").unwrap())
                 .threads(args.get_usize("workers", 1)?)
                 .prefetch(args.get_usize("prefetch", 1)? as u32)
+                .batch(args.get_usize("batch", 1)?)
                 .dir(args.get("dir").unwrap())
                 .linger(args.has("linger"))
                 .idle_backoff(
@@ -566,6 +577,7 @@ fn cmd_dwork(argv: &[String]) -> Result<()> {
                 args.get("bind").unwrap(),
                 args.get("db"),
                 args.get_usize("snapshot-every", 0)? as u64,
+                1,
                 None,
                 None,
             )
@@ -617,9 +629,15 @@ fn cmd_dwork(argv: &[String]) -> Result<()> {
                 .unwrap_or_default();
             let conn = TcpClient::connect(args.get("connect").unwrap())?;
             let mut c = Client::new(Box::new(conn), "dquery");
-            c.create(TaskMsg::new(name, vec![]), &deps)?;
-            println!("created {name} (deps: {deps:?})");
-            Ok(())
+            let out = c.submit(&[CreateItem::new(TaskMsg::new(name, vec![]), deps.clone())])?;
+            match out.into_iter().next() {
+                Some(SubmitOutcome::Created) => {
+                    println!("created {name} (deps: {deps:?})");
+                    Ok(())
+                }
+                Some(SubmitOutcome::Refused(e)) => bail!("hub refused {name}: {e}"),
+                None => bail!("hub returned no outcome for {name}"),
+            }
         }
         "status" => {
             let spec = [Flag {
@@ -879,12 +897,18 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
             let spec = [
                 Flag { name: "file", help: "workflow yaml", takes_value: true, default: Some("workflow.yaml") },
                 Flag { name: "connect", help: "remote dhub address", takes_value: true, default: Some("127.0.0.1:7117") },
+                Flag { name: "batch", help: "tasks per batched Create frame (1 = per-task round-trips)", takes_value: true, default: Some("64") },
             ];
             let args = parse(rest, &spec)?;
             let g = workflow::parse_workflow_file(Path::new(args.get("file").unwrap()))?;
             let addr = args.get("connect").unwrap();
             let sub = workflow::Session::new(&g)
                 .backend(workflow::Backend::Dwork { remote: Some(addr.into()) })
+                .polling(workflow::PollCfg {
+                    transport: TransportCfg::default()
+                        .with_batch(args.get_usize("batch", 64)?),
+                    ..workflow::PollCfg::default()
+                })
                 .submit()?;
             println!(
                 "submitted {} tasks of workflow {:?} to dhub {addr} (detached; \
@@ -908,6 +932,7 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
                 Flag { name: "dir", help: "campaign working directory", takes_value: true, default: Some(".") },
                 Flag { name: "connect", help: "remote dhub address (implies dwork; workers join separately)", takes_value: true, default: None },
                 Flag { name: "poll-ms", help: "status poll interval with --connect, milliseconds", takes_value: true, default: Some("50") },
+                Flag { name: "batch", help: "tasks per batched Create frame with --connect (1 = per-task)", takes_value: true, default: Some("64") },
                 Flag { name: "trace", help: "write a lifecycle trace (JSONL) after the run", takes_value: true, default: None },
                 Flag { name: "calibration", help: "fitted cost-model profile for the auto selector", takes_value: true, default: None },
             ];
@@ -961,6 +986,8 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
                         .backend(workflow::Backend::Dwork { remote: Some(addr.into()) })
                         .polling(workflow::PollCfg {
                             poll: Duration::from_millis(args.get_usize("poll-ms", 50)? as u64),
+                            transport: TransportCfg::default()
+                                .with_batch(args.get_usize("batch", 64)?),
                             ..workflow::PollCfg::default()
                         })
                         .run()?

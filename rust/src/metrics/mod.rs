@@ -71,10 +71,13 @@ pub enum Counter {
     ReqSubscribe,
     /// events discarded because a subscriber queue hit its cap
     SubscribeDropped,
+    /// batched wire ops (`Request::CreateBatch` / `CompleteBatch`)
+    ReqCreateBatch,
+    ReqCompleteBatch,
 }
 
 impl Counter {
-    pub const ALL: [Counter; 27] = [
+    pub const ALL: [Counter; 29] = [
         Counter::ReqCreate,
         Counter::ReqSteal,
         Counter::ReqStealN,
@@ -102,6 +105,8 @@ impl Counter {
         Counter::DriverTasksFailed,
         Counter::ReqSubscribe,
         Counter::SubscribeDropped,
+        Counter::ReqCreateBatch,
+        Counter::ReqCompleteBatch,
     ];
 
     pub fn name(self) -> &'static str {
@@ -133,6 +138,8 @@ impl Counter {
             Counter::DriverTasksFailed => "driver_tasks_failed",
             Counter::ReqSubscribe => "requests_subscribe",
             Counter::SubscribeDropped => "subscribe_dropped",
+            Counter::ReqCreateBatch => "requests_create_batch",
+            Counter::ReqCompleteBatch => "requests_complete_batch",
         }
     }
 }
@@ -180,10 +187,13 @@ pub enum Series {
     TaskCompute,
     /// hub-side service time for Subscribe long-polls
     ServiceSubscribe,
+    /// hub-side service time per whole batch frame
+    ServiceCreateBatch,
+    ServiceCompleteBatch,
 }
 
 impl Series {
-    pub const ALL: [Series; 11] = [
+    pub const ALL: [Series; 13] = [
         Series::ServiceCreate,
         Series::ServiceSteal,
         Series::ServiceComplete,
@@ -195,6 +205,8 @@ impl Series {
         Series::StealRtt,
         Series::TaskCompute,
         Series::ServiceSubscribe,
+        Series::ServiceCreateBatch,
+        Series::ServiceCompleteBatch,
     ];
 
     pub fn name(self) -> &'static str {
@@ -210,6 +222,8 @@ impl Series {
             Series::StealRtt => "steal_rtt",
             Series::TaskCompute => "task_compute",
             Series::ServiceSubscribe => "service_subscribe",
+            Series::ServiceCreateBatch => "service_create_batch",
+            Series::ServiceCompleteBatch => "service_complete_batch",
         }
     }
 }

@@ -18,12 +18,60 @@ pub mod inproc;
 pub mod tcp;
 
 use std::sync::mpsc;
+use std::time::Duration;
 
 use anyhow::Result;
 
 /// A client connection capable of blocking request/reply.
 pub trait ClientConn: Send {
     fn request(&mut self, msg: &[u8]) -> Result<Vec<u8>>;
+}
+
+/// Default batch size for batched wire operations (driver submits,
+/// worker completion reports): large enough to amortize the RTT across
+/// a burst, small enough to keep frames tiny next to [`tcp`]'s 64 MiB
+/// frame cap.
+pub const DEFAULT_BATCH: usize = 64;
+
+/// Typed transport knobs — the constants that used to be buried in
+/// `tcp.rs` (socket timeout, `connect_retry` backoff) plus the
+/// batch-size threshold for the batched wire ops, threaded through
+/// `PollCfg`/`Session::polling` and the `--batch` CLI flags.
+/// [`TransportCfg::default`] reproduces the historical values exactly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TransportCfg {
+    /// Per-syscall socket timeout (read/write).  Every dwork request
+    /// gets an immediate reply, so a read blocked this long means the
+    /// hub is wedged or the network black-holed — better to error (and
+    /// let `ReconnectConn` redial) than to hang a worker forever.
+    pub io_timeout: Duration,
+    /// First `connect_retry` redial delay (doubles per attempt).
+    pub retry_floor: Duration,
+    /// `connect_retry` redial delay ceiling.
+    pub retry_ceiling: Duration,
+    /// Tasks per batched wire frame (submission chunks, completion
+    /// reports).  1 degenerates to per-task round-trips; 0 is treated
+    /// as 1 by every consumer.
+    pub batch: usize,
+}
+
+impl Default for TransportCfg {
+    fn default() -> Self {
+        TransportCfg {
+            io_timeout: Duration::from_secs(30),
+            retry_floor: Duration::from_millis(5),
+            retry_ceiling: Duration::from_millis(250),
+            batch: DEFAULT_BATCH,
+        }
+    }
+}
+
+impl TransportCfg {
+    /// Builder-style batch override (the `--batch N` flags land here).
+    pub fn with_batch(mut self, batch: usize) -> TransportCfg {
+        self.batch = batch.max(1);
+        self
+    }
 }
 
 /// One in-flight request as seen by the server event loop.
@@ -66,5 +114,15 @@ mod tests {
         let (req, rx) = Request::new(vec![]);
         drop(rx);
         req.reply(b"late".to_vec()); // must not panic
+    }
+
+    #[test]
+    fn transport_cfg_defaults_match_historical_constants() {
+        let cfg = TransportCfg::default();
+        assert_eq!(cfg.io_timeout, Duration::from_secs(30));
+        assert_eq!(cfg.retry_floor, Duration::from_millis(5));
+        assert_eq!(cfg.retry_ceiling, Duration::from_millis(250));
+        assert_eq!(cfg.batch, DEFAULT_BATCH);
+        assert_eq!(TransportCfg::default().with_batch(0).batch, 1, "0 clamps to per-task");
     }
 }

@@ -12,7 +12,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
-use super::{ClientConn, Request, RequestRx};
+use super::{ClientConn, Request, RequestRx, TransportCfg};
 
 const MAX_FRAME: u32 = 64 * 1024 * 1024;
 
@@ -106,26 +106,52 @@ impl Drop for TcpServer {
     }
 }
 
+/// Requests a connection may have in flight before its reader half
+/// blocks: deep enough to keep the hub's event loop fed by a batching
+/// client, bounded so one connection cannot queue unbounded state work.
+const PIPELINE_DEPTH: usize = 32;
+
+/// Pipelined per-connection loop.  The reader half decodes the next
+/// frame and injects it into the server stream *while* the state
+/// operation for the previous request runs; the writer half (this
+/// thread) drains the per-request reply channels strictly in arrival
+/// order, so the one-reply-per-request wire contract is preserved.
 fn connection_loop(stream: TcpStream, tx: mpsc::Sender<Request>) {
     let mut reader = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     };
     let mut writer = stream;
-    loop {
-        let payload = match read_frame(&mut reader) {
-            Ok(Some(p)) => p,
-            Ok(None) | Err(_) => return, // client went away
-        };
-        let (req, reply_rx) = Request::new(payload);
-        if tx.send(req).is_err() {
-            return; // server event loop is gone
+    let (pending_tx, pending_rx) =
+        mpsc::sync_channel::<mpsc::Receiver<Vec<u8>>>(PIPELINE_DEPTH);
+    let read_half = std::thread::Builder::new().name("tcp-read".into()).spawn(move || {
+        loop {
+            let payload = match read_frame(&mut reader) {
+                Ok(Some(p)) => p,
+                Ok(None) | Err(_) => return, // client went away
+            };
+            let (req, reply_rx) = Request::new(payload);
+            if tx.send(req).is_err() {
+                return; // server event loop is gone
+            }
+            if pending_tx.send(reply_rx).is_err() {
+                return; // writer half gave up (write error)
+            }
         }
-        let Ok(reply) = reply_rx.recv() else { return };
+    });
+    let Ok(read_half) = read_half else { return };
+    for reply_rx in pending_rx {
+        // recv fails when the server dropped the request without a
+        // reply — the event loop is gone, tear the connection down
+        let Ok(reply) = reply_rx.recv() else { break };
         if write_frame(&mut writer, &reply).is_err() {
-            return;
+            break;
         }
     }
+    // unblock a reader half parked in read_frame (e.g. the server loop
+    // died between two client requests) so this thread can reap it
+    let _ = writer.shutdown(std::net::Shutdown::Both);
+    let _ = read_half.join();
 }
 
 /// Blocking request/reply client over one TCP connection.
@@ -133,19 +159,20 @@ pub struct TcpClient {
     stream: TcpStream,
 }
 
-/// Per-syscall socket timeout: every dwork request gets an immediate
-/// reply (the server never parks a request), so a read blocked this long
-/// means the hub is wedged or the network black-holed — better to error
-/// (and let ReconnectConn redial, or a best-effort Drop give up) than to
-/// hang a worker forever.
-const IO_TIMEOUT: Duration = Duration::from_secs(30);
-
 impl TcpClient {
+    /// Connect with the default [`TransportCfg`] (30 s socket timeout —
+    /// every dwork request gets an immediate reply, so a read blocked
+    /// that long means the hub is wedged or the network black-holed).
     pub fn connect(addr: &str) -> Result<Self> {
+        Self::connect_cfg(addr, &TransportCfg::default())
+    }
+
+    /// Connect applying `cfg.io_timeout` to both socket directions.
+    pub fn connect_cfg(addr: &str, cfg: &TransportCfg) -> Result<Self> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         stream.set_nodelay(true)?; // latency matters: this RTT is the METG driver
-        stream.set_read_timeout(Some(IO_TIMEOUT))?;
-        stream.set_write_timeout(Some(IO_TIMEOUT))?;
+        stream.set_read_timeout(Some(cfg.io_timeout))?;
+        stream.set_write_timeout(Some(cfg.io_timeout))?;
         Ok(TcpClient { stream })
     }
 
@@ -154,10 +181,17 @@ impl TcpClient {
     /// independent job steps, so a worker routinely starts before the hub
     /// has bound its socket; this absorbs that race.
     pub fn connect_retry(addr: &str, timeout: Duration) -> Result<Self> {
+        Self::connect_retry_cfg(addr, timeout, &TransportCfg::default())
+    }
+
+    /// [`connect_retry`](Self::connect_retry) with explicit backoff knobs:
+    /// the first redial waits `cfg.retry_floor`, doubling per attempt up
+    /// to `cfg.retry_ceiling`.
+    pub fn connect_retry_cfg(addr: &str, timeout: Duration, cfg: &TransportCfg) -> Result<Self> {
         let deadline = Instant::now() + timeout;
-        let mut delay = Duration::from_millis(5);
+        let mut delay = cfg.retry_floor;
         loop {
-            match Self::connect(addr) {
+            match Self::connect_cfg(addr, cfg) {
                 Ok(c) => return Ok(c),
                 Err(e) => {
                     let now = Instant::now();
@@ -169,7 +203,7 @@ impl TcpClient {
                     // never sleep past the deadline: the last dial happens
                     // AT the deadline, not delay-before it
                     std::thread::sleep(delay.min(deadline - now));
-                    delay = (delay * 2).min(Duration::from_millis(250));
+                    delay = (delay * 2).min(cfg.retry_ceiling);
                 }
             }
         }
@@ -293,6 +327,40 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn pipelined_requests_reply_in_order() {
+        // a raw socket writes a burst of frames before reading anything:
+        // the pipelined connection loop must serve them all (reader half
+        // keeps decoding while earlier requests are in flight) and the
+        // replies must come back strictly in request order
+        let (server, rx) = TcpServer::bind("127.0.0.1:0").unwrap();
+        let _handle = spawn_echo(rx);
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        s.set_nodelay(true).unwrap();
+        for i in 0..10u8 {
+            write_frame(&mut s, &[i, i + 1, i + 2]).unwrap();
+        }
+        for i in 0..10u8 {
+            let reply = read_frame(&mut s).unwrap().expect("reply frame");
+            assert_eq!(reply, vec![i + 2, i + 1, i], "reply {i} out of order");
+        }
+        drop(s);
+        drop(server);
+    }
+
+    #[test]
+    fn connect_cfg_applies_io_timeout() {
+        let (server, _rx) = TcpServer::bind("127.0.0.1:0").unwrap();
+        let custom = Duration::from_secs(7);
+        let cfg = TransportCfg { io_timeout: custom, ..TransportCfg::default() };
+        let c = TcpClient::connect_cfg(&server.addr.to_string(), &cfg).unwrap();
+        assert_eq!(c.stream.read_timeout().unwrap(), Some(custom));
+        assert_eq!(c.stream.write_timeout().unwrap(), Some(custom));
+        let d = TcpClient::connect(&server.addr.to_string()).unwrap();
+        assert_eq!(d.stream.read_timeout().unwrap(), Some(Duration::from_secs(30)));
+        drop(server);
     }
 
     #[test]

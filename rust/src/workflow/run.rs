@@ -21,7 +21,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context as _, Result};
 
-use crate::coordinator::dwork::{self, Client, RefusalCode, ServerError, StatusInfo};
+use crate::coordinator::dwork::{
+    self, Client, CreateItem, RefusalCode, StatusInfo, SubmitOutcome,
+};
 use crate::coordinator::mpilist::{block_range, Context};
 use crate::coordinator::pmake::{self, Executor, LaunchReport, ShellExecutor, TaskInstance};
 use crate::metg::simmodels::Tool;
@@ -389,18 +391,68 @@ pub struct RemoteSubmission {
     pub baseline: StatusInfo,
 }
 
-/// Classify a Create failure by the typed [`RefusalCode`] the hub put
-/// on the wire.  The typed code is the only classification: the
-/// `ERR_MARKER_*` string fallback (and, since this release, the
-/// server-side embedding of those phrases) served its compatibility
-/// window and is gone, so a hub old enough to omit the code is simply
-/// an error.
-fn create_refusal(e: &anyhow::Error) -> Option<RefusalCode> {
-    e.downcast_ref::<ServerError>()?.code
+/// Per-item outcome bookkeeping shared by every submission chunk.
+/// Items inside one frame are applied by the hub in order, so a refusal
+/// of an early item is visible (through `doomed`) when a later item of
+/// the *same* frame is classified — that is how a dependent riding in
+/// the same chunk as its doomed dependency is recognized: its refusal
+/// arrives as `DepMissing` (the dependency was never created), and the
+/// doomed set disambiguates that from a genuinely malformed graph.
+fn apply_chunk(
+    c: &mut Client,
+    chunk: &mut Vec<CreateItem>,
+    doomed: &mut std::collections::HashSet<String>,
+    submitted: &mut usize,
+    duplicate_acks: &mut usize,
+    addr: &str,
+) -> Result<()> {
+    if chunk.is_empty() {
+        return Ok(());
+    }
+    let outcomes = c
+        .submit(chunk)
+        .with_context(|| format!("submitting workflow to {addr}"))?;
+    for (item, outcome) in chunk.drain(..).zip(outcomes) {
+        match outcome {
+            SubmitOutcome::Created => *submitted += 1,
+            SubmitOutcome::Refused(e) => match e.code {
+                // a reconnect mid-submit can replay a Create the server
+                // had already applied; the duplicate refusal IS the ack
+                Some(RefusalCode::Duplicate) => {
+                    *submitted += 1;
+                    *duplicate_acks += 1;
+                }
+                // a remote worker already ran and failed a dependency
+                // while this submission was in flight: the server
+                // (correctly) refuses the Create — the task is skipped,
+                // like any other dependent of a failure
+                Some(RefusalCode::DepErrored) => {
+                    doomed.insert(item.task.name);
+                }
+                // the dependency was doomed earlier (possibly earlier in
+                // this very frame) and thus never created: same skip
+                Some(RefusalCode::DepMissing)
+                    if item.deps.iter().any(|d| doomed.contains(d)) =>
+                {
+                    doomed.insert(item.task.name);
+                }
+                _ => {
+                    let name = item.task.name;
+                    return Err(anyhow::Error::new(e)
+                        .context(format!("submitting task {name:?} to {addr}")));
+                }
+            },
+        }
+    }
+    Ok(())
 }
 
 /// Ingest `g` into the remote dhub at `addr`: Create messages in
-/// topological order, exactly what the server's Create API requires.
+/// topological order (exactly what the server's Create API requires),
+/// chunked `cfg.transport.batch` tasks per wire frame so a 10k-task
+/// campaign costs tens of round-trips instead of 10k.  Against a
+/// pre-batch hub the client transparently degrades to per-task Creates;
+/// the accounting below is identical either way.
 pub(crate) fn remote_submit(
     g: &WorkflowGraph,
     addr: &str,
@@ -409,35 +461,22 @@ pub(crate) fn remote_submit(
     let mut c = remote_client(addr, "submit", cfg);
     let baseline = c.status().with_context(|| format!("querying dhub at {addr}"))?;
     let tasks = lower::to_dwork(g)?;
+    let batch = cfg.transport.batch.max(1);
     let mut doomed: std::collections::HashSet<String> = std::collections::HashSet::new();
     let mut submitted = 0usize;
     let mut duplicate_acks = 0usize;
+    let mut chunk: Vec<CreateItem> = Vec::with_capacity(batch);
     for t in tasks {
         if t.deps.iter().any(|d| doomed.contains(d)) {
             doomed.insert(t.msg.name.clone());
             continue;
         }
-        let name = t.msg.name.clone();
-        match c.create(t.msg, &t.deps) {
-            Ok(()) => submitted += 1,
-            Err(e) => match create_refusal(&e) {
-                // a reconnect mid-submit can replay a Create the server
-                // had already applied; the duplicate refusal IS the ack
-                Some(RefusalCode::Duplicate) => {
-                    submitted += 1;
-                    duplicate_acks += 1;
-                }
-                // a remote worker already ran and failed a dependency
-                // while this submission was in flight: the server
-                // (correctly) refuses the Create — the task is skipped,
-                // like any other dependent of a failure
-                Some(RefusalCode::DepErrored) => {
-                    doomed.insert(name);
-                }
-                _ => return Err(e.context(format!("submitting workflow to {addr}"))),
-            },
+        chunk.push(CreateItem::new(t.msg, t.deps));
+        if chunk.len() >= batch {
+            apply_chunk(&mut c, &mut chunk, &mut doomed, &mut submitted, &mut duplicate_acks, addr)?;
         }
     }
+    apply_chunk(&mut c, &mut chunk, &mut doomed, &mut submitted, &mut duplicate_acks, addr)?;
     Ok(RemoteSubmission {
         submitted,
         duplicate_acks,
@@ -631,19 +670,62 @@ mod tests {
     }
 
     #[test]
-    fn create_refusal_reads_only_the_typed_code() {
-        // the ERR_MARKER_* string fallback is gone: a code-less refusal
-        // (pre-code hub) is unclassified even when the text matches the
-        // legacy marker phrases
-        use crate::coordinator::dwork::state::ERR_MARKER_DUPLICATE;
-        let coded: anyhow::Error =
-            ServerError { code: Some(RefusalCode::Duplicate), msg: "task already exists".into() }
-                .into();
-        assert_eq!(create_refusal(&coded), Some(RefusalCode::Duplicate));
-        let uncoded: anyhow::Error =
-            ServerError { code: None, msg: format!("task {ERR_MARKER_DUPLICATE}") }.into();
-        assert_eq!(create_refusal(&uncoded), None);
-        assert_eq!(create_refusal(&anyhow::anyhow!("plain error")), None);
+    fn apply_chunk_classifies_per_item_refusals() {
+        use crate::coordinator::dwork::{
+            spawn_inproc, Completion, SchedState, ServerConfig, TaskMsg,
+        };
+        let (connector, handle) = spawn_inproc(SchedState::new(), ServerConfig::default());
+        let mut c = Client::new(Box::new(connector.connect()), "wf-submit-test");
+        // seed server-side state: "dup" already exists, "boom" has failed
+        // (so a dependent's Create is refused DepErrored)
+        assert!(c.submit(&[
+            CreateItem::new(TaskMsg::new("dup", vec![]), vec![]),
+            CreateItem::new(TaskMsg::new("boom", vec![]), vec![]),
+        ])
+        .unwrap()
+        .iter()
+        .all(SubmitOutcome::is_created));
+        let got = c.acquire(2).unwrap();
+        let got = match got {
+            crate::coordinator::dwork::StealBatch::Tasks(t) => t,
+            other => panic!("expected tasks, got {other:?}"),
+        };
+        assert_eq!(got.len(), 2);
+        c.report(&[Completion::ok("dup"), Completion::failed("boom")]).unwrap();
+
+        // one mixed chunk: a fresh create, a duplicate ack, a dependent
+        // of an errored task, and a dependent of a task doomed upstream
+        // (its dep is only in `doomed`, never created — DepMissing)
+        let mut doomed: std::collections::HashSet<String> =
+            ["gone".to_string()].into_iter().collect();
+        let mut submitted = 0usize;
+        let mut duplicate_acks = 0usize;
+        let mut chunk = vec![
+            CreateItem::new(TaskMsg::new("fresh", vec![]), vec![]),
+            CreateItem::new(TaskMsg::new("dup", vec![]), vec![]),
+            CreateItem::new(TaskMsg::new("kid-of-boom", vec![]), vec!["boom".into()]),
+            CreateItem::new(TaskMsg::new("kid-of-gone", vec![]), vec!["gone".into()]),
+        ];
+        apply_chunk(&mut c, &mut chunk, &mut doomed, &mut submitted, &mut duplicate_acks, "inproc")
+            .unwrap();
+        assert!(chunk.is_empty(), "chunk drains on success");
+        assert_eq!(submitted, 2, "fresh + duplicate-ack");
+        assert_eq!(duplicate_acks, 1);
+        assert!(doomed.contains("kid-of-boom"), "DepErrored dooms the dependent");
+        assert!(doomed.contains("kid-of-gone"), "DepMissing with doomed dep dooms too");
+
+        // a DepMissing refusal whose dep was never doomed is a real
+        // error (malformed graph / foreign hub state), not a skip
+        let mut chunk =
+            vec![CreateItem::new(TaskMsg::new("orphan", vec![]), vec!["ghost".into()])];
+        let err = apply_chunk(
+            &mut c, &mut chunk, &mut doomed, &mut submitted, &mut duplicate_acks, "inproc",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("orphan"), "{err}");
+        drop(c);
+        drop(connector);
+        let _ = handle.join();
     }
 
     #[test]

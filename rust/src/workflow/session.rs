@@ -61,6 +61,7 @@ use crate::metg::simmodels::Tool;
 use crate::metrics::{MetricsSnapshot, Registry};
 use crate::substrate::cluster::costs::CostModel;
 use crate::substrate::transport::tcp::TcpClient;
+use crate::substrate::transport::TransportCfg;
 use crate::trace::Tracer;
 
 use super::graph::{Payload, WorkflowGraph};
@@ -134,19 +135,27 @@ impl From<String> for RemoteTarget {
 }
 
 /// Polling knobs for the remote paths (the successor of the old
-/// `RemoteOpts`): how often to poll a hub for completion, and how long
-/// to keep dialing one that is not up yet.
+/// `RemoteOpts`): how often to poll a hub for completion, how long to
+/// keep dialing one that is not up yet, and the wire-level transport
+/// knobs (socket timeout, redial backoff, batch size) that used to be
+/// hard-coded constants.
 #[derive(Clone, Debug)]
 pub struct PollCfg {
     /// status-poll interval while awaiting completion
     pub poll: Duration,
     /// how long to keep dialing a hub that is not up yet
     pub connect_timeout: Duration,
+    /// socket timeout / redial backoff / batched-wire chunk size
+    pub transport: TransportCfg,
 }
 
 impl Default for PollCfg {
     fn default() -> Self {
-        PollCfg { poll: Duration::from_millis(50), connect_timeout: Duration::from_secs(10) }
+        PollCfg {
+            poll: Duration::from_millis(50),
+            connect_timeout: Duration::from_secs(10),
+            transport: TransportCfg::default(),
+        }
     }
 }
 
@@ -570,7 +579,7 @@ impl TailHandle {
     /// only accumulate server-side from this moment), then start the
     /// polling thread.
     fn spawn(addr: &str, tracer: Tracer, poll: &PollCfg) -> Result<TailHandle> {
-        let conn = TcpClient::connect_retry(addr, poll.connect_timeout)?;
+        let conn = TcpClient::connect_retry_cfg(addr, poll.connect_timeout, &poll.transport)?;
         let name = format!("wf-tail-{}", std::process::id());
         // exit_on_drop: leaving detaches the subscription server-side
         let mut c = Client::new(Box::new(conn), name).exit_on_drop(true);
@@ -716,6 +725,7 @@ pub struct WorkerPool {
     addr: String,
     threads: usize,
     prefetch: u32,
+    report_batch: usize,
     dir: PathBuf,
     base_name: Option<String>,
     linger: bool,
@@ -732,6 +742,7 @@ impl WorkerPool {
             addr: addr.into(),
             threads: 1,
             prefetch: 1,
+            report_batch: 1,
             dir: PathBuf::from("."),
             base_name: None,
             linger: false,
@@ -752,6 +763,17 @@ impl WorkerPool {
     /// Tasks to buffer per thread (default 1).
     pub fn prefetch(mut self, n: u32) -> Self {
         self.prefetch = n;
+        self
+    }
+
+    /// Completions to buffer per thread before reporting them to the
+    /// hub in one wire frame (default 1 = report each immediately).
+    /// Raising this amortizes the report RTT across a burst — the
+    /// worker-side counterpart of Steal-n — at the cost of delaying
+    /// successor release until the buffer flushes; the worker loop
+    /// always flushes before parking, so chains never deadlock.
+    pub fn batch(mut self, n: usize) -> Self {
+        self.report_batch = n.max(1);
         self
     }
 
@@ -848,6 +870,7 @@ impl WorkerPool {
     fn run_thread(&self, name: String) -> Result<dwork::WorkerStats> {
         let opts = dwork::WorkerOpts {
             prefetch: self.prefetch,
+            report_batch: self.report_batch,
             idle_floor: self.idle_floor,
             idle_ceiling: self.idle_ceiling,
             tracer: self.tracer.clone(),

@@ -16,9 +16,12 @@ use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use threesched::coordinator::dwork::{
-    self, Client, SchedState, ServerConfig, StealBatch, TaskMsg,
+    self, Client, Completion, CreateItem, SchedState, ServerConfig, StealBatch, SubmitOutcome,
+    TaskMsg,
 };
+use threesched::metrics::Registry;
 use threesched::substrate::transport::tcp::TcpClient;
+use threesched::substrate::transport::TransportCfg;
 use threesched::workflow::{
     self, Backend, PollCfg, Payload, Session, TaskSpec, WorkflowGraph,
 };
@@ -34,7 +37,11 @@ fn tmp(name: &str) -> PathBuf {
 }
 
 fn poll_cfg() -> PollCfg {
-    PollCfg { poll: Duration::from_millis(5), connect_timeout: Duration::from_secs(5) }
+    PollCfg {
+        poll: Duration::from_millis(5),
+        connect_timeout: Duration::from_secs(5),
+        ..PollCfg::default()
+    }
 }
 
 /// A session feeding the remote hub at `addr`.
@@ -42,6 +49,17 @@ fn remote_session<'g>(g: &'g WorkflowGraph, addr: &str) -> Session<'g> {
     Session::new(g)
         .backend(Backend::Dwork { remote: Some(addr.into()) })
         .polling(poll_cfg())
+}
+
+/// Like [`remote_session`] but with an explicit submission chunk size
+/// (1 = one Create round-trip per task).
+fn remote_session_batch<'g>(g: &'g WorkflowGraph, addr: &str, batch: usize) -> Session<'g> {
+    Session::new(g)
+        .backend(Backend::Dwork { remote: Some(addr.into()) })
+        .polling(PollCfg {
+            transport: TransportCfg::default().with_batch(batch),
+            ..poll_cfg()
+        })
 }
 
 /// The in-proc reference run the remote path must be equivalent to.
@@ -217,18 +235,24 @@ fn dead_worker_tasks_requeue_and_campaign_finishes() {
     {
         let conn = TcpClient::connect_retry(&addr_s, Duration::from_secs(5)).unwrap();
         let mut feeder = Client::new(Box::new(conn), "feeder");
-        for i in 0..8 {
-            feeder.create(TaskMsg::new(format!("t{i}"), vec![]), &[]).unwrap();
-        }
+        let items: Vec<CreateItem> = (0..8)
+            .map(|i| CreateItem::new(TaskMsg::new(format!("t{i}"), vec![]), vec![]))
+            .collect();
+        let out = feeder.submit(&items).unwrap();
+        assert!(out.iter().all(SubmitOutcome::is_created));
     }
-    // doomed worker grabs 3 tasks over TCP and dies holding all of them
+    // doomed worker grabs 3 tasks over TCP, reports ONE of them done, and
+    // dies holding the other two — the requeue must cover exactly the
+    // unreported remainder (the partially-completed-StealBatch bugfix)
     {
         let conn = TcpClient::connect_retry(&addr_s, Duration::from_secs(5)).unwrap();
         let mut doomed = Client::new(Box::new(conn), "doomed").exit_on_drop(true);
-        match doomed.steal_n(3).unwrap() {
-            StealBatch::Tasks(ts) => assert_eq!(ts.len(), 3),
+        let ts = match doomed.acquire(3).unwrap() {
+            StealBatch::Tasks(ts) => ts,
             other => panic!("expected a batch, got {other:?}"),
-        }
+        };
+        assert_eq!(ts.len(), 3);
+        doomed.report(&[Completion::ok(ts[0].name.as_str())]).unwrap();
         // dropped here: Exit-on-drop (the worker-death path) fires
     }
     // a second worker dies WITHOUT announcing: its connection just drops.
@@ -237,7 +261,7 @@ fn dead_worker_tasks_requeue_and_campaign_finishes() {
     {
         let conn = TcpClient::connect_retry(&addr_s, Duration::from_secs(5)).unwrap();
         let mut silent = Client::new(Box::new(conn), "silent");
-        match silent.steal_n(2).unwrap() {
+        match silent.acquire(2).unwrap() {
             StealBatch::Tasks(ts) => assert_eq!(ts.len(), 2),
             other => panic!("expected a batch, got {other:?}"),
         }
@@ -248,11 +272,15 @@ fn dead_worker_tasks_requeue_and_campaign_finishes() {
         let mut undertaker = Client::new(Box::new(conn), "undertaker");
         undertaker.exit_for("silent").unwrap();
     }
-    // one healthy survivor drains the whole campaign
+    // one healthy survivor drains the whole campaign: 8 created, 1
+    // reported by the dying worker before its death, 7 left to run
     let conn = TcpClient::connect_retry(&addr_s, Duration::from_secs(5)).unwrap();
     let mut survivor = Client::new(Box::new(conn), "survivor").exit_on_drop(true);
     let stats = dwork::run_worker(&mut survivor, 2, |_| Ok(())).unwrap();
-    assert_eq!(stats.tasks_run, 8, "every re-queued task reached the survivor");
+    assert_eq!(
+        stats.tasks_run, 7,
+        "exactly the unreported tasks were re-queued (not the reported one)"
+    );
     drop(survivor);
     drop(guard);
     let state = handle.join().unwrap();
@@ -293,6 +321,168 @@ fn resubmission_over_failed_hub_state_skips_doomed_tasks() {
     drop(guard);
     assert!(handle.join().unwrap().all_done());
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Deterministic pseudo-random DAG: `n` no-op command tasks, each with
+/// 0–2 dependencies on earlier tasks (LCG-driven, so every run and both
+/// sides of an equivalence comparison see the same graph).
+fn random_dag(seed: u64, n: usize) -> WorkflowGraph {
+    fn next(s: &mut u64) -> u64 {
+        *s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        *s >> 33
+    }
+    let mut s = seed;
+    let mut g = WorkflowGraph::new(format!("rand-{seed}"));
+    for i in 0..n {
+        let mut deps: Vec<String> = Vec::new();
+        if i > 0 {
+            for _ in 0..(next(&mut s) % 3) {
+                let d = format!("n{}", next(&mut s) as usize % i);
+                if !deps.contains(&d) {
+                    deps.push(d);
+                }
+            }
+        }
+        g.add_task(TaskSpec::command(format!("n{i}"), "true").after(&deps)).unwrap();
+    }
+    g
+}
+
+#[test]
+fn batched_and_unbatched_submission_are_equivalent() {
+    // same random DAG through chunk-64 and chunk-1 submission against
+    // fresh hubs: identical RunSummary, identical final hub status,
+    // identical task-lifecycle counters — only the wire-frame count
+    // (requests_create_batch) may differ
+    let g = random_dag(42, 30);
+    let mut results = Vec::new();
+    for batch in [64usize, 1] {
+        let dir = tmp(&format!("equiv-b{batch}"));
+        let reg = Registry::enabled();
+        let cfg = ServerConfig { metrics: reg.clone(), ..ServerConfig::default() };
+        let (addr, guard, handle) =
+            dwork::spawn_tcp(SchedState::new(), cfg, "127.0.0.1:0").unwrap();
+        let pool = spawn_worker_pool(addr.to_string(), 3, g.clone(), dir.clone(), "eq");
+        let summary =
+            remote_session_batch(&g, &addr.to_string(), batch).run().unwrap().summary;
+        for h in pool {
+            h.join().unwrap();
+        }
+        drop(guard);
+        let state = handle.join().unwrap();
+        assert!(state.all_done(), "batch={batch}");
+        results.push((summary, state.status(), reg.snapshot()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    let (s64, st64, m64) = &results[0];
+    let (s1, st1, m1) = &results[1];
+    assert_eq!(s64.tasks_run, s1.tasks_run);
+    assert_eq!(s64.tasks_failed, s1.tasks_failed);
+    assert_eq!(s64.tasks_skipped, s1.tasks_skipped);
+    assert_eq!(st64.completed, st1.completed);
+    assert_eq!(st64.errored, st1.errored);
+    assert_eq!(st64.failed, st1.failed);
+    for counter in ["tasks_created", "tasks_completed"] {
+        assert_eq!(m64.counter(counter), m1.counter(counter), "{counter}");
+    }
+    assert_eq!(m64.counter("tasks_created"), 30);
+    // the whole point of batching: 30 tasks in one wire frame vs 30
+    assert_eq!(m64.counter("requests_create_batch"), 1);
+    assert_eq!(m1.counter("requests_create_batch"), 30);
+}
+
+#[test]
+fn pre_batch_hub_degrades_client_to_per_task() {
+    use threesched::coordinator::dwork::Response;
+    use threesched::substrate::transport::tcp::TcpServer;
+    use threesched::substrate::transport::ClientConn;
+    use threesched::substrate::wire;
+
+    // the real hub, fronted by a middleman that mimics a pre-batch hub:
+    // it answers a whole-frame Err to any request kind it predates (the
+    // batch kinds, 11+) and forwards everything else verbatim
+    let (hub_addr, hub_guard, hub_handle) =
+        dwork::spawn_tcp(SchedState::new(), ServerConfig::default(), "127.0.0.1:0").unwrap();
+    let (mm, mm_rx) = TcpServer::bind("127.0.0.1:0").unwrap();
+    let mm_addr = mm.addr.to_string();
+    let hub_addr_s = hub_addr.to_string();
+    let mm_thread = std::thread::spawn(move || {
+        let mut fwd = TcpClient::connect_retry(&hub_addr_s, Duration::from_secs(5)).unwrap();
+        for req in mm_rx {
+            let kind = wire::Reader::new(&req.payload)
+                .fields()
+                .ok()
+                .and_then(|f| wire::get_u64(&f, 1).ok())
+                .unwrap_or(0);
+            if kind >= 11 {
+                req.reply(Response::err("bad request: unknown kind 11").encode());
+            } else {
+                req.reply(fwd.request(&req.payload).unwrap());
+            }
+        }
+    });
+
+    let conn = TcpClient::connect_retry(&mm_addr, Duration::from_secs(5)).unwrap();
+    let mut c = Client::new(Box::new(conn), "compat");
+    assert_eq!(c.uses_batch_wire(), None, "support is unknown before the first batch call");
+    let items: Vec<CreateItem> = (0..5)
+        .map(|i| CreateItem::new(TaskMsg::new(format!("c{i}"), vec![]), vec![]))
+        .collect();
+    let out = c.submit(&items).unwrap();
+    assert_eq!(out.len(), 5);
+    assert!(out.iter().all(SubmitOutcome::is_created), "fallback Creates all landed");
+    assert_eq!(c.uses_batch_wire(), Some(false), "whole-frame Err pinned per-task mode");
+    // the symmetric report path degrades on the same pinned state
+    let tasks = match c.acquire(5).unwrap() {
+        StealBatch::Tasks(ts) => ts,
+        other => panic!("expected tasks, got {other:?}"),
+    };
+    assert_eq!(tasks.len(), 5);
+    let completions: Vec<Completion> =
+        tasks.iter().map(|t| Completion::ok(t.name.as_str())).collect();
+    c.report(&completions).unwrap();
+    let st = c.status().unwrap();
+    assert_eq!(st.completed, 5, "per-task fallback completed the campaign");
+    assert!(st.is_drained());
+    drop(c);
+    drop(mm);
+    mm_thread.join().unwrap();
+    drop(hub_guard);
+    assert!(hub_handle.join().unwrap().all_done());
+}
+
+#[test]
+fn sharded_hubs_drain_identically_across_shard_counts() {
+    // the shard count is a hub-local throughput knob: the same campaign
+    // against 1-, 2- and 4-shard hubs must produce the same summary
+    let g = random_dag(7, 24);
+    let mut summaries = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let dir = tmp(&format!("shards{shards}"));
+        let (addr, guard, handle) = dwork::spawn_tcp(
+            SchedState::with_shards(shards),
+            ServerConfig::default(),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let pool = spawn_worker_pool(addr.to_string(), 3, g.clone(), dir.clone(), "sh");
+        let summary = remote_session(&g, &addr.to_string()).run().unwrap().summary;
+        for h in pool {
+            h.join().unwrap();
+        }
+        drop(guard);
+        let state = handle.join().unwrap();
+        assert!(state.all_done(), "shards={shards}");
+        assert_eq!(state.shard_count(), shards);
+        summaries.push(summary);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    for s in &summaries[1..] {
+        assert_eq!(s.tasks_run, summaries[0].tasks_run);
+        assert_eq!(s.tasks_failed, summaries[0].tasks_failed);
+        assert_eq!(s.tasks_skipped, summaries[0].tasks_skipped);
+    }
+    assert_eq!(summaries[0].tasks_run, 24);
 }
 
 #[test]

@@ -3,7 +3,9 @@
 
 use std::path::Path;
 
-use threesched::coordinator::dwork::{self, Client, ServerConfig, TaskMsg};
+use threesched::coordinator::dwork::{
+    self, Client, Completion, CreateItem, ServerConfig, StealBatch, TaskMsg,
+};
 use threesched::coordinator::mpilist::Context;
 use threesched::coordinator::pmake::{self, Dag, SchedConfig, ShellExecutor};
 use threesched::substrate::cluster::Machine;
@@ -71,11 +73,16 @@ fn dwork_server_crash_recovery_mid_campaign() {
         let (connector, handle) = dwork::spawn_inproc(state, ServerConfig::default());
         let mut c = Client::new(Box::new(connector.connect()), "w0");
         for _ in 0..4 {
-            let t = c.steal().unwrap().unwrap();
-            c.complete(&t.name, true).unwrap();
+            let StealBatch::Tasks(ts) = c.acquire(1).unwrap() else {
+                panic!("expected a ready task");
+            };
+            c.report(&[Completion::ok(ts[0].name.as_str())]).unwrap();
         }
-        // one task left assigned (stolen but not completed) at crash time
-        let _t = c.steal().unwrap().unwrap();
+        // one task left assigned (acquired but not reported) at crash time
+        let StealBatch::Tasks(ts) = c.acquire(1).unwrap() else {
+            panic!("expected a ready task");
+        };
+        assert_eq!(ts.len(), 1);
         drop(c);
         drop(connector);
         handle.join().unwrap();
@@ -149,7 +156,10 @@ fn dwork_transfer_rewrite_cycle() {
         if t.name == "assemble" {
             assemble_runs += 1;
             if assemble_runs == 1 {
-                aux.create(TaskMsg::new("fetch-data", vec![]), &[]).unwrap();
+                let out = aux
+                    .submit(&[CreateItem::new(TaskMsg::new("fetch-data", vec![]), vec![])])
+                    .unwrap();
+                assert!(out[0].is_created());
                 aux.transfer("assemble", &["fetch-data".to_string()]).unwrap();
             }
         }

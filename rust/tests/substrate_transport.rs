@@ -145,7 +145,7 @@ fn kvstore_torn_wal_tail_is_dropped() {
 
 #[test]
 fn dwork_server_over_tcp_with_persistence() {
-    use threesched::coordinator::dwork::{self, Client, TaskMsg};
+    use threesched::coordinator::dwork::{self, Client, Completion, CreateItem, StealBatch, TaskMsg};
 
     let dir = tmpdir("dwork-tcp");
     let db = dir.join("db");
@@ -155,12 +155,19 @@ fn dwork_server_over_tcp_with_persistence() {
             dwork::spawn_tcp(state, dwork::ServerConfig::default(), "127.0.0.1:0").unwrap();
         let conn = TcpClient::connect(&addr.to_string()).unwrap();
         let mut c = Client::new(Box::new(conn), "w0");
-        c.create(TaskMsg::new("a", b"payload-a".to_vec()), &[]).unwrap();
-        c.create(TaskMsg::new("b", vec![]), &["a".to_string()]).unwrap();
-        let t = c.steal().unwrap().unwrap();
-        assert_eq!(t.name, "a");
-        assert_eq!(t.body, b"payload-a");
-        c.complete("a", true).unwrap();
+        let out = c
+            .submit(&[
+                CreateItem::new(TaskMsg::new("a", b"payload-a".to_vec()), vec![]),
+                CreateItem::new(TaskMsg::new("b", vec![]), vec!["a".to_string()]),
+            ])
+            .unwrap();
+        assert!(out.iter().all(|o| o.is_created()));
+        let StealBatch::Tasks(ts) = c.acquire(1).unwrap() else {
+            panic!("expected a ready task");
+        };
+        assert_eq!(ts[0].name, "a");
+        assert_eq!(ts[0].body, b"payload-a");
+        c.report(&[Completion::ok("a")]).unwrap();
         drop(c);
         drop(guard);
         let _ = handle.join();

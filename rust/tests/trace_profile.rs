@@ -19,7 +19,7 @@ use std::collections::HashMap;
 use std::time::Duration;
 
 use threesched::calibrate::workloads;
-use threesched::coordinator::dwork::{self, Client, SchedState, ServerConfig, TaskMsg};
+use threesched::coordinator::dwork::{self, Client, CreateItem, SchedState, ServerConfig, TaskMsg};
 use threesched::metg::simmodels::Tool;
 use threesched::substrate::cluster::costs::CostModel;
 use threesched::substrate::transport::tcp::TcpClient;
@@ -407,10 +407,12 @@ fn tail_subscription_sees_exactly_what_the_server_trace_records() {
     {
         let conn = TcpClient::connect_retry(&addr_s, Duration::from_secs(5)).unwrap();
         let mut feeder = Client::new(Box::new(conn), "feeder");
-        for i in 0..7 {
-            feeder.create(TaskMsg::new(format!("t{i}"), vec![]), &[]).unwrap();
-        }
-        feeder.create(TaskMsg::new("boom", vec![]), &[]).unwrap();
+        let items: Vec<CreateItem> = (0..7)
+            .map(|i| CreateItem::new(TaskMsg::new(format!("t{i}"), vec![]), vec![]))
+            .chain(std::iter::once(CreateItem::new(TaskMsg::new("boom", vec![]), vec![])))
+            .collect();
+        let out = feeder.submit(&items).unwrap();
+        assert!(out.iter().all(|o| o.is_created()));
     }
 
     // a worker drains the campaign concurrently, over its own socket
