@@ -140,8 +140,17 @@ fn measure_rtt() -> anyhow::Result<f64> {
     let (connector, server) = dwork::spawn_inproc(state, dwork::ServerConfig::default());
     let mut c = Client::new(Box::new(connector.connect()), "rtt");
     let t0 = Instant::now();
-    while let Some(t) = c.steal()? {
-        c.complete(&t.name, true)?;
+    // strict acquire(1)→report(1) keeps the two-RTT-per-task shape the
+    // divisor assumes; a dependency-free farm never answers an empty
+    // batch mid-drain, so AllDone is the only exit
+    loop {
+        let ts = match c.acquire(1)? {
+            dwork::StealBatch::Tasks(ts) => ts,
+            dwork::StealBatch::AllDone => break,
+        };
+        for t in &ts {
+            c.report(&[dwork::Completion::ok(&t.name)])?;
+        }
     }
     let rtt = t0.elapsed().as_secs_f64() / (2.0 * n as f64);
     drop(c);

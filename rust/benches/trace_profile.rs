@@ -61,7 +61,14 @@ fn synthetic_trace(tasks: usize, workers: usize) -> Vec<TaskEvent> {
             (EventKind::Started, started, who.as_str()),
             (EventKind::Finished, fin, who.as_str()),
         ] {
-            events.push(TaskEvent { task: task.clone(), kind, t, who: w.to_string(), seq });
+            events.push(TaskEvent {
+                task: task.clone(),
+                kind,
+                t,
+                who: w.to_string(),
+                seq,
+                session: String::new(),
+            });
             seq += 1;
         }
     }

@@ -454,6 +454,7 @@ mod tests {
                 t,
                 who: format!("w{i}"),
                 seq: 0,
+                session: String::new(),
             });
             t += 0.003 + ((i % 3) as f64 - 1.0) * 1e-4;
         }
@@ -474,6 +475,7 @@ mod tests {
             t: 2.0,
             who: "late".into(),
             seq: 0,
+            session: String::new(),
         });
         let traces = vec![classify_trace(&source, events, None).unwrap()];
         let cal = fit_traces(&traces, &base).unwrap();

@@ -84,17 +84,39 @@ enum BatchSupport {
     PerTask,
 }
 
+/// Whether the connected hub speaks the session wire kinds
+/// (`OpenSession`/`CloseSession`/`SubmitDelta`).  Probed lazily like
+/// [`BatchSupport`]: the first session verb against a pre-session hub
+/// gets a whole-frame `Err` for the unknown request kind, which pins
+/// `Unsupported` for the rest of the connection — the client then
+/// behaves as one anonymous single-session submitter
+/// ([`Client::submit_delta`] routes completions through
+/// [`Client::report`] and creates through [`Client::submit`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SessionSupport {
+    Unknown,
+    Native,
+    Unsupported,
+}
+
 /// Typed request/reply client.
 pub struct Client {
     conn: Box<dyn ClientConn>,
     worker: String,
     exit_on_drop: bool,
     batch: BatchSupport,
+    session: SessionSupport,
 }
 
 impl Client {
     pub fn new(conn: Box<dyn ClientConn>, worker: impl Into<String>) -> Client {
-        Client { conn, worker: worker.into(), exit_on_drop: false, batch: BatchSupport::Unknown }
+        Client {
+            conn,
+            worker: worker.into(),
+            exit_on_drop: false,
+            batch: BatchSupport::Unknown,
+            session: SessionSupport::Unknown,
+        }
     }
 
     /// Announce departure (`Exit`) when this client is dropped, so a
@@ -225,58 +247,143 @@ impl Client {
         }
     }
 
-    /// Create a task with dependencies.
-    #[deprecated(since = "0.3.0", note = "use the batch-first `submit` (single-item batch)")]
-    pub fn create(&mut self, task: TaskMsg, deps: &[String]) -> Result<()> {
-        self.create_impl(task, deps)
-    }
-
-    fn create_impl(&mut self, task: TaskMsg, deps: &[String]) -> Result<()> {
-        self.expect_ok(&Request::Create { task, deps: deps.to_vec() })
-    }
-
-    /// Steal one task.  Ok(None) = everything complete (server said Exit).
-    /// NotFound (nothing ready *yet*) is surfaced as `StealOutcome` via
-    /// [`Client::steal_poll`]; this convenience blocks through it with
-    /// the shared idle backoff (a parked worker must not hammer the hub).
-    #[deprecated(since = "0.3.0", note = "use `acquire` and back off on an empty batch")]
-    pub fn steal(&mut self) -> Result<Option<TaskMsg>> {
-        self.steal_impl()
-    }
-
-    fn steal_impl(&mut self) -> Result<Option<TaskMsg>> {
-        let mut backoff = IdleBackoff::new();
-        loop {
-            match self.steal_poll_impl()? {
-                StealOutcome::Task(t) => return Ok(Some(t)),
-                StealOutcome::AllDone => return Ok(None),
-                StealOutcome::NotReady => {
-                    backoff.sleep();
-                }
-            }
+    /// Did the probed hub speak the session wire kinds?  `None` until
+    /// the first session verb ran.
+    pub fn uses_session_wire(&self) -> Option<bool> {
+        match self.session {
+            SessionSupport::Unknown => None,
+            SessionSupport::Native => Some(true),
+            SessionSupport::Unsupported => Some(false),
         }
     }
 
-    /// Non-blocking steal: one round-trip, three-way outcome.
-    #[deprecated(since = "0.3.0", note = "use `acquire(1)`")]
-    pub fn steal_poll(&mut self) -> Result<StealOutcome> {
-        self.steal_poll_impl()
+    /// A whole-frame `Err` answering a session kind only comes from a
+    /// pre-session hub (its decoder refuses the unknown request kind);
+    /// a current hub answers `Response::Session`, or a typed/whole-frame
+    /// error that does not carry the unknown-kind marker.
+    fn is_pre_session_err(code: Option<RefusalCode>, msg: &str) -> bool {
+        code.is_none() && msg.contains("unknown request kind")
     }
 
-    fn steal_poll_impl(&mut self) -> Result<StealOutcome> {
-        match self.roundtrip(&Request::Steal { worker: self.worker.clone() })? {
-            Response::Task(t) => Ok(StealOutcome::Task(t)),
-            Response::NotFound => Ok(StealOutcome::NotReady),
-            Response::Exit => Ok(StealOutcome::AllDone),
+    /// Open (or idempotently re-open) a named session on the hub.
+    /// Returns `Ok(true)` when the hub speaks sessions and the session
+    /// is live, `Ok(false)` when a pre-session hub refused the kind —
+    /// the client pins the degrade and every later
+    /// [`Client::submit_delta`] lands its creates in the anonymous
+    /// namespace instead.
+    pub fn open_session(&mut self, session: &str) -> Result<bool> {
+        if self.session == SessionSupport::Unsupported {
+            return Ok(false);
+        }
+        match self.roundtrip(&Request::OpenSession { session: session.to_string() })? {
+            Response::Session { .. } => {
+                self.session = SessionSupport::Native;
+                Ok(true)
+            }
+            Response::Err { msg, code } if Self::is_pre_session_err(code, &msg) => {
+                self.session = SessionSupport::Unsupported;
+                Ok(false)
+            }
             Response::Err { msg, code } => Err(ServerError { code, msg }.into()),
             other => bail!("unexpected reply {other:?}"),
         }
     }
 
-    /// Steal up to n tasks (batching extension).
-    #[deprecated(since = "0.3.0", note = "renamed to `acquire`")]
-    pub fn steal_n(&mut self, n: u32) -> Result<StealBatch> {
-        self.steal_n_impl(n)
+    /// Tear down a session: the hub forgets its finished tasks and
+    /// cancels its waiting/ready/in-flight ones, leaving every other
+    /// session untouched.  Returns the number of live tasks cancelled
+    /// (0 against a pre-session hub, which has no session to close).
+    pub fn close_session(&mut self, session: &str) -> Result<u64> {
+        if self.session == SessionSupport::Unsupported {
+            return Ok(0);
+        }
+        match self.roundtrip(&Request::CloseSession { session: session.to_string() })? {
+            Response::Session { cancelled, .. } => {
+                self.session = SessionSupport::Native;
+                Ok(cancelled)
+            }
+            Response::Err { msg, code } if Self::is_pre_session_err(code, &msg) => {
+                self.session = SessionSupport::Unsupported;
+                Ok(0)
+            }
+            Response::Err { msg, code } => Err(ServerError { code, msg }.into()),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    /// One incremental-delta round-trip: report `completions` (global
+    /// task keys, any session), then create `creates` inside `session`
+    /// (empty = anonymous).  The hub applies completions first, so a
+    /// same-frame create may depend on a task completed by this very
+    /// frame — the task-spawns-task primitive.  Opening the session is
+    /// implicit (`OpenSession` is only needed for an *empty* session to
+    /// exist).  Returns one [`SubmitOutcome`] per create, in order; a
+    /// completion refusal aborts with the first [`ServerError`].
+    ///
+    /// Against a pre-session hub this degrades to [`Client::report`] +
+    /// [`Client::submit`]: same tasks, anonymous namespace, two legacy
+    /// round-trips instead of one.
+    pub fn submit_delta(
+        &mut self,
+        session: &str,
+        completions: &[Completion],
+        creates: &[CreateItem],
+    ) -> Result<Vec<SubmitOutcome>> {
+        if completions.is_empty() && creates.is_empty() {
+            return Ok(Vec::new());
+        }
+        if self.session != SessionSupport::Unsupported {
+            let req = Request::SubmitDelta {
+                session: session.to_string(),
+                worker: self.worker.clone(),
+                completions: completions.to_vec(),
+                creates: creates.to_vec(),
+            };
+            match self.roundtrip(&req)? {
+                Response::Batch(results) => {
+                    self.session = SessionSupport::Native;
+                    if results.len() != completions.len() + creates.len() {
+                        bail!(
+                            "delta reply carries {} results for {} completions + {} creates",
+                            results.len(),
+                            completions.len(),
+                            creates.len()
+                        );
+                    }
+                    let mut results = results.into_iter();
+                    for r in results.by_ref().take(completions.len()) {
+                        if let BatchItem::Err { msg, code } = r {
+                            return Err(ServerError { code, msg }.into());
+                        }
+                    }
+                    return Ok(results
+                        .map(|r| match r {
+                            BatchItem::Ok => SubmitOutcome::Created,
+                            BatchItem::Err { msg, code } => {
+                                SubmitOutcome::Refused(ServerError { code, msg })
+                            }
+                        })
+                        .collect());
+                }
+                Response::Err { msg, code } if Self::is_pre_session_err(code, &msg) => {
+                    self.session = SessionSupport::Unsupported;
+                }
+                Response::Err { msg, code } => return Err(ServerError { code, msg }.into()),
+                other => bail!("unexpected reply {other:?}"),
+            }
+        }
+        self.report(completions)?;
+        self.submit(creates)
+    }
+
+    /// Per-task `Create` round-trip: [`Client::submit`]'s degrade path
+    /// against a pre-batch hub.  The deprecated single-shot verbs that
+    /// used to wrap these `_impl`s (`create`/`steal`/`steal_n`/
+    /// `steal_poll`/`complete`) are gone — their compatibility window
+    /// closed; the wire kinds themselves are still served for old
+    /// binaries.
+    fn create_impl(&mut self, task: TaskMsg, deps: &[String]) -> Result<()> {
+        self.expect_ok(&Request::Create { task, deps: deps.to_vec() })
     }
 
     fn steal_n_impl(&mut self, n: u32) -> Result<StealBatch> {
@@ -288,11 +395,7 @@ impl Client {
         }
     }
 
-    #[deprecated(since = "0.3.0", note = "use the batch-first `report` (single-item batch)")]
-    pub fn complete(&mut self, task: &str, success: bool) -> Result<()> {
-        self.complete_impl(task, success)
-    }
-
+    /// Per-task `Complete` round-trip: [`Client::report`]'s degrade path.
     fn complete_impl(&mut self, task: &str, success: bool) -> Result<()> {
         self.expect_ok(&Request::Complete {
             worker: self.worker.clone(),
@@ -405,10 +508,6 @@ impl IdleBackoff {
     const FLOOR: Duration = Duration::from_micros(200);
     const CEILING: Duration = Duration::from_millis(100);
 
-    fn new() -> IdleBackoff {
-        IdleBackoff::with_bounds(IdleBackoff::FLOOR, IdleBackoff::CEILING)
-    }
-
     /// Custom bounds (the `dhub worker` CLI exposes these); a zero floor
     /// is clamped to 1 µs and the ceiling never drops below the floor.
     fn with_bounds(floor: Duration, ceiling: Duration) -> IdleBackoff {
@@ -428,14 +527,6 @@ impl IdleBackoff {
     fn reset(&mut self) {
         self.current = self.floor;
     }
-}
-
-/// Three-way steal outcome.
-#[derive(Debug)]
-pub enum StealOutcome {
-    Task(TaskMsg),
-    NotReady,
-    AllDone,
 }
 
 /// StealN outcome.
@@ -608,7 +699,15 @@ pub fn run_worker_opts(
             }
         }
         let Some(task) = buffer.pop_front() else { continue };
-        opts.tracer.record(&task.name, EventKind::Started, client.worker());
+        // session-qualified names split for the trace (`alpha<US>x` is
+        // recorded as task `x` in session `alpha`); completions keep the
+        // full qualified key — that is the global handle the hub knows
+        opts.tracer.record_in_session(
+            task.session(),
+            task.short_name(),
+            EventKind::Started,
+            client.worker(),
+        );
         let t0 = Instant::now();
         let ok = exec(&task).is_ok();
         let compute = t0.elapsed();
@@ -620,7 +719,7 @@ pub fn run_worker_opts(
         }
         if opts.trace_terminals {
             let kind = if ok { EventKind::Finished } else { EventKind::Failed };
-            opts.tracer.record(&task.name, kind, client.worker());
+            opts.tracer.record_in_session(task.session(), task.short_name(), kind, client.worker());
         }
         pending.push(Completion { task: task.name.clone(), success: ok });
         if pending.len() >= report_batch {
@@ -831,6 +930,88 @@ mod tests {
         let mut w = Client::new(Box::new(connector.connect()), "w0");
         let stats = run_worker(&mut w, 0, |_| Ok(())).unwrap();
         assert_eq!(stats.tasks_run, 2);
+        drop(c);
+        drop(w);
+        drop(connector);
+        assert!(handle.join().unwrap().all_done());
+    }
+
+    #[test]
+    fn session_verbs_round_trip_and_pin_native() {
+        let (connector, handle) = spawn_inproc(SchedState::new(), ServerConfig::default());
+        let mut c = Client::new(Box::new(connector.connect()), "user");
+        assert_eq!(c.uses_session_wire(), None, "unprobed before the first session verb");
+        assert!(c.open_session("alpha").unwrap());
+        assert_eq!(c.uses_session_wire(), Some(true));
+        let out = c
+            .submit_delta("alpha", &[], &[CreateItem::new(TaskMsg::new("a", vec![]), vec![])])
+            .unwrap();
+        assert!(out.iter().all(SubmitOutcome::is_created));
+        let mut w = Client::new(Box::new(connector.connect()), "w0");
+        let stats = run_worker(&mut w, 0, |_| Ok(())).unwrap();
+        assert_eq!(stats.tasks_run, 1);
+        let st = c.status().unwrap();
+        let row = st.sessions.iter().find(|r| r.name == "alpha").expect("session row");
+        assert_eq!(row.completed, 1);
+        assert_eq!(c.close_session("alpha").unwrap(), 0, "drained session: nothing to cancel");
+        assert!(c.status().unwrap().sessions.is_empty());
+        drop(c);
+        drop(w);
+        drop(connector);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn submit_delta_reports_and_creates_in_one_frame() {
+        let (connector, handle) = spawn_inproc(SchedState::new(), ServerConfig::default());
+        let mut c = Client::new(Box::new(connector.connect()), "w0");
+        c.submit_delta("gen", &[], &[CreateItem::new(TaskMsg::new("root", vec![]), vec![])])
+            .unwrap();
+        let ts = match c.acquire(1).unwrap() {
+            StealBatch::Tasks(ts) => ts,
+            other => panic!("expected tasks, got {other:?}"),
+        };
+        assert_eq!(ts[0].session(), "gen");
+        // complete root and hang a child off it in the same frame
+        let out = c
+            .submit_delta(
+                "gen",
+                &[Completion::ok(&ts[0].name)],
+                &[CreateItem::new(TaskMsg::new("child", vec![]), vec!["root".into()])],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1, "one outcome per create; clean completions are not echoed");
+        assert!(out[0].is_created());
+        let ts = match c.acquire(1).unwrap() {
+            StealBatch::Tasks(ts) => ts,
+            other => panic!("expected tasks, got {other:?}"),
+        };
+        assert_eq!(ts[0].short_name(), "child", "same-frame dependency resolved");
+        c.report(&[Completion::ok(&ts[0].name)]).unwrap();
+        drop(c);
+        drop(connector);
+        assert!(handle.join().unwrap().all_done());
+    }
+
+    #[test]
+    fn session_verbs_degrade_against_pre_session_hub() {
+        let cfg = ServerConfig { compat_pre_sessions: true, ..ServerConfig::default() };
+        let (connector, handle) = spawn_inproc(SchedState::new(), cfg);
+        let mut c = Client::new(Box::new(connector.connect()), "user");
+        assert!(!c.open_session("alpha").unwrap(), "pre-session hub: no session namespace");
+        assert_eq!(c.uses_session_wire(), Some(false));
+        // creates land anonymous through the legacy submit path
+        let out = c
+            .submit_delta("alpha", &[], &[CreateItem::new(TaskMsg::new("a", vec![]), vec![])])
+            .unwrap();
+        assert!(out[0].is_created());
+        let mut w = Client::new(Box::new(connector.connect()), "w0");
+        let stats = run_worker(&mut w, 0, |_| Ok(())).unwrap();
+        assert_eq!(stats.tasks_run, 1);
+        let st = c.status().unwrap();
+        assert!(st.sessions.is_empty(), "anonymous tasks never grow session rows");
+        assert_eq!(st.completed, 1);
+        assert_eq!(c.close_session("alpha").unwrap(), 0);
         drop(c);
         drop(w);
         drop(connector);

@@ -13,6 +13,9 @@
 //! | Subscribe| Worker, pfx, n | Events          | (lifecycle tail extension)
 //! | CreateBatch   | [Task, [Task]]   | Batch    | (throughput extension)
 //! | CompleteBatch | Worker, [(Task, ok)] | Batch| (throughput extension)
+//! | OpenSession   | Session          | Session  | (multi-client extension)
+//! | CloseSession  | Session          | Session  | (multi-client extension)
+//! | SubmitDelta   | Session, Worker, [(Task, ok)], [Task, [Task]] | Batch |
 //!
 //! Workers are strings; Tasks are messages carrying arbitrary metadata —
 //! exactly the paper's protobuf choice, here via `substrate::wire`.
@@ -21,6 +24,14 @@
 //! so a tail client calls it repeatedly and each reply drains whatever
 //! the hub buffered for that subscriber since the previous call (bounded
 //! queue, drop-oldest — a slow tail can never stall the serve loop).
+//!
+//! The session kinds give a shared hub per-client namespaces (Rain's
+//! session-scoped server, Balsam's multi-user service): `SubmitDelta`
+//! carries completions *and* creates in one frame — the task-spawns-task
+//! path — and is answered with per-item [`Response::Batch`] results,
+//! completions first.  Pre-session hubs answer the unknown kinds with a
+//! whole-frame `Err`, the client's signal to degrade to the anonymous
+//! single-session behavior.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -39,9 +50,32 @@ pub struct TaskMsg {
     pub originator: String,
 }
 
+/// Separator between a session name and a task name inside a
+/// session-qualified task id (`"<session>\u{1f}<task>"`).  The hub keys
+/// every named-session task this way, so sessions are disjoint
+/// namespaces (two campaigns may both submit a task called `t0`) and
+/// teardown can sweep exactly one session's tasks.  Anonymous-session
+/// ids carry no separator — they are the raw task name, byte-identical
+/// to the pre-session wire.  Session names themselves may not contain
+/// the separator.
+pub const SESSION_SEP: char = '\u{1f}';
+
 impl TaskMsg {
     pub fn new(name: impl Into<String>, body: Vec<u8>) -> TaskMsg {
         TaskMsg { name: name.into(), body, originator: String::new() }
+    }
+
+    /// The session component of a session-qualified task id (empty for
+    /// anonymous-session tasks).
+    pub fn session(&self) -> &str {
+        self.name.split_once(SESSION_SEP).map(|(s, _)| s).unwrap_or("")
+    }
+
+    /// The task name without its session qualifier — what the submitter
+    /// called the task, and what traces record (with the session riding
+    /// in the event's own `session` field).
+    pub fn short_name(&self) -> &str {
+        self.name.split_once(SESSION_SEP).map(|(_, n)| n).unwrap_or(&self.name)
     }
 
     fn encode_into(&self, w: &mut Writer, field: u32) {
@@ -139,6 +173,30 @@ pub enum Request {
     /// per-item `Batch` reply and same old-hub degrade signal as
     /// `CreateBatch`.
     CompleteBatch { worker: String, completions: Vec<Completion> },
+    /// Open (or idempotently re-open) a named session namespace on the
+    /// hub.  Answered with [`Response::Session`]; a pre-session hub
+    /// answers the unknown kind with a whole-frame `Err` — the client's
+    /// degrade probe.
+    OpenSession { session: String },
+    /// Tear the session down: cancel/forget every task it owns (ready
+    /// tasks leave the queue, in-flight completions are ignored) while
+    /// other sessions keep draining.  Answered with
+    /// [`Response::Session`] carrying the cancelled-task count.
+    CloseSession { session: String },
+    /// Incremental graph delta into a session: `completions` are applied
+    /// first (a completion report may carry the delta — the
+    /// task-spawns-task path), then `creates`, so a same-frame create
+    /// may depend on a just-completed task or an earlier create in the
+    /// same delta.  Answered with per-item [`Response::Batch`] results,
+    /// completions first, then creates.  An empty session targets the
+    /// anonymous namespace (exact `CreateBatch`+`CompleteBatch`
+    /// semantics in one frame).
+    SubmitDelta {
+        session: String,
+        worker: String,
+        creates: Vec<CreateItem>,
+        completions: Vec<Completion>,
+    },
 }
 
 const REQ_CREATE: u64 = 1;
@@ -153,6 +211,9 @@ const REQ_METRICS: u64 = 9;
 const REQ_SUBSCRIBE: u64 = 10;
 const REQ_CREATE_BATCH: u64 = 11;
 const REQ_COMPLETE_BATCH: u64 = 12;
+const REQ_OPEN_SESSION: u64 = 13;
+const REQ_CLOSE_SESSION: u64 = 14;
+const REQ_SUBMIT_DELTA: u64 = 15;
 
 impl Request {
     pub fn encode(&self) -> Vec<u8> {
@@ -230,6 +291,38 @@ impl Request {
                     w.message(8, &cw);
                 }
             }
+            Request::OpenSession { session } => {
+                w.uint(1, REQ_OPEN_SESSION);
+                w.string(6, session);
+            }
+            Request::CloseSession { session } => {
+                w.uint(1, REQ_CLOSE_SESSION);
+                w.string(6, session);
+            }
+            Request::SubmitDelta { session, worker, creates, completions } => {
+                w.uint(1, REQ_SUBMIT_DELTA);
+                // 6 = session (omitted = anonymous), 4 = worker,
+                // 9 = repeated completion submessages (Complete layout),
+                // 8 = repeated create submessages (CreateBatch layout)
+                if !session.is_empty() {
+                    w.string(6, session);
+                }
+                if !worker.is_empty() {
+                    w.string(4, worker);
+                }
+                for c in completions {
+                    let mut cw = Writer::new();
+                    cw.string(6, &c.task);
+                    cw.uint(7, c.success as u64);
+                    w.message(9, &cw);
+                }
+                for item in creates {
+                    let mut iw = Writer::new();
+                    item.task.encode_into(&mut iw, 2);
+                    iw.strings(3, item.deps.iter().map(String::as_str));
+                    w.message(8, &iw);
+                }
+            }
         }
         w.into_bytes()
     }
@@ -275,50 +368,61 @@ impl Request {
                 prefix: wire::get_str(&fields, 6).unwrap_or_default().to_string(),
                 max: wire::get_u64(&fields, 5).unwrap_or(0) as u32,
             },
-            REQ_CREATE_BATCH => Request::CreateBatch {
-                items: fields
-                    .iter()
-                    .filter(|(f, _)| *f == 8)
-                    .map(|(_, v)| -> Result<CreateItem> {
-                        let bytes = v
-                            .as_bytes()
-                            .ok_or_else(|| anyhow!("batch item has wrong wire type"))?;
-                        let sub = Reader::new(bytes).fields()?;
-                        let tb = sub
-                            .iter()
-                            .find(|(f, _)| *f == 2)
-                            .and_then(|(_, v)| v.as_bytes())
-                            .ok_or_else(|| anyhow!("CreateBatch item missing task"))?;
-                        Ok(CreateItem {
-                            task: TaskMsg::decode(tb)?,
-                            deps: wire::get_strs(&sub, 3)
-                                .into_iter()
-                                .map(str::to_string)
-                                .collect(),
-                        })
-                    })
-                    .collect::<Result<Vec<CreateItem>>>()?,
-            },
+            REQ_CREATE_BATCH => Request::CreateBatch { items: decode_create_items(&fields, 8)? },
             REQ_COMPLETE_BATCH => Request::CompleteBatch {
                 worker: worker()?,
-                completions: fields
-                    .iter()
-                    .filter(|(f, _)| *f == 8)
-                    .map(|(_, v)| -> Result<Completion> {
-                        let bytes = v
-                            .as_bytes()
-                            .ok_or_else(|| anyhow!("batch item has wrong wire type"))?;
-                        let sub = Reader::new(bytes).fields()?;
-                        Ok(Completion {
-                            task: wire::get_str(&sub, 6)?.to_string(),
-                            success: wire::get_u64(&sub, 7).unwrap_or(1) != 0,
-                        })
-                    })
-                    .collect::<Result<Vec<Completion>>>()?,
+                completions: decode_completions(&fields, 8)?,
+            },
+            REQ_OPEN_SESSION => Request::OpenSession { session: task_name()? },
+            REQ_CLOSE_SESSION => Request::CloseSession { session: task_name()? },
+            REQ_SUBMIT_DELTA => Request::SubmitDelta {
+                session: wire::get_str(&fields, 6).unwrap_or_default().to_string(),
+                worker: wire::get_str(&fields, 4).unwrap_or_default().to_string(),
+                creates: decode_create_items(&fields, 8)?,
+                completions: decode_completions(&fields, 9)?,
             },
             other => bail!("unknown request kind {other}"),
         })
     }
+}
+
+/// Decode the repeated create submessages of a batch/delta frame
+/// (CreateBatch layout: 2 = task, 3 = deps) at the given field number.
+fn decode_create_items(fields: &[(u32, Value)], field: u32) -> Result<Vec<CreateItem>> {
+    fields
+        .iter()
+        .filter(|(f, _)| *f == field)
+        .map(|(_, v)| -> Result<CreateItem> {
+            let bytes = v.as_bytes().ok_or_else(|| anyhow!("batch item has wrong wire type"))?;
+            let sub = Reader::new(bytes).fields()?;
+            let tb = sub
+                .iter()
+                .find(|(f, _)| *f == 2)
+                .and_then(|(_, v)| v.as_bytes())
+                .ok_or_else(|| anyhow!("create item missing task"))?;
+            Ok(CreateItem {
+                task: TaskMsg::decode(tb)?,
+                deps: wire::get_strs(&sub, 3).into_iter().map(str::to_string).collect(),
+            })
+        })
+        .collect()
+}
+
+/// Decode the repeated completion submessages of a batch/delta frame
+/// (Complete layout: 6 = task, 7 = success) at the given field number.
+fn decode_completions(fields: &[(u32, Value)], field: u32) -> Result<Vec<Completion>> {
+    fields
+        .iter()
+        .filter(|(f, _)| *f == field)
+        .map(|(_, v)| -> Result<Completion> {
+            let bytes = v.as_bytes().ok_or_else(|| anyhow!("batch item has wrong wire type"))?;
+            let sub = Reader::new(bytes).fields()?;
+            Ok(Completion {
+                task: wire::get_str(&sub, 6)?.to_string(),
+                success: wire::get_u64(&sub, 7).unwrap_or(1) != 0,
+            })
+        })
+        .collect()
 }
 
 /// Machine-readable classification of a Create refusal.  Travels as an
@@ -337,6 +441,9 @@ pub enum RefusalCode {
     DepMissing,
     /// a named dependency is in the error state: the task can never run
     DepErrored,
+    /// the named session is invalid (empty, or contains the reserved
+    /// separator / quoting characters) — `SubmitDelta` creates only
+    BadSession,
 }
 
 impl RefusalCode {
@@ -345,6 +452,7 @@ impl RefusalCode {
             RefusalCode::Duplicate => 1,
             RefusalCode::DepMissing => 2,
             RefusalCode::DepErrored => 3,
+            RefusalCode::BadSession => 4,
         }
     }
 
@@ -353,8 +461,36 @@ impl RefusalCode {
             1 => Some(RefusalCode::Duplicate),
             2 => Some(RefusalCode::DepMissing),
             3 => Some(RefusalCode::DepErrored),
+            4 => Some(RefusalCode::BadSession),
             _ => None,
         }
+    }
+}
+
+/// Per-session counters inside a [`StatusInfo`] reply: one row per open
+/// named session (the anonymous session stays in the global counters
+/// only).  Old clients skip the unknown wire field; old servers simply
+/// send no rows.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SessionRow {
+    pub name: String,
+    pub total: u64,
+    pub completed: u64,
+    /// errored = failed + transitively-skipped successors
+    pub errored: u64,
+    /// subset of `errored` that a worker actually attempted
+    pub failed: u64,
+}
+
+impl SessionRow {
+    /// Tasks the session still owes the hub (waiting, ready, or running).
+    pub fn live(&self) -> u64 {
+        self.total.saturating_sub(self.completed + self.errored)
+    }
+
+    /// Every task this session has submitted is finished.
+    pub fn is_drained(&self) -> bool {
+        self.completed + self.errored == self.total
     }
 }
 
@@ -372,6 +508,9 @@ pub struct StatusInfo {
     /// (subset of `errored`; the rest never reached a worker)
     pub failed: u64,
     pub workers: u64,
+    /// one row per open named session, sorted by name (empty against
+    /// pre-session hubs and when no session is open)
+    pub sessions: Vec<SessionRow>,
 }
 
 impl StatusInfo {
@@ -415,9 +554,13 @@ pub enum Response {
     Events { events: Vec<TaskEvent>, dropped: u64, done: bool },
     /// Per-item batch results, order-aligned with the request's items.
     /// The only reply a current hub sends for `CreateBatch` /
-    /// `CompleteBatch` — a whole-frame `Err` to a batch request
-    /// therefore always means the hub predates the batch kinds.
+    /// `CompleteBatch` / `SubmitDelta` — a whole-frame `Err` to one of
+    /// those kinds therefore always means the hub predates them.
     Batch(Vec<BatchItem>),
+    /// Session acknowledgement (`OpenSession` / `CloseSession`):
+    /// `cancelled` is the number of live tasks the teardown swept
+    /// (always 0 for an open).
+    Session { session: String, cancelled: u64 },
 }
 
 /// Outcome of one item inside a batched request.
@@ -453,10 +596,12 @@ const RESP_STATUS: u64 = 7;
 const RESP_METRICS: u64 = 8;
 const RESP_EVENTS: u64 = 9;
 const RESP_BATCH: u64 = 10;
+const RESP_SESSION: u64 = 11;
 
 // TaskEvent wire layout (repeated sub-message, field 30 of an Events
 // frame): {1: task, 2: kind name, 3: t as f64 bits (uint — same float
-// convention as the metrics snapshot), 4: who, 5: seq}.  The kind
+// convention as the metrics snapshot), 4: who, 5: seq, 6: session
+// (omitted for the anonymous session; old decoders skip it)}.  The kind
 // travels as its schema name so the wire stays aligned with the JSONL
 // vocabulary (an unknown kind is a decode error, not silence).
 fn encode_event_into(w: &mut Writer, field: u32, ev: &TaskEvent) {
@@ -469,6 +614,9 @@ fn encode_event_into(w: &mut Writer, field: u32, ev: &TaskEvent) {
     }
     if ev.seq != 0 {
         e.uint(5, ev.seq);
+    }
+    if !ev.session.is_empty() {
+        e.string(6, &ev.session);
     }
     w.message(field, &e);
 }
@@ -483,6 +631,7 @@ fn decode_event(bytes: &[u8]) -> Result<TaskEvent> {
         t: f64::from_bits(wire::get_u64(&sub, 3).unwrap_or(0)),
         who: wire::get_str(&sub, 4).unwrap_or_default().to_string(),
         seq: wire::get_u64(&sub, 5).unwrap_or(0),
+        session: wire::get_str(&sub, 6).unwrap_or_default().to_string(),
     })
 }
 
@@ -608,6 +757,18 @@ impl Response {
                 w.uint(15, s.errored);
                 w.uint(16, s.workers);
                 w.uint(17, s.failed);
+                // repeated session-row submessages (field 18):
+                // {1: name, 2: total, 3: completed, 4: errored, 5: failed}
+                // — pre-session decoders skip the unknown field
+                for row in &s.sessions {
+                    let mut rw = Writer::new();
+                    rw.string(1, &row.name);
+                    rw.uint(2, row.total);
+                    rw.uint(3, row.completed);
+                    rw.uint(4, row.errored);
+                    rw.uint(5, row.failed);
+                    w.message(18, &rw);
+                }
             }
             Response::Metrics(m) => {
                 w.uint(1, RESP_METRICS);
@@ -640,6 +801,13 @@ impl Response {
                         }
                     }
                     w.message(40, &rw);
+                }
+            }
+            Response::Session { session, cancelled } => {
+                w.uint(1, RESP_SESSION);
+                w.string(50, session);
+                if *cancelled != 0 {
+                    w.uint(51, *cancelled);
                 }
             }
         }
@@ -683,6 +851,24 @@ impl Response {
                 workers: wire::get_u64(&fields, 16)?,
                 // absent on frames from pre-`failed` servers
                 failed: wire::get_u64(&fields, 17).unwrap_or(0),
+                // absent on frames from pre-session servers
+                sessions: fields
+                    .iter()
+                    .filter(|(f, _)| *f == 18)
+                    .map(|(_, v)| -> Result<SessionRow> {
+                        let bytes = v
+                            .as_bytes()
+                            .ok_or_else(|| anyhow!("session row has wrong wire type"))?;
+                        let sub = Reader::new(bytes).fields()?;
+                        Ok(SessionRow {
+                            name: wire::get_str(&sub, 1)?.to_string(),
+                            total: wire::get_u64(&sub, 2).unwrap_or(0),
+                            completed: wire::get_u64(&sub, 3).unwrap_or(0),
+                            errored: wire::get_u64(&sub, 4).unwrap_or(0),
+                            failed: wire::get_u64(&sub, 5).unwrap_or(0),
+                        })
+                    })
+                    .collect::<Result<Vec<SessionRow>>>()?,
             }),
             RESP_METRICS => Response::Metrics(decode_metrics(&fields)?),
             RESP_EVENTS => Response::Events {
@@ -719,6 +905,10 @@ impl Response {
                     })
                     .collect::<Result<Vec<BatchItem>>>()?,
             ),
+            RESP_SESSION => Response::Session {
+                session: wire::get_str(&fields, 50).unwrap_or_default().to_string(),
+                cancelled: wire::get_u64(&fields, 51).unwrap_or(0),
+            },
             other => bail!("unknown response kind {other}"),
         })
     }
@@ -800,7 +990,19 @@ mod tests {
             errored: 2,
             failed: 1,
             workers: 7,
+            sessions: vec![],
         }));
+        roundtrip_resp(Response::Status(StatusInfo {
+            total: 100,
+            completed: 80,
+            sessions: vec![
+                SessionRow { name: "alpha".into(), total: 60, completed: 50, errored: 2, failed: 1 },
+                SessionRow { name: "beta".into(), total: 40, completed: 30, errored: 0, failed: 0 },
+            ],
+            ..StatusInfo::default()
+        }));
+        roundtrip_resp(Response::Session { session: "alpha".into(), cancelled: 0 });
+        roundtrip_resp(Response::Session { session: "beta".into(), cancelled: 17 });
     }
 
     #[test]
@@ -839,6 +1041,7 @@ mod tests {
             t,
             who: who.into(),
             seq,
+            session: String::new(),
         };
         roundtrip_resp(Response::Events { events: vec![], dropped: 0, done: false });
         roundtrip_resp(Response::Events { events: vec![], dropped: 7, done: true });
@@ -858,6 +1061,15 @@ mod tests {
             events: vec![ev("t", EventKind::Failed, 1.0e9 + 0.125, "rank3", u64::MAX)],
             dropped: u64::MAX,
             done: true,
+        });
+        // the /5 session tag rides event field 6 (omitted when empty)
+        roundtrip_resp(Response::Events {
+            events: vec![TaskEvent {
+                session: "alpha".into(),
+                ..ev("t0", EventKind::Finished, 0.5, "w0", 2)
+            }],
+            dropped: 0,
+            done: false,
         });
     }
 
@@ -932,6 +1144,92 @@ mod tests {
         assert_eq!(Response::decode(&bytes).unwrap(), resp);
         let fields = crate::substrate::wire::Reader::new(&bytes).fields().unwrap();
         assert_eq!(wire::get_u64(&fields, 1).unwrap(), 10);
+    }
+
+    #[test]
+    fn session_requests_roundtrip() {
+        roundtrip_req(Request::OpenSession { session: "alpha".into() });
+        roundtrip_req(Request::CloseSession { session: "キャンペーン".into() });
+        roundtrip_req(Request::SubmitDelta {
+            session: "alpha".into(),
+            worker: "w0".into(),
+            creates: vec![
+                CreateItem::new(TaskMsg::new("child", vec![1]), vec!["gen".into()]),
+                CreateItem::new(TaskMsg::new("leaf", vec![]), vec!["child".into()]),
+            ],
+            completions: vec![Completion::ok("gen"), Completion::failed("other")],
+        });
+        // anonymous delta: empty session + empty worker both omitted
+        roundtrip_req(Request::SubmitDelta {
+            session: String::new(),
+            worker: String::new(),
+            creates: vec![CreateItem::new(TaskMsg::new("t", vec![]), vec![])],
+            completions: vec![],
+        });
+        // completion-only delta (a bare task-spawns-nothing report)
+        roundtrip_req(Request::SubmitDelta {
+            session: "beta".into(),
+            worker: "w1".into(),
+            creates: vec![],
+            completions: vec![Completion::ok("a")],
+        });
+    }
+
+    #[test]
+    fn session_kinds_are_fresh() {
+        // request kinds 13/14/15 and response kind 11, the next free
+        // slots after the batch kinds: a pre-session hub answers the
+        // unknown request kind with a whole-frame Err — the client's
+        // degrade-to-anonymous signal
+        let pin = |req: &Request, want: u64| {
+            let bytes = req.encode();
+            assert_eq!(&Request::decode(&bytes).unwrap(), req);
+            let fields = crate::substrate::wire::Reader::new(&bytes).fields().unwrap();
+            assert_eq!(wire::get_u64(&fields, 1).unwrap(), want);
+        };
+        pin(&Request::OpenSession { session: "s".into() }, 13);
+        pin(&Request::CloseSession { session: "s".into() }, 14);
+        pin(
+            &Request::SubmitDelta {
+                session: "s".into(),
+                worker: "w".into(),
+                creates: vec![],
+                completions: vec![],
+            },
+            15,
+        );
+        let resp = Response::Session { session: "s".into(), cancelled: 3 };
+        let bytes = resp.encode();
+        assert_eq!(Response::decode(&bytes).unwrap(), resp);
+        let fields = crate::substrate::wire::Reader::new(&bytes).fields().unwrap();
+        assert_eq!(wire::get_u64(&fields, 1).unwrap(), 11);
+    }
+
+    #[test]
+    fn pre_session_status_frame_decodes_with_no_rows() {
+        // a pre-session hub's Status frame has no field-18 rows
+        let mut w = Writer::new();
+        w.uint(1, 7); // RESP_STATUS
+        for f in 10..=16 {
+            w.uint(f, 1);
+        }
+        match Response::decode(w.as_bytes()).unwrap() {
+            Response::Status(st) => {
+                assert!(st.sessions.is_empty());
+                assert_eq!(st.failed, 0, "pre-failed frames default to 0");
+            }
+            other => panic!("expected Status, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn session_qualified_task_ids_split() {
+        let anon = TaskMsg::new("t0", vec![]);
+        assert_eq!(anon.session(), "");
+        assert_eq!(anon.short_name(), "t0");
+        let qualified = TaskMsg::new(format!("alpha{SESSION_SEP}t0"), vec![]);
+        assert_eq!(qualified.session(), "alpha");
+        assert_eq!(qualified.short_name(), "t0");
     }
 
     #[test]

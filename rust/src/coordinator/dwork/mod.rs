@@ -12,14 +12,16 @@ pub mod client;
 pub mod forwarder;
 pub mod messages;
 pub mod server;
+pub mod sessions;
 pub mod state;
 
 pub use client::{
-    run_worker, run_worker_opts, Client, EventBatch, ServerError, StealBatch, StealOutcome,
-    SubmitOutcome, WorkerOpts, WorkerStats,
+    run_worker, run_worker_opts, Client, EventBatch, ServerError, StealBatch, SubmitOutcome,
+    WorkerOpts, WorkerStats,
 };
 pub use messages::{
-    BatchItem, Completion, CreateItem, RefusalCode, Request, Response, StatusInfo, TaskMsg,
+    BatchItem, Completion, CreateItem, RefusalCode, Request, Response, SessionRow, StatusInfo,
+    TaskMsg,
 };
 pub use server::{serve, spawn_inproc, spawn_tcp, ServerConfig};
 pub use state::{CreateError, SchedState, TaskState};

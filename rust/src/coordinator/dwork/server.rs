@@ -37,11 +37,21 @@ pub struct ServerConfig {
     /// `Request::Metrics` snapshot (the serve loop shares this registry
     /// with the state machine via `SchedState::set_metrics`).
     pub metrics: Registry,
+    /// Test shim: answer the session request kinds
+    /// (OpenSession/CloseSession/SubmitDelta) with the whole-frame
+    /// `Err` a pre-session hub would produce, so the client degrade
+    /// path can be pinned against a current build (mixed-version test).
+    /// Never set in production servers.
+    pub compat_pre_sessions: bool,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { snapshot_every: 0, metrics: Registry::default() }
+        ServerConfig {
+            snapshot_every: 0,
+            metrics: Registry::default(),
+            compat_pre_sessions: false,
+        }
     }
 }
 
@@ -97,6 +107,15 @@ pub fn serve_with_counters(
             }
             Ok(Request::CompleteBatch { .. }) => {
                 (Counter::ReqCompleteBatch, Some(Series::ServiceCompleteBatch))
+            }
+            Ok(Request::OpenSession { .. }) => {
+                (Counter::ReqOpenSession, Some(Series::ServiceOpenSession))
+            }
+            Ok(Request::CloseSession { .. }) => {
+                (Counter::ReqCloseSession, Some(Series::ServiceCloseSession))
+            }
+            Ok(Request::SubmitDelta { .. }) => {
+                (Counter::ReqSubmitDelta, Some(Series::ServiceSubmitDelta))
             }
         };
         metrics.inc(kind_counter);
@@ -249,6 +268,73 @@ pub fn serve_with_counters(
                     }
                 }
                 Response::Batch(results)
+            }
+            // session verbs.  With `compat_pre_sessions` the hub replays
+            // the exact reply a PR-9 hub produces for these kinds — the
+            // whole-frame Err whose decode path is `bad request: unknown
+            // request kind {13,14,15}` — pinning the client degrade.
+            Ok(Request::OpenSession { session }) => {
+                if cfg.compat_pre_sessions {
+                    Response::err("bad request: unknown request kind 13")
+                } else {
+                    match state.open_session(&session) {
+                        Ok(newly) => {
+                            mutated = newly;
+                            Response::Session { session, cancelled: 0 }
+                        }
+                        Err(e) => Response::err(e.to_string()),
+                    }
+                }
+            }
+            Ok(Request::CloseSession { session }) => {
+                if cfg.compat_pre_sessions {
+                    Response::err("bad request: unknown request kind 14")
+                } else {
+                    let was_open = state.session_is_open(&session);
+                    match state.close_session(&session) {
+                        Ok(cancelled) => {
+                            mutated = was_open;
+                            Response::Session { session, cancelled }
+                        }
+                        Err(e) => Response::err(e.to_string()),
+                    }
+                }
+            }
+            // one delta frame: completions applied FIRST, then creates,
+            // so a same-frame create may depend on a task this very
+            // frame completed (task-spawns-task reports).  Per-item
+            // results align completions-then-creates; like the batch
+            // kinds, a current hub never answers whole-frame Err here —
+            // that reply is reserved for pre-session hubs and is the
+            // client's degrade signal.
+            Ok(Request::SubmitDelta { session, worker, creates, completions }) => {
+                if cfg.compat_pre_sessions {
+                    Response::err("bad request: unknown request kind 15")
+                } else {
+                    let mut results = Vec::with_capacity(completions.len() + creates.len());
+                    for c in completions {
+                        match state.complete(&worker, &c.task, c.success) {
+                            Ok(()) => {
+                                mutated = true;
+                                results.push(BatchItem::Ok);
+                            }
+                            Err(e) => {
+                                results.push(BatchItem::Err { msg: e.to_string(), code: None })
+                            }
+                        }
+                    }
+                    for item in creates {
+                        match state.create_in_session(&session, item.task, &item.deps) {
+                            Ok(()) => {
+                                mutated = true;
+                                results.push(BatchItem::Ok);
+                            }
+                            Err(e) => results
+                                .push(BatchItem::Err { msg: e.to_string(), code: Some(e.code) }),
+                        }
+                    }
+                    Response::Batch(results)
+                }
             }
         };
         if mutated {
@@ -584,6 +670,100 @@ mod tests {
         assert_eq!(items.len(), 2);
         assert!(items.iter().all(|i| !i.is_ok()));
         assert!(items.iter().all(|i| matches!(i, BatchItem::Err { .. })));
+        drop(raw);
+        drop(connector);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn session_delta_completions_apply_before_creates() {
+        // one SubmitDelta frame both reports a finished task and hangs
+        // new work off it — the hub must apply completions first so the
+        // same-frame dependency resolves
+        use super::super::messages::{Request, Response};
+        let (connector, handle) = spawn_inproc(SchedState::new(), ServerConfig::default());
+        let mut raw = connector.connect();
+        let rt = |raw: &mut dyn ClientConn, req: &Request| {
+            Response::decode(&raw.request(&req.encode()).unwrap()).unwrap()
+        };
+        let r = rt(&mut raw, &Request::OpenSession { session: "gen".into() });
+        assert!(
+            matches!(&r, Response::Session { session, cancelled: 0 } if session == "gen"),
+            "{r:?}"
+        );
+        let r = rt(
+            &mut raw,
+            &Request::SubmitDelta {
+                session: "gen".into(),
+                worker: "w0".into(),
+                creates: vec![CreateItem::new(TaskMsg::new("root", vec![]), vec![])],
+                completions: vec![],
+            },
+        );
+        let Response::Batch(items) = r else { panic!("expected Batch, got {r:?}") };
+        assert!(items.iter().all(|i| i.is_ok()));
+        // steal the qualified task like any worker would
+        let r = rt(&mut raw, &Request::StealN { worker: "w0".into(), n: 1 });
+        let Response::Tasks(ts) = r else { panic!("expected Tasks, got {r:?}") };
+        assert_eq!(ts[0].session(), "gen");
+        assert_eq!(ts[0].short_name(), "root");
+        // the completion report spawns a child depending on the task it
+        // just completed — one frame, completion applied first
+        let r = rt(
+            &mut raw,
+            &Request::SubmitDelta {
+                session: "gen".into(),
+                worker: "w0".into(),
+                creates: vec![CreateItem::new(
+                    TaskMsg::new("child", vec![]),
+                    vec!["root".into()],
+                )],
+                completions: vec![Completion::ok(&ts[0].name)],
+            },
+        );
+        let Response::Batch(items) = r else { panic!("expected Batch, got {r:?}") };
+        assert_eq!(items.len(), 2, "completion result + create result");
+        assert!(items.iter().all(|i| i.is_ok()), "{items:?}");
+        let r = rt(&mut raw, &Request::StealN { worker: "w0".into(), n: 1 });
+        let Response::Tasks(ts) = r else { panic!("expected Tasks, got {r:?}") };
+        assert_eq!(ts[0].short_name(), "child", "same-frame dependency resolved");
+        drop(raw);
+        drop(connector);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn compat_shim_answers_session_kinds_like_a_pre_session_hub() {
+        use super::super::messages::{Request, Response};
+        let cfg = ServerConfig { compat_pre_sessions: true, ..ServerConfig::default() };
+        let (connector, handle) = spawn_inproc(SchedState::new(), cfg);
+        let mut raw = connector.connect();
+        for req in [
+            Request::OpenSession { session: "s".into() },
+            Request::CloseSession { session: "s".into() },
+            Request::SubmitDelta {
+                session: "s".into(),
+                worker: String::new(),
+                creates: vec![],
+                completions: vec![],
+            },
+        ] {
+            let r = Response::decode(&raw.request(&req.encode()).unwrap()).unwrap();
+            match r {
+                Response::Err { msg, code } => {
+                    assert!(msg.contains("unknown request kind"), "{msg}");
+                    assert!(code.is_none());
+                }
+                other => panic!("compat hub must whole-frame Err, got {other:?}"),
+            }
+        }
+        // non-session traffic is served normally by the same hub
+        let r = Response::decode(
+            &raw.request(&Request::Create { task: TaskMsg::new("a", vec![]), deps: vec![] }.encode())
+                .unwrap(),
+        )
+        .unwrap();
+        assert!(matches!(r, Response::Ok), "{r:?}");
         drop(raw);
         drop(connector);
         handle.join().unwrap();

@@ -1,0 +1,404 @@
+//! Per-session namespaces for the dwork hub (the Balsam-style
+//! "continuously fed, multi-user task server" the ROADMAP calls for).
+//!
+//! A *session* is a named campaign sharing one hub with other
+//! campaigns.  Internally a session task's key in the scheduler tables
+//! is its short name qualified with the session prefix —
+//! `"<session>\u{1f}<name>"` (see
+//! [`super::messages::SESSION_SEP`]) — so two sessions can reuse the
+//! same task names without colliding, failure propagation stays inside
+//! one session (qualified dependencies can only name same-session
+//! keys), and teardown can sweep exactly one campaign's rows.  The
+//! *anonymous* session is the empty name: its task keys are the raw
+//! task names, byte-identical to every pre-session hub, which is what
+//! keeps the single-client serve order and snapshot bytes unchanged.
+//!
+//! This module owns the registry bookkeeping (per-session counters,
+//! [`StatusInfo`](super::messages::StatusInfo) rows, KV persistence
+//! records); the scheduler-table mutations live in
+//! [`SchedState`](super::state::SchedState) next door because they need
+//! the task/queue tables.
+//!
+//! Wire-format note: one known (and accepted) collision remains — an
+//! anonymous task literally named `"alpha\u{1f}x"` shares a key with
+//! session `alpha`'s task `x` and will be refused as a duplicate if
+//! both exist.  `U+001F` is a C0 control character; no real task
+//! namespace uses it, and session names themselves reject it.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::messages::{SessionRow, SESSION_SEP};
+use crate::substrate::wire::{self, Reader, Writer};
+
+/// KV key prefix for persisted session records (`s/<name>`), sibling to
+/// the `t/` task table.
+pub(crate) const SESSION_KEY_PREFIX: &str = "s/";
+
+/// KV key for the snapshot format marker.  Absent on pre-session
+/// snapshots; written (as [`FORMAT_SESSIONS`]) the first time a session
+/// opens.  Older hubs only scan `t/` and ignore both this and the `s/`
+/// rows, so the bump is backward- *and* forward-compatible.
+pub(crate) const FORMAT_KEY: &[u8] = b"meta/format";
+pub(crate) const FORMAT_SESSIONS: &[u8] = b"2";
+
+/// The scheduler-table key for `name` inside `session` (the raw name
+/// when the session is anonymous).
+pub(crate) fn qualify(session: &str, name: &str) -> String {
+    if session.is_empty() {
+        name.to_string()
+    } else {
+        let mut key = String::with_capacity(session.len() + 1 + name.len());
+        key.push_str(session);
+        key.push(SESSION_SEP);
+        key.push_str(name);
+        key
+    }
+}
+
+/// The short (user-facing) half of a possibly-qualified key.
+pub(crate) fn short_of(key: &str) -> &str {
+    match key.split_once(SESSION_SEP) {
+        Some((_, short)) => short,
+        None => key,
+    }
+}
+
+/// Validate a session name at `OpenSession` time: non-empty, no
+/// reserved separator, and no characters that would corrupt the
+/// Prometheus label or the JSONL trace field (`"`/`\`/control chars).
+pub(crate) fn validate_session_name(name: &str) -> Result<()> {
+    if name.is_empty() {
+        bail!("session name must not be empty (empty means the anonymous session)");
+    }
+    if name.contains(SESSION_SEP) {
+        bail!("session name {name:?} contains the reserved separator U+001F");
+    }
+    if name.chars().any(|c| c.is_control() || c == '"' || c == '\\') {
+        bail!("session name {name:?} contains a control or quoting character");
+    }
+    Ok(())
+}
+
+/// Live accounting for one open session.  `total` counts every create
+/// accepted into the session; completed/errored/failed mirror the
+/// global [`SchedState`](super::state::SchedState) counters scoped to
+/// this namespace, so `total - completed - errored` is the session's
+/// live population.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub(crate) struct SessionCounters {
+    pub total: u64,
+    pub completed: u64,
+    pub errored: u64,
+    pub failed: u64,
+}
+
+impl SessionCounters {
+    pub fn live(&self) -> u64 {
+        self.total.saturating_sub(self.completed + self.errored)
+    }
+}
+
+/// The hub's open-session table: name → counters.  Purely bookkeeping —
+/// every mutation is driven by `SchedState`, which owns the actual task
+/// rows.
+#[derive(Debug, Default)]
+pub(crate) struct SessionRegistry {
+    map: HashMap<String, SessionCounters>,
+}
+
+impl SessionRegistry {
+    /// Open (or re-open) `name`; `true` if it was not already open.
+    pub fn open(&mut self, name: &str) -> bool {
+        if self.map.contains_key(name) {
+            return false;
+        }
+        self.map.insert(name.to_string(), SessionCounters::default());
+        true
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<SessionCounters> {
+        self.map.remove(name)
+    }
+
+    pub fn is_open(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Counters for `name`, opening it implicitly if needed (rebuild
+    /// path: task rows may be scanned before their session record).
+    pub fn ensure(&mut self, name: &str) -> &mut SessionCounters {
+        self.map.entry(name.to_string()).or_default()
+    }
+
+    /// Counters for an already-open session; panics on a name the
+    /// caller did not open (every `SchedState` path opens first).
+    pub fn counters_mut(&mut self, name: &str) -> &mut SessionCounters {
+        self.map.get_mut(name).expect("session counters for an unopened session")
+    }
+
+    pub fn counters(&self, name: &str) -> Option<&SessionCounters> {
+        self.map.get(name)
+    }
+
+    /// Status rows, sorted by session name for a stable wire order.
+    pub fn rows(&self) -> Vec<SessionRow> {
+        let mut rows: Vec<SessionRow> = self
+            .map
+            .iter()
+            .map(|(name, c)| SessionRow {
+                name: name.clone(),
+                total: c.total,
+                completed: c.completed,
+                errored: c.errored,
+                failed: c.failed,
+            })
+            .collect();
+        rows.sort_by(|a, b| a.name.cmp(&b.name));
+        rows
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.map.keys().cloned().collect();
+        names.sort();
+        names
+    }
+}
+
+/// Persisted form of one `s/<name>` row.  Counters are *not* stored —
+/// they are rebuilt from the task table on load, exactly like the ready
+/// queue — so the record only pins the session's existence (a session
+/// with zero live rows must survive a restart as "open").
+pub(crate) fn encode_session_record(name: &str) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.string(1, name);
+    w.into_bytes()
+}
+
+pub(crate) fn decode_session_record(bytes: &[u8]) -> Result<String> {
+    let fields = Reader::new(bytes).fields()?;
+    Ok(wire::get_str(&fields, 1)?.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::state::{SchedState, TaskState};
+    use super::super::messages::{RefusalCode, TaskMsg};
+    use super::*;
+    use crate::metrics::{Counter, Gauge, Registry};
+    use crate::substrate::kvstore::KvStore;
+    use crate::trace::{EventKind, Tracer};
+
+    fn t(name: &str) -> TaskMsg {
+        TaskMsg::new(name, vec![])
+    }
+
+    fn deps(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn qualify_and_short_roundtrip() {
+        assert_eq!(qualify("", "a"), "a");
+        let key = qualify("alpha", "a");
+        assert_eq!(key, format!("alpha{SESSION_SEP}a"));
+        assert_eq!(short_of(&key), "a");
+        assert_eq!(short_of("plain"), "plain");
+    }
+
+    #[test]
+    fn session_name_validation() {
+        assert!(validate_session_name("alpha-1").is_ok());
+        assert!(validate_session_name("").is_err());
+        assert!(validate_session_name(&format!("a{SESSION_SEP}b")).is_err());
+        assert!(validate_session_name("a\"b").is_err());
+        assert!(validate_session_name("a\\b").is_err());
+        assert!(validate_session_name("a\nb").is_err());
+    }
+
+    #[test]
+    fn same_task_name_in_two_sessions_is_not_a_duplicate() {
+        let mut s = SchedState::new();
+        s.open_session("alpha").unwrap();
+        s.open_session("beta").unwrap();
+        s.create_in_session("alpha", t("a"), &[]).unwrap();
+        s.create_in_session("beta", t("a"), &[]).unwrap();
+        // ...but within one session it still is
+        let err = s.create_in_session("alpha", t("a"), &[]).unwrap_err();
+        assert_eq!(err.code, RefusalCode::Duplicate);
+        assert_eq!(s.len(), 2);
+        let rows = s.status().sessions;
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.total == 1 && r.live() == 1));
+    }
+
+    #[test]
+    fn incremental_deltas_depend_on_done_and_inflight_tasks() {
+        let mut s = SchedState::new();
+        s.create_in_session("inc", t("done"), &[]).unwrap();
+        s.create_in_session("inc", t("flight"), &[]).unwrap();
+        let got = s.steal("w0", 2);
+        assert_eq!(got.len(), 2);
+        s.complete("w0", &got[0].name, true).unwrap();
+        // new work may hang off an already-finished task (join counts as
+        // satisfied immediately) or an in-flight one (normal waiting)
+        s.create_in_session("inc", t("after-done"), &deps(&["done"])).unwrap();
+        s.create_in_session("inc", t("after-flight"), &deps(&["flight"])).unwrap();
+        assert_eq!(s.get(&qualify("inc", "after-done")).unwrap().state, TaskState::Ready);
+        assert_eq!(s.get(&qualify("inc", "after-flight")).unwrap().state, TaskState::Waiting);
+        s.complete("w0", &got[1].name, true).unwrap();
+        assert_eq!(s.get(&qualify("inc", "after-flight")).unwrap().state, TaskState::Ready);
+    }
+
+    #[test]
+    fn failure_propagation_stays_inside_the_session() {
+        let metrics = Registry::enabled();
+        let mut s = SchedState::new();
+        s.set_metrics(metrics.clone());
+        s.create_in_session("bad", t("root"), &[]).unwrap();
+        s.create_in_session("bad", t("child"), &deps(&["root"])).unwrap();
+        s.create_in_session("good", t("root"), &[]).unwrap();
+        let got = s.steal("w0", 8);
+        assert_eq!(got.len(), 2, "one ready root per session");
+        for msg in &got {
+            let ok = msg.session() != "bad";
+            s.complete("w0", &msg.name, ok).unwrap();
+        }
+        let status = s.status();
+        let bad = status.sessions.iter().find(|r| r.name == "bad").unwrap();
+        let good = status.sessions.iter().find(|r| r.name == "good").unwrap();
+        assert_eq!((bad.errored, bad.failed, bad.live()), (2, 1, 0));
+        assert_eq!((good.completed, good.errored, good.live()), (1, 0, 0));
+        assert_eq!(metrics.session_gauge("bad"), Some(0));
+        assert_eq!(metrics.session_gauge("good"), Some(0));
+    }
+
+    #[test]
+    fn close_session_sweeps_only_its_own_rows() {
+        let metrics = Registry::enabled();
+        let tracer = Tracer::memory();
+        let mut s = SchedState::new();
+        s.set_metrics(metrics.clone());
+        s.set_tracer(tracer.clone());
+        // session "doomed": one done, one assigned, one ready, one waiting
+        s.create_in_session("doomed", t("d0"), &[]).unwrap();
+        s.create_in_session("doomed", t("d1"), &[]).unwrap();
+        s.create_in_session("doomed", t("d2"), &[]).unwrap();
+        s.create_in_session("doomed", t("d3"), &deps(&["d2"])).unwrap();
+        // session "alive" plus an anonymous task
+        s.create_in_session("alive", t("a0"), &[]).unwrap();
+        s.create(t("anon"), &[]).unwrap();
+        let got = s.steal("w0", 2); // d0, d1 (FIFO)
+        assert_eq!(got.len(), 2);
+        s.complete("w0", &got[0].name, true).unwrap();
+        assert_eq!(s.ready_len(), 3); // d2, a0, anon
+
+        let cancelled = s.close_session("doomed").unwrap();
+        assert_eq!(cancelled, 3, "assigned d1 + ready d2 + waiting d3");
+        assert_eq!(s.len(), 2, "alive/a0 and anon remain");
+        assert_eq!(s.ready_len(), 2);
+        assert!(s.status().sessions.iter().all(|r| r.name == "alive"));
+        assert_eq!(metrics.counter(Counter::TasksCancelled), 3);
+        assert_eq!(metrics.gauge(Gauge::SessionsOpen), 1);
+        assert_eq!(metrics.gauge(Gauge::Inflight), 0, "swept assigned task left inflight");
+        assert_eq!(metrics.session_gauge("doomed"), None);
+        // closing again is a no-op
+        assert_eq!(s.close_session("doomed").unwrap(), 0);
+        // the straggler completion for swept-while-assigned d1 is
+        // silently absorbed, not an error and not double-counted
+        s.complete("w0", &got[1].name, true).unwrap();
+        assert_eq!(s.status().completed, 0, "doomed's terminal counts were subtracted");
+        // the other campaign drains normally
+        let rest = s.steal("w0", 8);
+        assert_eq!(rest.len(), 2);
+        for m in &rest {
+            s.complete("w0", &m.name, true).unwrap();
+        }
+        assert!(s.all_done());
+        // cancelled tasks got terminal Failed events, so the trace of the
+        // swept session is still well-formed
+        let events = tracer.drain();
+        let d2_failed = events.iter().any(|e| {
+            e.session == "doomed" && e.task == "d2" && e.kind == EventKind::Failed
+        });
+        assert!(d2_failed, "swept ready task traced a terminal event");
+    }
+
+    #[test]
+    fn sessions_persist_and_counters_rebuild() {
+        let path =
+            std::env::temp_dir().join(format!("threesched-sessions-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&path);
+        {
+            let kv = KvStore::open(&path).unwrap();
+            let mut s = SchedState::with_store(kv);
+            s.open_session("idle").unwrap();
+            s.create_in_session("work", t("a"), &[]).unwrap();
+            s.create_in_session("work", t("b"), &deps(&["a"])).unwrap();
+            let got = s.steal("w0", 1);
+            s.complete("w0", &got[0].name, true).unwrap();
+            s.save().unwrap();
+        }
+        let kv = KvStore::open(&path).unwrap();
+        let mut s = SchedState::with_store(kv);
+        assert!(s.session_is_open("idle"), "empty session survives restart");
+        assert!(s.session_is_open("work"));
+        let rows = s.status().sessions;
+        let work = rows.iter().find(|r| r.name == "work").unwrap();
+        assert_eq!((work.total, work.completed, work.live()), (2, 1, 1));
+        let idle = rows.iter().find(|r| r.name == "idle").unwrap();
+        assert_eq!(idle.total, 0);
+        // the rebuilt hub serves the surviving task under its session key
+        let got = s.steal("w1", 4);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].session(), "work");
+        assert_eq!(got[0].short_name(), "b");
+        s.complete("w1", &got[0].name, true).unwrap();
+        assert!(s.all_done());
+        let _ = std::fs::remove_dir_all(&path);
+    }
+
+    #[test]
+    fn pre_session_snapshot_loads_as_all_anonymous() {
+        let path =
+            std::env::temp_dir().join(format!("threesched-presess-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&path);
+        {
+            let kv = KvStore::open(&path).unwrap();
+            let mut s = SchedState::with_store(kv);
+            s.create(t("x"), &[]).unwrap();
+            s.save().unwrap();
+            // pre-session snapshots have no s/ rows and no format marker —
+            // this one is indistinguishable from one written by PR 9
+        }
+        let kv = KvStore::open(&path).unwrap();
+        let mut s = SchedState::with_store(kv);
+        assert_eq!(s.status().sessions.len(), 0);
+        let got = s.steal("w0", 1);
+        assert_eq!(got[0].name, "x");
+        assert_eq!(got[0].session(), "");
+        let _ = std::fs::remove_dir_all(&path);
+    }
+
+    #[test]
+    fn session_record_roundtrip() {
+        let rec = encode_session_record("α-campaign");
+        assert_eq!(decode_session_record(&rec).unwrap(), "α-campaign");
+        assert!(decode_session_record(b"\xff\xff").is_err());
+    }
+
+    #[test]
+    fn create_in_session_refuses_bad_session_names() {
+        let mut s = SchedState::new();
+        let err = s
+            .create_in_session(&format!("a{SESSION_SEP}b"), t("x"), &[])
+            .unwrap_err();
+        assert_eq!(err.code, RefusalCode::BadSession);
+        assert_eq!(s.len(), 0);
+    }
+}

@@ -25,7 +25,11 @@ use crate::substrate::kvstore::KvStore;
 use crate::substrate::wire::{self, Reader, Writer};
 use crate::trace::{EventKind, TaskEvent, Tracer};
 
-use super::messages::{RefusalCode, StatusInfo, TaskMsg};
+use super::messages::{RefusalCode, StatusInfo, TaskMsg, SESSION_SEP};
+use super::sessions::{
+    decode_session_record, encode_session_record, qualify, short_of, validate_session_name,
+    SessionRegistry, FORMAT_KEY, FORMAT_SESSIONS, SESSION_KEY_PREFIX,
+};
 
 /// The legacy marker phrases pre-code clients used to substring-match
 /// in Create refusal messages.  The typed-refusal protocol
@@ -115,6 +119,10 @@ pub struct TaskEntry {
     /// a worker attempted this task and reported failure (distinguishes
     /// it from successors errored by propagation, which never ran)
     pub failed: bool,
+    /// owning session name; empty for the anonymous session.  Redundant
+    /// with the `SESSION_SEP` prefix of `msg.name` for well-formed keys,
+    /// but authoritative: it is what teardown sweeps and counters key on.
+    pub session: String,
 }
 
 impl TaskEntry {
@@ -129,6 +137,11 @@ impl TaskEntry {
         w.uint(7, self.seq);
         w.uint(8, self.reinserted as u64);
         w.uint(9, self.failed as u64);
+        // snapshot format 2: omitted for anonymous tasks, which keeps
+        // pre-session snapshots byte-identical
+        if !self.session.is_empty() {
+            w.string(10, &self.session);
+        }
         w.into_bytes()
     }
 
@@ -151,6 +164,8 @@ impl TaskEntry {
             seq: wire::get_u64(&fields, 7)?,
             reinserted: wire::get_u64(&fields, 8).unwrap_or(0) != 0,
             failed: wire::get_u64(&fields, 9).unwrap_or(0) != 0,
+            // absent on pre-session (format 1) records: anonymous
+            session: wire::get_str(&fields, 10).unwrap_or_default().to_string(),
         })
     }
 }
@@ -286,6 +301,12 @@ pub struct SchedState {
     metrics: Registry,
     /// live event fan-out to `Subscribe` long-pollers (`dhub tail`)
     hub: EventHub,
+    /// open-session registry (per-campaign namespaces and counters)
+    sessions: SessionRegistry,
+    /// task keys swept by [`SchedState::close_session`] while assigned:
+    /// the worker still holds them and will report a completion the hub
+    /// must absorb silently (once) instead of erroring the worker out
+    orphaned: HashSet<String>,
 }
 
 impl SchedState {
@@ -345,6 +366,8 @@ impl SchedState {
             tracer: Tracer::default(),
             metrics: Registry::default(),
             hub: EventHub::default(),
+            sessions: SessionRegistry::default(),
+            orphaned: HashSet::new(),
         };
         s.rebuild();
         s
@@ -373,6 +396,10 @@ impl SchedState {
             .filter(|e| e.state == TaskState::Assigned)
             .count();
         self.metrics.gauge_set(Gauge::Inflight, inflight as i64);
+        self.metrics.gauge_set(Gauge::SessionsOpen, self.sessions.len() as i64);
+        for name in self.sessions.names() {
+            self.sync_session_gauge(&name);
+        }
     }
 
     /// Tasks in the ready deque right now — O(1), unlike the full
@@ -385,13 +412,39 @@ impl SchedState {
         self.metrics.gauge_set(Gauge::QueueDepth, self.ready.len() as i64);
     }
 
+    /// Refresh one session's labeled live-task gauge
+    /// (`session_tasks_live{session="<name>"}`) from its counters.
+    fn sync_session_gauge(&self, session: &str) {
+        if !self.metrics.is_enabled() {
+            return;
+        }
+        if let Some(c) = self.sessions.counters(session) {
+            self.metrics.session_gauge_set(session, c.live() as i64);
+        }
+    }
+
     /// Record one lifecycle event: into the tracer (if attached) and
-    /// into every live subscriber queue whose prefix matches.  With no
-    /// subscribers the fan-out half is a single `is_empty` branch —
-    /// no clock read, no allocation (pinned by `benches/trace_profile`).
+    /// into every live subscriber queue whose prefix matches.  Events
+    /// carry the task's *short* name plus its session tag — never the
+    /// `SESSION_SEP`-qualified internal key — so anonymous traces stay
+    /// byte-identical to pre-session hubs.  With neither tracer nor
+    /// subscribers this is two branches — no clock read, no allocation
+    /// (pinned by `benches/trace_profile`).
     fn emit(&mut self, task: &str, kind: EventKind, who: &str) {
-        self.tracer.record(task, kind, who);
-        if self.hub.subs.is_empty() {
+        let no_subs = self.hub.subs.is_empty();
+        if !self.tracer.enabled() && no_subs {
+            return;
+        }
+        // entry.session is authoritative; anonymous keys pass through
+        // verbatim (including pathological names containing SESSION_SEP)
+        let (session, short): (&str, &str) = match self.tasks.get(task) {
+            Some(e) if !e.session.is_empty() => {
+                (e.session.as_str(), &task[e.session.len() + SESSION_SEP.len_utf8()..])
+            }
+            _ => ("", task),
+        };
+        self.tracer.record_in_session(session, short, kind, who);
+        if no_subs {
             return;
         }
         let t = if self.tracer.enabled() {
@@ -403,11 +456,12 @@ impl SchedState {
         let seq = self.hub.seq;
         self.hub.seq += 1;
         let ev = TaskEvent {
-            task: task.to_string(),
+            task: short.to_string(),
             kind,
             t,
             who: who.to_string(),
             seq,
+            session: session.to_string(),
         };
         for sub in self.hub.subs.values_mut() {
             if !ev.task.starts_with(sub.prefix.as_str()) {
@@ -500,11 +554,37 @@ impl SchedState {
                 }
                 TaskState::Waiting => {}
             }
+            // per-session counters are derived state, regenerated from
+            // the task rows exactly like the ready queue
+            if !e.session.is_empty() {
+                let c = self.sessions.ensure(&e.session);
+                c.total += 1;
+                match e.state {
+                    TaskState::Done => c.completed += 1,
+                    TaskState::Error => {
+                        c.errored += 1;
+                        if e.failed {
+                            c.failed += 1;
+                        }
+                    }
+                    _ => {}
+                }
+            }
             self.tasks.insert(e.msg.name.clone(), e);
         }
         // oldest re-inserted task ends up at the very front
         for name in front.into_iter().rev() {
             self.ready.push_front(name);
+        }
+        // re-open sessions persisted with zero surviving rows (an idle
+        // but open campaign must not vanish across a restart)
+        let names: Vec<String> = self
+            .kv
+            .scan_prefix(SESSION_KEY_PREFIX.as_bytes())
+            .filter_map(|(_, v)| decode_session_record(v).ok())
+            .collect();
+        for name in names {
+            self.sessions.ensure(&name);
         }
     }
 
@@ -557,18 +637,55 @@ impl SchedState {
             errored: self.errored,
             failed: self.failed,
             workers: self.assigned.iter().filter(|(_, t)| !t.is_empty()).count() as u64,
+            sessions: self.sessions.rows(),
         }
     }
 
-    /// Create a task with dependencies (paper Fig 2 `Create`).  Refusals
-    /// are typed ([`CreateError::code`]) so the server can put the
-    /// classification on the wire instead of leaving clients to parse
-    /// message text.
+    /// Create a task with dependencies (paper Fig 2 `Create`) in the
+    /// anonymous session.  Refusals are typed ([`CreateError::code`]) so
+    /// the server can put the classification on the wire instead of
+    /// leaving clients to parse message text.
     pub fn create(&mut self, msg: TaskMsg, deps: &[String]) -> Result<(), CreateError> {
+        self.create_qualified(String::new(), msg, deps)
+    }
+
+    /// [`SchedState::create`] inside a named session: the task name and
+    /// every dependency are qualified into the session's namespace, so
+    /// deltas can only hang off same-session (or, with an empty session,
+    /// anonymous) tasks.  Opens the session implicitly — a `SubmitDelta`
+    /// is one round-trip, not open-then-submit.
+    pub fn create_in_session(
+        &mut self,
+        session: &str,
+        msg: TaskMsg,
+        deps: &[String],
+    ) -> Result<(), CreateError> {
+        if session.is_empty() {
+            return self.create_qualified(String::new(), msg, deps);
+        }
+        if let Err(e) = self.open_session(session) {
+            return Err(CreateError::new(RefusalCode::BadSession, e.to_string()));
+        }
+        let mut msg = msg;
+        msg.name = qualify(session, &msg.name);
+        let deps: Vec<String> = deps.iter().map(|d| qualify(session, d)).collect();
+        self.create_qualified(session.to_string(), msg, &deps)
+    }
+
+    /// The shared create core: `msg.name` and `deps` are already
+    /// session-qualified keys and `session` is open (or empty).
+    /// Refusal messages use the short names — the qualified form is an
+    /// internal detail no user typed.
+    fn create_qualified(
+        &mut self,
+        session: String,
+        msg: TaskMsg,
+        deps: &[String],
+    ) -> Result<(), CreateError> {
         if self.tasks.contains_key(&msg.name) {
             return Err(CreateError::new(
                 RefusalCode::Duplicate,
-                format!("refusing duplicate create of task {:?}", msg.name),
+                format!("refusing duplicate create of task {:?}", short_of(&msg.name)),
             ));
         }
         let mut join = 0u32;
@@ -577,13 +694,16 @@ impl SchedState {
                 None => {
                     return Err(CreateError::new(
                         RefusalCode::DepMissing,
-                        format!("dependency {d:?} does not exist"),
+                        format!("dependency {:?} does not exist", short_of(d)),
                     ))
                 }
                 Some(e) if e.state == TaskState::Error => {
                     return Err(CreateError::new(
                         RefusalCode::DepErrored,
-                        format!("dependency {d:?} failed earlier; the new task could never run"),
+                        format!(
+                            "dependency {:?} failed earlier; the new task could never run",
+                            short_of(d)
+                        ),
                     ))
                 }
                 Some(e) if e.state == TaskState::Done => {}
@@ -599,6 +719,7 @@ impl SchedState {
             seq: self.seq,
             reinserted: false,
             failed: false,
+            session: session.clone(),
         };
         self.seq += 1;
         self.tasks.insert(name.clone(), entry);
@@ -621,6 +742,10 @@ impl SchedState {
         self.persist(&name);
         for d in touched {
             self.persist(&d);
+        }
+        if !session.is_empty() {
+            self.sessions.counters_mut(&session).total += 1;
+            self.sync_session_gauge(&session);
         }
         Ok(())
     }
@@ -653,6 +778,11 @@ impl SchedState {
     /// failure, the task and (recursively) every transitive successor go
     /// to the error state — they can never run.
     pub fn complete(&mut self, worker: &str, task: &str, success: bool) -> Result<()> {
+        // a report for a task swept by close_session while this worker
+        // held it: absorb silently (once) — the worker did nothing wrong
+        if self.orphaned.remove(task) {
+            return Ok(());
+        }
         let Some(e) = self.tasks.get(task) else {
             bail!("complete of unknown task {task:?}")
         };
@@ -664,12 +794,16 @@ impl SchedState {
         }
         self.metrics.gauge_add(Gauge::Inflight, -1);
         if success {
-            let succs = {
+            let (succs, session) = {
                 let e = self.tasks.get_mut(task).unwrap();
                 e.state = TaskState::Done;
-                e.successors.clone()
+                (e.successors.clone(), e.session.clone())
             };
             self.completed += 1;
+            if !session.is_empty() {
+                self.sessions.counters_mut(&session).completed += 1;
+                self.sync_session_gauge(&session);
+            }
             self.metrics.inc(Counter::TasksCompleted);
             self.emit(task, EventKind::Finished, worker);
             self.persist(task);
@@ -701,7 +835,11 @@ impl SchedState {
             // errored by propagation without ever being attempted
             let e = self.tasks.get_mut(task).expect("checked above");
             e.failed = true;
+            let session = e.session.clone();
             self.failed += 1;
+            if !session.is_empty() {
+                self.sessions.counters_mut(&session).failed += 1;
+            }
             self.metrics.inc(Counter::TasksFailed);
             self.error_recursive(task, worker);
         }
@@ -711,7 +849,7 @@ impl SchedState {
     fn error_recursive(&mut self, task: &str, worker: &str) {
         let mut stack = vec![task.to_string()];
         while let Some(name) = stack.pop() {
-            let succs = {
+            let (succs, session) = {
                 let Some(e) = self.tasks.get_mut(&name) else { continue };
                 if e.state == TaskState::Error {
                     continue;
@@ -724,9 +862,15 @@ impl SchedState {
                     self.ready.remove(&name);
                 }
                 e.state = TaskState::Error;
-                e.successors.clone()
+                (e.successors.clone(), e.session.clone())
             };
             self.errored += 1;
+            // qualified dependencies keep propagation inside one session,
+            // so attributing per-task is bookkeeping, not a fan-out
+            if !session.is_empty() {
+                self.sessions.counters_mut(&session).errored += 1;
+                self.sync_session_gauge(&session);
+            }
             // the root was attempted by `worker`; propagated successors
             // never reached anyone
             let who = if name == task { worker } else { "" };
@@ -851,6 +995,104 @@ impl SchedState {
             self.sync_queue_gauge();
         }
         requeued
+    }
+
+    /// Open (or re-open) a named session.  Idempotent: `Ok(true)` only
+    /// when the session was not already open.  Persists an `s/<name>`
+    /// row and stamps the snapshot format marker, so an idle session
+    /// survives a restart.
+    pub fn open_session(&mut self, session: &str) -> Result<bool> {
+        validate_session_name(session)?;
+        if !self.sessions.open(session) {
+            return Ok(false);
+        }
+        let _ = self.kv.set(FORMAT_KEY, FORMAT_SESSIONS);
+        let key = format!("{SESSION_KEY_PREFIX}{session}");
+        let _ = self.kv.set(key.as_bytes(), &encode_session_record(session));
+        self.metrics.inc(Counter::SessionsOpened);
+        self.metrics.gauge_add(Gauge::SessionsOpen, 1);
+        self.metrics.session_gauge_set(session, 0);
+        Ok(true)
+    }
+
+    /// Tear a session down: cancel and forget every one of its tasks —
+    /// live rows get a terminal `Failed` trace event so the session's
+    /// trace stays well-formed, terminal rows just leave (their counts
+    /// come off the global totals, since the rows back those totals).
+    /// Other campaigns (and the anonymous namespace) are untouched.
+    /// Idempotent: closing an unknown session is `Ok(0)`.  Returns the
+    /// number of live (waiting/ready/assigned) tasks cancelled.
+    pub fn close_session(&mut self, session: &str) -> Result<u64> {
+        if session.is_empty() {
+            bail!("the anonymous session cannot be closed");
+        }
+        if !self.sessions.is_open(session) {
+            return Ok(0);
+        }
+        // deterministic sweep order: creation sequence, like a replay
+        let mut keys: Vec<(u64, String)> = self
+            .tasks
+            .iter()
+            .filter(|(_, e)| e.session == session)
+            .map(|(k, e)| (e.seq, k.clone()))
+            .collect();
+        keys.sort();
+        let mut cancelled = 0u64;
+        for (_, key) in &keys {
+            let (state, failed) = {
+                let e = &self.tasks[key];
+                (e.state, e.failed)
+            };
+            match state {
+                TaskState::Done => self.completed -= 1,
+                TaskState::Error => {
+                    self.errored -= 1;
+                    if failed {
+                        self.failed -= 1;
+                    }
+                }
+                TaskState::Ready => {
+                    self.ready.remove(key);
+                    self.emit(key, EventKind::Failed, "");
+                    cancelled += 1;
+                }
+                TaskState::Assigned => {
+                    for set in self.assigned.values_mut() {
+                        set.remove(key);
+                    }
+                    // the worker still holds it and will report in;
+                    // absorb that one report instead of erroring it out
+                    self.orphaned.insert(key.clone());
+                    self.metrics.gauge_add(Gauge::Inflight, -1);
+                    self.emit(key, EventKind::Failed, "");
+                    cancelled += 1;
+                }
+                TaskState::Waiting => {
+                    self.emit(key, EventKind::Failed, "");
+                    cancelled += 1;
+                }
+            }
+            self.tasks.remove(key);
+            let _ = self.kv.remove(format!("t/{key}").as_bytes());
+        }
+        self.sessions.remove(session);
+        let _ = self.kv.remove(format!("{SESSION_KEY_PREFIX}{session}").as_bytes());
+        self.metrics.add(Counter::TasksCancelled, cancelled);
+        self.metrics.inc(Counter::SessionsClosed);
+        self.metrics.gauge_add(Gauge::SessionsOpen, -1);
+        self.metrics.session_gauge_remove(session);
+        self.sync_queue_gauge();
+        Ok(cancelled)
+    }
+
+    /// Is `session` currently open?
+    pub fn session_is_open(&self, session: &str) -> bool {
+        self.sessions.is_open(session)
+    }
+
+    /// Number of currently open named sessions.
+    pub fn open_session_count(&self) -> usize {
+        self.sessions.len()
     }
 }
 

@@ -90,8 +90,10 @@ commands:
   workflow run    --file wf.yaml [--coordinator auto|pmake|dwork|mpilist]
                   [--procs N] [--dir D] [--trace out.jsonl]
                   [--connect addr:port] [--poll-ms MS] [--batch N]
-                  [--calibration profile.toml]
+                  [--session NAME] [--calibration profile.toml]
   workflow submit --file wf.yaml --connect addr:port [--batch N]
+                  [--session NAME]  (scope the campaign to a hub session:
+                   per-session accounting on a shared hub)
                   (ingest + detach; N tasks per wire frame, default 64)
   trace report    --file trace.jsonl      (Fig-5-style time breakdown)
   trace profile   [trace.jsonl] [--file trace.jsonl] [--json]
@@ -215,7 +217,7 @@ fn serve_hub(
         let (maddr, _scraper) = metrics::serve_exposition(reg.clone(), maddr)?;
         println!("metrics exposition on {maddr} (Prometheus text format)");
     }
-    let cfg = dwork::ServerConfig { snapshot_every, metrics: reg };
+    let cfg = dwork::ServerConfig { snapshot_every, metrics: reg, ..dwork::ServerConfig::default() };
     let (addr, _guard, handle) = dwork::spawn_tcp(state, cfg, bind)?;
     println!("dhub serving on {addr} (ctrl-c to stop)");
     let _ = handle.join();
@@ -461,8 +463,15 @@ fn hub_line(st: &dwork::StatusInfo, m: Option<&MetricsSnapshot>, rate: Option<f6
         st.workers,
         st.is_drained()
     );
-    if let Some(r) = rate {
-        line.push_str(&format!(" tasks/s={r:.1}"));
+    if !st.sessions.is_empty() {
+        line.push_str(&format!(" sessions={}", st.sessions.len()));
+    }
+    // a zero-worker refresh (pool not joined yet, or all exited
+    // mid-campaign) must still render: clamp any non-finite rate
+    match rate {
+        Some(r) if r.is_finite() => line.push_str(&format!(" tasks/s={r:.1}")),
+        Some(_) => line.push_str(" tasks/s=-"),
+        None => {}
     }
     if let Some(m) = m {
         line.push_str(&format!(
@@ -493,10 +502,20 @@ fn render_top(
         st.completed, st.errored, st.failed
     ));
     match rate {
-        Some(r) => out.push_str(&format!(
+        // a stalled zero-worker hub reports 0.0/s, never NaN/inf junk
+        Some(r) if r.is_finite() => out.push_str(&format!(
             "  rate     {r:>14.1} tasks/s (completed, since last refresh)\n"
         )),
-        None => out.push_str("  rate     (needs a second refresh)\n"),
+        _ => out.push_str("  rate     (needs a second refresh)\n"),
+    }
+    if !st.sessions.is_empty() {
+        out.push_str("\n  session                    live  completed    errored     failed\n");
+        for s in &st.sessions {
+            out.push_str(&format!(
+                "    {:<24} {:>6} {:>10} {:>10} {:>10}\n",
+                s.name, s.live(), s.completed, s.errored, s.failed
+            ));
+        }
     }
     let Some(m) = m else {
         out.push_str(&format!("  workers  {:>8} connected\n", st.workers));
@@ -523,18 +542,23 @@ fn render_top(
     ));
     out.push_str("\n  hub service time        p50        p90        p99      count\n");
     for name in ["service_steal", "service_create", "service_complete", "service_status"] {
-        if let Some(h) = m.hist(name) {
-            if h.count == 0 {
-                continue;
-            }
-            out.push_str(&format!(
+        // an untouched series (zero workers joined yet, submit-only hub)
+        // renders a placeholder row — skipping it left a bare header and
+        // a jumping layout between refreshes
+        match m.hist(name) {
+            Some(h) if h.count > 0 => out.push_str(&format!(
                 "    {:<16} {:>10} {:>10} {:>10} {:>10}\n",
                 name.trim_start_matches("service_"),
                 fmt_s(h.quantile(0.5)),
                 fmt_s(h.quantile(0.9)),
                 fmt_s(h.quantile(0.99)),
                 h.count,
-            ));
+            )),
+            _ => out.push_str(&format!(
+                "    {:<16} {:>10} {:>10} {:>10} {:>10}\n",
+                name.trim_start_matches("service_"),
+                "-", "-", "-", 0,
+            )),
         }
     }
     out
@@ -898,18 +922,31 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
                 Flag { name: "file", help: "workflow yaml", takes_value: true, default: Some("workflow.yaml") },
                 Flag { name: "connect", help: "remote dhub address", takes_value: true, default: Some("127.0.0.1:7117") },
                 Flag { name: "batch", help: "tasks per batched Create frame (1 = per-task round-trips)", takes_value: true, default: Some("64") },
+                Flag { name: "session", help: "hub session to scope the campaign to (shared-hub isolation)", takes_value: true, default: None },
             ];
             let args = parse(rest, &spec)?;
             let g = workflow::parse_workflow_file(Path::new(args.get("file").unwrap()))?;
             let addr = args.get("connect").unwrap();
+            let session_name = args.get("session").map(str::to_string);
             let sub = workflow::Session::new(&g)
-                .backend(workflow::Backend::Dwork { remote: Some(addr.into()) })
+                .backend(workflow::Backend::Dwork {
+                    remote: Some(addr.into()),
+                    session: session_name.clone(),
+                })
                 .polling(workflow::PollCfg {
                     transport: TransportCfg::default()
                         .with_batch(args.get_usize("batch", 64)?),
                     ..workflow::PollCfg::default()
                 })
                 .submit()?;
+            match (&session_name, &sub.accounting.session) {
+                (Some(s), Some(_)) => println!("session {s:?} opened on {addr}"),
+                (Some(s), None) => eprintln!(
+                    "warning: hub at {addr} predates sessions; {s:?} degraded to the \
+                     anonymous namespace"
+                ),
+                (None, _) => {}
+            }
             println!(
                 "submitted {} tasks of workflow {:?} to dhub {addr} (detached; \
                  poll with `threesched dwork status --connect {addr}`)",
@@ -935,6 +972,7 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
                 Flag { name: "batch", help: "tasks per batched Create frame with --connect (1 = per-task)", takes_value: true, default: Some("64") },
                 Flag { name: "trace", help: "write a lifecycle trace (JSONL) after the run", takes_value: true, default: None },
                 Flag { name: "calibration", help: "fitted cost-model profile for the auto selector", takes_value: true, default: None },
+                Flag { name: "session", help: "hub session to scope the campaign to (--connect only)", takes_value: true, default: None },
             ];
             let args = parse(rest, &spec)?;
             let g = workflow::parse_workflow_file(Path::new(args.get("file").unwrap()))?;
@@ -983,7 +1021,10 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
                          `threesched dhub worker --connect {addr}`)"
                     );
                     session
-                        .backend(workflow::Backend::Dwork { remote: Some(addr.into()) })
+                        .backend(workflow::Backend::Dwork {
+                            remote: Some(addr.into()),
+                            session: args.get("session").map(str::to_string),
+                        })
                         .polling(workflow::PollCfg {
                             poll: Duration::from_millis(args.get_usize("poll-ms", 50)? as u64),
                             transport: TransportCfg::default()
@@ -996,6 +1037,10 @@ fn cmd_workflow(argv: &[String]) -> Result<()> {
                     bail!("--connect is a dwork deployment (got --coordinator {other})")
                 }
                 (None, name) => {
+                    if args.get("session").is_some() {
+                        eprintln!("warning: --session only applies with --connect \
+                                   (an in-process hub is single-campaign); ignored");
+                    }
                     let Some(backend) = workflow::Backend::from_name(name) else {
                         bail!("unknown coordinator {name:?} (auto | pmake | dwork | mpilist)")
                     };

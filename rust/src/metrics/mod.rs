@@ -74,10 +74,21 @@ pub enum Counter {
     /// batched wire ops (`Request::CreateBatch` / `CompleteBatch`)
     ReqCreateBatch,
     ReqCompleteBatch,
+    /// session wire ops (`Request::OpenSession` / `CloseSession` /
+    /// `SubmitDelta`)
+    ReqOpenSession,
+    ReqCloseSession,
+    ReqSubmitDelta,
+    /// session registry churn (hub side)
+    SessionsOpened,
+    SessionsClosed,
+    /// live tasks swept by `CloseSession` teardown (never attempted to
+    /// completion; distinct from `TasksFailed`/`TasksSkipped`)
+    TasksCancelled,
 }
 
 impl Counter {
-    pub const ALL: [Counter; 29] = [
+    pub const ALL: [Counter; 35] = [
         Counter::ReqCreate,
         Counter::ReqSteal,
         Counter::ReqStealN,
@@ -107,6 +118,12 @@ impl Counter {
         Counter::SubscribeDropped,
         Counter::ReqCreateBatch,
         Counter::ReqCompleteBatch,
+        Counter::ReqOpenSession,
+        Counter::ReqCloseSession,
+        Counter::ReqSubmitDelta,
+        Counter::SessionsOpened,
+        Counter::SessionsClosed,
+        Counter::TasksCancelled,
     ];
 
     pub fn name(self) -> &'static str {
@@ -140,6 +157,12 @@ impl Counter {
             Counter::SubscribeDropped => "subscribe_dropped",
             Counter::ReqCreateBatch => "requests_create_batch",
             Counter::ReqCompleteBatch => "requests_complete_batch",
+            Counter::ReqOpenSession => "requests_open_session",
+            Counter::ReqCloseSession => "requests_close_session",
+            Counter::ReqSubmitDelta => "requests_submit_delta",
+            Counter::SessionsOpened => "sessions_opened",
+            Counter::SessionsClosed => "sessions_closed",
+            Counter::TasksCancelled => "tasks_cancelled",
         }
     }
 }
@@ -153,16 +176,20 @@ pub enum Gauge {
     Inflight,
     /// workers the hub believes are attached
     WorkersConnected,
+    /// sessions currently open in the hub's registry
+    SessionsOpen,
 }
 
 impl Gauge {
-    pub const ALL: [Gauge; 3] = [Gauge::QueueDepth, Gauge::Inflight, Gauge::WorkersConnected];
+    pub const ALL: [Gauge; 4] =
+        [Gauge::QueueDepth, Gauge::Inflight, Gauge::WorkersConnected, Gauge::SessionsOpen];
 
     pub fn name(self) -> &'static str {
         match self {
             Gauge::QueueDepth => "queue_depth",
             Gauge::Inflight => "tasks_inflight",
             Gauge::WorkersConnected => "workers_connected",
+            Gauge::SessionsOpen => "sessions_open",
         }
     }
 }
@@ -190,10 +217,14 @@ pub enum Series {
     /// hub-side service time per whole batch frame
     ServiceCreateBatch,
     ServiceCompleteBatch,
+    /// hub-side service time for the session verbs
+    ServiceOpenSession,
+    ServiceCloseSession,
+    ServiceSubmitDelta,
 }
 
 impl Series {
-    pub const ALL: [Series; 13] = [
+    pub const ALL: [Series; 16] = [
         Series::ServiceCreate,
         Series::ServiceSteal,
         Series::ServiceComplete,
@@ -207,6 +238,9 @@ impl Series {
         Series::ServiceSubscribe,
         Series::ServiceCreateBatch,
         Series::ServiceCompleteBatch,
+        Series::ServiceOpenSession,
+        Series::ServiceCloseSession,
+        Series::ServiceSubmitDelta,
     ];
 
     pub fn name(self) -> &'static str {
@@ -224,6 +258,9 @@ impl Series {
             Series::ServiceSubscribe => "service_subscribe",
             Series::ServiceCreateBatch => "service_create_batch",
             Series::ServiceCompleteBatch => "service_complete_batch",
+            Series::ServiceOpenSession => "service_open_session",
+            Series::ServiceCloseSession => "service_close_session",
+            Series::ServiceSubmitDelta => "service_submit_delta",
         }
     }
 }
@@ -265,6 +302,13 @@ struct Inner {
     counters: [AtomicU64; Counter::ALL.len()],
     gauges: [AtomicI64; Gauge::ALL.len()],
     hists: [HistCell; Series::ALL.len()],
+    /// per-session live-task levels, keyed by session name.  This is the
+    /// one labeled family; it rides the name-addressed snapshot wire as
+    /// composite gauge names `session_tasks_live{session="<name>"}`, so
+    /// older `dhub top` builds simply see gauges they don't chart.
+    /// Mutex (not atomics) is fine: it is touched on session lifecycle
+    /// mutations, never on the steal/complete hot path.
+    session_live: std::sync::Mutex<std::collections::BTreeMap<String, i64>>,
 }
 
 /// A cheap-to-clone metrics handle.  `Registry::default()` is disabled:
@@ -292,6 +336,7 @@ impl Registry {
             counters: std::array::from_fn(|_| AtomicU64::new(0)),
             gauges: std::array::from_fn(|_| AtomicI64::new(0)),
             hists: std::array::from_fn(|_| HistCell::new()),
+            session_live: std::sync::Mutex::new(std::collections::BTreeMap::new()),
         })))
     }
 
@@ -339,6 +384,29 @@ impl Registry {
         }
     }
 
+    /// Set the live-task level for one session (labeled gauge
+    /// `session_tasks_live{session="<name>"}`).
+    pub fn session_gauge_set(&self, session: &str, v: i64) {
+        if let Some(inner) = &self.0 {
+            let mut map = inner.session_live.lock().unwrap();
+            map.insert(session.to_string(), v);
+        }
+    }
+
+    /// Forget a closed session's labeled gauge entirely (the exposition
+    /// stops listing it rather than pinning a stale zero forever).
+    pub fn session_gauge_remove(&self, session: &str) {
+        if let Some(inner) = &self.0 {
+            inner.session_live.lock().unwrap().remove(session);
+        }
+    }
+
+    /// Current labeled level for one session; `None` when the registry
+    /// is disabled or the session is not tracked.
+    pub fn session_gauge(&self, session: &str) -> Option<i64> {
+        self.0.as_ref().and_then(|inner| inner.session_live.lock().unwrap().get(session).copied())
+    }
+
     /// Record one duration observation.
     #[inline]
     pub fn observe(&self, s: Series, d: Duration) {
@@ -369,10 +437,15 @@ impl Registry {
                 (c.name().to_string(), inner.counters[c as usize].load(Ordering::Relaxed))
             })
             .collect();
-        let gauges = Gauge::ALL
+        let mut gauges: Vec<(String, i64)> = Gauge::ALL
             .iter()
             .map(|&g| (g.name().to_string(), inner.gauges[g as usize].load(Ordering::Relaxed)))
             .collect();
+        // labeled per-session levels ride the same name-addressed list;
+        // BTreeMap keeps the exposition order deterministic
+        for (session, v) in inner.session_live.lock().unwrap().iter() {
+            gauges.push((session_gauge_name(session), *v));
+        }
         let hists = Series::ALL
             .iter()
             .map(|&s| {
@@ -398,6 +471,14 @@ impl Registry {
             hists,
         }
     }
+}
+
+/// The composite snapshot/exposition name for one session's live-task
+/// gauge: `session_tasks_live{session="<name>"}`.  Session names are
+/// validated at `OpenSession` time to exclude quotes and control
+/// characters, so no escaping is needed here.
+pub fn session_gauge_name(session: &str) -> String {
+    format!("session_tasks_live{{session=\"{session}\"}}")
 }
 
 /// One histogram, frozen: per-bucket counts (trailing zero buckets
@@ -481,6 +562,21 @@ impl MetricsSnapshot {
         self.gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(0)
     }
 
+    /// Every per-session live-task gauge in this snapshot as
+    /// `(session, live)` pairs, parsed back out of the composite
+    /// `session_tasks_live{session="<name>"}` names.  Empty on older
+    /// hubs that never labeled a gauge.
+    pub fn session_gauges(&self) -> Vec<(String, i64)> {
+        self.gauges
+            .iter()
+            .filter_map(|(n, v)| {
+                let rest = n.strip_prefix("session_tasks_live{session=\"")?;
+                let session = rest.strip_suffix("\"}")?;
+                Some((session.to_string(), *v))
+            })
+            .collect()
+    }
+
     pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
         self.hists.iter().find(|h| h.name == name)
     }
@@ -496,8 +592,15 @@ impl MetricsSnapshot {
             out.push_str(&format!("# TYPE threesched_{name}_total counter\n"));
             out.push_str(&format!("threesched_{name}_total {v}\n"));
         }
+        let mut typed: Vec<&str> = Vec::new();
         for (name, v) in &self.gauges {
-            out.push_str(&format!("# TYPE threesched_{name} gauge\n"));
+            // labeled gauges (`base{label=...}`) share one TYPE line per
+            // base family, emitted before the family's first sample
+            let base = name.split('{').next().unwrap_or(name);
+            if !typed.contains(&base) {
+                typed.push(base);
+                out.push_str(&format!("# TYPE threesched_{base} gauge\n"));
+            }
             out.push_str(&format!("threesched_{name} {v}\n"));
         }
         for h in &self.hists {
@@ -699,6 +802,37 @@ mod tests {
             assert!(text.contains("text/plain; version=0.0.4"));
             assert!(text.contains("threesched_steals_served_total 9"), "{text}");
         }
+    }
+
+    #[test]
+    fn session_labeled_gauges_snapshot_and_render() {
+        let r = Registry::enabled();
+        r.session_gauge_set("alpha", 3);
+        r.session_gauge_set("beta", 0);
+        let snap = r.snapshot();
+        assert_eq!(snap.gauge("session_tasks_live{session=\"alpha\"}"), 3);
+        assert_eq!(
+            snap.session_gauges(),
+            vec![("alpha".to_string(), 3), ("beta".to_string(), 0)]
+        );
+        let text = snap.to_prometheus();
+        assert!(text.contains("threesched_session_tasks_live{session=\"alpha\"} 3"), "{text}");
+        assert!(text.contains("threesched_session_tasks_live{session=\"beta\"} 0"), "{text}");
+        // one TYPE line for the whole labeled family, none per sample
+        let type_lines = text
+            .lines()
+            .filter(|l| *l == "# TYPE threesched_session_tasks_live gauge")
+            .count();
+        assert_eq!(type_lines, 1, "{text}");
+        // closing a session drops its label from the next snapshot
+        r.session_gauge_remove("alpha");
+        assert_eq!(r.session_gauge("alpha"), None);
+        assert_eq!(r.snapshot().session_gauges(), vec![("beta".to_string(), 0)]);
+        // disabled registries stay inert
+        let off = Registry::default();
+        off.session_gauge_set("x", 9);
+        assert_eq!(off.session_gauge("x"), None);
+        assert!(off.snapshot().session_gauges().is_empty());
     }
 
     #[test]

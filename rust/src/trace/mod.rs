@@ -58,13 +58,22 @@ pub use sim::simulate_workflow;
 /// folds from the live [`crate::metrics`] registry); `/4` added the
 /// per-writer monotone `seq` field, so merged multi-writer traces sort
 /// stably at equal timestamps (readers default a missing `seq` to 0);
-/// readers accept every schema listed in [`ACCEPTED_SCHEMAS`].
-pub const SCHEMA: &str = "threesched-trace/4";
+/// `/5` added the optional `session` field tagging events with the hub
+/// session that owns the task (omitted — not emitted — for the anonymous
+/// session, so session-free traces stay byte-identical to `/4` bodies;
+/// readers default a missing `session` to empty); readers accept every
+/// schema listed in [`ACCEPTED_SCHEMAS`].
+pub const SCHEMA: &str = "threesched-trace/5";
 
 /// Schemas [`parse_jsonl`] accepts: the current one plus every older
 /// version whose events are a subset of the current vocabulary.
-pub const ACCEPTED_SCHEMAS: [&str; 4] =
-    ["threesched-trace/1", "threesched-trace/2", "threesched-trace/3", SCHEMA];
+pub const ACCEPTED_SCHEMAS: [&str; 5] = [
+    "threesched-trace/1",
+    "threesched-trace/2",
+    "threesched-trace/3",
+    "threesched-trace/4",
+    SCHEMA,
+];
 
 /// One step of a task's lifecycle.  The same vocabulary covers all three
 /// coordinators and the DES models:
@@ -146,6 +155,11 @@ pub struct TaskEvent {
     /// between equal timestamps when merging multi-writer traces.  0 for
     /// events loaded from pre-`/4` traces.
     pub seq: u64,
+    /// hub session that owns the task (schema `/5`); empty for the
+    /// anonymous session and for events loaded from pre-`/5` traces.
+    /// Task names are only unique *within* a session — readers that
+    /// group by task must key on `(session, task)`.
+    pub session: String,
 }
 
 /// One scalar metric sample folded into the trace stream (schema `/3`):
@@ -240,12 +254,28 @@ impl Tracer {
     /// no allocation, no time read.
     #[inline]
     pub fn record(&self, task: &str, kind: EventKind, who: &str) {
+        self.record_in_session("", task, kind, who);
+    }
+
+    /// [`Tracer::record`] with a session tag (schema `/5`): events from a
+    /// named hub session carry the session so multi-campaign traces keep
+    /// same-named tasks from different sessions apart.  An empty session
+    /// is the anonymous session (what [`Tracer::record`] stamps).
+    #[inline]
+    pub fn record_in_session(&self, session: &str, task: &str, kind: EventKind, who: &str) {
         if let Some(inner) = &self.0 {
             let t = inner.epoch.elapsed().as_secs_f64();
             let seq = inner.seq.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             Self::push(
                 inner,
-                TaskEvent { task: task.to_string(), kind, t, who: who.to_string(), seq },
+                TaskEvent {
+                    task: task.to_string(),
+                    kind,
+                    t,
+                    who: who.to_string(),
+                    seq,
+                    session: session.to_string(),
+                },
             );
         }
     }
@@ -254,11 +284,32 @@ impl Tracer {
     /// (virtual timestamps) and post-hoc splits of a measured interval.
     #[inline]
     pub fn record_at(&self, t: f64, task: &str, kind: EventKind, who: &str) {
+        self.record_at_in_session(t, "", task, kind, who);
+    }
+
+    /// [`Tracer::record_at`] with a session tag (see
+    /// [`Tracer::record_in_session`]).
+    #[inline]
+    pub fn record_at_in_session(
+        &self,
+        t: f64,
+        session: &str,
+        task: &str,
+        kind: EventKind,
+        who: &str,
+    ) {
         if let Some(inner) = &self.0 {
             let seq = inner.seq.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             Self::push(
                 inner,
-                TaskEvent { task: task.to_string(), kind, t, who: who.to_string(), seq },
+                TaskEvent {
+                    task: task.to_string(),
+                    kind,
+                    t,
+                    who: who.to_string(),
+                    seq,
+                    session: session.to_string(),
+                },
             );
         }
     }
@@ -414,13 +465,21 @@ fn header_line(source: &str) -> String {
 /// encoding [`to_jsonl`] writes, exposed so live consumers (`dhub tail
 /// --json`) emit stream-compatible records.
 pub fn event_line(ev: &TaskEvent) -> String {
+    // the session field is omitted (not emitted empty) for the anonymous
+    // session, so session-free trace bodies stay byte-identical to /4
+    let session = if ev.session.is_empty() {
+        String::new()
+    } else {
+        format!(",\"session\":\"{}\"", json_escape(&ev.session))
+    };
     format!(
-        "{{\"task\":\"{}\",\"kind\":\"{}\",\"t\":{:.9},\"who\":\"{}\",\"seq\":{}}}",
+        "{{\"task\":\"{}\",\"kind\":\"{}\",\"t\":{:.9},\"who\":\"{}\",\"seq\":{}{}}}",
         json_escape(&ev.task),
         ev.kind.name(),
         ev.t,
         json_escape(&ev.who),
-        ev.seq
+        ev.seq,
+        session
     )
 }
 
@@ -554,7 +613,9 @@ fn parse_line(
     // pre-/4 traces have no seq: default 0 (stable sorts fall back to
     // stream order for those)
     let seq = json_num_field(line, "seq").map(|s| s.max(0.0) as u64).unwrap_or(0);
-    events.push(TaskEvent { task, kind, t, who, seq });
+    // pre-/5 traces (and anonymous-session events) have no session
+    let session = json_str_field(line, "session").unwrap_or_default();
+    events.push(TaskEvent { task, kind, t, who, seq, session });
     Ok(())
 }
 
@@ -615,21 +676,23 @@ fn rank(kind: EventKind) -> u8 {
 /// a task).
 pub fn validate(events: &[TaskEvent]) -> Result<()> {
     use std::collections::HashMap;
-    // group by task, preserving stream order
-    let mut by_task: HashMap<&str, Vec<&TaskEvent>> = HashMap::new();
-    let mut order: Vec<&str> = Vec::new();
+    // group by (session, task), preserving stream order — task names are
+    // only unique within a session (schema /5)
+    let mut by_task: HashMap<(&str, &str), Vec<&TaskEvent>> = HashMap::new();
+    let mut order: Vec<(&str, &str)> = Vec::new();
     for ev in events {
         if ev.kind == EventKind::Connected {
             continue;
         }
-        let slot = by_task.entry(&ev.task).or_default();
+        let key = (ev.session.as_str(), ev.task.as_str());
+        let slot = by_task.entry(key).or_default();
         if slot.is_empty() {
-            order.push(&ev.task);
+            order.push(key);
         }
         slot.push(ev);
     }
-    for task in order {
-        let evs = &by_task[task];
+    for key @ (_, task) in order {
+        let evs = &by_task[&key];
         let mut last_t = f64::NEG_INFINITY;
         let mut stage = -1i16; // highest rank seen in the current attempt
         let mut terminals = 0usize;
@@ -697,21 +760,23 @@ impl TraceCounts {
 /// Derive [`TraceCounts`] + makespan from an event stream.
 pub fn counts(events: &[TaskEvent]) -> TraceCounts {
     use std::collections::HashMap;
-    let mut attempted: HashMap<&str, bool> = HashMap::new();
+    // keyed by (session, task): multi-campaign traces may reuse names
+    let mut attempted: HashMap<(&str, &str), bool> = HashMap::new();
     let mut out = TraceCounts::default();
     for ev in events {
+        let key = (ev.session.as_str(), ev.task.as_str());
         match ev.kind {
             // worker attach: not a task at all
             EventKind::Connected => {}
             EventKind::Launched | EventKind::Started => {
-                attempted.insert(&ev.task, true);
+                attempted.insert(key, true);
             }
             EventKind::Created | EventKind::Ready | EventKind::Requeued => {
-                attempted.entry(&ev.task).or_insert(false);
+                attempted.entry(key).or_insert(false);
             }
             EventKind::Finished => out.completed += 1,
             EventKind::Failed => {
-                if attempted.get(ev.task.as_str()).copied().unwrap_or(false) {
+                if attempted.get(&key).copied().unwrap_or(false) {
                     out.failed += 1;
                 } else {
                     out.skipped += 1;
@@ -732,7 +797,11 @@ mod tests {
     use super::*;
 
     fn ev(task: &str, kind: EventKind, t: f64, who: &str) -> TaskEvent {
-        TaskEvent { task: task.into(), kind, t, who: who.into(), seq: 0 }
+        TaskEvent { task: task.into(), kind, t, who: who.into(), seq: 0, session: String::new() }
+    }
+
+    fn sev(session: &str, task: &str, kind: EventKind, t: f64, who: &str) -> TaskEvent {
+        TaskEvent { session: session.into(), ..ev(task, kind, t, who) }
     }
 
     fn lifecycle(task: &str, t0: f64, ok: bool) -> Vec<TaskEvent> {
@@ -1034,10 +1103,10 @@ mod tests {
         // each stream's emission order; the writer name breaks cross-
         // writer ties deterministically
         let mut evs = vec![
-            TaskEvent { task: "x".into(), kind: EventKind::Started, t: 1.0, who: "w1".into(), seq: 1 },
-            TaskEvent { task: "x".into(), kind: EventKind::Launched, t: 1.0, who: "w1".into(), seq: 0 },
-            TaskEvent { task: "y".into(), kind: EventKind::Started, t: 1.0, who: "w0".into(), seq: 0 },
-            TaskEvent { task: "z".into(), kind: EventKind::Created, t: 0.5, who: "".into(), seq: 9 },
+            TaskEvent { seq: 1, ..ev("x", EventKind::Started, 1.0, "w1") },
+            TaskEvent { seq: 0, ..ev("x", EventKind::Launched, 1.0, "w1") },
+            TaskEvent { seq: 0, ..ev("y", EventKind::Started, 1.0, "w0") },
+            TaskEvent { seq: 9, ..ev("z", EventKind::Created, 0.5, "") },
         ];
         sort_events(&mut evs);
         assert_eq!(evs[0].task, "z");
@@ -1053,6 +1122,55 @@ mod tests {
         let (_, evs) = parse_jsonl(text).unwrap();
         assert_eq!(evs.len(), 1);
         assert_eq!(evs[0].seq, 0);
+    }
+
+    #[test]
+    fn session_tag_roundtrips_and_anonymous_lines_stay_identical() {
+        // anonymous events must not emit the field at all: the /5 body is
+        // byte-identical to the /4 body for session-free traces
+        let anon = ev("a", EventKind::Created, 0.0, "");
+        assert_eq!(
+            event_line(&anon),
+            "{\"task\":\"a\",\"kind\":\"created\",\"t\":0.000000000,\"who\":\"\",\"seq\":0}"
+        );
+        let tagged = sev("alpha", "a", EventKind::Created, 0.0, "");
+        assert!(event_line(&tagged).contains("\"session\":\"alpha\""));
+        let text = to_jsonl("dwork", &[anon.clone(), tagged.clone()]);
+        let (_, parsed) = parse_jsonl(&text).unwrap();
+        assert_eq!(parsed, vec![anon, tagged]);
+        // pre-/5 traces load with an empty session
+        let old = "{\"schema\":\"threesched-trace/4\",\"source\":\"dwork\"}\n\
+                   {\"task\":\"a\",\"kind\":\"created\",\"t\":0.000000000,\"who\":\"\",\"seq\":3}\n";
+        let (_, evs) = parse_jsonl(old).unwrap();
+        assert_eq!(evs[0].session, "");
+        assert_eq!(evs[0].seq, 3);
+    }
+
+    #[test]
+    fn validate_and_counts_key_on_session_and_task() {
+        // two sessions reuse the task name "a": each lifecycle is
+        // complete on its own but would look like a double terminal if
+        // the validator collapsed them by bare name
+        let evs = vec![
+            sev("alpha", "a", EventKind::Created, 0.0, ""),
+            sev("beta", "a", EventKind::Created, 0.05, ""),
+            sev("alpha", "a", EventKind::Launched, 0.1, "w0"),
+            sev("alpha", "a", EventKind::Finished, 0.2, "w0"),
+            sev("beta", "a", EventKind::Launched, 0.3, "w1"),
+            sev("beta", "a", EventKind::Failed, 0.4, "w1"),
+        ];
+        validate(&evs).unwrap();
+        let c = counts(&evs);
+        assert_eq!((c.completed, c.failed, c.skipped), (1, 1, 0));
+        // tracer session verbs stamp the tag
+        let t = Tracer::memory();
+        t.record_in_session("alpha", "a", EventKind::Created, "");
+        t.record_at_in_session(1.0, "alpha", "a", EventKind::Finished, "w0");
+        t.record("b", EventKind::Created, "");
+        let evs = t.drain();
+        assert_eq!(evs[0].session, "alpha");
+        assert_eq!(evs[1].session, "alpha");
+        assert_eq!(evs[2].session, "");
     }
 
     #[test]

@@ -273,7 +273,7 @@ mod tests {
     use super::*;
 
     fn ev(task: &str, kind: EventKind, t: f64, who: &str) -> TaskEvent {
-        TaskEvent { task: task.into(), kind, t, who: who.into(), seq: 0 }
+        TaskEvent { task: task.into(), kind, t, who: who.into(), seq: 0, session: String::new() }
     }
 
     #[test]

@@ -188,6 +188,32 @@ pub fn to_dwork(g: &WorkflowGraph) -> Result<Vec<DworkTask>> {
         .collect())
 }
 
+/// Lower to a dwork *delta*: like [`to_dwork`], but `after` edges that
+/// name tasks outside this graph ride through verbatim as external
+/// dependencies for the hub's incremental resolver — they resolve
+/// against work already submitted to the target session (finished or
+/// in-flight) instead of failing referential integrity.  Cycles among
+/// the graph's own tasks are still refused; that is the only integrity
+/// a delta can check locally.
+pub fn to_dwork_delta(g: &WorkflowGraph) -> Result<Vec<DworkTask>> {
+    let preds = g.preds_vec();
+    let order = g.topo_order_from(&preds)?;
+    Ok(order
+        .into_iter()
+        .map(|i| {
+            let t = &g.tasks()[i];
+            let mut deps: Vec<String> =
+                preds[i].iter().map(|&d| g.tasks()[d].name.clone()).collect();
+            for d in &t.after {
+                if g.index_of(d).is_none() {
+                    deps.push(d.clone());
+                }
+            }
+            DworkTask { msg: TaskMsg::new(t.name.clone(), t.payload.encode_body()), deps }
+        })
+        .collect())
+}
+
 /// Render the dwork lowering as a dquery-style script (human-facing
 /// `workflow lower --coordinator dwork` output).
 pub fn render_dwork(tasks: &[DworkTask]) -> String {

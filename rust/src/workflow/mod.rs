@@ -53,12 +53,12 @@
 //! | removed entry point | builder call |
 //! |---|---|
 //! | `run_pmake(g, dir, n)` | `Session::new(g).backend(Backend::Pmake).parallelism(n).dir(dir).run()` |
-//! | `run_dwork(g, dir, w, pf)` | `Session::new(g).backend(Backend::Dwork { remote: None }).parallelism(w).prefetch(pf).dir(dir).run()` |
+//! | `run_dwork(g, dir, w, pf)` | `Session::new(g).backend(Backend::Dwork { remote: None, session: None }).parallelism(w).prefetch(pf).dir(dir).run()` |
 //! | `run_mpilist(g, dir, p)` | `Session::new(g).backend(Backend::MpiList).parallelism(p).dir(dir).run()` |
 //! | `run_*_traced(…, tracer)` | same builder chain + `.tracer(tracer.clone())` |
 //! | `dispatch(g, tool, p, dir)` | `Session::new(g).backend(Backend::from_tool(tool)).parallelism(p).dir(dir).run()` |
 //! | `run_auto(g, m, p, dir)` | `Session::new(g).cost_model(m.clone()).parallelism(p).dir(dir).run()` — the verdict is `outcome.plan.recommendation` |
-//! | `submit_dwork_remote(g, addr, opts)` | `Session::new(g).backend(Backend::Dwork { remote: Some(addr.into()) }).polling(cfg).submit()` |
+//! | `submit_dwork_remote(g, addr, opts)` | `Session::new(g).backend(Backend::Dwork { remote: Some(addr.into()), session: None }).polling(cfg).submit()` |
 //! | `await_dwork_remote(addr, sub, opts)` | `Submission::wait()` on the value `submit()` returned |
 //! | `run_dwork_remote(g, addr, opts)` | the same dwork-remote builder chain + `.run()` |
 //! | `RemoteOpts { poll, connect_timeout }` | `PollCfg { poll, connect_timeout }` via `.polling(..)` |
@@ -71,7 +71,7 @@ pub mod session;
 pub mod spec;
 
 pub use graph::{GraphStats, Payload, TaskSpec, WorkflowGraph};
-pub use lower::{to_dwork, to_mpilist, to_pmake, DworkTask, LoweredPmake, MpiListPlan};
+pub use lower::{to_dwork, to_dwork_delta, to_mpilist, to_pmake, DworkTask, LoweredPmake, MpiListPlan};
 pub use run::{RemoteSubmission, RunSummary};
 pub use select::{select, Assessment, Recommendation};
 pub use session::{

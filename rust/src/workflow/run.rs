@@ -389,6 +389,11 @@ pub struct RemoteSubmission {
     /// hub status sampled *before* submission, so a long-lived hub's
     /// previous campaigns don't pollute this run's counts
     pub baseline: StatusInfo,
+    /// the hub session the creates landed in.  `None` both for an
+    /// anonymous submission and when a pre-session hub degraded the
+    /// session to anonymous — the await loop then falls back to the
+    /// global counters instead of the per-session row
+    pub session: Option<String>,
 }
 
 /// Per-item outcome bookkeeping shared by every submission chunk.
@@ -400,6 +405,7 @@ pub struct RemoteSubmission {
 /// doomed set disambiguates that from a genuinely malformed graph.
 fn apply_chunk(
     c: &mut Client,
+    session: Option<&str>,
     chunk: &mut Vec<CreateItem>,
     doomed: &mut std::collections::HashSet<String>,
     submitted: &mut usize,
@@ -409,9 +415,13 @@ fn apply_chunk(
     if chunk.is_empty() {
         return Ok(());
     }
-    let outcomes = c
-        .submit(chunk)
-        .with_context(|| format!("submitting workflow to {addr}"))?;
+    // a session-scoped chunk travels as a create-only SubmitDelta frame
+    // (same per-item outcome contract as CreateBatch)
+    let outcomes = match session {
+        Some(s) => c.submit_delta(s, &[], chunk),
+        None => c.submit(chunk),
+    }
+    .with_context(|| format!("submitting workflow to {addr}"))?;
     for (item, outcome) in chunk.drain(..).zip(outcomes) {
         match outcome {
             SubmitOutcome::Created => *submitted += 1,
@@ -456,16 +466,33 @@ fn apply_chunk(
 pub(crate) fn remote_submit(
     g: &WorkflowGraph,
     addr: &str,
+    session: Option<&str>,
+    incremental: bool,
     cfg: &PollCfg,
 ) -> Result<RemoteSubmission> {
     let mut c = remote_client(addr, "submit", cfg);
     let baseline = c.status().with_context(|| format!("querying dhub at {addr}"))?;
-    let tasks = lower::to_dwork(g)?;
+    // probe the session up front: a pre-session hub answers the unknown
+    // kind, the client pins the degrade, and the whole submission falls
+    // back to the anonymous namespace (recorded as session: None so the
+    // await loop reads the right counters)
+    let session = match session {
+        Some(name) => {
+            if c.open_session(name).with_context(|| format!("opening session on {addr}"))? {
+                Some(name.to_string())
+            } else {
+                None
+            }
+        }
+        None => None,
+    };
+    let tasks = if incremental { lower::to_dwork_delta(g)? } else { lower::to_dwork(g)? };
     let batch = cfg.transport.batch.max(1);
     let mut doomed: std::collections::HashSet<String> = std::collections::HashSet::new();
     let mut submitted = 0usize;
     let mut duplicate_acks = 0usize;
     let mut chunk: Vec<CreateItem> = Vec::with_capacity(batch);
+    let s = session.as_deref();
     for t in tasks {
         if t.deps.iter().any(|d| doomed.contains(d)) {
             doomed.insert(t.msg.name.clone());
@@ -473,15 +500,16 @@ pub(crate) fn remote_submit(
         }
         chunk.push(CreateItem::new(t.msg, t.deps));
         if chunk.len() >= batch {
-            apply_chunk(&mut c, &mut chunk, &mut doomed, &mut submitted, &mut duplicate_acks, addr)?;
+            apply_chunk(&mut c, s, &mut chunk, &mut doomed, &mut submitted, &mut duplicate_acks, addr)?;
         }
     }
-    apply_chunk(&mut c, &mut chunk, &mut doomed, &mut submitted, &mut duplicate_acks, addr)?;
+    apply_chunk(&mut c, s, &mut chunk, &mut doomed, &mut submitted, &mut duplicate_acks, addr)?;
     Ok(RemoteSubmission {
         submitted,
         duplicate_acks,
         skipped_at_submit: doomed.len(),
         baseline,
+        session,
     })
 }
 
@@ -503,13 +531,32 @@ pub(crate) fn remote_submit(
 /// still-running task's eventual finish to nobody (it returns before
 /// that task completes), which is the price of not hanging forever on a
 /// shared hub.
+/// The campaign-visible (completed, errored, failed) triple: the
+/// per-session row when the submission was session-scoped — so other
+/// clients' traffic on a shared hub never perturbs the drain math —
+/// otherwise the hub-global counters (the historical behavior, and the
+/// degrade path against a pre-session hub).
+fn campaign_counts(st: &StatusInfo, session: Option<&str>) -> (u64, u64, u64) {
+    match session {
+        Some(name) => st
+            .sessions
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| (r.completed, r.errored, r.failed))
+            .unwrap_or((0, 0, 0)),
+        None => (st.completed, st.errored, st.failed),
+    }
+}
+
 pub(crate) fn remote_await(
     addr: &str,
     submission: &RemoteSubmission,
     cfg: &PollCfg,
 ) -> Result<(StatusInfo, RunSummary)> {
     let mut c = remote_client(addr, "await", cfg);
-    let baseline = &submission.baseline;
+    let session = submission.session.as_deref();
+    let (base_completed, base_errored, base_failed) =
+        campaign_counts(&submission.baseline, session);
     let all = submission.submitted as u64;
     let surely_new = submission.submitted.saturating_sub(submission.duplicate_acks) as u64;
     // "no progress for this many polls" concludes that missing finishes
@@ -520,8 +567,9 @@ pub(crate) fn remote_await(
     let t0 = Instant::now();
     loop {
         let st = c.status().with_context(|| format!("polling dhub at {addr}"))?;
-        let base_finished = baseline.completed + baseline.errored;
-        let finished = (st.completed + st.errored).saturating_sub(base_finished);
+        let (now_completed, now_errored, now_failed) = campaign_counts(&st, session);
+        let finished =
+            (now_completed + now_errored).saturating_sub(base_completed + base_errored);
         if finished == last_finished {
             stalled += 1;
         } else {
@@ -532,9 +580,9 @@ pub(crate) fn remote_await(
             || finished >= all
             || (finished >= surely_new && stalled >= STALL_POLLS);
         if done {
-            let completed = st.completed.saturating_sub(baseline.completed) as usize;
-            let failed = st.failed.saturating_sub(baseline.failed) as usize;
-            let errored = st.errored.saturating_sub(baseline.errored) as usize;
+            let completed = now_completed.saturating_sub(base_completed) as usize;
+            let failed = now_failed.saturating_sub(base_failed) as usize;
+            let errored = now_errored.saturating_sub(base_errored) as usize;
             let summary = RunSummary {
                 coordinator: Tool::Dwork,
                 tasks_run: completed + failed,
@@ -706,8 +754,10 @@ mod tests {
             CreateItem::new(TaskMsg::new("kid-of-boom", vec![]), vec!["boom".into()]),
             CreateItem::new(TaskMsg::new("kid-of-gone", vec![]), vec!["gone".into()]),
         ];
-        apply_chunk(&mut c, &mut chunk, &mut doomed, &mut submitted, &mut duplicate_acks, "inproc")
-            .unwrap();
+        apply_chunk(
+            &mut c, None, &mut chunk, &mut doomed, &mut submitted, &mut duplicate_acks, "inproc",
+        )
+        .unwrap();
         assert!(chunk.is_empty(), "chunk drains on success");
         assert_eq!(submitted, 2, "fresh + duplicate-ack");
         assert_eq!(duplicate_acks, 1);
@@ -719,7 +769,7 @@ mod tests {
         let mut chunk =
             vec![CreateItem::new(TaskMsg::new("orphan", vec![]), vec!["ghost".into()])];
         let err = apply_chunk(
-            &mut c, &mut chunk, &mut doomed, &mut submitted, &mut duplicate_acks, "inproc",
+            &mut c, None, &mut chunk, &mut doomed, &mut submitted, &mut duplicate_acks, "inproc",
         )
         .unwrap_err();
         assert!(err.to_string().contains("orphan"), "{err}");
@@ -905,7 +955,7 @@ tb:
         let g = WorkflowGraph::new("void");
         let dir = tmp("dwork-empty");
         let outcome = Session::new(&g)
-            .backend(Backend::Dwork { remote: None })
+            .backend(Backend::Dwork { remote: None, session: None })
             .parallelism(2)
             .dir(&dir)
             .run()

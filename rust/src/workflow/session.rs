@@ -82,8 +82,12 @@ pub enum Backend {
     /// File-synchronized parallel make.
     Pmake,
     /// The task-list server; `remote: Some(..)` feeds a long-lived TCP
-    /// dhub instead of spawning an in-proc hub + worker threads.
-    Dwork { remote: Option<RemoteTarget> },
+    /// dhub instead of spawning an in-proc hub + worker threads, and
+    /// `session: Some(..)` scopes every submitted task to a named hub
+    /// session (per-client namespace on a shared hub; see
+    /// [`Session::submit_incremental`]).  Against a pre-session hub the
+    /// session name degrades to today's anonymous behavior.
+    Dwork { remote: Option<RemoteTarget>, session: Option<String> },
     /// Static bulk-synchronous rank lists.
     MpiList,
 }
@@ -93,7 +97,7 @@ impl Backend {
     pub fn from_tool(tool: Tool) -> Backend {
         match tool {
             Tool::Pmake => Backend::Pmake,
-            Tool::Dwork => Backend::Dwork { remote: None },
+            Tool::Dwork => Backend::Dwork { remote: None, session: None },
             Tool::MpiList => Backend::MpiList,
         }
     }
@@ -103,7 +107,7 @@ impl Backend {
         match name {
             "auto" => Some(Backend::Auto),
             "pmake" => Some(Backend::Pmake),
-            "dwork" => Some(Backend::Dwork { remote: None }),
+            "dwork" => Some(Backend::Dwork { remote: None, session: None }),
             "mpilist" | "mpi-list" => Some(Backend::MpiList),
             _ => None,
         }
@@ -179,6 +183,9 @@ pub struct Plan {
     pub parallelism: usize,
     /// remote dhub target, when the dwork deployment is distributed
     pub remote: Option<RemoteTarget>,
+    /// hub session the campaign is scoped to (dwork only; `None` =
+    /// the anonymous namespace)
+    pub session: Option<String>,
     /// the selector's assessments; `Some` iff the backend was `Auto`
     pub recommendation: Option<Recommendation>,
 }
@@ -449,20 +456,22 @@ impl<'g> Session<'g> {
     pub fn plan(&self) -> Result<Plan> {
         self.lint_gate()?;
         let parallelism = self.resolved_parallelism();
-        let (tool, remote, recommendation) = match &self.backend {
+        let (tool, remote, session, recommendation) = match &self.backend {
             Backend::Auto => {
                 let rec = select(self.graph, &self.model, parallelism)?;
-                (rec.choice, None, Some(rec))
+                (rec.choice, None, None, Some(rec))
             }
-            Backend::Pmake => (Tool::Pmake, None, None),
-            Backend::Dwork { remote } => (Tool::Dwork, remote.clone(), None),
-            Backend::MpiList => (Tool::MpiList, None, None),
+            Backend::Pmake => (Tool::Pmake, None, None, None),
+            Backend::Dwork { remote, session } => {
+                (Tool::Dwork, remote.clone(), session.clone(), None)
+            }
+            Backend::MpiList => (Tool::MpiList, None, None, None),
         };
         // remote execution happens wherever the worker pools run: the
         // submitter's core count would be a lie, so the plan says 0
         // ("unknown/remote") — the same convention Submission::resume uses
         let parallelism = if remote.is_some() { 0 } else { parallelism };
-        Ok(Plan { tool, parallelism, remote, recommendation })
+        Ok(Plan { tool, parallelism, remote, session, recommendation })
     }
 
     /// Lower the graph for the planned coordinator without executing.
@@ -532,7 +541,42 @@ impl<'g> Session<'g> {
         self.submit_with_plan(plan)
     }
 
+    /// Submit this graph as an *incremental delta* into the backend's
+    /// hub session: unlike [`Session::submit`], `after` edges may name
+    /// tasks that are not in this graph — the hub resolves them against
+    /// work already submitted to the session, whether finished or still
+    /// in flight.  This is the client half of the task-spawns-task
+    /// path: a campaign driver can keep calling it to grow a running
+    /// graph.  Requires `Backend::Dwork { remote: Some(..), session:
+    /// Some(..) }`; block later with [`Submission::wait`], which scopes
+    /// its drain detection to the session's own counters.
+    pub fn submit_incremental(&self) -> Result<Submission> {
+        // the regular lint gate would refuse the external edges that
+        // make a delta a delta (deps unknown locally, resolved by the
+        // hub); cycles among the delta's own tasks are still refused
+        // inside the delta lowering
+        let (remote, session) = match &self.backend {
+            Backend::Dwork { remote: Some(r), session: Some(s) } => (r.clone(), s.clone()),
+            _ => bail!(
+                "submit_incremental() needs a remote session: use Backend::Dwork {{ \
+                 remote: Some(..), session: Some(..) }}"
+            ),
+        };
+        let plan = Plan {
+            tool: Tool::Dwork,
+            parallelism: 0, // remote: whatever pools joined the hub
+            remote: Some(remote),
+            session: Some(session),
+            recommendation: None,
+        };
+        self.submit_lowered(plan, true)
+    }
+
     fn submit_with_plan(&self, plan: Plan) -> Result<Submission> {
+        self.submit_lowered(plan, false)
+    }
+
+    fn submit_lowered(&self, plan: Plan, incremental: bool) -> Result<Submission> {
         let Some(target) = plan.remote.clone() else {
             bail!(
                 "submit() needs a remote target: use Backend::Dwork {{ remote: Some(..) }} \
@@ -548,7 +592,13 @@ impl<'g> Session<'g> {
         } else {
             TailHandle::default()
         };
-        let accounting = run::remote_submit(self.graph, &target.addr, &self.poll)?;
+        let accounting = run::remote_submit(
+            self.graph,
+            &target.addr,
+            plan.session.as_deref(),
+            incremental,
+            &self.poll,
+        )?;
         Ok(Submission { plan, accounting, poll: self.poll.clone(), tail })
     }
 }
@@ -601,7 +651,7 @@ impl TailHandle {
                     };
                     dropped += b.dropped;
                     for ev in &b.events {
-                        tracer.record_at(ev.t, &ev.task, ev.kind, &ev.who);
+                        tracer.record_at_in_session(ev.t, &ev.session, &ev.task, ev.kind, &ev.who);
                     }
                     if b.events.is_empty() {
                         // drain fully before honoring done/stop: events
@@ -664,6 +714,7 @@ impl Submission {
                 tool: Tool::Dwork,
                 parallelism: 0, // remote: whatever pools joined the hub
                 remote: Some(RemoteTarget::new(addr)),
+                session: accounting.session.clone(),
                 recommendation: None,
             },
             accounting,
@@ -1043,7 +1094,7 @@ mod tests {
 
         let dir = tmp("detail-dwork");
         let outcome = Session::new(&g)
-            .backend(Backend::Dwork { remote: None })
+            .backend(Backend::Dwork { remote: None, session: None })
             .parallelism(2)
             .dir(&dir)
             .run()
@@ -1084,7 +1135,7 @@ mod tests {
         g.add_task(TaskSpec::command("child", "true").after(&["boom"])).unwrap();
         let dir = tmp("dwork-fail");
         let outcome = Session::new(&g)
-            .backend(Backend::Dwork { remote: None })
+            .backend(Backend::Dwork { remote: None, session: None })
             .parallelism(1)
             .prefetch(0)
             .dir(&dir)
@@ -1113,7 +1164,7 @@ mod tests {
             Lowered::Pmake(low) => assert!(low.rules_yaml.contains("gen")),
             other => panic!("expected pmake lowering, got {other:?}"),
         }
-        match Session::new(&g).backend(Backend::Dwork { remote: None }).lower().unwrap() {
+        match Session::new(&g).backend(Backend::Dwork { remote: None, session: None }).lower().unwrap() {
             Lowered::Dwork(tasks) => assert_eq!(tasks.len(), 3),
             other => panic!("expected dwork lowering, got {other:?}"),
         }
@@ -1126,7 +1177,7 @@ mod tests {
     #[test]
     fn submit_refuses_without_a_remote_target() {
         let g = file_pipeline();
-        let err = Session::new(&g).backend(Backend::Dwork { remote: None }).submit();
+        let err = Session::new(&g).backend(Backend::Dwork { remote: None, session: None }).submit();
         assert!(err.is_err());
         let err = Session::new(&g).backend(Backend::Pmake).submit();
         assert!(err.is_err());
@@ -1140,7 +1191,7 @@ mod tests {
         // connect timeout, and names the subscription in the error
         let g = file_pipeline();
         let err = Session::new(&g)
-            .backend(Backend::Dwork { remote: Some("127.0.0.1:1".into()) })
+            .backend(Backend::Dwork { remote: Some("127.0.0.1:1".into()), session: None })
             .polling(PollCfg {
                 connect_timeout: Duration::from_millis(50),
                 ..PollCfg::default()
@@ -1155,7 +1206,7 @@ mod tests {
     fn backend_names_roundtrip() {
         assert_eq!(Backend::from_name("auto"), Some(Backend::Auto));
         assert_eq!(Backend::from_name("pmake"), Some(Backend::Pmake));
-        assert_eq!(Backend::from_name("dwork"), Some(Backend::Dwork { remote: None }));
+        assert_eq!(Backend::from_name("dwork"), Some(Backend::Dwork { remote: None, session: None }));
         assert_eq!(Backend::from_name("mpilist"), Some(Backend::MpiList));
         assert_eq!(Backend::from_name("mpi-list"), Some(Backend::MpiList));
         assert_eq!(Backend::from_name("warp"), None);

@@ -328,12 +328,12 @@ fn session_gate_refuses_lint_errors_unless_escaped() {
     wf.add_task(TaskSpec::command("b", "echo b > x.dat").outputs(&["x.dat"]).est(1.0)).unwrap();
 
     let err =
-        Session::new(&wf).backend(Backend::Dwork { remote: None }).parallelism(2).plan().unwrap_err();
+        Session::new(&wf).backend(Backend::Dwork { remote: None, session: None }).parallelism(2).plan().unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("fails lint"), "{msg}");
     assert!(msg.contains("E010"), "{msg}");
 
-    let report = Session::new(&wf).backend(Backend::Dwork { remote: None }).analyze();
+    let report = Session::new(&wf).backend(Backend::Dwork { remote: None, session: None }).analyze();
     assert_eq!(report.errors(), 1);
     assert_eq!(report.diagnostics[0].code, codes::WRITE_WRITE_RACE);
 
@@ -341,7 +341,7 @@ fn session_gate_refuses_lint_errors_unless_escaped() {
     // deterministically) and the run completes
     let dir = tmp("gate-escape");
     let outcome = Session::new(&wf)
-        .backend(Backend::Dwork { remote: None })
+        .backend(Backend::Dwork { remote: None, session: None })
         .parallelism(2)
         .dir(&dir)
         .allow_lint_errors(true)

@@ -8,7 +8,7 @@
 //! contract: the same `WorkflowGraph` produces an equivalent
 //! `RunSummary` (tasks_run / tasks_failed / tasks_skipped) via the
 //! in-proc `Session` dwork backend and via `dhub serve` + remote
-//! workers + a `Backend::Dwork { remote: Some(..) }` session (the
+//! workers + a `Backend::Dwork { remote: Some(..), session: None }` session (the
 //! `workflow run --connect` driver) — including failure propagation —
 //! and that a dead worker's assigned+prefetched tasks are re-queued.
 
@@ -47,7 +47,7 @@ fn poll_cfg() -> PollCfg {
 /// A session feeding the remote hub at `addr`.
 fn remote_session<'g>(g: &'g WorkflowGraph, addr: &str) -> Session<'g> {
     Session::new(g)
-        .backend(Backend::Dwork { remote: Some(addr.into()) })
+        .backend(Backend::Dwork { remote: Some(addr.into()), session: None })
         .polling(poll_cfg())
 }
 
@@ -55,7 +55,7 @@ fn remote_session<'g>(g: &'g WorkflowGraph, addr: &str) -> Session<'g> {
 /// (1 = one Create round-trip per task).
 fn remote_session_batch<'g>(g: &'g WorkflowGraph, addr: &str, batch: usize) -> Session<'g> {
     Session::new(g)
-        .backend(Backend::Dwork { remote: Some(addr.into()) })
+        .backend(Backend::Dwork { remote: Some(addr.into()), session: None })
         .polling(PollCfg {
             transport: TransportCfg::default().with_batch(batch),
             ..poll_cfg()
@@ -70,7 +70,7 @@ fn inproc_summary(
     dir: &Path,
 ) -> workflow::RunSummary {
     Session::new(g)
-        .backend(Backend::Dwork { remote: None })
+        .backend(Backend::Dwork { remote: None, session: None })
         .parallelism(workers)
         .prefetch(prefetch)
         .dir(dir)

@@ -1,0 +1,403 @@
+//! Hub sessions: multi-client campaigns and dynamic task spawning on a
+//! shared dwork hub, over real TCP sockets.
+//!
+//! The session contract under test:
+//!  - two concurrent session-scoped campaigns on ONE hub keep disjoint
+//!    per-session accounting, and each drains to the same `RunSummary`
+//!    its graph produces solo;
+//!  - a worker can spawn follow-on tasks in the same frame that reports
+//!    their predecessor done (`SubmitDelta`), and the dynamically-grown
+//!    chain is trace-indistinguishable from its static unroll;
+//!  - tearing a session down mid-flight cancels exactly that session's
+//!    tasks and nothing else;
+//!  - the session wire kinds are pinned (13/14/15, reply 11) — they are
+//!    a compatibility surface, not an implementation detail;
+//!  - a session-aware client degrades cleanly against a pre-session hub
+//!    (mixed-version deployment): same tasks, anonymous namespace.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use threesched::coordinator::dwork::{
+    self, Client, Completion, CreateItem, Request, Response, SchedState, ServerConfig,
+    StealBatch, SubmitOutcome, TaskMsg,
+};
+use threesched::substrate::transport::tcp::TcpClient;
+use threesched::substrate::wire;
+use threesched::trace::Tracer;
+use threesched::workflow::{
+    self, Backend, Payload, PollCfg, Session, TaskSpec, WorkflowGraph,
+};
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "threesched-sessions-{name}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn poll_cfg() -> PollCfg {
+    PollCfg {
+        poll: Duration::from_millis(5),
+        connect_timeout: Duration::from_secs(5),
+        ..PollCfg::default()
+    }
+}
+
+fn connect(addr: &str, who: &str) -> Client {
+    let conn = TcpClient::connect_retry(addr, Duration::from_secs(5)).unwrap();
+    Client::new(Box::new(conn), who.to_string())
+}
+
+/// Deterministic pseudo-random DAG: `n` no-op command tasks, each with
+/// 0–2 dependencies on earlier tasks (LCG-driven, so every run and both
+/// sides of an equivalence comparison see the same graph).
+fn random_dag(seed: u64, n: usize) -> WorkflowGraph {
+    fn next(s: &mut u64) -> u64 {
+        *s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        *s >> 33
+    }
+    let mut s = seed;
+    let mut g = WorkflowGraph::new(format!("rand-{seed}"));
+    for i in 0..n {
+        let mut deps: Vec<String> = Vec::new();
+        if i > 0 {
+            for _ in 0..(next(&mut s) % 3) {
+                let d = format!("n{}", next(&mut s) as usize % i);
+                if !deps.contains(&d) {
+                    deps.push(d);
+                }
+            }
+        }
+        g.add_task(TaskSpec::command(format!("n{i}"), "true").after(&deps)).unwrap();
+    }
+    g
+}
+
+/// [`random_dag`] plus a failing spike with two transitive dependents,
+/// so the campaign exercises failed AND skipped accounting.
+fn spiked_dag(seed: u64, n: usize) -> WorkflowGraph {
+    let mut g = random_dag(seed, n);
+    g.add_task(TaskSpec::command("boom", "exit 3")).unwrap();
+    g.add_task(TaskSpec::command("v1", "true").after(&["boom"])).unwrap();
+    g.add_task(TaskSpec::command("v2", "true").after(&["v1"])).unwrap();
+    g
+}
+
+/// The in-proc reference run a session-scoped remote campaign must be
+/// equivalent to.
+fn solo_summary(g: &WorkflowGraph, workers: usize, dir: &PathBuf) -> workflow::RunSummary {
+    Session::new(g)
+        .backend(Backend::Dwork { remote: None, session: None })
+        .parallelism(workers)
+        .dir(dir)
+        .run()
+        .unwrap()
+        .summary
+}
+
+/// `n` anonymous worker threads joined to `addr`, executing task bodies
+/// as workflow payloads (what `dhub worker` does).  Session-agnostic on
+/// purpose: shared-hub workers serve every campaign.
+fn payload_pool(
+    addr: String,
+    n: usize,
+    dir: PathBuf,
+) -> Vec<std::thread::JoinHandle<dwork::WorkerStats>> {
+    (0..n)
+        .map(|i| {
+            let addr = addr.clone();
+            let dir = dir.clone();
+            std::thread::spawn(move || {
+                let mut c = connect(&addr, &format!("sw{i}")).exit_on_drop(true);
+                dwork::run_worker(&mut c, 2, |t| {
+                    workflow::run::exec_payload(&Payload::decode_body(&t.body)?, &dir)
+                })
+                .unwrap()
+            })
+        })
+        .collect()
+}
+
+fn session_backend(addr: &str, session: &str) -> Backend {
+    Backend::Dwork { remote: Some(addr.into()), session: Some(session.to_string()) }
+}
+
+#[test]
+fn concurrent_session_campaigns_match_their_solo_runs() {
+    let ga = random_dag(3, 14);
+    let gb = spiked_dag(9, 10);
+    let dir_a = tmp("solo-a");
+    let dir_b = tmp("solo-b");
+    let ref_a = solo_summary(&ga, 3, &dir_a);
+    let ref_b = solo_summary(&gb, 3, &dir_b);
+    assert_eq!(ref_b.tasks_failed, 1, "the spike failed solo too");
+    assert_eq!(ref_b.tasks_skipped, 2);
+
+    let (addr, guard, handle) =
+        dwork::spawn_tcp(SchedState::new(), ServerConfig::default(), "127.0.0.1:0").unwrap();
+    let addr_s = addr.to_string();
+    let sub_a = Session::new(&ga)
+        .backend(session_backend(&addr_s, "alpha"))
+        .polling(poll_cfg())
+        .submit()
+        .unwrap();
+    let sub_b = Session::new(&gb)
+        .backend(session_backend(&addr_s, "beta"))
+        .polling(poll_cfg())
+        .submit()
+        .unwrap();
+    assert_eq!(sub_a.accounting.session.as_deref(), Some("alpha"));
+    assert_eq!(sub_b.accounting.session.as_deref(), Some("beta"));
+    assert_eq!(sub_a.accounting.submitted, 14);
+    assert_eq!(sub_b.accounting.submitted, 13);
+
+    // one shared pool drains both campaigns; the two submitters await
+    // concurrently, each polling only its own session's counters
+    let dir = tmp("shared");
+    let pool = payload_pool(addr_s.clone(), 3, dir.clone());
+    let ha = std::thread::spawn(move || sub_a.wait().unwrap());
+    let hb = std::thread::spawn(move || sub_b.wait().unwrap());
+    let out_a = ha.join().unwrap();
+    let out_b = hb.join().unwrap();
+    for h in pool {
+        h.join().unwrap();
+    }
+    drop(guard);
+    let state = handle.join().unwrap();
+    assert!(state.all_done());
+
+    for (out, reference) in [(&out_a, &ref_a), (&out_b, &ref_b)] {
+        assert_eq!(out.summary.tasks_run, reference.tasks_run);
+        assert_eq!(out.summary.tasks_failed, reference.tasks_failed);
+        assert_eq!(out.summary.tasks_skipped, reference.tasks_skipped);
+    }
+
+    // the hub kept the two campaigns' accounting fully disjoint
+    let st = state.status();
+    let row = |name: &str| st.sessions.iter().find(|r| r.name == name).unwrap();
+    let (ra, rb) = (row("alpha"), row("beta"));
+    assert!(ra.is_drained() && rb.is_drained());
+    assert_eq!((ra.total, ra.completed, ra.errored, ra.failed), (14, 14, 0, 0));
+    assert_eq!(rb.total, 13);
+    assert_eq!(rb.completed + rb.failed, ref_b.tasks_run as u64);
+    assert_eq!(rb.errored - rb.failed, ref_b.tasks_skipped as u64);
+    assert_eq!(ra.total + rb.total, st.total, "no anonymous strays");
+    for d in [dir_a, dir_b, dir] {
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}
+
+#[test]
+fn dynamic_spawns_match_the_static_unroll() {
+    // hub-side tracer: both chains' lifecycle events, session-tagged
+    let tracer = Tracer::memory();
+    let mut st0 = SchedState::new();
+    st0.set_tracer(tracer.clone());
+    let (addr, guard, handle) =
+        dwork::spawn_tcp(st0, ServerConfig::default(), "127.0.0.1:0").unwrap();
+    let addr_s = addr.to_string();
+    let mut driver = connect(&addr_s, "driver");
+    assert!(driver.open_session("unrolled").unwrap());
+    assert!(driver.open_session("dynamic").unwrap());
+
+    // static side: the whole 4-link chain in one delta — later links
+    // depend on same-frame earlier ones
+    let chain: Vec<CreateItem> = (0..4)
+        .map(|i| {
+            let deps = if i == 0 { vec![] } else { vec![format!("n{}", i - 1)] };
+            CreateItem::new(TaskMsg::new(format!("n{i}"), vec![]), deps)
+        })
+        .collect();
+    let out = driver.submit_delta("unrolled", &[], &chain).unwrap();
+    assert!(out.iter().all(SubmitOutcome::is_created), "{out:?}");
+    // dynamic side: only the root exists up front
+    let out = driver.submit_delta("dynamic", &[], &chain[..1]).unwrap();
+    assert!(out.iter().all(SubmitOutcome::is_created), "{out:?}");
+
+    // one worker drains both sessions; in "dynamic" it spawns each next
+    // link in the same frame that reports its predecessor done
+    let mut w = connect(&addr_s, "spawner").exit_on_drop(true);
+    loop {
+        let ts = match w.acquire(1).unwrap() {
+            StealBatch::Tasks(ts) => ts,
+            StealBatch::AllDone => break,
+        };
+        for t in ts {
+            let idx: usize = t.short_name()[1..].parse().unwrap();
+            if t.session() == "dynamic" && idx < 3 {
+                let next = CreateItem::new(
+                    TaskMsg::new(format!("n{}", idx + 1), vec![]),
+                    vec![t.short_name().to_string()],
+                );
+                let out = w
+                    .submit_delta("dynamic", &[Completion::ok(&t.name)], std::slice::from_ref(&next))
+                    .unwrap();
+                assert!(out.iter().all(SubmitOutcome::is_created), "{out:?}");
+            } else {
+                w.report(&[Completion::ok(&t.name)]).unwrap();
+            }
+        }
+    }
+    let st = w.status().unwrap();
+    for name in ["unrolled", "dynamic"] {
+        let r = st.sessions.iter().find(|r| r.name == name).unwrap();
+        assert_eq!((r.total, r.completed, r.errored), (4, 4, 0), "{name}");
+    }
+    drop(w);
+    drop(driver);
+    drop(guard);
+    handle.join().unwrap();
+
+    // the dynamically-grown chain left the exact same per-task lifecycle
+    // multiset as its static unroll
+    let events = tracer.drain();
+    let hist = |session: &str| {
+        let mut m = std::collections::BTreeMap::<(String, &str), usize>::new();
+        for ev in events.iter().filter(|e| e.session == session) {
+            *m.entry((ev.task.clone(), ev.kind.name())).or_default() += 1;
+        }
+        m
+    };
+    let (dynamic, unrolled) = (hist("dynamic"), hist("unrolled"));
+    assert_eq!(dynamic, unrolled);
+    assert_eq!(dynamic.len(), 16, "4 tasks x Created/Ready/Launched/Finished");
+}
+
+#[test]
+fn mid_flight_teardown_leaves_the_other_session_untouched() {
+    let (addr, guard, handle) =
+        dwork::spawn_tcp(SchedState::new(), ServerConfig::default(), "127.0.0.1:0").unwrap();
+    let addr_s = addr.to_string();
+    let mut driver = connect(&addr_s, "driver");
+    // the doomed campaign: root ready, three dependents waiting
+    let kill: Vec<CreateItem> = (0..4)
+        .map(|i| {
+            let deps = if i == 0 { vec![] } else { vec!["m0".to_string()] };
+            CreateItem::new(TaskMsg::new(format!("m{i}"), vec![]), deps)
+        })
+        .collect();
+    let out = driver.submit_delta("doomed", &[], &kill).unwrap();
+    assert!(out.iter().all(SubmitOutcome::is_created), "{out:?}");
+    // a worker takes the doomed root — the session is now mid-flight —
+    // and will vanish without ever reporting
+    let mut lost = connect(&addr_s, "lost");
+    let held = match lost.acquire(1).unwrap() {
+        StealBatch::Tasks(ts) => ts,
+        other => panic!("expected the doomed root, got {other:?}"),
+    };
+    assert_eq!(held[0].session(), "doomed");
+    assert_eq!(held[0].short_name(), "m0");
+    // the surviving campaign
+    let keep: Vec<CreateItem> = (0..4)
+        .map(|i| CreateItem::new(TaskMsg::new(format!("k{i}"), vec![]), vec![]))
+        .collect();
+    let out = driver.submit_delta("kept", &[], &keep).unwrap();
+    assert!(out.iter().all(SubmitOutcome::is_created), "{out:?}");
+
+    // teardown cancels exactly the doomed session's tasks: the assigned
+    // root and its three waiting dependents — nothing of "kept"
+    assert_eq!(driver.close_session("doomed").unwrap(), 4);
+    drop(lost);
+
+    let mut w = connect(&addr_s, "drain").exit_on_drop(true);
+    let stats = dwork::run_worker(&mut w, 1, |_| Ok(())).unwrap();
+    assert_eq!(stats.tasks_run, 4, "exactly the surviving session's tasks ran");
+    let st = driver.status().unwrap();
+    assert!(st.is_drained());
+    assert_eq!(st.total, 4, "the cancelled tasks left the totals");
+    assert_eq!(st.sessions.len(), 1);
+    assert_eq!(st.sessions[0].name, "kept");
+    assert!(st.sessions[0].is_drained());
+    assert_eq!(st.sessions[0].completed, 4);
+    assert_eq!(driver.close_session("doomed").unwrap(), 0, "close is idempotent");
+    drop(w);
+    drop(driver);
+    drop(guard);
+    assert!(handle.join().unwrap().all_done());
+}
+
+#[test]
+fn session_wire_kinds_are_pinned() {
+    // the session verbs are a wire-compatibility surface: their kind
+    // numbers (and the Session reply's) must never drift
+    let kind_of = |bytes: &[u8]| {
+        let f = wire::Reader::new(bytes).fields().unwrap();
+        wire::get_u64(&f, 1).unwrap()
+    };
+    assert_eq!(kind_of(&Request::OpenSession { session: "s".into() }.encode()), 13);
+    assert_eq!(kind_of(&Request::CloseSession { session: "s".into() }.encode()), 14);
+    let delta = Request::SubmitDelta {
+        session: "s".into(),
+        worker: "w".into(),
+        completions: vec![Completion::ok("t")],
+        creates: vec![CreateItem::new(TaskMsg::new("u", vec![]), vec![])],
+    };
+    assert_eq!(kind_of(&delta.encode()), 15);
+    assert_eq!(
+        kind_of(&Response::Session { session: "s".into(), cancelled: 3 }.encode()),
+        11
+    );
+    // and the encodings round-trip
+    match Request::decode(&delta.encode()).unwrap() {
+        Request::SubmitDelta { session, worker, completions, creates } => {
+            assert_eq!(session, "s");
+            assert_eq!(worker, "w");
+            assert_eq!(completions.len(), 1);
+            assert_eq!(creates.len(), 1);
+        }
+        other => panic!("round-trip changed the request: {other:?}"),
+    }
+    match Response::decode(&Response::Session { session: "s".into(), cancelled: 3 }.encode())
+        .unwrap()
+    {
+        Response::Session { session, cancelled } => {
+            assert_eq!(session, "s");
+            assert_eq!(cancelled, 3);
+        }
+        other => panic!("round-trip changed the response: {other:?}"),
+    }
+}
+
+#[test]
+fn new_client_degrades_cleanly_against_a_pre_session_hub() {
+    // a current hub wearing the pre-session mask: every session kind is
+    // answered with the whole-frame unknown-kind Err an old hub produces
+    let g = random_dag(5, 9);
+    let cfg = ServerConfig { compat_pre_sessions: true, ..ServerConfig::default() };
+    let (addr, guard, handle) =
+        dwork::spawn_tcp(SchedState::new(), cfg, "127.0.0.1:0").unwrap();
+    let addr_s = addr.to_string();
+    {
+        let mut c = connect(&addr_s, "probe");
+        assert_eq!(c.uses_session_wire(), None, "support unknown before the first verb");
+        assert!(!c.open_session("x").unwrap(), "old hub: degrade, not an error");
+        assert_eq!(c.uses_session_wire(), Some(false));
+        assert_eq!(c.close_session("x").unwrap(), 0);
+    }
+    // the full campaign still works — session requested, silently
+    // anonymous, and the recorded accounting says so
+    let sub = Session::new(&g)
+        .backend(session_backend(&addr_s, "x"))
+        .polling(poll_cfg())
+        .submit()
+        .unwrap();
+    assert_eq!(sub.accounting.session, None, "await falls back to global counters");
+    assert_eq!(sub.accounting.submitted, 9);
+    let dir = tmp("compat");
+    let pool = payload_pool(addr_s.clone(), 2, dir.clone());
+    let outcome = sub.wait().unwrap();
+    for h in pool {
+        h.join().unwrap();
+    }
+    assert_eq!(outcome.summary.tasks_run, 9);
+    assert!(outcome.all_ok());
+    drop(guard);
+    let state = handle.join().unwrap();
+    assert!(state.all_done());
+    assert!(state.status().sessions.is_empty(), "nothing session-scoped reached the hub");
+    let _ = std::fs::remove_dir_all(&dir);
+}

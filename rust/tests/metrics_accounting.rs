@@ -55,7 +55,7 @@ fn hub_counters_match_trace_counts_on_random_dags() {
         let dir = tmp(&format!("{}", g.case));
         let tracer = Tracer::memory();
         let outcome = Session::new(&wf)
-            .backend(Backend::Dwork { remote: None })
+            .backend(Backend::Dwork { remote: None, session: None })
             .parallelism(workers)
             .dir(&dir)
             .tracer(tracer.clone())
@@ -101,7 +101,7 @@ fn disabled_registry_still_reports_real_counters_in_the_outcome() {
     wf.add_task(TaskSpec::new("b").after(&["a"]).est(0.001)).unwrap();
     let dir = tmp("disabled");
     let outcome = Session::new(&wf)
-        .backend(Backend::Dwork { remote: None })
+        .backend(Backend::Dwork { remote: None, session: None })
         .parallelism(1)
         .dir(&dir)
         .run()

@@ -139,7 +139,7 @@ fn remote_submit_wait_matches_in_proc_counts_and_carries_metrics() {
 
     let dir_ref = tmp("remote-session-ref");
     let reference = Session::new(&g)
-        .backend(Backend::Dwork { remote: None })
+        .backend(Backend::Dwork { remote: None, session: None })
         .parallelism(2)
         .dir(&dir_ref)
         .run()
@@ -148,7 +148,7 @@ fn remote_submit_wait_matches_in_proc_counts_and_carries_metrics() {
     let cfg = ServerConfig { metrics: Registry::enabled(), ..ServerConfig::default() };
     let (addr, guard, handle) = dwork::spawn_tcp(SchedState::new(), cfg, "127.0.0.1:0").unwrap();
     let submission = Session::new(&g)
-        .backend(Backend::Dwork { remote: Some(addr.to_string().into()) })
+        .backend(Backend::Dwork { remote: Some(addr.to_string().into()), session: None })
         .polling(workflow::PollCfg {
             poll: Duration::from_millis(5),
             ..workflow::PollCfg::default()

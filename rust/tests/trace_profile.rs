@@ -519,7 +519,7 @@ fn remote_session_tracer_matches_server_side_counters() {
 
     let tracer = Tracer::memory();
     let outcome = Session::new(&g)
-        .backend(Backend::Dwork { remote: Some(addr_s.clone().into()) })
+        .backend(Backend::Dwork { remote: Some(addr_s.clone().into()), session: None })
         .polling(PollCfg {
             poll: Duration::from_millis(5),
             connect_timeout: Duration::from_secs(5),

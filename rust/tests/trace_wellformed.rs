@@ -65,7 +65,7 @@ fn dwork_traces_wellformed_and_equivalent() {
         let tracer = Tracer::memory();
         let workers = g.usize(1..4);
         let outcome = Session::new(&wf)
-            .backend(Backend::Dwork { remote: None })
+            .backend(Backend::Dwork { remote: None, session: None })
             .parallelism(workers)
             .dir(&dir)
             .tracer(tracer.clone())
@@ -189,7 +189,7 @@ fn real_and_simulated_traces_share_one_schema() {
     let dir = tmp("schema");
     let real = Tracer::memory();
     Session::new(&g)
-        .backend(Backend::Dwork { remote: None })
+        .backend(Backend::Dwork { remote: None, session: None })
         .parallelism(2)
         .dir(&dir)
         .tracer(real.clone())
@@ -233,7 +233,7 @@ fn trace_file_roundtrip_feeds_report_and_compare() {
     let dir = tmp("roundtrip");
     let tracer = Tracer::memory();
     let summary = Session::new(&g)
-        .backend(Backend::Dwork { remote: None })
+        .backend(Backend::Dwork { remote: None, session: None })
         .parallelism(2)
         .dir(&dir)
         .tracer(tracer.clone())
